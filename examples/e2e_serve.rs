@@ -1,0 +1,95 @@
+//! End-to-end driver (the repo's headline validation run, recorded in
+//! EXPERIMENTS.md): boots the batching private-inference service on a real
+//! trained model, serves a stream of requests through the full
+//! three-layer stack (Rust coordinator → GMW engine → PJRT-compiled
+//! Pallas/JAX artifacts), verifies predictions against plaintext
+//! inference, and reports throughput, latency, communication and the
+//! paper's network projections.
+//!
+//! Run: `cargo run --release --example e2e_serve -- [model] [samples]`
+//! (defaults: miniresnet_synth10, 64 samples; requires `make artifacts`
+//! and `make train` outputs)
+
+use hummingbird::coordinator::{Coordinator, ServeOptions};
+use hummingbird::hummingbird::PlanSet;
+use hummingbird::model::{Archive, Backend, Dataset, ModelConfig, PlainExecutor};
+use hummingbird::net::profile::{project, ComputeProfile, NetworkProfile};
+use hummingbird::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).map(|s| s.as_str()).unwrap_or("miniresnet_synth10");
+    let samples: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+
+    let cfg = ModelConfig::load_named(&root, model)?;
+    let dataset = Dataset::load(root.join("artifacts"), &cfg.dataset)?;
+    let weights = Archive::load(root.join("artifacts/weights").join(model))?;
+
+    // Use a searched plan if one exists, else the exact baseline.
+    let plan_path = root.join("configs/searched").join(format!("{model}_b8-64.json"));
+    let (plan, plan_name) = if plan_path.exists() {
+        (PlanSet::load(&plan_path)?, "searched HummingBird-8/64")
+    } else {
+        (PlanSet::baseline(cfg.relu_groups), "baseline (run `make plans` for HummingBird)")
+    };
+
+    println!("=== end-to-end private inference: {model} ===");
+    println!("plan: {plan_name} [{}]", plan.summary());
+    let mut opts = ServeOptions::new(&root, model);
+    opts.plan = Some(plan.clone());
+    let svc = Coordinator::start(opts)?;
+
+    // Plaintext reference for verification.
+    let plain = PlainExecutor::new(cfg.clone(), weights, Backend::Naive);
+
+    let n = samples.min(dataset.test.n);
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        rxs.push((i, svc.infer_async(dataset.test.batch(i, i + 1).to_vec())?));
+    }
+    let mut correct = 0usize;
+    let mut agree_plain = 0usize;
+    let mut latencies = Vec::new();
+    for (i, rx) in rxs {
+        let r = rx.recv()?;
+        let label = dataset.test.labels[i] as usize;
+        let plain_logits = plain.forward(dataset.test.batch(i, i + 1), 1)?;
+        let plain_pred = PlainExecutor::argmax(&plain_logits, cfg.num_classes)[0];
+        correct += (r.pred == label) as usize;
+        agree_plain += (r.pred == plain_pred) as usize;
+        latencies.push(r.latency_s);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\nserved {n} private inferences in {}", stats::fmt_secs(wall));
+    println!("throughput (this CPU):   {:.2} samples/s", n as f64 / wall);
+    println!("accuracy:                {:.2}%", 100.0 * correct as f64 / n as f64);
+    println!("agreement w/ plaintext:  {:.2}%", 100.0 * agree_plain as f64 / n as f64);
+    println!("p50 / p95 latency:       {} / {}",
+        stats::fmt_secs(stats::median(&latencies)),
+        stats::fmt_secs(stats::percentile(&latencies, 95.0)));
+    println!("communication (party 0): {} in {} rounds",
+        stats::fmt_bytes(svc.trace.total_bytes()),
+        svc.trace.total_rounds());
+
+    let bd = svc.metrics.breakdown();
+    println!("\nexecutor breakdown: linear {}, relu {}, other {}",
+        stats::fmt_secs(bd.linear_s),
+        stats::fmt_secs(bd.relu_s),
+        stats::fmt_secs(bd.other_s));
+
+    println!("\nprojected end-to-end time on the paper's network setups:");
+    for net in [NetworkProfile::high_bw(), NetworkProfile::lan(), NetworkProfile::wan()] {
+        let p = project(&svc.trace, bd.total(), &net, &ComputeProfile::a100());
+        println!("  {:8} {:>12}  ({} comm + {} compute)",
+            p.network,
+            stats::fmt_secs(p.total_s()),
+            stats::fmt_secs(p.comm_time_s),
+            stats::fmt_secs(p.compute_time_s));
+    }
+    svc.shutdown();
+    println!("\nOK — full stack (coordinator → GMW → PJRT/Pallas artifacts) verified.");
+    Ok(())
+}

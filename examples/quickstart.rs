@@ -1,0 +1,69 @@
+//! Quickstart: the core HummingBird mechanism in ~60 lines.
+//!
+//! Two simulated parties evaluate ReLU over secret shares three ways —
+//! exact CrypTen-style baseline (64-bit ring), HummingBird-eco (high bits
+//! dropped, error-free), and an aggressive HummingBird window — and print
+//! the accuracy/communication trade-off.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hummingbird::crypto::prg::Prg;
+use hummingbird::gmw::harness::run_parties;
+use hummingbird::gmw::ReluPlan;
+use hummingbird::sharing::{reconstruct_arith, share_arith};
+use hummingbird::util::stats;
+
+fn main() {
+    // Secret inputs: fixed-point-ish values in [-8, 8) at scale 2^12.
+    let fx = hummingbird::ring::FixedPoint::new(12);
+    let mut prg = Prg::from_entropy();
+    let n = 4096;
+    let x_f: Vec<f64> = (0..n).map(|_| (prg.next_f64() - 0.5) * 16.0).collect();
+    let x: Vec<u64> = x_f.iter().map(|v| fx.encode(*v)).collect();
+
+    // The client splits x into two arithmetic shares; each party sees only
+    // uniform-random garbage.
+    let shares = share_arith(&mut prg, &x, 2);
+
+    println!("ReLU over 2-party GMW, {n} elements, fixed-point f=12\n");
+    println!(
+        "{:<34} {:>10} {:>7} {:>12} {:>9}",
+        "plan", "bytes", "rounds", "mean |err|", "pruned"
+    );
+    for (name, plan) in [
+        ("baseline: full 64-bit ring", ReluPlan::BASELINE),
+        ("eco: bits [0,17) — error-free", ReluPlan::new(17, 0).unwrap()),
+        ("hummingbird: bits [8,16)", ReluPlan::new(16, 8).unwrap()),
+        ("hummingbird: bits [10,16)", ReluPlan::new(16, 10).unwrap()),
+    ] {
+        let shares = shares.clone();
+        let run = run_parties(2, 42, move |party| {
+            let me = party.party();
+            party.relu(&shares[me], plan).unwrap()
+        });
+        let out = reconstruct_arith(&run.outputs);
+        let mut abs_err = 0.0;
+        let mut pruned = 0usize;
+        for (xf, o) in x_f.iter().zip(&out) {
+            let expect = xf.max(0.0);
+            let got = fx.decode(*o);
+            abs_err += (got - expect).abs();
+            if expect > 0.0 && got == 0.0 {
+                pruned += 1;
+            }
+        }
+        println!(
+            "{:<34} {:>10} {:>7} {:>12.6} {:>8}",
+            name,
+            stats::fmt_bytes(run.trace.total_bytes()),
+            run.trace.total_rounds(),
+            abs_err / n as f64,
+            pruned
+        );
+    }
+    println!(
+        "\nThe reduced-ring plans communicate a fraction of the baseline; the\n\
+         eco window is exact (Theorem 1) while m>0 additionally prunes small\n\
+         activations (Theorem 2) — the paper's accuracy/performance dial."
+    );
+}

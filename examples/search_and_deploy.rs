@@ -1,0 +1,103 @@
+//! The full HummingBird workflow of Fig 5 in one program:
+//!
+//!   offline:  search (eco + budgeted DFS) on the MPC simulator
+//!   online:   deploy both plans and measure real MPC runs
+//!
+//! Run: `cargo run --release --example search_and_deploy -- [model]`
+//! (default micronet_synth10; requires `make artifacts` + `make train`)
+
+use hummingbird::figures::FigCtx;
+use hummingbird::hummingbird::search::{SearchConfig, SearchEngine, Strategy};
+use hummingbird::model::{Archive, Backend, Dataset, ModelConfig, PlainExecutor, WhichPlain};
+use hummingbird::net::profile::NetworkProfile;
+use hummingbird::runtime::{Manifest, Runtime};
+use hummingbird::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).map(|s| s.as_str()).unwrap_or("micronet_synth10");
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+
+    let cfg = ModelConfig::load_named(&root, model)?;
+    let weights = Archive::load(root.join("artifacts/weights").join(model))?;
+    let dataset = Dataset::load(root.join("artifacts"), &cfg.dataset)?;
+    let manifest = Manifest::load(root.join("artifacts"))?;
+    let model_art = manifest.model(model)?.clone();
+    let exec = PlainExecutor::new(
+        cfg.clone(),
+        weights,
+        Backend::Xla {
+            rt: Runtime::new(root.join("artifacts"))?,
+            artifact_batch: model_art.search_batch,
+            artifacts: model_art,
+            which: WhichPlain::Search,
+        },
+    );
+
+    println!("=== offline phase: HummingBird search on {model} ===\n");
+    let mut plans = Vec::new();
+    for (label, strategy) in [
+        ("eco", Strategy::Eco),
+        ("budget 8/64", Strategy::Budget(8.0 / 64.0)),
+        ("budget 6/64", Strategy::Budget(6.0 / 64.0)),
+    ] {
+        let scfg = SearchConfig { strategy, val_samples: 192, ..SearchConfig::default() };
+        let n = scfg.val_samples.min(dataset.val.n);
+        let engine = SearchEngine::new(
+            &exec,
+            &dataset.val.images,
+            &dataset.val.labels[..n],
+            dataset.val.sample_elems,
+            scfg,
+        );
+        let r = engine.run()?;
+        println!(
+            "{label:<12} plan {:<40} acc {:.2}% -> {:.2}%  ({} evals, {})",
+            r.plans.summary(),
+            r.baseline_acc * 100.0,
+            r.final_acc * 100.0,
+            r.evals,
+            stats::fmt_secs(r.search_time_s),
+        );
+        plans.push((label, r.plans));
+    }
+
+    println!("\n=== online phase: deploy each plan in a real 2-party MPC run ===\n");
+    let mut ctx = FigCtx::new(root);
+    let lan = NetworkProfile::lan();
+    // Baseline measurement for the speedup column.
+    let variants: Vec<(&str, hummingbird::hummingbird::PlanSet)> = plans
+        .iter()
+        .map(|(l, p)| (*l, p.clone()))
+        .collect();
+    let (mb, rb) = ctx.measure(model, "baseline")?;
+    let tb: f64 = rb.iter().map(|(b, _)| lan.round_time(*b)).sum::<f64>() + mb.compute_s;
+    println!(
+        "{:<12} {:>12} {:>8} {:>12}",
+        "plan", "bytes", "rounds", "LAN speedup"
+    );
+    println!(
+        "{:<12} {:>12} {:>8} {:>12}",
+        "baseline",
+        stats::fmt_bytes(mb.protocol_bytes()),
+        mb.total_rounds,
+        "1.00x"
+    );
+    for (label, plan) in variants {
+        // Save as a temp named variant so the ctx cache key is stable.
+        let name = format!("ex_{}", label.replace([' ', '/'], "_"));
+        let path = ctx.root.join("configs/searched").join(format!("{model}_{name}.json"));
+        plan.save(&path)?;
+        let (m, r) = ctx.measure(model, &name)?;
+        let t: f64 = r.iter().map(|(b, _)| lan.round_time(*b)).sum::<f64>() + m.compute_s;
+        println!(
+            "{:<12} {:>12} {:>8} {:>11.2}x",
+            label,
+            stats::fmt_bytes(m.protocol_bytes()),
+            m.total_rounds,
+            tb / t
+        );
+    }
+    println!("\n(speedups here use raw CPU compute; `hummingbird figures` applies the\n calibrated GPU-profile methodology described in EXPERIMENTS.md)");
+    Ok(())
+}

@@ -1,0 +1,216 @@
+"""AOT driver: lower every Layer-1/Layer-2 computation to HLO **text**.
+
+HLO text (NOT `lowered.compile()` / proto `.serialize()`) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the runtime's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under artifacts/):
+    kernels/<name>_<bucket>.hlo.txt         — GMW elementwise Pallas kernels
+    models/<config>/share_conv<i>.hlo.txt   — int64 ring conv (im2col+Pallas matmul)
+    models/<config>/share_fc<i>.hlo.txt     — int64 ring fc
+    models/<config>/plain_conv<i>.hlo.txt   — f32 conv+bias  (batch = MPC batch)
+    models/<config>/search_conv<i>.hlo.txt  — f32 conv+bias  (batch = search batch)
+    models/<config>/{plain,search}_fc<i>.hlo.txt
+    manifest.json                           — shapes + paths for the Rust runtime
+
+Run as `python -m compile.aot` (from python/); `make artifacts` wraps it.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import archs, model as M
+from .kernels import bitops
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), "..", ".."))
+ART = os.path.join(ROOT, "artifacts")
+
+# Element-count buckets for the GMW elementwise kernels. The Rust runtime
+# pads to the smallest fitting bucket and chunks above the largest.
+KERNEL_BUCKETS = [1024, 8192, 32768]
+
+I64 = jnp.int64
+F32 = jnp.float32
+
+SEARCH_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, specs, path, force=False):
+    """Lower fn(*specs) and write HLO text; skip if the file exists."""
+    if os.path.exists(path) and not force:
+        return False
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    return True
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# GMW kernels.
+# ---------------------------------------------------------------------------
+
+def emit_kernels(force=False):
+    entries = {}
+    for n in KERNEL_BUCKETS:
+        vec = spec((n,), I64)
+        sc = spec((1,), I64)
+        per_kernel = {
+            "and_open": (bitops.and_open, [vec] * 4),
+            "and_combine": (bitops.and_combine, [vec] * 5 + [sc]),
+            "ks_stage_mid": (bitops.ks_stage_mid, [vec, vec, sc, sc]),
+            "ks_stage_last": (bitops.ks_stage_last, [vec, vec, sc, sc]),
+            "mult_open": (bitops.mult_open, [vec] * 4),
+            "mult_combine": (bitops.mult_combine, [vec] * 5 + [sc]),
+        }
+        for name, (fn, specs) in per_kernel.items():
+            rel = f"kernels/{name}_{n}.hlo.txt"
+            wrote = lower_to_file(fn, specs, os.path.join(ART, rel), force)
+            entries.setdefault(name, []).append({"n": n, "path": rel})
+            if wrote:
+                print(f"[aot] {rel}")
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Per-model layers.
+# ---------------------------------------------------------------------------
+
+def emit_model(cfg, force=False):
+    name = cfg["name"]
+    batch = cfg["batch"]
+    shapes = M.node_shapes(cfg)
+    layers = {}
+    for i, node in enumerate(cfg["nodes"]):
+        op = node["op"]
+        if op == "conv":
+            cin, h, w = shapes[node["in"][0]]
+            cout, ho, wo = shapes[i]
+            k, stride, pad = node["k"], node["stride"], node["pad"]
+            kdim = cin * k * k
+            entry = {
+                "op": "conv",
+                "in_shape": [cin, h, w],
+                "out_shape": [cout, ho, wo],
+                "k": k, "stride": stride, "pad": pad,
+                "wmat_shape": [kdim, cout],
+                "w_shape": [cout, cin, k, k],
+            }
+            # Share-domain conv: Pallas ring-matmul variant ("share") and
+            # the fused-dot fast variant ("share_fast", same ring math).
+            for tag, fast in (("share", False), ("share_fast", True)):
+                rel = f"models/{name}/{tag}_conv{i}.hlo.txt"
+                fn = functools.partial(M.share_conv, k=k, stride=stride,
+                                       pad=pad, out_ch=cout, fast=fast)
+                if lower_to_file(fn, [spec((batch, cin, h, w), I64),
+                                      spec((kdim, cout), I64)],
+                                 os.path.join(ART, rel), force):
+                    print(f"[aot] {rel}")
+                entry[tag] = rel
+            # Plain f32 conv at MPC batch and at search batch.
+            for tag, b in (("plain", batch), ("search", SEARCH_BATCH)):
+                rel = f"models/{name}/{tag}_conv{i}.hlo.txt"
+                fn = functools.partial(M.conv_plain, stride=stride, pad=pad)
+                if lower_to_file(fn, [spec((b, cin, h, w), F32),
+                                      spec((cout, cin, k, k), F32),
+                                      spec((cout,), F32)],
+                                 os.path.join(ART, rel), force):
+                    print(f"[aot] {rel}")
+                entry[tag] = rel
+            layers[str(i)] = entry
+        elif op == "fc":
+            in_shape = shapes[node["in"][0]]
+            cin = 1
+            for d in in_shape:
+                cin *= d
+            out = node["out"]
+            entry = {"op": "fc", "in_dim": cin, "out_dim": out,
+                     "wmat_shape": [cin, out]}
+            for tag, fast in (("share", False), ("share_fast", True)):
+                rel = f"models/{name}/{tag}_fc{i}.hlo.txt"
+                fn = functools.partial(M.share_fc, fast=fast)
+                if lower_to_file(fn, [spec((batch, cin), I64),
+                                      spec((cin, out), I64)],
+                                 os.path.join(ART, rel), force):
+                    print(f"[aot] {rel}")
+                entry[tag] = rel
+            for tag, b in (("plain", batch), ("search", SEARCH_BATCH)):
+                rel = f"models/{name}/{tag}_fc{i}.hlo.txt"
+                if lower_to_file(M.fc_plain, [spec((b, cin), F32),
+                                              spec((cin, out), F32),
+                                              spec((out,), F32)],
+                                 os.path.join(ART, rel), force):
+                    print(f"[aot] {rel}")
+                entry[tag] = rel
+            layers[str(i)] = entry
+    return {
+        "batch": batch,
+        "search_batch": SEARCH_BATCH,
+        "frac_bits": cfg["frac_bits"],
+        "layers": layers,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--models", nargs="*", default=None,
+                    help="subset of config names (default: all)")
+    ap.add_argument("--skip-models", action="store_true",
+                    help="only emit the GMW kernels")
+    args = ap.parse_args()
+
+    os.makedirs(ART, exist_ok=True)
+    archs.write_all_configs(os.path.join(ROOT, "configs", "models"))
+
+    manifest = {"kernel_buckets": KERNEL_BUCKETS, "kernels": {}, "models": {}}
+    manifest["kernels"] = emit_kernels(args.force)
+
+    if not args.skip_models:
+        wanted = args.models
+        for m, ds in archs.BENCHMARKS + archs.EXTRA:
+            cfg = archs.build_config(m, ds)
+            if wanted and cfg["name"] not in wanted:
+                continue
+            print(f"[aot] model {cfg['name']}")
+            manifest["models"][cfg["name"]] = emit_model(cfg, args.force)
+
+    path = os.path.join(ART, "manifest.json")
+    # Merge with an existing manifest so partial runs don't drop entries.
+    if os.path.exists(path) and (args.models or args.skip_models):
+        with open(path) as f:
+            old = json.load(f)
+        old["kernels"] = manifest["kernels"] or old.get("kernels", {})
+        old.setdefault("models", {}).update(manifest["models"])
+        old["kernel_buckets"] = manifest["kernel_buckets"]
+        manifest = old
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

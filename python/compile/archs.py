@@ -1,0 +1,166 @@
+"""Model architecture definitions shared between the Python build path and
+the Rust runtime.
+
+A model is a flat DAG of nodes (JSON-serializable); both `model.py` (JAX) and
+`rust/src/model/graph.rs` interpret the same schema:
+
+    {"op": "input"}                                       node 0, always
+    {"op": "conv", "in": [i], "out_ch": C, "k": K, "stride": S, "pad": P}
+    {"op": "relu", "in": [i], "group": G}
+    {"op": "add",  "in": [i, j]}
+    {"op": "gap",  "in": [i]}            # global average pool
+    {"op": "fc",   "in": [i], "out": N}  # flattens its input
+
+ReLU `group` ids implement the paper's ReLU grouping (§4.1.2): all ReLUs in
+a group share one (k, m) plan during search and inference. Following the
+paper we use five groups for the ResNet-style models (stem + 4 stages).
+"""
+
+import json
+import os
+
+# (dataset -> (channels, height/width, num_classes))
+DATASETS = {
+    "synth10": (3, 16, 10),
+    "synth100": (3, 16, 100),
+    "synthtiny": (3, 24, 50),
+}
+
+
+def micronet(in_hw: int, num_classes: int) -> list:
+    """4-conv plain CNN (quickstart-sized); 4 ReLU groups."""
+    nodes = [{"op": "input"}]
+
+    def conv(src, out_ch, stride=1):
+        nodes.append({"op": "conv", "in": [src], "out_ch": out_ch, "k": 3,
+                      "stride": stride, "pad": 1})
+        return len(nodes) - 1
+
+    def relu(src, group):
+        nodes.append({"op": "relu", "in": [src], "group": group})
+        return len(nodes) - 1
+
+    x = conv(0, 8)
+    x = relu(x, 0)
+    x = conv(x, 16, stride=2)
+    x = relu(x, 1)
+    x = conv(x, 16)
+    x = relu(x, 2)
+    x = conv(x, 32, stride=2)
+    x = relu(x, 3)
+    nodes.append({"op": "gap", "in": [x]})
+    nodes.append({"op": "fc", "in": [len(nodes) - 1], "out": num_classes})
+    return nodes
+
+
+def _resnet(in_hw: int, num_classes: int, stage_blocks, widths) -> list:
+    """Basic-block ResNet, avg-pool downsampling on the skip path (the paper
+    replaces max pooling with average pooling; our skips use stride-2 1x1
+    convs like standard CIFAR ResNets). 5 ReLU groups: stem + one per stage.
+    """
+    nodes = [{"op": "input"}]
+
+    def conv(src, out_ch, k=3, stride=1, pad=1):
+        nodes.append({"op": "conv", "in": [src], "out_ch": out_ch, "k": k,
+                      "stride": stride, "pad": pad})
+        return len(nodes) - 1
+
+    def relu(src, group):
+        nodes.append({"op": "relu", "in": [src], "group": group})
+        return len(nodes) - 1
+
+    x = conv(0, widths[0])
+    x = relu(x, 0)  # stem = group 0
+    in_ch = widths[0]
+    for stage, (blocks, width) in enumerate(zip(stage_blocks, widths)):
+        group = min(stage + 1, 4)
+        for b in range(blocks):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            y = conv(x, width, stride=stride)
+            y = relu(y, group)
+            y = conv(y, width)
+            if stride != 1 or in_ch != width:
+                skip = conv(x, width, k=1, stride=stride, pad=0)
+            else:
+                skip = x
+            nodes.append({"op": "add", "in": [y, skip]})
+            x = relu(len(nodes) - 1, group)
+            in_ch = width
+    nodes.append({"op": "gap", "in": [x]})
+    nodes.append({"op": "fc", "in": [len(nodes) - 1], "out": num_classes})
+    return nodes
+
+
+def miniresnet(in_hw: int, num_classes: int) -> list:
+    """2-stage ResNet (ResNet18 stand-in for quick runs); 5 ReLU layers."""
+    return _resnet(in_hw, num_classes, stage_blocks=[1, 1], widths=[16, 32])
+
+
+def resnets18(in_hw: int, num_classes: int) -> list:
+    """[2,2,2,2] basic-block ResNet (the paper's ResNet18 shape, width-scaled
+    for our small synthetic inputs / single-core testbed); 17 ReLUs in 5
+    groups."""
+    return _resnet(in_hw, num_classes, stage_blocks=[2, 2, 2, 2],
+                   widths=[8, 16, 32, 64])
+
+
+MODELS = {
+    "micronet": micronet,
+    "miniresnet": miniresnet,
+    "resnets18": resnets18,
+}
+
+# Model/dataset pairs mirroring the paper's 6 benchmark combinations
+# (ResNet18/ResNet50 x CIFAR10/CIFAR100/TinyImageNet).
+BENCHMARKS = [
+    ("miniresnet", "synth10"),
+    ("resnets18", "synth10"),
+    ("miniresnet", "synth100"),
+    ("resnets18", "synth100"),
+    ("miniresnet", "synthtiny"),
+    ("resnets18", "synthtiny"),
+]
+
+# Extra pair used by the quickstart and unit tests.
+EXTRA = [("micronet", "synth10")]
+
+
+def config_name(model: str, dataset: str) -> str:
+    return f"{model}_{dataset}"
+
+
+def build_config(model: str, dataset: str, batch: int = 4) -> dict:
+    ch, hw, ncls = DATASETS[dataset]
+    nodes = MODELS[model](hw, ncls)
+    n_groups = 1 + max(n.get("group", 0) for n in nodes if n["op"] == "relu")
+    return {
+        "name": config_name(model, dataset),
+        "model": model,
+        "dataset": dataset,
+        "input": [ch, hw, hw],
+        "num_classes": ncls,
+        "batch": batch,
+        "frac_bits": 12,
+        "relu_groups": n_groups,
+        "nodes": nodes,
+    }
+
+
+def write_all_configs(out_dir: str) -> list:
+    """Write every benchmark config; returns the list of paths."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+    for model, dataset in BENCHMARKS + EXTRA:
+        cfg = build_config(model, dataset)
+        path = os.path.join(out_dir, cfg["name"] + ".json")
+        with open(path, "w") as f:
+            json.dump(cfg, f, indent=1)
+        paths.append(path)
+    return paths
+
+
+if __name__ == "__main__":
+    import sys
+    out = sys.argv[1] if len(sys.argv) > 1 else "../configs/models"
+    for p in write_all_configs(out):
+        print("wrote", p)

@@ -1,0 +1,57 @@
+"""Tensor-archive I/O shared with the Rust side.
+
+Format: `<prefix>.json` manifest + `<prefix>.bin` raw little-endian data.
+
+    {"tensors": [{"name": "w3", "shape": [8,3,3,3],
+                  "dtype": "f32"|"i32", "offset": 0, "count": 216}, ...]}
+
+Rust reader: `rust/src/model/weights.rs`.
+"""
+
+import json
+import os
+
+import numpy as np
+
+DTYPES = {"f32": np.float32, "i32": np.int32}
+
+
+def save_tensors(prefix: str, tensors: dict) -> None:
+    """tensors: name -> np.ndarray (float32 or int32)."""
+    os.makedirs(os.path.dirname(prefix), exist_ok=True)
+    manifest = {"tensors": []}
+    offset = 0
+    with open(prefix + ".bin", "wb") as f:
+        for name, arr in tensors.items():
+            arr = np.asarray(arr)
+            if arr.dtype == np.float64:
+                arr = arr.astype(np.float32)
+            if arr.dtype == np.int64:
+                arr = arr.astype(np.int32)
+            dtype = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32"}[arr.dtype]
+            data = np.ascontiguousarray(arr).tobytes()
+            f.write(data)
+            manifest["tensors"].append({
+                "name": name,
+                "shape": list(arr.shape),
+                "dtype": dtype,
+                "offset": offset,
+                "count": int(arr.size),
+            })
+            offset += len(data)
+    with open(prefix + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_tensors(prefix: str) -> dict:
+    with open(prefix + ".json") as f:
+        manifest = json.load(f)
+    out = {}
+    raw = open(prefix + ".bin", "rb").read()
+    for t in manifest["tensors"]:
+        np_dtype = DTYPES[t["dtype"]]
+        count = t["count"]
+        arr = np.frombuffer(raw, dtype=np_dtype,
+                            count=count, offset=t["offset"])
+        out[t["name"]] = arr.reshape(t["shape"]).copy()
+    return out

@@ -1,0 +1,193 @@
+"""Layer-1 Pallas kernels: the GMW engine's elementwise hot path.
+
+Every kernel here is the local compute of one protocol step (masked Beaver
+openings and combines, Kogge-Stone stage operand construction). They lower
+with ``interpret=True`` so the CPU PJRT plugin can execute the resulting
+HLO (real-TPU Pallas lowering emits Mosaic custom-calls the CPU client
+cannot run — see DESIGN.md §Hardware-Adaptation).
+
+TPU mapping notes (what the BlockSpecs express):
+  * These are VPU-shaped lane-wise ops on int64 — we tile the flat element
+    axis into (BLOCK,) chunks sized so that all operands of one grid step
+    fit VMEM comfortably: 6 operands x BLOCK x 8 B = 384 KiB at
+    BLOCK = 8192, ~2.4% of a v5 core's 16 MiB VMEM, leaving room for
+    double-buffering the HBM->VMEM pipeline.
+  * Scalars (shift amount, lane mask, leader mask) ride in SMEM via scalar
+    prefetch (here: plain operands broadcast by the index_map returning the
+    same block for every grid step).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I64 = jnp.int64
+BLOCK = 8192
+
+
+def _block(n):
+    """Tile size for a flat length-n array (small buckets use one tile)."""
+    return min(n, BLOCK)
+
+
+def _flat_spec(n):
+    return pl.BlockSpec((_block(n),), lambda i: (i,))
+
+
+def _scalar_spec():
+    # One (1,)-shaped block, same for every grid step.
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def _row2_spec(n):
+    # Output rows [d; e]: block covers both rows for the current column tile.
+    return pl.BlockSpec((2, _block(n)), lambda i: (0, i))
+
+
+def _grid(n):
+    b = _block(n)
+    assert n % b == 0, f"bucket size {n} must be a multiple of {b}"
+    return (n // b,)
+
+
+# ---------------------------------------------------------------------------
+# Beaver-AND opening / combine.
+# ---------------------------------------------------------------------------
+
+def _and_open_kernel(u_ref, v_ref, a_ref, b_ref, de_ref):
+    de_ref[0, :] = u_ref[...] ^ a_ref[...]
+    de_ref[1, :] = v_ref[...] ^ b_ref[...]
+
+
+def and_open(u, v, a, b):
+    """de[0] = u ^ a, de[1] = v ^ b  (shape [2, n])."""
+    n = u.shape[0]
+    return pl.pallas_call(
+        _and_open_kernel,
+        grid=_grid(n),
+        in_specs=[_flat_spec(n)] * 4,
+        out_specs=_row2_spec(n),
+        out_shape=jax.ShapeDtypeStruct((2, n), I64),
+        interpret=True,
+    )(u, v, a, b)
+
+
+def _and_combine_kernel(d_ref, e_ref, a_ref, b_ref, c_ref, lead_ref, z_ref):
+    d = d_ref[...]
+    e = e_ref[...]
+    lead = lead_ref[0]
+    z_ref[...] = ((d & e) & lead) ^ (d & b_ref[...]) ^ (e & a_ref[...]) ^ c_ref[...]
+
+
+def and_combine(d, e, a, b, c, leader_mask):
+    """z = (leader? d&e) ^ d&b ^ e&a ^ c. leader_mask: int64 [1] (0 or -1)."""
+    n = d.shape[0]
+    return pl.pallas_call(
+        _and_combine_kernel,
+        grid=_grid(n),
+        in_specs=[_flat_spec(n)] * 5 + [_scalar_spec()],
+        out_specs=_flat_spec(n),
+        out_shape=jax.ShapeDtypeStruct((n,), I64),
+        interpret=True,
+    )(d, e, a, b, c, leader_mask)
+
+
+# ---------------------------------------------------------------------------
+# Kogge-Stone stage operands.
+# ---------------------------------------------------------------------------
+
+def _ks_stage_mid_kernel(g_ref, p_ref, s_ref, m_ref, u_ref, v_ref):
+    p = p_ref[...]
+    s = s_ref[0]
+    mask = m_ref[0]
+    u_ref[0, :] = p
+    u_ref[1, :] = p
+    v_ref[0, :] = (g_ref[...] << s) & mask
+    v_ref[1, :] = (p << s) & mask
+
+
+def ks_stage_mid(g, p, s, mask):
+    """Mid-stage operands: u=[p;p], v=[(g<<s)&mask;(p<<s)&mask]."""
+    n = g.shape[0]
+    return pl.pallas_call(
+        _ks_stage_mid_kernel,
+        grid=_grid(n),
+        in_specs=[_flat_spec(n), _flat_spec(n), _scalar_spec(), _scalar_spec()],
+        out_specs=[_row2_spec(n), _row2_spec(n)],
+        out_shape=[jax.ShapeDtypeStruct((2, n), I64)] * 2,
+        interpret=True,
+    )(g, p, s, mask)
+
+
+def _ks_stage_last_kernel(g_ref, p_ref, s_ref, m_ref, u_ref, v_ref):
+    u_ref[...] = p_ref[...]
+    v_ref[...] = (g_ref[...] << s_ref[0]) & m_ref[0]
+
+
+def ks_stage_last(g, p, s, mask):
+    """Final-stage operands: u=p, v=(g<<s)&mask (the P update is skipped)."""
+    n = g.shape[0]
+    return pl.pallas_call(
+        _ks_stage_last_kernel,
+        grid=_grid(n),
+        in_specs=[_flat_spec(n), _flat_spec(n), _scalar_spec(), _scalar_spec()],
+        out_specs=[_flat_spec(n), _flat_spec(n)],
+        out_shape=[jax.ShapeDtypeStruct((n,), I64)] * 2,
+        interpret=True,
+    )(g, p, s, mask)
+
+
+# ---------------------------------------------------------------------------
+# Beaver arithmetic multiplication.
+# ---------------------------------------------------------------------------
+
+def _mult_open_kernel(x_ref, y_ref, a_ref, b_ref, de_ref):
+    de_ref[0, :] = x_ref[...] - a_ref[...]
+    de_ref[1, :] = y_ref[...] - b_ref[...]
+
+
+def mult_open(x, y, a, b):
+    """de[0] = x - a, de[1] = y - b (mod 2^64)."""
+    n = x.shape[0]
+    return pl.pallas_call(
+        _mult_open_kernel,
+        grid=_grid(n),
+        in_specs=[_flat_spec(n)] * 4,
+        out_specs=_row2_spec(n),
+        out_shape=jax.ShapeDtypeStruct((2, n), I64),
+        interpret=True,
+    )(x, y, a, b)
+
+
+def _mult_combine_kernel(d_ref, e_ref, a_ref, b_ref, c_ref, lead_ref, z_ref):
+    d = d_ref[...]
+    e = e_ref[...]
+    z_ref[...] = (
+        c_ref[...] + d * b_ref[...] + e * a_ref[...] + (d * e) * (lead_ref[0] & 1)
+    )
+
+
+def mult_combine(d, e, a, b, c, leader_mask):
+    """z = c + d*b + e*a + (leader? d*e) (mod 2^64)."""
+    n = d.shape[0]
+    return pl.pallas_call(
+        _mult_combine_kernel,
+        grid=_grid(n),
+        in_specs=[_flat_spec(n)] * 5 + [_scalar_spec()],
+        out_specs=_flat_spec(n),
+        out_shape=jax.ShapeDtypeStruct((n,), I64),
+        interpret=True,
+    )(d, e, a, b, c, leader_mask)
+
+
+# Names -> (callable, number of vector operands) for the AOT driver.
+KERNELS = {
+    "and_open": (and_open, 4),
+    "and_combine": (and_combine, 5),  # + leader scalar
+    "ks_stage_mid": (ks_stage_mid, 2),  # + s, mask scalars
+    "ks_stage_last": (ks_stage_last, 2),  # + s, mask scalars
+    "mult_open": (mult_open, 4),
+    "mult_combine": (mult_combine, 5),  # + leader scalar
+}

@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernel: tiled ring matmul for linear layers on shares.
+
+Linear layers in the shared-model setting are *local* per-party matmuls of
+the party's int64 share against public (quantized) weights, with natural
+mod-2^64 wraparound. This kernel is the compute hot spot of the non-ReLU
+part of the pipeline; conv layers reach it through im2col (see model.py).
+
+TPU mapping (what the BlockSpec grid expresses): classic (M/bm, N/bn, K/bk)
+tiling with the K axis innermost ("arbitrary" semantics -> sequential), the
+output tile accumulated in VMEM across K steps. Tile sizes 128x128x128 on
+int64 = 3 x 128 KiB of VMEM per step. On real TPU hardware the MXU path
+would want int32/bf16 splits of the 64-bit ring product (see DESIGN.md
+§Hardware-Adaptation) - on the CPU interpret/HLO path int64 dot is native.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I64 = jnp.int64
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=I64)
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def share_matmul(x, w):
+    """(x @ w) mod 2^64 for int64 x:[M,K], w:[K,N] via the Pallas kernel.
+
+    Shapes are padded up to the 128-tile grid and the result sliced back, so
+    one lowering works for arbitrary layer shapes.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    xp = _pad_to(_pad_to(x, BM, 0), BK, 1)
+    wp = _pad_to(_pad_to(w, BK, 0), BN, 1)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // BM, np_ // BN, kp // BK),
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((BK, BN), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), I64),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]

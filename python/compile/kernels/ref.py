@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+asserts the Pallas kernels (interpret mode) match these exactly (integer
+ops, so equality is bit-exact), and hypothesis sweeps shapes/values.
+
+All ring math is on int64 with two's-complement wraparound — identical bit
+patterns to the Rust engine's u64. Right shifts are never used (arithmetic
+vs logical ambiguity); the protocol only needs XOR/AND/left-shift/mul/add.
+"""
+
+import jax.numpy as jnp
+
+I64 = jnp.int64
+
+
+def and_open(u, v, a, b):
+    """Beaver-AND masked opening: rows [d; e] = [u ^ a; v ^ b]."""
+    return jnp.stack([u ^ a, v ^ b], axis=0)
+
+
+def and_combine(d, e, a, b, c, leader_mask):
+    """Beaver-AND combine: z = (leader? d&e) ^ d&b ^ e&a ^ c.
+
+    leader_mask is 0 or -1 (all ones) as an int64 scalar array.
+    """
+    return ((d & e) & leader_mask) ^ (d & b) ^ (e & a) ^ c
+
+
+def ks_stage_operands(g, p, s, mask, last: bool):
+    """Kogge-Stone stage AND operands.
+
+    mid stage:  u = [p; p], v = [(g << s) & mask; (p << s) & mask]
+    last stage: u = [p],    v = [(g << s) & mask]
+    `s` and `mask` are int64 scalars (shape ()) so one lowered artifact
+    serves every stage of every window width.
+    """
+    gv = (g << s) & mask
+    if last:
+        return jnp.stack([p], axis=0), jnp.stack([gv], axis=0)
+    pv = (p << s) & mask
+    return jnp.stack([p, p], axis=0), jnp.stack([gv, pv], axis=0)
+
+
+def mult_open(x, y, a, b):
+    """Beaver-mult masked opening: rows [d; e] = [x - a; y - b] (mod 2^64)."""
+    return jnp.stack([x - a, y - b], axis=0)
+
+
+def mult_combine(d, e, a, b, c, leader_mask):
+    """Beaver-mult combine: z = c + d*b + e*a + (leader? d*e) (mod 2^64)."""
+    return c + d * b + e * a + (d * e) * (leader_mask & 1)
+
+
+def share_matmul(x, w):
+    """Ring matmul on shares: (x @ w) mod 2^64, x:[M,K] w:[K,N] int64."""
+    return jnp.matmul(x, w, preferred_element_type=I64)

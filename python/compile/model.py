@@ -1,0 +1,258 @@
+"""Layer-2: JAX compute graphs for the model zoo (build-time only).
+
+Interprets the shared model-config schema (see archs.py) three ways:
+
+* ``forward_plain``    — f32 forward pass (training, the search engine's
+                         plaintext reference, and the plain per-layer HLO
+                         artifacts).
+* ``share_conv`` etc.  — int64 ring ops on *secret shares* (im2col + the
+                         Layer-1 Pallas ``share_matmul``), lowered per layer
+                         into the ``share_*`` HLO artifacts the Rust party
+                         executes locally.
+* ``approx_relu``      — bit-exact simulation of HummingBird's reduced-ring
+                         DReLU (uint64 share math identical to the Rust
+                         engine), used for finetuning (§4.1.3) with a
+                         straight-through gradient.
+
+Python never runs at serving time; everything here exists to be lowered by
+aot.py or executed inside train.py.
+"""
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from .kernels import matmul as kmm
+from .kernels import ref
+
+I64 = jnp.int64
+U64 = jnp.uint64
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization / pytree layout.
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key):
+    """He-normal conv/fc parameters keyed by node index: w{i}, b{i}."""
+    params = {}
+    shapes = node_shapes(cfg)
+    for i, node in enumerate(cfg["nodes"]):
+        if node["op"] == "conv":
+            cin = shapes[node["in"][0]][0]
+            k = node["k"]
+            key, sub = jax.random.split(key)
+            fan_in = cin * k * k
+            params[f"w{i}"] = (
+                jax.random.normal(sub, (node["out_ch"], cin, k, k), jnp.float32)
+                * jnp.sqrt(2.0 / fan_in)
+            )
+            params[f"b{i}"] = jnp.zeros((node["out_ch"],), jnp.float32)
+        elif node["op"] == "fc":
+            cin = int(jnp.prod(jnp.array(shapes[node["in"][0]])))
+            key, sub = jax.random.split(key)
+            params[f"w{i}"] = (
+                jax.random.normal(sub, (cin, node["out"]), jnp.float32)
+                * jnp.sqrt(2.0 / cin)
+            )
+            params[f"b{i}"] = jnp.zeros((node["out"],), jnp.float32)
+    return params
+
+
+def node_shapes(cfg):
+    """Static (C, H, W) (or (N,) after fc/gap) shape per node."""
+    shapes = []
+    for node in cfg["nodes"]:
+        op = node["op"]
+        if op == "input":
+            shapes.append(tuple(cfg["input"]))
+        elif op == "conv":
+            c, h, w = shapes[node["in"][0]]
+            s, p, k = node["stride"], node["pad"], node["k"]
+            ho = (h + 2 * p - k) // s + 1
+            wo = (w + 2 * p - k) // s + 1
+            shapes.append((node["out_ch"], ho, wo))
+        elif op in ("relu", "add"):
+            shapes.append(shapes[node["in"][0]])
+        elif op == "gap":
+            c, _, _ = shapes[node["in"][0]]
+            shapes.append((c,))
+        elif op == "fc":
+            shapes.append((node["out"],))
+        else:
+            raise ValueError(f"unknown op {op}")
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Plain f32 forward.
+# ---------------------------------------------------------------------------
+
+def conv_plain(x, w, b, stride, pad):
+    """NCHW f32 convolution + bias (one HLO artifact per conv layer)."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def fc_plain(x, w, b):
+    return x @ w + b
+
+
+def forward_plain(cfg, params, x, relu_fn=None):
+    """Full f32 forward. `relu_fn(x, group)` defaults to exact ReLU."""
+    if relu_fn is None:
+        relu_fn = lambda v, g: jnp.maximum(v, 0.0)
+    acts = {}
+    out = None
+    for i, node in enumerate(cfg["nodes"]):
+        op = node["op"]
+        if op == "input":
+            acts[i] = x
+        elif op == "conv":
+            acts[i] = conv_plain(acts[node["in"][0]], params[f"w{i}"],
+                                 params[f"b{i}"], node["stride"], node["pad"])
+        elif op == "relu":
+            acts[i] = relu_fn(acts[node["in"][0]], node["group"])
+        elif op == "add":
+            acts[i] = acts[node["in"][0]] + acts[node["in"][1]]
+        elif op == "gap":
+            acts[i] = jnp.mean(acts[node["in"][0]], axis=(2, 3))
+        elif op == "fc":
+            v = acts[node["in"][0]].reshape(x.shape[0], -1)
+            acts[i] = fc_plain(v, params[f"w{i}"], params[f"b{i}"])
+        out = acts[i]
+    return out
+
+
+def pre_relu_activations(cfg, params, x, relu_fn=None):
+    """Forward pass that also returns every ReLU node's *input* (used by the
+    search engine's range analysis and by tests)."""
+    if relu_fn is None:
+        relu_fn = lambda v, g: jnp.maximum(v, 0.0)
+    acts = {}
+    pre = {}
+    for i, node in enumerate(cfg["nodes"]):
+        op = node["op"]
+        if op == "input":
+            acts[i] = x
+        elif op == "conv":
+            acts[i] = conv_plain(acts[node["in"][0]], params[f"w{i}"],
+                                 params[f"b{i}"], node["stride"], node["pad"])
+        elif op == "relu":
+            pre[i] = acts[node["in"][0]]
+            acts[i] = relu_fn(pre[i], node["group"])
+        elif op == "add":
+            acts[i] = acts[node["in"][0]] + acts[node["in"][1]]
+        elif op == "gap":
+            acts[i] = jnp.mean(acts[node["in"][0]], axis=(2, 3))
+        elif op == "fc":
+            v = acts[node["in"][0]].reshape(x.shape[0], -1)
+            acts[i] = fc_plain(v, params[f"w{i}"], params[f"b{i}"])
+    return acts[len(cfg["nodes"]) - 1], pre
+
+
+# ---------------------------------------------------------------------------
+# Share-domain (int64 ring) per-layer graphs.
+# ---------------------------------------------------------------------------
+
+def im2col(x, k, stride, pad):
+    """[B,C,H,W] -> [B*Ho*Wo, C*k*k] patches, order (c, ky, kx)."""
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (w + 2 * pad - k) // stride + 1
+    cols = []
+    for dy in range(k):
+        for dx in range(k):
+            sl = xp[:, :, dy:dy + (ho - 1) * stride + 1:stride,
+                    dx:dx + (wo - 1) * stride + 1:stride]
+            cols.append(sl)  # [B, C, Ho, Wo]
+    patches = jnp.stack(cols, axis=2)  # [B, C, k*k, Ho, Wo]
+    patches = patches.transpose(0, 3, 4, 1, 2)  # [B, Ho, Wo, C, k*k]
+    return patches.reshape(b * ho * wo, c * k * k), (b, ho, wo)
+
+
+def share_conv(x, wmat, k, stride, pad, out_ch, fast=False):
+    """Conv on int64 shares: im2col + ring matmul.
+
+    wmat is the public weight reshaped to [C*k*k, out_ch] and quantized to
+    the fixed-point ring; the output scale is 2^(2f) (the Rust party
+    truncates and adds the public bias).
+
+    `fast=False` routes through the Layer-1 Pallas kernel (the validated
+    TPU-shaped path; under interpret=True it lowers to a grid loop of
+    dynamic slices, which XLA-CPU executes slowly). `fast=True` lowers the
+    same ring math as a single fused int64 dot — the CPU-deployment hot
+    path (see EXPERIMENTS.md §Perf L2). Both variants are emitted by
+    aot.py and compared bit-for-bit in tests.
+    """
+    patches, (b, ho, wo) = im2col(x, k, stride, pad)
+    mm = ref.share_matmul if fast else kmm.share_matmul
+    y = mm(patches, wmat)  # [B*Ho*Wo, out_ch]
+    return y.reshape(b, ho, wo, out_ch).transpose(0, 3, 1, 2)
+
+
+def share_fc(x, wmat, fast=False):
+    """FC on int64 shares: [B, In] @ [In, Out] on the ring."""
+    mm = ref.share_matmul if fast else kmm.share_matmul
+    return mm(x, wmat)
+
+
+# ---------------------------------------------------------------------------
+# HummingBird approximate-ReLU simulation (bit-exact vs the Rust engine).
+# ---------------------------------------------------------------------------
+
+def low_mask(w):
+    return jnp.where(
+        jnp.uint64(w) >= jnp.uint64(64),
+        jnp.uint64(0xFFFFFFFFFFFFFFFF),
+        (jnp.uint64(1) << jnp.uint64(w)) - jnp.uint64(1),
+    )
+
+
+def approx_drelu_mask(key, x_f, k, m, frac_bits):
+    """Simulate DReLU(⟨x⟩[k:m]) exactly: encode to the ring, secret-share
+    with fresh randomness, drop bits, compute the reduced-ring sum's MSB.
+
+    Returns a float 0/1 mask with the same semantics as the Rust engine's
+    two-party protocol output (including Theorem 2's probabilistic pruning
+    of values in [0, 2^m)).
+    """
+    w = k - m
+    xi = jnp.round(x_f.astype(jnp.float64) * (2.0 ** frac_bits)).astype(jnp.int64)
+    xu = xi.astype(U64)
+    r = jax.random.bits(key, x_f.shape, dtype=U64)
+    a0 = r
+    a1 = xu - r
+    t = ((a0 >> jnp.uint64(m)) + (a1 >> jnp.uint64(m))) & low_mask(w)
+    sign = (t >> jnp.uint64(w - 1)) & jnp.uint64(1)
+    return (jnp.uint64(1) - sign).astype(x_f.dtype)
+
+
+def make_approx_relu_fn(plan_by_group, frac_bits, key):
+    """relu_fn for forward_plain that applies a searched HummingBird plan.
+
+    plan_by_group: {group: (k, m)}; straight-through gradient (the mask is
+    treated as a constant), implementing the paper's finetuning (§4.1.3).
+    """
+    keys = {}
+
+    def relu_fn(x, group):
+        k, m = plan_by_group[group]
+        if k == m:  # identity layer (zero bits retained)
+            return x
+        if (k, m) == (64, 0):
+            return jnp.maximum(x, 0.0)
+        gkey = jax.random.fold_in(key, group)
+        mask = approx_drelu_mask(gkey, x, k, m, frac_bits)
+        return x * jax.lax.stop_gradient(mask)
+
+    return relu_fn

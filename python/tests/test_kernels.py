@@ -1,0 +1,128 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles (bit-exact).
+
+Hypothesis sweeps shapes and values; because everything is integer ring
+math, equality is exact (no allclose tolerance needed).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitops, matmul as kmm, ref
+
+I64_MIN, I64_MAX = -(2**63), 2**63 - 1
+
+
+def i64_array(n, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(I64_MIN, I64_MAX, n, dtype=np.int64))
+
+
+# Bucket sizes the AOT driver lowers; kernels must be exact for all.
+BUCKETS = [1024, 8192, 32768]
+
+
+@pytest.mark.parametrize("n", BUCKETS)
+def test_and_open_matches_ref(n):
+    u, v, a, b = (i64_array(n, s) for s in range(4))
+    got = bitops.and_open(u, v, a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.and_open(u, v, a, b)))
+
+
+@pytest.mark.parametrize("n", BUCKETS)
+@pytest.mark.parametrize("leader", [0, -1])
+def test_and_combine_matches_ref(n, leader):
+    d, e, a, b, c = (i64_array(n, s) for s in range(5))
+    lead = jnp.asarray([leader], dtype=jnp.int64)
+    got = bitops.and_combine(d, e, a, b, c, lead)
+    want = ref.and_combine(d, e, a, b, c, lead[0])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", [1024])
+@pytest.mark.parametrize("w", [2, 6, 8, 20, 63, 64])
+@pytest.mark.parametrize("s", [1, 2, 4, 16, 32])
+def test_ks_stage_operands_match_ref(n, w, s):
+    if s >= w:
+        pytest.skip("stage shift always < width")
+    g, p = i64_array(n, 10), i64_array(n, 11)
+    mask = jnp.asarray([(1 << w) - 1 if w < 64 else -1], dtype=jnp.int64)
+    sv = jnp.asarray([s], dtype=jnp.int64)
+    # mask lanes as the engine does
+    g = g & mask[0]
+    p = p & mask[0]
+    u, v = bitops.ks_stage_mid(g, p, sv, mask)
+    ru, rv = ref.ks_stage_operands(g, p, sv[0], mask[0], last=False)
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(ru))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+    u, v = bitops.ks_stage_last(g, p, sv, mask)
+    ru, rv = ref.ks_stage_operands(g, p, sv[0], mask[0], last=True)
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(ru[0]))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(rv[0]))
+
+
+@pytest.mark.parametrize("n", BUCKETS)
+def test_mult_open_combine_match_ref(n):
+    x, y, a, b, c = (i64_array(n, 20 + s) for s in range(5))
+    de = bitops.mult_open(x, y, a, b)
+    np.testing.assert_array_equal(np.asarray(de), np.asarray(ref.mult_open(x, y, a, b)))
+    for leader in (0, -1):
+        lead = jnp.asarray([leader], dtype=jnp.int64)
+        got = bitops.mult_combine(x, y, a, b, c, lead)
+        want = ref.mult_combine(x, y, a, b, c, lead[0])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_beaver_and_identity_end_to_end():
+    """Plaintext sanity: open+combine across two simulated parties = AND."""
+    n = 1024
+    rng = np.random.default_rng(3)
+
+    def r():
+        return rng.integers(I64_MIN, I64_MAX, n, dtype=np.int64)
+
+    x, y = r(), r()
+    # share x, y, and a beaver triple
+    x0, y0 = r(), r()
+    x1, y1 = x ^ x0, y ^ y0
+    a, b = r(), r()
+    c = a & b
+    a0, b0, c0 = r(), r(), r()
+    a1, b1, c1 = a ^ a0, b ^ b0, c ^ c0
+    j = jnp.asarray
+    de0 = bitops.and_open(j(x0), j(y0), j(a0), j(b0))
+    de1 = bitops.and_open(j(x1), j(y1), j(a1), j(b1))
+    de = np.asarray(de0) ^ np.asarray(de1)  # public opening
+    d, e = j(de[0]), j(de[1])
+    z0 = bitops.and_combine(d, e, j(a0), j(b0), j(c0), j(np.asarray([-1], np.int64)))
+    z1 = bitops.and_combine(d, e, j(a1), j(b1), j(c1), j(np.asarray([0], np.int64)))
+    np.testing.assert_array_equal(np.asarray(z0) ^ np.asarray(z1), x & y)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31),
+)
+def test_share_matmul_matches_ref_hypothesis(m, k, n, seed):
+    """Hypothesis sweep of arbitrary (unpadded) matmul shapes."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(I64_MIN, I64_MAX, (m, k), dtype=np.int64))
+    w = jnp.asarray(rng.integers(I64_MIN, I64_MAX, (k, n), dtype=np.int64))
+    got = kmm.share_matmul(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.share_matmul(x, w)))
+
+
+def test_share_matmul_wraps_mod_2_64():
+    x = jnp.asarray([[2**62, 2**62]], dtype=jnp.int64)
+    w = jnp.asarray([[4], [4]], dtype=jnp.int64)
+    got = np.asarray(kmm.share_matmul(x, w))
+    # 2^64 + 2^64 = 0 (mod 2^64)
+    assert got[0, 0] == 0

@@ -1,0 +1,37 @@
+//! Bitpacking wire-library throughput (paper §4.2). The pack/unpack pair
+//! sits on every AND opening, so its throughput must far exceed link
+//! bandwidth to keep the protocol communication-bound.
+
+use hummingbird::bitpack;
+use hummingbird::crypto::prg::Prg;
+use hummingbird::util::benchkit::{black_box, Bench};
+
+fn main() {
+    let mut bench = Bench::new();
+    let n = 1 << 18; // 256k lanes
+    let mut prg = Prg::new(9, 9);
+    for w in [1u32, 6, 8, 12, 20, 32, 63] {
+        let mask = hummingbird::ring::low_mask(w);
+        let src: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+        let mut packed = Vec::new();
+        bitpack::pack(&src, w, &mut packed);
+        let bytes = bitpack::packed_bytes(n, w);
+
+        let mut dst = Vec::new();
+        bench.bench_bytes(&format!("pack/w{w}/{n}"), bytes, || {
+            bitpack::pack(black_box(&src), w, &mut dst);
+            black_box(&dst);
+        });
+        let mut out = Vec::new();
+        bench.bench_bytes(&format!("unpack/w{w}/{n}"), bytes, || {
+            bitpack::unpack(black_box(&packed), w, n, &mut out);
+            black_box(&out);
+        });
+    }
+    // Byte-granular wire format used by the transport.
+    let src: Vec<u64> = (0..n).map(|_| prg.next_u64() & 0x3f).collect();
+    bench.bench_bytes("pack_bytes/w6", bitpack::packed_bytes(n, 6), || {
+        black_box(bitpack::pack_bytes(black_box(&src), 6));
+    });
+    bench.dump_json("bitpack");
+}

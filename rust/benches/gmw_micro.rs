@@ -1,0 +1,104 @@
+//! Microbenchmarks of the GMW engine's building blocks: AND gates, the
+//! Kogge–Stone adder, A2B, B2A, Beaver mult — across ring widths. These are
+//! the per-operation numbers behind every end-to-end figure; run with
+//! `cargo bench --bench gmw_micro` (HB_BENCH_QUICK=1 for a fast pass).
+
+use hummingbird::crypto::prg::Prg;
+use hummingbird::gmw::harness::run_parties;
+use hummingbird::gmw::{adder, ReluPlan};
+use hummingbird::sharing::{share_arith, share_binary};
+use hummingbird::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::new();
+    let n = 16384usize;
+    let mut prg = Prg::new(1, 1);
+    let x: Vec<u64> = prg.vec_u64(n);
+    let xs_a = share_arith(&mut prg, &x, 2);
+    let xs_b = share_binary(&mut prg, &x, 2);
+    let ys_b = share_binary(&mut prg, &x, 2);
+
+    // Secure AND on full words.
+    {
+        let xs = xs_b.clone();
+        let ys = ys_b.clone();
+        bench.bench_elems(&format!("and_gates/64bit/{n}"), n as u64, || {
+            let xs = xs.clone();
+            let ys = ys.clone();
+            run_parties(2, 3, move |p| {
+                let me = p.party();
+                p.and_gates(
+                    hummingbird::net::accounting::Phase::Circuit,
+                    &xs[me],
+                    &ys[me],
+                    64,
+                )
+                .unwrap()
+            });
+        });
+    }
+
+    // Kogge–Stone adder across widths (the O(w log w) law).
+    for w in [64u32, 20, 8, 6] {
+        let mask = hummingbird::ring::low_mask(w);
+        let xs: Vec<Vec<u64>> =
+            xs_b.iter().map(|s| s.iter().map(|v| v & mask).collect()).collect();
+        let ys: Vec<Vec<u64>> =
+            ys_b.iter().map(|s| s.iter().map(|v| v & mask).collect()).collect();
+        bench.bench_elems(&format!("ks_add/w{w}/{n}"), n as u64, || {
+            let xs = xs.clone();
+            let ys = ys.clone();
+            run_parties(2, 4, move |p| {
+                let me = p.party();
+                adder::ks_add(p, &xs[me], &ys[me], w).unwrap()
+            });
+        });
+    }
+
+    // Full DReLU at paper-relevant windows.
+    for (label, plan) in [
+        ("baseline64", ReluPlan::BASELINE),
+        ("eco18", ReluPlan::new(18, 0).unwrap()),
+        ("hb8", ReluPlan::new(12, 4).unwrap()),
+        ("hb6", ReluPlan::new(10, 4).unwrap()),
+    ] {
+        let xs = xs_a.clone();
+        bench.bench_elems(&format!("drelu/{label}/{n}"), n as u64, || {
+            let xs = xs.clone();
+            run_parties(2, 5, move |p| {
+                let me = p.party();
+                p.drelu(&xs[me], plan).unwrap()
+            });
+        });
+    }
+
+    // Beaver arithmetic multiplication (the incompressible Mult phase).
+    {
+        let xs = xs_a.clone();
+        let ys = share_arith(&mut prg, &x, 2);
+        bench.bench_elems(&format!("beaver_mult/{n}"), n as u64, || {
+            let xs = xs.clone();
+            let ys = ys.clone();
+            run_parties(2, 6, move |p| {
+                let me = p.party();
+                p.mul(&xs[me], &ys[me]).unwrap()
+            });
+        });
+    }
+
+    // B2A via daBits.
+    {
+        let bits: Vec<u64> = x.iter().map(|v| v & 1).collect();
+        let bs = share_binary(&mut prg, &bits, 2);
+        let bs: Vec<Vec<u64>> = bs.iter().map(|s| s.iter().map(|v| v & 1).collect()).collect();
+        bench.bench_elems(&format!("b2a_bit/{n}"), n as u64, || {
+            let bs = bs.clone();
+            run_parties(2, 7, move |p| {
+                let me = p.party();
+                p.b2a_bit(&bs[me]).unwrap()
+            });
+        });
+    }
+
+    bench.dump_json("gmw_micro");
+}

@@ -1,0 +1,50 @@
+//! Whole-model private-inference benchmark (the Fig 1/7/8 end-to-end
+//! number): one 2-party MPC batch through the full stack per plan variant.
+//! Requires `make artifacts` + trained weights.
+
+use hummingbird::figures::FigCtx;
+use hummingbird::util::benchkit::Bench;
+use hummingbird::util::stats;
+
+fn main() {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if !root.join("artifacts/manifest.json").exists()
+        || !root.join("artifacts/weights/micronet_synth10.json").exists()
+    {
+        eprintln!("skipping model_e2e: run `make artifacts && make train` first");
+        return;
+    }
+    let mut bench = Bench::new();
+    // Batched MPC inference is seconds-scale; trim the measurement budget.
+    bench.measure_time = std::time::Duration::from_secs(1);
+    bench.warmup_time = std::time::Duration::from_millis(10);
+    bench.sample_count = 3;
+
+    let mut ctx = FigCtx::new(root);
+    for model in ["micronet_synth10", "miniresnet_synth10"] {
+        for variant in ["baseline", "eco", "b8-64"] {
+            // measure() caches; call once to warm and to get comm stats.
+            let (m, _) = match ctx.measure(model, variant) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("skipping {model}/{variant}: {e}");
+                    continue;
+                }
+            };
+            println!(
+                "{model}/{variant}: {} protocol bytes, {} rounds, {} compute",
+                stats::fmt_bytes(m.protocol_bytes()),
+                m.total_rounds,
+                stats::fmt_secs(m.compute_s)
+            );
+            let batch = m.batch as u64;
+            let mut c2 = FigCtx::new(ctx.root.clone());
+            let model = model.to_string();
+            let variant = variant.to_string();
+            bench.bench_elems(&format!("mpc_forward/{model}/{variant}"), batch, move || {
+                let _ = c2.measure_uncached(&model, &variant).unwrap();
+            });
+        }
+    }
+    bench.dump_json("model_e2e");
+}

@@ -1,0 +1,65 @@
+//! End-to-end ReLU layer benchmark across plan variants and backends —
+//! the per-layer numbers behind Figs 1/7/8, plus the Rust-vs-XLA kernel
+//! backend ablation (DESIGN.md §Perf).
+
+use hummingbird::crypto::prg::Prg;
+use hummingbird::gmw::harness::{run_parties, run_parties_with};
+use hummingbird::gmw::ReluPlan;
+use hummingbird::runtime::{Manifest, Runtime, XlaKernels};
+use hummingbird::sharing::share_arith;
+use hummingbird::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::new();
+    let mut prg = Prg::new(2, 2);
+
+    for n in [4096usize, 16384] {
+        let x: Vec<u64> = (0..n).map(|_| prg.next_u64() % (1 << 16)).collect();
+        let xs = share_arith(&mut prg, &x, 2);
+        for (label, plan) in [
+            ("baseline64", ReluPlan::BASELINE),
+            ("eco18", ReluPlan::new(18, 0).unwrap()),
+            ("hb8", ReluPlan::new(12, 4).unwrap()),
+            ("hb6", ReluPlan::new(10, 4).unwrap()),
+        ] {
+            let xs = xs.clone();
+            bench.bench_elems(&format!("relu/rust/{label}/{n}"), n as u64, || {
+                let xs = xs.clone();
+                run_parties(2, 8, move |p| {
+                    let me = p.party();
+                    p.relu(&xs[me], plan).unwrap()
+                });
+            });
+        }
+    }
+
+    // Backend ablation: the same ReLU through the Pallas/PJRT kernels.
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if root.join("manifest.json").exists() {
+        let n = 16384usize;
+        let x: Vec<u64> = (0..n).map(|_| prg.next_u64() % (1 << 16)).collect();
+        let xs = share_arith(&mut prg, &x, 2);
+        let plan = ReluPlan::new(12, 4).unwrap();
+        let root2 = root.clone();
+        bench.bench_elems(&format!("relu/xla/hb8/{n}"), n as u64, || {
+            let xs = xs.clone();
+            let root3 = root2.clone();
+            run_parties_with(
+                2,
+                8,
+                move |_pid| {
+                    let rt = Runtime::new(&root3).unwrap();
+                    let manifest = Manifest::load(&root3).unwrap();
+                    XlaKernels::new(rt, manifest)
+                },
+                move |p| {
+                    let me = p.party();
+                    p.relu(&xs[me], plan).unwrap()
+                },
+            );
+        });
+    } else {
+        eprintln!("(skipping xla backend bench: run `make artifacts`)");
+    }
+    bench.dump_json("relu_e2e");
+}

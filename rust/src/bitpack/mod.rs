@@ -1,0 +1,222 @@
+//! Bitpacking wire library (paper §4.2).
+//!
+//! HummingBird's online phase "efficiently packs and unpacks the subset of
+//! bits into a 64-bit tensor before and after each communication". This
+//! module is that library: `n` lanes of `w`-bit values (stored one value per
+//! u64, low bits) are packed into `ceil(n*w/64)` dense u64 words for the
+//! wire, and unpacked on receipt. This is the hot path of every AND-gate
+//! opening in the reduced-ring circuit adder and of the 1-bit B2A openings,
+//! so it has a carefully optimized implementation plus a naive reference
+//! used by tests.
+
+/// Number of u64 words needed to pack `n` lanes of `w` bits.
+#[inline]
+pub fn packed_len(n: usize, w: u32) -> usize {
+    ((n as u64 * w as u64).div_ceil(64)) as usize
+}
+
+/// Exact number of *bytes* on the wire for `n` lanes of `w` bits.
+///
+/// Byte-granular (not word-granular) so communication accounting matches
+/// the paper's "bits communicated" model as closely as possible.
+#[inline]
+pub fn packed_bytes(n: usize, w: u32) -> u64 {
+    (n as u64 * w as u64).div_ceil(8)
+}
+
+/// Pack `src` (one w-bit value per u64 lane, low bits; high bits MUST be
+/// zero) into dense u64 words, little-endian bit order.
+pub fn pack(src: &[u64], w: u32, dst: &mut Vec<u64>) {
+    debug_assert!(w >= 1 && w <= 64);
+    dst.clear();
+    dst.resize(packed_len(src.len(), w), 0);
+    if w == 64 {
+        dst.copy_from_slice(src);
+        return;
+    }
+    let mut acc: u64 = 0; // bits accumulated, LSB-first
+    let mut nbits: u32 = 0; // how many bits of acc are valid
+    let mut out = 0usize;
+    for &v in src {
+        debug_assert_eq!(v >> w, 0, "lane has bits above width {w}");
+        acc |= v << nbits;
+        let take = 64 - nbits;
+        if w >= take {
+            // acc is full: flush and keep the remainder of v.
+            dst[out] = acc;
+            out += 1;
+            acc = if take == 64 { 0 } else { v >> take };
+            nbits = w - take;
+        } else {
+            nbits += w;
+        }
+    }
+    if nbits > 0 {
+        dst[out] = acc;
+    }
+}
+
+/// Unpack `n` lanes of `w`-bit values from dense words (inverse of [`pack`]).
+pub fn unpack(src: &[u64], w: u32, n: usize, dst: &mut Vec<u64>) {
+    debug_assert!(w >= 1 && w <= 64);
+    debug_assert!(src.len() >= packed_len(n, w), "packed buffer too short");
+    dst.clear();
+    dst.resize(n, 0);
+    if w == 64 {
+        dst.copy_from_slice(&src[..n]);
+        return;
+    }
+    let mask = if w == 64 { u64::MAX } else { (1u64 << w) - 1 };
+    let needed = packed_len(n, w);
+    assert!(src.len() >= needed);
+    let mut word = 0usize;
+    let mut bit: u32 = 0;
+    for d in dst.iter_mut() {
+        let avail = 64 - bit;
+        // SAFETY: `word` stays < needed <= src.len(); the straddle read at
+        // word+1 only happens while bits remain, i.e. word+1 < needed.
+        let cur = unsafe { *src.get_unchecked(word) };
+        let lo = cur >> bit;
+        let v = if w <= avail {
+            lo & mask
+        } else {
+            let next = unsafe { *src.get_unchecked(word + 1) };
+            (lo | (next << avail)) & mask
+        };
+        *d = v;
+        bit += w;
+        if bit >= 64 {
+            bit -= 64;
+            word += 1;
+        }
+    }
+}
+
+/// Pack directly to a byte buffer (the wire format). Trailing partial byte
+/// is zero-padded.
+pub fn pack_bytes(src: &[u64], w: u32) -> Vec<u8> {
+    let mut words = Vec::new();
+    pack(src, w, &mut words);
+    let nbytes = packed_bytes(src.len(), w) as usize;
+    // Words are little-endian on the wire: a straight LE byte dump of the
+    // word buffer, truncated to the exact byte count.
+    let mut out = Vec::with_capacity(words.len() * 8);
+    for wd in &words {
+        out.extend_from_slice(&wd.to_le_bytes());
+    }
+    out.truncate(nbytes);
+    out
+}
+
+/// Unpack from a byte buffer produced by [`pack_bytes`].
+pub fn unpack_bytes(src: &[u8], w: u32, n: usize) -> Vec<u64> {
+    let nwords = packed_len(n, w);
+    let mut words = vec![0u64; nwords];
+    for (i, &b) in src.iter().enumerate() {
+        let word = i / 8;
+        if word >= nwords {
+            break;
+        }
+        words[word] |= (b as u64) << ((i % 8) * 8);
+    }
+    let mut out = Vec::new();
+    unpack(&words, w, n, &mut out);
+    out
+}
+
+/// Naive bit-at-a-time reference implementation (tests compare against it).
+pub mod reference {
+    use super::packed_len;
+
+    pub fn pack_ref(src: &[u64], w: u32) -> Vec<u64> {
+        let mut dst = vec![0u64; packed_len(src.len(), w)];
+        let mut pos = 0u64;
+        for &v in src {
+            for b in 0..w {
+                let bit = (v >> b) & 1;
+                dst[(pos / 64) as usize] |= bit << (pos % 64);
+                pos += 1;
+            }
+        }
+        dst
+    }
+
+    pub fn unpack_ref(src: &[u64], w: u32, n: usize) -> Vec<u64> {
+        let mut out = vec![0u64; n];
+        let mut pos = 0u64;
+        for v in out.iter_mut() {
+            for b in 0..w {
+                let bit = (src[(pos / 64) as usize] >> (pos % 64)) & 1;
+                *v |= bit << b;
+                pos += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::prg::Prg;
+
+    fn random_lanes(n: usize, w: u32, seed: u64) -> Vec<u64> {
+        let mut prg = Prg::new(seed, w as u64);
+        let mask = if w == 64 { u64::MAX } else { (1u64 << w) - 1 };
+        (0..n).map(|_| prg.next_u64() & mask).collect()
+    }
+
+    #[test]
+    fn roundtrip_all_widths() {
+        for w in 1..=64u32 {
+            for n in [0usize, 1, 7, 64, 129] {
+                let src = random_lanes(n, w, 42);
+                let mut packed = Vec::new();
+                pack(&src, w, &mut packed);
+                let mut back = Vec::new();
+                unpack(&packed, w, n, &mut back);
+                assert_eq!(src, back, "w={w} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_reference() {
+        for w in [1u32, 3, 5, 8, 13, 21, 31, 32, 33, 48, 63, 64] {
+            let src = random_lanes(1000, w, 7);
+            let mut fast = Vec::new();
+            pack(&src, w, &mut fast);
+            let slow = reference::pack_ref(&src, w);
+            assert_eq!(fast, slow, "pack w={w}");
+            let mut un = Vec::new();
+            unpack(&fast, w, src.len(), &mut un);
+            assert_eq!(un, reference::unpack_ref(&slow, w, src.len()), "unpack w={w}");
+        }
+    }
+
+    #[test]
+    fn byte_roundtrip_and_size() {
+        for w in [1u32, 6, 12, 17, 64] {
+            let src = random_lanes(333, w, 3);
+            let bytes = pack_bytes(&src, w);
+            assert_eq!(bytes.len() as u64, packed_bytes(333, w));
+            let back = unpack_bytes(&bytes, w, 333);
+            assert_eq!(src, back, "w={w}");
+        }
+    }
+
+    #[test]
+    fn density_is_optimal() {
+        // 100 lanes of 6 bits = 600 bits = 10 words (not 100).
+        assert_eq!(packed_len(100, 6), 10);
+        assert_eq!(packed_bytes(100, 6), 75);
+        assert_eq!(packed_len(0, 17), 0);
+    }
+
+    #[test]
+    fn compression_ratio_vs_full_ring() {
+        // The paper's 8/64 budget: packing must be exactly 8x denser.
+        let n = 4096;
+        assert_eq!(packed_bytes(n, 64) / packed_bytes(n, 8), 8);
+    }
+}

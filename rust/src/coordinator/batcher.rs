@@ -1,0 +1,356 @@
+//! Request queue + dynamic batcher + party thread pool.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::crypto::prg::Prg;
+use crate::error::{Error, Result};
+use crate::gmw::GmwParty;
+use crate::hummingbird::PlanSet;
+use crate::model::{Archive, ExecBreakdown, ModelConfig, PlainExecutor, ShareExecutor, ShareWeights};
+use crate::net::accounting::{CommTrace, Phase};
+use crate::net::local::hub;
+use crate::net::Transport;
+use crate::ring::FixedPoint;
+use crate::runtime::{Manifest, Runtime, XlaKernels};
+use crate::sharing::share_arith;
+use crate::tensor::TensorU64;
+
+use super::metrics::Metrics;
+
+/// Serving options.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Repo root (contains artifacts/ and configs/).
+    pub repo_root: std::path::PathBuf,
+    /// Model config name, e.g. "miniresnet_synth10".
+    pub model: String,
+    /// Plan file name under configs/searched/, or None for baseline.
+    pub plan: Option<PlanSet>,
+    pub parties: usize,
+    /// How long the batcher waits to fill a batch before flushing.
+    pub batch_timeout: Duration,
+    pub session_seed: u64,
+    /// Kernel backend for the GMW engine: "rust" (default) or "xla".
+    pub gmw_backend: String,
+}
+
+impl ServeOptions {
+    pub fn new(repo_root: impl Into<std::path::PathBuf>, model: &str) -> Self {
+        ServeOptions {
+            repo_root: repo_root.into(),
+            model: model.to_string(),
+            plan: None,
+            parties: 2,
+            batch_timeout: Duration::from_millis(20),
+            session_seed: 0x5e55_10,
+            gmw_backend: "rust".into(),
+        }
+    }
+}
+
+/// One inference answer.
+#[derive(Debug, Clone)]
+pub struct InferenceResult {
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    pub latency_s: f64,
+    pub batch_size: usize,
+}
+
+struct Request {
+    input: Vec<f32>,
+    enqueued: Instant,
+    resp: Sender<InferenceResult>,
+}
+
+/// Job sent to each party thread.
+struct PartyJob {
+    x_share: Vec<u64>,
+    shape: Vec<usize>,
+}
+
+/// Output from a party thread.
+struct PartyOut {
+    share: Vec<u64>,
+    breakdown: ExecBreakdown,
+}
+
+/// Handle to a running service.
+pub struct Coordinator {
+    req_tx: Option<Sender<Request>>,
+    pub metrics: Arc<Metrics>,
+    pub trace: Arc<CommTrace>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    parties: Vec<std::thread::JoinHandle<()>>,
+    pub cfg: ModelConfig,
+}
+
+impl Coordinator {
+    /// Boot the service: loads config/weights, spawns party + batcher
+    /// threads, returns once ready.
+    pub fn start(opts: ServeOptions) -> Result<Coordinator> {
+        let root = opts.repo_root.join("artifacts");
+        let cfg = ModelConfig::load_named(&opts.repo_root, &opts.model)?;
+        let weights = Archive::load(root.join("weights").join(&opts.model))?;
+        let manifest = Manifest::load(&root)?;
+        let model_art = manifest.model(&opts.model)?.clone();
+        let batch = model_art.batch;
+        let plans = opts.plan.clone().unwrap_or_else(|| PlanSet::baseline(cfg.relu_groups));
+
+        let transports = hub(opts.parties);
+        let trace = transports[0].trace();
+
+        // Party threads.
+        let mut parties = Vec::new();
+        let mut job_txs: Vec<Sender<PartyJob>> = Vec::new();
+        let (out_tx, out_rx) = channel::<(usize, PartyOut)>();
+        for t in transports {
+            let (jtx, jrx) = channel::<PartyJob>();
+            job_txs.push(jtx);
+            let cfg = cfg.clone();
+            let weights = weights.clone();
+            let root = root.clone();
+            let model_art = model_art.clone();
+            let plans = plans.clone();
+            let out_tx = out_tx.clone();
+            let seed = opts.session_seed;
+            let backend = opts.gmw_backend.clone();
+            parties.push(std::thread::spawn(move || {
+                party_main(t, cfg, weights, root, model_art, plans, jrx, out_tx, seed, backend);
+            }));
+        }
+
+        // Batcher thread.
+        let metrics = Arc::new(Metrics::new());
+        let (req_tx, req_rx) = channel::<Request>();
+        let m2 = Arc::clone(&metrics);
+        let fx = FixedPoint::new(cfg.frac_bits);
+        let input_shape = cfg.input;
+        let classes = cfg.num_classes;
+        let parties_n = opts.parties;
+        let timeout = opts.batch_timeout;
+        let trace2 = Arc::clone(&trace);
+        let batcher = std::thread::spawn(move || {
+            batcher_main(
+                req_rx, job_txs, out_rx, m2, fx, input_shape, classes, batch, parties_n,
+                timeout, trace2,
+            );
+        });
+
+        Ok(Coordinator {
+            req_tx: Some(req_tx),
+            metrics,
+            trace,
+            batcher: Some(batcher),
+            parties,
+            cfg,
+        })
+    }
+
+    /// Submit one inference and wait for the answer.
+    pub fn infer(&self, input: Vec<f32>) -> Result<InferenceResult> {
+        let (tx, rx) = channel();
+        self.req_tx
+            .as_ref()
+            .expect("service running")
+            .send(Request { input, enqueued: Instant::now(), resp: tx })
+            .map_err(|_| Error::Transport("service stopped".into()))?;
+        rx.recv().map_err(|_| Error::Transport("service dropped request".into()))
+    }
+
+    /// Submit asynchronously; returns the response channel.
+    pub fn infer_async(&self, input: Vec<f32>) -> Result<Receiver<InferenceResult>> {
+        let (tx, rx) = channel();
+        self.req_tx
+            .as_ref()
+            .expect("service running")
+            .send(Request { input, enqueued: Instant::now(), resp: tx })
+            .map_err(|_| Error::Transport("service stopped".into()))?;
+        Ok(rx)
+    }
+
+    /// Graceful shutdown (drains in-flight work).
+    pub fn shutdown(mut self) {
+        self.req_tx.take(); // closes the queue; batcher exits; parties exit
+        if let Some(b) = self.batcher.take() {
+            b.join().ok();
+        }
+        for p in self.parties.drain(..) {
+            p.join().ok();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.req_tx.take();
+        if let Some(b) = self.batcher.take() {
+            b.join().ok();
+        }
+        for p in self.parties.drain(..) {
+            p.join().ok();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn party_main(
+    transport: crate::net::local::LocalTransport,
+    cfg: ModelConfig,
+    weights: Archive,
+    artifacts_root: std::path::PathBuf,
+    model_art: crate::runtime::registry::ModelArtifacts,
+    plans: PlanSet,
+    jobs: Receiver<PartyJob>,
+    out: Sender<(usize, PartyOut)>,
+    seed: u64,
+    backend: String,
+) {
+    let me = transport.party();
+    let rt = Runtime::new(&artifacts_root).expect("pjrt client");
+    let sw = ShareWeights::prepare(&cfg, &weights).expect("weights");
+    let exec = ShareExecutor::new(cfg, model_art, rt.clone(), sw);
+    // The GMW engine: pure-Rust kernels by default, or the Pallas/PJRT
+    // backend for the full three-layer path.
+    if backend == "xla" {
+        let manifest = Manifest::load(&artifacts_root).expect("manifest");
+        let kernels = XlaKernels::new(rt, manifest);
+        let mut party = GmwParty::with_kernels(transport, seed, kernels);
+        party_loop(&exec, &mut party, &plans, jobs, out, me);
+    } else {
+        let mut party = GmwParty::new(transport, seed);
+        party_loop(&exec, &mut party, &plans, jobs, out, me);
+    }
+}
+
+fn party_loop<T: Transport, K: crate::gmw::kernels::KernelBackend>(
+    exec: &ShareExecutor,
+    party: &mut GmwParty<T, K>,
+    plans: &PlanSet,
+    jobs: Receiver<PartyJob>,
+    out: Sender<(usize, PartyOut)>,
+    me: usize,
+) {
+    while let Ok(job) = jobs.recv() {
+        let x = TensorU64::new(job.shape.clone(), job.x_share).expect("share shape");
+        let (o, bd) = exec.forward(party, x, plans).expect("party forward");
+        if out.send((me, PartyOut { share: o.data, breakdown: bd })).is_err() {
+            break;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn batcher_main(
+    req_rx: Receiver<Request>,
+    job_txs: Vec<Sender<PartyJob>>,
+    out_rx: Receiver<(usize, PartyOut)>,
+    metrics: Arc<Metrics>,
+    fx: FixedPoint,
+    input_shape: (usize, usize, usize),
+    classes: usize,
+    batch: usize,
+    parties: usize,
+    timeout: Duration,
+    trace: Arc<CommTrace>,
+) {
+    let per_sample = input_shape.0 * input_shape.1 * input_shape.2;
+    let mut prg = Prg::from_entropy();
+    let mut pending: Vec<Request> = Vec::new();
+    loop {
+        // Fill the batch window.
+        let deadline = Instant::now() + timeout;
+        while pending.len() < batch {
+            let now = Instant::now();
+            if !pending.is_empty() && now >= deadline {
+                break;
+            }
+            let wait = if pending.is_empty() {
+                Duration::from_millis(250)
+            } else {
+                deadline.saturating_duration_since(now)
+            };
+            match req_rx.recv_timeout(wait) {
+                Ok(r) => {
+                    metrics.mark_start();
+                    pending.push(r);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if pending.is_empty() {
+                        continue;
+                    }
+                    break;
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    if pending.is_empty() {
+                        return; // graceful shutdown
+                    }
+                    break;
+                }
+            }
+        }
+        let got = pending.len().min(batch);
+        let reqs: Vec<Request> = pending.drain(..got).collect();
+        let t0 = Instant::now();
+
+        // Encode + pad + share.
+        let mut x_ring = vec![0u64; batch * per_sample];
+        for (i, r) in reqs.iter().enumerate() {
+            for (j, v) in r.input.iter().take(per_sample).enumerate() {
+                x_ring[i * per_sample + j] = fx.encode(*v as f64);
+            }
+        }
+        let shares = share_arith(&mut prg, &x_ring, parties);
+        // Client -> party input share movement (Data phase accounting).
+        trace.record(Phase::Data, (x_ring.len() * 8) as u64);
+        let shape = vec![batch, input_shape.0, input_shape.1, input_shape.2];
+        for (tx, share) in job_txs.iter().zip(shares) {
+            if tx.send(PartyJob { x_share: share, shape: shape.clone() }).is_err() {
+                return;
+            }
+        }
+        // Collect output shares.
+        let mut outs: Vec<Option<PartyOut>> = (0..parties).map(|_| None).collect();
+        for _ in 0..parties {
+            match out_rx.recv() {
+                Ok((p, o)) => outs[p] = Some(o),
+                Err(_) => return,
+            }
+        }
+        trace.record(Phase::Data, (batch * classes * 8 * parties) as u64);
+        let mut logits_ring = vec![0u64; batch * classes];
+        let mut bd = ExecBreakdown::default();
+        let mut outs_n = 0;
+        for o in outs.into_iter().flatten() {
+            for (acc, v) in logits_ring.iter_mut().zip(&o.share) {
+                *acc = acc.wrapping_add(*v);
+            }
+            // Parties run concurrently: breakdown = max over parties, but
+            // averaging is close enough for symmetric parties; take party
+            // max via simple max-merge on totals.
+            if outs_n == 0 {
+                bd = o.breakdown;
+            }
+            outs_n += 1;
+        }
+        let latency = t0.elapsed().as_secs_f64();
+        metrics.record_batch(got, latency, &bd);
+        // Respond.
+        for (i, r) in reqs.into_iter().enumerate() {
+            let row: Vec<f32> = logits_ring[i * classes..(i + 1) * classes]
+                .iter()
+                .map(|v| fx.decode(*v) as f32)
+                .collect();
+            let pred = PlainExecutor::argmax(&row, classes)[0];
+            let wait_s = r.enqueued.elapsed().as_secs_f64();
+            let _ = r.resp.send(InferenceResult {
+                logits: row,
+                pred,
+                latency_s: wait_s,
+                batch_size: got,
+            });
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Serving metrics: request latency, throughput, communication and the
+//! compute/communication breakdown used by Figs 1 & 10.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::model::ExecBreakdown;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Accumulated serving metrics (thread-safe).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    request_latencies_s: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    samples_done: u64,
+    batches_done: u64,
+    breakdown: ExecBreakdown,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn mark_start(&self) {
+        let mut m = self.inner.lock().unwrap();
+        if m.started.is_none() {
+            m.started = Some(Instant::now());
+        }
+    }
+
+    pub fn record_batch(&self, batch: usize, latency_s: f64, bd: &ExecBreakdown) {
+        let mut m = self.inner.lock().unwrap();
+        m.batch_sizes.push(batch);
+        m.samples_done += batch as u64;
+        m.batches_done += 1;
+        m.breakdown.add(bd);
+        m.finished = Some(Instant::now());
+        for _ in 0..batch {
+            m.request_latencies_s.push(latency_s);
+        }
+    }
+
+    pub fn samples_done(&self) -> u64 {
+        self.inner.lock().unwrap().samples_done
+    }
+
+    /// Wall-clock between first and last batch.
+    pub fn wall_seconds(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        match (m.started, m.finished) {
+            (Some(s), Some(f)) => f.duration_since(s).as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    pub fn throughput(&self) -> f64 {
+        let w = self.wall_seconds();
+        if w <= 0.0 {
+            0.0
+        } else {
+            self.samples_done() as f64 / w
+        }
+    }
+
+    pub fn breakdown(&self) -> ExecBreakdown {
+        self.inner.lock().unwrap().breakdown
+    }
+
+    pub fn to_json(&self) -> Json {
+        let m = self.inner.lock().unwrap();
+        Json::obj(vec![
+            ("samples", Json::Int(m.samples_done as i64)),
+            ("batches", Json::Int(m.batches_done as i64)),
+            ("p50_latency_s", Json::Num(stats::median(&m.request_latencies_s))),
+            ("p95_latency_s", Json::Num(stats::percentile(&m.request_latencies_s, 95.0))),
+            ("linear_s", Json::Num(m.breakdown.linear_s)),
+            ("relu_s", Json::Num(m.breakdown.relu_s)),
+            ("other_s", Json::Num(m.breakdown.other_s)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let m = Metrics::new();
+        m.mark_start();
+        let bd = ExecBreakdown { linear_s: 0.5, relu_s: 1.0, other_s: 0.1 };
+        m.record_batch(4, 0.2, &bd);
+        m.record_batch(2, 0.4, &bd);
+        assert_eq!(m.samples_done(), 6);
+        let total = m.breakdown();
+        assert!((total.relu_s - 2.0).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.get_i64("batches").unwrap(), 2);
+    }
+}

@@ -1,0 +1,22 @@
+//! The serving coordinator: a batching private-inference service.
+//!
+//! Topology (single-process simulation mode — the default testbed; a
+//! multi-process TCP mode exists via `hummingbird party`):
+//!
+//! ```text
+//!   clients ──► request queue ──► batcher ──► party 0 thread ─┐
+//!                                        └──► party 1 thread ─┼─ GMW over hub
+//!                                        └──► party k thread ─┘
+//!                       ◄── reconstructed logits / predictions
+//! ```
+//!
+//! The batcher groups pending requests up to the model's artifact batch
+//! (padding the tail), fans the secret shares out to the party threads,
+//! and reconstructs the output shares. Party threads own their GmwParty +
+//! PJRT runtime for the whole session (executable caches stay warm).
+
+pub mod batcher;
+pub mod metrics;
+
+pub use batcher::{Coordinator, InferenceResult, ServeOptions};
+pub use metrics::Metrics;

@@ -1,0 +1,133 @@
+//! PRG abstraction over the ChaCha20 core, plus Gaussian sampling and
+//! OS-entropy seeding for session setup.
+
+use super::chacha::ChaCha20;
+
+/// Pseudo-random generator handle. Cheap to clone (clones the stream state).
+#[derive(Clone)]
+pub struct Prg {
+    core: ChaCha20,
+    /// Cached second Box-Muller output.
+    gauss_spare: Option<f64>,
+}
+
+impl Prg {
+    /// Deterministic PRG from (seed, stream). Parties derive pairwise PRGs
+    /// as `Prg::new(shared_seed, stream_id)` so both ends generate identical
+    /// masks without communication.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        Prg { core: ChaCha20::from_seed(seed, stream), gauss_spare: None }
+    }
+
+    /// Seed from OS entropy (`/dev/urandom`); falls back to a time-derived
+    /// seed if unavailable (tests / exotic sandboxes).
+    pub fn from_entropy() -> Self {
+        let seed = os_entropy_u64().unwrap_or_else(|| {
+            let t = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(0x5eed);
+            t ^ (std::process::id() as u64).rotate_left(32)
+        });
+        Prg::new(seed, 0)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.core.next_u64()
+    }
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        self.core.next_u32()
+    }
+    pub fn fill_u64(&mut self, out: &mut [u64]) {
+        self.core.fill_u64(out)
+    }
+    pub fn fill_bytes(&mut self, out: &mut [u8]) {
+        self.core.fill_bytes(out)
+    }
+    pub fn next_f64(&mut self) -> f64 {
+        self.core.next_f64()
+    }
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        self.core.next_below(n)
+    }
+
+    /// Uniform vector of `n` ring elements.
+    pub fn vec_u64(&mut self, n: usize) -> Vec<u64> {
+        let mut v = vec![0u64; n];
+        self.fill_u64(&mut v);
+        v
+    }
+
+    /// Random bit vector packed one bit per u64-lane LSB (used for daBits).
+    pub fn vec_bits(&mut self, n: usize) -> Vec<u64> {
+        (0..n).map(|_| self.next_u64() & 1).collect()
+    }
+
+    /// Standard normal via Box-Muller (used by synthetic data generation).
+    pub fn next_gauss(&mut self) -> f64 {
+        if let Some(v) = self.gauss_spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.next_f64();
+            let u2 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.gauss_spare = Some(r * s);
+            return r * c;
+        }
+    }
+}
+
+fn os_entropy_u64() -> Option<u64> {
+    use std::io::Read;
+    let mut f = std::fs::File::open("/dev/urandom").ok()?;
+    let mut buf = [0u8; 8];
+    f.read_exact(&mut buf).ok()?;
+    Some(u64::from_le_bytes(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Prg::new(5, 1);
+        let mut b = Prg::new(5, 1);
+        assert_eq!(a.vec_u64(16), b.vec_u64(16));
+    }
+
+    #[test]
+    fn entropy_seeds_differ() {
+        let mut a = Prg::from_entropy();
+        let mut b = Prg::from_entropy();
+        // Overwhelmingly likely to differ.
+        assert_ne!(a.vec_u64(4), b.vec_u64(4));
+    }
+
+    #[test]
+    fn bits_are_bits() {
+        let mut p = Prg::new(3, 3);
+        let bits = p.vec_bits(256);
+        assert!(bits.iter().all(|b| *b <= 1));
+        let ones: u64 = bits.iter().sum();
+        assert!(ones > 64 && ones < 192, "suspicious bit balance: {ones}");
+    }
+
+    #[test]
+    fn gauss_moments_roughly_standard() {
+        let mut p = Prg::new(11, 0);
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| p.next_gauss()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+}

@@ -1,0 +1,79 @@
+//! Error types for the HummingBird library.
+//!
+//! The library uses a single [`Error`] enum so that protocol, I/O, config and
+//! runtime failures compose across module boundaries without boxing. Binaries
+//! and examples convert into `anyhow::Error` at the edge.
+
+use std::fmt;
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Library-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Malformed or inconsistent configuration.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// JSON parse / serialize failure (our hand-rolled parser).
+    #[error("json error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// Secret-sharing / protocol invariant violation.
+    #[error("protocol error: {0}")]
+    Protocol(String),
+
+    /// Transport-level failure (channel closed, socket error, framing).
+    #[error("transport error: {0}")]
+    Transport(String),
+
+    /// Beaver-triple store exhausted or mismatched.
+    #[error("beaver error: {0}")]
+    Beaver(String),
+
+    /// Shape mismatch in tensor ops or model graph wiring.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Model graph / weights problem.
+    #[error("model error: {0}")]
+    Model(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Search engine failure (budget infeasible, no candidates, ...).
+    #[error("search error: {0}")]
+    Search(String),
+
+    /// Underlying I/O error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Shorthand constructor used pervasively in the protocol code.
+    pub fn protocol(msg: impl fmt::Display) -> Self {
+        Error::Protocol(msg.to_string())
+    }
+    /// Shorthand constructor for configuration errors.
+    pub fn config(msg: impl fmt::Display) -> Self {
+        Error::Config(msg.to_string())
+    }
+    /// Shorthand constructor for shape errors.
+    pub fn shape(msg: impl fmt::Display) -> Self {
+        Error::Shape(msg.to_string())
+    }
+    /// Shorthand constructor for runtime errors.
+    pub fn runtime(msg: impl fmt::Display) -> Self {
+        Error::Runtime(msg.to_string())
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("xla: {e}"))
+    }
+}

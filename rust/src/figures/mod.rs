@@ -1,0 +1,752 @@
+//! Paper-figure regeneration harness (`hummingbird figures --fig N`).
+//!
+//! Every table and figure of the paper's evaluation (§5) maps to one
+//! generator here (see DESIGN.md §6 for the index). Results print as text
+//! tables; `--json <path>` additionally dumps machine-readable output.
+//!
+//! ## Methodology (matches the paper's own; see EXPERIMENTS.md)
+//!
+//! * Communication (bytes, rounds, per-phase split) is **exact**: the
+//!   transport records every protocol round.
+//! * Network time is the paper's analytic projection:
+//!   Σ_rounds (latency + bytes/bandwidth) for High-BW / LAN 10 Gbps /
+//!   WAN 352 Mbps (§5.2 does the same for its WAN row).
+//! * Compute time is measured on this testbed (wall − wire-wait) and
+//!   scaled by a GPU profile **calibrated once** so the baseline's
+//!   compute/communication ratio on LAN matches the paper's published
+//!   breakdown (Fig 10: 93% comm on A100, 78% on V100). All *relative*
+//!   results (speedups, crossovers, saturation) then follow from the
+//!   exact communication trace.
+
+use std::collections::BTreeMap;
+
+use crate::crypto::prg::Prg;
+use crate::error::{Error, Result};
+use crate::gmw::harness::run_parties;
+use crate::hummingbird::search::{SearchConfig, SearchEngine, Strategy};
+use crate::hummingbird::{simulator, PlanSet};
+use crate::model::{
+    Archive, Backend, Dataset, ModelConfig, PlainExecutor, ShareExecutor, ShareWeights,
+    WhichPlain,
+};
+use crate::net::profile::NetworkProfile;
+use crate::ring::FixedPoint;
+use crate::runtime::{Manifest, Runtime};
+use crate::sharing::share_arith;
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+use crate::util::stats;
+
+/// The paper's six benchmark combinations (model, dataset stand-ins).
+pub const BENCHMARKS: [&str; 6] = [
+    "miniresnet_synth10",
+    "resnets18_synth10",
+    "miniresnet_synth100",
+    "resnets18_synth100",
+    "miniresnet_synthtiny",
+    "resnets18_synthtiny",
+];
+
+/// Plan variants evaluated in Figs 7–11.
+pub const VARIANTS: [&str; 4] = ["baseline", "eco", "b8-64", "b6-64"];
+
+/// One measured MPC inference run.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub model: String,
+    pub variant: String,
+    pub batch: usize,
+    /// bytes by phase [Circuit, Others, Mult, B2A, Data, Setup].
+    pub bytes_by_phase: [u64; 6],
+    pub total_rounds: u64,
+    /// Local compute seconds (wall − wire wait), per batch.
+    pub compute_s: f64,
+    pub wall_s: f64,
+}
+
+impl Measurement {
+    /// Protocol bytes (excluding client I/O Data phase).
+    pub fn protocol_bytes(&self) -> u64 {
+        self.bytes_by_phase[0] + self.bytes_by_phase[1] + self.bytes_by_phase[2]
+            + self.bytes_by_phase[3]
+    }
+
+    /// Analytic communication time on a network profile, with per-round
+    /// bytes scaled by `byte_scale` (projection to the paper's batch 512:
+    /// bytes grow linearly with batch, round count does not).
+    pub fn comm_time(&self, net: &NetworkProfile, rounds_trace: &[(u64, u64)], byte_scale: u64) -> f64 {
+        rounds_trace.iter().map(|(b, _)| net.round_time(*b * byte_scale)).sum()
+    }
+}
+
+/// Full context for figure generation.
+pub struct FigCtx {
+    pub root: std::path::PathBuf,
+    /// Calibrated A100 compute scale (see module docs).
+    pub a100_scale: f64,
+    pub v100_scale: f64,
+    /// Cache of (model, variant) -> (measurement, per-round bytes).
+    cache: BTreeMap<(String, String), (Measurement, Vec<(u64, u64)>)>,
+    /// Cache of (model, variant) -> accuracy on the test split.
+    acc_cache: BTreeMap<(String, String), f64>,
+    pub out_json: BTreeMap<String, Json>,
+    /// Samples used for accuracy evaluation (speed knob).
+    pub acc_samples: usize,
+    /// Batch the projections model (the paper evaluates batch 512; our
+    /// artifacts run batch 4 — bytes scale linearly, rounds don't).
+    pub proj_batch: usize,
+}
+
+impl FigCtx {
+    pub fn new(root: std::path::PathBuf) -> FigCtx {
+        FigCtx {
+            root,
+            a100_scale: 1.0,
+            v100_scale: 3.7,
+            cache: BTreeMap::new(),
+            acc_cache: BTreeMap::new(),
+            out_json: BTreeMap::new(),
+            acc_samples: 512,
+            proj_batch: 512,
+        }
+    }
+
+    /// Per-round byte multiplier for projections (proj_batch / artifact batch).
+    pub fn byte_scale(&self) -> u64 {
+        (self.proj_batch / 4).max(1) as u64
+    }
+
+    fn artifacts(&self) -> std::path::PathBuf {
+        self.root.join("artifacts")
+    }
+
+    /// Load (or search for) the plan of a variant.
+    pub fn plan(&self, model: &str, variant: &str) -> Result<PlanSet> {
+        let cfg = ModelConfig::load_named(&self.root, model)?;
+        if variant == "baseline" {
+            return Ok(PlanSet::baseline(cfg.relu_groups));
+        }
+        let path = self.root.join("configs/searched").join(format!("{model}_{variant}.json"));
+        if path.exists() {
+            return PlanSet::load(&path);
+        }
+        // Run the search on demand and persist the plan.
+        eprintln!("[figures] plan {model}/{variant} missing; running search...");
+        let strategy = match variant {
+            "eco" => Strategy::Eco,
+            "b8-64" => Strategy::Budget(8.0 / 64.0),
+            "b6-64" => Strategy::Budget(6.0 / 64.0),
+            other => return Err(Error::config(format!("unknown variant {other}"))),
+        };
+        let result = self.run_search(model, strategy)?;
+        let mut plans = result.plans;
+        plans.meta.insert("search_time_s".into(), format!("{:.2}", result.search_time_s));
+        plans.meta.insert("evals".into(), format!("{}", result.evals));
+        plans.meta.insert("baseline_acc".into(), format!("{:.4}", result.baseline_acc));
+        plans.meta.insert("final_acc".into(), format!("{:.4}", result.final_acc));
+        plans.save(&path)?;
+        Ok(plans)
+    }
+
+    pub fn run_search(
+        &self,
+        model: &str,
+        strategy: Strategy,
+    ) -> Result<crate::hummingbird::search::SearchResult> {
+        let cfg = ModelConfig::load_named(&self.root, model)?;
+        let weights = Archive::load(self.artifacts().join("weights").join(model))?;
+        let dataset = Dataset::load(self.artifacts(), &cfg.dataset)?;
+        let manifest = Manifest::load(self.artifacts())?;
+        let model_art = manifest.model(model)?.clone();
+        let backend = Backend::Xla {
+            rt: Runtime::new(self.artifacts())?,
+            artifact_batch: model_art.search_batch,
+            artifacts: model_art,
+            which: WhichPlain::Search,
+        };
+        let exec = PlainExecutor::new(cfg, weights, backend);
+        let scfg = SearchConfig { strategy, ..SearchConfig::default() };
+        let n = scfg.val_samples.min(dataset.val.n);
+        let engine = SearchEngine::new(
+            &exec,
+            &dataset.val.images,
+            &dataset.val.labels[..n],
+            dataset.val.sample_elems,
+            scfg,
+        );
+        engine.run()
+    }
+
+    /// Like [`measure`](Self::measure) but always re-runs (benchmarks).
+    pub fn measure_uncached(
+        &mut self,
+        model: &str,
+        variant: &str,
+    ) -> Result<(Measurement, Vec<(u64, u64)>)> {
+        self.cache.remove(&(model.to_string(), variant.to_string()));
+        self.measure(model, variant)
+    }
+
+    /// Measure one MPC inference batch (2 parties, local hub).
+    pub fn measure(&mut self, model: &str, variant: &str) -> Result<(Measurement, Vec<(u64, u64)>)> {
+        let key = (model.to_string(), variant.to_string());
+        if let Some(m) = self.cache.get(&key) {
+            return Ok(m.clone());
+        }
+        let plans = self.plan(model, variant)?;
+        let cfg = ModelConfig::load_named(&self.root, model)?;
+        let weights = Archive::load(self.artifacts().join("weights").join(model))?;
+        let dataset = Dataset::load(self.artifacts(), &cfg.dataset)?;
+        let manifest = Manifest::load(self.artifacts())?;
+        let batch = manifest.model(model)?.batch;
+        let fx = FixedPoint::new(cfg.frac_bits);
+        let x_ring = dataset.test.batch_ring(0, batch, fx);
+        let mut prg = Prg::new(0xf16, 0);
+        let xs = share_arith(&mut prg, &x_ring, 2);
+        let (c, h, w) = cfg.input;
+        let shape = vec![batch, c, h, w];
+
+        let root = self.artifacts();
+        let cfg2 = cfg.clone();
+        let model_s = model.to_string();
+        let t0 = std::time::Instant::now();
+        let run = run_parties(2, 0xf00d, move |party| {
+            use crate::net::Transport;
+            let rt = Runtime::new(&root).unwrap();
+            let manifest = Manifest::load(&root).unwrap();
+            let art = manifest.model(&model_s).unwrap().clone();
+            let sw = ShareWeights::prepare(&cfg2, &weights).unwrap();
+            let exec = ShareExecutor::new(cfg2.clone(), art, rt, sw);
+            let me = party.party();
+            let x = crate::tensor::TensorU64::new(shape.clone(), xs[me].clone()).unwrap();
+            // Warm the executable cache, then measure a clean pass.
+            let _ = exec.forward(party, x.clone(), &plans).unwrap();
+            party.transport.trace().reset();
+            let t = std::time::Instant::now();
+            let _ = exec.forward(party, x, &plans).unwrap();
+            t.elapsed().as_secs_f64()
+        });
+        let wall = run.outputs[0];
+        let _ = t0;
+        let trace = run.trace;
+        let rounds: Vec<(u64, u64)> =
+            trace.rounds().iter().map(|r| (r.bytes_sent, 1)).collect();
+        let m = Measurement {
+            model: model.to_string(),
+            variant: variant.to_string(),
+            batch,
+            bytes_by_phase: trace.bytes_by_phase(),
+            total_rounds: trace.total_rounds(),
+            compute_s: (wall - trace.wait_seconds()).max(1e-9),
+            wall_s: wall,
+        };
+        self.cache.insert(key, (m.clone(), rounds.clone()));
+        Ok((m, rounds))
+    }
+
+    /// Test-split accuracy under a variant's plan (simulator, XLA backend).
+    pub fn accuracy(&mut self, model: &str, variant: &str) -> Result<f64> {
+        let key = (model.to_string(), variant.to_string());
+        if let Some(a) = self.acc_cache.get(&key) {
+            return Ok(*a);
+        }
+        let plans = self.plan(model, variant)?;
+        let cfg = ModelConfig::load_named(&self.root, model)?;
+        let weights = Archive::load(self.artifacts().join("weights").join(model))?;
+        let dataset = Dataset::load(self.artifacts(), &cfg.dataset)?;
+        let manifest = Manifest::load(self.artifacts())?;
+        let model_art = manifest.model(model)?.clone();
+        let backend = Backend::Xla {
+            rt: Runtime::new(self.artifacts())?,
+            artifact_batch: model_art.search_batch,
+            artifacts: model_art,
+            which: WhichPlain::Search,
+        };
+        let exec = PlainExecutor::new(cfg, weights, backend);
+        let n = self.acc_samples.min(dataset.test.n);
+        let acc = simulator::evaluate_plans(
+            &exec,
+            &dataset.test.images[..n * dataset.test.sample_elems],
+            &dataset.test.labels[..n],
+            dataset.test.sample_elems,
+            64,
+            &plans,
+            3,
+        )?;
+        self.acc_cache.insert(key, acc);
+        Ok(acc)
+    }
+
+    /// Calibrate the A100 compute scale from the anchor benchmark's
+    /// baseline so comm is 93% of LAN total (paper Figs 1/10), and V100 so
+    /// comm is 78%.
+    pub fn calibrate(&mut self) -> Result<()> {
+        let (m, rounds) = self.measure("resnets18_synth10", "baseline")?;
+        let lan = NetworkProfile::lan();
+        let ctxscale = self.byte_scale();
+        let comm: f64 = rounds.iter().map(|(b, _)| lan.round_time(*b * ctxscale)).sum();
+        // Compute is also per-batch: scale it to the projection batch.
+        // comm / (comm + a100*compute) = 0.93  =>  a100 = comm*(7/93)/compute
+        let compute = m.compute_s * self.byte_scale() as f64;
+        self.a100_scale = comm * (7.0 / 93.0) / compute;
+        self.v100_scale = comm * (22.0 / 78.0) / compute;
+        Ok(())
+    }
+
+    /// End-to-end projected time for a measurement.
+    pub fn project(
+        &self,
+        m: &Measurement,
+        rounds: &[(u64, u64)],
+        net: &NetworkProfile,
+        gpu_scale: f64,
+    ) -> f64 {
+        let ctxscale = self.byte_scale();
+        let comm: f64 = rounds.iter().map(|(b, _)| net.round_time(*b * ctxscale)).sum();
+        comm + m.compute_s * ctxscale as f64 * gpu_scale
+    }
+}
+
+// =====================================================================
+// Entry point
+// =====================================================================
+
+pub fn cmd_figures(args: &Args) -> Result<()> {
+    let root = std::path::PathBuf::from(args.opt_or("root", env!("CARGO_MANIFEST_DIR")));
+    let mut ctx = FigCtx::new(root);
+    ctx.acc_samples = args.opt_parse("acc-samples", 512usize)?;
+    let which = args.opt("fig").map(|s| s.to_string());
+    let tab = args.opt("tab").map(|s| s.to_string());
+    let all = args.flag("all") || (which.is_none() && tab.is_none());
+
+    ctx.calibrate()?;
+    println!(
+        "(compute calibration: A100 scale {:.3e}, V100 scale {:.3e})\n",
+        ctx.a100_scale, ctx.v100_scale
+    );
+
+    let figs: Vec<&str> = match &which {
+        Some(f) => vec![f.as_str()],
+        None if all => vec!["1", "3", "7", "8", "9", "10", "11", "12"],
+        None => vec![],
+    };
+    let tabs: Vec<&str> = match &tab {
+        Some(t) => vec![t.as_str()],
+        None if all => vec!["1", "2", "3"],
+        None => vec![],
+    };
+    for f in figs {
+        match f {
+            "1" => fig1(&mut ctx)?,
+            "3" => fig3(&mut ctx)?,
+            "7" => fig7_8(&mut ctx, "A100")?,
+            "8" => fig7_8(&mut ctx, "V100")?,
+            "9" => fig9(&mut ctx)?,
+            "10" => fig10(&mut ctx)?,
+            "11" => fig11(&mut ctx)?,
+            "12" => fig12(&mut ctx)?,
+            other => return Err(Error::config(format!("unknown figure {other}"))),
+        }
+    }
+    for t in tabs {
+        match t {
+            "1" => tab1(&mut ctx)?,
+            "2" => tab2(&mut ctx)?,
+            "3" => tab3(&mut ctx)?,
+            other => return Err(Error::config(format!("unknown table {other}"))),
+        }
+    }
+    if let Some(path) = args.opt("json") {
+        let j = Json::Obj(ctx.out_json.clone());
+        std::fs::write(path, j.to_string_pretty())?;
+        println!("\n(json written to {path})");
+    }
+    Ok(())
+}
+
+// =====================================================================
+// Individual figures
+// =====================================================================
+
+const ANCHOR: &str = "resnets18_synth10";
+
+/// Fig 1: latency breakdown + throughput for the anchor benchmark.
+fn fig1(ctx: &mut FigCtx) -> Result<()> {
+    println!("=== Figure 1: latency & throughput, {ANCHOR} (ResNet18/CIFAR10 stand-in), LAN+A100 ===");
+    println!(
+        "{:<12} {:>12} {:>12} {:>12} {:>12} {:>14}",
+        "variant", "relu-comm", "compute", "total/batch", "samples/s", "accuracy"
+    );
+    let mut rows = Vec::new();
+    let lan = NetworkProfile::lan();
+    let ctxscale = ctx.byte_scale();
+    for v in VARIANTS {
+        let (m, rounds) = ctx.measure(ANCHOR, v)?;
+        let comm: f64 = rounds.iter().map(|(b, _)| lan.round_time(*b * ctxscale)).sum();
+        let compute = m.compute_s * ctxscale as f64 * ctx.a100_scale;
+        let total = comm + compute;
+        let acc = ctx.accuracy(ANCHOR, v)?;
+        println!(
+            "{:<12} {:>12} {:>12} {:>12} {:>12.1} {:>13.2}%",
+            v,
+            stats::fmt_secs(comm),
+            stats::fmt_secs(compute),
+            stats::fmt_secs(total),
+            (m.batch as u64 * ctxscale) as f64 / total,
+            acc * 100.0
+        );
+        rows.push(Json::obj(vec![
+            ("variant", Json::str(v)),
+            ("comm_s", Json::Num(comm)),
+            ("compute_s", Json::Num(compute)),
+            ("samples_per_s", Json::Num((m.batch as u64 * ctxscale) as f64 / total)),
+            ("accuracy", Json::Num(acc)),
+        ]));
+    }
+    ctx.out_json.insert("fig1".into(), Json::Arr(rows));
+    println!();
+    Ok(())
+}
+
+/// Fig 3: ReLU communication split of the baseline.
+fn fig3(ctx: &mut FigCtx) -> Result<()> {
+    println!("=== Figure 3: baseline ReLU communication split ({ANCHOR}) ===");
+    let (m, _) = ctx.measure(ANCHOR, "baseline")?;
+    let total = m.protocol_bytes() as f64;
+    let names = ["Circuit", "Others", "Mult", "B2A"];
+    let paper = [82.76, 6.9, 6.9, 3.45];
+    let mut rows = Vec::new();
+    for (i, name) in names.iter().enumerate() {
+        let frac = 100.0 * m.bytes_by_phase[i] as f64 / total;
+        println!(
+            "{name:<8} {:>10} {:>7.2}%   (paper: {:.2}%)",
+            stats::fmt_bytes(m.bytes_by_phase[i]),
+            frac,
+            paper[i]
+        );
+        rows.push(Json::obj(vec![
+            ("phase", Json::str(*name)),
+            ("bytes", Json::Int(m.bytes_by_phase[i] as i64)),
+            ("fraction", Json::Num(frac / 100.0)),
+        ]));
+    }
+    ctx.out_json.insert("fig3".into(), Json::Arr(rows));
+    println!();
+    Ok(())
+}
+
+/// Figs 7 & 8: per-benchmark speedups on LAN for a GPU profile.
+fn fig7_8(ctx: &mut FigCtx, gpu: &str) -> Result<()> {
+    let scale = if gpu == "A100" { ctx.a100_scale } else { ctx.v100_scale };
+    let fig = if gpu == "A100" { "7" } else { "8" };
+    println!("=== Figure {fig}: speedup over baseline, LAN + {gpu} ===");
+    println!(
+        "{:<24} {:>10} {:>10} {:>10}  (accuracy delta vs baseline)",
+        "benchmark", "eco", "b8-64", "b6-64"
+    );
+    let lan = NetworkProfile::lan();
+    let ctxscale = ctx.byte_scale();
+    let mut rows = Vec::new();
+    let mut speedups: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    for model in BENCHMARKS {
+        let (mb, rb) = ctx.measure(model, "baseline")?;
+        let tb: f64 = rb.iter().map(|(b, _)| lan.round_time(*b * ctxscale)).sum::<f64>()
+            + mb.compute_s * ctxscale as f64 * scale;
+        let base_acc = ctx.accuracy(model, "baseline")?;
+        let mut cells = Vec::new();
+        let mut deltas = Vec::new();
+        for v in &VARIANTS[1..] {
+            let (m, r) = ctx.measure(model, v)?;
+            let t: f64 = r.iter().map(|(b, _)| lan.round_time(*b * ctxscale)).sum::<f64>()
+                + m.compute_s * ctxscale as f64 * scale;
+            let acc = ctx.accuracy(model, v)?;
+            cells.push(tb / t);
+            deltas.push((acc - base_acc) * 100.0);
+            speedups.entry(v).or_default().push(tb / t);
+        }
+        println!(
+            "{:<24} {:>9.2}x {:>9.2}x {:>9.2}x  ({:+.1}% / {:+.1}% / {:+.1}%)",
+            model, cells[0], cells[1], cells[2], deltas[0], deltas[1], deltas[2]
+        );
+        rows.push(Json::obj(vec![
+            ("model", Json::str(model)),
+            ("speedups", Json::arr(cells.iter().map(|c| Json::Num(*c)))),
+            ("acc_deltas", Json::arr(deltas.iter().map(|c| Json::Num(*c)))),
+        ]));
+    }
+    for (v, s) in &speedups {
+        println!("geomean {v}: {:.2}x", stats::geomean(s));
+    }
+    ctx.out_json.insert(format!("fig{fig}"), Json::Arr(rows));
+    println!();
+    Ok(())
+}
+
+/// Fig 9: geomean speedup per network profile.
+fn fig9(ctx: &mut FigCtx) -> Result<()> {
+    println!("=== Figure 9: geomean speedup across benchmarks per network (A100) ===");
+    println!("{:<10} {:>10} {:>10} {:>10}", "network", "eco", "b8-64", "b6-64");
+    let nets = [NetworkProfile::high_bw(), NetworkProfile::lan(), NetworkProfile::wan()];
+    let ctxscale = ctx.byte_scale();
+    let mut rows = Vec::new();
+    for net in &nets {
+        let mut per_variant = Vec::new();
+        for v in &VARIANTS[1..] {
+            let mut s = Vec::new();
+            for model in BENCHMARKS {
+                let (mb, rb) = ctx.measure(model, "baseline")?;
+                let (m, r) = ctx.measure(model, v)?;
+                let tb: f64 = rb.iter().map(|(b, _)| net.round_time(*b * ctxscale)).sum::<f64>()
+                    + mb.compute_s * ctxscale as f64 * ctx.a100_scale;
+                let t: f64 = r.iter().map(|(b, _)| net.round_time(*b * ctxscale)).sum::<f64>()
+                    + m.compute_s * ctxscale as f64 * ctx.a100_scale;
+                s.push(tb / t);
+            }
+            per_variant.push(stats::geomean(&s));
+        }
+        println!(
+            "{:<10} {:>9.2}x {:>9.2}x {:>9.2}x",
+            net.name, per_variant[0], per_variant[1], per_variant[2]
+        );
+        rows.push(Json::obj(vec![
+            ("network", Json::str(net.name.clone())),
+            ("geomean_speedups", Json::arr(per_variant.iter().map(|c| Json::Num(*c)))),
+        ]));
+    }
+    ctx.out_json.insert("fig9".into(), Json::Arr(rows));
+    println!();
+    Ok(())
+}
+
+/// Fig 10: comm vs compute fraction, baseline vs b8-64, A100 + V100.
+fn fig10(ctx: &mut FigCtx) -> Result<()> {
+    println!("=== Figure 10: overhead breakdown (LAN), {ANCHOR} ===");
+    println!("{:<22} {:>10} {:>10} {:>8}", "config", "comm", "compute", "comm%");
+    let lan = NetworkProfile::lan();
+    let ctxscale = ctx.byte_scale();
+    let mut rows = Vec::new();
+    for (gpu, scale) in [("A100", ctx.a100_scale), ("V100", ctx.v100_scale)] {
+        for v in ["baseline", "b8-64"] {
+            let (m, r) = ctx.measure(ANCHOR, v)?;
+            let comm: f64 = r.iter().map(|(b, _)| lan.round_time(*b * ctxscale)).sum();
+            let compute = m.compute_s * ctxscale as f64 * scale;
+            let frac = 100.0 * comm / (comm + compute);
+            println!(
+                "{:<22} {:>10} {:>10} {:>7.1}%",
+                format!("{gpu}/{v}"),
+                stats::fmt_secs(comm),
+                stats::fmt_secs(compute),
+                frac
+            );
+            rows.push(Json::obj(vec![
+                ("gpu", Json::str(gpu)),
+                ("variant", Json::str(v)),
+                ("comm_fraction", Json::Num(frac / 100.0)),
+            ]));
+        }
+    }
+    println!("(paper: baseline 93% / 78% comm on A100/V100; b8-64 78% / 39%)");
+    ctx.out_json.insert("fig10".into(), Json::Arr(rows));
+    println!();
+    Ok(())
+}
+
+/// Fig 11: normalized bytes (bar) and rounds (line) per variant.
+fn fig11(ctx: &mut FigCtx) -> Result<()> {
+    println!("=== Figure 11: communicated bytes & rounds (normalized to baseline) ===");
+    println!(
+        "{:<24} {:>22} {:>22}",
+        "benchmark", "bytes eco/b8/b6 (x less)", "rounds eco/b8/b6 (x less)"
+    );
+    let mut rows = Vec::new();
+    let mut byte_ratios = Vec::new();
+    let mut round_ratios = Vec::new();
+    for model in BENCHMARKS {
+        let (mb, _) = ctx.measure(model, "baseline")?;
+        let mut bcells = Vec::new();
+        let mut rcells = Vec::new();
+        for v in &VARIANTS[1..] {
+            let (m, _) = ctx.measure(model, v)?;
+            bcells.push(mb.protocol_bytes() as f64 / m.protocol_bytes() as f64);
+            rcells.push(mb.total_rounds as f64 / m.total_rounds as f64);
+        }
+        println!(
+            "{:<24} {:>6.2}/{:>5.2}/{:>5.2} {:>12.2}/{:>5.2}/{:>5.2}",
+            model, bcells[0], bcells[1], bcells[2], rcells[0], rcells[1], rcells[2]
+        );
+        byte_ratios.extend_from_slice(&bcells[1..]);
+        round_ratios.extend_from_slice(&rcells[1..]);
+        rows.push(Json::obj(vec![
+            ("model", Json::str(model)),
+            ("byte_reduction", Json::arr(bcells.iter().map(|c| Json::Num(*c)))),
+            ("round_reduction", Json::arr(rcells.iter().map(|c| Json::Num(*c)))),
+        ]));
+    }
+    println!(
+        "byte reduction range {:.2}-{:.2}x (paper: 2.68-8.76x); rounds {:.2}-{:.2}x (paper: 1.12-1.56x)",
+        byte_ratios.iter().cloned().fold(f64::MAX, f64::min),
+        byte_ratios.iter().cloned().fold(0.0, f64::max),
+        round_ratios.iter().cloned().fold(f64::MAX, f64::min),
+        round_ratios.iter().cloned().fold(0.0, f64::max),
+    );
+    ctx.out_json.insert("fig11".into(), Json::Arr(rows));
+    println!();
+    Ok(())
+}
+
+/// Fig 12: retained/discarded bit map, naive-uniform vs searched (b8-64).
+fn fig12(ctx: &mut FigCtx) -> Result<()> {
+    println!("=== Figure 12: retained bits per ReLU group ({ANCHOR}, budget 8/64) ===");
+    let cfg = ModelConfig::load_named(&ctx.root, ANCHOR)?;
+    let searched = ctx.plan(ANCHOR, "b8-64")?;
+    let naive = PlanSet::uniform(cfg.relu_groups, 8, 0)?;
+    let render = |name: &str, plans: &PlanSet| {
+        println!("{name}:");
+        for g in 0..cfg.relu_groups {
+            let p = plans.plan_for(g);
+            let mut bar = String::with_capacity(64);
+            for bit in (0..64).rev() {
+                bar.push(if bit >= p.m && bit < p.k { '#' } else { '.' });
+            }
+            println!("  G{g} [{:>2},{:>2})  {bar}", p.m, p.k);
+        }
+    };
+    render("naive (same bits everywhere)", &naive);
+    render("HummingBird search", &searched);
+    let naive_acc = {
+        // evaluate naive plan accuracy for the ablation
+        let weights = Archive::load(ctx.artifacts().join("weights").join(ANCHOR))?;
+        let dataset = Dataset::load(ctx.artifacts(), &cfg.dataset)?;
+        let manifest = Manifest::load(ctx.artifacts())?;
+        let model_art = manifest.model(ANCHOR)?.clone();
+        let backend = Backend::Xla {
+            rt: Runtime::new(ctx.artifacts())?,
+            artifact_batch: model_art.search_batch,
+            artifacts: model_art,
+            which: WhichPlain::Search,
+        };
+        let exec = PlainExecutor::new(cfg.clone(), weights, backend);
+        let n = ctx.acc_samples.min(dataset.test.n);
+        simulator::evaluate_plans(
+            &exec,
+            &dataset.test.images[..n * dataset.test.sample_elems],
+            &dataset.test.labels[..n],
+            dataset.test.sample_elems,
+            64,
+            &naive,
+            3,
+        )?
+    };
+    let searched_acc = ctx.accuracy(ANCHOR, "b8-64")?;
+    let base_acc = ctx.accuracy(ANCHOR, "baseline")?;
+    println!(
+        "accuracy: baseline {:.2}%, searched {:.2}%, naive-uniform {:.2}% (search engine ablation)",
+        base_acc * 100.0,
+        searched_acc * 100.0,
+        naive_acc * 100.0
+    );
+    ctx.out_json.insert(
+        "fig12".into(),
+        Json::obj(vec![
+            ("baseline_acc", Json::Num(base_acc)),
+            ("searched_acc", Json::Num(searched_acc)),
+            ("naive_acc", Json::Num(naive_acc)),
+            ("searched_plan", searched.to_json()),
+        ]),
+    );
+    println!();
+    Ok(())
+}
+
+/// Table 1: baseline accuracies.
+fn tab1(ctx: &mut FigCtx) -> Result<()> {
+    println!("=== Table 1: baseline model accuracy ===");
+    let summary = json::parse_file(ctx.artifacts().join("train_summary.json")).ok();
+    let mut rows = Vec::new();
+    for model in BENCHMARKS {
+        let acc = ctx.accuracy(model, "baseline")?;
+        let train_acc = summary
+            .as_ref()
+            .and_then(|s| s.opt(model))
+            .and_then(|m| m.opt("test_acc"))
+            .and_then(|v| v.as_f64().ok());
+        println!(
+            "{model:<24} {:.2}%{}",
+            acc * 100.0,
+            train_acc
+                .map(|t| format!("  (python eval: {:.2}%)", t * 100.0))
+                .unwrap_or_default()
+        );
+        rows.push(Json::obj(vec![
+            ("model", Json::str(model)),
+            ("accuracy", Json::Num(acc)),
+        ]));
+    }
+    ctx.out_json.insert("tab1".into(), Json::Arr(rows));
+    println!();
+    Ok(())
+}
+
+/// Table 2: search wall time per benchmark / budget.
+fn tab2(ctx: &mut FigCtx) -> Result<()> {
+    println!("=== Table 2: search time ===");
+    println!("{:<24} {:>12} {:>12}", "benchmark", "8/64", "6/64");
+    let mut rows = Vec::new();
+    for model in BENCHMARKS {
+        let mut cells = Vec::new();
+        for v in ["b8-64", "b6-64"] {
+            let plans = ctx.plan(model, v)?; // searches if missing
+            let t = plans
+                .meta
+                .get("search_time_s")
+                .and_then(|s| s.parse::<f64>().ok())
+                .unwrap_or(f64::NAN);
+            cells.push(t);
+        }
+        println!(
+            "{:<24} {:>12} {:>12}",
+            model,
+            stats::fmt_secs(cells[0]),
+            stats::fmt_secs(cells[1])
+        );
+        rows.push(Json::obj(vec![
+            ("model", Json::str(model)),
+            ("search_s", Json::arr(cells.iter().map(|c| Json::Num(*c)))),
+        ]));
+    }
+    ctx.out_json.insert("tab2".into(), Json::Arr(rows));
+    println!();
+    Ok(())
+}
+
+/// Table 3: finetuning impact (reads python finetune outputs).
+fn tab3(ctx: &mut FigCtx) -> Result<()> {
+    println!("=== Table 3: accuracy before/after finetuning (HummingBird-6/64) ===");
+    let mut rows = Vec::new();
+    let mut any = false;
+    for model in BENCHMARKS {
+        let path = ctx.artifacts().join(format!("finetune_{model}.json"));
+        if let Ok(j) = json::parse_file(&path) {
+            let before = j.get_f64("acc_before_ft")?;
+            let after = j.get_f64("acc_after_ft")?;
+            println!(
+                "{model:<24} before {:.2}%  after {:.2}%  ({:+.2}%)",
+                before * 100.0,
+                after * 100.0,
+                (after - before) * 100.0
+            );
+            rows.push(Json::obj(vec![
+                ("model", Json::str(model)),
+                ("before", Json::Num(before)),
+                ("after", Json::Num(after)),
+            ]));
+            any = true;
+        }
+    }
+    if !any {
+        println!("(no finetune results yet — run `make finetune`)");
+    }
+    ctx.out_json.insert("tab3".into(), Json::Arr(rows));
+    println!();
+    Ok(())
+}

@@ -1,0 +1,189 @@
+//! Kogge–Stone prefix adder on binary shares (paper §2.2: "the addition …
+//! is performed using a series of AND and XOR operations, as it would be
+//! done by an adder circuit (e.g., carry-lookahead adder)").
+//!
+//! Lane layout: each element is an independent w-bit value stored in the
+//! low bits of a u64; the adder is vectorized across elements, and the AND
+//! gates of all elements in a stage are opened in **one** round.
+//!
+//! Cost model (the paper's O(N·logN) → O(w·log w) claim):
+//!   * 1 initial AND round  (G₀ = x∧y)            — tagged `Phase::OtherAnd`
+//!   * ⌈log₂ w⌉ stage rounds, 2 ANDs each batched — tagged `Phase::Circuit`
+//!     (the final stage only updates G: 1 AND)
+//! Per round each party sends 2·w bits per element per AND, bit-packed.
+
+use super::kernels::KernelBackend;
+use super::GmwParty;
+use crate::error::Result;
+use crate::net::accounting::Phase;
+use crate::net::Transport;
+use crate::ring;
+
+/// Number of communication rounds `ks_add` will use for width `w`
+/// (initial AND + prefix stages). Used by cost estimators and tests.
+pub fn rounds_for_width(w: u32) -> u32 {
+    if w <= 1 {
+        0
+    } else {
+        1 + (32 - (w - 1).leading_zeros()) // 1 + ceil(log2(w))
+    }
+}
+
+/// Bytes each party sends during one `ks_add` over `n` elements of width
+/// `w` (exact, matching the bit-packed wire format).
+pub fn bytes_for_add(n: usize, w: u32) -> u64 {
+    if w <= 1 {
+        return 0;
+    }
+    let mut total = crate::bitpack::packed_bytes(2 * n, w); // initial AND: d||e
+    let stages = ceil_log2(w);
+    for idx in 0..stages {
+        let last = idx + 1 == stages;
+        let ands = if last { 1 } else { 2 };
+        total += crate::bitpack::packed_bytes(2 * ands * n, w);
+    }
+    total
+}
+
+fn ceil_log2(w: u32) -> u32 {
+    if w <= 1 {
+        0
+    } else {
+        32 - (w - 1).leading_zeros()
+    }
+}
+
+/// Adder design knobs (defaults = the optimized protocol). The ablation
+/// bench (`benches/ablation.rs`) measures what each optimization buys;
+/// DESIGN.md §5.2 documents the choices.
+#[derive(Debug, Clone, Copy)]
+pub struct AdderOptions {
+    /// Batch a stage's two ANDs (G and P updates) into one opening round.
+    /// Off: two rounds per stage (the naive circuit-walker layout).
+    pub batch_stage_ands: bool,
+    /// Skip the P update on the final stage (its output is never read),
+    /// halving the last round's bytes.
+    pub skip_last_p: bool,
+}
+
+impl Default for AdderOptions {
+    fn default() -> Self {
+        AdderOptions { batch_stage_ands: true, skip_last_p: true }
+    }
+}
+
+/// Secure addition of two binary-shared vectors of w-bit lanes; returns
+/// binary shares of (x + y) mod 2^w.
+pub fn ks_add<T: Transport, K: KernelBackend>(
+    party: &mut GmwParty<T, K>,
+    x: &[u64],
+    y: &[u64],
+    w: u32,
+) -> Result<Vec<u64>> {
+    ks_add_with(party, x, y, w, AdderOptions::default())
+}
+
+/// [`ks_add`] with explicit design knobs (ablations).
+pub fn ks_add_with<T: Transport, K: KernelBackend>(
+    party: &mut GmwParty<T, K>,
+    x: &[u64],
+    y: &[u64],
+    w: u32,
+    opts: AdderOptions,
+) -> Result<Vec<u64>> {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let mask = ring::low_mask(w);
+
+    // w == 1: addition mod 2 is XOR; no carries, no communication.
+    if w == 1 {
+        return Ok(x.iter().zip(y).map(|(a, b)| (a ^ b) & 1).collect());
+    }
+
+    // P = x ⊕ y (local), G = x ∧ y (one AND round, "Others" in Fig 3).
+    let mut p: Vec<u64> = x.iter().zip(y).map(|(a, b)| (a ^ b) & mask).collect();
+    let mut g = party.and_gates(Phase::OtherAnd, x, y, w)?;
+
+    // Prefix stages ("Circuit" in Fig 3).
+    let stages = ceil_log2(w);
+    let mut s = 1u32;
+    for idx in 0..stages {
+        let last = opts.skip_last_p && idx + 1 == stages;
+        if opts.batch_stage_ands || last {
+            let (u, v) = party.kernels_stage_operands(&g, &p, s, w, last);
+            let z = party.and_gates(Phase::Circuit, &u, &v, w)?;
+            if last {
+                // z = P ∧ (G ≪ s)
+                for i in 0..n {
+                    g[i] ^= z[i];
+                }
+            } else {
+                let (zg, zp) = z.split_at(n);
+                for i in 0..n {
+                    g[i] ^= zg[i];
+                    p[i] = zp[i];
+                }
+            }
+        } else {
+            // Naive layout: one opening round per AND.
+            let gv: Vec<u64> = g.iter().map(|gi| (gi << s) & mask).collect();
+            let pv: Vec<u64> = p.iter().map(|pi| (pi << s) & mask).collect();
+            let zg = party.and_gates(Phase::Circuit, &p, &gv, w)?;
+            let zp = party.and_gates(Phase::Circuit, &p, &pv, w)?;
+            for i in 0..n {
+                g[i] ^= zg[i];
+                p[i] = zp[i];
+            }
+        }
+        s <<= 1;
+    }
+
+    // Sum = x ⊕ y ⊕ (carries ≪ 1); carries into bit i are G[i−1].
+    let out = x
+        .iter()
+        .zip(y)
+        .zip(&g)
+        .map(|((a, b), gi)| (a ^ b ^ (gi << 1)) & mask)
+        .collect();
+    Ok(out)
+}
+
+impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
+    /// Expose the kernel's stage-operand builder to the adder (keeps the
+    /// `kernels` field private to `gmw::mod`).
+    pub(crate) fn kernels_stage_operands(
+        &mut self,
+        g: &[u64],
+        p: &[u64],
+        s: u32,
+        w: u32,
+        last: bool,
+    ) -> (Vec<u64>, Vec<u64>) {
+        self.kernels_mut().ks_stage_operands(g, p, s, w, last)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_counts() {
+        assert_eq!(rounds_for_width(1), 0);
+        assert_eq!(rounds_for_width(2), 2); // init + 1 stage
+        assert_eq!(rounds_for_width(8), 4); // init + 3
+        assert_eq!(rounds_for_width(64), 7); // init + 6
+        // The paper's round-reduction claim: 6 bits vs 64 bits
+        assert!(rounds_for_width(6) < rounds_for_width(64));
+    }
+
+    #[test]
+    fn byte_costs_scale_superlinearly_in_width() {
+        let n = 1000;
+        let b64 = bytes_for_add(n, 64);
+        let b8 = bytes_for_add(n, 8);
+        // O(w log w): 64→8 bits should shrink bytes by more than 8×.
+        assert!(b64 / b8 >= 8, "b64={b64} b8={b8}");
+        assert_eq!(bytes_for_add(n, 1), 0);
+    }
+}

@@ -1,0 +1,314 @@
+//! In-process multi-party harness: runs `p` [`GmwParty`] instances on
+//! threads over a [`local`](crate::net::local) hub. Used by tests, benches,
+//! the figure generator and the single-binary demo mode (`--local-sim`).
+
+use std::sync::Arc;
+
+use super::kernels::{KernelBackend, RustKernels};
+use super::GmwParty;
+use crate::net::accounting::CommTrace;
+use crate::net::local::{hub, LocalTransport};
+use crate::net::Transport;
+
+/// Output of a harness run: per-party results plus party 0's comm trace.
+pub struct HarnessRun<R> {
+    pub outputs: Vec<R>,
+    pub trace: Arc<CommTrace>,
+}
+
+/// Run `f` on every party concurrently (Rust kernels) and collect results
+/// in party order.
+pub fn run_parties<R, F>(parties: usize, session_seed: u64, f: F) -> HarnessRun<R>
+where
+    R: Send,
+    F: Fn(&mut GmwParty<LocalTransport, RustKernels>) -> R + Send + Sync,
+{
+    run_parties_with(parties, session_seed, |_p| RustKernels, f)
+}
+
+/// Run with a per-party kernel backend factory (e.g. to give each party its
+/// own PJRT executable cache).
+pub fn run_parties_with<R, F, K, KF>(
+    parties: usize,
+    session_seed: u64,
+    kf: KF,
+    f: F,
+) -> HarnessRun<R>
+where
+    R: Send,
+    K: KernelBackend,
+    F: Fn(&mut GmwParty<LocalTransport, K>) -> R + Send + Sync,
+    KF: Fn(usize) -> K + Send + Sync,
+{
+    let transports = hub(parties);
+    let trace = transports[0].trace();
+    let mut outputs: Vec<Option<R>> = (0..parties).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (pid, t) in transports.into_iter().enumerate() {
+            let f = &f;
+            let kf = &kf;
+            handles.push(s.spawn(move || {
+                let mut party = GmwParty::with_kernels(t, session_seed, kf(pid));
+                f(&mut party)
+            }));
+        }
+        for (pid, h) in handles.into_iter().enumerate() {
+            outputs[pid] = Some(h.join().expect("party thread panicked"));
+        }
+    });
+    HarnessRun { outputs: outputs.into_iter().map(|o| o.unwrap()).collect(), trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::prg::Prg;
+    use crate::gmw::{adder, ReluPlan};
+    use crate::net::accounting::Phase;
+    use crate::ring;
+    use crate::sharing::{reconstruct_arith, reconstruct_binary, share_arith, share_binary};
+
+    /// Secure AND of random words equals plaintext AND (2 and 3 parties).
+    #[test]
+    fn and_gates_correct() {
+        for parties in [2usize, 3] {
+            let mut prg = Prg::new(10, 0);
+            let n = 64;
+            let x: Vec<u64> = prg.vec_u64(n);
+            let y: Vec<u64> = prg.vec_u64(n);
+            let xs = share_binary(&mut prg, &x, parties);
+            let ys = share_binary(&mut prg, &y, parties);
+            let run = run_parties(parties, 42, |p| {
+                let me = p.party();
+                p.and_gates(Phase::Circuit, &xs[me], &ys[me], 64).unwrap()
+            });
+            let z = reconstruct_binary(&run.outputs);
+            let expect: Vec<u64> = x.iter().zip(&y).map(|(a, b)| a & b).collect();
+            assert_eq!(z, expect, "parties={parties}");
+        }
+    }
+
+    /// ks_add on random w-bit lanes equals plaintext addition mod 2^w.
+    #[test]
+    fn ks_add_correct_all_widths() {
+        for parties in [2usize, 3] {
+            for w in [1u32, 2, 3, 5, 8, 13, 16, 21, 32, 48, 64] {
+                let mut prg = Prg::new(w as u64, parties as u64);
+                let n = 40;
+                let mask = ring::low_mask(w);
+                let x: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+                let y: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+                let xs = share_binary(&mut prg, &x, parties);
+                let ys = share_binary(&mut prg, &y, parties);
+                // Mask shares to lanes.
+                let xs: Vec<Vec<u64>> =
+                    xs.iter().map(|s| s.iter().map(|v| v & mask).collect()).collect();
+                let ys: Vec<Vec<u64>> =
+                    ys.iter().map(|s| s.iter().map(|v| v & mask).collect()).collect();
+                let run = run_parties(parties, 7, |p| {
+                    let me = p.party();
+                    adder::ks_add(p, &xs[me], &ys[me], w).unwrap()
+                });
+                let z = reconstruct_binary(&run.outputs);
+                let expect: Vec<u64> =
+                    x.iter().zip(&y).map(|(a, b)| a.wrapping_add(*b) & mask).collect();
+                assert_eq!(z, expect, "parties={parties} w={w}");
+            }
+        }
+    }
+
+    /// Binary-share masking bug guard: shares of w-bit lanes must not leak
+    /// into high bits after re-sharing inside a2b.
+    #[test]
+    fn a2b_matches_plaintext_window() {
+        for parties in [2usize, 3] {
+            for w in [4u32, 9, 16, 33, 64] {
+                let mut prg = Prg::new(100 + w as u64, 0);
+                let n = 32;
+                let x: Vec<u64> = prg.vec_u64(n);
+                let xs = share_arith(&mut prg, &x, parties);
+                let run = run_parties(parties, 1234, |p| {
+                    let me = p.party();
+                    p.a2b(&xs[me], w).unwrap()
+                });
+                let z = reconstruct_binary(&run.outputs);
+                let mask = ring::low_mask(w);
+                let expect: Vec<u64> = x.iter().map(|v| v & mask).collect();
+                assert_eq!(z, expect, "parties={parties} w={w}");
+            }
+        }
+    }
+
+    /// Beaver mult equals plaintext ring multiplication.
+    #[test]
+    fn mul_correct() {
+        for parties in [2usize, 3] {
+            let mut prg = Prg::new(5, 5);
+            let n = 50;
+            let x: Vec<u64> = prg.vec_u64(n);
+            let y: Vec<u64> = prg.vec_u64(n);
+            let xs = share_arith(&mut prg, &x, parties);
+            let ys = share_arith(&mut prg, &y, parties);
+            let run = run_parties(parties, 99, |p| {
+                let me = p.party();
+                p.mul(&xs[me], &ys[me]).unwrap()
+            });
+            let z = reconstruct_arith(&run.outputs);
+            let expect: Vec<u64> = x.iter().zip(&y).map(|(a, b)| a.wrapping_mul(*b)).collect();
+            assert_eq!(z, expect);
+        }
+    }
+
+    /// B2A of random bits.
+    #[test]
+    fn b2a_bit_correct() {
+        for parties in [2usize, 3] {
+            let mut prg = Prg::new(6, 6);
+            let n = 128;
+            let bits: Vec<u64> = prg.vec_bits(n);
+            let bs = share_binary(&mut prg, &bits, parties);
+            let bs: Vec<Vec<u64>> =
+                bs.iter().map(|s| s.iter().map(|v| v & 1).collect()).collect();
+            let run = run_parties(parties, 55, |p| {
+                let me = p.party();
+                p.b2a_bit(&bs[me]).unwrap()
+            });
+            let z = reconstruct_arith(&run.outputs);
+            assert_eq!(z, bits);
+        }
+    }
+
+    /// Baseline (full-ring) ReLU is exact for the whole representable range.
+    #[test]
+    fn relu_baseline_exact() {
+        let parties = 2;
+        let mut prg = Prg::new(8, 8);
+        let n = 200;
+        // Values spanning positive/negative, small/large.
+        let x: Vec<u64> = (0..n)
+            .map(|i| match i % 4 {
+                0 => prg.next_u64() % (1 << 20),
+                1 => (prg.next_u64() % (1 << 20)).wrapping_neg(),
+                2 => prg.next_u64() % (1 << 44),
+                _ => (prg.next_u64() % (1 << 44)).wrapping_neg(),
+            })
+            .collect();
+        let xs = share_arith(&mut prg, &x, parties);
+        let run = run_parties(parties, 77, |p| {
+            let me = p.party();
+            p.relu(&xs[me], ReluPlan::BASELINE).unwrap()
+        });
+        let z = reconstruct_arith(&run.outputs);
+        let expect: Vec<u64> =
+            x.iter().map(|v| if ring::is_negative(*v) { 0 } else { *v }).collect();
+        assert_eq!(z, expect);
+    }
+
+    /// Theorem 1 end-to-end: k-window DReLU is exact while |x| < 2^(k−1),
+    /// with m = 0 (HummingBird-eco).
+    #[test]
+    fn relu_eco_exact_within_range() {
+        let parties = 2;
+        let k = 20u32;
+        let bound = 1u64 << (k - 1);
+        let mut prg = Prg::new(9, 9);
+        let n = 300;
+        let x: Vec<u64> = (0..n)
+            .map(|_| {
+                let v = prg.next_u64() % (2 * bound); // [0, 2^k)
+                v.wrapping_sub(bound) // [-2^(k-1), 2^(k-1))
+            })
+            .collect();
+        let xs = share_arith(&mut prg, &x, parties);
+        let plan = ReluPlan::new(k, 0).unwrap();
+        let run = run_parties(parties, 31, |p| {
+            let me = p.party();
+            p.relu(&xs[me], plan).unwrap()
+        });
+        let z = reconstruct_arith(&run.outputs);
+        let expect: Vec<u64> =
+            x.iter().map(|v| if ring::is_negative(*v) { 0 } else { *v }).collect();
+        assert_eq!(z, expect);
+    }
+
+    /// Theorem 2 end-to-end: with m > 0, outputs equal exact ReLU except
+    /// that values in [0, 2^m) may be zeroed (magnitude pruning).
+    #[test]
+    fn relu_low_bit_drop_is_magnitude_pruning() {
+        let parties = 2;
+        let plan = ReluPlan::new(24, 8).unwrap();
+        let thresh = 1u64 << plan.m;
+        let mut prg = Prg::new(12, 3);
+        let n = 400;
+        let bound = 1u64 << (plan.k - 1);
+        let x: Vec<u64> = (0..n)
+            .map(|i| match i % 3 {
+                0 => prg.next_u64() % thresh,                       // small positive
+                1 => prg.next_u64() % bound,                        // any positive < 2^(k-1)
+                _ => (prg.next_u64() % bound).wrapping_neg(),       // negative
+            })
+            .collect();
+        let xs = share_arith(&mut prg, &x, parties);
+        let run = run_parties(parties, 13, |p| {
+            let me = p.party();
+            p.relu(&xs[me], plan).unwrap()
+        });
+        let z = reconstruct_arith(&run.outputs);
+        let mut pruned = 0;
+        for (xi, zi) in x.iter().zip(&z) {
+            let xi_s = *xi as i64;
+            if xi_s < 0 {
+                assert_eq!(*zi, 0, "negative must be zeroed, x={xi_s}");
+            } else if (*xi as u64) >= thresh {
+                assert_eq!(*zi, *xi, "large positive must pass, x={xi_s}");
+            } else {
+                // Theorem 2: small positives are either passed or pruned.
+                assert!(*zi == 0 || zi == xi, "x={xi_s} z={}", *zi as i64);
+                if *zi == 0 && xi_s > 0 {
+                    pruned += 1;
+                }
+            }
+        }
+        assert!(pruned > 0, "expected some magnitude pruning to occur");
+    }
+
+    /// Identity plan (zero bits) passes values through with no comm.
+    #[test]
+    fn relu_identity_plan() {
+        let parties = 2;
+        let mut prg = Prg::new(21, 0);
+        let x: Vec<u64> = prg.vec_u64(16);
+        let xs = share_arith(&mut prg, &x, parties);
+        let plan = ReluPlan::new(10, 10).unwrap();
+        let run = run_parties(parties, 3, |p| {
+            let me = p.party();
+            p.relu(&xs[me], plan).unwrap()
+        });
+        assert_eq!(reconstruct_arith(&run.outputs), x);
+        assert_eq!(run.trace.total_bytes(), 0);
+    }
+
+    /// Reduced-ring ReLU must communicate far less than baseline (the
+    /// paper's headline mechanism).
+    #[test]
+    fn reduced_ring_communicates_less() {
+        let parties = 2;
+        let mut prg = Prg::new(30, 0);
+        let n = 256;
+        let x: Vec<u64> = (0..n).map(|_| prg.next_u64() % (1 << 16)).collect();
+        let xs = share_arith(&mut prg, &x, parties);
+        let mut bytes = Vec::new();
+        for plan in [ReluPlan::BASELINE, ReluPlan::new(20, 0).unwrap(), ReluPlan::new(14, 8).unwrap()] {
+            let run = run_parties(parties, 4, |p| {
+                let me = p.party();
+                p.relu(&xs[me], plan).unwrap()
+            });
+            bytes.push(run.trace.total_bytes());
+        }
+        assert!(bytes[0] > bytes[1] && bytes[1] > bytes[2], "{bytes:?}");
+        // 6-bit window ≈ paper's HummingBird-6/64 regime: expect >4× total
+        // reduction even though Mult is incompressible.
+        assert!(bytes[0] as f64 / bytes[2] as f64 > 4.0, "{bytes:?}");
+    }
+}

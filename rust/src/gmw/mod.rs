@@ -1,0 +1,323 @@
+//! GMW protocol engine (paper §2.2) with HummingBird's reduced-ring
+//! approximate ReLU (paper §3, Eq. 3).
+//!
+//! One [`GmwParty`] object per party drives the whole online protocol:
+//!
+//! * [`GmwParty::and_gates`] — Beaver-masked AND on w-bit lanes (1 round,
+//!   2·w bits/elem, bit-packed).
+//! * [`adder`] — the Kogge–Stone prefix adder used by A2B.
+//! * [`GmwParty::a2b`] — arithmetic→binary conversion: free local
+//!   re-sharing (PRG zero-sharing) + circuit addition.
+//! * [`GmwParty::b2a_bit`] — 1-bit binary→arithmetic via daBits.
+//! * [`GmwParty::drelu`] / [`GmwParty::relu`] — the paper's Equations 1–3;
+//!   `ReluPlan { k, m }` selects the bit window (k=64, m=0 is the CrypTen
+//!   baseline; anything else is HummingBird).
+//! * [`GmwParty::mul`] — Beaver multiplication over Z/2^64 (the "Mult"
+//!   phase HummingBird cannot shrink).
+//!
+//! Local tensor math is factored behind [`kernels::KernelBackend`] so the
+//! same protocol can run on pure-Rust kernels or on the Pallas-lowered HLO
+//! kernels through PJRT (see `runtime::XlaKernels`).
+
+pub mod adder;
+pub mod harness;
+pub mod kernels;
+
+use crate::beaver::TtpDealer;
+use crate::bitpack;
+use crate::error::{Error, Result};
+use crate::net::accounting::Phase;
+use crate::net::{self, Transport};
+use crate::ring;
+use crate::sharing::PairwisePrgs;
+
+use kernels::{KernelBackend, RustKernels};
+
+/// Per-layer ReLU evaluation plan: use bits [m, k) of the secret share.
+///
+/// * `k = 64, m = 0` — exact CrypTen-equivalent baseline (Eq. 2).
+/// * `k < 64, m = 0` — HummingBird-eco (error-free if |x| < 2^(k-1), Thm 1).
+/// * `m > 0` — adds magnitude pruning below 2^m (Thm 2).
+/// * `k == m` — zero bits: the ReLU degenerates to identity (paper §4.1.2,
+///   the generalization of ReLU culling).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReluPlan {
+    pub k: u32,
+    pub m: u32,
+}
+
+impl ReluPlan {
+    /// Full-ring exact baseline.
+    pub const BASELINE: ReluPlan = ReluPlan { k: 64, m: 0 };
+
+    pub fn new(k: u32, m: u32) -> Result<Self> {
+        if k > 64 || m > k {
+            return Err(Error::config(format!("invalid ReluPlan k={k} m={m}")));
+        }
+        Ok(ReluPlan { k, m })
+    }
+
+    /// Window width in bits (0 = identity layer).
+    pub fn width(&self) -> u32 {
+        self.k - self.m
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.k == self.m
+    }
+
+    pub fn is_baseline(&self) -> bool {
+        *self == Self::BASELINE
+    }
+}
+
+/// One party's protocol engine.
+pub struct GmwParty<T: Transport, K: KernelBackend = RustKernels> {
+    pub transport: T,
+    pub dealer: TtpDealer,
+    pub pairwise: PairwisePrgs,
+    kernels: K,
+}
+
+impl<T: Transport> GmwParty<T, RustKernels> {
+    /// Engine with the portable Rust kernels.
+    pub fn new(transport: T, session_seed: u64) -> Self {
+        GmwParty::with_kernels(transport, session_seed, RustKernels)
+    }
+}
+
+impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
+    pub fn with_kernels(transport: T, session_seed: u64, kernels: K) -> Self {
+        let party = transport.party();
+        let parties = transport.parties();
+        GmwParty {
+            transport,
+            dealer: TtpDealer::new(session_seed, party, parties),
+            pairwise: PairwisePrgs::new(session_seed, party, parties),
+            kernels,
+        }
+    }
+
+    #[inline]
+    pub fn party(&self) -> usize {
+        self.transport.party()
+    }
+    #[inline]
+    pub fn parties(&self) -> usize {
+        self.transport.parties()
+    }
+    #[inline]
+    pub fn is_leader(&self) -> bool {
+        self.party() == 0
+    }
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernels.name()
+    }
+    pub(crate) fn kernels_mut(&mut self) -> &mut K {
+        &mut self.kernels
+    }
+
+    // ------------------------------------------------------------------
+    // Openings (the only communication primitives).
+    // ------------------------------------------------------------------
+
+    /// Open binary shares of w-bit lanes: bit-pack, exchange, fold-XOR.
+    pub fn open_binary(&mut self, phase: Phase, shares: &[u64], w: u32) -> Result<Vec<u64>> {
+        let bytes = bitpack::pack_bytes(shares, w);
+        let bufs = self.transport.exchange_all(phase, &bytes)?;
+        let mut out = vec![0u64; shares.len()];
+        for (q, buf) in bufs.iter().enumerate() {
+            let vals = if q == self.party() {
+                shares.to_vec()
+            } else {
+                bitpack::unpack_bytes(buf, w, shares.len())
+            };
+            for (o, v) in out.iter_mut().zip(&vals) {
+                *o ^= *v;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Open arithmetic shares (full 64-bit words on the wire).
+    pub fn open_arith(&mut self, phase: Phase, shares: &[u64]) -> Result<Vec<u64>> {
+        let bytes = net::u64s_to_bytes(shares);
+        let bufs = self.transport.exchange_all(phase, &bytes)?;
+        let mut out = vec![0u64; shares.len()];
+        for (q, buf) in bufs.iter().enumerate() {
+            let vals =
+                if q == self.party() { shares.to_vec() } else { net::bytes_to_u64s(buf) };
+            for (o, v) in out.iter_mut().zip(&vals) {
+                *o = o.wrapping_add(*v);
+            }
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // Beaver AND on w-bit lanes.
+    // ------------------------------------------------------------------
+
+    /// Secure AND of two binary-shared vectors of w-bit lanes.
+    /// Cost: one round, 2·w bits per element on the wire.
+    pub fn and_gates(&mut self, phase: Phase, u: &[u64], v: &[u64], w: u32) -> Result<Vec<u64>> {
+        debug_assert_eq!(u.len(), v.len());
+        let n = u.len();
+        let mask = ring::low_mask(w);
+        let mut t = self.dealer.bin_triples(n);
+        // Triples are 64-bit words; mask to the lane width in place (no
+        // extra allocation — §Perf L3).
+        if w < 64 {
+            for v in t.a.iter_mut() {
+                *v &= mask;
+            }
+            for v in t.b.iter_mut() {
+                *v &= mask;
+            }
+            for v in t.c.iter_mut() {
+                *v &= mask;
+            }
+        }
+        let de_shares = self.kernels.and_open(u, v, &t.a, &t.b);
+        let de = self.open_binary(phase, &de_shares, w)?;
+        let (d, e) = de.split_at(n);
+        let leader = self.is_leader();
+        Ok(self.kernels.and_combine(d, e, &t.a, &t.b, &t.c, leader))
+    }
+
+    // ------------------------------------------------------------------
+    // Conversions.
+    // ------------------------------------------------------------------
+
+    /// A2B: convert arithmetic shares of w-bit values (one lane per u64,
+    /// high bits ignored) into binary shares of the same values.
+    ///
+    /// Step 1 is communication-free (PRG re-sharing); step 2 runs p−1
+    /// circuit additions ([`adder::ks_add`]).
+    pub fn a2b(&mut self, arith: &[u64], w: u32) -> Result<Vec<u64>> {
+        let n = arith.len();
+        let mask = ring::low_mask(w);
+        let me = self.party();
+        let parties = self.parties();
+        // Binary re-sharing of every party's arithmetic share (operand j
+        // belongs to party j). All parties generate the same zero-sharing
+        // streams, so no communication happens here.
+        let mut operands: Vec<Vec<u64>> = Vec::with_capacity(parties);
+        for j in 0..parties {
+            let masked: Vec<u64>;
+            let value = if j == me {
+                masked = arith.iter().map(|x| x & mask).collect();
+                Some(masked.as_slice())
+            } else {
+                None
+            };
+            let mut share = self.pairwise.reshare_binary(value, n);
+            for s in share.iter_mut() {
+                *s &= mask;
+            }
+            operands.push(share);
+        }
+        // Circuit-add all operands pairwise.
+        let mut acc = operands.remove(0);
+        for op in operands {
+            acc = adder::ks_add(self, &acc, &op, w)?;
+        }
+        Ok(acc)
+    }
+
+    /// B2A of single-bit lanes via daBits: one round, 1 bit per element.
+    pub fn b2a_bit(&mut self, bits: &[u64]) -> Result<Vec<u64>> {
+        let n = bits.len();
+        let dab = self.dealer.dabits(n);
+        let masked: Vec<u64> = bits.iter().zip(&dab.r_bin).map(|(b, r)| (b ^ r) & 1).collect();
+        let z = self.open_binary(Phase::B2A, &masked, 1)?;
+        // ⟨b⟩^A = z + ⟨r⟩^A − 2·z·⟨r⟩^A  (z public)
+        let leader = self.is_leader();
+        let out = z
+            .iter()
+            .zip(&dab.r_arith)
+            .map(|(z, ra)| {
+                let mut v = ra.wrapping_sub(ra.wrapping_mul(2).wrapping_mul(*z));
+                if leader {
+                    v = v.wrapping_add(*z);
+                }
+                v
+            })
+            .collect();
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // Arithmetic ops.
+    // ------------------------------------------------------------------
+
+    /// Beaver multiplication of two arithmetically-shared vectors.
+    /// Cost: one round, 2×64 bits per element (HummingBird cannot shrink
+    /// this — paper Fig 3 "Mult").
+    pub fn mul(&mut self, x: &[u64], y: &[u64]) -> Result<Vec<u64>> {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let t = self.dealer.arith_triples(n);
+        let de_shares = self.kernels.mult_open(x, y, &t.a, &t.b);
+        let de = self.open_arith(Phase::Mult, &de_shares)?;
+        let (d, e) = de.split_at(n);
+        let leader = self.is_leader();
+        Ok(self.kernels.mult_combine(d, e, &t.a, &t.b, &t.c, leader))
+    }
+
+    /// Local truncation of shares by 2^f (CrypTen-style; see
+    /// [`ring::trunc_share`]).
+    pub fn trunc(&self, shares: &[u64], f: u32) -> Vec<u64> {
+        let me = self.party();
+        shares.iter().map(|s| ring::trunc_share(*s, f, me)).collect()
+    }
+
+    /// Add a public constant vector (leader adds; others pass through).
+    pub fn add_public(&self, shares: &[u64], consts: &[u64]) -> Vec<u64> {
+        if self.is_leader() {
+            shares.iter().zip(consts).map(|(s, c)| s.wrapping_add(*c)).collect()
+        } else {
+            shares.to_vec()
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // DReLU / ReLU (Equations 1–3).
+    // ------------------------------------------------------------------
+
+    /// DReLU on the bit window [m, k): returns arithmetic shares of
+    /// 1{x ≥ 0} evaluated on the reduced ring Z/2^(k−m).
+    pub fn drelu(&mut self, arith: &[u64], plan: ReluPlan) -> Result<Vec<u64>> {
+        let w = plan.width();
+        debug_assert!(w >= 1, "drelu needs at least one bit");
+        // Local bit extraction ⟨x⟩[k:m] (free).
+        let windows: Vec<u64> =
+            arith.iter().map(|x| ring::bit_window(*x, plan.k, plan.m)).collect();
+        // A2B on the reduced ring.
+        let sum_bits = self.a2b(&windows, w)?;
+        // Sign bit (bit w−1) is a binary share of the MSB; DReLU = ¬MSB.
+        let leader = self.is_leader();
+        let msb: Vec<u64> = sum_bits
+            .iter()
+            .map(|s| {
+                let bit = (s >> (w - 1)) & 1;
+                if leader {
+                    bit ^ 1
+                } else {
+                    bit
+                }
+            })
+            .collect();
+        // 1-bit B2A.
+        self.b2a_bit(&msb)
+    }
+
+    /// ReLU per the plan: Eq. 2 when baseline, Eq. 3 otherwise.
+    pub fn relu(&mut self, arith: &[u64], plan: ReluPlan) -> Result<Vec<u64>> {
+        if plan.is_identity() {
+            return Ok(arith.to_vec());
+        }
+        let d = self.drelu(arith, plan)?;
+        self.mul(arith, &d)
+    }
+}

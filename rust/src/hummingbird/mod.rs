@@ -1,0 +1,162 @@
+//! HummingBird plan management (paper §4): per-ReLU-group (k, m) windows,
+//! JSON I/O for searched plans, and budget accounting.
+//!
+//! Submodules: [`simulator`] (the lightweight MPC simulator of §4.1.1) and
+//! [`search`] (HummingBird-eco and HummingBird-*b*, §4.1.2).
+
+pub mod search;
+pub mod simulator;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::gmw::ReluPlan;
+use crate::model::graph::ModelConfig;
+use crate::util::json::{self, Json};
+
+/// A full model plan: one [`ReluPlan`] per ReLU group.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanSet {
+    /// plans[group] = (k, m) window for every ReLU in that group.
+    pub groups: BTreeMap<usize, ReluPlan>,
+    /// Free-form provenance (search strategy, budget, accuracy).
+    pub meta: BTreeMap<String, String>,
+}
+
+impl PlanSet {
+    /// The exact CrypTen-equivalent baseline for `n_groups` groups.
+    pub fn baseline(n_groups: usize) -> PlanSet {
+        PlanSet {
+            groups: (0..n_groups).map(|g| (g, ReluPlan::BASELINE)).collect(),
+            meta: BTreeMap::new(),
+        }
+    }
+
+    /// Uniform plan: same window for every group (the naive strategy the
+    /// paper's Fig 12 compares against).
+    pub fn uniform(n_groups: usize, k: u32, m: u32) -> Result<PlanSet> {
+        let plan = ReluPlan::new(k, m)?;
+        Ok(PlanSet {
+            groups: (0..n_groups).map(|g| (g, plan)).collect(),
+            meta: BTreeMap::new(),
+        })
+    }
+
+    pub fn plan_for(&self, group: usize) -> ReluPlan {
+        self.groups.get(&group).copied().unwrap_or(ReluPlan::BASELINE)
+    }
+
+    pub fn set(&mut self, group: usize, plan: ReluPlan) {
+        self.groups.insert(group, plan);
+    }
+
+    /// Total DReLU bits this plan spends on one sample of `cfg`, and the
+    /// baseline's total — the paper's budget metric (§4.1.2: "the total
+    /// number of bits used in each DReLU computation combined must be
+    /// 1/16 or less of the original number of bits combined").
+    pub fn budget_bits(&self, cfg: &ModelConfig) -> (u64, u64) {
+        let mut used = 0u64;
+        let mut baseline = 0u64;
+        for (_, group, elems) in cfg.relu_elems() {
+            let plan = self.plan_for(group);
+            used += plan.width() as u64 * elems as u64;
+            baseline += 64u64 * elems as u64;
+        }
+        (used, baseline)
+    }
+
+    /// used/baseline bit fraction.
+    pub fn budget_fraction(&self, cfg: &ModelConfig) -> f64 {
+        let (u, b) = self.budget_bits(cfg);
+        u as f64 / b as f64
+    }
+
+    // ------------------------------------------------------------------
+    // JSON round-trip (shared with python train.py --finetune).
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let groups = Json::Obj(
+            self.groups
+                .iter()
+                .map(|(g, p)| {
+                    (
+                        g.to_string(),
+                        Json::obj(vec![
+                            ("k", Json::Int(p.k as i64)),
+                            ("m", Json::Int(p.m as i64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let meta = Json::Obj(
+            self.meta.iter().map(|(k, v)| (k.clone(), Json::str(v.clone()))).collect(),
+        );
+        Json::obj(vec![("groups", groups), ("meta", meta)])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PlanSet> {
+        let mut groups = BTreeMap::new();
+        for (g, p) in j.get("groups")?.as_obj()? {
+            let g: usize =
+                g.parse().map_err(|_| Error::config(format!("bad group id {g}")))?;
+            groups.insert(
+                g,
+                ReluPlan::new(p.get_usize("k")? as u32, p.get_usize("m")? as u32)?,
+            );
+        }
+        let mut meta = BTreeMap::new();
+        if let Some(m) = j.opt("meta") {
+            for (k, v) in m.as_obj()? {
+                meta.insert(k.clone(), v.as_str().unwrap_or_default().to_string());
+            }
+        }
+        Ok(PlanSet { groups, meta })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<PlanSet> {
+        Self::from_json(&json::parse_file(path)?)
+    }
+
+    /// One-line human-readable summary, e.g. `g0=[2,18) g1=[0,14) ...`.
+    pub fn summary(&self) -> String {
+        self.groups
+            .iter()
+            .map(|(g, p)| format!("g{g}=[{},{})", p.m, p.k))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut ps = PlanSet::baseline(3);
+        ps.set(1, ReluPlan::new(18, 4).unwrap());
+        ps.meta.insert("strategy".into(), "eco".into());
+        let back = PlanSet::from_json(&ps.to_json()).unwrap();
+        assert_eq!(ps, back);
+    }
+
+    #[test]
+    fn uniform_and_summary() {
+        let ps = PlanSet::uniform(2, 8, 2).unwrap();
+        assert_eq!(ps.plan_for(0).width(), 6);
+        assert_eq!(ps.plan_for(5), ReluPlan::BASELINE); // unknown group
+        assert!(ps.summary().contains("g1=[2,8)"));
+    }
+}

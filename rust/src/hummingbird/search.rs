@@ -1,0 +1,459 @@
+//! HummingBird's offline search engine (paper §4.1.2, Fig 6).
+//!
+//! Two strategies:
+//!
+//! * **HummingBird-eco** — discard only high-order bits, per group, such
+//!   that no error is introduced (Theorem 1): k is derived from the
+//!   observed pre-activation range on the validation set plus a safety
+//!   margin, then verified by simulation against the exact baseline.
+//! * **HummingBird-b** — given a bit budget (fraction of the baseline's
+//!   Σ 64·elems), DFS over per-group width assignments with the paper's
+//!   three optimizations: locally-optimal (k, m) per group (later groups
+//!   optimistically left exact), early stop 1 (optimistic accuracy below
+//!   an absolute threshold), early stop 2 (below the best complete
+//!   configuration found so far), early stop 3 (budget exceeded), and
+//!   prefix-activation checkpointing so each candidate evaluation only
+//!   recomputes the network suffix.
+
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::gmw::ReluPlan;
+use crate::hummingbird::{simulator, PlanSet};
+use crate::model::graph::{ModelConfig, Op};
+use crate::model::plain::PlainExecutor;
+use crate::ring::FixedPoint;
+
+/// Search strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Strategy {
+    Eco,
+    /// Budget as a fraction of baseline bits (paper: 8/64, 6/64).
+    Budget(f64),
+}
+
+/// Tunables.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub strategy: Strategy,
+    /// Validation samples used during the search (paper used 1024).
+    pub val_samples: usize,
+    /// Evaluation batch size (should match the search artifact batch).
+    pub batch: usize,
+    /// Early stop 1: prune when optimistic accuracy drops more than this
+    /// below the baseline.
+    pub max_acc_drop: f64,
+    /// Candidate widths tried per group (descending), for Budget search.
+    pub widths: Vec<u32>,
+    /// Max low-bit positions scanned for the locally-optimal m.
+    pub max_m_scan: u32,
+    /// Hard cap on candidate evaluations: when exceeded the DFS unwinds
+    /// keeping the best complete configuration found so far (the paper's
+    /// "coarser search" escape hatch for large models).
+    pub max_evals: usize,
+    pub seed: u64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            strategy: Strategy::Budget(8.0 / 64.0),
+            val_samples: 256,
+            batch: 64,
+            max_acc_drop: 0.10,
+            widths: vec![12, 10, 8, 7, 6, 5, 4, 3],
+            max_m_scan: 12,
+            max_evals: 900,
+            seed: 0xbeef,
+        }
+    }
+}
+
+/// Search output.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub plans: PlanSet,
+    pub baseline_acc: f64,
+    pub final_acc: f64,
+    pub search_time_s: f64,
+    /// Number of candidate evaluations performed (Table 2 context).
+    pub evals: usize,
+    pub budget_fraction: f64,
+}
+
+/// The search engine: owns the plaintext executor (simulator) and a slice
+/// of validation data.
+type PrefixCkpts = Vec<(usize, usize, Vec<(usize, Vec<f32>)>)>;
+
+pub struct SearchEngine<'a> {
+    exec: &'a PlainExecutor,
+    images: &'a [f32],
+    labels: &'a [i32],
+    sample_elems: usize,
+    cfg: SearchConfig,
+    evals: std::cell::Cell<usize>,
+    /// Cached prefix activations for the current (group, prefix-plan) pair.
+    prefix_cache: std::cell::RefCell<((usize, String), PrefixCkpts)>,
+}
+
+impl<'a> SearchEngine<'a> {
+    pub fn new(
+        exec: &'a PlainExecutor,
+        images: &'a [f32],
+        labels: &'a [i32],
+        sample_elems: usize,
+        cfg: SearchConfig,
+    ) -> SearchEngine<'a> {
+        SearchEngine {
+            exec,
+            images,
+            labels,
+            sample_elems,
+            cfg,
+            evals: 0.into(),
+            prefix_cache: std::cell::RefCell::new(((usize::MAX, String::new()), Vec::new())),
+        }
+    }
+
+    fn mcfg(&self) -> &ModelConfig {
+        &self.exec.cfg
+    }
+
+    fn n(&self) -> usize {
+        self.cfg.val_samples.min(self.labels.len())
+    }
+
+    /// Full (non-checkpointed) evaluation of a plan set.
+    fn eval_full(&self, plans: &PlanSet) -> Result<f64> {
+        self.evals.set(self.evals.get() + 1);
+        simulator::evaluate_plans(
+            self.exec,
+            &self.images[..self.n() * self.sample_elems],
+            &self.labels[..self.n()],
+            self.sample_elems,
+            self.cfg.batch,
+            plans,
+            self.cfg.seed,
+        )
+    }
+
+    /// Run the configured search.
+    pub fn run(&self) -> Result<SearchResult> {
+        let t0 = Instant::now();
+        let groups = self.mcfg().relu_groups;
+        let baseline = PlanSet::baseline(groups);
+        let baseline_acc = self.eval_full(&baseline)?;
+        let mut result = match self.cfg.strategy {
+            Strategy::Eco => self.search_eco(baseline_acc)?,
+            Strategy::Budget(b) => self.search_budget(b, baseline_acc)?,
+        };
+        result.search_time_s = t0.elapsed().as_secs_f64();
+        result.evals = self.evals.get();
+        result.budget_fraction = result.plans.budget_fraction(self.mcfg());
+        Ok(result)
+    }
+
+    // ------------------------------------------------------------------
+    // HummingBird-eco.
+    // ------------------------------------------------------------------
+
+    fn search_eco(&self, baseline_acc: f64) -> Result<SearchResult> {
+        let groups = self.mcfg().relu_groups;
+        let fx = FixedPoint::new(self.mcfg().frac_bits);
+        // Pass 1: record per-group max |pre-activation| over the val set.
+        let mut max_abs = vec![0f64; groups];
+        {
+            let n = self.n();
+            let mut lo = 0usize;
+            while lo < n {
+                let hi = (lo + self.cfg.batch).min(n);
+                let x = &self.images[lo * self.sample_elems..hi * self.sample_elems];
+                let mut hook = |_node: usize, group: usize, v: &mut [f32]| {
+                    for e in v.iter_mut() {
+                        let a = e.abs() as f64;
+                        if a > max_abs[group] {
+                            max_abs[group] = a;
+                        }
+                        if *e < 0.0 {
+                            *e = 0.0;
+                        }
+                    }
+                };
+                self.exec.forward_with(x, hi - lo, &mut hook)?;
+                lo = hi;
+            }
+        }
+        // Theorem 1: need -2^(k-1) <= x < 2^(k-1) on the ring, i.e.
+        // k > log2(|x|*2^f) + 1; add one extra safety bit for unseen data.
+        let mut plans = PlanSet::baseline(groups);
+        for (g, ma) in max_abs.iter().enumerate() {
+            let ring_mag = (ma * fx.scale()).max(1.0);
+            let k = (ring_mag.log2().floor() as u32 + 2 + 1).min(64);
+            plans.set(g, ReluPlan::new(k, 0)?);
+        }
+        // Verify error-freeness on the val set; widen any group if the
+        // simulated predictions deviate from baseline.
+        let mut acc = self.eval_full(&plans)?;
+        let mut guard = 0;
+        while acc + 1e-9 < baseline_acc && guard < 8 {
+            for g in 0..groups {
+                let p = plans.plan_for(g);
+                plans.set(g, ReluPlan::new((p.k + 1).min(64), 0)?);
+            }
+            acc = self.eval_full(&plans)?;
+            guard += 1;
+        }
+        plans.meta.insert("strategy".into(), "eco".into());
+        Ok(SearchResult {
+            plans,
+            baseline_acc,
+            final_acc: acc,
+            search_time_s: 0.0,
+            evals: 0,
+            budget_fraction: 0.0,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // HummingBird-b (budgeted DFS).
+    // ------------------------------------------------------------------
+
+    fn search_budget(&self, budget: f64, baseline_acc: f64) -> Result<SearchResult> {
+        let mcfg = self.mcfg();
+        let groups = mcfg.relu_groups;
+        // Per-group element counts (budget weights) and the k cap from the
+        // eco analysis (no point keeping bits above the value range).
+        let eco = self.search_eco(baseline_acc)?;
+        let k_cap: Vec<u32> = (0..groups).map(|g| eco.plans.plan_for(g).k).collect();
+        let mut elems = vec![0u64; groups];
+        for (_, g, e) in mcfg.relu_elems() {
+            elems[g] += e as u64;
+        }
+        let total_baseline: u64 = elems.iter().map(|e| e * 64).sum();
+        let budget_bits = (budget * total_baseline as f64).floor() as u64;
+
+        // Group order: by node order (paper: "starting from the first ReLU
+        // layer").
+        let mut best: Option<(f64, PlanSet)> = None;
+        let mut plans = PlanSet::baseline(groups);
+        self.dfs(
+            0,
+            groups,
+            &elems,
+            &k_cap,
+            budget_bits,
+            0,
+            baseline_acc,
+            &mut plans,
+            &mut best,
+        )?;
+        let (acc, plans) = best.ok_or_else(|| {
+            Error::Search(format!(
+                "no configuration within budget {budget} stays within max_acc_drop \
+                 {} of the baseline — widen `widths`/`max_m_scan` or raise the drop \
+                 threshold",
+                self.cfg.max_acc_drop
+            ))
+        })?;
+        let mut plans = plans;
+        plans.meta.insert("strategy".into(), format!("budget:{budget:.4}"));
+        Ok(SearchResult {
+            plans,
+            baseline_acc,
+            final_acc: acc,
+            search_time_s: 0.0,
+            evals: 0,
+            budget_fraction: 0.0,
+        })
+    }
+
+    /// DFS over group `g`'s width assignment.
+    #[allow(clippy::too_many_arguments)]
+    fn dfs(
+        &self,
+        g: usize,
+        groups: usize,
+        elems: &[u64],
+        k_cap: &[u32],
+        budget_bits: u64,
+        used_bits: u64,
+        baseline_acc: f64,
+        plans: &mut PlanSet,
+        best: &mut Option<(f64, PlanSet)>,
+    ) -> Result<()> {
+        if g == groups {
+            return Ok(()); // handled at leaf assignment below
+        }
+        // Eval-budget escape hatch: unwind keeping the best found so far.
+        if self.evals.get() >= self.cfg.max_evals && best.is_some() {
+            return Ok(());
+        }
+        // Minimal bits the remaining groups could use (width 0 = identity).
+        let mut widths: Vec<u32> = self.cfg.widths.clone();
+        widths.push(0);
+        for &width in &widths {
+            let cost = width as u64 * elems[g];
+            // Early stop 3: budget exceeded (counting zero for the rest).
+            if used_bits + cost > budget_bits {
+                continue;
+            }
+            // Locally-optimal (k, m) for this width (later groups exact).
+            let (plan, opt_acc) = self.best_km_for_width(g, width, k_cap[g], plans)?;
+            if std::env::var("HB_SEARCH_DEBUG").is_ok() {
+                eprintln!(
+                    "[dfs] g={g} width={width} plan=[{},{}) used={used_bits} cost={cost} \
+                     budget={budget_bits} opt_acc={opt_acc:.4} baseline={baseline_acc:.4} best={:?}",
+                    plan.m,
+                    plan.k,
+                    best.as_ref().map(|b| b.0)
+                );
+            }
+            // Early stop 1: hopeless branch.
+            if opt_acc < baseline_acc - self.cfg.max_acc_drop {
+                continue;
+            }
+            // Early stop 2: optimistic accuracy already below best found.
+            if let Some((best_acc, _)) = best {
+                if opt_acc <= *best_acc && g > 0 {
+                    continue;
+                }
+            }
+            plans.set(g, plan);
+            if g + 1 == groups {
+                // Complete assignment: opt_acc is the true accuracy.
+                let better = match best {
+                    Some((a, _)) => opt_acc > *a,
+                    None => true,
+                };
+                if better {
+                    *best = Some((opt_acc, plans.clone()));
+                }
+            } else {
+                self.dfs(
+                    g + 1,
+                    groups,
+                    elems,
+                    k_cap,
+                    budget_bits,
+                    used_bits + cost,
+                    baseline_acc,
+                    plans,
+                    best,
+                )?;
+            }
+            plans.set(g, ReluPlan::BASELINE);
+        }
+        Ok(())
+    }
+
+    /// Scan m (with k = m + width, capped) for the locally-optimal window
+    /// of group g, earlier groups fixed in `plans`, later groups exact.
+    fn best_km_for_width(
+        &self,
+        g: usize,
+        width: u32,
+        k_cap: u32,
+        plans: &PlanSet,
+    ) -> Result<(ReluPlan, f64)> {
+        if width == 0 {
+            let plan = ReluPlan::new(0, 0)?; // identity
+            let mut candidate = plans.clone();
+            candidate.set(g, plan);
+            for later in g + 1..self.mcfg().relu_groups {
+                candidate.set(later, ReluPlan::BASELINE);
+            }
+            let acc = self.eval_suffix(g, &candidate)?;
+            return Ok((plan, acc));
+        }
+        let mut best: Option<(ReluPlan, f64)> = None;
+        // Anchor the scan near the eco-derived range cap: windows whose top
+        // bit k sits far below the activation range flip signs wholesale
+        // (Theorem 1 violated) and never win, so scanning them wastes
+        // evaluations. We still probe a few positions below the cap to let
+        // the optimizer trade range errors for pruning.
+        let m_hi = self.cfg.max_m_scan.min(k_cap.saturating_sub(width));
+        let m_lo = m_hi.saturating_sub(4);
+        for m in m_lo..=m_hi {
+            let k = (m + width).min(64);
+            let plan = ReluPlan::new(k, m)?;
+            let mut candidate = plans.clone();
+            candidate.set(g, plan);
+            for later in g + 1..self.mcfg().relu_groups {
+                candidate.set(later, ReluPlan::BASELINE);
+            }
+            let acc = self.eval_suffix(g, &candidate)?;
+            match &best {
+                Some((_, b)) if acc <= *b => {}
+                _ => best = Some((plan, acc)),
+            }
+        }
+        best.ok_or_else(|| Error::Search("empty m scan".into()))
+    }
+
+    /// Evaluate with prefix checkpointing: groups < g are unchanged between
+    /// sibling candidates, so cache the prefix activations per batch.
+    fn eval_suffix(&self, g: usize, plans: &PlanSet) -> Result<f64> {
+        self.evals.set(self.evals.get() + 1);
+        let boundary = self.group_boundary(g);
+        let fx = FixedPoint::new(self.mcfg().frac_bits);
+        let classes = self.mcfg().num_classes;
+        let n = self.n();
+        let mut correct = 0usize;
+        // Prefix cache keyed by the plans of groups < g (summarized).
+        let prefix_key = (0..g)
+            .map(|gg| {
+                let p = plans.plan_for(gg);
+                format!("{}:{}", p.k, p.m)
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        let mut cache = self.prefix_cache.borrow_mut();
+        if cache.0 != (g, prefix_key.clone()) {
+            // (Re)build the prefix checkpoints for every batch.
+            let mut ckpts = Vec::new();
+            let mut lo = 0usize;
+            while lo < n {
+                let hi = (lo + self.cfg.batch).min(n);
+                let x = &self.images[lo * self.sample_elems..hi * self.sample_elems];
+                let mut hook = simulator::plan_hook(plans, fx, self.cfg.seed, lo);
+                let seeds = self.exec.prefix_acts(x, hi - lo, boundary, &mut hook)?;
+                ckpts.push((lo, hi, seeds));
+                lo = hi;
+            }
+            *cache = ((g, prefix_key), ckpts);
+        }
+        for (lo, hi, seeds) in &cache.1 {
+            let mut hook = simulator::plan_hook(plans, fx, self.cfg.seed, *lo);
+            let logits = self.exec.forward_from(boundary, seeds, hi - lo, &mut hook)?;
+            correct += simulator::count_correct(&logits, &self.labels[*lo..*hi], classes);
+        }
+        Ok(correct as f64 / n as f64)
+    }
+
+    /// First ReLU node of group g (suffix re-evaluation boundary).
+    fn group_boundary(&self, g: usize) -> usize {
+        self.mcfg()
+            .nodes
+            .iter()
+            .enumerate()
+            .find_map(|(i, n)| match n {
+                Op::Relu { group, .. } if *group == g => Some(i),
+                _ => None,
+            })
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // End-to-end search tests (they need trained weights + artifacts) live
+    // in rust/tests/search_e2e.rs; pure logic tests below.
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = SearchConfig::default();
+        assert!(matches!(c.strategy, Strategy::Budget(_)));
+        assert!(c.widths.windows(2).all(|w| w[0] > w[1]), "widths descending");
+    }
+}

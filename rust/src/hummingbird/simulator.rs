@@ -1,0 +1,176 @@
+//! The lightweight MPC simulator (paper §4.1.1).
+//!
+//! "The simulator simply performs a single-node ML inference for all layers
+//! except ReLU. Only for ReLU layers, the simulator simulates what
+//! HummingBird would do during a real MPC-based inference, i.e., converts
+//! the floating point values into an integer ring element, generates secret
+//! shares, discards bits, and calculates DReLU."
+//!
+//! Our DReLU decision here is **bit-exact** to the Rust GMW engine's
+//! two-party protocol (same window math on the same ring), so simulator
+//! accuracy equals online accuracy up to fixed-point truncation noise —
+//! property-tested in `rust/tests/mpc_vs_plain.rs`.
+
+use crate::crypto::prg::Prg;
+use crate::gmw::ReluPlan;
+use crate::hummingbird::PlanSet;
+use crate::model::plain::PlainExecutor;
+use crate::ring::{self, FixedPoint};
+
+/// Simulate the reduced-ring DReLU decision for one plaintext value.
+///
+/// Returns true if the (simulated two-party) protocol would keep the value.
+#[inline]
+pub fn sim_drelu_keep(x: f64, plan: ReluPlan, fx: FixedPoint, prg: &mut Prg) -> bool {
+    let w = plan.width();
+    debug_assert!(w >= 1);
+    let xi = fx.encode(x);
+    let r = prg.next_u64();
+    let a0 = ring::bit_window(r, plan.k, plan.m);
+    let a1 = ring::bit_window(xi.wrapping_sub(r), plan.k, plan.m);
+    let t = a0.wrapping_add(a1) & ring::low_mask(w);
+    ring::msb_w(t, w) == 0
+}
+
+/// Apply the simulated approximate ReLU in place.
+pub fn sim_relu_inplace(v: &mut [f32], plan: ReluPlan, fx: FixedPoint, prg: &mut Prg) {
+    if plan.is_identity() {
+        return;
+    }
+    if plan.is_baseline() {
+        for e in v.iter_mut() {
+            if *e < 0.0 {
+                *e = 0.0;
+            }
+        }
+        return;
+    }
+    for e in v.iter_mut() {
+        if !sim_drelu_keep(*e as f64, plan, fx, prg) {
+            *e = 0.0;
+        }
+    }
+}
+
+/// Deterministic per-(seed, batch, node) PRG so a ReLU node's mask
+/// randomness does not depend on evaluation order or checkpointing.
+pub fn node_prg(seed: u64, batch_lo: usize, node: usize) -> Prg {
+    Prg::new(seed ^ ((batch_lo as u64) << 24) ^ node as u64, sim_stream())
+}
+
+/// Build the simulator's ReLU hook for one batch.
+pub fn plan_hook<'a>(
+    plans: &'a PlanSet,
+    fx: FixedPoint,
+    seed: u64,
+    batch_lo: usize,
+) -> impl FnMut(usize, usize, &mut [f32]) + 'a {
+    move |node: usize, group: usize, v: &mut [f32]| {
+        let plan = plans.plan_for(group);
+        if plan.is_baseline() || plan.is_identity() {
+            sim_relu_inplace(v, plan, fx, &mut Prg::new(0, 0));
+        } else {
+            let mut prg = node_prg(seed, batch_lo, node);
+            sim_relu_inplace(v, plan, fx, &mut prg);
+        }
+    }
+}
+
+/// Count argmax hits against labels.
+pub fn count_correct(logits: &[f32], labels: &[i32], classes: usize) -> usize {
+    PlainExecutor::argmax(logits, classes)
+        .iter()
+        .zip(labels)
+        .filter(|(p, l)| **p == **l as usize)
+        .count()
+}
+
+/// Evaluate classification accuracy of `exec` under `plans` on all samples
+/// given, batched. Deterministic given `seed`.
+pub fn evaluate_plans(
+    exec: &PlainExecutor,
+    images: &[f32],
+    labels: &[i32],
+    sample_elems: usize,
+    batch: usize,
+    plans: &PlanSet,
+    seed: u64,
+) -> crate::error::Result<f64> {
+    let fx = FixedPoint::new(exec.cfg.frac_bits);
+    let classes = exec.cfg.num_classes;
+    let n = labels.len();
+    let mut correct = 0usize;
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + batch).min(n);
+        let b = hi - lo;
+        let x = &images[lo * sample_elems..hi * sample_elems];
+        let mut hook = plan_hook(plans, fx, seed, lo);
+        let logits = exec.forward_with(x, b, &mut hook)?;
+        correct += count_correct(&logits, &labels[lo..hi], classes);
+        lo = hi;
+    }
+    Ok(correct as f64 / n as f64)
+}
+
+/// PRG stream id for simulator randomness (arbitrary, domain-separated).
+#[inline]
+const fn sim_stream() -> u64 {
+    0x51b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_plan_is_exact_relu() {
+        let fx = FixedPoint::new(12);
+        let mut prg = Prg::new(1, 1);
+        let mut v = vec![-1.5f32, 0.0, 2.25, -0.001];
+        sim_relu_inplace(&mut v, ReluPlan::BASELINE, fx, &mut prg);
+        assert_eq!(v, vec![0.0, 0.0, 2.25, 0.0]);
+    }
+
+    /// Theorem 1: with k covering the value range and m = 0, the simulated
+    /// decision equals exact DReLU for every value.
+    #[test]
+    fn eco_window_is_exact() {
+        let fx = FixedPoint::new(12);
+        let plan = ReluPlan::new(20, 0).unwrap(); // covers |x| < 2^7 at f=12
+        let mut prg = Prg::new(2, 2);
+        for i in -1000..1000 {
+            let x = i as f64 * 0.05;
+            if x.abs() >= 127.0 {
+                continue;
+            }
+            let keep = sim_drelu_keep(x, plan, fx, &mut prg);
+            assert_eq!(keep, x >= 0.0 || fx.encode(x) == 0, "x={x}");
+        }
+    }
+
+    /// Theorem 2: m > 0 prunes small positives probabilistically, never
+    /// large ones, and always drops negatives (within range).
+    #[test]
+    fn low_bit_drop_prunes_small_positives() {
+        let fx = FixedPoint::new(12);
+        let plan = ReluPlan::new(20, 8).unwrap(); // threshold 2^8/2^12 = 1/16
+        let mut prg = Prg::new(3, 3);
+        let thresh = 2f64.powi(8 - 12);
+        let mut small_kept = 0;
+        let mut small_total = 0;
+        for i in 0..5000 {
+            let x = (i % 100) as f64 * 0.002 + 0.0001; // (0, 0.2)
+            let keep = sim_drelu_keep(x, plan, fx, &mut prg);
+            if x >= thresh {
+                assert!(keep, "large positive pruned: {x}");
+            } else {
+                small_total += 1;
+                small_kept += keep as usize;
+            }
+            assert!(!sim_drelu_keep(-x, plan, fx, &mut prg) || fx.encode(-x) == 0);
+        }
+        assert!(small_kept > 0 && small_kept < small_total, "{small_kept}/{small_total}");
+    }
+
+}

@@ -1,0 +1,49 @@
+//! # HummingBird
+//!
+//! A from-scratch reproduction of *"Approximating ReLU on a Reduced Ring for
+//! Efficient MPC-based Private Inference"* (Maeng & Suh, 2023) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the MPC coordinator: secret sharing, the GMW
+//!   protocol engine, HummingBird's reduced-ring approximate ReLU, the
+//!   bitpacked wire format, Beaver-triple provisioning, network transports
+//!   with exact byte/round accounting, the offline (k, m) search engine and a
+//!   batching inference server.
+//! * **Layer 2** — JAX per-layer compute graphs (`python/compile/model.py`),
+//!   AOT-lowered to HLO text and executed through [`runtime`] (PJRT CPU).
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the share
+//!   matmul and the circuit-adder stage primitives, validated against
+//!   pure-jnp oracles at build time.
+//!
+//! See `DESIGN.md` for the complete system inventory and the experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod error;
+
+pub mod util {
+    pub mod benchkit;
+    pub mod cli;
+    pub mod json;
+    pub mod stats;
+    pub mod threadpool;
+}
+
+pub mod crypto {
+    pub mod chacha;
+    pub mod prg;
+}
+
+pub mod beaver;
+pub mod bitpack;
+pub mod coordinator;
+pub mod figures;
+pub mod gmw;
+pub mod hummingbird;
+pub mod model;
+pub mod net;
+pub mod ring;
+pub mod runtime;
+pub mod sharing;
+pub mod tensor;
+
+pub use error::{Error, Result};

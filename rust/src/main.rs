@@ -1,0 +1,365 @@
+//! `hummingbird` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   infer    — run private inference over test samples, report accuracy,
+//!              latency, and communication (single-process simulation).
+//!   serve    — boot the batching service and drive it with a synthetic
+//!              open-loop client; report throughput (Fig 1 mode).
+//!   search   — run the offline search engine (eco or --budget) and write
+//!              the plan JSON to configs/searched/.
+//!   figures  — regenerate every paper table/figure (see EXPERIMENTS.md).
+//!   party    — run one party of a multi-process TCP deployment.
+//!   selftest — quick protocol sanity check.
+//!
+//! Examples:
+//!   hummingbird search --model miniresnet_synth10 --budget 8/64
+//!   hummingbird infer --model miniresnet_synth10 \
+//!       --plan configs/searched/miniresnet_synth10_b8-64.json --samples 64
+//!   hummingbird figures --fig 11
+
+use anyhow::{bail, Context, Result};
+
+use hummingbird::figures;
+use hummingbird::hummingbird::search::{SearchConfig, SearchEngine, Strategy};
+use hummingbird::hummingbird::{simulator, PlanSet};
+use hummingbird::model::{Archive, Backend, Dataset, ModelConfig, PlainExecutor, WhichPlain};
+use hummingbird::net::profile::{ComputeProfile, NetworkProfile};
+use hummingbird::runtime::{Manifest, Runtime};
+use hummingbird::util::cli::Args;
+use hummingbird::util::stats;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn repo_root(args: &Args) -> std::path::PathBuf {
+    std::path::PathBuf::from(args.opt_or("root", env!("CARGO_MANIFEST_DIR")))
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("infer") => cmd_infer(args),
+        Some("serve") => cmd_serve(args),
+        Some("search") => cmd_search(args),
+        Some("figures") => figures::cmd_figures(args).map_err(Into::into),
+        Some("party") => cmd_party(args),
+        Some("selftest") => cmd_selftest(args),
+        _ => {
+            eprintln!(
+                "usage: hummingbird <infer|serve|search|figures|party|selftest> [--options]\n\
+                 see README.md for details"
+            );
+            bail!("missing or unknown subcommand")
+        }
+    }
+}
+
+fn load_plan(args: &Args, cfg: &ModelConfig) -> Result<PlanSet> {
+    match args.opt("plan") {
+        None | Some("baseline") => Ok(PlanSet::baseline(cfg.relu_groups)),
+        Some(path) => Ok(PlanSet::load(path).context("loading plan")?),
+    }
+}
+
+// ---------------------------------------------------------------------
+// infer
+// ---------------------------------------------------------------------
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    use hummingbird::coordinator::{Coordinator, ServeOptions};
+    let root = repo_root(args);
+    let model = args.req("model")?;
+    let cfg = ModelConfig::load_named(&root, model)?;
+    let plan = load_plan(args, &cfg)?;
+    let samples: usize = args.opt_parse("samples", 32)?;
+    let backend = args.opt_or("gmw-backend", "rust").to_string();
+
+    let dataset = Dataset::load(root.join("artifacts"), &cfg.dataset)?;
+    let mut opts = ServeOptions::new(&root, model);
+    opts.plan = Some(plan.clone());
+    opts.parties = args.opt_parse("parties", 2)?;
+    opts.gmw_backend = backend;
+    println!("booting {} ({} parties, plan: {})", model, opts.parties, plan.summary());
+    let svc = Coordinator::start(opts)?;
+
+    let n = samples.min(dataset.test.n);
+    let t0 = std::time::Instant::now();
+    let mut correct = 0usize;
+    let mut latencies = Vec::new();
+    // Submit all requests, then collect (lets the batcher fill batches).
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let x = dataset.test.batch(i, i + 1).to_vec();
+        rxs.push((i, svc.infer_async(x)?));
+    }
+    for (i, rx) in rxs {
+        let r = rx.recv()?;
+        if r.pred == dataset.test.labels[i] as usize {
+            correct += 1;
+        }
+        latencies.push(r.latency_s);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let trace = &svc.trace;
+    println!("samples:        {n}");
+    println!("accuracy:       {:.2}%", 100.0 * correct as f64 / n as f64);
+    println!("wall time:      {} ({:.1} samples/s)", stats::fmt_secs(wall), n as f64 / wall);
+    println!("p50 latency:    {}", stats::fmt_secs(stats::median(&latencies)));
+    println!("comm bytes:     {} (party0 sent)", stats::fmt_bytes(trace.total_bytes()));
+    println!("comm rounds:    {}", trace.total_rounds());
+    let by = trace.bytes_by_phase();
+    println!(
+        "  circuit {} / others {} / mult {} / b2a {} / data {}",
+        stats::fmt_bytes(by[0]),
+        stats::fmt_bytes(by[1]),
+        stats::fmt_bytes(by[2]),
+        stats::fmt_bytes(by[3]),
+        stats::fmt_bytes(by[4])
+    );
+    // Projection onto the paper's network profiles.
+    let bd = svc.metrics.breakdown();
+    for net in [NetworkProfile::high_bw(), NetworkProfile::lan(), NetworkProfile::wan()] {
+        let p =
+            hummingbird::net::profile::project(trace, bd.total(), &net, &ComputeProfile::a100());
+        println!(
+            "  projected {:8}: {:10} ({} comm + {} compute)",
+            p.network,
+            stats::fmt_secs(p.total_s()),
+            stats::fmt_secs(p.comm_time_s),
+            stats::fmt_secs(p.compute_time_s)
+        );
+    }
+    svc.shutdown();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use hummingbird::coordinator::{Coordinator, ServeOptions};
+    let root = repo_root(args);
+    let model = args.req("model")?;
+    let cfg = ModelConfig::load_named(&root, model)?;
+    let plan = load_plan(args, &cfg)?;
+    let duration: f64 = args.opt_parse("seconds", 20.0)?;
+    let dataset = Dataset::load(root.join("artifacts"), &cfg.dataset)?;
+
+    let mut opts = ServeOptions::new(&root, model);
+    opts.plan = Some(plan.clone());
+    opts.gmw_backend = args.opt_or("gmw-backend", "rust").to_string();
+    let svc = Coordinator::start(opts)?;
+    println!("serving {model} (plan: {}), open-loop for {duration}s", plan.summary());
+
+    let t0 = std::time::Instant::now();
+    let mut sent = 0usize;
+    let mut rxs = std::collections::VecDeque::new();
+    let mut correct = 0usize;
+    let mut done = 0usize;
+    while t0.elapsed().as_secs_f64() < duration {
+        let i = sent % dataset.test.n;
+        rxs.push_back((i, svc.infer_async(dataset.test.batch(i, i + 1).to_vec())?));
+        sent += 1;
+        // Keep a bounded number in flight.
+        while rxs.len() >= 64 {
+            let (i, rx) = rxs.pop_front().unwrap();
+            let r = rx.recv()?;
+            done += 1;
+            correct += (r.pred == dataset.test.labels[i] as usize) as usize;
+        }
+    }
+    for (i, rx) in rxs {
+        let r = rx.recv()?;
+        done += 1;
+        correct += (r.pred == dataset.test.labels[i] as usize) as usize;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("served {done} samples in {wall:.1}s = {:.2} samples/s", done as f64 / wall);
+    println!("accuracy {:.2}%", 100.0 * correct as f64 / done as f64);
+    println!("metrics: {}", svc.metrics.to_json().to_string());
+    svc.shutdown();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// search
+// ---------------------------------------------------------------------
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let root = repo_root(args);
+    let model = args.req("model")?;
+    let cfg = ModelConfig::load_named(&root, model)?;
+    let weights = Archive::load(root.join("artifacts/weights").join(model))?;
+    let dataset = Dataset::load(root.join("artifacts"), &cfg.dataset)?;
+
+    let mut scfg = SearchConfig::default();
+    scfg.val_samples = args.opt_parse("val-samples", 256)?;
+    scfg.seed = args.opt_parse("seed", 0xbeefu64)?;
+    scfg.max_acc_drop = args.opt_parse("max-drop", scfg.max_acc_drop)?;
+    scfg.max_evals = args.opt_parse("max-evals", scfg.max_evals)?;
+    let strategy = match args.opt("budget") {
+        None => {
+            scfg.strategy = Strategy::Eco;
+            "eco".to_string()
+        }
+        Some(b) => {
+            let frac = parse_budget(b)?;
+            scfg.strategy = Strategy::Budget(frac);
+            format!("b{}", b.replace('/', "-"))
+        }
+    };
+
+    // Plain executor on the fast XLA search artifacts (naive fallback).
+    let manifest = Manifest::load(root.join("artifacts"))?;
+    let model_art = manifest.model(model)?.clone();
+    let backend = if args.flag("naive") {
+        Backend::Naive
+    } else {
+        Backend::Xla {
+            rt: Runtime::new(root.join("artifacts"))?,
+            artifact_batch: model_art.search_batch,
+            artifacts: model_art,
+            which: WhichPlain::Search,
+        }
+    };
+    let exec = PlainExecutor::new(cfg.clone(), weights, backend);
+    let n = scfg.val_samples.min(dataset.val.n);
+    let engine = SearchEngine::new(
+        &exec,
+        &dataset.val.images,
+        &dataset.val.labels[..n],
+        dataset.val.sample_elems,
+        scfg,
+    );
+    println!("searching {model} ({strategy}) on {n} validation samples...");
+    let result = engine.run()?;
+    println!("baseline acc:   {:.2}%", result.baseline_acc * 100.0);
+    println!("searched acc:   {:.2}%", result.final_acc * 100.0);
+    println!("plan:           {}", result.plans.summary());
+    println!("budget used:    {:.4} of baseline bits", result.budget_fraction);
+    println!("evals:          {}", result.evals);
+    println!("search time:    {}", stats::fmt_secs(result.search_time_s));
+
+    let mut plans = result.plans.clone();
+    plans.meta.insert("model".into(), model.to_string());
+    plans.meta.insert("baseline_acc".into(), format!("{:.4}", result.baseline_acc));
+    plans.meta.insert("final_acc".into(), format!("{:.4}", result.final_acc));
+    plans.meta.insert("search_time_s".into(), format!("{:.2}", result.search_time_s));
+    plans.meta.insert("evals".into(), format!("{}", result.evals));
+    let out = args
+        .opt("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| root.join("configs/searched").join(format!("{model}_{strategy}.json")));
+    plans.save(&out)?;
+    println!("plan written to {}", out.display());
+
+    // Final verification on the test split.
+    let test_acc = simulator::evaluate_plans(
+        &exec,
+        &dataset.test.images,
+        &dataset.test.labels,
+        dataset.test.sample_elems,
+        64,
+        &plans,
+        1,
+    )?;
+    println!("test acc under plan: {:.2}%", test_acc * 100.0);
+    Ok(())
+}
+
+fn parse_budget(s: &str) -> Result<f64> {
+    if let Some((a, b)) = s.split_once('/') {
+        let a: f64 = a.parse()?;
+        let b: f64 = b.parse()?;
+        if a <= 0.0 || b <= 0.0 {
+            bail!("budget must be positive");
+        }
+        Ok(a / b)
+    } else {
+        Ok(s.parse()?)
+    }
+}
+
+// ---------------------------------------------------------------------
+// party (multi-process TCP mode)
+// ---------------------------------------------------------------------
+
+fn cmd_party(args: &Args) -> Result<()> {
+    use hummingbird::gmw::{GmwParty, ReluPlan};
+    use hummingbird::net::tcp::TcpTransport;
+    use hummingbird::net::Transport;
+    let rank: usize = args.opt_parse("rank", 0)?;
+    let addrs: Vec<String> =
+        args.req("addrs")?.split(',').map(|s| s.trim().to_string()).collect();
+    let n: usize = args.opt_parse("elems", 4096)?;
+    let k: u32 = args.opt_parse("k", 64)?;
+    let m: u32 = args.opt_parse("m", 0)?;
+    println!("party {rank}/{} connecting...", addrs.len());
+    let transport = TcpTransport::connect(rank, &addrs)?;
+    let mut party = GmwParty::new(transport, args.opt_parse("seed", 7u64)?);
+    // Each party holds a random share vector; run ReLU over TCP.
+    let mut prg = hummingbird::crypto::prg::Prg::new(100 + rank as u64, 0);
+    let shares = prg.vec_u64(n);
+    let plan = ReluPlan::new(k, m).map_err(anyhow::Error::from)?;
+    let t0 = std::time::Instant::now();
+    let _out = party.relu(&shares, plan)?;
+    let trace = party.transport.trace();
+    println!(
+        "relu({n} elems, window [{m},{k})) over TCP: {} in {}, {} rounds",
+        stats::fmt_bytes(trace.total_bytes()),
+        stats::fmt_secs(t0.elapsed().as_secs_f64()),
+        trace.total_rounds()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// selftest
+// ---------------------------------------------------------------------
+
+fn cmd_selftest(_args: &Args) -> Result<()> {
+    use hummingbird::gmw::harness::run_parties;
+    use hummingbird::gmw::ReluPlan;
+    use hummingbird::sharing::{reconstruct_arith, share_arith};
+    let mut prg = hummingbird::crypto::prg::Prg::new(1, 1);
+    let x: Vec<u64> = (0..1000)
+        .map(|i| if i % 2 == 0 { i as u64 } else { (i as u64).wrapping_neg() })
+        .collect();
+    let xs = share_arith(&mut prg, &x, 2);
+    for (name, plan) in [
+        ("baseline 64-bit", ReluPlan::BASELINE),
+        ("eco 20-bit", ReluPlan::new(20, 0).unwrap()),
+        ("hummingbird [2,10)", ReluPlan::new(10, 2).unwrap()),
+    ] {
+        let xs = xs.clone();
+        let run = run_parties(2, 3, move |p| {
+            let me = p.party();
+            p.relu(&xs[me], plan).unwrap()
+        });
+        let out = reconstruct_arith(&run.outputs);
+        let errs = out
+            .iter()
+            .zip(&x)
+            .filter(|(o, xi)| {
+                let expect = if (**xi as i64) < 0 { 0 } else { **xi };
+                **o != expect
+            })
+            .count();
+        println!(
+            "{name:<24} bytes={:<10} rounds={:<4} deviations={errs}",
+            run.trace.total_bytes(),
+            run.trace.total_rounds()
+        );
+    }
+    println!("selftest done");
+    Ok(())
+}

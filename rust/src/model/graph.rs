@@ -1,0 +1,198 @@
+//! Model graph: the Rust-side interpreter of the shared config schema
+//! (`configs/models/*.json`, produced by `python/compile/archs.py`).
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// One graph node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    Input,
+    Conv { src: usize, out_ch: usize, k: usize, stride: usize, pad: usize },
+    Relu { src: usize, group: usize },
+    Add { a: usize, b: usize },
+    /// Global average pool.
+    Gap { src: usize },
+    Fc { src: usize, out: usize },
+}
+
+/// Parsed model configuration.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub model: String,
+    pub dataset: String,
+    /// Input (C, H, W).
+    pub input: (usize, usize, usize),
+    pub num_classes: usize,
+    pub batch: usize,
+    pub frac_bits: u32,
+    pub relu_groups: usize,
+    pub nodes: Vec<Op>,
+}
+
+impl ModelConfig {
+    pub fn load(path: impl AsRef<Path>) -> Result<ModelConfig> {
+        Self::from_json(&json::parse_file(path)?)
+    }
+
+    /// Load `configs/models/<name>.json` relative to a repo root.
+    pub fn load_named(root: impl AsRef<Path>, name: &str) -> Result<ModelConfig> {
+        Self::load(root.as_ref().join("configs/models").join(format!("{name}.json")))
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        let input = j.get("input")?.as_arr()?;
+        if input.len() != 3 {
+            return Err(Error::config("input must be [C,H,W]"));
+        }
+        let mut nodes = Vec::new();
+        for (i, n) in j.get("nodes")?.as_arr()?.iter().enumerate() {
+            let op = n.get_str("op")?;
+            let src = |key: &str, at: usize| -> Result<usize> {
+                let arr = n.get("in")?.as_arr()?;
+                arr.get(at)
+                    .ok_or_else(|| Error::config(format!("node {i}: missing input {at}")))?
+                    .as_usize()
+                    .and_then(|s| {
+                        if s >= i {
+                            Err(Error::config(format!("node {i}: forward ref {s}")))
+                        } else {
+                            Ok(s)
+                        }
+                    })
+                    .map_err(|e| Error::config(format!("node {i} {key}: {e}")))
+            };
+            nodes.push(match op {
+                "input" => Op::Input,
+                "conv" => Op::Conv {
+                    src: src("in", 0)?,
+                    out_ch: n.get_usize("out_ch")?,
+                    k: n.get_usize("k")?,
+                    stride: n.get_usize("stride")?,
+                    pad: n.get_usize("pad")?,
+                },
+                "relu" => Op::Relu { src: src("in", 0)?, group: n.get_usize("group")? },
+                "add" => Op::Add { a: src("in", 0)?, b: src("in", 1)? },
+                "gap" => Op::Gap { src: src("in", 0)? },
+                "fc" => Op::Fc { src: src("in", 0)?, out: n.get_usize("out")? },
+                other => return Err(Error::config(format!("node {i}: unknown op {other}"))),
+            });
+        }
+        if nodes.first() != Some(&Op::Input) {
+            return Err(Error::config("node 0 must be input"));
+        }
+        Ok(ModelConfig {
+            name: j.get_str("name")?.to_string(),
+            model: j.get_str("model")?.to_string(),
+            dataset: j.get_str("dataset")?.to_string(),
+            input: (input[0].as_usize()?, input[1].as_usize()?, input[2].as_usize()?),
+            num_classes: j.get_usize("num_classes")?,
+            batch: j.get_usize("batch")?,
+            frac_bits: j.get_usize("frac_bits")? as u32,
+            relu_groups: j.get_usize("relu_groups")?,
+            nodes,
+        })
+    }
+
+    /// Static per-node shapes (channels-first; fc/gap produce flat dims).
+    pub fn shapes(&self) -> Vec<Vec<usize>> {
+        let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let s = match node {
+                Op::Input => vec![self.input.0, self.input.1, self.input.2],
+                Op::Conv { src, out_ch, k, stride, pad } => {
+                    let s = &shapes[*src];
+                    let ho = (s[1] + 2 * pad - k) / stride + 1;
+                    let wo = (s[2] + 2 * pad - k) / stride + 1;
+                    vec![*out_ch, ho, wo]
+                }
+                Op::Relu { src, .. } | Op::Gap { src } => match &self.nodes[*src] {
+                    _ => {
+                        if matches!(node, Op::Gap { .. }) {
+                            vec![shapes[*src][0]]
+                        } else {
+                            shapes[*src].clone()
+                        }
+                    }
+                },
+                Op::Add { a, .. } => shapes[*a].clone(),
+                Op::Fc { out, .. } => vec![*out],
+            };
+            shapes.push(s);
+        }
+        shapes
+    }
+
+    /// Element count per ReLU node (used by budget accounting), keyed by
+    /// node index, for one sample (no batch dim).
+    pub fn relu_elems(&self) -> Vec<(usize, usize, usize)> {
+        let shapes = self.shapes();
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| match n {
+                Op::Relu { group, .. } => {
+                    Some((i, *group, shapes[i].iter().product::<usize>()))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Number of ReLU nodes.
+    pub fn num_relus(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Op::Relu { .. })).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        let j = json::parse(
+            r#"{
+          "name":"t","model":"t","dataset":"d","input":[3,8,8],
+          "num_classes":4,"batch":2,"frac_bits":12,"relu_groups":2,
+          "nodes":[
+            {"op":"input"},
+            {"op":"conv","in":[0],"out_ch":4,"k":3,"stride":1,"pad":1},
+            {"op":"relu","in":[1],"group":0},
+            {"op":"conv","in":[2],"out_ch":8,"k":3,"stride":2,"pad":1},
+            {"op":"relu","in":[3],"group":1},
+            {"op":"add","in":[4,4]},
+            {"op":"gap","in":[5]},
+            {"op":"fc","in":[6],"out":4}
+          ]}"#,
+        )
+        .unwrap();
+        ModelConfig::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn parses_and_shapes() {
+        let cfg = tiny_cfg();
+        let shapes = cfg.shapes();
+        assert_eq!(shapes[1], vec![4, 8, 8]);
+        assert_eq!(shapes[3], vec![8, 4, 4]);
+        assert_eq!(shapes[6], vec![8]);
+        assert_eq!(shapes[7], vec![4]);
+        assert_eq!(cfg.num_relus(), 2);
+        let relus = cfg.relu_elems();
+        assert_eq!(relus, vec![(2, 0, 4 * 8 * 8), (4, 1, 8 * 4 * 4)]);
+    }
+
+    #[test]
+    fn rejects_bad_graphs() {
+        let j = json::parse(
+            r#"{"name":"t","model":"t","dataset":"d","input":[3,8,8],
+                "num_classes":4,"batch":2,"frac_bits":12,"relu_groups":1,
+                "nodes":[{"op":"input"},{"op":"relu","in":[5],"group":0}]}"#,
+        )
+        .unwrap();
+        assert!(ModelConfig::from_json(&j).is_err()); // forward reference
+    }
+}

@@ -1,0 +1,62 @@
+//! Model substrate: config-driven CNN graphs, weight archives, the
+//! plaintext executor (search / verification) and the share-domain
+//! executor (the MPC inference path).
+
+pub mod graph;
+pub mod plain;
+pub mod shares;
+pub mod weights;
+
+pub use graph::{ModelConfig, Op};
+pub use plain::{Backend, PlainExecutor, WhichPlain};
+pub use shares::{ExecBreakdown, ShareExecutor, ShareWeights};
+pub use weights::Archive;
+
+use crate::error::Result;
+use crate::ring::FixedPoint;
+
+/// A labeled dataset split loaded from `artifacts/data/<name>`.
+#[derive(Debug, Clone)]
+pub struct Split {
+    /// [N, C, H, W] flattened.
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    /// Per-sample element count (C*H*W).
+    pub sample_elems: usize,
+}
+
+/// Dataset with train/val/test splits (we only load val/test in Rust).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub val: Split,
+    pub test: Split,
+}
+
+impl Dataset {
+    pub fn load(artifacts_root: impl AsRef<std::path::Path>, name: &str) -> Result<Dataset> {
+        let prefix = artifacts_root.as_ref().join("data").join(name);
+        let archive = Archive::load(&prefix)?;
+        let split = |x: &str, y: &str| -> Result<Split> {
+            let images_t = archive.get(x)?;
+            let shape = images_t.shape().to_vec();
+            let images = images_t.as_f32()?.to_vec();
+            let labels = archive.get(y)?.as_i32()?.to_vec();
+            let n = shape[0];
+            Ok(Split { images, labels, n, sample_elems: shape[1..].iter().product() })
+        };
+        Ok(Dataset { val: split("val_x", "val_y")?, test: split("test_x", "test_y")? })
+    }
+}
+
+impl Split {
+    /// Borrow sample range [lo, hi) as a flat f32 slice.
+    pub fn batch(&self, lo: usize, hi: usize) -> &[f32] {
+        &self.images[lo * self.sample_elems..hi * self.sample_elems]
+    }
+
+    /// Quantize a batch to the ring.
+    pub fn batch_ring(&self, lo: usize, hi: usize, fx: FixedPoint) -> Vec<u64> {
+        self.batch(lo, hi).iter().map(|v| fx.encode(*v as f64)).collect()
+    }
+}

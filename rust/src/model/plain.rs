@@ -1,0 +1,433 @@
+//! Plaintext f32 executor: the "vanilla single-node inference" half of the
+//! paper's MPC simulator (§4.1.1) and the verification oracle for MPC runs.
+//!
+//! Two interchangeable backends for the linear layers:
+//! * `Backend::Naive` — portable Rust loops (always available; tests).
+//! * `Backend::Xla`   — the AOT per-layer f32 artifacts via PJRT (fast path
+//!   used by the search engine; same HLO the L2 model.py defines).
+//!
+//! Between linear layers the executor calls a caller-supplied ReLU hook, so
+//! the search engine can inject HummingBird's approximate ReLU per group
+//! and capture pre-activation ranges.
+
+use crate::error::{Error, Result};
+use crate::model::graph::{ModelConfig, Op};
+use crate::model::weights::Archive;
+use crate::runtime::{registry::ModelArtifacts, Runtime};
+
+/// ReLU hook: `(node_index, group, pre_activations) -> activations`.
+/// The default hook is exact ReLU.
+pub type ReluHook<'a> = &'a mut dyn FnMut(usize, usize, &mut [f32]);
+
+/// Linear-layer backend.
+pub enum Backend {
+    Naive,
+    Xla { rt: Runtime, artifacts: ModelArtifacts, artifact_batch: usize, which: WhichPlain },
+}
+
+/// Which f32 artifact variant to use (they differ only in batch size).
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub enum WhichPlain {
+    /// `plain_*` artifacts (MPC batch).
+    Plain,
+    /// `search_*` artifacts (search batch).
+    Search,
+}
+
+/// Plaintext model executor.
+pub struct PlainExecutor {
+    pub cfg: ModelConfig,
+    /// f32 parameters keyed "w{i}" / "b{i}" (node index).
+    weights: Archive,
+    backend: Backend,
+}
+
+impl PlainExecutor {
+    pub fn new(cfg: ModelConfig, weights: Archive, backend: Backend) -> PlainExecutor {
+        PlainExecutor { cfg, weights, backend }
+    }
+
+    /// Forward a batch with exact ReLU; returns logits [batch, classes].
+    pub fn forward(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let mut exact = |_i: usize, _g: usize, v: &mut [f32]| {
+            for e in v.iter_mut() {
+                if *e < 0.0 {
+                    *e = 0.0;
+                }
+            }
+        };
+        self.forward_with(x, batch, &mut exact)
+    }
+
+    /// Forward with a custom ReLU hook.
+    pub fn forward_with(&self, x: &[f32], batch: usize, relu: ReluHook) -> Result<Vec<f32>> {
+        let outs = self.forward_from(0, &[(0, x.to_vec())], batch, relu)?;
+        Ok(outs)
+    }
+
+    /// Forward starting at `start_node`, given the activations of all nodes
+    /// with index < start_node that later nodes reference (checkpointing
+    /// support for the DFS search; see search.rs).
+    ///
+    /// `seeds` maps node index -> activation buffer.
+    pub fn forward_from(
+        &self,
+        start_node: usize,
+        seeds: &[(usize, Vec<f32>)],
+        batch: usize,
+        relu: ReluHook,
+    ) -> Result<Vec<f32>> {
+        let shapes = self.cfg.shapes();
+        let n_nodes = self.cfg.nodes.len();
+        let mut acts: Vec<Option<Vec<f32>>> = vec![None; n_nodes];
+        for (idx, buf) in seeds {
+            acts[*idx] = Some(buf.clone());
+        }
+        for i in start_node..n_nodes {
+            if acts[i].is_some() {
+                continue; // seeded (checkpointed) node
+            }
+            let node = &self.cfg.nodes[i];
+            let out = match node {
+                Op::Input => {
+                    if acts[0].is_none() {
+                        return Err(Error::Model("input activation not seeded".into()));
+                    }
+                    continue;
+                }
+                Op::Conv { src, out_ch, k, stride, pad } => {
+                    let xin = acts[*src]
+                        .as_ref()
+                        .ok_or_else(|| Error::Model(format!("node {i}: missing src")))?;
+                    let in_shape = &shapes[*src];
+                    self.conv(i, xin, batch, in_shape, *out_ch, *k, *stride, *pad)?
+                }
+                Op::Relu { src, group } => {
+                    let mut v = acts[*src]
+                        .as_ref()
+                        .ok_or_else(|| Error::Model(format!("node {i}: missing src")))?
+                        .clone();
+                    relu(i, *group, &mut v);
+                    v
+                }
+                Op::Add { a, b } => {
+                    let va = acts[*a].as_ref().unwrap();
+                    let vb = acts[*b].as_ref().unwrap();
+                    va.iter().zip(vb).map(|(x, y)| x + y).collect()
+                }
+                Op::Gap { src } => {
+                    let v = acts[*src].as_ref().unwrap();
+                    let s = &shapes[*src];
+                    let (c, h, w) = (s[0], s[1], s[2]);
+                    let mut out = vec![0f32; batch * c];
+                    for b_i in 0..batch {
+                        for ci in 0..c {
+                            let base = (b_i * c + ci) * h * w;
+                            let sum: f32 = v[base..base + h * w].iter().sum();
+                            out[b_i * c + ci] = sum / (h * w) as f32;
+                        }
+                    }
+                    out
+                }
+                Op::Fc { src, out } => {
+                    let v = acts[*src].as_ref().unwrap();
+                    self.fc(i, v, batch, *out)?
+                }
+            };
+            acts[i] = Some(out);
+        }
+        acts[n_nodes - 1]
+            .take()
+            .ok_or_else(|| Error::Model("no output".into()))
+    }
+
+    /// Run nodes 0..boundary and return the activation seeds that a
+    /// `forward_from(boundary, seeds, ...)` call needs: every computed act
+    /// with index < boundary referenced by some node >= boundary.
+    /// (DFS checkpointing — search.rs re-evaluates only the suffix.)
+    pub fn prefix_acts(
+        &self,
+        x: &[f32],
+        batch: usize,
+        boundary: usize,
+        relu: ReluHook,
+    ) -> Result<Vec<(usize, Vec<f32>)>> {
+        let shapes = self.cfg.shapes();
+        let n_nodes = self.cfg.nodes.len();
+        if boundary == 0 {
+            return Ok(vec![(0, x.to_vec())]);
+        }
+        let mut acts: Vec<Option<Vec<f32>>> = vec![None; n_nodes];
+        acts[0] = Some(x.to_vec());
+        for i in 1..boundary {
+            let node = &self.cfg.nodes[i];
+            let out = match node {
+                Op::Input => continue,
+                Op::Conv { src, out_ch, k, stride, pad } => {
+                    let xin = acts[*src].as_ref().ok_or_else(|| {
+                        Error::Model(format!("prefix node {i}: missing src"))
+                    })?;
+                    self.conv(i, xin, batch, &shapes[*src], *out_ch, *k, *stride, *pad)?
+                }
+                Op::Relu { src, group } => {
+                    let mut v = acts[*src].as_ref().unwrap().clone();
+                    relu(i, *group, &mut v);
+                    v
+                }
+                Op::Add { a, b } => {
+                    let va = acts[*a].as_ref().unwrap();
+                    let vb = acts[*b].as_ref().unwrap();
+                    va.iter().zip(vb).map(|(x, y)| x + y).collect()
+                }
+                Op::Gap { src } => {
+                    let v = acts[*src].as_ref().unwrap();
+                    let s = &shapes[*src];
+                    let (c, h, w) = (s[0], s[1], s[2]);
+                    let mut out = vec![0f32; batch * c];
+                    for b_i in 0..batch {
+                        for ci in 0..c {
+                            let base = (b_i * c + ci) * h * w;
+                            out[b_i * c + ci] =
+                                v[base..base + h * w].iter().sum::<f32>() / (h * w) as f32;
+                        }
+                    }
+                    out
+                }
+                Op::Fc { src, out } => {
+                    let v = acts[*src].as_ref().unwrap();
+                    self.fc(i, v, batch, *out)?
+                }
+            };
+            acts[i] = Some(out);
+        }
+        // Keep only acts referenced at or after the boundary.
+        let mut needed = vec![false; n_nodes];
+        for i in boundary..n_nodes {
+            match &self.cfg.nodes[i] {
+                Op::Conv { src, .. }
+                | Op::Relu { src, .. }
+                | Op::Gap { src }
+                | Op::Fc { src, .. } => needed[*src] = true,
+                Op::Add { a, b } => {
+                    needed[*a] = true;
+                    needed[*b] = true;
+                }
+                Op::Input => {}
+            }
+        }
+        let mut seeds = Vec::new();
+        for i in 0..boundary {
+            if needed[i] {
+                if let Some(v) = acts[i].take() {
+                    seeds.push((i, v));
+                }
+            }
+        }
+        Ok(seeds)
+    }
+
+    // ------------------------------------------------------------------
+    // Linear ops.
+    // ------------------------------------------------------------------
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv(
+        &self,
+        node: usize,
+        x: &[f32],
+        batch: usize,
+        in_shape: &[usize],
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Result<Vec<f32>> {
+        let w = self.weights.get(&format!("w{node}"))?.as_f32()?;
+        let b = self.weights.get(&format!("b{node}"))?.as_f32()?;
+        match &self.backend {
+            Backend::Naive => Ok(conv_naive(
+                x, batch, in_shape[0], in_shape[1], in_shape[2], w, b, out_ch, k, stride, pad,
+            )),
+            Backend::Xla { rt, artifacts, artifact_batch, which } => {
+                let layer = artifacts
+                    .layers
+                    .get(&node)
+                    .ok_or_else(|| Error::Model(format!("no artifact for node {node}")))?;
+                let rel = match which {
+                    WhichPlain::Plain => &layer.plain,
+                    WhichPlain::Search => &layer.search,
+                };
+                let ab = *artifact_batch;
+                let per = in_shape.iter().product::<usize>();
+                let out_per = layer.out_shape.iter().product::<usize>();
+                let mut out = Vec::with_capacity(batch * out_per);
+                let mut start = 0usize;
+                while start < batch {
+                    let chunk = (batch - start).min(ab);
+                    let mut xpad = vec![0f32; ab * per];
+                    xpad[..chunk * per]
+                        .copy_from_slice(&x[start * per..(start + chunk) * per]);
+                    let xshape = [ab, in_shape[0], in_shape[1], in_shape[2]];
+                    let results = rt.run_f32(
+                        rel,
+                        &[
+                            (&xpad, &xshape[..]),
+                            (w, &layer.w_shape[..]),
+                            (b, &[layer.w_shape[0]][..]),
+                        ],
+                    )?;
+                    out.extend_from_slice(&results[0].0[..chunk * out_per]);
+                    start += chunk;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    fn fc(&self, node: usize, x: &[f32], batch: usize, out_dim: usize) -> Result<Vec<f32>> {
+        let w = self.weights.get(&format!("w{node}"))?.as_f32()?;
+        let b = self.weights.get(&format!("b{node}"))?.as_f32()?;
+        let in_dim = x.len() / batch;
+        match &self.backend {
+            Backend::Naive => {
+                let mut out = vec![0f32; batch * out_dim];
+                for bi in 0..batch {
+                    for o in 0..out_dim {
+                        let mut acc = b[o];
+                        for i in 0..in_dim {
+                            acc += x[bi * in_dim + i] * w[i * out_dim + o];
+                        }
+                        out[bi * out_dim + o] = acc;
+                    }
+                }
+                Ok(out)
+            }
+            Backend::Xla { rt, artifacts, artifact_batch, which } => {
+                let layer = artifacts
+                    .layers
+                    .get(&node)
+                    .ok_or_else(|| Error::Model(format!("no artifact for node {node}")))?;
+                let rel = match which {
+                    WhichPlain::Plain => &layer.plain,
+                    WhichPlain::Search => &layer.search,
+                };
+                let ab = *artifact_batch;
+                let mut out = Vec::with_capacity(batch * out_dim);
+                let mut start = 0usize;
+                while start < batch {
+                    let chunk = (batch - start).min(ab);
+                    let mut xpad = vec![0f32; ab * in_dim];
+                    xpad[..chunk * in_dim]
+                        .copy_from_slice(&x[start * in_dim..(start + chunk) * in_dim]);
+                    let results = rt.run_f32(
+                        rel,
+                        &[
+                            (&xpad, &[ab, in_dim][..]),
+                            (w, &[in_dim, out_dim][..]),
+                            (b, &[out_dim][..]),
+                        ],
+                    )?;
+                    out.extend_from_slice(&results[0].0[..chunk * out_dim]);
+                    start += chunk;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Argmax per row (classification decision).
+    pub fn argmax(logits: &[f32], classes: usize) -> Vec<usize> {
+        logits
+            .chunks(classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+/// Naive NCHW convolution + bias (reference implementation).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_naive(
+    x: &[f32],
+    batch: usize,
+    cin: usize,
+    h: usize,
+    w: usize,
+    weight: &[f32],
+    bias: &[f32],
+    cout: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Vec<f32> {
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    let mut out = vec![0f32; batch * cout * ho * wo];
+    for b in 0..batch {
+        for oc in 0..cout {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc = bias[oc];
+                    for ic in 0..cin {
+                        for ky in 0..k {
+                            let iy = oy * stride + ky;
+                            if iy < pad || iy - pad >= h {
+                                continue;
+                            }
+                            for kx in 0..k {
+                                let ix = ox * stride + kx;
+                                if ix < pad || ix - pad >= w {
+                                    continue;
+                                }
+                                let xi = ((b * cin + ic) * h + (iy - pad)) * w + (ix - pad);
+                                let wi = ((oc * cin + ic) * k + ky) * k + kx;
+                                acc += x[xi] * weight[wi];
+                            }
+                        }
+                    }
+                    out[((b * cout + oc) * ho + oy) * wo + ox] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_naive_identity_kernel() {
+        // 1x1 conv with identity weight = passthrough + bias.
+        let x: Vec<f32> = (0..8).map(|v| v as f32).collect(); // [1,2,2,2]
+        let w = vec![1.0, 0.0, 0.0, 1.0]; // [2,2,1,1] identity across channels
+        let b = vec![0.5, -0.5];
+        let y = conv_naive(&x, 1, 2, 2, 2, &w, &b, 2, 1, 1, 0);
+        assert_eq!(y[0], 0.5);
+        assert_eq!(y[4], 3.5);
+    }
+
+    #[test]
+    fn conv_naive_padding_and_stride() {
+        // 3x3 sum kernel over a 2x2 input with pad 1, stride 2 -> 1x1 out? no:
+        // ho = (2+2-3)/2+1 = 1... choose stride 1: ho=2.
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // [1,1,2,2]
+        let w = vec![1.0; 9];
+        let b = vec![0.0];
+        let y = conv_naive(&x, 1, 1, 2, 2, &w, &b, 1, 3, 1, 1);
+        // Each output = sum of in-bounds neighbors; top-left sees 1+2+3+4=10
+        assert_eq!(y, vec![10.0, 10.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let logits = vec![0.1, 0.9, 0.0, 2.0, -1.0, 1.0];
+        assert_eq!(PlainExecutor::argmax(&logits, 3), vec![1, 0]);
+    }
+}

@@ -1,0 +1,281 @@
+//! Share-domain model executor: one party's view of the private inference.
+//!
+//! Linear layers run **locally** on this party's arithmetic shares against
+//! the public quantized weights (shared-model setting, like the paper's
+//! evaluation) through the AOT `share_*` HLO artifacts (Layer-2 graphs
+//! calling the Layer-1 Pallas ring matmul). Non-linear layers go through
+//! the GMW engine: ReLU per the active [`PlanSet`], truncation and public
+//! scaling locally.
+//!
+//! Fixed-point discipline (f = frac_bits):
+//!   activations/weights at scale 2^f → conv/fc product at 2^(2f) →
+//!   add bias (encoded at 2^(2f)) → truncate by f → back to 2^f.
+//!   GAP: sum (scale f) → × encode(1/hw) (scale 2f) → truncate.
+//!
+//! The executor also records a per-op timing breakdown so Fig 1/10's
+//! {linear, ReLU-compute, ReLU-comm} split can be regenerated.
+
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::gmw::kernels::KernelBackend;
+use crate::gmw::GmwParty;
+use crate::hummingbird::PlanSet;
+use crate::model::graph::{ModelConfig, Op};
+use crate::model::weights::{conv_weight_to_mat, quantize, Archive};
+use crate::net::Transport;
+use crate::ring::FixedPoint;
+use crate::runtime::{registry::ModelArtifacts, Runtime};
+use crate::tensor::TensorU64;
+
+/// Wall-clock breakdown of one forward pass (seconds).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ExecBreakdown {
+    /// Linear layers (conv/fc artifacts + truncation + bias).
+    pub linear_s: f64,
+    /// ReLU protocol time, total (local compute + wire wait).
+    pub relu_s: f64,
+    /// Everything else (pool, add, reshape).
+    pub other_s: f64,
+}
+
+impl ExecBreakdown {
+    pub fn total(&self) -> f64 {
+        self.linear_s + self.relu_s + self.other_s
+    }
+    pub fn add(&mut self, other: &ExecBreakdown) {
+        self.linear_s += other.linear_s;
+        self.relu_s += other.relu_s;
+        self.other_s += other.other_s;
+    }
+}
+
+/// Prepared (quantized) weights for the share executor.
+pub struct ShareWeights {
+    /// Per conv/fc node: im2col weight matrix on the ring.
+    wmats: std::collections::BTreeMap<usize, TensorU64>,
+    /// Per conv/fc node: bias at scale 2^(2f).
+    biases: std::collections::BTreeMap<usize, Vec<u64>>,
+}
+
+impl ShareWeights {
+    /// Quantize an f32 archive for `cfg`.
+    pub fn prepare(cfg: &ModelConfig, weights: &Archive) -> Result<ShareWeights> {
+        let fx = FixedPoint::new(cfg.frac_bits);
+        let fx2 = FixedPoint::new(2 * cfg.frac_bits);
+        let shapes = cfg.shapes();
+        let mut wmats = std::collections::BTreeMap::new();
+        let mut biases = std::collections::BTreeMap::new();
+        for (i, node) in cfg.nodes.iter().enumerate() {
+            match node {
+                Op::Conv { src, out_ch, k, .. } => {
+                    let cin = shapes[*src][0];
+                    let w = weights.get(&format!("w{i}"))?.as_f32()?;
+                    let mat = conv_weight_to_mat(w, *out_ch, cin, *k);
+                    let q = quantize(&mat, fx);
+                    wmats.insert(
+                        i,
+                        TensorU64::new(vec![cin * k * k, *out_ch], q)?,
+                    );
+                    let b = weights.get(&format!("b{i}"))?.as_f32()?;
+                    biases.insert(i, b.iter().map(|v| fx2.encode(*v as f64)).collect());
+                }
+                Op::Fc { out, .. } => {
+                    let w = weights.get(&format!("w{i}"))?.as_f32()?;
+                    let in_dim = w.len() / out;
+                    wmats.insert(i, TensorU64::new(vec![in_dim, *out], quantize(w, fx))?);
+                    let b = weights.get(&format!("b{i}"))?.as_f32()?;
+                    biases.insert(i, b.iter().map(|v| fx2.encode(*v as f64)).collect());
+                }
+                _ => {}
+            }
+        }
+        Ok(ShareWeights { wmats, biases })
+    }
+}
+
+/// Which linear-layer artifact variant to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinearBackend {
+    /// The Layer-1 Pallas kernel lowering (validated TPU-shaped path;
+    /// slow under CPU interpret lowering).
+    Pallas,
+    /// The fused int64-dot lowering of the same ring math (CPU hot path;
+    /// see EXPERIMENTS.md §Perf L2). Falls back to Pallas when the fast
+    /// artifact is absent.
+    Fast,
+}
+
+/// The share executor (per party, stateless across requests).
+pub struct ShareExecutor {
+    pub cfg: ModelConfig,
+    pub artifacts: ModelArtifacts,
+    rt: Runtime,
+    weights: ShareWeights,
+    pub linear: LinearBackend,
+}
+
+impl ShareExecutor {
+    pub fn new(
+        cfg: ModelConfig,
+        artifacts: ModelArtifacts,
+        rt: Runtime,
+        weights: ShareWeights,
+    ) -> ShareExecutor {
+        ShareExecutor { cfg, artifacts, rt, weights, linear: LinearBackend::Fast }
+    }
+
+    pub fn with_linear(mut self, linear: LinearBackend) -> Self {
+        self.linear = linear;
+        self
+    }
+
+    /// Full private forward pass on this party's input share
+    /// `x` ([batch, C, H, W] flattened). Returns (logit shares, breakdown).
+    pub fn forward<T: Transport, K: KernelBackend>(
+        &self,
+        party: &mut GmwParty<T, K>,
+        x: TensorU64,
+        plans: &PlanSet,
+    ) -> Result<(TensorU64, ExecBreakdown)> {
+        let batch = self.artifacts.batch;
+        let f = self.cfg.frac_bits;
+        let shapes = self.cfg.shapes();
+        let n_nodes = self.cfg.nodes.len();
+        let mut acts: Vec<Option<TensorU64>> = vec![None; n_nodes];
+        let mut bd = ExecBreakdown::default();
+        if x.shape.first() != Some(&batch) {
+            return Err(Error::shape(format!(
+                "input batch {:?} != artifact batch {batch}",
+                x.shape
+            )));
+        }
+        acts[0] = Some(x);
+        for i in 1..n_nodes {
+            let node = &self.cfg.nodes[i];
+            let t0 = Instant::now();
+            let out = match node {
+                Op::Input => unreachable!("input is node 0"),
+                Op::Conv { src, .. } | Op::Fc { src, .. } => {
+                    let layer = self
+                        .artifacts
+                        .layers
+                        .get(&i)
+                        .ok_or_else(|| Error::Model(format!("no artifact for node {i}")))?;
+                    // Clone: residual graphs reuse a source for both the
+                    // main path and the skip path.
+                    let xin = acts[*src].clone().ok_or_else(|| miss(i))?;
+                    let xin = if matches!(node, Op::Fc { .. }) {
+                        // Flatten for fc.
+                        let flat = xin.len() / batch;
+                        xin.reshape(vec![batch, flat])?
+                    } else {
+                        xin
+                    };
+                    let wmat = &self.weights.wmats[&i];
+                    let artifact = match (self.linear, &layer.share_fast) {
+                        (LinearBackend::Fast, Some(fast)) => fast.as_str(),
+                        _ => layer.share.as_str(),
+                    };
+                    let y = self
+                        .rt
+                        .run_u64(artifact, &[&xin, wmat])?
+                        .into_iter()
+                        .next()
+                        .ok_or_else(|| Error::runtime("artifact returned no output"))?;
+                    // Bias (public, leader-only) at scale 2f, then truncate.
+                    let bias = &self.weights.biases[&i];
+                    let mut y = y;
+                    if party.is_leader() {
+                        add_bias(&mut y, bias, batch)?;
+                    }
+                    let data = party.trunc(&y.data, f);
+                    bd.linear_s += t0.elapsed().as_secs_f64();
+                    TensorU64 { shape: y.shape, data }
+                }
+                Op::Relu { src, group } => {
+                    let xin = acts[*src].clone().ok_or_else(|| miss(i))?;
+                    let plan = plans.plan_for(*group);
+                    let data = party.relu(&xin.data, plan)?;
+                    bd.relu_s += t0.elapsed().as_secs_f64();
+                    TensorU64 { shape: xin.shape, data }
+                }
+                Op::Add { a, b } => {
+                    let va = acts[*a].clone().ok_or_else(|| miss(i))?;
+                    let vb = acts[*b].as_ref().ok_or_else(|| miss(i))?;
+                    let out = va.wrapping_add(vb)?;
+                    bd.other_s += t0.elapsed().as_secs_f64();
+                    out
+                }
+                Op::Gap { src } => {
+                    let v = acts[*src].as_ref().ok_or_else(|| miss(i))?;
+                    let s = &shapes[*src];
+                    let (c, h, w) = (s[0], s[1], s[2]);
+                    let mut sums = vec![0u64; batch * c];
+                    for bi in 0..batch {
+                        for ci in 0..c {
+                            let base = (bi * c + ci) * h * w;
+                            let mut acc = 0u64;
+                            for e in &v.data[base..base + h * w] {
+                                acc = acc.wrapping_add(*e);
+                            }
+                            sums[bi * c + ci] = acc;
+                        }
+                    }
+                    // × encode(1/hw) (scale f) → 2f → truncate back to f.
+                    let fx = FixedPoint::new(f);
+                    let inv = fx.encode(1.0 / (h * w) as f64);
+                    for e in sums.iter_mut() {
+                        *e = e.wrapping_mul(inv);
+                    }
+                    let data = party.trunc(&sums, f);
+                    bd.other_s += t0.elapsed().as_secs_f64();
+                    TensorU64::new(vec![batch, c], data)?
+                }
+            };
+            acts[i] = Some(out);
+        }
+        let out = acts[n_nodes - 1].take().ok_or_else(|| Error::Model("no output".into()))?;
+        Ok((out, bd))
+    }
+}
+
+fn miss(i: usize) -> Error {
+    Error::Model(format!("node {i}: missing source activation"))
+}
+
+/// Add a public per-channel bias to a conv output [B,C,H,W] or fc [B,C].
+fn add_bias(y: &mut TensorU64, bias: &[u64], batch: usize) -> Result<()> {
+    let per = y.len() / batch;
+    let c = bias.len();
+    let spatial = per / c;
+    if c * spatial != per {
+        return Err(Error::shape("bias does not divide output"));
+    }
+    for bi in 0..batch {
+        for ci in 0..c {
+            let base = (bi * c + ci) * spatial;
+            for e in &mut y.data[base..base + spatial] {
+                *e = e.wrapping_add(bias[ci]);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_broadcast_layout() {
+        // [B=1, C=2, 2x1 spatial]
+        let mut y = TensorU64::new(vec![1, 2, 2, 1], vec![0, 0, 0, 0]).unwrap();
+        add_bias(&mut y, &[5, 9], 1).unwrap();
+        assert_eq!(y.data, vec![5, 5, 9, 9]);
+        // fc case: spatial = 1
+        let mut y = TensorU64::new(vec![2, 2], vec![0; 4]).unwrap();
+        add_bias(&mut y, &[1, 2], 2).unwrap();
+        assert_eq!(y.data, vec![1, 2, 1, 2]);
+    }
+}

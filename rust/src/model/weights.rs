@@ -1,0 +1,205 @@
+//! Tensor-archive reader: the Rust half of `python/compile/dataio.py`.
+//!
+//! `<prefix>.json` (manifest) + `<prefix>.bin` (raw LE data). Weights are
+//! stored f32; the share executor quantizes them to the fixed-point ring.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::ring::FixedPoint;
+use crate::util::json;
+
+/// One named tensor: f32 or i32 payload.
+#[derive(Debug, Clone)]
+pub enum ArchiveTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl ArchiveTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            ArchiveTensor::F32 { shape, .. } | ArchiveTensor::I32 { shape, .. } => shape,
+        }
+    }
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            ArchiveTensor::F32 { data, .. } => Ok(data),
+            _ => Err(Error::Model("expected f32 tensor".into())),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            ArchiveTensor::I32 { data, .. } => Ok(data),
+            _ => Err(Error::Model("expected i32 tensor".into())),
+        }
+    }
+}
+
+/// A loaded archive (weights file or dataset file).
+#[derive(Debug, Clone, Default)]
+pub struct Archive {
+    pub tensors: BTreeMap<String, ArchiveTensor>,
+}
+
+impl Archive {
+    /// Load `<prefix>.json` + `<prefix>.bin`.
+    pub fn load(prefix: impl AsRef<Path>) -> Result<Archive> {
+        let prefix = prefix.as_ref();
+        let manifest = json::parse_file(prefix.with_extension("json"))?;
+        let raw = std::fs::read(prefix.with_extension("bin")).map_err(|e| {
+            Error::Model(format!("reading {}.bin: {e}", prefix.display()))
+        })?;
+        let mut tensors = BTreeMap::new();
+        for t in manifest.get("tensors")?.as_arr()? {
+            let name = t.get_str("name")?.to_string();
+            let shape: Vec<usize> = t
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?;
+            let count = t.get_usize("count")?;
+            let offset = t.get_usize("offset")?;
+            let dtype = t.get_str("dtype")?;
+            let end = offset + count * 4;
+            if end > raw.len() {
+                return Err(Error::Model(format!("tensor {name} overruns archive")));
+            }
+            let bytes = &raw[offset..end];
+            let tensor = match dtype {
+                "f32" => ArchiveTensor::F32 {
+                    shape,
+                    data: bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                },
+                "i32" => ArchiveTensor::I32 {
+                    shape,
+                    data: bytes
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                },
+                other => return Err(Error::Model(format!("unknown dtype {other}"))),
+            };
+            tensors.insert(name, tensor);
+        }
+        Ok(Archive { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArchiveTensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| Error::Model(format!("tensor '{name}' not in archive")))
+    }
+
+    /// Write an archive (used by tests and by the search engine's plan
+    /// export of quantized weights).
+    pub fn save(&self, prefix: impl AsRef<Path>) -> Result<()> {
+        use crate::util::json::Json;
+        let prefix = prefix.as_ref();
+        if let Some(dir) = prefix.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut bin: Vec<u8> = Vec::new();
+        let mut entries = Vec::new();
+        for (name, t) in &self.tensors {
+            let offset = bin.len();
+            let (dtype, count) = match t {
+                ArchiveTensor::F32 { data, .. } => {
+                    for v in data {
+                        bin.extend_from_slice(&v.to_le_bytes());
+                    }
+                    ("f32", data.len())
+                }
+                ArchiveTensor::I32 { data, .. } => {
+                    for v in data {
+                        bin.extend_from_slice(&v.to_le_bytes());
+                    }
+                    ("i32", data.len())
+                }
+            };
+            entries.push(Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                ("shape", Json::arr(t.shape().iter().map(|d| Json::Int(*d as i64)))),
+                ("dtype", Json::str(dtype)),
+                ("offset", Json::Int(offset as i64)),
+                ("count", Json::Int(count as i64)),
+            ]));
+        }
+        let manifest = Json::obj(vec![("tensors", Json::Arr(entries))]);
+        std::fs::write(prefix.with_extension("json"), manifest.to_string_pretty())?;
+        std::fs::write(prefix.with_extension("bin"), bin)?;
+        Ok(())
+    }
+}
+
+/// Quantize an f32 weight tensor to ring elements (fixed point).
+pub fn quantize(data: &[f32], fx: FixedPoint) -> Vec<u64> {
+    data.iter().map(|v| fx.encode(*v as f64)).collect()
+}
+
+/// Reshape an OIHW conv weight into the im2col matrix [Cin*k*k, Cout]
+/// expected by the share_conv artifact (row order (c, ky, kx)).
+pub fn conv_weight_to_mat(w: &[f32], cout: usize, cin: usize, k: usize) -> Vec<f32> {
+    let kdim = cin * k * k;
+    let mut out = vec![0f32; kdim * cout];
+    for o in 0..cout {
+        for c in 0..cin {
+            for ky in 0..k {
+                for kx in 0..k {
+                    let src = ((o * cin + c) * k + ky) * k + kx;
+                    let row = (c * k + ky) * k + kx;
+                    out[row * cout + o] = w[src];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_archive() {
+        let dir = std::env::temp_dir().join(format!("hb_arch_{}", std::process::id()));
+        let mut a = Archive::default();
+        a.tensors.insert(
+            "w".into(),
+            ArchiveTensor::F32 { shape: vec![2, 3], data: vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25] },
+        );
+        a.tensors.insert(
+            "y".into(),
+            ArchiveTensor::I32 { shape: vec![3], data: vec![1, -2, 7] },
+        );
+        let prefix = dir.join("t");
+        a.save(&prefix).unwrap();
+        let b = Archive::load(&prefix).unwrap();
+        assert_eq!(b.get("w").unwrap().as_f32().unwrap(), a.get("w").unwrap().as_f32().unwrap());
+        assert_eq!(b.get("y").unwrap().as_i32().unwrap(), &[1, -2, 7]);
+        assert!(b.get("zz").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn conv_weight_layout_matches_im2col_order() {
+        // cout=1, cin=2, k=2: weight w[o=0][c][ky][kx] = c*100 + ky*10 + kx
+        let w: Vec<f32> = vec![0., 1., 10., 11., 100., 101., 110., 111.];
+        let mat = conv_weight_to_mat(&w, 1, 2, 2);
+        // rows ordered (c, ky, kx)
+        assert_eq!(mat, vec![0., 1., 10., 11., 100., 101., 110., 111.]);
+    }
+
+    #[test]
+    fn quantize_encodes_fixed_point() {
+        let fx = FixedPoint::new(12);
+        let q = quantize(&[1.0, -0.5], fx);
+        assert_eq!(q[0], 4096);
+        assert_eq!(q[1] as i64, -2048);
+    }
+}

@@ -1,0 +1,162 @@
+//! Communication accounting (paper §2.3, Figs 3 & 11).
+//!
+//! Every protocol message is tagged with a [`Phase`] so the figure harness
+//! can regenerate the paper's communication breakdowns exactly: bytes per
+//! phase (Fig 3), total bytes and round counts per configuration (Fig 11),
+//! and the analytic latency projection across network profiles (Fig 9).
+
+use std::sync::Mutex;
+
+/// Which part of the protocol a message belongs to. Matches the paper's
+/// Fig 3 categories plus bookkeeping phases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// AND gates of the Kogge–Stone prefix stages during A2B ("Circuit").
+    Circuit,
+    /// AND gates inside A2B not part of the prefix stages ("Others").
+    OtherAnd,
+    /// The final share × DReLU multiplication ("Mult").
+    Mult,
+    /// The 1-bit binary→arithmetic conversion ("B2A").
+    B2A,
+    /// Input/output share movement (client ↔ parties).
+    Data,
+    /// Session setup (seed exchange etc.).
+    Setup,
+}
+
+pub const ALL_PHASES: [Phase; 6] =
+    [Phase::Circuit, Phase::OtherAnd, Phase::Mult, Phase::B2A, Phase::Data, Phase::Setup];
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Circuit => "Circuit",
+            Phase::OtherAnd => "Others",
+            Phase::Mult => "Mult",
+            Phase::B2A => "B2A",
+            Phase::Data => "Data",
+            Phase::Setup => "Setup",
+        }
+    }
+    fn index(&self) -> usize {
+        match self {
+            Phase::Circuit => 0,
+            Phase::OtherAnd => 1,
+            Phase::Mult => 2,
+            Phase::B2A => 3,
+            Phase::Data => 4,
+            Phase::Setup => 5,
+        }
+    }
+}
+
+/// One communication round: all parties exchange in parallel; `bytes_sent`
+/// is the number of bytes *this party* sent in the round (symmetric
+/// protocols send the same amount everywhere, which we assert in tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoundRecord {
+    pub phase: Phase,
+    pub bytes_sent: u64,
+}
+
+/// Per-party communication trace. Collected by the transport; read by the
+/// metrics/figure layer. Interior mutability so the transport can log from
+/// `&self` while the protocol holds `&mut` elsewhere.
+#[derive(Debug, Default)]
+pub struct CommTrace {
+    rounds: Mutex<Vec<RoundRecord>>,
+    /// Wall time spent blocked inside exchange_all (nanoseconds). On the
+    /// in-process hub this is thread-sync overhead; on TCP it is real wire
+    /// time. Used to split measured wall-clock into compute vs. wait.
+    wait_nanos: std::sync::atomic::AtomicU64,
+}
+
+impl CommTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, phase: Phase, bytes_sent: u64) {
+        self.rounds.lock().unwrap().push(RoundRecord { phase, bytes_sent });
+    }
+
+    /// Accumulate blocked-on-the-wire time.
+    pub fn record_wait(&self, dur: std::time::Duration) {
+        self.wait_nanos
+            .fetch_add(dur.as_nanos() as u64, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Total time spent blocked in exchanges, in seconds.
+    pub fn wait_seconds(&self) -> f64 {
+        self.wait_nanos.load(std::sync::atomic::Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Snapshot of all rounds so far.
+    pub fn rounds(&self) -> Vec<RoundRecord> {
+        self.rounds.lock().unwrap().clone()
+    }
+
+    /// Clear the trace (e.g. to exclude setup from a measurement window).
+    pub fn reset(&self) {
+        self.rounds.lock().unwrap().clear();
+        self.wait_nanos.store(0, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Aggregate: total bytes sent by this party.
+    pub fn total_bytes(&self) -> u64 {
+        self.rounds.lock().unwrap().iter().map(|r| r.bytes_sent).sum()
+    }
+
+    /// Aggregate: number of rounds.
+    pub fn total_rounds(&self) -> u64 {
+        self.rounds.lock().unwrap().len() as u64
+    }
+
+    /// Bytes grouped per phase, in `ALL_PHASES` order.
+    pub fn bytes_by_phase(&self) -> [u64; 6] {
+        let mut out = [0u64; 6];
+        for r in self.rounds.lock().unwrap().iter() {
+            out[r.phase.index()] += r.bytes_sent;
+        }
+        out
+    }
+
+    /// Rounds grouped per phase, in `ALL_PHASES` order.
+    pub fn rounds_by_phase(&self) -> [u64; 6] {
+        let mut out = [0u64; 6];
+        for r in self.rounds.lock().unwrap().iter() {
+            out[r.phase.index()] += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let t = CommTrace::new();
+        t.record(Phase::Circuit, 100);
+        t.record(Phase::Circuit, 50);
+        t.record(Phase::Mult, 8);
+        assert_eq!(t.total_bytes(), 158);
+        assert_eq!(t.total_rounds(), 3);
+        let by = t.bytes_by_phase();
+        assert_eq!(by[Phase::Circuit.index()], 150);
+        assert_eq!(by[Phase::Mult.index()], 8);
+        assert_eq!(t.rounds_by_phase()[Phase::Circuit.index()], 2);
+        t.reset();
+        assert_eq!(t.total_rounds(), 0);
+    }
+
+    #[test]
+    fn phase_names_cover_fig3_categories() {
+        let names: Vec<&str> = ALL_PHASES.iter().map(|p| p.name()).collect();
+        for expect in ["Circuit", "Mult", "B2A", "Others"] {
+            assert!(names.contains(&expect), "{expect} missing");
+        }
+    }
+}

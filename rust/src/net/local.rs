@@ -1,0 +1,176 @@
+//! In-process transport: parties run on threads in one process and exchange
+//! buffers over `std::sync::mpsc` channels. This is the default testbed —
+//! it gives *exact* byte/round accounting with zero serialization noise,
+//! mirroring the paper's High-BW (single-node) setup; LAN/WAN numbers are
+//! projected from the recorded trace (see [`super::profile`]).
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use super::accounting::{CommTrace, Phase};
+use super::Transport;
+use crate::error::{Error, Result};
+
+/// Message envelope: (sender, sequence number, payload).
+type Msg = (usize, u64, Vec<u8>);
+
+/// One party's endpoint of the in-process hub.
+pub struct LocalTransport {
+    party: usize,
+    parties: usize,
+    /// senders[q] sends to party q (entry for self unused).
+    senders: Vec<Option<Sender<Msg>>>,
+    receiver: Receiver<Msg>,
+    /// Per-peer reorder buffer: messages that arrived early.
+    pending: Vec<Vec<(u64, Vec<u8>)>>,
+    /// Next expected sequence number per peer.
+    next_seq: Vec<u64>,
+    /// My send sequence number (same for all peers; one round = one seq).
+    seq: u64,
+    trace: Arc<CommTrace>,
+}
+
+/// Create a fully-connected hub of `parties` endpoints.
+pub fn hub(parties: usize) -> Vec<LocalTransport> {
+    assert!(parties >= 2);
+    let mut senders_for: Vec<Vec<Option<Sender<Msg>>>> = (0..parties)
+        .map(|_| (0..parties).map(|_| None).collect::<Vec<_>>())
+        .collect();
+    let mut receivers: Vec<Option<Receiver<Msg>>> = (0..parties).map(|_| None).collect();
+    for (p, receiver) in receivers.iter_mut().enumerate() {
+        let (tx, rx) = std::sync::mpsc::channel::<Msg>();
+        *receiver = Some(rx);
+        for (q, senders) in senders_for.iter_mut().enumerate() {
+            if q != p {
+                senders[p] = Some(tx.clone());
+            }
+        }
+    }
+    senders_for
+        .into_iter()
+        .zip(receivers)
+        .enumerate()
+        .map(|(p, (senders, receiver))| LocalTransport {
+            party: p,
+            parties,
+            senders,
+            receiver: receiver.unwrap(),
+            pending: (0..parties).map(|_| Vec::new()).collect(),
+            next_seq: vec![0; parties],
+            seq: 0,
+            trace: Arc::new(CommTrace::new()),
+        })
+        .collect()
+}
+
+impl LocalTransport {
+    fn recv_from(&mut self, peer: usize, want_seq: u64) -> Result<Vec<u8>> {
+        // Check the reorder buffer first.
+        if let Some(pos) = self.pending[peer].iter().position(|(s, _)| *s == want_seq) {
+            return Ok(self.pending[peer].swap_remove(pos).1);
+        }
+        loop {
+            let (from, seq, payload) = self
+                .receiver
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .map_err(|e| Error::Transport(format!("party {} recv: {e}", self.party)))?;
+            if from == peer && seq == want_seq {
+                return Ok(payload);
+            }
+            self.pending[from].push((seq, payload));
+        }
+    }
+}
+
+impl Transport for LocalTransport {
+    fn party(&self) -> usize {
+        self.party
+    }
+    fn parties(&self) -> usize {
+        self.parties
+    }
+
+    fn exchange_all(&mut self, phase: Phase, data: &[u8]) -> Result<Vec<Vec<u8>>> {
+        let t0 = std::time::Instant::now();
+        let seq = self.seq;
+        self.seq += 1;
+        // Send to all peers first (non-blocking), then collect.
+        for q in 0..self.parties {
+            if q == self.party {
+                continue;
+            }
+            self.senders[q]
+                .as_ref()
+                .expect("hub wiring")
+                .send((self.party, seq, data.to_vec()))
+                .map_err(|_| Error::Transport(format!("party {q} hung up")))?;
+        }
+        let mut out: Vec<Vec<u8>> = vec![Vec::new(); self.parties];
+        for q in 0..self.parties {
+            if q == self.party {
+                out[q] = data.to_vec();
+            } else {
+                let want = self.next_seq[q];
+                out[q] = self.recv_from(q, want)?;
+                self.next_seq[q] = want + 1;
+            }
+        }
+        // One exchange = one round; bytes = what this party pushed to each
+        // peer (the per-link number — the projection model scales by the
+        // topology).
+        self.trace.record(phase, (data.len() * (self.parties - 1)) as u64);
+        self.trace.record_wait(t0.elapsed());
+        Ok(out)
+    }
+
+    fn trace(&self) -> Arc<CommTrace> {
+        Arc::clone(&self.trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_party_exchange() {
+        let mut hub = hub(2);
+        let mut t1 = hub.pop().unwrap();
+        let mut t0 = hub.pop().unwrap();
+        let h0 = std::thread::spawn(move || {
+            let got = t0.exchange_all(Phase::Circuit, b"from0").unwrap();
+            assert_eq!(got[1], b"from1");
+            assert_eq!(got[0], b"from0");
+            t0.trace().total_bytes()
+        });
+        let got = t1.exchange_all(Phase::Circuit, b"from1").unwrap();
+        assert_eq!(got[0], b"from0");
+        let b0 = h0.join().unwrap();
+        assert_eq!(b0, 5);
+        assert_eq!(t1.trace().total_rounds(), 1);
+    }
+
+    #[test]
+    fn three_party_many_rounds() {
+        let transports = hub(3);
+        let handles: Vec<_> = transports
+            .into_iter()
+            .map(|mut t| {
+                std::thread::spawn(move || {
+                    for round in 0..50u64 {
+                        let me = t.party();
+                        let msg = format!("r{round}p{me}");
+                        let got = t.exchange_all(Phase::Mult, msg.as_bytes()).unwrap();
+                        for (q, buf) in got.iter().enumerate() {
+                            assert_eq!(buf, format!("r{round}p{q}").as_bytes());
+                        }
+                    }
+                    t.trace().total_rounds()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 50);
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Party-to-party communication substrate.
+//!
+//! The GMW engine talks to an abstract [`Transport`]; two implementations
+//! exist: [`local::LocalTransport`] (in-process channels — used by tests,
+//! benches and the single-binary multi-party simulator) and
+//! [`tcp::TcpTransport`] (real sockets for multi-process deployments).
+//! Both feed the same [`accounting::CommTrace`], and simulated wall-clock
+//! for arbitrary networks is projected by [`profile`] using the paper's own
+//! methodology (measured bytes/rounds × analytic bandwidth/latency model).
+
+pub mod accounting;
+pub mod local;
+pub mod profile;
+pub mod tcp;
+
+use crate::error::Result;
+use accounting::{CommTrace, Phase};
+use std::sync::Arc;
+
+/// Abstract all-to-all exchange primitive for one party.
+///
+/// GMW only ever needs "every party sends a buffer to every other party and
+/// receives theirs" (openings of masked values). One `exchange_all` call is
+/// one communication **round**.
+pub trait Transport: Send {
+    /// This party's id in 0..parties.
+    fn party(&self) -> usize;
+    /// Total number of parties.
+    fn parties(&self) -> usize;
+
+    /// Send `data` to every other party; receive each other party's buffer.
+    /// Returns a vec indexed by party id (entry for `self.party()` is the
+    /// input `data` echoed back, so openings can simply fold over all).
+    fn exchange_all(&mut self, phase: Phase, data: &[u8]) -> Result<Vec<Vec<u8>>>;
+
+    /// The accounting trace for this party.
+    fn trace(&self) -> Arc<CommTrace>;
+}
+
+/// Helper: XOR-open a vector of packed binary share words.
+/// (Shared by engine code and tests.)
+pub fn fold_xor(bufs: &[Vec<u64>]) -> Vec<u64> {
+    let n = bufs[0].len();
+    let mut out = vec![0u64; n];
+    for b in bufs {
+        debug_assert_eq!(b.len(), n);
+        for (o, v) in out.iter_mut().zip(b) {
+            *o ^= *v;
+        }
+    }
+    out
+}
+
+/// Helper: additively open a vector of ring-element shares.
+pub fn fold_add(bufs: &[Vec<u64>]) -> Vec<u64> {
+    let n = bufs[0].len();
+    let mut out = vec![0u64; n];
+    for b in bufs {
+        debug_assert_eq!(b.len(), n);
+        for (o, v) in out.iter_mut().zip(b) {
+            *o = o.wrapping_add(*v);
+        }
+    }
+    out
+}
+
+/// Serialize a u64 slice little-endian (wire format helper).
+pub fn u64s_to_bytes(v: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 8);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Deserialize little-endian u64s.
+pub fn bytes_to_u64s(b: &[u8]) -> Vec<u64> {
+    b.chunks(8)
+        .map(|c| {
+            let mut buf = [0u8; 8];
+            buf[..c.len()].copy_from_slice(c);
+            u64::from_le_bytes(buf)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_bytes_roundtrip() {
+        let v = vec![0u64, 1, u64::MAX, 0x0102_0304_0506_0708];
+        assert_eq!(bytes_to_u64s(&u64s_to_bytes(&v)), v);
+    }
+
+    #[test]
+    fn folds() {
+        let a = vec![vec![1u64, 2], vec![3u64, 4]];
+        assert_eq!(fold_xor(&a), vec![2, 6]);
+        assert_eq!(fold_add(&a), vec![4, 6]);
+    }
+}

@@ -1,0 +1,172 @@
+//! Network & compute profiles + analytic latency projection (paper §5.1,
+//! Figs 7–10).
+//!
+//! The paper reports three network setups (High-BW ≈ NVLink 16 Tbps, LAN
+//! 10 Gbps, WAN 352 Mbps) and two GPUs (A100, V100). Its WAN row is itself
+//! an analytic projection: "we separately measured the communication time
+//! from the High-BW setup and scaled it according to the assumed bandwidth".
+//! We apply that same methodology uniformly: the protocol run yields an
+//! exact per-round byte trace ([`CommTrace`]) and a measured local compute
+//! time; a profile then prices the trace as
+//! `Σ_rounds (latency + bytes/bandwidth)` and scales compute.
+
+use super::accounting::CommTrace;
+use crate::util::json::Json;
+
+/// A network profile: per-round latency plus per-byte cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkProfile {
+    pub name: String,
+    /// One-way per-message latency in seconds (applied once per round).
+    pub latency_s: f64,
+    /// Link bandwidth in bits per second (per direction, full duplex).
+    pub bandwidth_bps: f64,
+}
+
+impl NetworkProfile {
+    pub fn new(name: &str, latency_s: f64, bandwidth_bps: f64) -> Self {
+        NetworkProfile { name: name.to_string(), latency_s, bandwidth_bps }
+    }
+
+    /// The paper's three setups (§5.1 / Fig 9).
+    pub fn high_bw() -> Self {
+        // Two GPUs on one node; paper cites up to 16 Tbps NVLink. Observed
+        // usage "did not exceed 20 Gbps"; latency is PCIe/NVLink-scale.
+        NetworkProfile::new("High-BW", 5e-6, 16e12)
+    }
+    pub fn lan() -> Self {
+        NetworkProfile::new("LAN", 50e-6, 10e9)
+    }
+    pub fn wan() -> Self {
+        // 352 Mbps per prior work [15] (Cheetah); WAN RTT ~40 ms -> one-way 20ms.
+        NetworkProfile::new("WAN", 20e-3, 352e6)
+    }
+
+    /// Time to push `bytes` through the link plus the round latency.
+    pub fn round_time(&self, bytes: u64) -> f64 {
+        self.latency_s + (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+
+    /// Price a whole trace: Σ_rounds (latency + bytes/bw).
+    pub fn comm_time(&self, trace: &CommTrace) -> f64 {
+        trace.rounds().iter().map(|r| self.round_time(r.bytes_sent)).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("latency_s", Json::Num(self.latency_s)),
+            ("bandwidth_bps", Json::Num(self.bandwidth_bps)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::error::Result<Self> {
+        Ok(NetworkProfile {
+            name: j.get_str("name")?.to_string(),
+            latency_s: j.get_f64("latency_s")?,
+            bandwidth_bps: j.get_f64("bandwidth_bps")?,
+        })
+    }
+}
+
+/// A compute profile: scales measured local compute time so the A100/V100
+/// contrast of Figs 7/8/10 can be reproduced on this CPU testbed. The scale
+/// is relative to an abstract "A100-class" device = 1.0.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComputeProfile {
+    pub name: String,
+    /// Multiplier on measured local (linear + protocol-local) compute time.
+    pub scale: f64,
+}
+
+impl ComputeProfile {
+    pub fn a100() -> Self {
+        ComputeProfile { name: "A100".into(), scale: 1.0 }
+    }
+    /// V100 ≈ 2.4× slower for the fp/int tensor work in this pipeline
+    /// (ratio of the paper's CrypTen baseline compute fractions across
+    /// Figs 7/8: compute goes from ~7% on A100 to ~22% on V100 at similar
+    /// totals).
+    pub fn v100() -> Self {
+        ComputeProfile { name: "V100".into(), scale: 2.4 }
+    }
+
+    pub fn from_json(j: &Json) -> crate::error::Result<Self> {
+        Ok(ComputeProfile { name: j.get_str("name")?.to_string(), scale: j.get_f64("scale")? })
+    }
+}
+
+/// End-to-end projection of one measured run onto a (network, compute)
+/// profile pair.
+#[derive(Debug, Clone)]
+pub struct Projection {
+    pub network: String,
+    pub compute: String,
+    pub comm_time_s: f64,
+    pub compute_time_s: f64,
+}
+
+impl Projection {
+    pub fn total_s(&self) -> f64 {
+        self.comm_time_s + self.compute_time_s
+    }
+}
+
+/// Project a run: `compute_time_s` is the *measured* local compute time of
+/// the protocol run (everything except waiting on the wire).
+pub fn project(
+    trace: &CommTrace,
+    compute_time_s: f64,
+    net: &NetworkProfile,
+    gpu: &ComputeProfile,
+) -> Projection {
+    Projection {
+        network: net.name.clone(),
+        compute: gpu.name.clone(),
+        comm_time_s: net.comm_time(trace),
+        compute_time_s: compute_time_s * gpu.scale,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::accounting::Phase;
+
+    #[test]
+    fn round_time_has_latency_floor() {
+        let lan = NetworkProfile::lan();
+        assert!(lan.round_time(0) == 50e-6);
+        // 10 Gbps: 125 MB/s per 0.1s -> 1.25e9 B/s
+        let t = lan.round_time(1_250_000);
+        assert!((t - (50e-6 + 1e-3)).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn wan_slower_than_lan_slower_than_highbw() {
+        let trace = CommTrace::new();
+        for _ in 0..100 {
+            trace.record(Phase::Circuit, 10_000);
+        }
+        let hb = NetworkProfile::high_bw().comm_time(&trace);
+        let lan = NetworkProfile::lan().comm_time(&trace);
+        let wan = NetworkProfile::wan().comm_time(&trace);
+        assert!(hb < lan && lan < wan, "{hb} {lan} {wan}");
+    }
+
+    #[test]
+    fn projection_combines_compute_and_comm() {
+        let trace = CommTrace::new();
+        trace.record(Phase::Mult, 1000);
+        let p = project(&trace, 2.0, &NetworkProfile::lan(), &ComputeProfile::v100());
+        assert!(p.compute_time_s == 4.8);
+        assert!(p.total_s() > 4.8);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let lan = NetworkProfile::lan();
+        let back = NetworkProfile::from_json(&lan.to_json()).unwrap();
+        assert_eq!(lan, back);
+    }
+}

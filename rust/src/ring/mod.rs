@@ -1,0 +1,237 @@
+//! Ring arithmetic over Z/2^N and fixed-point encoding (paper §2.2).
+//!
+//! Ring elements are stored as `u64` with wrapping arithmetic; "signed"
+//! reads interpret the element in two's complement, matching the paper's
+//! "an element in a ring of size 2^n is always in an n-bit signed integer
+//! representation". Bit windows `x[k:m]` (paper notation: bits m..k-1,
+//! k exclusive) produce elements of the smaller ring Z/2^(k-m) — the core
+//! operation of HummingBird's reduced-ring DReLU.
+
+/// Full ring width used by the runtime (CrypTen default).
+pub const RING_BITS: u32 = 64;
+
+/// Default fixed-point fractional bits (CrypTen uses 16).
+pub const DEFAULT_SCALE_BITS: u32 = 16;
+
+/// Fixed-point codec: float <-> ring element with `frac_bits` of fraction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FixedPoint {
+    pub frac_bits: u32,
+}
+
+impl Default for FixedPoint {
+    fn default() -> Self {
+        FixedPoint { frac_bits: DEFAULT_SCALE_BITS }
+    }
+}
+
+impl FixedPoint {
+    pub fn new(frac_bits: u32) -> Self {
+        assert!(frac_bits < RING_BITS, "frac_bits must be < {RING_BITS}");
+        FixedPoint { frac_bits }
+    }
+
+    /// Scale factor D = 2^frac_bits as f64.
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        (1u64 << self.frac_bits) as f64
+    }
+
+    /// Encode x_f -> floor-rounded ring element: x = round(D * x_f) mod 2^64.
+    #[inline]
+    pub fn encode(&self, x: f64) -> u64 {
+        let v = (x * self.scale()).round();
+        // Saturate rather than UB-cast when wildly out of range; the model
+        // layer keeps values far below this anyway.
+        let v = v.clamp(-(2f64.powi(62)), 2f64.powi(62));
+        (v as i64) as u64
+    }
+
+    /// Decode ring element -> f64 (signed two's-complement read).
+    #[inline]
+    pub fn decode(&self, x: u64) -> f64 {
+        (x as i64) as f64 / self.scale()
+    }
+
+    /// Encode a slice.
+    pub fn encode_vec(&self, xs: &[f64]) -> Vec<u64> {
+        xs.iter().map(|x| self.encode(*x)).collect()
+    }
+
+    /// Decode a slice.
+    pub fn decode_vec(&self, xs: &[u64]) -> Vec<f64> {
+        xs.iter().map(|x| self.decode(*x)).collect()
+    }
+}
+
+/// Signed two's-complement interpretation of a ring element.
+#[inline]
+pub fn to_signed(x: u64) -> i64 {
+    x as i64
+}
+
+/// Is the element negative when read as an N-bit signed integer?
+#[inline]
+pub fn is_negative(x: u64) -> bool {
+    (x >> (RING_BITS - 1)) & 1 == 1
+}
+
+/// DReLU on a plaintext ring element: 1 iff x >= 0 (paper treats 0 as
+/// positive), else 0.
+#[inline]
+pub fn drelu_plain(x: u64) -> u64 {
+    (!is_negative(x)) as u64
+}
+
+/// Extract the bit window x[k:m] (bits m..k-1 inclusive, k exclusive) as an
+/// element of Z/2^(k-m), stored in the low k-m bits of the result.
+///
+/// Matches the paper's example: x = 0b11011101, x[5:1] = 0b1110.
+#[inline]
+pub fn bit_window(x: u64, k: u32, m: u32) -> u64 {
+    debug_assert!(m < k && k <= RING_BITS, "invalid window [{m},{k})");
+    let w = k - m;
+    if w == RING_BITS {
+        x
+    } else {
+        (x >> m) & ((1u64 << w) - 1)
+    }
+}
+
+/// Sign (MSB) of a w-bit ring element stored in the low bits: bit w-1.
+#[inline]
+pub fn msb_w(x: u64, w: u32) -> u64 {
+    debug_assert!(w >= 1 && w <= RING_BITS);
+    (x >> (w - 1)) & 1
+}
+
+/// DReLU of a w-bit ring element stored in the low bits (1 iff non-negative
+/// in the w-bit two's-complement reading).
+#[inline]
+pub fn drelu_w(x: u64, w: u32) -> u64 {
+    1 ^ msb_w(x, w)
+}
+
+/// Mask keeping the low `w` bits (w in 1..=64).
+#[inline]
+pub fn low_mask(w: u32) -> u64 {
+    if w >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << w) - 1
+    }
+}
+
+/// Sign-extend a w-bit value (stored in low bits) to a full i64.
+#[inline]
+pub fn sign_extend(x: u64, w: u32) -> i64 {
+    debug_assert!(w >= 1 && w <= 64);
+    let shift = 64 - w;
+    ((x << shift) as i64) >> shift
+}
+
+/// CrypTen-style local truncation of an arithmetic *share* by 2^f.
+///
+/// Party 0 computes `share >> f` (arithmetic shift on the signed read);
+/// every other party computes `-((-share) >> f)`. For 2 parties this
+/// reproduces CrypTen's `div` with at most 1 ulp of error and negligible
+/// wrap-around probability while |x| << 2^(64-f).
+#[inline]
+pub fn trunc_share(share: u64, f: u32, party: usize) -> u64 {
+    if f == 0 {
+        return share;
+    }
+    if party == 0 {
+        ((share as i64) >> f) as u64
+    } else {
+        let neg = (share as i64).wrapping_neg();
+        (neg >> f).wrapping_neg() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::prg::Prg;
+
+    #[test]
+    fn fixed_point_roundtrip() {
+        let fp = FixedPoint::new(16);
+        for &x in &[0.0, 1.0, -1.0, 0.5, -0.5, 123.456, -9876.54321, 1e-4] {
+            let e = fp.encode(x);
+            let d = fp.decode(e);
+            assert!((d - x).abs() <= 1.0 / fp.scale(), "{x} -> {d}");
+        }
+    }
+
+    #[test]
+    fn signed_reads() {
+        assert_eq!(to_signed(u64::MAX), -1);
+        assert!(is_negative(u64::MAX));
+        assert!(!is_negative(0));
+        assert_eq!(drelu_plain(0), 1); // paper: zero counts as positive
+        assert_eq!(drelu_plain(5u64.wrapping_neg()), 0);
+        assert_eq!(drelu_plain(7), 1);
+    }
+
+    #[test]
+    fn bit_window_matches_paper_example() {
+        // x = 11011101b, x[5:1] = 1110b
+        let x = 0b1101_1101u64;
+        assert_eq!(bit_window(x, 5, 1), 0b1110);
+        assert_eq!(bit_window(x, 8, 0), x);
+        assert_eq!(bit_window(u64::MAX, 64, 0), u64::MAX);
+        assert_eq!(bit_window(u64::MAX, 64, 32), u32::MAX as u64);
+    }
+
+    #[test]
+    fn msb_and_drelu_on_small_ring() {
+        // w = 4: values 0..7 non-negative, 8..15 negative
+        for v in 0u64..16 {
+            let expect = if v < 8 { 1 } else { 0 };
+            assert_eq!(drelu_w(v, 4), expect, "v={v}");
+        }
+    }
+
+    #[test]
+    fn sign_extend_works() {
+        assert_eq!(sign_extend(0b1110, 4), -2);
+        assert_eq!(sign_extend(0b0110, 4), 6);
+        assert_eq!(sign_extend(u64::MAX, 64), -1);
+    }
+
+    /// Theorem-1 sanity on plaintext: for |x| < 2^(k-1), the k-bit window
+    /// preserves the sign decision.
+    #[test]
+    fn theorem1_plaintext() {
+        let fp = FixedPoint::new(8);
+        for k in 10..20u32 {
+            let bound = 1i64 << (k - 1);
+            for &xi in &[-bound + 1, -5, -1, 0, 1, 5, bound - 1] {
+                let x = xi as u64;
+                let win = bit_window(x, k, 0);
+                assert_eq!(drelu_w(win, k), drelu_plain(x), "k={k} x={xi}");
+            }
+        }
+        let _ = fp;
+    }
+
+    /// Truncation of shares reconstructs to x/2^f within 1 ulp (2 parties).
+    #[test]
+    fn trunc_share_reconstructs() {
+        let mut prg = Prg::new(99, 0);
+        let f = 16u32;
+        for _ in 0..2000 {
+            // |x| < 2^40 so wrap-around probability is negligible
+            let x = (prg.next_u64() % (1u64 << 40)) as i64 - (1i64 << 39);
+            let x = x as u64;
+            let r = prg.next_u64();
+            let a0 = r;
+            let a1 = x.wrapping_sub(r);
+            let t = trunc_share(a0, f, 0).wrapping_add(trunc_share(a1, f, 1));
+            let expect = (x as i64) >> f;
+            let got = t as i64;
+            assert!((got - expect).abs() <= 1, "x={} got={} expect={}", x as i64, got, expect);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them
+//! from the Rust hot path (Python never runs at serving time).
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Artifacts are lowered with `return_tuple=True`, so results unwrap with
+//! `to_tuple1` (single output) or stay tuples (multi output).
+
+pub mod registry;
+pub mod xla_kernels;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::tensor::TensorU64;
+
+pub use registry::Manifest;
+pub use xla_kernels::XlaKernels;
+
+/// Shared PJRT CPU client + executable cache. Cloneable handle; compiled
+/// executables are cached per artifact path (compilation is the expensive
+/// part, ~ms–100ms each).
+#[derive(Clone)]
+pub struct Runtime {
+    inner: Arc<RuntimeInner>,
+}
+
+struct RuntimeInner {
+    client: xla::PjRtClient,
+    root: PathBuf,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a runtime rooted at the artifacts directory.
+    pub fn new(artifacts_root: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            inner: Arc::new(RuntimeInner {
+                client,
+                root: artifacts_root.as_ref().to_path_buf(),
+                cache: Mutex::new(HashMap::new()),
+            }),
+        })
+    }
+
+    pub fn artifacts_root(&self) -> &Path {
+        &self.inner.root
+    }
+
+    /// Load + compile an HLO text artifact (cached).
+    pub fn load(&self, rel_path: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.inner.cache.lock().unwrap().get(rel_path) {
+            return Ok(Arc::clone(exe));
+        }
+        let full = self.inner.root.join(rel_path);
+        let proto = xla::HloModuleProto::from_text_file(&full).map_err(|e| {
+            Error::runtime(format!("loading {}: {e}", full.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.inner.client.compile(&comp)?);
+        self.inner
+            .cache
+            .lock()
+            .unwrap()
+            .insert(rel_path.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an artifact on i64 tensor inputs; returns the tuple elements
+    /// as literals.
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let mut result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let elems = result.decompose_tuple()?;
+        Ok(elems)
+    }
+
+    /// Convenience: run artifact at `rel_path` on u64 ring tensors, return
+    /// u64 ring tensors (bit-cast through i64).
+    pub fn run_u64(&self, rel_path: &str, inputs: &[&TensorU64]) -> Result<Vec<TensorU64>> {
+        let exe = self.load(rel_path)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| literal_i64(&t.as_i64_vec(), &t.shape))
+            .collect::<Result<_>>()?;
+        let outs = self.execute(&exe, &lits)?;
+        outs.into_iter().map(literal_to_u64).collect()
+    }
+
+    /// Convenience: run on f32 tensors.
+    pub fn run_f32(
+        &self,
+        rel_path: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<(Vec<f32>, Vec<usize>)>> {
+        let exe = self.load(rel_path)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| literal_f32(data, shape))
+            .collect::<Result<_>>()?;
+        let outs = self.execute(&exe, &lits)?;
+        outs.into_iter().map(literal_to_f32).collect()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.inner.cache.lock().unwrap().len()
+    }
+}
+
+/// Build an i64 literal of the given shape.
+pub fn literal_i64(data: &[i64], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Convert a PJRT output literal (s64) into a ring tensor.
+pub fn literal_to_u64(lit: xla::Literal) -> Result<TensorU64> {
+    let shape = literal_dims(&lit)?;
+    let data = lit.to_vec::<i64>()?;
+    TensorU64::from_i64(shape, data)
+}
+
+/// Convert a PJRT output literal (f32).
+pub fn literal_to_f32(lit: xla::Literal) -> Result<(Vec<f32>, Vec<usize>)> {
+    let shape = literal_dims(&lit)?;
+    let data = lit.to_vec::<f32>()?;
+    Ok((data, shape))
+}
+
+fn literal_dims(lit: &xla::Literal) -> Result<Vec<usize>> {
+    let shape = lit.array_shape()?;
+    Ok(shape.dims().iter().map(|d| *d as usize).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests live in rust/tests/runtime_xla.rs (they need the
+    // artifacts directory built by `make artifacts`).
+}

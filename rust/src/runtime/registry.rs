@@ -1,0 +1,192 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parses `artifacts/manifest.json` and answers "which HLO
+//! file implements layer i of model M / kernel K at bucket n, and with what
+//! shapes".
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// Kernel artifact entry (one per bucket size).
+#[derive(Debug, Clone)]
+pub struct KernelArtifact {
+    pub n: usize,
+    pub path: String,
+}
+
+/// Per-layer artifact entry.
+#[derive(Debug, Clone)]
+pub struct LayerArtifact {
+    /// "conv" or "fc".
+    pub op: String,
+    /// Path of the share-domain (int64) artifact (Pallas-kernel variant).
+    pub share: String,
+    /// Fused-dot fast variant of the same ring math (None in manifests
+    /// produced before the perf pass).
+    pub share_fast: Option<String>,
+    /// Path of the plain f32 artifact at MPC batch.
+    pub plain: String,
+    /// Path of the plain f32 artifact at search batch.
+    pub search: String,
+    /// conv: [C,H,W] input; fc: unused.
+    pub in_shape: Vec<usize>,
+    /// conv: [C,H,W] output.
+    pub out_shape: Vec<usize>,
+    /// conv: im2col weight shape [Cin*k*k, Cout]; fc: [In, Out].
+    pub wmat_shape: Vec<usize>,
+    /// conv: original weight shape [Cout, Cin, k, k].
+    pub w_shape: Vec<usize>,
+    /// fc: flattened input dim.
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+/// Per-model manifest section.
+#[derive(Debug, Clone)]
+pub struct ModelArtifacts {
+    pub batch: usize,
+    pub search_batch: usize,
+    pub frac_bits: u32,
+    /// Keyed by node index.
+    pub layers: BTreeMap<usize, LayerArtifact>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub kernel_buckets: Vec<usize>,
+    pub kernels: BTreeMap<String, Vec<KernelArtifact>>,
+    pub models: BTreeMap<String, ModelArtifacts>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_root: impl AsRef<Path>) -> Result<Manifest> {
+        let path = artifacts_root.as_ref().join("manifest.json");
+        let j = json::parse_file(&path)?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let kernel_buckets = j
+            .get("kernel_buckets")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let mut kernels = BTreeMap::new();
+        for (name, arr) in j.get("kernels")?.as_obj()? {
+            let mut entries = Vec::new();
+            for e in arr.as_arr()? {
+                entries.push(KernelArtifact {
+                    n: e.get_usize("n")?,
+                    path: e.get_str("path")?.to_string(),
+                });
+            }
+            entries.sort_by_key(|e| e.n);
+            kernels.insert(name.clone(), entries);
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models")?.as_obj()? {
+            let mut layers = BTreeMap::new();
+            for (idx, l) in m.get("layers")?.as_obj()? {
+                let idx: usize = idx
+                    .parse()
+                    .map_err(|_| Error::config(format!("bad layer index {idx}")))?;
+                let shape_vec = |key: &str| -> Vec<usize> {
+                    l.opt(key)
+                        .and_then(|v| v.as_arr().ok().map(|a| {
+                            a.iter().filter_map(|x| x.as_usize().ok()).collect()
+                        }))
+                        .unwrap_or_default()
+                };
+                layers.insert(
+                    idx,
+                    LayerArtifact {
+                        op: l.get_str("op")?.to_string(),
+                        share: l.get_str("share")?.to_string(),
+                        share_fast: l
+                            .opt("share_fast")
+                            .and_then(|v| v.as_str().ok())
+                            .map(|s| s.to_string()),
+                        plain: l.get_str("plain")?.to_string(),
+                        search: l.get_str("search")?.to_string(),
+                        in_shape: shape_vec("in_shape"),
+                        out_shape: shape_vec("out_shape"),
+                        wmat_shape: shape_vec("wmat_shape"),
+                        w_shape: shape_vec("w_shape"),
+                        in_dim: l.opt("in_dim").and_then(|v| v.as_usize().ok()).unwrap_or(0),
+                        out_dim: l.opt("out_dim").and_then(|v| v.as_usize().ok()).unwrap_or(0),
+                    },
+                );
+            }
+            models.insert(
+                name.clone(),
+                ModelArtifacts {
+                    batch: m.get_usize("batch")?,
+                    search_batch: m.get_usize("search_batch")?,
+                    frac_bits: m.get_usize("frac_bits")? as u32,
+                    layers,
+                },
+            );
+        }
+        Ok(Manifest { kernel_buckets, kernels, models })
+    }
+
+    /// Pick the smallest kernel bucket that fits `n` elements, or the
+    /// largest bucket (caller chunks) if none fits.
+    pub fn bucket_for(&self, n: usize) -> usize {
+        for b in &self.kernel_buckets {
+            if *b >= n {
+                return *b;
+            }
+        }
+        *self.kernel_buckets.last().expect("no kernel buckets")
+    }
+
+    /// Resolve a kernel artifact path for (name, bucket).
+    pub fn kernel_path(&self, name: &str, bucket: usize) -> Result<&str> {
+        self.kernels
+            .get(name)
+            .and_then(|entries| entries.iter().find(|e| e.n == bucket))
+            .map(|e| e.path.as_str())
+            .ok_or_else(|| Error::config(format!("no kernel artifact {name}@{bucket}")))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::config(format!("model '{name}' not in manifest (run `make artifacts`)")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let j = json::parse(
+            r#"{
+          "kernel_buckets": [1024, 8192],
+          "kernels": {"and_open": [{"n":1024,"path":"kernels/a.hlo.txt"},
+                                    {"n":8192,"path":"kernels/b.hlo.txt"}]},
+          "models": {"m": {"batch":4, "search_batch":64, "frac_bits":12,
+            "layers": {"1": {"op":"conv","share":"s","plain":"p","search":"q",
+                             "in_shape":[3,16,16],"out_shape":[8,16,16],
+                             "wmat_shape":[27,8],"w_shape":[8,3,3,3],
+                             "k":3,"stride":1,"pad":1}}}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        assert_eq!(m.bucket_for(500), 1024);
+        assert_eq!(m.bucket_for(2000), 8192);
+        assert_eq!(m.bucket_for(100_000), 8192); // chunking case
+        assert_eq!(m.kernel_path("and_open", 1024).unwrap(), "kernels/a.hlo.txt");
+        assert!(m.kernel_path("nope", 1024).is_err());
+        let model = m.model("m").unwrap();
+        assert_eq!(model.layers[&1].wmat_shape, vec![27, 8]);
+        assert!(m.model("zz").is_err());
+    }
+}

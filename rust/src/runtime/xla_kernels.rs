@@ -1,0 +1,154 @@
+//! [`KernelBackend`] implementation backed by the Pallas-lowered HLO
+//! artifacts, executed via PJRT (the three-layer composition path).
+//!
+//! Inputs are padded to the smallest artifact bucket (or chunked above the
+//! largest); padding lanes compute garbage that is sliced off. Scalars
+//! (shift / mask / leader) travel as `[1]`-shaped i64 literals.
+//!
+//! Note on when to use this: for the small tensors of a single layer the
+//! pure-Rust kernels win (PJRT dispatch ≈ 10–50 µs per call); the XLA path
+//! exists to (a) prove L1→L3 composition end-to-end and (b) model the
+//! accelerator deployment, where these kernels run on-device next to the
+//! linear layers. `benches/gmw_micro.rs` quantifies the crossover.
+
+use crate::gmw::kernels::KernelBackend;
+use crate::ring;
+
+use super::{literal_i64, Manifest, Runtime};
+
+/// PJRT-backed kernels for one party.
+pub struct XlaKernels {
+    rt: Runtime,
+    manifest: Manifest,
+}
+
+impl XlaKernels {
+    pub fn new(rt: Runtime, manifest: Manifest) -> Self {
+        XlaKernels { rt, manifest }
+    }
+
+    /// Run kernel `name` on vector operands (each length n) + scalar
+    /// operands, returning `outputs` flat i64 vectors. Handles bucket
+    /// padding and chunking.
+    fn run(
+        &mut self,
+        name: &str,
+        vecs: &[&[u64]],
+        scalars: &[i64],
+        out_rows: usize,
+    ) -> Vec<Vec<u64>> {
+        let n = vecs[0].len();
+        let largest = *self.manifest.kernel_buckets.last().unwrap();
+        let mut outs: Vec<Vec<u64>> = (0..out_rows).map(|_| Vec::with_capacity(n)).collect();
+        let mut start = 0usize;
+        while start < n {
+            let chunk = (n - start).min(largest);
+            let bucket = self.manifest.bucket_for(chunk);
+            let path = self
+                .manifest
+                .kernel_path(name, bucket)
+                .unwrap_or_else(|e| panic!("{e}"))
+                .to_string();
+            let exe = self.rt.load(&path).expect("kernel artifact load");
+            let mut lits = Vec::with_capacity(vecs.len() + scalars.len());
+            for v in vecs {
+                let mut padded: Vec<i64> = Vec::with_capacity(bucket);
+                padded.extend(v[start..start + chunk].iter().map(|x| *x as i64));
+                padded.resize(bucket, 0);
+                lits.push(literal_i64(&padded, &[bucket]).expect("literal"));
+            }
+            for s in scalars {
+                lits.push(literal_i64(&[*s], &[1]).expect("literal"));
+            }
+            let results = self.rt.execute(&exe, &lits).expect("kernel execute");
+            // Outputs are either one [2, bucket] array (open kernels), one
+            // [bucket] array (combine kernels) or two arrays (stage kernels);
+            // flatten in row order and slice off padding.
+            let mut row = 0usize;
+            for lit in results {
+                let data = lit.to_vec::<i64>().expect("output data");
+                let rows_here = data.len() / bucket;
+                for r in 0..rows_here {
+                    outs[row + r]
+                        .extend(data[r * bucket..r * bucket + chunk].iter().map(|x| *x as u64));
+                }
+                row += rows_here;
+            }
+            debug_assert_eq!(row, out_rows);
+            start += chunk;
+        }
+        outs
+    }
+}
+
+impl KernelBackend for XlaKernels {
+    fn and_open(&mut self, u: &[u64], v: &[u64], a: &[u64], b: &[u64]) -> Vec<u64> {
+        let outs = self.run("and_open", &[u, v, a, b], &[], 2);
+        let mut de = outs[0].clone();
+        de.extend_from_slice(&outs[1]);
+        de
+    }
+
+    fn and_combine(
+        &mut self,
+        d: &[u64],
+        e: &[u64],
+        a: &[u64],
+        b: &[u64],
+        c: &[u64],
+        leader: bool,
+    ) -> Vec<u64> {
+        let lead = if leader { -1i64 } else { 0 };
+        let outs = self.run("and_combine", &[d, e, a, b, c], &[lead], 1);
+        outs.into_iter().next().unwrap()
+    }
+
+    fn ks_stage_operands(
+        &mut self,
+        g: &[u64],
+        p: &[u64],
+        s: u32,
+        w: u32,
+        last: bool,
+    ) -> (Vec<u64>, Vec<u64>) {
+        let mask = ring::low_mask(w) as i64;
+        let name = if last { "ks_stage_last" } else { "ks_stage_mid" };
+        let rows = if last { 2 } else { 4 }; // u rows then v rows
+        let outs = self.run(name, &[g, p], &[s as i64, mask], rows);
+        if last {
+            (outs[0].clone(), outs[1].clone())
+        } else {
+            // outs = [u0, u1, v0, v1]; concatenate halves.
+            let mut u = outs[0].clone();
+            u.extend_from_slice(&outs[1]);
+            let mut v = outs[2].clone();
+            v.extend_from_slice(&outs[3]);
+            (u, v)
+        }
+    }
+
+    fn mult_open(&mut self, x: &[u64], y: &[u64], a: &[u64], b: &[u64]) -> Vec<u64> {
+        let outs = self.run("mult_open", &[x, y, a, b], &[], 2);
+        let mut de = outs[0].clone();
+        de.extend_from_slice(&outs[1]);
+        de
+    }
+
+    fn mult_combine(
+        &mut self,
+        d: &[u64],
+        e: &[u64],
+        a: &[u64],
+        b: &[u64],
+        c: &[u64],
+        leader: bool,
+    ) -> Vec<u64> {
+        let lead = if leader { -1i64 } else { 0 };
+        let outs = self.run("mult_combine", &[d, e, a, b, c], &[lead], 1);
+        outs.into_iter().next().unwrap()
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

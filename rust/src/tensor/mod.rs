@@ -1,0 +1,160 @@
+//! Minimal dense tensors used throughout the runtime.
+//!
+//! Two concrete element types cover every need: `TensorU64` for ring
+//! elements / secret shares, and `TensorF32` for plaintext model math
+//! (search engine, verification). Shapes are row-major `Vec<usize>`.
+
+use crate::error::{Error, Result};
+
+/// Dense row-major u64 tensor (ring elements, shares, packed bits).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorU64 {
+    pub shape: Vec<usize>,
+    pub data: Vec<u64>,
+}
+
+/// Dense row-major f32 tensor (plaintext activations / weights).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+macro_rules! tensor_common {
+    ($name:ident, $elem:ty, $zero:expr) => {
+        impl $name {
+            /// Create from shape and data, checking element count.
+            pub fn new(shape: Vec<usize>, data: Vec<$elem>) -> Result<Self> {
+                if numel(&shape) != data.len() {
+                    return Err(Error::shape(format!(
+                        "shape {:?} needs {} elems, got {}",
+                        shape,
+                        numel(&shape),
+                        data.len()
+                    )));
+                }
+                Ok(Self { shape, data })
+            }
+
+            /// Zero-filled tensor.
+            pub fn zeros(shape: Vec<usize>) -> Self {
+                let n = numel(&shape);
+                Self { shape, data: vec![$zero; n] }
+            }
+
+            /// Total element count.
+            pub fn len(&self) -> usize {
+                self.data.len()
+            }
+
+            pub fn is_empty(&self) -> bool {
+                self.data.is_empty()
+            }
+
+            /// Reshape in place (element count must match).
+            pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+                if numel(&shape) != self.data.len() {
+                    return Err(Error::shape(format!(
+                        "cannot reshape {:?} ({} elems) to {:?}",
+                        self.shape,
+                        self.data.len(),
+                        shape
+                    )));
+                }
+                self.shape = shape;
+                Ok(self)
+            }
+
+            /// Rank-1 view constructor.
+            pub fn from_vec(data: Vec<$elem>) -> Self {
+                let n = data.len();
+                Self { shape: vec![n], data }
+            }
+        }
+    };
+}
+
+tensor_common!(TensorU64, u64, 0u64);
+tensor_common!(TensorF32, f32, 0f32);
+
+impl TensorU64 {
+    /// Element-wise wrapping add (ring addition).
+    pub fn wrapping_add(&self, other: &TensorU64) -> Result<TensorU64> {
+        if self.shape != other.shape {
+            return Err(Error::shape(format!("add {:?} vs {:?}", self.shape, other.shape)));
+        }
+        let data =
+            self.data.iter().zip(&other.data).map(|(a, b)| a.wrapping_add(*b)).collect();
+        Ok(TensorU64 { shape: self.shape.clone(), data })
+    }
+
+    /// Element-wise XOR (binary-share addition).
+    pub fn xor(&self, other: &TensorU64) -> Result<TensorU64> {
+        if self.shape != other.shape {
+            return Err(Error::shape(format!("xor {:?} vs {:?}", self.shape, other.shape)));
+        }
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a ^ b).collect();
+        Ok(TensorU64 { shape: self.shape.clone(), data })
+    }
+
+    /// Reinterpret the data as i64 (two's complement), for PJRT transfer.
+    pub fn as_i64_vec(&self) -> Vec<i64> {
+        self.data.iter().map(|v| *v as i64).collect()
+    }
+
+    /// Build from an i64 vec (PJRT results come back as i64).
+    pub fn from_i64(shape: Vec<usize>, data: Vec<i64>) -> Result<Self> {
+        TensorU64::new(shape, data.into_iter().map(|v| v as u64).collect())
+    }
+}
+
+impl TensorF32 {
+    /// Max absolute value (used by the eco search to bound ranges).
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0f32, |m, v| m.max(v.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(TensorU64::new(vec![2, 3], vec![0; 6]).is_ok());
+        assert!(TensorU64::new(vec![2, 3], vec![0; 5]).is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = TensorU64::zeros(vec![4, 2]);
+        assert!(t.clone().reshape(vec![8]).is_ok());
+        assert!(t.reshape(vec![3, 3]).is_err());
+    }
+
+    #[test]
+    fn ring_ops_wrap() {
+        let a = TensorU64::from_vec(vec![u64::MAX, 1]);
+        let b = TensorU64::from_vec(vec![1, 2]);
+        assert_eq!(a.wrapping_add(&b).unwrap().data, vec![0, 3]);
+        assert_eq!(a.xor(&b).unwrap().data, vec![u64::MAX - 1, 3]);
+        assert!(a.wrapping_add(&TensorU64::zeros(vec![3])).is_err());
+    }
+
+    #[test]
+    fn i64_roundtrip() {
+        let t = TensorU64::from_vec(vec![u64::MAX, 0, 42]);
+        let back = TensorU64::from_i64(vec![3], t.as_i64_vec()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn f32_max_abs() {
+        let t = TensorF32::from_vec(vec![-3.5, 2.0, 1.0]);
+        assert_eq!(t.max_abs(), 3.5);
+    }
+}

@@ -1,0 +1,193 @@
+//! Criterion-style micro/e2e benchmark harness (criterion is not available
+//! offline). Used by the `[[bench]]` targets with `harness = false`.
+//!
+//! Features: warmup, adaptive iteration count targeting a measurement time,
+//! mean/median/stddev/p95 reporting, throughput annotation, and machine-
+//! readable JSON output so EXPERIMENTS.md numbers can be regenerated.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// One benchmark's collected samples and metadata.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration, one entry per sample.
+    pub samples: Vec<f64>,
+    /// Optional elements-processed-per-iteration for throughput reporting.
+    pub throughput_elems: Option<u64>,
+    /// Optional bytes-processed-per-iteration for throughput reporting.
+    pub throughput_bytes: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(self.name.clone())),
+            ("mean_s", Json::Num(self.mean())),
+            ("median_s", Json::Num(self.median())),
+            ("stddev_s", Json::Num(stats::stddev(&self.samples))),
+            ("p95_s", Json::Num(stats::percentile(&self.samples, 95.0))),
+            ("samples", Json::Int(self.samples.len() as i64)),
+        ];
+        if let Some(e) = self.throughput_elems {
+            pairs.push(("elems_per_s", Json::Num(e as f64 / self.mean())));
+        }
+        if let Some(b) = self.throughput_bytes {
+            pairs.push(("bytes_per_s", Json::Num(b as f64 / self.mean())));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Benchmark runner: collects results, prints a criterion-like report and
+/// optionally dumps JSON (for EXPERIMENTS.md regeneration).
+pub struct Bench {
+    /// Target total measurement time per benchmark.
+    pub measure_time: Duration,
+    /// Warmup time per benchmark.
+    pub warmup_time: Duration,
+    /// Number of samples to split the measurement into.
+    pub sample_count: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Honor a quick mode for CI-ish runs: HB_BENCH_QUICK=1.
+        let quick = std::env::var("HB_BENCH_QUICK").ok().as_deref() == Some("1");
+        Bench {
+            measure_time: if quick { Duration::from_millis(300) } else { Duration::from_secs(2) },
+            warmup_time: if quick { Duration::from_millis(100) } else { Duration::from_millis(500) },
+            sample_count: if quick { 10 } else { 30 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark. `f` is invoked `iters` times per sample; the
+    /// per-iteration time is recorded.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_annotated(name, None, None, &mut f)
+    }
+
+    /// Benchmark with elements-per-iteration throughput annotation.
+    pub fn bench_elems<F: FnMut()>(&mut self, name: &str, elems: u64, mut f: F) -> &BenchResult {
+        self.bench_annotated(name, Some(elems), None, &mut f)
+    }
+
+    /// Benchmark with bytes-per-iteration throughput annotation.
+    pub fn bench_bytes<F: FnMut()>(&mut self, name: &str, bytes: u64, mut f: F) -> &BenchResult {
+        self.bench_annotated(name, None, Some(bytes), &mut f)
+    }
+
+    fn bench_annotated(
+        &mut self,
+        name: &str,
+        elems: Option<u64>,
+        bytes: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        // Warmup and calibration: find iters/sample so one sample is
+        // measure_time / sample_count.
+        let warmup_end = Instant::now() + self.warmup_time;
+        let mut calib_iters: u64 = 0;
+        let calib_start = Instant::now();
+        while Instant::now() < warmup_end {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = calib_start.elapsed().as_secs_f64() / calib_iters.max(1) as f64;
+        let per_sample = self.measure_time.as_secs_f64() / self.sample_count as f64;
+        let iters = ((per_sample / per_iter.max(1e-9)).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.sample_count);
+        for _ in 0..self.sample_count {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+
+        let result = BenchResult {
+            name: name.to_string(),
+            samples,
+            throughput_elems: elems,
+            throughput_bytes: bytes,
+        };
+        Self::print_result(&result);
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    fn print_result(r: &BenchResult) {
+        let mut line = format!(
+            "{:<44} time: [{} {} {}]",
+            r.name,
+            stats::fmt_secs(stats::percentile(&r.samples, 5.0)),
+            stats::fmt_secs(r.median()),
+            stats::fmt_secs(stats::percentile(&r.samples, 95.0)),
+        );
+        if let Some(e) = r.throughput_elems {
+            line.push_str(&format!("  thrpt: {:.3e} elem/s", e as f64 / r.mean()));
+        }
+        if let Some(b) = r.throughput_bytes {
+            line.push_str(&format!("  thrpt: {}/s", stats::fmt_bytes((b as f64 / r.mean()) as u64)));
+        }
+        println!("{line}");
+    }
+
+    /// Write all collected results as JSON to `path` (e.g.
+    /// `target/bench-results/<suite>.json`).
+    pub fn dump_json(&self, suite: &str) {
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let json = Json::arr(self.results.iter().map(|r| r.to_json()));
+        let path = dir.join(format!("{suite}.json"));
+        if std::fs::write(&path, json.to_string_pretty()).is_ok() {
+            println!("(results written to {})", path.display());
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value (stable-rust
+/// equivalent of `std::hint::black_box`, which is stable since 1.66 —
+/// re-exported here for a single import site).
+pub use std::hint::black_box;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_reports() {
+        let mut b = Bench {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(5),
+            sample_count: 5,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        let r = b.bench_elems("noop", 1, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.mean() > 0.0);
+        let j = r.to_json();
+        assert!(j.get_f64("mean_s").unwrap() > 0.0);
+    }
+}

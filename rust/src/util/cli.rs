@@ -1,0 +1,122 @@
+//! Tiny command-line argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+//! Unknown flags are collected so subcommands can validate their own set.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order (subcommand name is positional 0).
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    ///
+    /// A `--key` followed by a token that does not start with `--` consumes
+    /// it as the value; otherwise the key becomes a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.options.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// The subcommand (first positional), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Required string option.
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.options
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| Error::config(format!("missing required option --{key}")))
+    }
+
+    /// Optional string option.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Optional string with default.
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    /// Boolean flag (present, or explicitly true/false).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Typed option with default; errors if present but unparseable.
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| Error::config(format!("option --{key}: cannot parse '{s}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse("serve --model mini --batch 8 extra");
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.req("model").unwrap(), "mini");
+        assert_eq!(a.opt_parse::<usize>("batch", 1).unwrap(), 8);
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = parse("run --verbose --k=12 --neg -5");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_parse::<i32>("k", 0).unwrap(), 12);
+        // "-5" does not start with --, so it is consumed as --neg's value
+        assert_eq!(a.opt_parse::<i32>("neg", 0).unwrap(), -5);
+    }
+
+    #[test]
+    fn missing_and_bad_values() {
+        let a = parse("x");
+        assert!(a.req("model").is_err());
+        let a = parse("x --n abc");
+        assert!(a.opt_parse::<usize>("n", 3).is_err());
+        assert_eq!(parse("x").opt_parse::<usize>("n", 3).unwrap(), 3);
+    }
+}

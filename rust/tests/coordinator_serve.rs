@@ -1,0 +1,89 @@
+//! Coordinator integration: the batching service answers requests
+//! correctly, batches them, accounts communication, and shuts down
+//! cleanly. Requires artifacts + micronet weights (skips otherwise).
+
+use hummingbird::coordinator::{Coordinator, ServeOptions};
+use hummingbird::hummingbird::PlanSet;
+use hummingbird::model::{Archive, Backend, Dataset, ModelConfig, PlainExecutor};
+
+const MODEL: &str = "micronet_synth10";
+
+fn ready() -> Option<std::path::PathBuf> {
+    let repo = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).to_path_buf();
+    if repo.join("artifacts/manifest.json").exists()
+        && repo.join(format!("artifacts/weights/{MODEL}.json")).exists()
+    {
+        Some(repo)
+    } else {
+        eprintln!("skipping: artifacts/weights missing");
+        None
+    }
+}
+
+#[test]
+fn serve_batches_and_matches_plaintext() {
+    let Some(repo) = ready() else { return };
+    let cfg = ModelConfig::load_named(&repo, MODEL).unwrap();
+    let dataset = Dataset::load(repo.join("artifacts"), &cfg.dataset).unwrap();
+    let weights = Archive::load(repo.join("artifacts/weights").join(MODEL)).unwrap();
+    let plain = PlainExecutor::new(cfg.clone(), weights, Backend::Naive);
+
+    let mut opts = ServeOptions::new(&repo, MODEL);
+    opts.plan = Some(PlanSet::baseline(cfg.relu_groups));
+    opts.batch_timeout = std::time::Duration::from_millis(10);
+    let svc = Coordinator::start(opts).unwrap();
+
+    // Submit an uneven number of requests (forces a padded tail batch).
+    let n = 10usize;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        rxs.push((i, svc.infer_async(dataset.test.batch(i, i + 1).to_vec()).unwrap()));
+    }
+    let mut batch_sizes = Vec::new();
+    for (i, rx) in rxs {
+        let r = rx.recv().unwrap();
+        let want = plain.forward(dataset.test.batch(i, i + 1), 1).unwrap();
+        let want_pred = PlainExecutor::argmax(&want, cfg.num_classes)[0];
+        assert_eq!(r.pred, want_pred, "sample {i} prediction mismatch vs plaintext");
+        assert_eq!(r.logits.len(), cfg.num_classes);
+        assert!(r.latency_s > 0.0);
+        batch_sizes.push(r.batch_size);
+    }
+    // Requests submitted together must have been batched (micronet batch=4).
+    assert!(batch_sizes.iter().any(|b| *b > 1), "no batching occurred: {batch_sizes:?}");
+    assert!(svc.metrics.samples_done() >= n as u64);
+    assert!(svc.trace.total_bytes() > 0);
+    let bd = svc.metrics.breakdown();
+    assert!(bd.relu_s > 0.0 && bd.linear_s > 0.0);
+    svc.shutdown();
+}
+
+#[test]
+fn serve_with_hummingbird_plan_reduces_bytes() {
+    let Some(repo) = ready() else { return };
+    let cfg = ModelConfig::load_named(&repo, MODEL).unwrap();
+    let dataset = Dataset::load(repo.join("artifacts"), &cfg.dataset).unwrap();
+
+    let run = |plan: PlanSet| {
+        let mut opts = ServeOptions::new(&repo, MODEL);
+        opts.plan = Some(plan);
+        let svc = Coordinator::start(opts).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            rxs.push(svc.infer_async(dataset.test.batch(i, i + 1).to_vec()).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let by = svc.trace.bytes_by_phase();
+        let protocol: u64 = by[..4].iter().sum();
+        svc.shutdown();
+        protocol
+    };
+    let base = run(PlanSet::baseline(cfg.relu_groups));
+    let hb = run(PlanSet::uniform(cfg.relu_groups, 14, 6).unwrap());
+    assert!(
+        base as f64 / hb as f64 > 2.5,
+        "expected >2.5x byte cut through the service: {base} -> {hb}"
+    );
+}

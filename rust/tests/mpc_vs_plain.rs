@@ -1,0 +1,135 @@
+//! End-to-end correctness: the two-party MPC inference (share executor over
+//! the GMW engine + PJRT artifacts) reconstructs to the plaintext model's
+//! outputs within fixed-point tolerance, for both the exact baseline and
+//! HummingBird plans; and HummingBird plans cut the measured communication
+//! (the mechanism behind every figure in the paper).
+//!
+//! Requires `make artifacts` + trained weights (skips cleanly otherwise).
+
+use hummingbird::crypto::prg::Prg;
+use hummingbird::gmw::harness::run_parties;
+use hummingbird::hummingbird::PlanSet;
+use hummingbird::model::{
+    Archive, Backend, Dataset, ModelConfig, PlainExecutor, ShareExecutor, ShareWeights,
+};
+use hummingbird::ring::FixedPoint;
+use hummingbird::runtime::{Manifest, Runtime};
+use hummingbird::sharing::{reconstruct_arith, share_arith};
+
+const MODEL: &str = "micronet_synth10";
+
+struct Env {
+    root: std::path::PathBuf,
+    cfg: ModelConfig,
+    weights: Archive,
+    dataset: Dataset,
+}
+
+fn env() -> Option<Env> {
+    let repo = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = repo.join("artifacts");
+    let weights_prefix = root.join("weights").join(MODEL);
+    if !root.join("manifest.json").exists() || !weights_prefix.with_extension("json").exists() {
+        eprintln!("skipping: artifacts or weights missing (run `make artifacts && make train`)");
+        return None;
+    }
+    let cfg = ModelConfig::load_named(repo, MODEL).ok()?;
+    let weights = Archive::load(&weights_prefix).ok()?;
+    let dataset = Dataset::load(&root, &cfg.dataset).ok()?;
+    Some(Env { root, cfg, weights, dataset })
+}
+
+/// Run a 2-party MPC inference on one test batch; returns (decoded logits,
+/// total bytes, total rounds).
+fn mpc_run(e: &Env, plans: &PlanSet, lo: usize, seed: u64) -> (Vec<f64>, u64, u64) {
+    let manifest = Manifest::load(&e.root).unwrap();
+    let model_art = manifest.model(MODEL).unwrap();
+    let batch = model_art.batch;
+    let fx = FixedPoint::new(e.cfg.frac_bits);
+    let x_ring = e.dataset.test.batch_ring(lo, lo + batch, fx);
+    let mut prg = Prg::new(seed, 0);
+    let xs = share_arith(&mut prg, &x_ring, 2);
+    let (c, h, w) = e.cfg.input;
+    let shape = vec![batch, c, h, w];
+
+    let root = e.root.clone();
+    let cfg = e.cfg.clone();
+    let weights = e.weights.clone();
+    let run = run_parties(2, seed ^ 0xabc, move |party| {
+        // Per-party runtime (the PJRT client is thread-local).
+        let rt = Runtime::new(&root).unwrap();
+        let manifest = Manifest::load(&root).unwrap();
+        let art = manifest.model(MODEL).unwrap().clone();
+        let sw = ShareWeights::prepare(&cfg, &weights).unwrap();
+        let exec = ShareExecutor::new(cfg.clone(), art, rt, sw);
+        let me = party.party();
+        let x = hummingbird::tensor::TensorU64::new(shape.clone(), xs[me].clone()).unwrap();
+        let (out, _bd) = exec.forward(party, x, plans).unwrap();
+        out.data
+    });
+    let logits_ring = reconstruct_arith(&run.outputs);
+    let logits = logits_ring.iter().map(|v| fx.decode(*v)).collect();
+    (logits, run.trace.total_bytes(), run.trace.total_rounds())
+}
+
+#[test]
+fn mpc_baseline_matches_plaintext_logits() {
+    let Some(e) = env() else { return };
+    let plans = PlanSet::baseline(e.cfg.relu_groups);
+    let (got, _, _) = mpc_run(&e, &plans, 0, 1234);
+
+    let plain = PlainExecutor::new(e.cfg.clone(), e.weights.clone(), Backend::Naive);
+    let batch = 4;
+    let want = plain.forward(e.dataset.test.batch(0, batch), batch).unwrap();
+    assert_eq!(got.len(), want.len());
+    // Fixed-point truncation error accumulates per layer; tolerance a few
+    // dozen ulps at f=12.
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - *w as f64).abs() < 5e-2, "logit mismatch: mpc={g} plain={w}");
+    }
+    let classes = e.cfg.num_classes;
+    let got_f32: Vec<f32> = got.iter().map(|v| *v as f32).collect();
+    assert_eq!(
+        PlainExecutor::argmax(&got_f32, classes),
+        PlainExecutor::argmax(&want, classes),
+        "baseline MPC must preserve predictions"
+    );
+}
+
+#[test]
+fn mpc_eco_plan_preserves_predictions() {
+    let Some(e) = env() else { return };
+    // Generous eco plan: 22 bits comfortably covers the activation range
+    // at f=12 (|x| < 2^9).
+    let plans = PlanSet::uniform(e.cfg.relu_groups, 22, 0).unwrap();
+    let (got, _, _) = mpc_run(&e, &plans, 0, 77);
+    let plain = PlainExecutor::new(e.cfg.clone(), e.weights.clone(), Backend::Naive);
+    let batch = 4;
+    let want = plain.forward(e.dataset.test.batch(0, batch), batch).unwrap();
+    let classes = e.cfg.num_classes;
+    let got_f32: Vec<f32> = got.iter().map(|v| *v as f32).collect();
+    assert_eq!(
+        PlainExecutor::argmax(&got_f32, classes),
+        PlainExecutor::argmax(&want, classes),
+        "Theorem 1: eco plan must not change predictions"
+    );
+}
+
+#[test]
+fn hummingbird_plan_reduces_model_communication() {
+    let Some(e) = env() else { return };
+    let baseline = PlanSet::baseline(e.cfg.relu_groups);
+    let hb8 = PlanSet::uniform(e.cfg.relu_groups, 8, 2).unwrap();
+    let hb6 = PlanSet::uniform(e.cfg.relu_groups, 6, 2).unwrap();
+    let (_, b0, r0) = mpc_run(&e, &baseline, 0, 42);
+    let (_, b8, r8) = mpc_run(&e, &hb8, 0, 42);
+    let (_, b6, _) = mpc_run(&e, &hb6, 0, 42);
+    // Paper Fig 11: bytes shrink 2.68–8.76x and saturate (Mult floor);
+    // rounds shrink 1.12–1.56x.
+    let ratio8 = b0 as f64 / b8 as f64;
+    let ratio6 = b0 as f64 / b6 as f64;
+    assert!(ratio8 > 2.5, "8-bit plan only cut bytes {ratio8:.2}x ({b0} -> {b8})");
+    assert!(ratio6 > ratio8, "6-bit must cut more than 8-bit");
+    assert!(ratio6 < 64.0, "saturation: Mult bytes cannot be compressed");
+    assert!(r0 > r8, "rounds must shrink ({r0} -> {r8})");
+}

@@ -1,0 +1,275 @@
+//! Randomized property tests over the protocol invariants (hand-rolled
+//! generator sweep — proptest is not in the offline crate set).
+//!
+//! Each property runs many random trials across party counts, widths and
+//! value ranges; failures print the offending seed for reproduction.
+
+use hummingbird::crypto::prg::Prg;
+use hummingbird::gmw::harness::run_parties;
+use hummingbird::gmw::{adder, ReluPlan};
+use hummingbird::net::accounting::Phase;
+use hummingbird::ring;
+use hummingbird::sharing::{
+    reconstruct_arith, reconstruct_binary, share_arith, share_binary, PairwisePrgs,
+};
+
+/// Property: secure add on random widths/parties == plaintext add mod 2^w.
+#[test]
+fn prop_ks_add_random() {
+    let mut meta = Prg::new(0xA11CE, 0);
+    for trial in 0..24 {
+        let parties = 2 + (meta.next_u64() % 2) as usize; // 2 or 3
+        let w = 1 + (meta.next_u64() % 64) as u32; // 1..=64
+        let n = 1 + (meta.next_u64() % 64) as usize;
+        let seed = meta.next_u64();
+        let mut prg = Prg::new(seed, 1);
+        let mask = ring::low_mask(w);
+        let x: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+        let y: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+        let xs: Vec<Vec<u64>> = share_binary(&mut prg, &x, parties)
+            .iter()
+            .map(|s| s.iter().map(|v| v & mask).collect())
+            .collect();
+        let ys: Vec<Vec<u64>> = share_binary(&mut prg, &y, parties)
+            .iter()
+            .map(|s| s.iter().map(|v| v & mask).collect())
+            .collect();
+        let run = run_parties(parties, seed, |p| {
+            let me = p.party();
+            adder::ks_add(p, &xs[me], &ys[me], w).unwrap()
+        });
+        let got = reconstruct_binary(&run.outputs);
+        let expect: Vec<u64> =
+            x.iter().zip(&y).map(|(a, b)| a.wrapping_add(*b) & mask).collect();
+        assert_eq!(got, expect, "trial={trial} seed={seed} parties={parties} w={w}");
+        // Round/byte accounting invariants.
+        assert_eq!(
+            run.trace.total_rounds(),
+            adder::rounds_for_width(w) as u64,
+            "round count w={w}"
+        );
+        if w > 1 && parties == 2 {
+            assert_eq!(run.trace.total_bytes(), adder::bytes_for_add(n, w), "bytes w={w}");
+        }
+    }
+}
+
+/// Property: DReLU over a random window matches the scalar theory model
+/// (sign of the windowed share sum) for every element.
+#[test]
+fn prop_drelu_window_matches_theory() {
+    let mut meta = Prg::new(0xD3E1, 0);
+    for trial in 0..16 {
+        let w = 2 + (meta.next_u64() % 30) as u32;
+        let m = (meta.next_u64() % 8) as u32;
+        let k = (m + w).min(64);
+        let plan = ReluPlan::new(k, m).unwrap();
+        let seed = meta.next_u64();
+        let mut prg = Prg::new(seed, 2);
+        let n = 64;
+        let x: Vec<u64> = (0..n).map(|_| prg.next_u64()).collect();
+        let xs = share_arith(&mut prg, &x, 2);
+        // Theory: windowed shares add mod 2^(k-m); DReLU = !msb.
+        let expect: Vec<u64> = (0..n)
+            .map(|i| {
+                let a0 = ring::bit_window(xs[0][i], plan.k, plan.m);
+                let a1 = ring::bit_window(xs[1][i], plan.k, plan.m);
+                let t = a0.wrapping_add(a1) & ring::low_mask(plan.width());
+                1 ^ ring::msb_w(t, plan.width())
+            })
+            .collect();
+        let xs2 = xs.clone();
+        let run = run_parties(2, seed, move |p| {
+            let me = p.party();
+            p.drelu(&xs2[me], plan).unwrap()
+        });
+        let got = reconstruct_arith(&run.outputs);
+        assert_eq!(got, expect, "trial={trial} seed={seed} k={k} m={m}");
+    }
+}
+
+/// Property: full ReLU with a window covering the value range acts exactly
+/// as ReLU-then-prune (Theorems 1+2 combined), for random ranges.
+#[test]
+fn prop_relu_theorem_semantics() {
+    let mut meta = Prg::new(0x7E02, 0);
+    for trial in 0..12 {
+        let k = 16 + (meta.next_u64() % 24) as u32; // 16..40
+        let m = (meta.next_u64() % 6) as u32;
+        let plan = ReluPlan::new(k, m).unwrap();
+        let bound = 1u64 << (k - 1);
+        let thresh = 1u64 << m;
+        let seed = meta.next_u64();
+        let mut prg = Prg::new(seed, 3);
+        let n = 128;
+        let x: Vec<u64> = (0..n)
+            .map(|_| {
+                let v = prg.next_u64() % bound;
+                if prg.next_u64() & 1 == 0 {
+                    v
+                } else {
+                    v.wrapping_neg()
+                }
+            })
+            .collect();
+        let xs = share_arith(&mut prg, &x, 2);
+        let xs2 = xs.clone();
+        let run = run_parties(2, seed, move |p| {
+            let me = p.party();
+            p.relu(&xs2[me], plan).unwrap()
+        });
+        let got = reconstruct_arith(&run.outputs);
+        for (xi, zi) in x.iter().zip(&got) {
+            if (*xi as i64) < 0 {
+                assert_eq!(*zi, 0, "negative kept: x={} trial={trial}", *xi as i64);
+            } else if *xi >= thresh {
+                assert_eq!(zi, xi, "in-range positive dropped: x={xi} trial={trial}");
+            } else {
+                assert!(*zi == 0 || zi == xi, "invalid output for small x={xi}");
+            }
+        }
+    }
+}
+
+/// Property: pairwise zero sharings always cancel, arithmetic and binary,
+/// any party count, any interleaving of draws.
+#[test]
+fn prop_zero_sharing_cancels() {
+    let mut meta = Prg::new(0x2E20, 0);
+    for _ in 0..20 {
+        let parties = 2 + (meta.next_u64() % 4) as usize; // 2..=5
+        let seed = meta.next_u64();
+        let mut prgs: Vec<PairwisePrgs> =
+            (0..parties).map(|p| PairwisePrgs::new(seed, p, parties)).collect();
+        for round in 0..4 {
+            let n = 1 + (meta.next_u64() % 32) as usize;
+            if round % 2 == 0 {
+                let shares: Vec<Vec<u64>> = prgs.iter_mut().map(|p| p.zero_binary(n)).collect();
+                assert_eq!(reconstruct_binary(&shares), vec![0u64; n]);
+            } else {
+                let shares: Vec<Vec<u64>> = prgs.iter_mut().map(|p| p.zero_arith(n)).collect();
+                assert_eq!(reconstruct_arith(&shares), vec![0u64; n]);
+            }
+        }
+    }
+}
+
+/// Property: communication accounting is identical across parties
+/// (symmetric protocol).
+#[test]
+fn prop_symmetric_accounting() {
+    let mut prg = Prg::new(5, 5);
+    let n = 64;
+    let x: Vec<u64> = prg.vec_u64(n);
+    let xs = share_arith(&mut prg, &x, 3);
+    let plan = ReluPlan::new(18, 2).unwrap();
+    let traces = std::sync::Mutex::new(Vec::new());
+    run_parties(3, 9, |p| {
+        use hummingbird::net::Transport;
+        let me = p.party();
+        let out = p.relu(&xs[me], plan).unwrap();
+        traces.lock().unwrap().push((
+            p.transport.trace().total_bytes(),
+            p.transport.trace().total_rounds(),
+        ));
+        out
+    });
+    let traces = traces.into_inner().unwrap();
+    assert!(traces.windows(2).all(|w| w[0] == w[1]), "asymmetric accounting: {traces:?}");
+}
+
+/// Failure injection: a party that disappears mid-protocol must surface a
+/// transport error on the peer, not a hang or a wrong answer.
+#[test]
+fn prop_party_drop_is_an_error() {
+    use hummingbird::gmw::GmwParty;
+    use hummingbird::net::local::hub;
+    let mut transports = hub(2);
+    let t1 = transports.pop().unwrap();
+    let t0 = transports.pop().unwrap();
+    // Party 1 exchanges once and exits; party 0 tries to keep going.
+    let h1 = std::thread::spawn(move || {
+        let mut p = GmwParty::new(t1, 1);
+        let _ = p.open_binary(Phase::Circuit, &[1, 2, 3], 8);
+        // drop
+    });
+    let h0 = std::thread::spawn(move || {
+        let mut p = GmwParty::new(t0, 1);
+        let _ = p.open_binary(Phase::Circuit, &[4, 5, 6], 8).unwrap();
+        // Peer is gone now; the next exchange must error.
+        p.open_binary(Phase::Circuit, &[7, 8, 9], 8)
+    });
+    h1.join().unwrap();
+    let res = h0.join().unwrap();
+    assert!(res.is_err(), "expected transport error after peer drop");
+}
+
+/// Property: every adder-option combination computes the same sum; the
+/// optimizations only change bytes/rounds (monotonically downward).
+#[test]
+fn prop_adder_ablations_equivalent() {
+    use hummingbird::gmw::adder::AdderOptions;
+    let mut meta = Prg::new(0xAB1A, 0);
+    for _ in 0..6 {
+        let w = 2 + (meta.next_u64() % 62) as u32;
+        let seed = meta.next_u64();
+        let mut prg = Prg::new(seed, 4);
+        let mask = ring::low_mask(w);
+        let n = 48;
+        let x: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+        let y: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+        let xs: Vec<Vec<u64>> = share_binary(&mut prg, &x, 2)
+            .iter()
+            .map(|s| s.iter().map(|v| v & mask).collect())
+            .collect();
+        let ys: Vec<Vec<u64>> = share_binary(&mut prg, &y, 2)
+            .iter()
+            .map(|s| s.iter().map(|v| v & mask).collect())
+            .collect();
+        let expect: Vec<u64> =
+            x.iter().zip(&y).map(|(a, b)| a.wrapping_add(*b) & mask).collect();
+        let mut costs = Vec::new();
+        for opts in [
+            AdderOptions { batch_stage_ands: false, skip_last_p: false },
+            AdderOptions { batch_stage_ands: true, skip_last_p: false },
+            AdderOptions::default(),
+        ] {
+            let xs2 = xs.clone();
+            let ys2 = ys.clone();
+            let run = run_parties(2, seed, move |p| {
+                let me = p.party();
+                adder::ks_add_with(p, &xs2[me], &ys2[me], w, opts).unwrap()
+            });
+            assert_eq!(reconstruct_binary(&run.outputs), expect, "w={w} opts={opts:?}");
+            costs.push((run.trace.total_bytes(), run.trace.total_rounds()));
+        }
+        // Batched never costs more rounds; last-P skip never costs more bytes.
+        assert!(costs[1].1 <= costs[0].1, "batching increased rounds: {costs:?}");
+        assert!(costs[2].0 <= costs[1].0, "last-P skip increased bytes: {costs:?}");
+    }
+}
+
+/// Property: beaver usage accounting matches the protocol's actual draws
+/// (offline storage estimation must be trustworthy).
+#[test]
+fn prop_beaver_usage_accounting() {
+    let mut prg = Prg::new(6, 6);
+    let n = 50;
+    let x: Vec<u64> = prg.vec_u64(n);
+    let xs = share_arith(&mut prg, &x, 2);
+    for (k, m) in [(64u32, 0u32), (16, 4)] {
+        let plan = ReluPlan::new(k, m).unwrap();
+        let xs2 = xs.clone();
+        let run = run_parties(2, 11, move |p| {
+            let me = p.party();
+            p.relu(&xs2[me], plan).unwrap();
+            p.dealer.usage()
+        });
+        let u = run.outputs[0];
+        // ReLU = a2b (1 + per-stage ANDs) + daBits + 1 arith mult.
+        assert_eq!(u.arith_triples, n as u64, "one arith triple per element");
+        assert_eq!(u.dabits, n as u64, "one daBit per element");
+        assert!(u.bin_triple_words > 0);
+        assert_eq!(run.outputs[0], run.outputs[1], "usage symmetric");
+    }
+}

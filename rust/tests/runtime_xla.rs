@@ -1,0 +1,119 @@
+//! Integration: the PJRT runtime executes the Pallas-lowered HLO artifacts
+//! and matches the pure-Rust kernels bit-for-bit, and the XLA kernel
+//! backend drives the full GMW protocol to the same results as the Rust
+//! backend. Requires `make artifacts` (skips cleanly if absent).
+
+use hummingbird::crypto::prg::Prg;
+use hummingbird::gmw::harness::{run_parties, run_parties_with};
+use hummingbird::gmw::kernels::{KernelBackend, RustKernels};
+use hummingbird::gmw::ReluPlan;
+use hummingbird::ring;
+use hummingbird::runtime::{Manifest, Runtime, XlaKernels};
+use hummingbird::sharing::{reconstruct_arith, share_arith};
+
+fn artifacts_root() -> Option<std::path::PathBuf> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if root.join("manifest.json").exists() {
+        Some(root)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn xla_kernels_match_rust_kernels() {
+    let Some(root) = artifacts_root() else { return };
+    let rt = Runtime::new(&root).unwrap();
+    let manifest = Manifest::load(&root).unwrap();
+    let mut xla = XlaKernels::new(rt, manifest);
+    let mut rust = RustKernels;
+    let mut prg = Prg::new(42, 0);
+    // Cover: smaller than a bucket, exact bucket, between buckets, above
+    // the largest bucket (chunking).
+    for n in [100usize, 1024, 5000, 40000] {
+        let u = prg.vec_u64(n);
+        let v = prg.vec_u64(n);
+        let a = prg.vec_u64(n);
+        let b = prg.vec_u64(n);
+        let c = prg.vec_u64(n);
+        assert_eq!(
+            xla.and_open(&u, &v, &a, &b),
+            rust.and_open(&u, &v, &a, &b),
+            "and_open n={n}"
+        );
+        for leader in [true, false] {
+            assert_eq!(
+                xla.and_combine(&u, &v, &a, &b, &c, leader),
+                rust.and_combine(&u, &v, &a, &b, &c, leader),
+                "and_combine n={n}"
+            );
+            assert_eq!(
+                xla.mult_combine(&u, &v, &a, &b, &c, leader),
+                rust.mult_combine(&u, &v, &a, &b, &c, leader),
+                "mult_combine n={n}"
+            );
+        }
+        assert_eq!(xla.mult_open(&u, &v, &a, &b), rust.mult_open(&u, &v, &a, &b));
+        for w in [6u32, 20, 64] {
+            let mask = ring::low_mask(w);
+            let g: Vec<u64> = u.iter().map(|x| x & mask).collect();
+            let p: Vec<u64> = v.iter().map(|x| x & mask).collect();
+            for (s, last) in [(1u32, false), (4, true)] {
+                let (xu, xv) = xla.ks_stage_operands(&g, &p, s, w, last);
+                let (ru, rv) = rust.ks_stage_operands(&g, &p, s, w, last);
+                assert_eq!(xu, ru, "stage u n={n} w={w} s={s} last={last}");
+                assert_eq!(xv, rv, "stage v n={n} w={w} s={s} last={last}");
+            }
+        }
+    }
+}
+
+#[test]
+fn full_relu_protocol_on_xla_backend() {
+    let Some(root) = artifacts_root() else { return };
+    let parties = 2;
+    let mut prg = Prg::new(7, 7);
+    let n = 300;
+    let x: Vec<u64> = (0..n)
+        .map(|i| {
+            let v = prg.next_u64() % (1 << 20);
+            if i % 2 == 0 {
+                v
+            } else {
+                v.wrapping_neg()
+            }
+        })
+        .collect();
+    let xs = share_arith(&mut prg, &x, parties);
+    let plan = ReluPlan::new(24, 4).unwrap();
+
+    // Rust backend reference run.
+    let rust_run = run_parties(parties, 99, |p| {
+        let me = p.party();
+        p.relu(&xs[me], plan).unwrap()
+    });
+    let expect = reconstruct_arith(&rust_run.outputs);
+
+    // XLA backend run (per-party runtime built in-thread).
+    let root2 = root.clone();
+    let xla_run = run_parties_with(
+        parties,
+        99,
+        move |_pid| {
+            let rt = Runtime::new(&root2).unwrap();
+            let manifest = Manifest::load(&root2).unwrap();
+            XlaKernels::new(rt, manifest)
+        },
+        |p| {
+            let me = p.party();
+            assert_eq!(p.kernel_name(), "xla");
+            p.relu(&xs[me], plan).unwrap()
+        },
+    );
+    let got = reconstruct_arith(&xla_run.outputs);
+    assert_eq!(got, expect, "XLA-backend protocol output differs from Rust backend");
+    // Same protocol => identical communication trace shape.
+    assert_eq!(rust_run.trace.total_rounds(), xla_run.trace.total_rounds());
+    assert_eq!(rust_run.trace.total_bytes(), xla_run.trace.total_bytes());
+}

@@ -1,0 +1,117 @@
+//! Search engine end-to-end: eco finds an error-free plan, budget search
+//! meets its budget with bounded accuracy loss, and the searched plan beats
+//! the naive uniform assignment (the paper's §5.4 ablation).
+//! Requires artifacts + trained weights (skips cleanly otherwise).
+
+use hummingbird::hummingbird::search::{SearchConfig, SearchEngine, Strategy};
+use hummingbird::hummingbird::{simulator, PlanSet};
+use hummingbird::model::{Archive, Backend, Dataset, ModelConfig, PlainExecutor};
+
+const MODEL: &str = "micronet_synth10";
+
+struct Env {
+    cfg: ModelConfig,
+    exec: PlainExecutor,
+    dataset: Dataset,
+}
+
+fn env() -> Option<Env> {
+    let repo = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = repo.join("artifacts");
+    if !root.join("weights").join(format!("{MODEL}.json")).exists() {
+        eprintln!("skipping: weights missing");
+        return None;
+    }
+    let cfg = ModelConfig::load_named(repo, MODEL).ok()?;
+    let weights = Archive::load(root.join("weights").join(MODEL)).ok()?;
+    let dataset = Dataset::load(&root, &cfg.dataset).ok()?;
+    // Naive backend keeps this test independent of the PJRT runtime.
+    let exec = PlainExecutor::new(cfg.clone(), weights, Backend::Naive);
+    Some(Env { cfg, exec, dataset })
+}
+
+fn engine<'a>(e: &'a Env, strategy: Strategy, n: usize) -> SearchEngine<'a> {
+    // Default widths / m-scan: later micronet groups carry large
+    // activations, so windows must be able to slide up to k ≈ 18.
+    let scfg = SearchConfig { strategy, val_samples: n, batch: 64, ..SearchConfig::default() };
+    SearchEngine::new(
+        &e.exec,
+        &e.dataset.val.images,
+        &e.dataset.val.labels[..n],
+        e.dataset.val.sample_elems,
+        scfg,
+    )
+}
+
+#[test]
+fn eco_search_is_error_free_and_shrinks_k() {
+    let Some(e) = env() else { return };
+    let n = 96;
+    let result = engine(&e, Strategy::Eco, n).run().unwrap();
+    assert!(
+        result.final_acc + 1e-9 >= result.baseline_acc,
+        "eco must not lose accuracy: {} vs {}",
+        result.final_acc,
+        result.baseline_acc
+    );
+    for g in 0..e.cfg.relu_groups {
+        let p = result.plans.plan_for(g);
+        assert_eq!(p.m, 0, "eco never drops low bits");
+        assert!(p.k < 40, "eco should cut high bits substantially, got k={}", p.k);
+        assert!(p.k > 8, "suspiciously small k={}", p.k);
+    }
+    // Paper: 66-72% of bits discarded by eco (at N=64 and f=16); at f=12
+    // with small activations we expect a similar or better fraction.
+    let frac = result.plans.budget_fraction(&e.cfg);
+    assert!(frac < 0.45, "eco kept {frac} of bits");
+}
+
+#[test]
+fn budget_search_meets_budget_with_bounded_loss() {
+    let Some(e) = env() else { return };
+    let n = 96;
+    let budget = 8.0 / 64.0;
+    let result = engine(&e, Strategy::Budget(budget), n).run().unwrap();
+    assert!(
+        result.budget_fraction <= budget + 1e-9,
+        "budget violated: {} > {budget}",
+        result.budget_fraction
+    );
+    assert!(
+        result.final_acc >= result.baseline_acc - 0.10,
+        "accuracy collapsed: {} vs baseline {}",
+        result.final_acc,
+        result.baseline_acc
+    );
+    assert!(result.evals > 0 && result.search_time_s > 0.0);
+}
+
+#[test]
+fn searched_plan_beats_naive_uniform() {
+    let Some(e) = env() else { return };
+    let n = 96;
+    let budget = 6.0 / 64.0;
+    let result = engine(&e, Strategy::Budget(budget), n).run().unwrap();
+    // Naive: same width everywhere, no m tuning (k chosen from low bits).
+    let naive = PlanSet::uniform(e.cfg.relu_groups, 6, 0).unwrap();
+    let eval = |plans: &PlanSet| {
+        simulator::evaluate_plans(
+            &e.exec,
+            &e.dataset.test.images[..256 * e.dataset.test.sample_elems],
+            &e.dataset.test.labels[..256],
+            e.dataset.test.sample_elems,
+            64,
+            plans,
+            17,
+        )
+        .unwrap()
+    };
+    let searched_acc = eval(&result.plans);
+    let naive_acc = eval(&naive);
+    // The paper reports >8% gaps; we only require the searched plan to be
+    // at least as good (plus slack for evaluation noise).
+    assert!(
+        searched_acc + 0.02 >= naive_acc,
+        "searched {searched_acc} worse than naive {naive_acc}"
+    );
+}
