@@ -33,5 +33,25 @@ fn main() {
     bench.bench_bytes("pack_bytes/w6", bitpack::packed_bytes(n, 6), || {
         black_box(bitpack::pack_bytes(black_box(&src), 6));
     });
+
+    // Fused hot-path pair (allocation-free, thread-scalable): pack straight
+    // into a reused wire buffer, unpack-XOR straight into the lane buffer.
+    let threads = hummingbird::util::benchkit::bench_threads();
+    let bytes6 = bitpack::packed_bytes(n, 6);
+    for t in [1usize, threads] {
+        let mut wire = Vec::new();
+        bench.bench_bytes(&format!("pack_bytes_into/w6/{n}/t{t}"), bytes6, || {
+            bitpack::pack_bytes_into(black_box(&src), 6, &mut wire, t);
+            black_box(&wire);
+        });
+        let mut out = vec![0u64; n];
+        bench.bench_bytes(&format!("unpack_xor_into/w6/{n}/t{t}"), bytes6, || {
+            bitpack::unpack_bytes_xor_into(black_box(&wire), 6, n, &mut out, t);
+            black_box(&out);
+        });
+        if threads == 1 {
+            break;
+        }
+    }
     bench.dump_json("bitpack");
 }

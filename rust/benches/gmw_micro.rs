@@ -4,10 +4,10 @@
 //! `cargo bench --bench gmw_micro` (HB_BENCH_QUICK=1 for a fast pass).
 
 use hummingbird::crypto::prg::Prg;
-use hummingbird::gmw::harness::run_parties;
+use hummingbird::gmw::harness::{run_parties, run_parties_threaded};
 use hummingbird::gmw::{adder, ReluPlan};
 use hummingbird::sharing::{share_arith, share_binary};
-use hummingbird::util::benchkit::Bench;
+use hummingbird::util::benchkit::{bench_threads, Bench};
 
 fn main() {
     let mut bench = Bench::new();
@@ -98,6 +98,46 @@ fn main() {
                 p.b2a_bit(&bs[me]).unwrap()
             });
         });
+    }
+
+    // Hot path at scale: n = 65536, single-threaded vs multi-threaded
+    // (the zero-allocation arena + parallel kernels + fused bitpack path;
+    // perf target: >= 1.5x at this size on multi-core hosts, no regression
+    // at the small sizes above, which all run t=1).
+    {
+        let n_big = 65536usize;
+        let threads = bench_threads();
+        let xb: Vec<u64> = (0..n_big).map(|_| prg.next_u64() % (1 << 16)).collect();
+        let xs_big = share_arith(&mut prg, &xb, 2);
+        let ub = share_binary(&mut prg, &xb, 2);
+        let vb = share_binary(&mut prg, &xb, 2);
+        let plan = ReluPlan::new(12, 4).unwrap();
+        for t in [1usize, threads] {
+            // Shares are borrowed, not cloned, inside the timed closures:
+            // a per-iteration multi-MB memcpy would dilute the t1-vs-tN
+            // comparison these rows exist to make.
+            bench.bench_elems(&format!("and_gates/64bit/{n_big}/t{t}"), n_big as u64, || {
+                run_parties_threaded(2, 21, t, |p| {
+                    let me = p.party();
+                    p.and_gates(
+                        hummingbird::net::accounting::Phase::Circuit,
+                        &ub[me],
+                        &vb[me],
+                        64,
+                    )
+                    .unwrap()
+                });
+            });
+            bench.bench_elems(&format!("relu/hb8/{n_big}/t{t}"), n_big as u64, || {
+                run_parties_threaded(2, 22, t, |p| {
+                    let me = p.party();
+                    p.relu(&xs_big[me], plan).unwrap()
+                });
+            });
+            if threads == 1 {
+                break; // single-core host: the two rows would be identical
+            }
+        }
     }
 
     bench.dump_json("gmw_micro");

@@ -3,11 +3,11 @@
 //! backend ablation (DESIGN.md §Perf).
 
 use hummingbird::crypto::prg::Prg;
-use hummingbird::gmw::harness::{run_parties, run_parties_with};
+use hummingbird::gmw::harness::{run_parties, run_parties_threaded, run_parties_with};
 use hummingbird::gmw::ReluPlan;
 use hummingbird::runtime::{Manifest, Runtime, XlaKernels};
 use hummingbird::sharing::share_arith;
-use hummingbird::util::benchkit::Bench;
+use hummingbird::util::benchkit::{bench_threads, Bench};
 
 fn main() {
     let mut bench = Bench::new();
@@ -30,6 +30,33 @@ fn main() {
                     p.relu(&xs[me], plan).unwrap()
                 });
             });
+        }
+    }
+
+    // Scale + threading: the arena/parallel-kernel/fused-bitpack hot path
+    // at n = 65536 (perf target: >= 1.5x multi-threaded over t=1 here; the
+    // small-n rows above all run single-threaded and must not regress).
+    {
+        let n = 65536usize;
+        let threads = bench_threads();
+        let x: Vec<u64> = (0..n).map(|_| prg.next_u64() % (1 << 16)).collect();
+        let xs = share_arith(&mut prg, &x, 2);
+        for (label, plan) in
+            [("baseline64", ReluPlan::BASELINE), ("hb8", ReluPlan::new(12, 4).unwrap())]
+        {
+            for t in [1usize, threads] {
+                // Borrow the shares (no per-iteration clone) so the t1-vs-tN
+                // comparison measures the protocol, not a memcpy.
+                bench.bench_elems(&format!("relu/rust/{label}/{n}/t{t}"), n as u64, || {
+                    run_parties_threaded(2, 8, t, |p| {
+                        let me = p.party();
+                        p.relu(&xs[me], plan).unwrap()
+                    });
+                });
+                if threads == 1 {
+                    break; // single-core host: the rows would be identical
+                }
+            }
         }
     }
 

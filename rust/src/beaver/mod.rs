@@ -91,48 +91,77 @@ impl TtpDealer {
         self.usage
     }
 
-    /// Draw `n` arithmetic triples; returns this party's shares.
-    pub fn arith_triples(&mut self, n: usize) -> ArithTriples {
+    /// Draw arithmetic triples into caller-provided buffers (all the same
+    /// length). Allocation-free: the zero-allocation hot path hands in
+    /// arena-pooled buffers. Stream consumption is identical to
+    /// [`TtpDealer::arith_triples`].
+    pub fn arith_triples_into(&mut self, a: &mut [u64], b: &mut [u64], c: &mut [u64]) {
+        let n = a.len();
+        debug_assert!(b.len() == n && c.len() == n);
         self.usage.arith_triples += n as u64;
-        let mut out = ArithTriples { a: vec![0; n], b: vec![0; n], c: vec![0; n] };
         for i in 0..n {
             // Dealer samples plaintext a, b and all share randomness from
             // the common stream; every party runs this same loop and keeps
             // only its own column.
-            let a = self.prg.next_u64();
-            let b = self.prg.next_u64();
-            let c = a.wrapping_mul(b);
-            out.a[i] = self.split_arith(a);
-            out.b[i] = self.split_arith(b);
-            out.c[i] = self.split_arith(c);
+            let pa = self.prg.next_u64();
+            let pb = self.prg.next_u64();
+            let pc = pa.wrapping_mul(pb);
+            a[i] = self.split_arith(pa);
+            b[i] = self.split_arith(pb);
+            c[i] = self.split_arith(pc);
         }
+    }
+
+    /// Draw `n` arithmetic triples; returns this party's shares.
+    pub fn arith_triples(&mut self, n: usize) -> ArithTriples {
+        let mut out = ArithTriples { a: vec![0; n], b: vec![0; n], c: vec![0; n] };
+        self.arith_triples_into(&mut out.a, &mut out.b, &mut out.c);
         out
+    }
+
+    /// Draw binary-triple words into caller-provided buffers, masking each
+    /// share to `mask` as it is written (so shares of w-bit lanes stay
+    /// w-bit lanes with no extra pass). Every party masks identically, so
+    /// the XOR-reconstruction still satisfies `c = a ∧ b` on the masked
+    /// lanes. Stream consumption is identical to [`TtpDealer::bin_triples`].
+    pub fn bin_triples_into(&mut self, mask: u64, a: &mut [u64], b: &mut [u64], c: &mut [u64]) {
+        let n = a.len();
+        debug_assert!(b.len() == n && c.len() == n);
+        self.usage.bin_triple_words += n as u64;
+        for i in 0..n {
+            let pa = self.prg.next_u64();
+            let pb = self.prg.next_u64();
+            let pc = pa & pb;
+            a[i] = self.split_binary(pa) & mask;
+            b[i] = self.split_binary(pb) & mask;
+            c[i] = self.split_binary(pc) & mask;
+        }
     }
 
     /// Draw `n` binary-triple words (64 bit-triples per word).
     pub fn bin_triples(&mut self, n: usize) -> BinTriples {
-        self.usage.bin_triple_words += n as u64;
         let mut out = BinTriples { a: vec![0; n], b: vec![0; n], c: vec![0; n] };
-        for i in 0..n {
-            let a = self.prg.next_u64();
-            let b = self.prg.next_u64();
-            let c = a & b;
-            out.a[i] = self.split_binary(a);
-            out.b[i] = self.split_binary(b);
-            out.c[i] = self.split_binary(c);
-        }
+        self.bin_triples_into(u64::MAX, &mut out.a, &mut out.b, &mut out.c);
         out
+    }
+
+    /// Draw daBits into caller-provided buffers. Stream consumption is
+    /// identical to [`TtpDealer::dabits`].
+    pub fn dabits_into(&mut self, r_bin: &mut [u64], r_arith: &mut [u64]) {
+        let n = r_bin.len();
+        debug_assert_eq!(r_arith.len(), n);
+        self.usage.dabits += n as u64;
+        for i in 0..n {
+            let r = self.prg.next_u64() & 1;
+            r_bin[i] = self.split_binary_masked(r, 1);
+            r_arith[i] = self.split_arith(r);
+        }
     }
 
     /// Draw `n` daBits.
     pub fn dabits(&mut self, n: usize) -> DaBits {
-        self.usage.dabits += n as u64;
         let mut out = DaBits { r_bin: vec![0; n], r_arith: vec![0; n] };
-        for i in 0..n {
-            let r = self.prg.next_u64() & 1;
-            out.r_bin[i] = self.split_binary_masked(r, 1);
-            out.r_arith[i] = self.split_arith(r);
-        }
+        self.dabits_into(&mut out.r_bin, &mut out.r_arith);
         out
     }
 

@@ -4,10 +4,35 @@
 //! bits into a 64-bit tensor before and after each communication". This
 //! module is that library: `n` lanes of `w`-bit values (stored one value per
 //! u64, low bits) are packed into `ceil(n*w/64)` dense u64 words for the
-//! wire, and unpacked on receipt. This is the hot path of every AND-gate
-//! opening in the reduced-ring circuit adder and of the 1-bit B2A openings,
-//! so it has a carefully optimized implementation plus a naive reference
-//! used by tests.
+//! wire, and unpacked on receipt.
+//!
+//! # Fused wire path (the GMW hot path)
+//!
+//! The protocol engine never materializes an intermediate full-width lane
+//! vector around a communication round. Instead it uses the fused pair:
+//!
+//! * [`pack_bytes_into`] — packs masked openings **directly into the wire
+//!   byte buffer** (an arena-pooled `Vec<u8>`), computing each output word
+//!   independently with [`packed_word`] so the work parallelizes across
+//!   words and performs zero allocations when the buffer has capacity.
+//! * [`unpack_bytes_xor_into`] — unpacks a peer's wire bytes and XOR-folds
+//!   them **directly into the caller's lane buffer**, one independent read
+//!   per lane, again allocation-free and parallel.
+//!
+//! Both are bit-exact with the classic [`pack`]/[`unpack`] pair (kept for
+//! tests, benches and non-hot-path users) for every `w ∈ 1..=64`, every lane
+//! count and every thread count — the round-trip tests below sweep all of it.
+//! Threading: callers pass an explicit thread count (the engine's `--threads`
+//! knob); small inputs always run inline (see `PAR_MIN_LANES` /
+//! `PAR_MIN_WORDS`), so single-lane openings never pay spawn overhead.
+
+use crate::ring::low_mask;
+use crate::util::threadpool::{par_chunks, par_chunks_mut, SendPtr};
+
+/// Below this many output words, `pack_bytes_into` stays single-threaded.
+const PAR_MIN_WORDS: usize = 2048;
+/// Below this many lanes, `unpack_bytes_xor_into` stays single-threaded.
+const PAR_MIN_LANES: usize = 8192;
 
 /// Number of u64 words needed to pack `n` lanes of `w` bits.
 #[inline]
@@ -24,103 +49,178 @@ pub fn packed_bytes(n: usize, w: u32) -> u64 {
     (n as u64 * w as u64).div_ceil(8)
 }
 
+/// Compute output word `j` of the packed stream independently of all other
+/// words: gathers the lanes overlapping bit range `[64j, 64j+64)`.
+///
+/// Lanes must have their high bits (above `w`) zero; `pack`/`pack_bytes_into`
+/// debug-assert this before calling.
+#[inline]
+pub fn packed_word(src: &[u64], w: u32, j: usize) -> u64 {
+    let w64 = w as u64;
+    let start_bit = 64u64 * j as u64;
+    let mut lane = (start_bit / w64) as usize;
+    // How many low bits of the first lane were already emitted in word j-1.
+    let mut lane_off = (start_bit % w64) as u32;
+    let mut out = 0u64;
+    let mut bit = 0u32;
+    while bit < 64 && lane < src.len() {
+        let avail = w - lane_off;
+        // High bits above `avail` are zero by the lane-width invariant, and
+        // bits spilling past the word boundary are dropped by the shift.
+        out |= (src[lane] >> lane_off) << bit;
+        bit += avail;
+        lane += 1;
+        lane_off = 0;
+    }
+    out
+}
+
+/// Extract lane `i` (a `w`-bit value) from a packed word stream, where
+/// word `j` is provided by `word(j)` (zero for out-of-range `j`).
+#[inline]
+fn lane_from_words(word: impl Fn(usize) -> u64, w: u32, mask: u64, i: usize) -> u64 {
+    let bit = i as u64 * w as u64;
+    let j = (bit / 64) as usize;
+    let off = (bit % 64) as u32;
+    let lo = word(j) >> off;
+    if w <= 64 - off {
+        lo & mask
+    } else {
+        (lo | (word(j + 1) << (64 - off))) & mask
+    }
+}
+
+/// Read word `j` from a little-endian byte stream, zero-padding past the end
+/// (wire buffers are byte-granular, so the final word may be partial).
+#[inline]
+fn word_at(bytes: &[u8], j: usize) -> u64 {
+    let lo = j * 8;
+    if lo + 8 <= bytes.len() {
+        let mut buf = [0u8; 8];
+        buf.copy_from_slice(&bytes[lo..lo + 8]);
+        u64::from_le_bytes(buf)
+    } else if lo < bytes.len() {
+        let mut buf = [0u8; 8];
+        let n = bytes.len() - lo;
+        buf[..n].copy_from_slice(&bytes[lo..]);
+        u64::from_le_bytes(buf)
+    } else {
+        0
+    }
+}
+
+#[inline]
+fn debug_assert_lane_widths(src: &[u64], w: u32) {
+    if cfg!(debug_assertions) && w < 64 {
+        for &v in src {
+            debug_assert_eq!(v >> w, 0, "lane has bits above width {w}");
+        }
+    }
+}
+
 /// Pack `src` (one w-bit value per u64 lane, low bits; high bits MUST be
 /// zero) into dense u64 words, little-endian bit order.
 pub fn pack(src: &[u64], w: u32, dst: &mut Vec<u64>) {
     debug_assert!(w >= 1 && w <= 64);
+    debug_assert_lane_widths(src, w);
     dst.clear();
     dst.resize(packed_len(src.len(), w), 0);
     if w == 64 {
         dst.copy_from_slice(src);
         return;
     }
-    let mut acc: u64 = 0; // bits accumulated, LSB-first
-    let mut nbits: u32 = 0; // how many bits of acc are valid
-    let mut out = 0usize;
-    for &v in src {
-        debug_assert_eq!(v >> w, 0, "lane has bits above width {w}");
-        acc |= v << nbits;
-        let take = 64 - nbits;
-        if w >= take {
-            // acc is full: flush and keep the remainder of v.
-            dst[out] = acc;
-            out += 1;
-            acc = if take == 64 { 0 } else { v >> take };
-            nbits = w - take;
-        } else {
-            nbits += w;
-        }
-    }
-    if nbits > 0 {
-        dst[out] = acc;
+    for (j, d) in dst.iter_mut().enumerate() {
+        *d = packed_word(src, w, j);
     }
 }
 
 /// Unpack `n` lanes of `w`-bit values from dense words (inverse of [`pack`]).
 pub fn unpack(src: &[u64], w: u32, n: usize, dst: &mut Vec<u64>) {
     debug_assert!(w >= 1 && w <= 64);
-    debug_assert!(src.len() >= packed_len(n, w), "packed buffer too short");
+    let needed = packed_len(n, w);
+    assert!(src.len() >= needed, "packed buffer too short");
     dst.clear();
     dst.resize(n, 0);
     if w == 64 {
         dst.copy_from_slice(&src[..n]);
         return;
     }
-    let mask = if w == 64 { u64::MAX } else { (1u64 << w) - 1 };
-    let needed = packed_len(n, w);
-    assert!(src.len() >= needed);
-    let mut word = 0usize;
-    let mut bit: u32 = 0;
-    for d in dst.iter_mut() {
-        let avail = 64 - bit;
-        // SAFETY: `word` stays < needed <= src.len(); the straddle read at
-        // word+1 only happens while bits remain, i.e. word+1 < needed.
-        let cur = unsafe { *src.get_unchecked(word) };
-        let lo = cur >> bit;
-        let v = if w <= avail {
-            lo & mask
-        } else {
-            let next = unsafe { *src.get_unchecked(word + 1) };
-            (lo | (next << avail)) & mask
-        };
-        *d = v;
-        bit += w;
-        if bit >= 64 {
-            bit -= 64;
-            word += 1;
-        }
+    let mask = low_mask(w);
+    for (i, d) in dst.iter_mut().enumerate() {
+        *d = lane_from_words(|j| if j < src.len() { src[j] } else { 0 }, w, mask, i);
     }
 }
 
-/// Pack directly to a byte buffer (the wire format). Trailing partial byte
-/// is zero-padded.
-pub fn pack_bytes(src: &[u64], w: u32) -> Vec<u8> {
-    let mut words = Vec::new();
-    pack(src, w, &mut words);
+/// Fused pack-to-wire: pack `src` directly into the byte buffer `dst`
+/// (cleared and resized to exactly [`packed_bytes`]). No intermediate word
+/// vector; zero allocations when `dst` already has capacity. `threads > 1`
+/// splits the word range across OS threads for large inputs.
+pub fn pack_bytes_into(src: &[u64], w: u32, dst: &mut Vec<u8>, threads: usize) {
+    debug_assert!(w >= 1 && w <= 64);
+    debug_assert_lane_widths(src, w);
     let nbytes = packed_bytes(src.len(), w) as usize;
-    // Words are little-endian on the wire: a straight LE byte dump of the
-    // word buffer, truncated to the exact byte count.
-    let mut out = Vec::with_capacity(words.len() * 8);
-    for wd in &words {
-        out.extend_from_slice(&wd.to_le_bytes());
+    // The word writes below cover every byte of [0, nbytes), so a buffer
+    // already at the right length (the warm arena path) needs no clearing
+    // — resizing only when the length differs avoids a memset per round.
+    if dst.len() != nbytes {
+        dst.clear();
+        dst.resize(nbytes, 0);
     }
-    out.truncate(nbytes);
+    let nwords = packed_len(src.len(), w);
+    let threads = if nwords >= PAR_MIN_WORDS { threads } else { 1 };
+    // Each word j owns the disjoint byte range [8j, min(8j+8, nbytes)).
+    let out = SendPtr(dst.as_mut_ptr());
+    let out_ref = &out;
+    par_chunks(nwords, threads, move |_, range| {
+        for j in range {
+            let word = packed_word(src, w, j).to_le_bytes();
+            let lo = j * 8;
+            let nb = (nbytes - lo).min(8);
+            // SAFETY: word j writes only its own byte range (disjoint per j),
+            // and lo + nb <= nbytes = dst.len().
+            unsafe {
+                std::ptr::copy_nonoverlapping(word.as_ptr(), out_ref.get().add(lo), nb);
+            }
+        }
+    });
+}
+
+/// Fused unpack-and-fold: extract `n` lanes of `w`-bit values from the wire
+/// bytes `src` and XOR each into `out[i]` in place. This is the receive side
+/// of every binary opening: peers' packed shares fold directly into the
+/// caller's (arena-owned) lane buffer with no intermediate vector.
+pub fn unpack_bytes_xor_into(src: &[u8], w: u32, n: usize, out: &mut [u64], threads: usize) {
+    debug_assert!(w >= 1 && w <= 64);
+    debug_assert!(out.len() >= n, "output buffer too short");
+    debug_assert!(
+        src.len() as u64 >= packed_bytes(n, w),
+        "wire buffer too short: {} < {}",
+        src.len(),
+        packed_bytes(n, w)
+    );
+    let mask = low_mask(w);
+    let threads = if n >= PAR_MIN_LANES { threads } else { 1 };
+    par_chunks_mut(&mut out[..n], threads, |off, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o ^= lane_from_words(|j| word_at(src, j), w, mask, off + i);
+        }
+    });
+}
+
+/// Pack directly to a freshly-allocated byte buffer (the wire format).
+/// Trailing partial byte is zero-padded. Non-hot-path convenience; the
+/// engine uses [`pack_bytes_into`] with a pooled buffer.
+pub fn pack_bytes(src: &[u64], w: u32) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_bytes_into(src, w, &mut out, 1);
     out
 }
 
-/// Unpack from a byte buffer produced by [`pack_bytes`].
+/// Unpack from a byte buffer produced by [`pack_bytes`]. Non-hot-path
+/// convenience; the engine uses [`unpack_bytes_xor_into`].
 pub fn unpack_bytes(src: &[u8], w: u32, n: usize) -> Vec<u64> {
-    let nwords = packed_len(n, w);
-    let mut words = vec![0u64; nwords];
-    for (i, &b) in src.iter().enumerate() {
-        let word = i / 8;
-        if word >= nwords {
-            break;
-        }
-        words[word] |= (b as u64) << ((i % 8) * 8);
-    }
-    let mut out = Vec::new();
-    unpack(&words, w, n, &mut out);
+    let mut out = vec![0u64; n];
+    unpack_bytes_xor_into(src, w, n, &mut out, 1);
     out
 }
 
@@ -162,7 +262,7 @@ mod tests {
 
     fn random_lanes(n: usize, w: u32, seed: u64) -> Vec<u64> {
         let mut prg = Prg::new(seed, w as u64);
-        let mask = if w == 64 { u64::MAX } else { (1u64 << w) - 1 };
+        let mask = low_mask(w);
         (0..n).map(|_| prg.next_u64() & mask).collect()
     }
 
@@ -176,6 +276,57 @@ mod tests {
                 let mut back = Vec::new();
                 unpack(&packed, w, n, &mut back);
                 assert_eq!(src, back, "w={w} n={n}");
+            }
+        }
+    }
+
+    /// Exhaustive byte-path round trip: every width 1..=64 with odd lane
+    /// counts chosen to hit every tail-word shape (partial final word,
+    /// exactly-full final word, single-lane buffers, lanes straddling word
+    /// boundaries), across thread counts.
+    #[test]
+    fn byte_roundtrip_exhaustive_widths_and_tails() {
+        for w in 1..=64u32 {
+            for n in [1usize, 3, 5, 7, 9, 63, 65, 127, 129] {
+                let src = random_lanes(n, w, 1000 + w as u64);
+                for threads in [1usize, 2, 4] {
+                    let mut wire = Vec::new();
+                    pack_bytes_into(&src, w, &mut wire, threads);
+                    assert_eq!(
+                        wire.len() as u64,
+                        packed_bytes(n, w),
+                        "wire size w={w} n={n}"
+                    );
+                    let mut out = vec![0u64; n];
+                    unpack_bytes_xor_into(&wire, w, n, &mut out, threads);
+                    assert_eq!(src, out, "roundtrip w={w} n={n} threads={threads}");
+                    // XOR-fold semantics: folding the same wire again
+                    // cancels back to zero.
+                    unpack_bytes_xor_into(&wire, w, n, &mut out, threads);
+                    assert!(out.iter().all(|v| *v == 0), "fold w={w} n={n}");
+                }
+            }
+        }
+    }
+
+    /// `packed_bytes` vs `packed_len` consistency: the byte count the
+    /// transport records (and `net::accounting` aggregates) must fit inside
+    /// the word buffer and differ by less than one word of padding, for all
+    /// widths and odd lane counts.
+    #[test]
+    fn packed_bytes_consistent_with_packed_len() {
+        for w in 1..=64u32 {
+            for n in [0usize, 1, 3, 7, 9, 63, 65, 127, 129, 1000, 4096] {
+                let bytes = packed_bytes(n, w);
+                let words = packed_len(n, w) as u64;
+                assert!(bytes <= words * 8, "w={w} n={n}: {bytes} > {}", words * 8);
+                assert!(
+                    words * 8 < bytes + 8,
+                    "w={w} n={n}: word padding exceeds 7 bytes ({bytes} vs {})",
+                    words * 8
+                );
+                // Exact bit accounting.
+                assert_eq!(bytes, (n as u64 * w as u64).div_ceil(8), "w={w} n={n}");
             }
         }
     }
@@ -194,14 +345,45 @@ mod tests {
         }
     }
 
+    /// The fused byte path agrees bit-for-bit with the word path + LE dump.
     #[test]
-    fn byte_roundtrip_and_size() {
-        for w in [1u32, 6, 12, 17, 64] {
+    fn fused_bytes_match_word_pack() {
+        for w in [1u32, 6, 12, 17, 33, 64] {
             let src = random_lanes(333, w, 3);
             let bytes = pack_bytes(&src, w);
             assert_eq!(bytes.len() as u64, packed_bytes(333, w));
+            let mut words = Vec::new();
+            pack(&src, w, &mut words);
+            let mut dump: Vec<u8> = Vec::new();
+            for wd in &words {
+                dump.extend_from_slice(&wd.to_le_bytes());
+            }
+            dump.truncate(bytes.len());
+            assert_eq!(bytes, dump, "w={w}");
             let back = unpack_bytes(&bytes, w, 333);
             assert_eq!(src, back, "w={w}");
+        }
+    }
+
+    /// Multi-threaded pack/unpack is bit-identical to single-threaded on a
+    /// buffer large enough to actually engage the thread pool.
+    #[test]
+    fn threading_is_bit_exact_above_thresholds() {
+        let w = 6u32;
+        let n = 64 * 1024; // 6144 words packed, 65536 lanes: above both thresholds
+        let src = random_lanes(n, w, 11);
+        let mut wire1 = Vec::new();
+        pack_bytes_into(&src, w, &mut wire1, 1);
+        for threads in [2usize, 4, 8] {
+            let mut wire_t = Vec::new();
+            pack_bytes_into(&src, w, &mut wire_t, threads);
+            assert_eq!(wire1, wire_t, "pack threads={threads}");
+            let mut out1 = vec![0u64; n];
+            unpack_bytes_xor_into(&wire1, w, n, &mut out1, 1);
+            let mut out_t = vec![0u64; n];
+            unpack_bytes_xor_into(&wire1, w, n, &mut out_t, threads);
+            assert_eq!(out1, out_t, "unpack threads={threads}");
+            assert_eq!(out1, src);
         }
     }
 

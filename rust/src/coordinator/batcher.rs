@@ -34,6 +34,10 @@ pub struct ServeOptions {
     pub session_seed: u64,
     /// Kernel backend for the GMW engine: "rust" (default) or "xla".
     pub gmw_backend: String,
+    /// Lane-parallelism budget per party for local GMW compute (kernels +
+    /// fused bitpack). 0 = auto: divide the machine's cores across the
+    /// simulated parties. Results are bit-identical for any value.
+    pub threads: usize,
 }
 
 impl ServeOptions {
@@ -46,7 +50,18 @@ impl ServeOptions {
             batch_timeout: Duration::from_millis(20),
             session_seed: 0x5e55_10,
             gmw_backend: "rust".into(),
+            threads: 0,
         }
+    }
+}
+
+/// Resolve the `threads = 0` auto setting: split the machine's cores across
+/// the co-located party threads (at least 1 each).
+fn resolve_threads(threads: usize, parties: usize) -> usize {
+    if threads == 0 {
+        (crate::util::threadpool::default_threads() / parties.max(1)).max(1)
+    } else {
+        threads
     }
 }
 
@@ -117,8 +132,11 @@ impl Coordinator {
             let out_tx = out_tx.clone();
             let seed = opts.session_seed;
             let backend = opts.gmw_backend.clone();
+            let threads = resolve_threads(opts.threads, opts.parties);
             parties.push(std::thread::spawn(move || {
-                party_main(t, cfg, weights, root, model_art, plans, jrx, out_tx, seed, backend);
+                party_main(
+                    t, cfg, weights, root, model_art, plans, jrx, out_tx, seed, backend, threads,
+                );
             }));
         }
 
@@ -207,6 +225,7 @@ fn party_main(
     out: Sender<(usize, PartyOut)>,
     seed: u64,
     backend: String,
+    threads: usize,
 ) {
     let me = transport.party();
     let rt = Runtime::new(&artifacts_root).expect("pjrt client");
@@ -218,9 +237,11 @@ fn party_main(
         let manifest = Manifest::load(&artifacts_root).expect("manifest");
         let kernels = XlaKernels::new(rt, manifest);
         let mut party = GmwParty::with_kernels(transport, seed, kernels);
+        party.set_threads(threads);
         party_loop(&exec, &mut party, &plans, jobs, out, me);
     } else {
         let mut party = GmwParty::new(transport, seed);
+        party.set_threads(threads);
         party_loop(&exec, &mut party, &plans, jobs, out, me);
     }
 }

@@ -2,7 +2,9 @@
 //!
 //! The library uses a single [`Error`] enum so that protocol, I/O, config and
 //! runtime failures compose across module boundaries without boxing. Binaries
-//! and examples convert into `anyhow::Error` at the edge.
+//! and examples convert into `anyhow::Error` at the edge. `Display` and
+//! `std::error::Error` are implemented by hand so the offline build carries
+//! no proc-macro dependency (`thiserror` is not in the vendored crate set).
 
 use std::fmt;
 
@@ -10,47 +12,69 @@ use std::fmt;
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Library-wide error type.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Malformed or inconsistent configuration.
-    #[error("config error: {0}")]
     Config(String),
 
     /// JSON parse / serialize failure (our hand-rolled parser).
-    #[error("json error at byte {offset}: {msg}")]
     Json { offset: usize, msg: String },
 
     /// Secret-sharing / protocol invariant violation.
-    #[error("protocol error: {0}")]
     Protocol(String),
 
     /// Transport-level failure (channel closed, socket error, framing).
-    #[error("transport error: {0}")]
     Transport(String),
 
     /// Beaver-triple store exhausted or mismatched.
-    #[error("beaver error: {0}")]
     Beaver(String),
 
     /// Shape mismatch in tensor ops or model graph wiring.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Model graph / weights problem.
-    #[error("model error: {0}")]
     Model(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Search engine failure (budget infeasible, no candidates, ...).
-    #[error("search error: {0}")]
     Search(String),
 
     /// Underlying I/O error.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Json { offset, msg } => write!(f, "json error at byte {offset}: {msg}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Transport(m) => write!(f, "transport error: {m}"),
+            Error::Beaver(m) => write!(f, "beaver error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Model(m) => write!(f, "model error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Search(m) => write!(f, "search error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {

@@ -11,6 +11,11 @@
 //!   * ⌈log₂ w⌉ stage rounds, 2 ANDs each batched — tagged `Phase::Circuit`
 //!     (the final stage only updates G: 1 AND)
 //! Per round each party sends 2·w bits per element per AND, bit-packed.
+//!
+//! Buffer discipline: all prefix state (G, P) and per-stage operands live
+//! in buffers checked out of the party's scratch arena and returned before
+//! the call completes — [`ks_add_into`] allocates nothing once the arena is
+//! warm. See `gmw::arena` for the ownership rules.
 
 use super::kernels::KernelBackend;
 use super::GmwParty;
@@ -80,7 +85,21 @@ pub fn ks_add<T: Transport, K: KernelBackend>(
     y: &[u64],
     w: u32,
 ) -> Result<Vec<u64>> {
-    ks_add_with(party, x, y, w, AdderOptions::default())
+    let mut out = vec![0u64; x.len()];
+    ks_add_with_into(party, x, y, w, AdderOptions::default(), &mut out)?;
+    Ok(out)
+}
+
+/// [`ks_add`] writing into a caller-provided buffer (the zero-allocation
+/// hot path used by `GmwParty::a2b_into`).
+pub fn ks_add_into<T: Transport, K: KernelBackend>(
+    party: &mut GmwParty<T, K>,
+    x: &[u64],
+    y: &[u64],
+    w: u32,
+    out: &mut [u64],
+) -> Result<()> {
+    ks_add_with_into(party, x, y, w, AdderOptions::default(), out)
 }
 
 /// [`ks_add`] with explicit design knobs (ablations).
@@ -91,18 +110,40 @@ pub fn ks_add_with<T: Transport, K: KernelBackend>(
     w: u32,
     opts: AdderOptions,
 ) -> Result<Vec<u64>> {
+    let mut out = vec![0u64; x.len()];
+    ks_add_with_into(party, x, y, w, opts, &mut out)?;
+    Ok(out)
+}
+
+/// [`ks_add_with`] writing into a caller-provided buffer.
+pub fn ks_add_with_into<T: Transport, K: KernelBackend>(
+    party: &mut GmwParty<T, K>,
+    x: &[u64],
+    y: &[u64],
+    w: u32,
+    opts: AdderOptions,
+    out: &mut [u64],
+) -> Result<()> {
     debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(out.len(), x.len());
     let n = x.len();
     let mask = ring::low_mask(w);
 
     // w == 1: addition mod 2 is XOR; no carries, no communication.
     if w == 1 {
-        return Ok(x.iter().zip(y).map(|(a, b)| (a ^ b) & 1).collect());
+        for ((o, a), b) in out.iter_mut().zip(x).zip(y) {
+            *o = (a ^ b) & 1;
+        }
+        return Ok(());
     }
 
     // P = x ⊕ y (local), G = x ∧ y (one AND round, "Others" in Fig 3).
-    let mut p: Vec<u64> = x.iter().zip(y).map(|(a, b)| (a ^ b) & mask).collect();
-    let mut g = party.and_gates(Phase::OtherAnd, x, y, w)?;
+    let mut p = party.scratch_words(n);
+    for ((pi, a), b) in p.iter_mut().zip(x).zip(y) {
+        *pi = (a ^ b) & mask;
+    }
+    let mut g = party.scratch_words(n);
+    party.and_gates_into(Phase::OtherAnd, x, y, w, &mut g)?;
 
     // Prefix stages ("Circuit" in Fig 3).
     let stages = ceil_log2(w);
@@ -110,47 +151,66 @@ pub fn ks_add_with<T: Transport, K: KernelBackend>(
     for idx in 0..stages {
         let last = opts.skip_last_p && idx + 1 == stages;
         if opts.batch_stage_ands || last {
-            let (u, v) = party.kernels_stage_operands(&g, &p, s, w, last);
-            let z = party.and_gates(Phase::Circuit, &u, &v, w)?;
+            let halves = if last { 1 } else { 2 };
+            let mut u = party.scratch_words(halves * n);
+            let mut v = party.scratch_words(halves * n);
+            party.kernels_stage_operands(&g, &p, s, w, last, &mut u, &mut v);
+            let mut z = party.scratch_words(halves * n);
+            party.and_gates_into(Phase::Circuit, &u, &v, w, &mut z)?;
             if last {
                 // z = P ∧ (G ≪ s)
-                for i in 0..n {
-                    g[i] ^= z[i];
+                for (gi, zi) in g.iter_mut().zip(&z) {
+                    *gi ^= *zi;
                 }
             } else {
                 let (zg, zp) = z.split_at(n);
-                for i in 0..n {
-                    g[i] ^= zg[i];
-                    p[i] = zp[i];
+                for (((gi, pi), zgi), zpi) in g.iter_mut().zip(p.iter_mut()).zip(zg).zip(zp) {
+                    *gi ^= *zgi;
+                    *pi = *zpi;
                 }
             }
+            party.recycle_words(z);
+            party.recycle_words(v);
+            party.recycle_words(u);
         } else {
             // Naive layout: one opening round per AND.
-            let gv: Vec<u64> = g.iter().map(|gi| (gi << s) & mask).collect();
-            let pv: Vec<u64> = p.iter().map(|pi| (pi << s) & mask).collect();
-            let zg = party.and_gates(Phase::Circuit, &p, &gv, w)?;
-            let zp = party.and_gates(Phase::Circuit, &p, &pv, w)?;
-            for i in 0..n {
-                g[i] ^= zg[i];
-                p[i] = zp[i];
+            let mut gv = party.scratch_words(n);
+            let mut pv = party.scratch_words(n);
+            for ((gvi, gi), (pvi, pi)) in
+                gv.iter_mut().zip(&g).zip(pv.iter_mut().zip(&p))
+            {
+                *gvi = (gi << s) & mask;
+                *pvi = (pi << s) & mask;
             }
+            let mut zg = party.scratch_words(n);
+            party.and_gates_into(Phase::Circuit, &p, &gv, w, &mut zg)?;
+            let mut zp = party.scratch_words(n);
+            party.and_gates_into(Phase::Circuit, &p, &pv, w, &mut zp)?;
+            for (((gi, pi), zgi), zpi) in g.iter_mut().zip(p.iter_mut()).zip(&zg).zip(&zp) {
+                *gi ^= *zgi;
+                *pi = *zpi;
+            }
+            party.recycle_words(zp);
+            party.recycle_words(zg);
+            party.recycle_words(pv);
+            party.recycle_words(gv);
         }
         s <<= 1;
     }
 
     // Sum = x ⊕ y ⊕ (carries ≪ 1); carries into bit i are G[i−1].
-    let out = x
-        .iter()
-        .zip(y)
-        .zip(&g)
-        .map(|((a, b), gi)| (a ^ b ^ (gi << 1)) & mask)
-        .collect();
-    Ok(out)
+    for (((o, a), b), gi) in out.iter_mut().zip(x).zip(y).zip(&g) {
+        *o = (a ^ b ^ (gi << 1)) & mask;
+    }
+    party.recycle_words(g);
+    party.recycle_words(p);
+    Ok(())
 }
 
 impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
     /// Expose the kernel's stage-operand builder to the adder (keeps the
     /// `kernels` field private to `gmw::mod`).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn kernels_stage_operands(
         &mut self,
         g: &[u64],
@@ -158,8 +218,10 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         s: u32,
         w: u32,
         last: bool,
-    ) -> (Vec<u64>, Vec<u64>) {
-        self.kernels_mut().ks_stage_operands(g, p, s, w, last)
+        u_out: &mut [u64],
+        v_out: &mut [u64],
+    ) {
+        self.kernels_mut().ks_stage_operands(g, p, s, w, last, u_out, v_out)
     }
 }
 

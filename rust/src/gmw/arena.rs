@@ -1,0 +1,211 @@
+//! Scratch arena: a size-classed buffer pool for the GMW online hot path.
+//!
+//! Every per-round temporary the protocol engine needs — masked openings,
+//! triple shares, opened values, Kogge–Stone stage operands, wire byte
+//! buffers — is checked out of this pool and returned when the step
+//! finishes. Buffers are bucketed by their **exact requested size**, and a
+//! protocol step always requests the same sizes in the same order for a
+//! given input shape. That makes the steady-state guarantee provable: the
+//! warmup round allocates one buffer per size class per peak-concurrency
+//! slot, and every later round replays the identical checkout sequence, so
+//! each checkout finds a free buffer in its class — **zero heap
+//! allocations** per steady-state round.
+//!
+//! # Ownership rules
+//!
+//! * The arena lives inside [`GmwParty`](super::GmwParty); one arena per
+//!   party, same thread as the protocol (no locking).
+//! * `take_*` transfers ownership of a plain `Vec` to the caller, so
+//!   checked-out buffers borrow-check like any local and can be passed to
+//!   kernels, the transport and `&mut self` protocol methods freely.
+//! * Callers return buffers with `put_*` when the protocol step that
+//!   checked them out completes, **without changing their length** (the
+//!   length is the bucket key). Buffers escaping on early error returns
+//!   merely shrink the pool — correctness is unaffected.
+//! * Buffers live across rounds but never cross parties or threads;
+//!   parallel kernels borrow slices of a checked-out buffer, they never
+//!   check out their own.
+//!
+//! [`ArenaStats`] counts checkouts, returns and allocation misses; the
+//! harness test `relu_steady_state_is_allocation_free` pins the
+//! zero-allocation claim by asserting that a warmed `relu_into` round adds
+//! no misses and balances checkouts against returns.
+
+use std::collections::BTreeMap;
+
+/// Counters describing arena traffic (monotonic over the arena's life).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Buffers handed out by `take_words` / `take_bytes`.
+    pub checkouts: u64,
+    /// Buffers given back via `put_words` / `put_bytes`.
+    pub returns: u64,
+    /// Checkouts that had to allocate (no free buffer in the size class).
+    pub alloc_misses: u64,
+}
+
+/// Pool of reusable `Vec<u64>` lane buffers and `Vec<u8>` wire buffers,
+/// bucketed by exact requested size.
+#[derive(Debug, Default)]
+pub struct Arena {
+    words: BTreeMap<usize, Vec<Vec<u64>>>,
+    bytes: BTreeMap<usize, Vec<Vec<u8>>>,
+    pooled_words: usize,
+    pooled_bytes: usize,
+    stats: ArenaStats,
+}
+
+/// Upper bound on pooled buffers per kind; excess returns are dropped so a
+/// one-off huge batch cannot pin memory forever.
+const MAX_POOLED: usize = 256;
+
+impl Arena {
+    pub fn new() -> Self {
+        Arena::default()
+    }
+
+    /// Check out a `u64` buffer of exactly `len` elements. **Contents are
+    /// unspecified** (stale data from the previous round on the warm path):
+    /// every engine call site fully overwrites its buffer, so the arena
+    /// does not pay a memset per checkout. Callers that need zeros must
+    /// zero themselves (as `reshare_binary_into` does).
+    pub fn take_words(&mut self, len: usize) -> Vec<u64> {
+        self.stats.checkouts += 1;
+        if let Some(b) = self.words.get_mut(&len).and_then(|bucket| bucket.pop()) {
+            self.pooled_words -= 1;
+            return b;
+        }
+        self.stats.alloc_misses += 1;
+        vec![0u64; len]
+    }
+
+    /// Return a `u64` buffer to the pool (length must be unchanged since
+    /// `take_words` — it is the bucket key).
+    pub fn put_words(&mut self, buf: Vec<u64>) {
+        self.stats.returns += 1;
+        if self.pooled_words < MAX_POOLED && !buf.is_empty() {
+            self.pooled_words += 1;
+            self.words.entry(buf.len()).or_default().push(buf);
+        }
+    }
+
+    /// Check out a byte buffer for a wire payload of `len` bytes. On the
+    /// warm path the buffer comes back still sized to `len` from its last
+    /// round (stale contents — the packer/serializer overwrites every byte
+    /// and its resize-to-wire-size is then a no-op, avoiding a memset per
+    /// round); on a miss it is empty with capacity `len`.
+    pub fn take_bytes(&mut self, len: usize) -> Vec<u8> {
+        self.stats.checkouts += 1;
+        if let Some(b) = self.bytes.get_mut(&len).and_then(|bucket| bucket.pop()) {
+            self.pooled_bytes -= 1;
+            return b;
+        }
+        self.stats.alloc_misses += 1;
+        Vec::with_capacity(len)
+    }
+
+    /// Return a byte buffer to the pool; its current length (the wire size
+    /// it was filled to) is the bucket key.
+    pub fn put_bytes(&mut self, buf: Vec<u8>) {
+        self.stats.returns += 1;
+        if self.pooled_bytes < MAX_POOLED && !buf.is_empty() {
+            self.pooled_bytes += 1;
+            self.bytes.entry(buf.len()).or_default().push(buf);
+        }
+    }
+
+    /// Snapshot of the traffic counters.
+    pub fn stats(&self) -> ArenaStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warm_pool_stops_allocating() {
+        let mut a = Arena::new();
+        // Cold: every take is a miss.
+        let b1 = a.take_words(100);
+        let b2 = a.take_words(200);
+        assert_eq!(a.stats().alloc_misses, 2);
+        a.put_words(b1);
+        a.put_words(b2);
+        // Warm: same shapes come from the pool.
+        let b1 = a.take_words(100);
+        let b2 = a.take_words(200);
+        let s = a.stats();
+        assert_eq!(s.alloc_misses, 2, "warm takes must not allocate");
+        assert_eq!(s.checkouts, 4);
+        a.put_words(b1);
+        a.put_words(b2);
+        assert_eq!(a.stats().returns, 4);
+    }
+
+    #[test]
+    fn take_words_preserves_length_not_contents() {
+        let mut a = Arena::new();
+        let mut b = a.take_words(8);
+        assert!(b.iter().all(|v| *v == 0), "cold take is freshly allocated");
+        b.iter_mut().for_each(|v| *v = u64::MAX);
+        a.put_words(b);
+        // Warm take: correct length, contents unspecified (no memset).
+        let b = a.take_words(8);
+        assert_eq!(b.len(), 8);
+    }
+
+    /// Size classes never cross: a small request must not consume a big
+    /// buffer that a later (steady-state) big request depends on.
+    #[test]
+    fn size_classes_are_exact() {
+        let mut a = Arena::new();
+        let big = a.take_words(1000);
+        a.put_words(big);
+        let small = a.take_words(10);
+        assert_eq!(a.stats().alloc_misses, 2, "small take must not steal the big buffer");
+        a.put_words(small);
+        let big = a.take_words(1000);
+        assert_eq!(a.stats().alloc_misses, 2, "big class must still be warm");
+        assert_eq!(big.len(), 1000);
+        a.put_words(big);
+    }
+
+    #[test]
+    fn byte_pool_keys_on_filled_length() {
+        let mut a = Arena::new();
+        let mut b = a.take_bytes(4096);
+        b.resize(4096, 7); // simulate the packer filling the wire buffer
+        a.put_bytes(b);
+        // Warm take: still sized to the wire length (packer's resize is a
+        // no-op), no allocation.
+        let b = a.take_bytes(4096);
+        assert_eq!(b.len(), 4096);
+        assert_eq!(a.stats().alloc_misses, 1);
+        a.put_bytes(b);
+    }
+
+    /// Interleaved takes/puts replaying the same sequence twice never miss
+    /// on the second pass (the steady-state argument in miniature).
+    #[test]
+    fn replayed_sequence_is_miss_free() {
+        let mut a = Arena::new();
+        let sequence = |a: &mut Arena| {
+            let x = a.take_words(16);
+            let y = a.take_words(32);
+            let z = a.take_words(16);
+            a.put_words(y);
+            let w = a.take_words(32);
+            a.put_words(x);
+            a.put_words(z);
+            a.put_words(w);
+        };
+        sequence(&mut a);
+        let warm = a.stats();
+        sequence(&mut a);
+        let s = a.stats();
+        assert_eq!(s.alloc_misses, warm.alloc_misses);
+        assert_eq!(s.checkouts, s.returns);
+    }
+}

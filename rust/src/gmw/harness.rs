@@ -16,14 +16,30 @@ pub struct HarnessRun<R> {
     pub trace: Arc<CommTrace>,
 }
 
-/// Run `f` on every party concurrently (Rust kernels) and collect results
-/// in party order.
+/// Run `f` on every party concurrently (Rust kernels, single-threaded
+/// lanes) and collect results in party order.
 pub fn run_parties<R, F>(parties: usize, session_seed: u64, f: F) -> HarnessRun<R>
 where
     R: Send,
     F: Fn(&mut GmwParty<LocalTransport, RustKernels>) -> R + Send + Sync,
 {
-    run_parties_with(parties, session_seed, |_p| RustKernels, f)
+    run_parties_inner(parties, session_seed, 1, |_p| RustKernels::default(), f)
+}
+
+/// Like [`run_parties`] but with each party's lane-parallelism budget set
+/// to `threads` (kernels + fused bitpack). Results are bit-identical to
+/// the single-threaded run for any value.
+pub fn run_parties_threaded<R, F>(
+    parties: usize,
+    session_seed: u64,
+    threads: usize,
+    f: F,
+) -> HarnessRun<R>
+where
+    R: Send,
+    F: Fn(&mut GmwParty<LocalTransport, RustKernels>) -> R + Send + Sync,
+{
+    run_parties_inner(parties, session_seed, threads, |_p| RustKernels::default(), f)
 }
 
 /// Run with a per-party kernel backend factory (e.g. to give each party its
@@ -31,6 +47,22 @@ where
 pub fn run_parties_with<R, F, K, KF>(
     parties: usize,
     session_seed: u64,
+    kf: KF,
+    f: F,
+) -> HarnessRun<R>
+where
+    R: Send,
+    K: KernelBackend,
+    F: Fn(&mut GmwParty<LocalTransport, K>) -> R + Send + Sync,
+    KF: Fn(usize) -> K + Send + Sync,
+{
+    run_parties_inner(parties, session_seed, 1, kf, f)
+}
+
+fn run_parties_inner<R, F, K, KF>(
+    parties: usize,
+    session_seed: u64,
+    threads: usize,
     kf: KF,
     f: F,
 ) -> HarnessRun<R>
@@ -50,6 +82,7 @@ where
             let kf = &kf;
             handles.push(s.spawn(move || {
                 let mut party = GmwParty::with_kernels(t, session_seed, kf(pid));
+                party.set_threads(threads);
                 f(&mut party)
             }));
         }
@@ -63,6 +96,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bitpack;
     use crate::crypto::prg::Prg;
     use crate::gmw::{adder, ReluPlan};
     use crate::net::accounting::Phase;
@@ -310,5 +344,106 @@ mod tests {
         // 6-bit window ≈ paper's HummingBird-6/64 regime: expect >4× total
         // reduction even though Mult is incompressible.
         assert!(bytes[0] as f64 / bytes[2] as f64 > 4.0, "{bytes:?}");
+    }
+
+    /// The zero-allocation claim, pinned: after one warmup ReLU has filled
+    /// the scratch arena, further `relu_into` rounds check every buffer out
+    /// of the pool (no allocation misses) and return every buffer they
+    /// check out.
+    #[test]
+    fn relu_steady_state_is_allocation_free() {
+        let parties = 2;
+        let mut prg = Prg::new(40, 0);
+        let n = 512;
+        let x: Vec<u64> = (0..n).map(|_| prg.next_u64() % (1 << 16)).collect();
+        let xs = share_arith(&mut prg, &x, parties);
+        let plan = ReluPlan::new(12, 4).unwrap();
+        let run = run_parties(parties, 6, |p| {
+            let me = p.party();
+            let mut out = vec![0u64; n];
+            // Warmup round populates the pool.
+            p.relu_into(&xs[me], plan, &mut out).unwrap();
+            let warm = p.arena_stats();
+            assert_eq!(warm.checkouts, warm.returns, "buffers leaked during warmup");
+            // Steady-state rounds must not allocate.
+            for round in 0..3 {
+                p.relu_into(&xs[me], plan, &mut out).unwrap();
+                let s = p.arena_stats();
+                assert_eq!(
+                    s.alloc_misses, warm.alloc_misses,
+                    "steady-state relu allocated (round {round})"
+                );
+                assert_eq!(s.checkouts, s.returns, "unbalanced checkout (round {round})");
+            }
+            out
+        });
+        // And it still computes ReLU.
+        let z = reconstruct_arith(&run.outputs);
+        for (xi, zi) in x.iter().zip(&z) {
+            assert!(*zi == 0 || zi == xi);
+        }
+    }
+
+    /// `relu_into` and multi-threaded lanes are bit-identical to the plain
+    /// single-threaded `relu` (the knob must never change results).
+    #[test]
+    fn threaded_relu_matches_single_threaded() {
+        let parties = 2;
+        let mut prg = Prg::new(41, 0);
+        let n = 1024;
+        let x: Vec<u64> = (0..n)
+            .map(|i| {
+                let v = prg.next_u64() % (1 << 18);
+                if i % 2 == 0 {
+                    v
+                } else {
+                    v.wrapping_neg()
+                }
+            })
+            .collect();
+        let xs = share_arith(&mut prg, &x, parties);
+        let plan = ReluPlan::new(20, 0).unwrap();
+        let base = run_parties(parties, 9, |p| {
+            let me = p.party();
+            p.relu(&xs[me], plan).unwrap()
+        });
+        for threads in [2usize, 4] {
+            let run = run_parties_threaded(parties, 9, threads, |p| {
+                let me = p.party();
+                assert_eq!(p.threads(), threads);
+                p.relu(&xs[me], plan).unwrap()
+            });
+            assert_eq!(run.outputs, base.outputs, "threads={threads}");
+            assert_eq!(run.trace.total_bytes(), base.trace.total_bytes());
+            assert_eq!(run.trace.total_rounds(), base.trace.total_rounds());
+        }
+    }
+
+    /// Wire accounting consistency: a binary opening of n lanes at width w
+    /// puts exactly `bitpack::packed_bytes(n, w)` bytes per peer on the
+    /// wire (the fused pack writes no padding beyond the final byte).
+    #[test]
+    fn open_wire_bytes_match_packed_bytes() {
+        for w in [1u32, 5, 6, 8, 13, 64] {
+            let n = 333usize;
+            let mask = ring::low_mask(w);
+            let mut prg = Prg::new(50 + w as u64, 0);
+            let x: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+            let xs = share_binary(&mut prg, &x, 2);
+            let xs: Vec<Vec<u64>> =
+                xs.iter().map(|s| s.iter().map(|v| v & mask).collect()).collect();
+            let run = run_parties(2, 8, |p| {
+                let me = p.party();
+                p.open_binary(Phase::Circuit, &xs[me], w).unwrap()
+            });
+            assert_eq!(run.outputs[0], run.outputs[1], "parties opened different values");
+            assert_eq!(run.outputs[0], x, "opened value wrong w={w}");
+            assert_eq!(
+                run.trace.total_bytes(),
+                bitpack::packed_bytes(n, w),
+                "wire bytes w={w}"
+            );
+            assert_eq!(run.trace.total_rounds(), 1);
+        }
     }
 }

@@ -4,9 +4,11 @@
 //! communication rounds is factored behind [`KernelBackend`], with two
 //! implementations:
 //!
-//! * [`RustKernels`] — portable scalar Rust (this file). The reference
-//!   implementation every test validates against, and the fastest choice
-//!   for small tensors where dispatch overhead dominates.
+//! * [`RustKernels`] — portable Rust (this file). The reference
+//!   implementation every test validates against. It splits large lane
+//!   ranges across OS threads via `util::threadpool` (the engine's
+//!   `--threads` knob); small tensors always run inline, so dispatch
+//!   overhead never dominates.
 //! * `runtime::XlaKernels` — the same five primitives lowered from the
 //!   Layer-1 **Pallas kernels** (`python/compile/kernels/bitops.py`) to HLO
 //!   and executed on the PJRT CPU client. This is the path that proves the
@@ -16,20 +18,41 @@
 //! protocol's communication structure: each `*_open` produces exactly the
 //! masked values that go on the wire, and each `*_combine` consumes exactly
 //! what came back.
+//!
+//! # Buffer discipline (zero-allocation hot path)
+//!
+//! Every primitive writes into a caller-provided `&mut [u64]` instead of
+//! returning a `Vec`. The protocol engine checks those buffers out of its
+//! [`Arena`](super::arena::Arena) and returns them when the round
+//! completes, so steady-state ReLU evaluation allocates nothing per round.
+//! Output layouts:
+//!
+//! * `and_open` / `mult_open`: `out.len() == 2n`, `d` in `out[..n]`,
+//!   `e` in `out[n..]`.
+//! * `and_combine` / `mult_combine`: `out.len() == n`.
+//! * `ks_stage_operands`: `u_out.len() == v_out.len() == halves·n` where
+//!   `halves = if last { 1 } else { 2 }`.
+
+use crate::util::threadpool::par_chunks_mut;
+
+/// Lane count below which the Rust kernels stay single-threaded (spawn
+/// overhead would swamp the arithmetic; keeps small-`n` latency unchanged).
+pub const PAR_MIN_LANES: usize = 8192;
 
 /// Masked-open / combine primitives for one party.
 ///
 /// Deliberately NOT `Send`: the PJRT client (XLA backend) is thread-local,
 /// so each party thread constructs its own backend in-thread (see
 /// `gmw::harness::run_parties_with`).
+#[allow(clippy::too_many_arguments)]
 pub trait KernelBackend {
     /// Beaver-AND open: given share vectors u, v and triple shares a, b
-    /// (all w-bit lanes), produce the concatenated masked opening
-    /// `d || e` = `(u ⊕ a) || (v ⊕ b)` (length 2n).
-    fn and_open(&mut self, u: &[u64], v: &[u64], a: &[u64], b: &[u64]) -> Vec<u64>;
+    /// (all w-bit lanes), write the concatenated masked opening
+    /// `d || e` = `(u ⊕ a) || (v ⊕ b)` into `out` (length 2n).
+    fn and_open(&mut self, u: &[u64], v: &[u64], a: &[u64], b: &[u64], out: &mut [u64]);
 
     /// Beaver-AND combine: given *public* opened d, e and triple shares
-    /// a, b, c, produce this party's share of u ∧ v:
+    /// a, b, c, write this party's share of u ∧ v into `out` (length n):
     /// `z = [leader] d∧e ⊕ d∧b ⊕ e∧a ⊕ c`.
     fn and_combine(
         &mut self,
@@ -39,21 +62,31 @@ pub trait KernelBackend {
         b: &[u64],
         c: &[u64],
         leader: bool,
-    ) -> Vec<u64>;
+        out: &mut [u64],
+    );
 
-    /// One Kogge–Stone stage's local prep: from prefix state (g, p) produce
-    /// the two AND operand pairs `(u, v)` for this stage:
+    /// One Kogge–Stone stage's local prep: from prefix state (g, p) write
+    /// the two AND operand vectors for this stage into `u_out` / `v_out`:
     /// `u = p || p`, `v = (g ≪ s) || (p ≪ s)` (all masked to w bits).
-    /// `last` skips the `p` half (the final stage only needs g).
-    fn ks_stage_operands(&mut self, g: &[u64], p: &[u64], s: u32, w: u32, last: bool)
-        -> (Vec<u64>, Vec<u64>);
+    /// `last` skips the `p` half (the final stage only needs g), halving
+    /// the operand lengths.
+    fn ks_stage_operands(
+        &mut self,
+        g: &[u64],
+        p: &[u64],
+        s: u32,
+        w: u32,
+        last: bool,
+        u_out: &mut [u64],
+        v_out: &mut [u64],
+    );
 
-    /// Beaver arithmetic-multiply open: `d || e` = `(x − a) || (y − b)`
-    /// over Z/2^64.
-    fn mult_open(&mut self, x: &[u64], y: &[u64], a: &[u64], b: &[u64]) -> Vec<u64>;
+    /// Beaver arithmetic-multiply open: write `d || e` = `(x − a) || (y − b)`
+    /// over Z/2^64 into `out` (length 2n).
+    fn mult_open(&mut self, x: &[u64], y: &[u64], a: &[u64], b: &[u64], out: &mut [u64]);
 
-    /// Beaver arithmetic-multiply combine:
-    /// `z = c + d·b + e·a + [leader] d·e` over Z/2^64.
+    /// Beaver arithmetic-multiply combine: write
+    /// `z = c + d·b + e·a + [leader] d·e` over Z/2^64 into `out` (length n).
     fn mult_combine(
         &mut self,
         d: &[u64],
@@ -62,26 +95,63 @@ pub trait KernelBackend {
         b: &[u64],
         c: &[u64],
         leader: bool,
-    ) -> Vec<u64>;
+        out: &mut [u64],
+    );
+
+    /// Thread-count knob for backends that parallelize across lanes
+    /// (no-op by default; the XLA backend parallelizes inside PJRT).
+    fn set_threads(&mut self, _threads: usize) {}
 
     /// Human-readable backend name (for metrics / bench labels).
     fn name(&self) -> &'static str;
 }
 
-/// Portable scalar implementation.
-#[derive(Debug, Default, Clone)]
-pub struct RustKernels;
+/// Portable Rust implementation, optionally multi-threaded across lanes.
+#[derive(Debug, Clone)]
+pub struct RustKernels {
+    threads: usize,
+}
 
-impl KernelBackend for RustKernels {
-    fn and_open(&mut self, u: &[u64], v: &[u64], a: &[u64], b: &[u64]) -> Vec<u64> {
-        debug_assert!(u.len() == v.len() && v.len() == a.len() && a.len() == b.len());
-        let n = u.len();
-        let mut out = vec![0u64; 2 * n];
-        for i in 0..n {
-            out[i] = u[i] ^ a[i];
-            out[n + i] = v[i] ^ b[i];
+impl Default for RustKernels {
+    fn default() -> Self {
+        RustKernels { threads: 1 }
+    }
+}
+
+impl RustKernels {
+    /// Kernels that split lane ranges across up to `threads` OS threads
+    /// (only engaged above [`PAR_MIN_LANES`] lanes).
+    pub fn with_threads(threads: usize) -> Self {
+        RustKernels { threads: threads.max(1) }
+    }
+
+    #[inline]
+    fn eff_threads(&self, n: usize) -> usize {
+        if n >= PAR_MIN_LANES {
+            self.threads
+        } else {
+            1
         }
-        out
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+impl KernelBackend for RustKernels {
+    fn and_open(&mut self, u: &[u64], v: &[u64], a: &[u64], b: &[u64], out: &mut [u64]) {
+        let n = u.len();
+        debug_assert!(v.len() == n && a.len() == n && b.len() == n && out.len() == 2 * n);
+        let t = self.eff_threads(n);
+        let (d_out, e_out) = out.split_at_mut(n);
+        par_chunks_mut(d_out, t, |off, chunk| {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                *o = u[off + i] ^ a[off + i];
+            }
+        });
+        par_chunks_mut(e_out, t, |off, chunk| {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                *o = v[off + i] ^ b[off + i];
+            }
+        });
     }
 
     fn and_combine(
@@ -92,17 +162,21 @@ impl KernelBackend for RustKernels {
         b: &[u64],
         c: &[u64],
         leader: bool,
-    ) -> Vec<u64> {
+        out: &mut [u64],
+    ) {
         let n = d.len();
-        let mut out = vec![0u64; n];
-        for i in 0..n {
-            let mut z = (d[i] & b[i]) ^ (e[i] & a[i]) ^ c[i];
-            if leader {
-                z ^= d[i] & e[i];
+        debug_assert!(e.len() == n && a.len() == n && b.len() == n && c.len() == n);
+        debug_assert_eq!(out.len(), n);
+        par_chunks_mut(out, self.eff_threads(n), |off, chunk| {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                let j = off + i;
+                let mut z = (d[j] & b[j]) ^ (e[j] & a[j]) ^ c[j];
+                if leader {
+                    z ^= d[j] & e[j];
+                }
+                *o = z;
             }
-            out[i] = z;
-        }
-        out
+        });
     }
 
     fn ks_stage_operands(
@@ -112,33 +186,49 @@ impl KernelBackend for RustKernels {
         s: u32,
         w: u32,
         last: bool,
-    ) -> (Vec<u64>, Vec<u64>) {
+        u_out: &mut [u64],
+        v_out: &mut [u64],
+    ) {
         let mask = crate::ring::low_mask(w);
         let n = g.len();
         let halves = if last { 1 } else { 2 };
-        let mut u = vec![0u64; halves * n];
-        let mut v = vec![0u64; halves * n];
-        for i in 0..n {
-            u[i] = p[i];
-            v[i] = (g[i] << s) & mask;
-        }
-        if !last {
-            for i in 0..n {
-                u[n + i] = p[i];
-                v[n + i] = (p[i] << s) & mask;
+        debug_assert!(p.len() == n && u_out.len() == halves * n && v_out.len() == halves * n);
+        let t = self.eff_threads(n);
+        par_chunks_mut(&mut u_out[..n], t, |off, chunk| {
+            chunk.copy_from_slice(&p[off..off + chunk.len()]);
+        });
+        par_chunks_mut(&mut v_out[..n], t, |off, chunk| {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                *o = (g[off + i] << s) & mask;
             }
+        });
+        if !last {
+            par_chunks_mut(&mut u_out[n..], t, |off, chunk| {
+                chunk.copy_from_slice(&p[off..off + chunk.len()]);
+            });
+            par_chunks_mut(&mut v_out[n..], t, |off, chunk| {
+                for (i, o) in chunk.iter_mut().enumerate() {
+                    *o = (p[off + i] << s) & mask;
+                }
+            });
         }
-        (u, v)
     }
 
-    fn mult_open(&mut self, x: &[u64], y: &[u64], a: &[u64], b: &[u64]) -> Vec<u64> {
+    fn mult_open(&mut self, x: &[u64], y: &[u64], a: &[u64], b: &[u64], out: &mut [u64]) {
         let n = x.len();
-        let mut out = vec![0u64; 2 * n];
-        for i in 0..n {
-            out[i] = x[i].wrapping_sub(a[i]);
-            out[n + i] = y[i].wrapping_sub(b[i]);
-        }
-        out
+        debug_assert!(y.len() == n && a.len() == n && b.len() == n && out.len() == 2 * n);
+        let t = self.eff_threads(n);
+        let (d_out, e_out) = out.split_at_mut(n);
+        par_chunks_mut(d_out, t, |off, chunk| {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                *o = x[off + i].wrapping_sub(a[off + i]);
+            }
+        });
+        par_chunks_mut(e_out, t, |off, chunk| {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                *o = y[off + i].wrapping_sub(b[off + i]);
+            }
+        });
     }
 
     fn mult_combine(
@@ -149,19 +239,27 @@ impl KernelBackend for RustKernels {
         b: &[u64],
         c: &[u64],
         leader: bool,
-    ) -> Vec<u64> {
+        out: &mut [u64],
+    ) {
         let n = d.len();
-        let mut out = vec![0u64; n];
-        for i in 0..n {
-            let mut z = c[i]
-                .wrapping_add(d[i].wrapping_mul(b[i]))
-                .wrapping_add(e[i].wrapping_mul(a[i]));
-            if leader {
-                z = z.wrapping_add(d[i].wrapping_mul(e[i]));
+        debug_assert!(e.len() == n && a.len() == n && b.len() == n && c.len() == n);
+        debug_assert_eq!(out.len(), n);
+        par_chunks_mut(out, self.eff_threads(n), |off, chunk| {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                let j = off + i;
+                let mut z = c[j]
+                    .wrapping_add(d[j].wrapping_mul(b[j]))
+                    .wrapping_add(e[j].wrapping_mul(a[j]));
+                if leader {
+                    z = z.wrapping_add(d[j].wrapping_mul(e[j]));
+                }
+                *o = z;
             }
-            out[i] = z;
-        }
-        out
+        });
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     fn name(&self) -> &'static str {
@@ -172,42 +270,103 @@ impl KernelBackend for RustKernels {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::crypto::prg::Prg;
 
     /// One-party-world sanity: with "shares" equal to plaintext and a zero
     /// triple, open/combine reduce to plain AND / MUL.
     #[test]
     fn degenerate_open_combine_is_plain_and() {
-        let mut k = RustKernels;
+        let mut k = RustKernels::default();
         let u = vec![0b1100u64];
         let v = vec![0b1010u64];
         let zero = vec![0u64];
-        let de = k.and_open(&u, &v, &zero, &zero);
+        let mut de = vec![0u64; 2];
+        k.and_open(&u, &v, &zero, &zero, &mut de);
         assert_eq!(de, vec![0b1100, 0b1010]);
-        let z = k.and_combine(&de[..1], &de[1..], &zero, &zero, &zero, true);
+        let mut z = vec![0u64; 1];
+        k.and_combine(&de[..1], &de[1..], &zero, &zero, &zero, true, &mut z);
         assert_eq!(z, vec![0b1000]);
     }
 
     #[test]
     fn degenerate_mult_is_plain_mul() {
-        let mut k = RustKernels;
+        let mut k = RustKernels::default();
         let x = vec![7u64];
         let y = vec![6u64.wrapping_neg()]; // -6
         let zero = vec![0u64];
-        let de = k.mult_open(&x, &y, &zero, &zero);
-        let z = k.mult_combine(&de[..1], &de[1..], &zero, &zero, &zero, true);
+        let mut de = vec![0u64; 2];
+        k.mult_open(&x, &y, &zero, &zero, &mut de);
+        let mut z = vec![0u64; 1];
+        k.mult_combine(&de[..1], &de[1..], &zero, &zero, &zero, true, &mut z);
         assert_eq!(z[0] as i64, -42);
     }
 
     #[test]
     fn stage_operands_shift_and_mask() {
-        let mut k = RustKernels;
+        let mut k = RustKernels::default();
         let g = vec![0b1000u64];
         let p = vec![0b1111u64];
-        let (u, v) = k.ks_stage_operands(&g, &p, 1, 4, false);
+        let (mut u, mut v) = (vec![0u64; 2], vec![0u64; 2]);
+        k.ks_stage_operands(&g, &p, 1, 4, false, &mut u, &mut v);
         assert_eq!(u, vec![0b1111, 0b1111]);
         assert_eq!(v, vec![0b0000, 0b1110]); // g<<1 overflows the 4-bit lane
-        let (u, v) = k.ks_stage_operands(&g, &p, 2, 6, true);
+        let (mut u, mut v) = (vec![0u64; 1], vec![0u64; 1]);
+        k.ks_stage_operands(&g, &p, 2, 6, true, &mut u, &mut v);
         assert_eq!(u, vec![0b1111]);
         assert_eq!(v, vec![0b100000]);
+    }
+
+    /// Multi-threaded kernels are bit-identical to single-threaded for every
+    /// primitive, at a lane count that actually engages the thread pool.
+    #[test]
+    fn parallel_kernels_match_scalar_reference() {
+        let n = PAR_MIN_LANES + 1000;
+        let mut prg = Prg::new(17, 0);
+        let u = prg.vec_u64(n);
+        let v = prg.vec_u64(n);
+        let a = prg.vec_u64(n);
+        let b = prg.vec_u64(n);
+        let c = prg.vec_u64(n);
+        let mut scalar = RustKernels::default();
+        for threads in [2usize, 4, crate::util::threadpool::default_threads()] {
+            let mut par = RustKernels::with_threads(threads);
+
+            let mut de1 = vec![0u64; 2 * n];
+            let mut de2 = vec![0u64; 2 * n];
+            scalar.and_open(&u, &v, &a, &b, &mut de1);
+            par.and_open(&u, &v, &a, &b, &mut de2);
+            assert_eq!(de1, de2, "and_open threads={threads}");
+
+            for leader in [true, false] {
+                let mut z1 = vec![0u64; n];
+                let mut z2 = vec![0u64; n];
+                scalar.and_combine(&u, &v, &a, &b, &c, leader, &mut z1);
+                par.and_combine(&u, &v, &a, &b, &c, leader, &mut z2);
+                assert_eq!(z1, z2, "and_combine threads={threads}");
+                scalar.mult_combine(&u, &v, &a, &b, &c, leader, &mut z1);
+                par.mult_combine(&u, &v, &a, &b, &c, leader, &mut z2);
+                assert_eq!(z1, z2, "mult_combine threads={threads}");
+            }
+
+            scalar.mult_open(&u, &v, &a, &b, &mut de1);
+            par.mult_open(&u, &v, &a, &b, &mut de2);
+            assert_eq!(de1, de2, "mult_open threads={threads}");
+
+            let w = 20u32;
+            let mask = crate::ring::low_mask(w);
+            let g: Vec<u64> = u.iter().map(|x| x & mask).collect();
+            let p: Vec<u64> = v.iter().map(|x| x & mask).collect();
+            for (s, last) in [(1u32, false), (4, true)] {
+                let halves = if last { 1 } else { 2 };
+                let mut u1 = vec![0u64; halves * n];
+                let mut v1 = vec![0u64; halves * n];
+                let mut u2 = vec![0u64; halves * n];
+                let mut v2 = vec![0u64; halves * n];
+                scalar.ks_stage_operands(&g, &p, s, w, last, &mut u1, &mut v1);
+                par.ks_stage_operands(&g, &p, s, w, last, &mut u2, &mut v2);
+                assert_eq!(u1, u2, "stage u threads={threads} last={last}");
+                assert_eq!(v1, v2, "stage v threads={threads} last={last}");
+            }
+        }
     }
 }

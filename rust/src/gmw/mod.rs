@@ -18,8 +18,37 @@
 //! Local tensor math is factored behind [`kernels::KernelBackend`] so the
 //! same protocol can run on pure-Rust kernels or on the Pallas-lowered HLO
 //! kernels through PJRT (see `runtime::XlaKernels`).
+//!
+//! # Zero-allocation hot path
+//!
+//! Every protocol step has a `*_into` form that writes into a
+//! caller-provided buffer; the classic `Vec`-returning methods are thin
+//! wrappers that allocate only the final output. Internally all per-round
+//! temporaries — triple shares, masked openings, opened values, stage
+//! operands, wire byte buffers — are checked out of the party's
+//! [`arena::Arena`] and returned when the step completes, so once the pool
+//! is warm a steady-state [`GmwParty::relu_into`] round performs **zero
+//! heap allocations** in the engine (the transport's wire copies are the
+//! only remaining per-round allocations). Ownership rules live in the
+//! [`arena`] module docs: buffers are checked out and returned by the
+//! protocol step that needs them, owned as plain locals in between, and
+//! never cross parties or threads.
+//!
+//! Masked openings are bit-packed **directly into the wire buffer**
+//! ([`bitpack::pack_bytes_into`]) and peers' openings are unpacked and
+//! folded **directly into the result lanes**
+//! ([`bitpack::unpack_bytes_xor_into`]) — no intermediate full-width lane
+//! vectors exist on either side of a round.
+//!
+//! # Threading
+//!
+//! [`GmwParty::set_threads`] sets the lane-parallelism budget for the local
+//! kernels and the fused pack/unpack (CLI flag `--threads`, coordinator
+//! `ServeOptions::threads`). Results are bit-identical for every thread
+//! count; small batches always run inline.
 
 pub mod adder;
+pub mod arena;
 pub mod harness;
 pub mod kernels;
 
@@ -31,6 +60,7 @@ use crate::net::{self, Transport};
 use crate::ring;
 use crate::sharing::PairwisePrgs;
 
+use arena::{Arena, ArenaStats};
 use kernels::{KernelBackend, RustKernels};
 
 /// Per-layer ReLU evaluation plan: use bits [m, k) of the secret share.
@@ -77,12 +107,14 @@ pub struct GmwParty<T: Transport, K: KernelBackend = RustKernels> {
     pub dealer: TtpDealer,
     pub pairwise: PairwisePrgs,
     kernels: K,
+    arena: Arena,
+    threads: usize,
 }
 
 impl<T: Transport> GmwParty<T, RustKernels> {
     /// Engine with the portable Rust kernels.
     pub fn new(transport: T, session_seed: u64) -> Self {
-        GmwParty::with_kernels(transport, session_seed, RustKernels)
+        GmwParty::with_kernels(transport, session_seed, RustKernels::default())
     }
 }
 
@@ -95,6 +127,8 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
             dealer: TtpDealer::new(session_seed, party, parties),
             pairwise: PairwisePrgs::new(session_seed, party, parties),
             kernels,
+            arena: Arena::new(),
+            threads: 1,
         }
     }
 
@@ -117,40 +151,97 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         &mut self.kernels
     }
 
+    /// Set the lane-parallelism budget for local compute (kernels and the
+    /// fused bitpack). 0 and 1 both mean single-threaded. Bit-exact for
+    /// every value.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+        self.kernels.set_threads(self.threads);
+    }
+
+    /// Current lane-parallelism budget.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Snapshot of the scratch-arena counters (checkouts / returns /
+    /// allocation misses). The zero-allocation property of the steady-state
+    /// hot path is asserted against these in the harness tests.
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena.stats()
+    }
+
+    /// Check a lane buffer (contents unspecified) out of the party's arena
+    /// (engine-internal and adder use; pair with
+    /// [`GmwParty::recycle_words`]; callers fully overwrite it).
+    pub(crate) fn scratch_words(&mut self, len: usize) -> Vec<u64> {
+        self.arena.take_words(len)
+    }
+
+    /// Return a lane buffer to the party's arena.
+    pub(crate) fn recycle_words(&mut self, buf: Vec<u64>) {
+        self.arena.put_words(buf)
+    }
+
     // ------------------------------------------------------------------
     // Openings (the only communication primitives).
     // ------------------------------------------------------------------
 
-    /// Open binary shares of w-bit lanes: bit-pack, exchange, fold-XOR.
-    pub fn open_binary(&mut self, phase: Phase, shares: &[u64], w: u32) -> Result<Vec<u64>> {
-        let bytes = bitpack::pack_bytes(shares, w);
-        let bufs = self.transport.exchange_all(phase, &bytes)?;
-        let mut out = vec![0u64; shares.len()];
+    /// Open binary shares of w-bit lanes into `out` (length = shares):
+    /// pack straight into the wire buffer, exchange, XOR-fold peers'
+    /// packed shares straight into `out`.
+    pub fn open_binary_into(
+        &mut self,
+        phase: Phase,
+        shares: &[u64],
+        w: u32,
+        out: &mut [u64],
+    ) -> Result<()> {
+        let n = shares.len();
+        debug_assert_eq!(out.len(), n);
+        let mut wire = self.arena.take_bytes(bitpack::packed_bytes(n, w) as usize);
+        bitpack::pack_bytes_into(shares, w, &mut wire, self.threads);
+        let bufs = self.transport.exchange_all(phase, &wire)?;
+        self.arena.put_bytes(wire);
+        out.copy_from_slice(shares);
         for (q, buf) in bufs.iter().enumerate() {
-            let vals = if q == self.party() {
-                shares.to_vec()
-            } else {
-                bitpack::unpack_bytes(buf, w, shares.len())
-            };
-            for (o, v) in out.iter_mut().zip(&vals) {
-                *o ^= *v;
+            if q == self.party() {
+                continue;
             }
+            bitpack::unpack_bytes_xor_into(buf, w, n, out, self.threads);
         }
+        Ok(())
+    }
+
+    /// Open binary shares of w-bit lanes (allocating wrapper).
+    pub fn open_binary(&mut self, phase: Phase, shares: &[u64], w: u32) -> Result<Vec<u64>> {
+        let mut out = vec![0u64; shares.len()];
+        self.open_binary_into(phase, shares, w, &mut out)?;
         Ok(out)
     }
 
-    /// Open arithmetic shares (full 64-bit words on the wire).
-    pub fn open_arith(&mut self, phase: Phase, shares: &[u64]) -> Result<Vec<u64>> {
-        let bytes = net::u64s_to_bytes(shares);
-        let bufs = self.transport.exchange_all(phase, &bytes)?;
-        let mut out = vec![0u64; shares.len()];
+    /// Open arithmetic shares (full 64-bit words on the wire) into `out`.
+    pub fn open_arith_into(&mut self, phase: Phase, shares: &[u64], out: &mut [u64]) -> Result<()> {
+        let n = shares.len();
+        debug_assert_eq!(out.len(), n);
+        let mut wire = self.arena.take_bytes(n * 8);
+        net::u64s_to_bytes_into(shares, &mut wire);
+        let bufs = self.transport.exchange_all(phase, &wire)?;
+        self.arena.put_bytes(wire);
+        out.copy_from_slice(shares);
         for (q, buf) in bufs.iter().enumerate() {
-            let vals =
-                if q == self.party() { shares.to_vec() } else { net::bytes_to_u64s(buf) };
-            for (o, v) in out.iter_mut().zip(&vals) {
-                *o = o.wrapping_add(*v);
+            if q == self.party() {
+                continue;
             }
+            net::add_u64s_from_bytes(buf, out);
         }
+        Ok(())
+    }
+
+    /// Open arithmetic shares (allocating wrapper).
+    pub fn open_arith(&mut self, phase: Phase, shares: &[u64]) -> Result<Vec<u64>> {
+        let mut out = vec![0u64; shares.len()];
+        self.open_arith_into(phase, shares, &mut out)?;
         Ok(out)
     }
 
@@ -158,92 +249,135 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
     // Beaver AND on w-bit lanes.
     // ------------------------------------------------------------------
 
-    /// Secure AND of two binary-shared vectors of w-bit lanes.
-    /// Cost: one round, 2·w bits per element on the wire.
-    pub fn and_gates(&mut self, phase: Phase, u: &[u64], v: &[u64], w: u32) -> Result<Vec<u64>> {
+    /// Secure AND of two binary-shared vectors of w-bit lanes, written into
+    /// `out` (length n). Cost: one round, 2·w bits per element on the wire.
+    /// Allocation-free once the arena is warm.
+    pub fn and_gates_into(
+        &mut self,
+        phase: Phase,
+        u: &[u64],
+        v: &[u64],
+        w: u32,
+        out: &mut [u64],
+    ) -> Result<()> {
         debug_assert_eq!(u.len(), v.len());
+        debug_assert_eq!(out.len(), u.len());
         let n = u.len();
         let mask = ring::low_mask(w);
-        let mut t = self.dealer.bin_triples(n);
-        // Triples are 64-bit words; mask to the lane width in place (no
-        // extra allocation — §Perf L3).
-        if w < 64 {
-            for v in t.a.iter_mut() {
-                *v &= mask;
-            }
-            for v in t.b.iter_mut() {
-                *v &= mask;
-            }
-            for v in t.c.iter_mut() {
-                *v &= mask;
-            }
-        }
-        let de_shares = self.kernels.and_open(u, v, &t.a, &t.b);
-        let de = self.open_binary(phase, &de_shares, w)?;
-        let (d, e) = de.split_at(n);
+        let mut ta = self.arena.take_words(n);
+        let mut tb = self.arena.take_words(n);
+        let mut tc = self.arena.take_words(n);
+        // Triples are 64-bit words; the dealer masks them to the lane width
+        // as it writes (no extra pass, no extra allocation — §Perf L3).
+        self.dealer.bin_triples_into(mask, &mut ta, &mut tb, &mut tc);
+        let mut de = self.arena.take_words(2 * n);
+        self.kernels.and_open(u, v, &ta, &tb, &mut de);
+        let mut opened = self.arena.take_words(2 * n);
+        self.open_binary_into(phase, &de, w, &mut opened)?;
+        self.arena.put_words(de);
         let leader = self.is_leader();
-        Ok(self.kernels.and_combine(d, e, &t.a, &t.b, &t.c, leader))
+        let (d, e) = opened.split_at(n);
+        self.kernels.and_combine(d, e, &ta, &tb, &tc, leader, out);
+        self.arena.put_words(opened);
+        self.arena.put_words(ta);
+        self.arena.put_words(tb);
+        self.arena.put_words(tc);
+        Ok(())
+    }
+
+    /// Secure AND (allocating wrapper).
+    pub fn and_gates(&mut self, phase: Phase, u: &[u64], v: &[u64], w: u32) -> Result<Vec<u64>> {
+        let mut out = vec![0u64; u.len()];
+        self.and_gates_into(phase, u, v, w, &mut out)?;
+        Ok(out)
     }
 
     // ------------------------------------------------------------------
     // Conversions.
     // ------------------------------------------------------------------
 
-    /// A2B: convert arithmetic shares of w-bit values (one lane per u64,
-    /// high bits ignored) into binary shares of the same values.
+    /// A2B into `out`: convert arithmetic shares of w-bit values (one lane
+    /// per u64, high bits ignored) into binary shares of the same values.
     ///
-    /// Step 1 is communication-free (PRG re-sharing); step 2 runs p−1
-    /// circuit additions ([`adder::ks_add`]).
-    pub fn a2b(&mut self, arith: &[u64], w: u32) -> Result<Vec<u64>> {
+    /// Step 1 is communication-free (PRG re-sharing); step 2 folds each
+    /// party's operand in with a circuit addition ([`adder::ks_add_into`]).
+    pub fn a2b_into(&mut self, arith: &[u64], w: u32, out: &mut [u64]) -> Result<()> {
         let n = arith.len();
+        debug_assert_eq!(out.len(), n);
         let mask = ring::low_mask(w);
         let me = self.party();
         let parties = self.parties();
+        let mut masked = self.arena.take_words(n);
+        for (mi, x) in masked.iter_mut().zip(arith) {
+            *mi = x & mask;
+        }
         // Binary re-sharing of every party's arithmetic share (operand j
         // belongs to party j). All parties generate the same zero-sharing
-        // streams, so no communication happens here.
-        let mut operands: Vec<Vec<u64>> = Vec::with_capacity(parties);
+        // streams, so no communication happens here; each operand folds
+        // into the accumulator with one circuit addition.
+        let mut acc = self.arena.take_words(n);
+        let mut op = self.arena.take_words(n);
         for j in 0..parties {
-            let masked: Vec<u64>;
-            let value = if j == me {
-                masked = arith.iter().map(|x| x & mask).collect();
-                Some(masked.as_slice())
-            } else {
-                None
-            };
-            let mut share = self.pairwise.reshare_binary(value, n);
-            for s in share.iter_mut() {
+            let value = if j == me { Some(&masked[..]) } else { None };
+            let dst = if j == 0 { &mut acc } else { &mut op };
+            self.pairwise.reshare_binary_into(value, dst);
+            for s in dst.iter_mut() {
                 *s &= mask;
             }
-            operands.push(share);
+            if j > 0 {
+                let mut next = self.arena.take_words(n);
+                adder::ks_add_into(self, &acc, &op, w, &mut next)?;
+                self.arena.put_words(std::mem::replace(&mut acc, next));
+            }
         }
-        // Circuit-add all operands pairwise.
-        let mut acc = operands.remove(0);
-        for op in operands {
-            acc = adder::ks_add(self, &acc, &op, w)?;
-        }
-        Ok(acc)
+        out.copy_from_slice(&acc);
+        self.arena.put_words(acc);
+        self.arena.put_words(op);
+        self.arena.put_words(masked);
+        Ok(())
     }
 
-    /// B2A of single-bit lanes via daBits: one round, 1 bit per element.
-    pub fn b2a_bit(&mut self, bits: &[u64]) -> Result<Vec<u64>> {
+    /// A2B (allocating wrapper).
+    pub fn a2b(&mut self, arith: &[u64], w: u32) -> Result<Vec<u64>> {
+        let mut out = vec![0u64; arith.len()];
+        self.a2b_into(arith, w, &mut out)?;
+        Ok(out)
+    }
+
+    /// B2A of single-bit lanes via daBits into `out`: one round, 1 bit per
+    /// element.
+    pub fn b2a_bit_into(&mut self, bits: &[u64], out: &mut [u64]) -> Result<()> {
         let n = bits.len();
-        let dab = self.dealer.dabits(n);
-        let masked: Vec<u64> = bits.iter().zip(&dab.r_bin).map(|(b, r)| (b ^ r) & 1).collect();
-        let z = self.open_binary(Phase::B2A, &masked, 1)?;
+        debug_assert_eq!(out.len(), n);
+        let mut r_bin = self.arena.take_words(n);
+        let mut r_arith = self.arena.take_words(n);
+        self.dealer.dabits_into(&mut r_bin, &mut r_arith);
+        let mut masked = self.arena.take_words(n);
+        for ((mi, b), r) in masked.iter_mut().zip(bits).zip(&r_bin) {
+            *mi = (b ^ r) & 1;
+        }
+        let mut z = self.arena.take_words(n);
+        self.open_binary_into(Phase::B2A, &masked, 1, &mut z)?;
         // ⟨b⟩^A = z + ⟨r⟩^A − 2·z·⟨r⟩^A  (z public)
         let leader = self.is_leader();
-        let out = z
-            .iter()
-            .zip(&dab.r_arith)
-            .map(|(z, ra)| {
-                let mut v = ra.wrapping_sub(ra.wrapping_mul(2).wrapping_mul(*z));
-                if leader {
-                    v = v.wrapping_add(*z);
-                }
-                v
-            })
-            .collect();
+        for ((o, zi), ra) in out.iter_mut().zip(&z).zip(&r_arith) {
+            let mut v = ra.wrapping_sub(ra.wrapping_mul(2).wrapping_mul(*zi));
+            if leader {
+                v = v.wrapping_add(*zi);
+            }
+            *o = v;
+        }
+        self.arena.put_words(z);
+        self.arena.put_words(masked);
+        self.arena.put_words(r_arith);
+        self.arena.put_words(r_bin);
+        Ok(())
+    }
+
+    /// B2A of single-bit lanes (allocating wrapper).
+    pub fn b2a_bit(&mut self, bits: &[u64]) -> Result<Vec<u64>> {
+        let mut out = vec![0u64; bits.len()];
+        self.b2a_bit_into(bits, &mut out)?;
         Ok(out)
     }
 
@@ -251,18 +385,37 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
     // Arithmetic ops.
     // ------------------------------------------------------------------
 
-    /// Beaver multiplication of two arithmetically-shared vectors.
-    /// Cost: one round, 2×64 bits per element (HummingBird cannot shrink
-    /// this — paper Fig 3 "Mult").
-    pub fn mul(&mut self, x: &[u64], y: &[u64]) -> Result<Vec<u64>> {
+    /// Beaver multiplication of two arithmetically-shared vectors into
+    /// `out`. Cost: one round, 2×64 bits per element (HummingBird cannot
+    /// shrink this — paper Fig 3 "Mult").
+    pub fn mul_into(&mut self, x: &[u64], y: &[u64], out: &mut [u64]) -> Result<()> {
         debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(out.len(), x.len());
         let n = x.len();
-        let t = self.dealer.arith_triples(n);
-        let de_shares = self.kernels.mult_open(x, y, &t.a, &t.b);
-        let de = self.open_arith(Phase::Mult, &de_shares)?;
-        let (d, e) = de.split_at(n);
+        let mut ta = self.arena.take_words(n);
+        let mut tb = self.arena.take_words(n);
+        let mut tc = self.arena.take_words(n);
+        self.dealer.arith_triples_into(&mut ta, &mut tb, &mut tc);
+        let mut de = self.arena.take_words(2 * n);
+        self.kernels.mult_open(x, y, &ta, &tb, &mut de);
+        let mut opened = self.arena.take_words(2 * n);
+        self.open_arith_into(Phase::Mult, &de, &mut opened)?;
+        self.arena.put_words(de);
         let leader = self.is_leader();
-        Ok(self.kernels.mult_combine(d, e, &t.a, &t.b, &t.c, leader))
+        let (d, e) = opened.split_at(n);
+        self.kernels.mult_combine(d, e, &ta, &tb, &tc, leader, out);
+        self.arena.put_words(opened);
+        self.arena.put_words(ta);
+        self.arena.put_words(tb);
+        self.arena.put_words(tc);
+        Ok(())
+    }
+
+    /// Beaver multiplication (allocating wrapper).
+    pub fn mul(&mut self, x: &[u64], y: &[u64]) -> Result<Vec<u64>> {
+        let mut out = vec![0u64; x.len()];
+        self.mul_into(x, y, &mut out)?;
+        Ok(out)
     }
 
     /// Local truncation of shares by 2^f (CrypTen-style; see
@@ -285,39 +438,63 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
     // DReLU / ReLU (Equations 1–3).
     // ------------------------------------------------------------------
 
-    /// DReLU on the bit window [m, k): returns arithmetic shares of
+    /// DReLU on the bit window [m, k) into `out`: arithmetic shares of
     /// 1{x ≥ 0} evaluated on the reduced ring Z/2^(k−m).
-    pub fn drelu(&mut self, arith: &[u64], plan: ReluPlan) -> Result<Vec<u64>> {
+    pub fn drelu_into(&mut self, arith: &[u64], plan: ReluPlan, out: &mut [u64]) -> Result<()> {
         let w = plan.width();
         debug_assert!(w >= 1, "drelu needs at least one bit");
+        let n = arith.len();
+        debug_assert_eq!(out.len(), n);
         // Local bit extraction ⟨x⟩[k:m] (free).
-        let windows: Vec<u64> =
-            arith.iter().map(|x| ring::bit_window(*x, plan.k, plan.m)).collect();
+        let mut windows = self.arena.take_words(n);
+        for (wi, x) in windows.iter_mut().zip(arith) {
+            *wi = ring::bit_window(*x, plan.k, plan.m);
+        }
         // A2B on the reduced ring.
-        let sum_bits = self.a2b(&windows, w)?;
+        let mut sum_bits = self.arena.take_words(n);
+        self.a2b_into(&windows, w, &mut sum_bits)?;
         // Sign bit (bit w−1) is a binary share of the MSB; DReLU = ¬MSB.
         let leader = self.is_leader();
-        let msb: Vec<u64> = sum_bits
-            .iter()
-            .map(|s| {
-                let bit = (s >> (w - 1)) & 1;
-                if leader {
-                    bit ^ 1
-                } else {
-                    bit
-                }
-            })
-            .collect();
+        let mut msb = self.arena.take_words(n);
+        for (mi, s) in msb.iter_mut().zip(&sum_bits) {
+            let bit = (s >> (w - 1)) & 1;
+            *mi = if leader { bit ^ 1 } else { bit };
+        }
         // 1-bit B2A.
-        self.b2a_bit(&msb)
+        self.b2a_bit_into(&msb, out)?;
+        self.arena.put_words(msb);
+        self.arena.put_words(sum_bits);
+        self.arena.put_words(windows);
+        Ok(())
     }
 
-    /// ReLU per the plan: Eq. 2 when baseline, Eq. 3 otherwise.
-    pub fn relu(&mut self, arith: &[u64], plan: ReluPlan) -> Result<Vec<u64>> {
+    /// DReLU (allocating wrapper).
+    pub fn drelu(&mut self, arith: &[u64], plan: ReluPlan) -> Result<Vec<u64>> {
+        let mut out = vec![0u64; arith.len()];
+        self.drelu_into(arith, plan, &mut out)?;
+        Ok(out)
+    }
+
+    /// ReLU per the plan into `out`: Eq. 2 when baseline, Eq. 3 otherwise.
+    /// The zero-allocation entry point: with a warm arena, no engine-side
+    /// heap allocation happens per call.
+    pub fn relu_into(&mut self, arith: &[u64], plan: ReluPlan, out: &mut [u64]) -> Result<()> {
+        debug_assert_eq!(out.len(), arith.len());
         if plan.is_identity() {
-            return Ok(arith.to_vec());
+            out.copy_from_slice(arith);
+            return Ok(());
         }
-        let d = self.drelu(arith, plan)?;
-        self.mul(arith, &d)
+        let mut d = self.arena.take_words(arith.len());
+        self.drelu_into(arith, plan, &mut d)?;
+        self.mul_into(arith, &d, out)?;
+        self.arena.put_words(d);
+        Ok(())
+    }
+
+    /// ReLU (allocating wrapper).
+    pub fn relu(&mut self, arith: &[u64], plan: ReluPlan) -> Result<Vec<u64>> {
+        let mut out = vec![0u64; arith.len()];
+        self.relu_into(arith, plan, &mut out)?;
+        Ok(out)
     }
 }

@@ -87,6 +87,8 @@ fn cmd_infer(args: &Args) -> Result<()> {
     opts.plan = Some(plan.clone());
     opts.parties = args.opt_parse("parties", 2)?;
     opts.gmw_backend = backend;
+    // --threads: lane parallelism per party (0 = auto-split the cores).
+    opts.threads = args.opt_parse("threads", 0)?;
     println!("booting {} ({} parties, plan: {})", model, opts.parties, plan.summary());
     let svc = Coordinator::start(opts)?;
 
@@ -157,6 +159,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut opts = ServeOptions::new(&root, model);
     opts.plan = Some(plan.clone());
     opts.gmw_backend = args.opt_or("gmw-backend", "rust").to_string();
+    opts.threads = args.opt_parse("threads", 0)?;
     let svc = Coordinator::start(opts)?;
     println!("serving {model} (plan: {}), open-loop for {duration}s", plan.summary());
 
@@ -306,6 +309,8 @@ fn cmd_party(args: &Args) -> Result<()> {
     println!("party {rank}/{} connecting...", addrs.len());
     let transport = TcpTransport::connect(rank, &addrs)?;
     let mut party = GmwParty::new(transport, args.opt_parse("seed", 7u64)?);
+    // Real deployments own the whole machine: default --threads to all cores.
+    party.set_threads(args.threads(0)?);
     // Each party holds a random share vector; run ReLU over TCP.
     let mut prg = hummingbird::crypto::prg::Prg::new(100 + rank as u64, 0);
     let shares = prg.vec_u64(n);

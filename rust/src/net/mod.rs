@@ -64,13 +64,36 @@ pub fn fold_add(bufs: &[Vec<u64>]) -> Vec<u64> {
     out
 }
 
+/// Serialize a u64 slice little-endian into a reusable buffer. Every byte
+/// is overwritten, so a buffer already at the right length (the warm
+/// arena-pooled path) is neither cleared nor reallocated. Hot-path form
+/// used by the arithmetic openings.
+pub fn u64s_to_bytes_into(v: &[u64], out: &mut Vec<u8>) {
+    let nbytes = v.len() * 8;
+    if out.len() != nbytes {
+        out.clear();
+        out.resize(nbytes, 0);
+    }
+    for (chunk, x) in out.chunks_exact_mut(8).zip(v) {
+        chunk.copy_from_slice(&x.to_le_bytes());
+    }
+}
+
 /// Serialize a u64 slice little-endian (wire format helper).
 pub fn u64s_to_bytes(v: &[u64]) -> Vec<u8> {
     let mut out = Vec::with_capacity(v.len() * 8);
-    for x in v {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
+    u64s_to_bytes_into(v, &mut out);
     out
+}
+
+/// Wrapping-add each little-endian u64 in `b` into `out` in place (the
+/// receive-side fold of an arithmetic opening; no intermediate vector).
+pub fn add_u64s_from_bytes(b: &[u8], out: &mut [u64]) {
+    for (o, c) in out.iter_mut().zip(b.chunks(8)) {
+        let mut buf = [0u8; 8];
+        buf[..c.len()].copy_from_slice(c);
+        *o = o.wrapping_add(u64::from_le_bytes(buf));
+    }
 }
 
 /// Deserialize little-endian u64s.
@@ -92,6 +115,18 @@ mod tests {
     fn u64_bytes_roundtrip() {
         let v = vec![0u64, 1, u64::MAX, 0x0102_0304_0506_0708];
         assert_eq!(bytes_to_u64s(&u64s_to_bytes(&v)), v);
+    }
+
+    #[test]
+    fn add_fold_from_bytes_matches_wrapping_add() {
+        let v = vec![1u64, u64::MAX, 7];
+        let b = u64s_to_bytes(&v);
+        let mut out = vec![1u64, 1, 1];
+        add_u64s_from_bytes(&b, &mut out);
+        assert_eq!(out, vec![2, 0, 8]);
+        let mut reused = Vec::new();
+        u64s_to_bytes_into(&v, &mut reused);
+        assert_eq!(reused, b);
     }
 
     #[test]

@@ -81,12 +81,14 @@ impl XlaKernels {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 impl KernelBackend for XlaKernels {
-    fn and_open(&mut self, u: &[u64], v: &[u64], a: &[u64], b: &[u64]) -> Vec<u64> {
+    fn and_open(&mut self, u: &[u64], v: &[u64], a: &[u64], b: &[u64], out: &mut [u64]) {
+        let n = u.len();
+        debug_assert_eq!(out.len(), 2 * n);
         let outs = self.run("and_open", &[u, v, a, b], &[], 2);
-        let mut de = outs[0].clone();
-        de.extend_from_slice(&outs[1]);
-        de
+        out[..n].copy_from_slice(&outs[0]);
+        out[n..].copy_from_slice(&outs[1]);
     }
 
     fn and_combine(
@@ -97,10 +99,11 @@ impl KernelBackend for XlaKernels {
         b: &[u64],
         c: &[u64],
         leader: bool,
-    ) -> Vec<u64> {
+        out: &mut [u64],
+    ) {
         let lead = if leader { -1i64 } else { 0 };
         let outs = self.run("and_combine", &[d, e, a, b, c], &[lead], 1);
-        outs.into_iter().next().unwrap()
+        out.copy_from_slice(&outs[0]);
     }
 
     fn ks_stage_operands(
@@ -110,28 +113,34 @@ impl KernelBackend for XlaKernels {
         s: u32,
         w: u32,
         last: bool,
-    ) -> (Vec<u64>, Vec<u64>) {
+        u_out: &mut [u64],
+        v_out: &mut [u64],
+    ) {
+        let n = g.len();
         let mask = ring::low_mask(w) as i64;
         let name = if last { "ks_stage_last" } else { "ks_stage_mid" };
         let rows = if last { 2 } else { 4 }; // u rows then v rows
         let outs = self.run(name, &[g, p], &[s as i64, mask], rows);
         if last {
-            (outs[0].clone(), outs[1].clone())
+            debug_assert!(u_out.len() == n && v_out.len() == n);
+            u_out.copy_from_slice(&outs[0]);
+            v_out.copy_from_slice(&outs[1]);
         } else {
-            // outs = [u0, u1, v0, v1]; concatenate halves.
-            let mut u = outs[0].clone();
-            u.extend_from_slice(&outs[1]);
-            let mut v = outs[2].clone();
-            v.extend_from_slice(&outs[3]);
-            (u, v)
+            // outs = [u0, u1, v0, v1]; halves concatenate into the buffers.
+            debug_assert!(u_out.len() == 2 * n && v_out.len() == 2 * n);
+            u_out[..n].copy_from_slice(&outs[0]);
+            u_out[n..].copy_from_slice(&outs[1]);
+            v_out[..n].copy_from_slice(&outs[2]);
+            v_out[n..].copy_from_slice(&outs[3]);
         }
     }
 
-    fn mult_open(&mut self, x: &[u64], y: &[u64], a: &[u64], b: &[u64]) -> Vec<u64> {
+    fn mult_open(&mut self, x: &[u64], y: &[u64], a: &[u64], b: &[u64], out: &mut [u64]) {
+        let n = x.len();
+        debug_assert_eq!(out.len(), 2 * n);
         let outs = self.run("mult_open", &[x, y, a, b], &[], 2);
-        let mut de = outs[0].clone();
-        de.extend_from_slice(&outs[1]);
-        de
+        out[..n].copy_from_slice(&outs[0]);
+        out[n..].copy_from_slice(&outs[1]);
     }
 
     fn mult_combine(
@@ -142,10 +151,11 @@ impl KernelBackend for XlaKernels {
         b: &[u64],
         c: &[u64],
         leader: bool,
-    ) -> Vec<u64> {
+        out: &mut [u64],
+    ) {
         let lead = if leader { -1i64 } else { 0 };
         let outs = self.run("mult_combine", &[d, e, a, b, c], &[lead], 1);
-        outs.into_iter().next().unwrap()
+        out.copy_from_slice(&outs[0]);
     }
 
     fn name(&self) -> &'static str {

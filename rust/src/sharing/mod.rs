@@ -100,10 +100,11 @@ impl PairwisePrgs {
         PairwisePrgs { me, parties, prgs }
     }
 
-    /// Binary zero-sharing: returns this party's share of a fresh sharing
-    /// of 0 in the XOR domain (⊕ over parties = 0).
-    pub fn zero_binary(&mut self, n: usize) -> Vec<u64> {
-        let mut out = vec![0u64; n];
+    /// Binary zero-sharing written into `out` (⊕ over parties = 0).
+    /// Allocation-free; stream consumption identical to
+    /// [`PairwisePrgs::zero_binary`].
+    pub fn zero_binary_into(&mut self, out: &mut [u64]) {
+        out.iter_mut().for_each(|o| *o = 0);
         for q in 0..self.parties {
             if q == self.me {
                 continue;
@@ -113,6 +114,13 @@ impl PairwisePrgs {
                 *o ^= prg.next_u64();
             }
         }
+    }
+
+    /// Binary zero-sharing: returns this party's share of a fresh sharing
+    /// of 0 in the XOR domain (⊕ over parties = 0).
+    pub fn zero_binary(&mut self, n: usize) -> Vec<u64> {
+        let mut out = vec![0u64; n];
+        self.zero_binary_into(&mut out);
         out
     }
 
@@ -140,16 +148,24 @@ impl PairwisePrgs {
     }
 
     /// Locally convert a value held in full by this party into a binary
-    /// sharing: my share = value ⊕ zero-share; everyone else's is their
-    /// zero-share (they call this with `value = None`).
-    pub fn reshare_binary(&mut self, value: Option<&[u64]>, n: usize) -> Vec<u64> {
-        let mut z = self.zero_binary(n);
+    /// sharing, written into `out`: my share = value ⊕ zero-share; everyone
+    /// else's is their zero-share (they call this with `value = None`).
+    /// Allocation-free (the GMW A2B hot path hands in arena buffers).
+    pub fn reshare_binary_into(&mut self, value: Option<&[u64]>, out: &mut [u64]) {
+        self.zero_binary_into(out);
         if let Some(v) = value {
-            assert_eq!(v.len(), n);
-            for (zi, vi) in z.iter_mut().zip(v) {
+            assert_eq!(v.len(), out.len());
+            for (zi, vi) in out.iter_mut().zip(v) {
                 *zi ^= *vi;
             }
         }
+    }
+
+    /// Locally convert a value held in full by this party into a binary
+    /// sharing (allocating wrapper).
+    pub fn reshare_binary(&mut self, value: Option<&[u64]>, n: usize) -> Vec<u64> {
+        let mut z = vec![0u64; n];
+        self.reshare_binary_into(value, &mut z);
         z
     }
 }

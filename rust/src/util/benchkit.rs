@@ -151,17 +151,60 @@ impl Bench {
         println!("{line}");
     }
 
-    /// Write all collected results as JSON to `path` (e.g.
-    /// `target/bench-results/<suite>.json`).
+    /// Write all collected results as JSON: the historical per-run dump at
+    /// `target/bench-results/<suite>.json`, plus the machine-readable
+    /// trajectory file `BENCH_<suite>.json` at the repository root so PRs
+    /// can commit before/after numbers and future sessions can diff them.
     pub fn dump_json(&self, suite: &str) {
+        let results = Json::arr(self.results.iter().map(|r| r.to_json()));
+
         let dir = std::path::Path::new("target/bench-results");
         let _ = std::fs::create_dir_all(dir);
-        let json = Json::arr(self.results.iter().map(|r| r.to_json()));
         let path = dir.join(format!("{suite}.json"));
-        if std::fs::write(&path, json.to_string_pretty()).is_ok() {
+        if std::fs::write(&path, results.to_string_pretty()).is_ok() {
             println!("(results written to {})", path.display());
         }
+
+        // Trajectory file: results wrapped with enough environment metadata
+        // to compare runs across machines and PRs. Destination resolves at
+        // run time (HB_BENCH_DIR override, then the build-time repo root if
+        // it still exists, then cwd) so a relocated binary still lands the
+        // file somewhere visible — and failures are reported, not dropped.
+        let doc = Json::obj(vec![
+            ("suite", Json::str(suite)),
+            ("quick", Json::Bool(std::env::var("HB_BENCH_QUICK").ok().as_deref() == Some("1"))),
+            ("host_threads", Json::Int(crate::util::threadpool::default_threads() as i64)),
+            ("sample_count", Json::Int(self.sample_count as i64)),
+            ("results", results),
+        ]);
+        let root = std::env::var_os("HB_BENCH_DIR")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| {
+                let manifest_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+                let repo = manifest_dir.parent().unwrap_or(manifest_dir);
+                if repo.is_dir() {
+                    repo.to_path_buf()
+                } else {
+                    std::path::PathBuf::from(".")
+                }
+            });
+        let bench_path = root.join(format!("BENCH_{suite}.json"));
+        match std::fs::write(&bench_path, doc.to_string_pretty()) {
+            Ok(()) => println!("(trajectory written to {})", bench_path.display()),
+            Err(e) => eprintln!("warning: could not write {}: {e}", bench_path.display()),
+        }
     }
+}
+
+/// Shared `HB_THREADS` knob for the multi-threaded bench rows (default:
+/// all cores). One definition so every suite's committed trajectory rows
+/// stay consistent.
+pub fn bench_threads() -> usize {
+    std::env::var("HB_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|t| *t >= 1)
+        .unwrap_or_else(crate::util::threadpool::default_threads)
 }
 
 /// Prevent the optimizer from eliding a computed value (stable-rust

@@ -83,6 +83,15 @@ impl Args {
                 .map_err(|_| Error::config(format!("option --{key}: cannot parse '{s}'"))),
         }
     }
+
+    /// The shared `--threads` knob for the GMW engine's lane parallelism.
+    /// `--threads 0` (or omitting the flag with `default0 = true` semantics
+    /// at the call site) means "auto": use every available core. Results
+    /// are bit-identical for any value; this only changes wall-clock.
+    pub fn threads(&self, default: usize) -> Result<usize> {
+        let t: usize = self.opt_parse("threads", default)?;
+        Ok(if t == 0 { crate::util::threadpool::default_threads() } else { t })
+    }
 }
 
 #[cfg(test)]
@@ -109,6 +118,19 @@ mod tests {
         assert_eq!(a.opt_parse::<i32>("k", 0).unwrap(), 12);
         // "-5" does not start with --, so it is consumed as --neg's value
         assert_eq!(a.opt_parse::<i32>("neg", 0).unwrap(), -5);
+    }
+
+    #[test]
+    fn threads_knob() {
+        // Explicit value passes through.
+        assert_eq!(parse("x --threads 3").threads(1).unwrap(), 3);
+        // 0 resolves to all available cores.
+        let auto = parse("x --threads 0").threads(1).unwrap();
+        assert_eq!(auto, crate::util::threadpool::default_threads());
+        assert!(auto >= 1);
+        // Missing flag uses the caller's default.
+        assert_eq!(parse("x").threads(1).unwrap(), 1);
+        assert!(parse("x --threads banana").threads(1).is_err());
     }
 
     #[test]

@@ -3,6 +3,12 @@
 //! Built on `std::thread::scope`. The pool size defaults to the number of
 //! available CPUs; on single-core testbeds the helpers degrade gracefully to
 //! sequential execution with zero spawn overhead.
+//!
+//! These helpers back the GMW hot path: [`par_chunks_mut`] drives the
+//! buffer-writing kernels and the fused bitpack/unpack (`gmw::kernels`,
+//! `bitpack`), while [`par_chunks`] remains the generic index-range splitter.
+//! All of them produce results identical to the single-threaded loop for any
+//! thread count — the protocol depends on that for bit-exactness.
 
 /// Number of worker threads to use for data-parallel loops.
 pub fn default_threads() -> usize {
@@ -24,8 +30,11 @@ where
         return;
     }
     let chunk = n.div_ceil(threads);
+    // Spawn chunks 1.. and run chunk 0 on the calling thread: `threads`
+    // workers cost `threads - 1` spawns and the caller's core does its
+    // share instead of blocking idle in the scope.
     std::thread::scope(|s| {
-        for t in 0..threads {
+        for t in 1..threads {
             let lo = t * chunk;
             let hi = ((t + 1) * chunk).min(n);
             if lo >= hi {
@@ -34,6 +43,45 @@ where
             let f = &f;
             s.spawn(move || f(t, lo..hi));
         }
+        f(0, 0..chunk.min(n));
+    });
+}
+
+/// Split `data` into contiguous chunks and run `f(offset, chunk)` on up to
+/// `threads` OS threads. Safe (no aliasing): each chunk is a disjoint
+/// `&mut` sub-slice obtained via `split_at_mut`. `offset` is the index of
+/// the chunk's first element in `data`, so `f` can read companion input
+/// slices at the matching positions.
+///
+/// This is the write-side workhorse of the zero-allocation GMW hot path:
+/// kernels and the fused bitpack use it to fill caller-provided buffers in
+/// parallel without any per-call allocation beyond the scoped threads.
+pub fn par_chunks_mut<T, F>(data: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Send + Sync,
+{
+    let n = data.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n < 2 {
+        f(0, data);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    // First chunk runs on the calling thread (see par_chunks).
+    let (first, mut rest) = data.split_at_mut(chunk.min(n));
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut offset = first.len();
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let off = offset;
+            offset += take;
+            s.spawn(move || f(off, head));
+        }
+        f(0, first);
     });
 }
 
@@ -46,12 +94,12 @@ where
 {
     let mut out = vec![U::default(); items.len()];
     {
-        let out_ptr = SyncSlice(out.as_mut_ptr());
+        let out_ptr = SendPtr(out.as_mut_ptr());
         let out_ref = &out_ptr;
         par_chunks(items.len(), threads, move |_, range| {
             for i in range {
                 // SAFETY: each index is written by exactly one chunk.
-                unsafe { *out_ref.ptr().add(i) = f(&items[i]) };
+                unsafe { *out_ref.get().add(i) = f(&items[i]) };
             }
         });
     }
@@ -59,15 +107,30 @@ where
 }
 
 /// Wrapper to allow sharing a raw pointer across scoped threads when the
-/// access pattern is provably disjoint (each index written once).
-struct SyncSlice<U>(*mut U);
-impl<U> SyncSlice<U> {
-    fn ptr(&self) -> *mut U {
+/// access pattern is provably disjoint (each index written by exactly one
+/// chunk). Used by [`par_map`] and by `bitpack`'s parallel word packer,
+/// where output regions are word-disjoint but not representable as `&mut`
+/// sub-slices of equal element type. Deliberately `pub(crate)`: the
+/// unconditional `Send`/`Sync` impls launder the disjointness obligation,
+/// so the contract must stay auditable within this crate.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+
+impl<T> SendPtr<T> {
+    pub(crate) fn get(&self) -> *mut T {
         self.0
     }
 }
-unsafe impl<U> Sync for SyncSlice<U> {}
-unsafe impl<U> Send for SyncSlice<U> {}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+// SAFETY: callers guarantee disjoint access per chunk (documented above).
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
 
 #[cfg(test)]
 mod tests {
@@ -100,5 +163,66 @@ mod tests {
         assert!(out.is_empty());
         let out = par_map(&[7usize], 4, |x| x + 1);
         assert_eq!(out, vec![8]);
+    }
+
+    /// Hot-path contract: for every thread count the helpers must produce
+    /// output identical to the single-threaded reference loop. This is what
+    /// the GMW kernels and the fused bitpack rely on for bit-exactness.
+    #[test]
+    fn par_chunks_matches_single_threaded_reference() {
+        for n in [0usize, 1, 2, 3, 1000, 1037] {
+            let input: Vec<u64> = (0..n as u64).map(|i| i.wrapping_mul(0x9e37_79b9)).collect();
+            let reference: Vec<u64> =
+                input.iter().enumerate().map(|(i, v)| v ^ (i as u64)).collect();
+            for threads in [1usize, 2, default_threads()] {
+                let out: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                par_chunks(n, threads, |_, range| {
+                    for i in range {
+                        out[i].store((input[i] ^ (i as u64)) as usize, Ordering::Relaxed);
+                    }
+                });
+                let got: Vec<u64> =
+                    out.iter().map(|a| a.load(Ordering::Relaxed) as u64).collect();
+                assert_eq!(got, reference, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_matches_reference_all_thread_counts() {
+        for n in [0usize, 1, 5, 1024, 4099] {
+            let input: Vec<u64> = (0..n as u64).map(|i| i.wrapping_mul(31)).collect();
+            let reference: Vec<u64> = input.iter().map(|v| v.wrapping_add(7)).collect();
+            for threads in [1usize, 2, 3, default_threads()] {
+                let mut out = vec![0u64; n];
+                par_chunks_mut(&mut out, threads, |off, chunk| {
+                    for (i, o) in chunk.iter_mut().enumerate() {
+                        *o = input[off + i].wrapping_add(7);
+                    }
+                });
+                assert_eq!(out, reference, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    /// `n < threads` must neither panic nor drop elements.
+    #[test]
+    fn more_threads_than_items() {
+        let n = 3;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        par_chunks(n, 16, |_, range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+
+        let mut out = vec![0u8; 2];
+        par_chunks_mut(&mut out, 64, |off, chunk| {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                *o = (off + i) as u8 + 1;
+            }
+        });
+        assert_eq!(out, vec![1, 2]);
     }
 }

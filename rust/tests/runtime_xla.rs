@@ -27,7 +27,7 @@ fn xla_kernels_match_rust_kernels() {
     let rt = Runtime::new(&root).unwrap();
     let manifest = Manifest::load(&root).unwrap();
     let mut xla = XlaKernels::new(rt, manifest);
-    let mut rust = RustKernels;
+    let mut rust = RustKernels::default();
     let mut prg = Prg::new(42, 0);
     // Cover: smaller than a bucket, exact bucket, between buckets, above
     // the largest bucket (chunking).
@@ -37,31 +37,36 @@ fn xla_kernels_match_rust_kernels() {
         let a = prg.vec_u64(n);
         let b = prg.vec_u64(n);
         let c = prg.vec_u64(n);
-        assert_eq!(
-            xla.and_open(&u, &v, &a, &b),
-            rust.and_open(&u, &v, &a, &b),
-            "and_open n={n}"
-        );
+        let mut de_x = vec![0u64; 2 * n];
+        let mut de_r = vec![0u64; 2 * n];
+        xla.and_open(&u, &v, &a, &b, &mut de_x);
+        rust.and_open(&u, &v, &a, &b, &mut de_r);
+        assert_eq!(de_x, de_r, "and_open n={n}");
+        let mut z_x = vec![0u64; n];
+        let mut z_r = vec![0u64; n];
         for leader in [true, false] {
-            assert_eq!(
-                xla.and_combine(&u, &v, &a, &b, &c, leader),
-                rust.and_combine(&u, &v, &a, &b, &c, leader),
-                "and_combine n={n}"
-            );
-            assert_eq!(
-                xla.mult_combine(&u, &v, &a, &b, &c, leader),
-                rust.mult_combine(&u, &v, &a, &b, &c, leader),
-                "mult_combine n={n}"
-            );
+            xla.and_combine(&u, &v, &a, &b, &c, leader, &mut z_x);
+            rust.and_combine(&u, &v, &a, &b, &c, leader, &mut z_r);
+            assert_eq!(z_x, z_r, "and_combine n={n}");
+            xla.mult_combine(&u, &v, &a, &b, &c, leader, &mut z_x);
+            rust.mult_combine(&u, &v, &a, &b, &c, leader, &mut z_r);
+            assert_eq!(z_x, z_r, "mult_combine n={n}");
         }
-        assert_eq!(xla.mult_open(&u, &v, &a, &b), rust.mult_open(&u, &v, &a, &b));
+        xla.mult_open(&u, &v, &a, &b, &mut de_x);
+        rust.mult_open(&u, &v, &a, &b, &mut de_r);
+        assert_eq!(de_x, de_r, "mult_open n={n}");
         for w in [6u32, 20, 64] {
             let mask = ring::low_mask(w);
             let g: Vec<u64> = u.iter().map(|x| x & mask).collect();
             let p: Vec<u64> = v.iter().map(|x| x & mask).collect();
             for (s, last) in [(1u32, false), (4, true)] {
-                let (xu, xv) = xla.ks_stage_operands(&g, &p, s, w, last);
-                let (ru, rv) = rust.ks_stage_operands(&g, &p, s, w, last);
+                let halves = if last { 1 } else { 2 };
+                let mut xu = vec![0u64; halves * n];
+                let mut xv = vec![0u64; halves * n];
+                let mut ru = vec![0u64; halves * n];
+                let mut rv = vec![0u64; halves * n];
+                xla.ks_stage_operands(&g, &p, s, w, last, &mut xu, &mut xv);
+                rust.ks_stage_operands(&g, &p, s, w, last, &mut ru, &mut rv);
                 assert_eq!(xu, ru, "stage u n={n} w={w} s={s} last={last}");
                 assert_eq!(xv, rv, "stage v n={n} w={w} s={s} last={last}");
             }

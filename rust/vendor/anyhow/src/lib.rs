@@ -1,0 +1,103 @@
+//! Offline stub of the `anyhow` crate, covering the slice of its API the
+//! `hummingbird` binary uses: [`Error`] (a boxed dynamic error), [`Result`],
+//! the [`bail!`] macro, and the [`Context`] extension trait. Like the real
+//! crate, [`Error`] deliberately does NOT implement `std::error::Error` so
+//! the blanket `From<E: std::error::Error>` conversion can exist.
+
+use std::fmt;
+
+/// Boxed dynamic error with a display-oriented API.
+pub struct Error(Box<dyn std::error::Error + Send + Sync + 'static>);
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error(message.to_string().into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(Box::new(e))
+    }
+}
+
+/// `anyhow`-style result alias with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach human-readable context to an error as it crosses a boundary.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| {
+            let inner = e.into();
+            Error::msg(format!("{ctx}: {inner}"))
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                let inner = e.into();
+                Err(Error::msg(format!("{}: {inner}", f())))
+            }
+        }
+    }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        let io: std::io::Result<()> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
+        io.context("reading config")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_wraps_and_displays() {
+        let err = fails().err().unwrap();
+        let s = format!("{err:#}");
+        assert!(s.contains("reading config"), "{s}");
+        assert!(s.contains("boom"), "{s}");
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn f(x: i32) -> Result<()> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(-2).err().unwrap().to_string(), "negative: -2");
+    }
+}
