@@ -1,6 +1,10 @@
 //! Whole-model private-inference benchmark (the Fig 1/7/8 end-to-end
 //! number): one 2-party MPC batch through the full stack per plan variant.
 //! Requires `make artifacts` + trained weights.
+//!
+//! Note: `FigCtx::measure` runs a warm-up pass before the timed pass, so
+//! these rows measure the *steady-state* serving path — activation pool,
+//! engine arena, transport payload pool and `RecvBufs` all warm.
 
 use hummingbird::figures::FigCtx;
 use hummingbird::util::benchkit::Bench;

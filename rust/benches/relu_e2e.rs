@@ -60,6 +60,26 @@ fn main() {
         }
     }
 
+    // Steady-state serving shape: amortize party setup over several warm
+    // `relu_into` rounds so the row reflects the pooled hot path (arena +
+    // RecvBufs + transport payload pool all warm after round 1).
+    {
+        let n = 16384usize;
+        let rounds = 4u64;
+        let x: Vec<u64> = (0..n).map(|_| prg.next_u64() % (1 << 16)).collect();
+        let xs = share_arith(&mut prg, &x, 2);
+        let plan = ReluPlan::new(12, 4).unwrap();
+        bench.bench_elems(&format!("relu/rust/hb8/{n}/warm{rounds}"), rounds * n as u64, || {
+            run_parties(2, 8, |p| {
+                let me = p.party();
+                let mut out = vec![0u64; n];
+                for _ in 0..rounds {
+                    p.relu_into(&xs[me], plan, &mut out).unwrap();
+                }
+            });
+        });
+    }
+
     // Backend ablation: the same ReLU through the Pallas/PJRT kernels.
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if root.join("manifest.json").exists() {

@@ -228,9 +228,15 @@ fn party_main(
     threads: usize,
 ) {
     let me = transport.party();
-    let rt = Runtime::new(&artifacts_root).expect("pjrt client");
+    let rt = Runtime::new(&artifacts_root).expect("runtime handle");
+    if !model_art.layers.is_empty() || backend == "xla" {
+        // Linear layers (and the xla GMW kernel backend) will execute
+        // PJRT artifacts: surface a missing or broken PJRT install at
+        // boot, not at the first request.
+        rt.ensure_client().expect("pjrt client");
+    }
     let sw = ShareWeights::prepare(&cfg, &weights).expect("weights");
-    let exec = ShareExecutor::new(cfg, model_art, rt.clone(), sw);
+    let mut exec = ShareExecutor::new(cfg, model_art, rt.clone(), sw);
     // The GMW engine: pure-Rust kernels by default, or the Pallas/PJRT
     // backend for the full three-layer path.
     if backend == "xla" {
@@ -238,22 +244,26 @@ fn party_main(
         let kernels = XlaKernels::new(rt, manifest);
         let mut party = GmwParty::with_kernels(transport, seed, kernels);
         party.set_threads(threads);
-        party_loop(&exec, &mut party, &plans, jobs, out, me);
+        party_loop(&mut exec, &mut party, &plans, jobs, out, me);
     } else {
         let mut party = GmwParty::new(transport, seed);
         party.set_threads(threads);
-        party_loop(&exec, &mut party, &plans, jobs, out, me);
+        party_loop(&mut exec, &mut party, &plans, jobs, out, me);
     }
 }
 
 fn party_loop<T: Transport, K: crate::gmw::kernels::KernelBackend>(
-    exec: &ShareExecutor,
+    exec: &mut ShareExecutor,
     party: &mut GmwParty<T, K>,
     plans: &PlanSet,
     jobs: Receiver<PartyJob>,
     out: Sender<(usize, PartyOut)>,
     me: usize,
 ) {
+    // The executor and engine are long-lived: after the first batch warms
+    // the activation pool, the scratch arena and the transport buffers,
+    // steady-state batches reuse them all (ROADMAP "activation-buffer
+    // reuse in model::ShareExecutor").
     while let Ok(job) = jobs.recv() {
         let x = TensorU64::new(job.shape.clone(), job.x_share).expect("share shape");
         let (o, bd) = exec.forward(party, x, plans).expect("party forward");
@@ -280,6 +290,10 @@ fn batcher_main(
     let per_sample = input_shape.0 * input_shape.1 * input_shape.2;
     let mut prg = Prg::from_entropy();
     let mut pending: Vec<Request> = Vec::new();
+    // Batch-sized staging buffers, reused across batches (the shares sent
+    // to the party threads are still fresh vectors — they cross threads).
+    let mut x_ring = vec![0u64; batch * per_sample];
+    let mut logits_ring = vec![0u64; batch * classes];
     loop {
         // Fill the batch window.
         let deadline = Instant::now() + timeout;
@@ -316,8 +330,9 @@ fn batcher_main(
         let reqs: Vec<Request> = pending.drain(..got).collect();
         let t0 = Instant::now();
 
-        // Encode + pad + share.
-        let mut x_ring = vec![0u64; batch * per_sample];
+        // Encode + pad + share (zero the pad region left by the previous
+        // batch before encoding this one).
+        x_ring.fill(0);
         for (i, r) in reqs.iter().enumerate() {
             for (j, v) in r.input.iter().take(per_sample).enumerate() {
                 x_ring[i * per_sample + j] = fx.encode(*v as f64);
@@ -341,7 +356,7 @@ fn batcher_main(
             }
         }
         trace.record(Phase::Data, (batch * classes * 8 * parties) as u64);
-        let mut logits_ring = vec![0u64; batch * classes];
+        logits_ring.fill(0);
         let mut bd = ExecBreakdown::default();
         let mut outs_n = 0;
         for o in outs.into_iter().flatten() {

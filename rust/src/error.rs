@@ -26,6 +26,11 @@ pub enum Error {
     /// Transport-level failure (channel closed, socket error, framing).
     Transport(String),
 
+    /// Wire-format violation: a payload whose length or framing does not
+    /// match what the protocol step expects (truncated or corrupt data
+    /// must never be silently zero-padded into "valid" shares).
+    Wire(String),
+
     /// Beaver-triple store exhausted or mismatched.
     Beaver(String),
 
@@ -52,6 +57,7 @@ impl fmt::Display for Error {
             Error::Json { offset, msg } => write!(f, "json error at byte {offset}: {msg}"),
             Error::Protocol(m) => write!(f, "protocol error: {m}"),
             Error::Transport(m) => write!(f, "transport error: {m}"),
+            Error::Wire(m) => write!(f, "wire format error: {m}"),
             Error::Beaver(m) => write!(f, "beaver error: {m}"),
             Error::Shape(m) => write!(f, "shape error: {m}"),
             Error::Model(m) => write!(f, "model error: {m}"),
@@ -89,6 +95,10 @@ impl Error {
     /// Shorthand constructor for shape errors.
     pub fn shape(msg: impl fmt::Display) -> Self {
         Error::Shape(msg.to_string())
+    }
+    /// Shorthand constructor for wire-format errors.
+    pub fn wire(msg: impl fmt::Display) -> Self {
+        Error::Wire(msg.to_string())
     }
     /// Shorthand constructor for runtime errors.
     pub fn runtime(msg: impl fmt::Display) -> Self {

@@ -216,7 +216,7 @@ impl FigCtx {
             let manifest = Manifest::load(&root).unwrap();
             let art = manifest.model(&model_s).unwrap().clone();
             let sw = ShareWeights::prepare(&cfg2, &weights).unwrap();
-            let exec = ShareExecutor::new(cfg2.clone(), art, rt, sw);
+            let mut exec = ShareExecutor::new(cfg2.clone(), art, rt, sw);
             let me = party.party();
             let x = crate::tensor::TensorU64::new(shape.clone(), xs[me].clone()).unwrap();
             // Warm the executable cache, then measure a clean pass.

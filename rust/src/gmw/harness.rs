@@ -347,9 +347,10 @@ mod tests {
     }
 
     /// The zero-allocation claim, pinned: after one warmup ReLU has filled
-    /// the scratch arena, further `relu_into` rounds check every buffer out
-    /// of the pool (no allocation misses) and return every buffer they
-    /// check out.
+    /// the scratch arena, the transport's send-payload pool and the
+    /// session `RecvBufs`, further `relu_into` rounds check every buffer
+    /// out of a pool (no allocation misses anywhere — engine *or*
+    /// transport receive path) and return every buffer they check out.
     #[test]
     fn relu_steady_state_is_allocation_free() {
         let parties = 2;
@@ -361,10 +362,15 @@ mod tests {
         let run = run_parties(parties, 6, |p| {
             let me = p.party();
             let mut out = vec![0u64; n];
-            // Warmup round populates the pool.
+            // Warmup round populates the pools.
             p.relu_into(&xs[me], plan, &mut out).unwrap();
             let warm = p.arena_stats();
+            let warm_net = p.transport.pool_stats();
             assert_eq!(warm.checkouts, warm.returns, "buffers leaked during warmup");
+            assert_eq!(
+                warm_net.checkouts, warm_net.returns,
+                "transport payloads leaked during warmup"
+            );
             // Steady-state rounds must not allocate.
             for round in 0..3 {
                 p.relu_into(&xs[me], plan, &mut out).unwrap();
@@ -374,6 +380,15 @@ mod tests {
                     "steady-state relu allocated (round {round})"
                 );
                 assert_eq!(s.checkouts, s.returns, "unbalanced checkout (round {round})");
+                let t = p.transport.pool_stats();
+                assert_eq!(
+                    t.alloc_misses, warm_net.alloc_misses,
+                    "steady-state relu allocated a transport payload (round {round})"
+                );
+                assert_eq!(
+                    t.checkouts, t.returns,
+                    "unbalanced transport payload checkout (round {round})"
+                );
             }
             out
         });

@@ -26,11 +26,14 @@
 //! wrappers that allocate only the final output. Internally all per-round
 //! temporaries — triple shares, masked openings, opened values, stage
 //! operands, wire byte buffers — are checked out of the party's
-//! [`arena::Arena`] and returned when the step completes, so once the pool
-//! is warm a steady-state [`GmwParty::relu_into`] round performs **zero
-//! heap allocations** in the engine (the transport's wire copies are the
-//! only remaining per-round allocations). Ownership rules live in the
-//! [`arena`] module docs: buffers are checked out and returned by the
+//! [`arena::Arena`] and returned when the step completes, and every
+//! opening routes through [`Transport::exchange_all_into`] into the
+//! party's session-owned [`net::RecvBufs`], so once the pools are warm a
+//! steady-state [`GmwParty::relu_into`] round performs **zero heap
+//! allocations** in the engine *and* on the transport receive path (the
+//! local hub's send payloads are pooled too — see `net::local`).
+//! Ownership rules live in the [`arena`] module docs and the `net` module
+//! docs (`RecvBufs`): buffers are checked out and returned by the
 //! protocol step that needs them, owned as plain locals in between, and
 //! never cross parties or threads.
 //!
@@ -48,15 +51,19 @@
 //! count; small batches always run inline.
 
 pub mod adder;
-pub mod arena;
 pub mod harness;
 pub mod kernels;
+
+/// The scratch arena now lives in [`crate::util::arena`] (it also backs the
+/// transport payload pool and the `ShareExecutor` activation pool); this
+/// re-export keeps the original `gmw::arena` paths working.
+pub use crate::util::arena;
 
 use crate::beaver::TtpDealer;
 use crate::bitpack;
 use crate::error::{Error, Result};
 use crate::net::accounting::Phase;
-use crate::net::{self, Transport};
+use crate::net::{self, RecvBufs, Transport};
 use crate::ring;
 use crate::sharing::PairwisePrgs;
 
@@ -108,6 +115,9 @@ pub struct GmwParty<T: Transport, K: KernelBackend = RustKernels> {
     pub pairwise: PairwisePrgs,
     kernels: K,
     arena: Arena,
+    /// Session-owned receive buffers; every opening's exchange fills these
+    /// (see `net` module docs for the ownership rules).
+    recv: RecvBufs,
     threads: usize,
 }
 
@@ -128,6 +138,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
             pairwise: PairwisePrgs::new(session_seed, party, parties),
             kernels,
             arena: Arena::new(),
+            recv: RecvBufs::new(parties),
             threads: 1,
         }
     }
@@ -199,16 +210,29 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
     ) -> Result<()> {
         let n = shares.len();
         debug_assert_eq!(out.len(), n);
-        let mut wire = self.arena.take_bytes(bitpack::packed_bytes(n, w) as usize);
+        let wire_len = bitpack::packed_bytes(n, w) as usize;
+        let mut wire = self.arena.take_bytes(wire_len);
         bitpack::pack_bytes_into(shares, w, &mut wire, self.threads);
-        let bufs = self.transport.exchange_all(phase, &wire)?;
+        self.transport.exchange_all_into(phase, &wire, &mut self.recv)?;
         self.arena.put_bytes(wire);
         out.copy_from_slice(shares);
-        for (q, buf) in bufs.iter().enumerate() {
-            if q == self.party() {
+        let me = self.transport.party();
+        let threads = self.threads;
+        for q in 0..self.recv.parties() {
+            if q == me {
                 continue;
             }
-            bitpack::unpack_bytes_xor_into(buf, w, n, out, self.threads);
+            let buf = self.recv.get(q);
+            // Hard wire check (the symmetric protocol makes every party's
+            // payload the same size): a short/long payload is truncation
+            // or corruption and must not be zero-padded into shares.
+            if buf.len() != wire_len {
+                return Err(Error::wire(format!(
+                    "binary opening from party {q}: expected {wire_len} bytes, got {}",
+                    buf.len()
+                )));
+            }
+            bitpack::unpack_bytes_xor_into(buf, w, n, out, threads);
         }
         Ok(())
     }
@@ -226,14 +250,15 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         debug_assert_eq!(out.len(), n);
         let mut wire = self.arena.take_bytes(n * 8);
         net::u64s_to_bytes_into(shares, &mut wire);
-        let bufs = self.transport.exchange_all(phase, &wire)?;
+        self.transport.exchange_all_into(phase, &wire, &mut self.recv)?;
         self.arena.put_bytes(wire);
         out.copy_from_slice(shares);
-        for (q, buf) in bufs.iter().enumerate() {
-            if q == self.party() {
+        let me = self.transport.party();
+        for q in 0..self.recv.parties() {
+            if q == me {
                 continue;
             }
-            net::add_u64s_from_bytes(buf, out);
+            net::add_u64s_from_bytes(self.recv.get(q), out)?;
         }
         Ok(())
     }
@@ -418,11 +443,21 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         Ok(out)
     }
 
-    /// Local truncation of shares by 2^f (CrypTen-style; see
-    /// [`ring::trunc_share`]).
-    pub fn trunc(&self, shares: &[u64], f: u32) -> Vec<u64> {
+    /// Local truncation of shares by 2^f, in place (CrypTen-style; see
+    /// [`ring::trunc_share`]). The serving hot path uses this form so a
+    /// linear layer's output buffer is truncated without a copy.
+    pub fn trunc_in_place(&self, shares: &mut [u64], f: u32) {
         let me = self.party();
-        shares.iter().map(|s| ring::trunc_share(*s, f, me)).collect()
+        for s in shares.iter_mut() {
+            *s = ring::trunc_share(*s, f, me);
+        }
+    }
+
+    /// Local truncation of shares by 2^f (allocating wrapper).
+    pub fn trunc(&self, shares: &[u64], f: u32) -> Vec<u64> {
+        let mut out = shares.to_vec();
+        self.trunc_in_place(&mut out, f);
+        out
     }
 
     /// Add a public constant vector (leader adds; others pass through).

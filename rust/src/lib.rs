@@ -21,6 +21,7 @@
 pub mod error;
 
 pub mod util {
+    pub mod arena;
     pub mod benchkit;
     pub mod cli;
     pub mod json;

@@ -12,12 +12,40 @@
 //!   add bias (encoded at 2^(2f)) → truncate by f → back to 2^f.
 //!   GAP: sum (scale f) → × encode(1/hw) (scale 2f) → truncate.
 //!
+//! # Steady-state activation reuse
+//!
+//! The executor owns a size-classed activation pool (the same
+//! [`Arena`] the GMW engine uses for round temporaries) plus a per-node
+//! consumer refcount derived from the graph:
+//!
+//! * a *mutating* consumer (the residual add's accumulator) **claims** its
+//!   source activation — moving it on the last use, copying into a
+//!   pool-recycled buffer otherwise; read-only consumers (linear layers,
+//!   ReLU, GAP) borrow the stored tensor and just drop their refcount, so
+//!   fan-out never copies for them;
+//! * once a node's last consumer has run, its activation buffer goes back
+//!   to the pool instead of staying alive for the whole pass;
+//! * ReLU rounds write through [`GmwParty::relu_into`] into pooled
+//!   buffers, truncation is in place, and residual adds accumulate in
+//!   place.
+//!
+//! After one warm-up pass the pool holds a buffer for every activation
+//! size class, so a steady-state [`ShareExecutor::forward`] performs zero
+//! data-buffer allocations in activation handling (linear-layer artifact
+//! *outputs* are allocated by the PJRT runtime, but are recycled into the
+//! pool when consumed; tiny shape vectors are not pooled). Long-running
+//! serving loops that keep the logits on this thread can hand the output
+//! buffer back via [`ShareExecutor::recycle`] to make the pass fully
+//! miss-free; [`ShareExecutor::pool_stats`] exposes the counters that pin
+//! this in tests.
+//!
 //! The executor also records a per-op timing breakdown so Fig 1/10's
 //! {linear, ReLU-compute, ReLU-comm} split can be regenerated.
 
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::gmw::arena::{Arena, ArenaStats};
 use crate::gmw::kernels::KernelBackend;
 use crate::gmw::GmwParty;
 use crate::hummingbird::PlanSet;
@@ -106,13 +134,25 @@ pub enum LinearBackend {
     Fast,
 }
 
-/// The share executor (per party, stateless across requests).
+/// The share executor (per party; owns the reusable activation state, so
+/// one executor serves one party thread across many requests).
 pub struct ShareExecutor {
     pub cfg: ModelConfig,
     pub artifacts: ModelArtifacts,
     rt: Runtime,
     weights: ShareWeights,
     pub linear: LinearBackend,
+    /// Size-classed activation-buffer pool (see module docs).
+    pool: Arena,
+    /// Static per-node shapes (computed once; `cfg` is immutable).
+    shapes: Vec<Vec<usize>>,
+    /// Static consumer count per node (how many later nodes read it).
+    uses: Vec<usize>,
+    /// Per-pass remaining-consumer counts (reset from `uses`).
+    remaining: Vec<usize>,
+    /// Per-pass activation slots (kept across passes to avoid re-allocating
+    /// the slot vector; tensors are recycled as their last consumer runs).
+    acts: Vec<Option<TensorU64>>,
 }
 
 impl ShareExecutor {
@@ -122,7 +162,34 @@ impl ShareExecutor {
         rt: Runtime,
         weights: ShareWeights,
     ) -> ShareExecutor {
-        ShareExecutor { cfg, artifacts, rt, weights, linear: LinearBackend::Fast }
+        let n = cfg.nodes.len();
+        let mut uses = vec![0usize; n];
+        for node in &cfg.nodes {
+            match node {
+                Op::Input => {}
+                Op::Conv { src, .. }
+                | Op::Fc { src, .. }
+                | Op::Relu { src, .. }
+                | Op::Gap { src } => uses[*src] += 1,
+                Op::Add { a, b } => {
+                    uses[*a] += 1;
+                    uses[*b] += 1;
+                }
+            }
+        }
+        let shapes = cfg.shapes();
+        ShareExecutor {
+            cfg,
+            artifacts,
+            rt,
+            weights,
+            linear: LinearBackend::Fast,
+            pool: Arena::new(),
+            shapes,
+            uses,
+            remaining: vec![0; n],
+            acts: (0..n).map(|_| None).collect(),
+        }
     }
 
     pub fn with_linear(mut self, linear: LinearBackend) -> Self {
@@ -130,19 +197,77 @@ impl ShareExecutor {
         self
     }
 
+    /// Counters of the activation pool (checkouts / returns / allocation
+    /// misses). Steady-state forward passes must not add misses; the
+    /// warm-path invariant is pinned by `forward_steady_state_reuses_buffers`.
+    pub fn pool_stats(&self) -> ArenaStats {
+        self.pool.stats()
+    }
+
+    /// Hand an output tensor's buffer back to the activation pool (serving
+    /// loops that consume the logits on this thread call this to make the
+    /// next pass fully miss-free).
+    pub fn recycle(&mut self, t: TensorU64) {
+        self.pool.put_words(t.data);
+    }
+
+    /// Claim node `src`'s activation for one consumer: moves the tensor on
+    /// its last use, otherwise copies it into a pool-recycled buffer. The
+    /// input buffer (node 0) is never moved into the dataflow — it is
+    /// copied and dropped, so the caller-owned `Vec` can't sneak into the
+    /// bounded pool through a downstream release (see [`Self::release`]).
+    fn claim(&mut self, src: usize) -> Result<TensorU64> {
+        let t = match self.remaining[src] {
+            0 => return Err(miss(src)),
+            1 if src != 0 => self.acts[src].take().ok_or_else(|| miss(src))?,
+            1 => {
+                let t = self.acts[src].take().ok_or_else(|| miss(src))?;
+                let mut data = self.pool.take_words(t.len());
+                data.copy_from_slice(&t.data);
+                TensorU64 { shape: t.shape, data }
+            }
+            _ => {
+                let t = self.acts[src].as_ref().ok_or_else(|| miss(src))?;
+                let mut data = self.pool.take_words(t.len());
+                data.copy_from_slice(&t.data);
+                TensorU64 { shape: t.shape.clone(), data }
+            }
+        };
+        self.remaining[src] -= 1;
+        Ok(t)
+    }
+
+    /// Mark one read of node `src` done; recycles its buffer after the
+    /// last consumer. The *input* buffer (node 0) is dropped instead of
+    /// pooled: it arrives as a fresh caller-owned `Vec` every request, so
+    /// pooling it would grow the pool by one foreign buffer per request —
+    /// for conv models its size class is never checked out again, and the
+    /// dead buffers would eventually crowd live classes out of the
+    /// bounded pool.
+    fn release(&mut self, src: usize) {
+        debug_assert!(self.remaining[src] > 0, "release past refcount (node {src})");
+        self.remaining[src] -= 1;
+        if self.remaining[src] == 0 {
+            if let Some(t) = self.acts[src].take() {
+                if src != 0 {
+                    self.pool.put_words(t.data);
+                }
+            }
+        }
+    }
+
     /// Full private forward pass on this party's input share
     /// `x` ([batch, C, H, W] flattened). Returns (logit shares, breakdown).
+    /// Steady-state allocation behavior is described in the module docs.
     pub fn forward<T: Transport, K: KernelBackend>(
-        &self,
+        &mut self,
         party: &mut GmwParty<T, K>,
         x: TensorU64,
         plans: &PlanSet,
     ) -> Result<(TensorU64, ExecBreakdown)> {
         let batch = self.artifacts.batch;
         let f = self.cfg.frac_bits;
-        let shapes = self.cfg.shapes();
         let n_nodes = self.cfg.nodes.len();
-        let mut acts: Vec<Option<TensorU64>> = vec![None; n_nodes];
         let mut bd = ExecBreakdown::default();
         if x.shape.first() != Some(&batch) {
             return Err(Error::shape(format!(
@@ -150,92 +275,135 @@ impl ShareExecutor {
                 x.shape
             )));
         }
-        acts[0] = Some(x);
+        // Reset per-pass state; leftover activations (dead nodes, aborted
+        // passes) recycle into the pool instead of dropping — except the
+        // previous input buffer, which is dropped (see `release`).
+        self.remaining.copy_from_slice(&self.uses);
+        for (idx, slot) in self.acts.iter_mut().enumerate() {
+            if let Some(t) = slot.take() {
+                if idx != 0 {
+                    self.pool.put_words(t.data);
+                }
+            }
+        }
+        self.acts[0] = Some(x);
         for i in 1..n_nodes {
-            let node = &self.cfg.nodes[i];
+            // Clone the op descriptor (a few words) so `self` stays free
+            // for the claim/release bookkeeping below.
+            let node = self.cfg.nodes[i].clone();
             let t0 = Instant::now();
             let out = match node {
                 Op::Input => unreachable!("input is node 0"),
                 Op::Conv { src, .. } | Op::Fc { src, .. } => {
+                    // The artifact only *reads* its input, so shared
+                    // sources need no copy: take the tensor out of its
+                    // slot for the call (swapping in the flattened fc
+                    // shape if needed) and put it back unless this was
+                    // its last consumer.
+                    let mut xin = self.acts[src].take().ok_or_else(|| miss(i))?;
+                    let orig_shape = if matches!(node, Op::Fc { .. }) {
+                        // Flatten for fc (with the same validation the old
+                        // reshape() performed).
+                        if xin.len() % batch != 0 {
+                            return Err(Error::shape(format!(
+                                "fc node {i}: input of {} elems not divisible by batch {batch}",
+                                xin.len()
+                            )));
+                        }
+                        let flat = xin.len() / batch;
+                        Some(std::mem::replace(&mut xin.shape, vec![batch, flat]))
+                    } else {
+                        None
+                    };
                     let layer = self
                         .artifacts
                         .layers
                         .get(&i)
                         .ok_or_else(|| Error::Model(format!("no artifact for node {i}")))?;
-                    // Clone: residual graphs reuse a source for both the
-                    // main path and the skip path.
-                    let xin = acts[*src].clone().ok_or_else(|| miss(i))?;
-                    let xin = if matches!(node, Op::Fc { .. }) {
-                        // Flatten for fc.
-                        let flat = xin.len() / batch;
-                        xin.reshape(vec![batch, flat])?
-                    } else {
-                        xin
-                    };
                     let wmat = &self.weights.wmats[&i];
                     let artifact = match (self.linear, &layer.share_fast) {
                         (LinearBackend::Fast, Some(fast)) => fast.as_str(),
                         _ => layer.share.as_str(),
                     };
-                    let y = self
+                    let mut y = self
                         .rt
                         .run_u64(artifact, &[&xin, wmat])?
                         .into_iter()
                         .next()
                         .ok_or_else(|| Error::runtime("artifact returned no output"))?;
-                    // Bias (public, leader-only) at scale 2f, then truncate.
+                    // Restore the tensor (and its original shape), then
+                    // drop this consumer's refcount — release() recycles
+                    // the buffer if this was the last consumer.
+                    if let Some(shape) = orig_shape {
+                        xin.shape = shape;
+                    }
+                    self.acts[src] = Some(xin);
+                    self.release(src);
+                    // Bias (public, leader-only) at scale 2f, then truncate
+                    // in place — the artifact's output buffer becomes the
+                    // activation with no further copies.
                     let bias = &self.weights.biases[&i];
-                    let mut y = y;
                     if party.is_leader() {
                         add_bias(&mut y, bias, batch)?;
                     }
-                    let data = party.trunc(&y.data, f);
+                    party.trunc_in_place(&mut y.data, f);
                     bd.linear_s += t0.elapsed().as_secs_f64();
-                    TensorU64 { shape: y.shape, data }
+                    y
                 }
                 Op::Relu { src, group } => {
-                    let xin = acts[*src].clone().ok_or_else(|| miss(i))?;
-                    let plan = plans.plan_for(*group);
-                    let data = party.relu(&xin.data, plan)?;
+                    let plan = plans.plan_for(group);
+                    let (shape, data) = {
+                        let xin = self.acts[src].as_ref().ok_or_else(|| miss(i))?;
+                        let mut out = self.pool.take_words(xin.len());
+                        party.relu_into(&xin.data, plan, &mut out)?;
+                        (xin.shape.clone(), out)
+                    };
+                    self.release(src);
                     bd.relu_s += t0.elapsed().as_secs_f64();
-                    TensorU64 { shape: xin.shape, data }
+                    TensorU64 { shape, data }
                 }
                 Op::Add { a, b } => {
-                    let va = acts[*a].clone().ok_or_else(|| miss(i))?;
-                    let vb = acts[*b].as_ref().ok_or_else(|| miss(i))?;
-                    let out = va.wrapping_add(vb)?;
+                    let mut va = self.claim(a)?;
+                    {
+                        let vb = self.acts[b].as_ref().ok_or_else(|| miss(i))?;
+                        va.wrapping_add_assign(vb)?;
+                    }
+                    self.release(b);
                     bd.other_s += t0.elapsed().as_secs_f64();
-                    out
+                    va
                 }
                 Op::Gap { src } => {
-                    let v = acts[*src].as_ref().ok_or_else(|| miss(i))?;
-                    let s = &shapes[*src];
+                    let s = &self.shapes[src];
                     let (c, h, w) = (s[0], s[1], s[2]);
-                    let mut sums = vec![0u64; batch * c];
-                    for bi in 0..batch {
-                        for ci in 0..c {
-                            let base = (bi * c + ci) * h * w;
-                            let mut acc = 0u64;
-                            for e in &v.data[base..base + h * w] {
-                                acc = acc.wrapping_add(*e);
+                    let mut sums = self.pool.take_words(batch * c);
+                    {
+                        let v = self.acts[src].as_ref().ok_or_else(|| miss(i))?;
+                        for bi in 0..batch {
+                            for ci in 0..c {
+                                let base = (bi * c + ci) * h * w;
+                                let mut acc = 0u64;
+                                for e in &v.data[base..base + h * w] {
+                                    acc = acc.wrapping_add(*e);
+                                }
+                                sums[bi * c + ci] = acc;
                             }
-                            sums[bi * c + ci] = acc;
                         }
                     }
+                    self.release(src);
                     // × encode(1/hw) (scale f) → 2f → truncate back to f.
                     let fx = FixedPoint::new(f);
                     let inv = fx.encode(1.0 / (h * w) as f64);
                     for e in sums.iter_mut() {
                         *e = e.wrapping_mul(inv);
                     }
-                    let data = party.trunc(&sums, f);
+                    party.trunc_in_place(&mut sums, f);
                     bd.other_s += t0.elapsed().as_secs_f64();
-                    TensorU64::new(vec![batch, c], data)?
+                    TensorU64::new(vec![batch, c], sums)?
                 }
             };
-            acts[i] = Some(out);
+            self.acts[i] = Some(out);
         }
-        let out = acts[n_nodes - 1].take().ok_or_else(|| Error::Model("no output".into()))?;
+        let out = self.acts[n_nodes - 1].take().ok_or_else(|| Error::Model("no output".into()))?;
         Ok((out, bd))
     }
 }
@@ -246,10 +414,22 @@ fn miss(i: usize) -> Error {
 
 /// Add a public per-channel bias to a conv output [B,C,H,W] or fc [B,C].
 fn add_bias(y: &mut TensorU64, bias: &[u64], batch: usize) -> Result<()> {
+    if batch == 0 {
+        return Err(Error::shape("add_bias: batch must be non-zero"));
+    }
+    if bias.is_empty() {
+        return Err(Error::shape("add_bias: empty bias"));
+    }
+    if y.len() % batch != 0 {
+        return Err(Error::shape(format!(
+            "add_bias: output len {} not divisible by batch {batch}",
+            y.len()
+        )));
+    }
     let per = y.len() / batch;
     let c = bias.len();
     let spatial = per / c;
-    if c * spatial != per {
+    if spatial == 0 || c * spatial != per {
         return Err(Error::shape("bias does not divide output"));
     }
     for bi in 0..batch {
@@ -266,6 +446,10 @@ fn add_bias(y: &mut TensorU64, bias: &[u64], batch: usize) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gmw::harness::run_parties;
+    use crate::ring;
+    use crate::sharing::{reconstruct_arith, share_arith};
+    use crate::util::json;
 
     #[test]
     fn bias_broadcast_layout() {
@@ -277,5 +461,193 @@ mod tests {
         let mut y = TensorU64::new(vec![2, 2], vec![0; 4]).unwrap();
         add_bias(&mut y, &[1, 2], 2).unwrap();
         assert_eq!(y.data, vec![1, 2, 1, 2]);
+    }
+
+    /// Degenerate shapes are shape errors, not divide-by-zero panics.
+    #[test]
+    fn bias_zero_guards() {
+        let mut y = TensorU64::new(vec![1, 2], vec![0, 0]).unwrap();
+        assert!(matches!(add_bias(&mut y, &[1, 2], 0), Err(Error::Shape(_))));
+        assert!(matches!(add_bias(&mut y, &[], 1), Err(Error::Shape(_))));
+        // More channels than output elements: spatial would truncate to 0.
+        let mut y = TensorU64::new(vec![1, 2], vec![0, 0]).unwrap();
+        assert!(matches!(add_bias(&mut y, &[1, 2, 3], 1), Err(Error::Shape(_))));
+        // Batch not dividing the output length.
+        let mut y = TensorU64::new(vec![3], vec![0, 0, 0]).unwrap();
+        assert!(matches!(add_bias(&mut y, &[1], 2), Err(Error::Shape(_))));
+    }
+
+    /// A linear-free graph (input → relu → residual add → relu → gap) that
+    /// exercises every pooled path of the executor without PJRT artifacts.
+    fn pooled_cfg() -> ModelConfig {
+        let j = json::parse(
+            r#"{
+          "name":"pooltest","model":"pooltest","dataset":"synthetic",
+          "input":[2,4,4],"num_classes":2,"batch":3,"frac_bits":8,
+          "relu_groups":1,
+          "nodes":[
+            {"op":"input"},
+            {"op":"relu","in":[0],"group":0},
+            {"op":"add","in":[1,1]},
+            {"op":"relu","in":[2],"group":0},
+            {"op":"gap","in":[3]}
+          ]}"#,
+        )
+        .unwrap();
+        ModelConfig::from_json(&j).unwrap()
+    }
+
+    fn pooled_exec() -> ShareExecutor {
+        let cfg = pooled_cfg();
+        let artifacts = ModelArtifacts {
+            batch: cfg.batch,
+            search_batch: 1,
+            frac_bits: cfg.frac_bits,
+            layers: std::collections::BTreeMap::new(),
+        };
+        // No conv/fc nodes → the runtime is never touched (lazy client)
+        // and the weight set is empty.
+        let rt = Runtime::new("unused-artifacts-root").unwrap();
+        let sw = ShareWeights::prepare(&cfg, &Archive::default()).unwrap();
+        ShareExecutor::new(cfg, artifacts, rt, sw)
+    }
+
+    /// The serving-path warm invariant, pinned (acceptance criterion):
+    /// after one warm-up forward pass, further passes add **zero**
+    /// allocation misses in the activation pool, the engine arena and the
+    /// transport payload pool, and produce bit-identical outputs.
+    #[test]
+    fn forward_steady_state_reuses_buffers() {
+        let batch = 3usize;
+        let elems = batch * 2 * 4 * 4;
+        let fx = FixedPoint::new(8);
+        // Mixed positive/negative activations at scale 2^8.
+        let x_ring: Vec<u64> = (0..elems)
+            .map(|i| {
+                let v = fx.encode((i as f64 * 0.37).sin() * 3.0);
+                if i % 3 == 0 {
+                    v.wrapping_neg()
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let mut prg = crate::crypto::prg::Prg::new(77, 0);
+        let xs = share_arith(&mut prg, &x_ring, 2);
+        let plans = PlanSet::baseline(1);
+        let shape = vec![batch, 2, 4, 4];
+
+        let run = run_parties(2, 0xa110c, |p| {
+            let mut exec = pooled_exec();
+            let me = p.party();
+            let mk_x =
+                || TensorU64::new(shape.clone(), xs[me].clone()).unwrap();
+            let mut passes: Vec<Vec<u64>> = Vec::new();
+            // Warm-up pass fills every pool size class.
+            let (out0, _) = exec.forward(p, mk_x(), &plans).unwrap();
+            passes.push(out0.data.clone());
+            exec.recycle(out0);
+            let warm_pool = exec.pool_stats();
+            let warm_arena = p.arena_stats();
+            let warm_net = p.transport.pool_stats();
+            // Two further warm passes: no new misses anywhere.
+            for pass in 0..2 {
+                let before = exec.pool_stats();
+                let (out, _) = exec.forward(p, mk_x(), &plans).unwrap();
+                passes.push(out.data.clone());
+                exec.recycle(out);
+                let s = exec.pool_stats();
+                assert_eq!(
+                    s.alloc_misses, warm_pool.alloc_misses,
+                    "steady-state pass {pass} allocated an activation buffer"
+                );
+                // The checkout pattern replays identically each pass.
+                assert_eq!(
+                    s.checkouts - before.checkouts,
+                    warm_pool.checkouts,
+                    "pass {pass} changed its checkout pattern"
+                );
+                assert_eq!(
+                    p.arena_stats().alloc_misses,
+                    warm_arena.alloc_misses,
+                    "steady-state pass {pass} allocated in the engine arena"
+                );
+                assert_eq!(
+                    p.transport.pool_stats().alloc_misses,
+                    warm_net.alloc_misses,
+                    "steady-state pass {pass} allocated a transport payload"
+                );
+            }
+            passes
+        });
+
+        // Every pass (warm-up and steady-state) still computes the right
+        // thing: r1 = relu(x); a = 2*r1; r2 = relu(a) = a; gap = mean(a)
+        // (±trunc slack — the share randomness differs per pass, so passes
+        // agree in value, not in share bits).
+        for pass in 0..3 {
+            let shares =
+                vec![run.outputs[0][pass].clone(), run.outputs[1][pass].clone()];
+            let got = reconstruct_arith(&shares);
+            assert_eq!(got.len(), batch * 2);
+            for bi in 0..batch {
+                for ci in 0..2 {
+                    let base = (bi * 2 + ci) * 16;
+                    let mean: f64 = (0..16)
+                        .map(|k| {
+                            let v = x_ring[base + k];
+                            if ring::is_negative(v) {
+                                0.0
+                            } else {
+                                fx.decode(v)
+                            }
+                        })
+                        .sum::<f64>()
+                        * 2.0
+                        / 16.0;
+                    let g = fx.decode(got[bi * 2 + ci]);
+                    assert!(
+                        (g - mean).abs() < 0.1,
+                        "pass {pass} gap[{bi},{ci}]: got {g}, want ~{mean}"
+                    );
+                }
+            }
+        }
+
+        // Bit-identical at any `--threads` value: same session seed → same
+        // protocol randomness, so a multi-threaded first pass must equal
+        // the single-threaded one share-for-share (acceptance criterion).
+        let base_pass0: Vec<Vec<u64>> =
+            run.outputs.iter().map(|passes| passes[0].clone()).collect();
+        for threads in [2usize, 4] {
+            let run_t =
+                crate::gmw::harness::run_parties_threaded(2, 0xa110c, threads, |p| {
+                    let mut exec = pooled_exec();
+                    let me = p.party();
+                    let x = TensorU64::new(shape.clone(), xs[me].clone()).unwrap();
+                    let (out, _) = exec.forward(p, x, &plans).unwrap();
+                    out.data
+                });
+            assert_eq!(run_t.outputs, base_pass0, "threads={threads}");
+        }
+    }
+
+    /// Residual fan-out bookkeeping: a source consumed by two nodes must
+    /// survive its first consumer and be recycled after its second.
+    #[test]
+    fn refcounts_keep_shared_sources_alive() {
+        let mut exec = pooled_exec();
+        // uses: input=1 (relu1), relu1=2 (add reads it twice), add=1, relu3=1, gap=0.
+        assert_eq!(exec.uses, vec![1, 2, 1, 1, 0]);
+        // Claim-twice semantics on a fan-out node.
+        exec.remaining.copy_from_slice(&exec.uses.clone());
+        exec.acts[1] = Some(TensorU64::from_vec(vec![1, 2, 3]));
+        let first = exec.claim(1).unwrap();
+        assert_eq!(first.data, vec![1, 2, 3]);
+        assert!(exec.acts[1].is_some(), "shared source must survive first claim");
+        let second = exec.claim(1).unwrap();
+        assert_eq!(second.data, vec![1, 2, 3]);
+        assert!(exec.acts[1].is_none(), "last claim must move the tensor");
+        assert!(exec.claim(1).is_err(), "claims past the refcount must fail");
     }
 }

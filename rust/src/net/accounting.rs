@@ -66,9 +66,10 @@ pub struct RoundRecord {
 #[derive(Debug, Default)]
 pub struct CommTrace {
     rounds: Mutex<Vec<RoundRecord>>,
-    /// Wall time spent blocked inside exchange_all (nanoseconds). On the
-    /// in-process hub this is thread-sync overhead; on TCP it is real wire
-    /// time. Used to split measured wall-clock into compute vs. wait.
+    /// Wall time spent blocked inside `exchange_all_into` (and the
+    /// `exchange_all` shim), in nanoseconds. On the in-process hub this is
+    /// thread-sync overhead; on TCP it is real wire time. Used to split
+    /// measured wall-clock into compute vs. wait.
     wait_nanos: std::sync::atomic::AtomicU64,
 }
 

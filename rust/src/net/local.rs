@@ -3,13 +3,27 @@
 //! it gives *exact* byte/round accounting with zero serialization noise,
 //! mirroring the paper's High-BW (single-node) setup; LAN/WAN numbers are
 //! projected from the recorded trace (see [`super::profile`]).
+//!
+//! # Send-buffer circulation
+//!
+//! Channel messages own their payload `Vec<u8>`, so a naive hub allocates
+//! one payload per peer per round. Instead each endpoint keeps a
+//! size-classed pool of payload buffers (the shared
+//! [`Arena`](crate::util::arena::Arena)): sends check a buffer out of the
+//! pool, and every payload *received* is recycled into the receiver's pool
+//! after its bytes are copied into the caller's [`RecvBufs`]. Because the
+//! protocol is symmetric (all parties send the same sizes every round),
+//! buffers circulate around the hub and the steady state allocates
+//! nothing; [`LocalTransport::pool_stats`] exposes the counters that pin
+//! this in tests.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
 use super::accounting::{CommTrace, Phase};
-use super::Transport;
+use super::{RecvBufs, Transport};
 use crate::error::{Error, Result};
+use crate::util::arena::{Arena, ArenaStats};
 
 /// Message envelope: (sender, sequence number, payload).
 type Msg = (usize, u64, Vec<u8>);
@@ -27,6 +41,8 @@ pub struct LocalTransport {
     next_seq: Vec<u64>,
     /// My send sequence number (same for all peers; one round = one seq).
     seq: u64,
+    /// Size-classed pool of payload buffers (see module docs).
+    pool: Arena,
     trace: Arc<CommTrace>,
 }
 
@@ -58,12 +74,28 @@ pub fn hub(parties: usize) -> Vec<LocalTransport> {
             pending: (0..parties).map(|_| Vec::new()).collect(),
             next_seq: vec![0; parties],
             seq: 0,
+            pool: Arena::new(),
             trace: Arc::new(CommTrace::new()),
         })
         .collect()
 }
 
 impl LocalTransport {
+    /// Allocation counters of the send-payload pool (steady-state rounds
+    /// must not add `alloc_misses`).
+    pub fn pool_stats(&self) -> ArenaStats {
+        self.pool.stats()
+    }
+
+    /// Check a payload buffer out of the pool, filled with `data` (a warm
+    /// pool hit comes back sized to `data.len()` from its last round, so
+    /// the fill is a plain overwrite).
+    fn pool_take_filled(&mut self, data: &[u8]) -> Vec<u8> {
+        let mut b = self.pool.take_bytes(data.len());
+        RecvBufs::fill_slot(&mut b, data);
+        b
+    }
+
     fn recv_from(&mut self, peer: usize, want_seq: u64) -> Result<Vec<u8>> {
         // Check the reorder buffer first.
         if let Some(pos) = self.pending[peer].iter().position(|(s, _)| *s == want_seq) {
@@ -90,37 +122,60 @@ impl Transport for LocalTransport {
         self.parties
     }
 
-    fn exchange_all(&mut self, phase: Phase, data: &[u8]) -> Result<Vec<Vec<u8>>> {
+    fn exchange_all_into(
+        &mut self,
+        phase: Phase,
+        data: &[u8],
+        recv: &mut RecvBufs,
+    ) -> Result<()> {
+        if recv.parties() != self.parties {
+            return Err(Error::Transport(format!(
+                "RecvBufs sized for {} parties, hub has {}",
+                recv.parties(),
+                self.parties
+            )));
+        }
         let t0 = std::time::Instant::now();
         let seq = self.seq;
         self.seq += 1;
-        // Send to all peers first (non-blocking), then collect.
+        // Send to all peers first (non-blocking), then collect. Payload
+        // buffers come from the pool; receivers recycle them into *their*
+        // pool, so buffers circulate around the symmetric hub.
         for q in 0..self.parties {
             if q == self.party {
                 continue;
             }
+            let payload = self.pool_take_filled(data);
             self.senders[q]
                 .as_ref()
                 .expect("hub wiring")
-                .send((self.party, seq, data.to_vec()))
+                .send((self.party, seq, payload))
                 .map_err(|_| Error::Transport(format!("party {q} hung up")))?;
         }
-        let mut out: Vec<Vec<u8>> = vec![Vec::new(); self.parties];
         for q in 0..self.parties {
             if q == self.party {
-                out[q] = data.to_vec();
-            } else {
-                let want = self.next_seq[q];
-                out[q] = self.recv_from(q, want)?;
-                self.next_seq[q] = want + 1;
+                continue;
             }
+            let want = self.next_seq[q];
+            let payload = self.recv_from(q, want)?;
+            self.next_seq[q] = want + 1;
+            // Copy-then-recycle rather than swapping the payload into the
+            // slot: the copy makes every round return a buffer of exactly
+            // the class it checked out *within the same round* (the
+            // symmetric peer payload has the same size), which is what
+            // makes one warm-up pass provably miss-free. A slot swap would
+            // delay each return by a round, and consecutive same-size
+            // rounds (the Kogge–Stone stages) could then still miss on the
+            // second pass.
+            RecvBufs::fill_slot(&mut recv.slots_mut()[q], &payload);
+            self.pool.put_bytes(payload);
         }
         // One exchange = one round; bytes = what this party pushed to each
         // peer (the per-link number — the projection model scales by the
         // topology).
         self.trace.record(phase, (data.len() * (self.parties - 1)) as u64);
         self.trace.record_wait(t0.elapsed());
-        Ok(out)
+        Ok(())
     }
 
     fn trace(&self) -> Arc<CommTrace> {
@@ -172,5 +227,51 @@ mod tests {
         for h in handles {
             assert_eq!(h.join().unwrap(), 50);
         }
+    }
+
+    /// Steady-state rounds through `exchange_all_into` must not allocate:
+    /// the first round warms the payload pool and the receive slots; later
+    /// same-size rounds check every payload out of the pool.
+    #[test]
+    fn pooled_exchange_is_allocation_free_when_warm() {
+        let transports = hub(3);
+        let handles: Vec<_> = transports
+            .into_iter()
+            .map(|mut t| {
+                std::thread::spawn(move || {
+                    let me = t.party();
+                    let mut recv = RecvBufs::new(t.parties());
+                    let payload = vec![me as u8; 1024];
+                    // Warmup round.
+                    t.exchange_all_into(Phase::Circuit, &payload, &mut recv).unwrap();
+                    let warm = t.pool_stats();
+                    for round in 0..5 {
+                        t.exchange_all_into(Phase::Circuit, &payload, &mut recv).unwrap();
+                        for q in (0..t.parties()).filter(|q| *q != me) {
+                            assert_eq!(recv.get(q), vec![q as u8; 1024], "round {round}");
+                        }
+                        let s = t.pool_stats();
+                        assert_eq!(
+                            s.alloc_misses, warm.alloc_misses,
+                            "steady-state round {round} allocated a payload"
+                        );
+                        assert_eq!(s.checkouts, s.returns, "payloads leaked (round {round})");
+                    }
+                    t.trace().total_rounds()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 6);
+        }
+    }
+
+    /// Mis-sized RecvBufs is a hard transport error, not a silent resize.
+    #[test]
+    fn mismatched_recvbufs_rejected() {
+        let mut transports = hub(2);
+        let mut t0 = transports.remove(0);
+        let mut recv = RecvBufs::new(3);
+        assert!(t0.exchange_all_into(Phase::Circuit, b"x", &mut recv).is_err());
     }
 }

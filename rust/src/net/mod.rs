@@ -7,40 +7,146 @@
 //! Both feed the same [`accounting::CommTrace`], and simulated wall-clock
 //! for arbitrary networks is projected by [`profile`] using the paper's own
 //! methodology (measured bytes/rounds × analytic bandwidth/latency model).
+//!
+//! # `exchange_all` → `exchange_all_into` migration
+//!
+//! The original primitive, `exchange_all`, returned a fresh
+//! `Vec<Vec<u8>>` per round — one allocation per peer per round, the last
+//! per-round allocations left after the engine-side arena work (PR 1).
+//! The required trait method is now [`Transport::exchange_all_into`],
+//! which fills a caller-owned [`RecvBufs`]; `exchange_all` survives as a
+//! provided default method that allocates a throwaway `RecvBufs` and
+//! unwraps it, so existing callers and tests keep working unchanged. New
+//! code (and the whole GMW hot path) should hold one `RecvBufs` per
+//! session and pass it to every round.
+//!
+//! ## `RecvBufs` ownership rules
+//!
+//! * One `RecvBufs` per protocol session, owned by the caller (the GMW
+//!   engine keeps one inside `GmwParty`), never shared across parties or
+//!   threads.
+//! * A call to `exchange_all_into` **fully overwrites** every peer slot:
+//!   slot `q` holds exactly peer `q`'s payload for that round. The slot
+//!   for `self.party()` has **unspecified contents** — the engine's folds
+//!   seed from the caller's own shares and skip it (only the legacy
+//!   `exchange_all` shim pays the echo copy). Contents are only valid
+//!   until the next exchange.
+//! * Slots keep their heap capacity across rounds; once a session has seen
+//!   its largest payload, later rounds perform **zero receive-side
+//!   allocations**. Transports must fill slots with
+//!   [`RecvBufs::fill_slot`]-style resize-then-overwrite (never
+//!   `clear` + `resize`, which would memset) and must not shrink
+//!   capacity.
 
 pub mod accounting;
 pub mod local;
 pub mod profile;
 pub mod tcp;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use accounting::{CommTrace, Phase};
 use std::sync::Arc;
+
+/// Caller-owned, per-peer receive buffers for [`Transport::exchange_all_into`].
+///
+/// Slot `q` holds party `q`'s payload for the most recent round (the slot
+/// for the caller's own id has unspecified contents — see the module
+/// docs). Buffers are reused across rounds: lengths are reset to each
+/// round's payload size but heap capacity is retained, so a warmed
+/// `RecvBufs` makes the receive path allocation-free. See the module docs
+/// for the full ownership rules.
+#[derive(Debug)]
+pub struct RecvBufs {
+    bufs: Vec<Vec<u8>>,
+}
+
+impl RecvBufs {
+    /// Empty buffer set for a session of `parties` parties.
+    pub fn new(parties: usize) -> RecvBufs {
+        RecvBufs { bufs: (0..parties).map(|_| Vec::new()).collect() }
+    }
+
+    /// Number of party slots.
+    pub fn parties(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Payload received from party `q` in the most recent round.
+    pub fn get(&self, q: usize) -> &[u8] {
+        &self.bufs[q]
+    }
+
+    /// Mutable slot access for transport implementations. Transports must
+    /// fully overwrite each slot (see module docs); protocol code should
+    /// only read via [`RecvBufs::get`].
+    pub fn slots_mut(&mut self) -> &mut [Vec<u8>] {
+        &mut self.bufs
+    }
+
+    /// Copy `src` into `slot` without a memset: resize only when the
+    /// length changes (growth within capacity allocates nothing), then
+    /// overwrite every byte.
+    pub fn fill_slot(slot: &mut Vec<u8>, src: &[u8]) {
+        if slot.len() != src.len() {
+            slot.clear();
+            slot.reserve(src.len());
+            // SAFETY-free path: extend from the source directly; capacity
+            // is retained so the warm case never reallocates.
+            slot.extend_from_slice(src);
+        } else {
+            slot.copy_from_slice(src);
+        }
+    }
+
+    /// Consume into the legacy per-round `Vec<Vec<u8>>` shape (used by the
+    /// `exchange_all` compatibility shim).
+    pub fn into_vec(self) -> Vec<Vec<u8>> {
+        self.bufs
+    }
+}
 
 /// Abstract all-to-all exchange primitive for one party.
 ///
 /// GMW only ever needs "every party sends a buffer to every other party and
-/// receives theirs" (openings of masked values). One `exchange_all` call is
-/// one communication **round**.
+/// receives theirs" (openings of masked values). One exchange call is one
+/// communication **round**.
 pub trait Transport: Send {
     /// This party's id in 0..parties.
     fn party(&self) -> usize;
     /// Total number of parties.
     fn parties(&self) -> usize;
 
-    /// Send `data` to every other party; receive each other party's buffer.
-    /// Returns a vec indexed by party id (entry for `self.party()` is the
-    /// input `data` echoed back, so openings can simply fold over all).
-    fn exchange_all(&mut self, phase: Phase, data: &[u8]) -> Result<Vec<Vec<u8>>>;
+    /// Send `data` to every other party; fill `recv` with each *other*
+    /// party's payload. The caller's own slot is left with **unspecified
+    /// contents** (the engine's fold loops seed from their own shares and
+    /// skip it, so the hot path never pays an echo copy). The hot-path
+    /// form: with a warmed `recv` the receive side allocates nothing.
+    fn exchange_all_into(&mut self, phase: Phase, data: &[u8], recv: &mut RecvBufs)
+        -> Result<()>;
+
+    /// Legacy allocating form: returns a vec indexed by party id (entry
+    /// for `self.party()` is the input `data` echoed back, so openings
+    /// can simply fold over all). Default shim over
+    /// [`Transport::exchange_all_into`]; kept for tests and non-hot-path
+    /// callers.
+    fn exchange_all(&mut self, phase: Phase, data: &[u8]) -> Result<Vec<Vec<u8>>> {
+        let mut recv = RecvBufs::new(self.parties());
+        self.exchange_all_into(phase, data, &mut recv)?;
+        let me = self.party();
+        RecvBufs::fill_slot(&mut recv.slots_mut()[me], data);
+        Ok(recv.into_vec())
+    }
 
     /// The accounting trace for this party.
     fn trace(&self) -> Arc<CommTrace>;
 }
 
-/// Helper: XOR-open a vector of packed binary share words.
-/// (Shared by engine code and tests.)
+/// Helper: XOR-open a vector of packed binary share words. An empty slice
+/// (degenerate 0-party open) folds to an empty vector rather than
+/// panicking. (Shared by engine code and tests.)
 pub fn fold_xor(bufs: &[Vec<u64>]) -> Vec<u64> {
-    let n = bufs[0].len();
+    let Some(first) = bufs.first() else { return Vec::new() };
+    let n = first.len();
     let mut out = vec![0u64; n];
     for b in bufs {
         debug_assert_eq!(b.len(), n);
@@ -51,9 +157,11 @@ pub fn fold_xor(bufs: &[Vec<u64>]) -> Vec<u64> {
     out
 }
 
-/// Helper: additively open a vector of ring-element shares.
+/// Helper: additively open a vector of ring-element shares. Empty input
+/// folds to an empty vector (1-party/degenerate-open case).
 pub fn fold_add(bufs: &[Vec<u64>]) -> Vec<u64> {
-    let n = bufs[0].len();
+    let Some(first) = bufs.first() else { return Vec::new() };
+    let n = first.len();
     let mut out = vec![0u64; n];
     for b in bufs {
         debug_assert_eq!(b.len(), n);
@@ -88,23 +196,41 @@ pub fn u64s_to_bytes(v: &[u64]) -> Vec<u8> {
 
 /// Wrapping-add each little-endian u64 in `b` into `out` in place (the
 /// receive-side fold of an arithmetic opening; no intermediate vector).
-pub fn add_u64s_from_bytes(b: &[u8], out: &mut [u64]) {
-    for (o, c) in out.iter_mut().zip(b.chunks(8)) {
-        let mut buf = [0u8; 8];
-        buf[..c.len()].copy_from_slice(c);
-        *o = o.wrapping_add(u64::from_le_bytes(buf));
+///
+/// Hard wire check (all builds — peer data is untrusted): `b` must hold
+/// exactly `out.len()` 8-byte words. A short, long or ragged payload is
+/// truncation/corruption on the wire and must never be zero-padded into
+/// plausible share data.
+pub fn add_u64s_from_bytes(b: &[u8], out: &mut [u64]) -> Result<()> {
+    if b.len() != out.len() * 8 {
+        return Err(Error::wire(format!(
+            "arithmetic opening expects {} bytes, got {}",
+            out.len() * 8,
+            b.len()
+        )));
     }
+    for (o, c) in out.iter_mut().zip(b.chunks_exact(8)) {
+        *o = o.wrapping_add(u64::from_le_bytes(c.try_into().unwrap()));
+    }
+    Ok(())
 }
 
 /// Deserialize little-endian u64s.
-pub fn bytes_to_u64s(b: &[u8]) -> Vec<u64> {
-    b.chunks(8)
-        .map(|c| {
-            let mut buf = [0u8; 8];
-            buf[..c.len()].copy_from_slice(c);
-            u64::from_le_bytes(buf)
-        })
-        .collect()
+///
+/// Hard wire check (all builds): the payload must be a whole number of
+/// 8-byte words. A trailing partial chunk is truncated/corrupt wire data;
+/// zero-padding it (the old behavior) would silently launder it into
+/// valid-looking shares.
+pub fn bytes_to_u64s(b: &[u8]) -> Result<Vec<u64>> {
+    if b.len() % 8 != 0 {
+        return Err(Error::wire(format!(
+            "u64 payload must be a multiple of 8 bytes, got {}",
+            b.len()
+        )));
+    }
+    Ok(b.chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
 }
 
 #[cfg(test)]
@@ -114,7 +240,7 @@ mod tests {
     #[test]
     fn u64_bytes_roundtrip() {
         let v = vec![0u64, 1, u64::MAX, 0x0102_0304_0506_0708];
-        assert_eq!(bytes_to_u64s(&u64s_to_bytes(&v)), v);
+        assert_eq!(bytes_to_u64s(&u64s_to_bytes(&v)).unwrap(), v);
     }
 
     #[test]
@@ -122,7 +248,7 @@ mod tests {
         let v = vec![1u64, u64::MAX, 7];
         let b = u64s_to_bytes(&v);
         let mut out = vec![1u64, 1, 1];
-        add_u64s_from_bytes(&b, &mut out);
+        add_u64s_from_bytes(&b, &mut out).unwrap();
         assert_eq!(out, vec![2, 0, 8]);
         let mut reused = Vec::new();
         u64s_to_bytes_into(&v, &mut reused);
@@ -134,5 +260,71 @@ mod tests {
         let a = vec![vec![1u64, 2], vec![3u64, 4]];
         assert_eq!(fold_xor(&a), vec![2, 6]);
         assert_eq!(fold_add(&a), vec![4, 6]);
+    }
+
+    /// Degenerate opens (no parties contributed) fold to empty instead of
+    /// panicking on `bufs[0]`.
+    #[test]
+    fn folds_empty_input_is_empty() {
+        let empty: Vec<Vec<u64>> = Vec::new();
+        assert_eq!(fold_xor(&empty), Vec::<u64>::new());
+        assert_eq!(fold_add(&empty), Vec::<u64>::new());
+        // Single-party "open": identity fold.
+        let one = vec![vec![9u64, 4]];
+        assert_eq!(fold_xor(&one), vec![9, 4]);
+        assert_eq!(fold_add(&one), vec![9, 4]);
+    }
+
+    /// Regression: a trailing partial 8-byte chunk used to be zero-padded
+    /// into a "valid" word, masking wire truncation. It is now a hard
+    /// wire-format error in every build.
+    #[test]
+    fn ragged_u64_payload_is_rejected() {
+        let good = u64s_to_bytes(&[1, 2, 3]);
+        assert_eq!(bytes_to_u64s(&good).unwrap().len(), 3);
+        let ragged = &good[..good.len() - 3];
+        assert!(matches!(bytes_to_u64s(ragged), Err(crate::error::Error::Wire(_))));
+        assert!(matches!(bytes_to_u64s(&[0u8; 7]), Err(crate::error::Error::Wire(_))));
+    }
+
+    /// Regression: the receive-side arithmetic fold must reject payloads
+    /// whose length disagrees with the lane count instead of folding a
+    /// zero-padded prefix.
+    #[test]
+    fn mismatched_arith_payload_is_rejected() {
+        let b = u64s_to_bytes(&[5, 6]);
+        let mut out = vec![0u64; 2];
+        add_u64s_from_bytes(&b, &mut out).unwrap();
+        assert_eq!(out, vec![5, 6]);
+        // One lane short of the payload, and one lane long.
+        let mut short = vec![0u64; 3];
+        assert!(matches!(
+            add_u64s_from_bytes(&b, &mut short),
+            Err(crate::error::Error::Wire(_))
+        ));
+        let mut long = vec![0u64; 1];
+        assert!(matches!(
+            add_u64s_from_bytes(&b, &mut long),
+            Err(crate::error::Error::Wire(_))
+        ));
+        // Untouched on error: no partial fold.
+        assert_eq!(short, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn fill_slot_reuses_capacity() {
+        let mut slot = Vec::new();
+        RecvBufs::fill_slot(&mut slot, &[1, 2, 3, 4]);
+        assert_eq!(slot, vec![1, 2, 3, 4]);
+        let cap = slot.capacity();
+        let ptr = slot.as_ptr();
+        // Same length: plain overwrite, same allocation.
+        RecvBufs::fill_slot(&mut slot, &[9, 9, 9, 9]);
+        assert_eq!(slot, vec![9, 9, 9, 9]);
+        assert_eq!(slot.as_ptr(), ptr);
+        // Shorter length: shrink without releasing capacity.
+        RecvBufs::fill_slot(&mut slot, &[7]);
+        assert_eq!(slot, vec![7]);
+        assert!(slot.capacity() >= cap);
     }
 }

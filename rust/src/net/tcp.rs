@@ -3,13 +3,19 @@
 //! Framing: each message is `[seq: u64 le][len: u64 le][payload]`. The
 //! mesh is fully connected; party i listens for connections from parties
 //! j > i and dials parties j < i, so an n-party mesh needs no coordinator.
+//!
+//! The receive path reads frames directly into the caller's [`RecvBufs`]
+//! slots (`read_frame_into`): once a session has seen its largest frame,
+//! steady-state rounds perform zero receive-side allocations. The send
+//! path writes the caller's payload straight to the socket and never
+//! allocates.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
 use super::accounting::{CommTrace, Phase};
-use super::Transport;
+use super::{RecvBufs, Transport};
 use crate::error::{Error, Result};
 
 /// TCP endpoint for one party.
@@ -83,7 +89,11 @@ fn write_frame(s: &mut TcpStream, seq: u64, payload: &[u8]) -> Result<()> {
     Ok(())
 }
 
-fn read_frame(s: &mut TcpStream, want_seq: u64) -> Result<Vec<u8>> {
+/// Read one frame into `out` without a memset (the `RecvBufs` fill
+/// contract): overwrite the already-initialized prefix in place, then
+/// append any remainder — `Take::read_to_end` fills spare capacity
+/// directly, so growth within capacity neither allocates nor pre-zeroes.
+fn read_frame_into(s: &mut TcpStream, want_seq: u64, out: &mut Vec<u8>) -> Result<()> {
     let mut hdr = [0u8; 16];
     s.read_exact(&mut hdr)?;
     let seq = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
@@ -94,9 +104,21 @@ fn read_frame(s: &mut TcpStream, want_seq: u64) -> Result<Vec<u8>> {
     if len > (1 << 32) {
         return Err(Error::Transport(format!("frame too large: {len}")));
     }
-    let mut payload = vec![0u8; len];
-    s.read_exact(&mut payload)?;
-    Ok(payload)
+    if out.len() > len {
+        out.truncate(len);
+    }
+    let prefix = out.len();
+    s.read_exact(&mut out[..prefix])?;
+    if len > prefix {
+        let appended = s.by_ref().take((len - prefix) as u64).read_to_end(out)?;
+        if appended != len - prefix {
+            return Err(Error::Transport(format!(
+                "short frame: got {} of {len} bytes",
+                prefix + appended
+            )));
+        }
+    }
+    Ok(())
 }
 
 impl Transport for TcpTransport {
@@ -107,7 +129,19 @@ impl Transport for TcpTransport {
         self.parties
     }
 
-    fn exchange_all(&mut self, phase: Phase, data: &[u8]) -> Result<Vec<Vec<u8>>> {
+    fn exchange_all_into(
+        &mut self,
+        phase: Phase,
+        data: &[u8],
+        recv: &mut RecvBufs,
+    ) -> Result<()> {
+        if recv.parties() != self.parties {
+            return Err(Error::Transport(format!(
+                "RecvBufs sized for {} parties, mesh has {}",
+                recv.parties(),
+                self.parties
+            )));
+        }
         let t0 = std::time::Instant::now();
         let seq = self.seq;
         self.seq += 1;
@@ -121,17 +155,16 @@ impl Transport for TcpTransport {
             }
             write_frame(self.streams[q].as_mut().unwrap(), seq, data)?;
         }
-        let mut out: Vec<Vec<u8>> = vec![Vec::new(); self.parties];
+        let slots = recv.slots_mut();
         for q in 0..self.parties {
             if q == self.party {
-                out[q] = data.to_vec();
-            } else {
-                out[q] = read_frame(self.streams[q].as_mut().unwrap(), seq)?;
+                continue;
             }
+            read_frame_into(self.streams[q].as_mut().unwrap(), seq, &mut slots[q])?;
         }
         self.trace.record(phase, (data.len() * (self.parties - 1)) as u64);
         self.trace.record_wait(t0.elapsed());
-        Ok(out)
+        Ok(())
     }
 
     fn trace(&self) -> Arc<CommTrace> {
@@ -163,5 +196,36 @@ mod tests {
         }
         assert_eq!(h.join().unwrap(), 10);
         assert_eq!(t.trace().total_rounds(), 5);
+    }
+
+    /// The into-variant over loopback: slots are filled per round and the
+    /// slot allocations stay put once warm (pointer-stable across rounds).
+    #[test]
+    fn loopback_exchange_into_reuses_slots() {
+        let addrs = vec!["127.0.0.1:39413".to_string(), "127.0.0.1:39414".to_string()];
+        let a0 = addrs.clone();
+        let h = std::thread::spawn(move || {
+            let mut t = TcpTransport::connect(0, &a0).unwrap();
+            let mut recv = RecvBufs::new(2);
+            for r in 0..6u8 {
+                let payload = vec![r, 0, 0, 0];
+                t.exchange_all_into(Phase::Circuit, &payload, &mut recv).unwrap();
+                assert_eq!(recv.get(1), [r, 1, 1, 1]);
+            }
+        });
+        let mut t = TcpTransport::connect(1, &addrs).unwrap();
+        let mut recv = RecvBufs::new(2);
+        let mut warm_ptr = None;
+        for r in 0..6u8 {
+            let payload = vec![r, 1, 1, 1];
+            t.exchange_all_into(Phase::Circuit, &payload, &mut recv).unwrap();
+            assert_eq!(recv.get(0), [r, 0, 0, 0]);
+            let ptr = recv.get(0).as_ptr();
+            match warm_ptr {
+                None => warm_ptr = Some(ptr),
+                Some(p) => assert_eq!(p, ptr, "warm slot must not reallocate (round {r})"),
+            }
+        }
+        h.join().unwrap();
     }
 }

@@ -22,24 +22,31 @@ pub use xla_kernels::XlaKernels;
 /// Shared PJRT CPU client + executable cache. Cloneable handle; compiled
 /// executables are cached per artifact path (compilation is the expensive
 /// part, ~ms–100ms each).
+///
+/// The client is created **lazily** on the first artifact load: a runtime
+/// handle can be constructed (and an executor with no linear-layer
+/// artifacts can run) even where PJRT is unavailable, e.g. under the
+/// offline `vendor/xla` stub.
 #[derive(Clone)]
 pub struct Runtime {
     inner: Arc<RuntimeInner>,
 }
 
 struct RuntimeInner {
-    client: xla::PjRtClient,
+    /// Lazily-created PJRT client; `Err` caches the creation failure so a
+    /// stubbed build fails at the same call sites every time.
+    client: std::sync::OnceLock<std::result::Result<xla::PjRtClient, String>>,
     root: PathBuf,
     cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl Runtime {
-    /// Create a runtime rooted at the artifacts directory.
+    /// Create a runtime rooted at the artifacts directory. Never touches
+    /// PJRT; the client comes up on the first [`Runtime::load`].
     pub fn new(artifacts_root: impl AsRef<Path>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu()?;
         Ok(Runtime {
             inner: Arc::new(RuntimeInner {
-                client,
+                client: std::sync::OnceLock::new(),
                 root: artifacts_root.as_ref().to_path_buf(),
                 cache: Mutex::new(HashMap::new()),
             }),
@@ -48,6 +55,21 @@ impl Runtime {
 
     pub fn artifacts_root(&self) -> &Path {
         &self.inner.root
+    }
+
+    fn client(&self) -> Result<&xla::PjRtClient> {
+        self.inner
+            .client
+            .get_or_init(|| xla::PjRtClient::cpu().map_err(|e| e.to_string()))
+            .as_ref()
+            .map_err(|e| Error::runtime(format!("pjrt client: {e}")))
+    }
+
+    /// Force client creation now. Servers that will execute artifacts call
+    /// this at boot so a missing/broken PJRT install fails fast at startup
+    /// instead of panicking a worker thread at first traffic.
+    pub fn ensure_client(&self) -> Result<()> {
+        self.client().map(|_| ())
     }
 
     /// Load + compile an HLO text artifact (cached).
@@ -60,7 +82,7 @@ impl Runtime {
             Error::runtime(format!("loading {}: {e}", full.display()))
         })?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Arc::new(self.inner.client.compile(&comp)?);
+        let exe = Arc::new(self.client()?.compile(&comp)?);
         self.inner
             .cache
             .lock()

@@ -92,6 +92,18 @@ impl TensorU64 {
         Ok(TensorU64 { shape: self.shape.clone(), data })
     }
 
+    /// Element-wise wrapping add into `self` (ring addition, no new
+    /// buffer — the serving hot path's residual-add form).
+    pub fn wrapping_add_assign(&mut self, other: &TensorU64) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::shape(format!("add {:?} vs {:?}", self.shape, other.shape)));
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a = a.wrapping_add(*b);
+        }
+        Ok(())
+    }
+
     /// Element-wise XOR (binary-share addition).
     pub fn xor(&self, other: &TensorU64) -> Result<TensorU64> {
         if self.shape != other.shape {
@@ -143,6 +155,13 @@ mod tests {
         assert_eq!(a.wrapping_add(&b).unwrap().data, vec![0, 3]);
         assert_eq!(a.xor(&b).unwrap().data, vec![u64::MAX - 1, 3]);
         assert!(a.wrapping_add(&TensorU64::zeros(vec![3])).is_err());
+        // In-place form matches the allocating form and keeps the buffer.
+        let mut c = a.clone();
+        let ptr = c.data.as_ptr();
+        c.wrapping_add_assign(&b).unwrap();
+        assert_eq!(c.data, vec![0, 3]);
+        assert_eq!(c.data.as_ptr(), ptr);
+        assert!(c.wrapping_add_assign(&TensorU64::zeros(vec![3])).is_err());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Scratch arena: a size-classed buffer pool for the GMW online hot path.
+//! Scratch arena: a size-classed buffer pool for the serving hot path.
 //!
 //! Every per-round temporary the protocol engine needs — masked openings,
 //! triple shares, opened values, Kogge–Stone stage operands, wire byte
@@ -11,10 +11,15 @@
 //! each checkout finds a free buffer in its class — **zero heap
 //! allocations** per steady-state round.
 //!
+//! The same pool type backs all three allocation-free layers of the stack:
+//! the GMW engine's round temporaries (`gmw::GmwParty`), the local
+//! transport's circulating send payloads (`net::local::LocalTransport`)
+//! and the share executor's activation buffers (`model::ShareExecutor`).
+//!
 //! # Ownership rules
 //!
-//! * The arena lives inside [`GmwParty`](super::GmwParty); one arena per
-//!   party, same thread as the protocol (no locking).
+//! * One arena per owner (party engine / transport endpoint / executor),
+//!   same thread as its owner (no locking).
 //! * `take_*` transfers ownership of a plain `Vec` to the caller, so
 //!   checked-out buffers borrow-check like any local and can be passed to
 //!   kernels, the transport and `&mut self` protocol methods freely.

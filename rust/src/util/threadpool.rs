@@ -1,61 +1,254 @@
-//! Scoped data-parallel helpers (rayon is not available offline).
+//! Data-parallel helpers on a **persistent worker pool** (rayon is not
+//! available offline).
 //!
-//! Built on `std::thread::scope`. The pool size defaults to the number of
-//! available CPUs; on single-core testbeds the helpers degrade gracefully to
-//! sequential execution with zero spawn overhead.
+//! PR 1 built these on `std::thread::scope`, which pays `threads - 1` OS
+//! thread spawns per parallel region — a fixed multi-microsecond tax on
+//! every GMW round. The pool here is spawned once (lazily, on the first
+//! parallel region) and parked between regions: a region enqueues its
+//! chunks on a shared `std::sync::mpsc` channel, workers drain them, and a
+//! condvar latch releases the caller when the last chunk lands. No
+//! crossbeam, no allocation per region beyond the channel nodes.
 //!
 //! These helpers back the GMW hot path: [`par_chunks_mut`] drives the
 //! buffer-writing kernels and the fused bitpack/unpack (`gmw::kernels`,
-//! `bitpack`), while [`par_chunks`] remains the generic index-range splitter.
-//! All of them produce results identical to the single-threaded loop for any
-//! thread count — the protocol depends on that for bit-exactness.
+//! `bitpack`), while [`par_chunks`] remains the generic index-range
+//! splitter. All of them produce results identical to the single-threaded
+//! loop for any thread count — the protocol depends on that for
+//! bit-exactness. The chunk decomposition is a pure function of
+//! `(n, threads)` and each index is written by exactly one chunk, so the
+//! number of *actual* pool workers (or which worker runs which chunk)
+//! can never change results.
+//!
+//! # Safety model
+//!
+//! A region hands workers a borrowed closure through a lifetime-erased
+//! trait-object reference (the rayon trick). This is sound because the
+//! caller **blocks on the region's latch** before returning: the closure
+//! and the region header outlive every access from worker threads. A
+//! panic inside a chunk is caught on the worker (so the latch still
+//! releases and the worker survives for future regions) and re-thrown on
+//! the caller's thread.
+//!
+//! Workers never run nested regions: a `par_*` call from a pool worker
+//! degrades to the inline sequential loop (same results), so a region can
+//! never deadlock waiting on workers occupied by its own chunks.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use for data-parallel loops.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+// ---------------------------------------------------------------------------
+// Pool internals.
+// ---------------------------------------------------------------------------
+
+/// One unit of work: run chunk `t` of the region behind `region`.
+struct Chunk {
+    /// Pointer to a `Region` on the issuing caller's stack. Valid for the
+    /// whole execution of the chunk: the caller blocks on the region latch
+    /// until every chunk has finished.
+    region: *const Region,
+    t: usize,
+}
+
+// SAFETY: the raw pointer targets a `Region` that the issuing thread keeps
+// alive (blocked on the latch) until all chunks complete; `Region`'s
+// interior is `Sync` (atomics, mutex/condvar, and a `Sync` closure ref).
+unsafe impl Send for Chunk {}
+
+/// Per-region header: the erased closure plus a completion latch.
+struct Region {
+    /// Lifetime-erased reference to the caller's chunk closure. Only
+    /// dereferenced while the caller is parked on `wait()`.
+    func: &'static (dyn Fn(usize) + Sync),
+    remaining: AtomicUsize,
+    /// First delegated chunk's panic payload, re-thrown on the caller so
+    /// the original assertion message survives.
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Region {
+    fn finish_one(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut done = self.done.lock().unwrap();
+            *done = true;
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut done = self.done.lock().unwrap();
+        while !*done {
+            done = self.cv.wait(done).unwrap();
+        }
+    }
+}
+
+struct Pool {
+    tx: Mutex<mpsc::Sender<Chunk>>,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+/// Monotonic count of worker threads ever spawned (pinned by the reuse
+/// test: it must not grow once the pool exists).
+static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+/// Monotonic count of delegated regions executed on the pool.
+static REGIONS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// True on pool worker threads; guards against nested regions.
+    static IN_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+fn in_worker() -> bool {
+    IN_WORKER.with(|w| w.get())
+}
+
+fn worker_main(rx: Arc<Mutex<mpsc::Receiver<Chunk>>>) {
+    IN_WORKER.with(|w| w.set(true));
+    loop {
+        // Hold the receiver lock only while pulling one chunk; blocking in
+        // recv() under the lock is the standard shared-mpsc worker pattern
+        // (dispatch serializes, execution does not).
+        let chunk = {
+            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
+            match guard.recv() {
+                Ok(c) => c,
+                Err(_) => return, // pool dropped (process exit)
+            }
+        };
+        // SAFETY: the issuing caller blocks on the latch until finish_one
+        // below, so the region (and the closure it references) is alive.
+        let region = unsafe { &*chunk.region };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            (region.func)(chunk.t)
+        }));
+        if let Err(payload) = result {
+            let mut slot = region.panic_payload.lock().unwrap_or_else(|p| p.into_inner());
+            slot.get_or_insert(payload);
+        }
+        region.finish_one();
+    }
+}
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let (tx, rx) = mpsc::channel::<Chunk>();
+        let rx = Arc::new(Mutex::new(rx));
+        // One worker per core: regions also run their first chunk on the
+        // calling thread, so this slightly oversubscribes under concurrent
+        // callers — harmless (parked workers cost nothing) and it keeps
+        // single-caller regions fully parallel.
+        let workers = default_threads();
+        for i in 0..workers {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("hb-pool-{i}"))
+                .spawn(move || worker_main(rx))
+                .expect("spawn pool worker");
+            SPAWNED.fetch_add(1, Ordering::Relaxed);
+        }
+        Pool { tx: Mutex::new(tx) }
+    })
+}
+
+/// Number of persistent pool workers ever spawned (0 until the first
+/// parallel region initializes the pool; constant afterwards).
+pub fn pool_workers_spawned() -> usize {
+    SPAWNED.load(Ordering::Relaxed)
+}
+
+/// Number of delegated parallel regions executed so far.
+pub fn pool_regions_run() -> usize {
+    REGIONS.load(Ordering::Relaxed)
+}
+
+/// Run `g(t)` for every `t` in `delegated` on pool workers while the
+/// caller runs `inline()` (chunk 0) on its own thread; returns after all
+/// chunks complete. Re-throws any chunk panic on the caller's thread.
+fn run_delegated(
+    delegated: std::ops::Range<usize>,
+    g: &(dyn Fn(usize) + Sync),
+    inline: impl FnOnce(),
+) {
+    debug_assert!(!delegated.is_empty());
+    // SAFETY: lifetime erasure only — the region (and thus every worker
+    // access to `g`) is confined to this call: we block on the latch
+    // before returning, so `g` strictly outlives all uses.
+    let func: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(g) };
+    let region = Region {
+        func,
+        remaining: AtomicUsize::new(delegated.len()),
+        panic_payload: Mutex::new(None),
+        done: Mutex::new(false),
+        cv: Condvar::new(),
+    };
+    let pool = pool();
+    {
+        let tx = pool.tx.lock().unwrap_or_else(|p| p.into_inner());
+        for t in delegated {
+            tx.send(Chunk { region: &region, t }).expect("worker pool alive");
+        }
+    }
+    REGIONS.fetch_add(1, Ordering::Relaxed);
+    // Run the caller's chunk, but never unwind past the latch: workers
+    // hold pointers into this stack frame until every chunk completes.
+    let inline_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(inline));
+    region.wait();
+    if let Err(payload) = inline_result {
+        std::panic::resume_unwind(payload);
+    }
+    let delegated_panic =
+        region.panic_payload.lock().unwrap_or_else(|p| p.into_inner()).take();
+    if let Some(payload) = delegated_panic {
+        std::panic::resume_unwind(payload);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public API (unchanged from the scoped-thread version).
+// ---------------------------------------------------------------------------
+
 /// Run `f(chunk_index, item_range)` over `n` items split into contiguous
-/// chunks across up to `threads` OS threads. `f` must be `Send + Sync`.
+/// chunks across up to `threads` workers. `f` must be `Send + Sync`.
 ///
-/// Returns after all chunks complete (scoped threads). With `threads <= 1`
-/// or tiny `n` this runs inline on the caller's thread.
+/// Returns after all chunks complete. With `threads <= 1` or tiny `n` this
+/// runs inline on the caller's thread; otherwise chunk 0 runs on the
+/// caller and chunks 1.. on the persistent pool (`threads` workers cost
+/// `threads - 1` chunk handoffs and zero thread spawns).
 pub fn par_chunks<F>(n: usize, threads: usize, f: F)
 where
     F: Fn(usize, std::ops::Range<usize>) + Send + Sync,
 {
     let threads = threads.max(1).min(n.max(1));
-    if threads == 1 || n < 2 {
+    if threads == 1 || n < 2 || in_worker() {
         f(0, 0..n);
         return;
     }
     let chunk = n.div_ceil(threads);
-    // Spawn chunks 1.. and run chunk 0 on the calling thread: `threads`
-    // workers cost `threads - 1` spawns and the caller's core does its
-    // share instead of blocking idle in the scope.
-    std::thread::scope(|s| {
-        for t in 1..threads {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || f(t, lo..hi));
-        }
-        f(0, 0..chunk.min(n));
-    });
+    let nchunks = n.div_ceil(chunk);
+    if nchunks <= 1 {
+        f(0, 0..n);
+        return;
+    }
+    let g = |t: usize| f(t, t * chunk..((t + 1) * chunk).min(n));
+    run_delegated(1..nchunks, &g, || g(0));
 }
 
 /// Split `data` into contiguous chunks and run `f(offset, chunk)` on up to
-/// `threads` OS threads. Safe (no aliasing): each chunk is a disjoint
-/// `&mut` sub-slice obtained via `split_at_mut`. `offset` is the index of
-/// the chunk's first element in `data`, so `f` can read companion input
-/// slices at the matching positions.
+/// `threads` workers. Safe (no aliasing): each chunk is a disjoint `&mut`
+/// sub-slice reconstructed from a base pointer at word-disjoint offsets.
+/// `offset` is the index of the chunk's first element in `data`, so `f`
+/// can read companion input slices at the matching positions.
 ///
 /// This is the write-side workhorse of the zero-allocation GMW hot path:
 /// kernels and the fused bitpack use it to fill caller-provided buffers in
-/// parallel without any per-call allocation beyond the scoped threads.
+/// parallel without any per-call allocation or thread spawn.
 pub fn par_chunks_mut<T, F>(data: &mut [T], threads: usize, f: F)
 where
     T: Send,
@@ -63,26 +256,27 @@ where
 {
     let n = data.len();
     let threads = threads.max(1).min(n.max(1));
-    if threads == 1 || n < 2 {
+    if threads == 1 || n < 2 || in_worker() {
         f(0, data);
         return;
     }
     let chunk = n.div_ceil(threads);
-    // First chunk runs on the calling thread (see par_chunks).
-    let (first, mut rest) = data.split_at_mut(chunk.min(n));
-    std::thread::scope(|s| {
-        let f = &f;
-        let mut offset = first.len();
-        while !rest.is_empty() {
-            let take = chunk.min(rest.len());
-            let (head, tail) = rest.split_at_mut(take);
-            rest = tail;
-            let off = offset;
-            offset += take;
-            s.spawn(move || f(off, head));
-        }
-        f(0, first);
-    });
+    let nchunks = n.div_ceil(chunk);
+    if nchunks <= 1 {
+        f(0, data);
+        return;
+    }
+    let base = SendPtr(data.as_mut_ptr());
+    let g = move |t: usize| {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(n);
+        // SAFETY: chunks are pairwise-disjoint index ranges of `data`,
+        // each handed to exactly one worker, and `data` outlives the
+        // region (the caller blocks until all chunks complete).
+        let slice = unsafe { std::slice::from_raw_parts_mut(base.get().add(lo), hi - lo) };
+        f(lo, slice);
+    };
+    run_delegated(1..nchunks, &g, || g(0));
 }
 
 /// Map `f` over `items` in parallel, preserving order.
@@ -106,13 +300,14 @@ where
     out
 }
 
-/// Wrapper to allow sharing a raw pointer across scoped threads when the
+/// Wrapper to allow sharing a raw pointer across pool threads when the
 /// access pattern is provably disjoint (each index written by exactly one
-/// chunk). Used by [`par_map`] and by `bitpack`'s parallel word packer,
-/// where output regions are word-disjoint but not representable as `&mut`
-/// sub-slices of equal element type. Deliberately `pub(crate)`: the
-/// unconditional `Send`/`Sync` impls launder the disjointness obligation,
-/// so the contract must stay auditable within this crate.
+/// chunk). Used by [`par_map`], [`par_chunks_mut`] and by `bitpack`'s
+/// parallel word packer, where output regions are word-disjoint but not
+/// representable as `&mut` sub-slices of equal element type. Deliberately
+/// `pub(crate)`: the unconditional `Send`/`Sync` impls launder the
+/// disjointness obligation, so the contract must stay auditable within
+/// this crate.
 pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 
 impl<T> SendPtr<T> {
@@ -224,5 +419,90 @@ mod tests {
             }
         });
         assert_eq!(out, vec![1, 2]);
+    }
+
+    /// The persistence claim, pinned: once the pool exists, running many
+    /// more parallel regions spawns **zero** new threads (workers are
+    /// parked and reused), and every region still produces the
+    /// single-threaded reference result.
+    #[test]
+    fn pool_workers_are_reused_across_regions() {
+        let n = 4096usize;
+        let input: Vec<u64> = (0..n as u64).map(|i| i.wrapping_mul(0xdead_beef)).collect();
+        let reference: Vec<u64> = input.iter().map(|v| v.rotate_left(9) ^ 0x55).collect();
+        let run_region = |threads: usize| {
+            let mut out = vec![0u64; n];
+            par_chunks_mut(&mut out, threads, |off, chunk| {
+                for (i, o) in chunk.iter_mut().enumerate() {
+                    *o = input[off + i].rotate_left(9) ^ 0x55;
+                }
+            });
+            out
+        };
+        // Force pool creation with one region.
+        assert_eq!(run_region(2), reference);
+        let spawned = pool_workers_spawned();
+        assert!(spawned >= 1, "pool must have spawned workers");
+        let regions_before = pool_regions_run();
+        // >= 3 further regions at mixed thread counts: identical results,
+        // no new threads.
+        for (round, threads) in [2usize, 3, default_threads().max(2), 2].iter().enumerate() {
+            assert_eq!(run_region(*threads), reference, "round {round}");
+            assert_eq!(
+                pool_workers_spawned(),
+                spawned,
+                "region {round} spawned new threads instead of reusing the pool"
+            );
+        }
+        assert!(
+            pool_regions_run() >= regions_before + 4,
+            "regions must have executed on the pool"
+        );
+    }
+
+    /// Nested parallelism from inside a worker degrades to the sequential
+    /// loop (same results) instead of deadlocking the pool.
+    #[test]
+    fn nested_region_runs_inline_without_deadlock() {
+        let n = 64usize;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        par_chunks(n, 4, |_, range| {
+            for i in range {
+                // A nested region per outer index: must complete inline.
+                par_chunks(8, 4, |_, inner| {
+                    for _ in inner {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 8));
+    }
+
+    /// A panic in a delegated chunk propagates to the caller **with its
+    /// original payload**, and the pool survives for later regions.
+    #[test]
+    fn chunk_panic_propagates_and_pool_survives() {
+        let result = std::panic::catch_unwind(|| {
+            par_chunks(1024, 4, |t, _range| {
+                if t == 2 {
+                    panic!("boom");
+                }
+            });
+        });
+        let payload = result.expect_err("chunk panic must propagate to the caller");
+        assert_eq!(
+            payload.downcast_ref::<&str>(),
+            Some(&"boom"),
+            "original panic payload must survive the pool hop"
+        );
+        // Pool still works.
+        let hits: Vec<AtomicUsize> = (0..256).map(|_| AtomicUsize::new(0)).collect();
+        par_chunks(256, 4, |_, range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 }

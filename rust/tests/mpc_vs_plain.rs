@@ -61,7 +61,7 @@ fn mpc_run(e: &Env, plans: &PlanSet, lo: usize, seed: u64) -> (Vec<f64>, u64, u6
         let manifest = Manifest::load(&root).unwrap();
         let art = manifest.model(MODEL).unwrap().clone();
         let sw = ShareWeights::prepare(&cfg, &weights).unwrap();
-        let exec = ShareExecutor::new(cfg.clone(), art, rt, sw);
+        let mut exec = ShareExecutor::new(cfg.clone(), art, rt, sw);
         let me = party.party();
         let x = hummingbird::tensor::TensorU64::new(shape.clone(), xs[me].clone()).unwrap();
         let (out, _bd) = exec.forward(party, x, plans).unwrap();
