@@ -6,17 +6,22 @@
 //!  4. bitpacking vs. *generic byte compression* of the share openings —
 //!     the paper's §3 argument that secret shares are incompressible
 //!     ("⟨x⟩ are random values fully occupying the N-bit space") while
-//!     HummingBird's *semantic* bit selection compresses 8×.
+//!     HummingBird's *semantic* bit selection compresses 8×,
+//!  5. the **binary-share layout** (`--layout`): lane-per-u64 vs bitsliced
+//!     (64 lanes per word through the DReLU circuit) across the paper's
+//!     window widths — the local-compute axis; bytes and rounds are
+//!     identical by construction (asserted here).
 //!
 //! Rows report bytes and rounds (the quantities the network model prices)
 //! plus local wall time on the in-process hub.
 
 use hummingbird::crypto::prg::Prg;
 use hummingbird::gmw::adder::{self, AdderOptions};
-use hummingbird::gmw::harness::run_parties;
+use hummingbird::gmw::harness::{run_parties, run_parties_with_threaded};
+use hummingbird::gmw::kernels::{BitslicedKernels, RustKernels};
 use hummingbird::gmw::ReluPlan;
 use hummingbird::sharing::{share_arith, share_binary};
-use hummingbird::util::benchkit::Bench;
+use hummingbird::util::benchkit::{bench_threads, Bench};
 use hummingbird::util::stats;
 
 fn main() {
@@ -108,6 +113,56 @@ fn main() {
         64.0 / plan.width() as f64
     );
     assert!(h > 7.9, "shares should be incompressible");
+
+    // Layout ablation (the bitsliced-engine axis): the same DReLU through
+    // both binary-share layouts, across the paper's window widths. Wire
+    // bytes and rounds are pinned equal; the row pair quantifies the
+    // local-compute win of 64-lanes-per-word at each width, single-
+    // threaded and at the host's thread budget.
+    println!("\n== layout ablation (DReLU, lane vs bitsliced, n={n}) ==");
+    let threads = bench_threads();
+    for (label, plan) in [
+        ("w6", ReluPlan::new(10, 4).unwrap()),
+        ("w8", ReluPlan::new(12, 4).unwrap()),
+        ("w18", ReluPlan::new(18, 0).unwrap()),
+        ("w64", ReluPlan::BASELINE),
+    ] {
+        let xa: Vec<u64> = (0..n).map(|_| prg.next_u64() % (1 << 16)).collect();
+        let sh = share_arith(&mut prg, &xa, 2);
+        for t in [1usize, threads] {
+            let lane = run_parties_with_threaded(2, 31, t, |_| RustKernels::default(), |p| {
+                let me = p.party();
+                p.drelu(&sh[me], plan).unwrap()
+            });
+            let sliced =
+                run_parties_with_threaded(2, 31, t, |_| BitslicedKernels::default(), |p| {
+                    let me = p.party();
+                    p.drelu(&sh[me], plan).unwrap()
+                });
+            assert_eq!(lane.outputs, sliced.outputs, "layouts diverged ({label})");
+            assert_eq!(lane.trace.total_bytes(), sliced.trace.total_bytes());
+            assert_eq!(lane.trace.total_rounds(), sliced.trace.total_rounds());
+            bench.bench_elems(&format!("drelu_layout/lane/{label}/{n}/t{t}"), n as u64, || {
+                run_parties_with_threaded(2, 31, t, |_| RustKernels::default(), |p| {
+                    let me = p.party();
+                    p.drelu(&sh[me], plan).unwrap()
+                });
+            });
+            bench.bench_elems(
+                &format!("drelu_layout/bitsliced/{label}/{n}/t{t}"),
+                n as u64,
+                || {
+                    run_parties_with_threaded(2, 31, t, |_| BitslicedKernels::default(), |p| {
+                        let me = p.party();
+                        p.drelu(&sh[me], plan).unwrap()
+                    });
+                },
+            );
+            if threads == 1 {
+                break; // single-core host: the t rows would be identical
+            }
+        }
+    }
 
     bench.dump_json("ablation");
 }

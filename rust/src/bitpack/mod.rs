@@ -23,16 +23,13 @@
 //! tests, benches and non-hot-path users) for every `w ∈ 1..=64`, every lane
 //! count and every thread count — the round-trip tests below sweep all of it.
 //! Threading: callers pass an explicit thread count (the engine's `--threads`
-//! knob); small inputs always run inline (see `PAR_MIN_LANES` /
-//! `PAR_MIN_WORDS`), so single-lane openings never pay spawn overhead.
+//! knob); small inputs always run inline (thresholds live in
+//! [`crate::util::tuning`], env-overridable), so single-lane openings never
+//! pay spawn overhead.
 
 use crate::ring::low_mask;
 use crate::util::threadpool::{par_chunks, par_chunks_mut, SendPtr};
-
-/// Below this many output words, `pack_bytes_into` stays single-threaded.
-const PAR_MIN_WORDS: usize = 2048;
-/// Below this many lanes, `unpack_bytes_xor_into` stays single-threaded.
-const PAR_MIN_LANES: usize = 8192;
+use crate::util::tuning;
 
 /// Number of u64 words needed to pack `n` lanes of `w` bits.
 #[inline]
@@ -78,7 +75,7 @@ pub fn packed_word(src: &[u64], w: u32, j: usize) -> u64 {
 /// Extract lane `i` (a `w`-bit value) from a packed word stream, where
 /// word `j` is provided by `word(j)` (zero for out-of-range `j`).
 #[inline]
-fn lane_from_words(word: impl Fn(usize) -> u64, w: u32, mask: u64, i: usize) -> u64 {
+pub(crate) fn lane_from_words(word: impl Fn(usize) -> u64, w: u32, mask: u64, i: usize) -> u64 {
     let bit = i as u64 * w as u64;
     let j = (bit / 64) as usize;
     let off = (bit % 64) as u32;
@@ -93,7 +90,7 @@ fn lane_from_words(word: impl Fn(usize) -> u64, w: u32, mask: u64, i: usize) -> 
 /// Read word `j` from a little-endian byte stream, zero-padding past the end
 /// (wire buffers are byte-granular, so the final word may be partial).
 #[inline]
-fn word_at(bytes: &[u8], j: usize) -> u64 {
+pub(crate) fn word_at(bytes: &[u8], j: usize) -> u64 {
     let lo = j * 8;
     if lo + 8 <= bytes.len() {
         let mut buf = [0u8; 8];
@@ -167,7 +164,7 @@ pub fn pack_bytes_into(src: &[u64], w: u32, dst: &mut Vec<u8>, threads: usize) {
         dst.resize(nbytes, 0);
     }
     let nwords = packed_len(src.len(), w);
-    let threads = if nwords >= PAR_MIN_WORDS { threads } else { 1 };
+    let threads = if nwords >= tuning::par_min_words() { threads } else { 1 };
     // Each word j owns the disjoint byte range [8j, min(8j+8, nbytes)).
     let out = SendPtr(dst.as_mut_ptr());
     let out_ref = &out;
@@ -199,7 +196,7 @@ pub fn unpack_bytes_xor_into(src: &[u8], w: u32, n: usize, out: &mut [u64], thre
         packed_bytes(n, w)
     );
     let mask = low_mask(w);
-    let threads = if n >= PAR_MIN_LANES { threads } else { 1 };
+    let threads = if n >= tuning::par_min_lanes() { threads } else { 1 };
     par_chunks_mut(&mut out[..n], threads, |off, chunk| {
         for (i, o) in chunk.iter_mut().enumerate() {
             *o ^= lane_from_words(|j| word_at(src, j), w, mask, off + i);

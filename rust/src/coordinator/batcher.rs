@@ -6,6 +6,7 @@ use std::time::{Duration, Instant};
 
 use crate::crypto::prg::Prg;
 use crate::error::{Error, Result};
+use crate::gmw::kernels::{BinLayout, BitslicedKernels, RustKernels};
 use crate::gmw::GmwParty;
 use crate::hummingbird::PlanSet;
 use crate::model::{Archive, ExecBreakdown, ModelConfig, PlainExecutor, ShareExecutor, ShareWeights};
@@ -34,6 +35,11 @@ pub struct ServeOptions {
     pub session_seed: u64,
     /// Kernel backend for the GMW engine: "rust" (default) or "xla".
     pub gmw_backend: String,
+    /// Binary-share layout for the "rust" backend: lane-per-u64 (default)
+    /// or bitsliced (64 lanes per word through the DReLU circuit). Results
+    /// and wire bytes are bit-identical either way; the XLA backend only
+    /// supports the lane layout. CLI flag `--layout`.
+    pub layout: BinLayout,
     /// Lane-parallelism budget per party for local GMW compute (kernels +
     /// fused bitpack). 0 = auto: divide the machine's cores across the
     /// simulated parties. Results are bit-identical for any value.
@@ -50,6 +56,7 @@ impl ServeOptions {
             batch_timeout: Duration::from_millis(20),
             session_seed: 0x5e55_10,
             gmw_backend: "rust".into(),
+            layout: BinLayout::default(),
             threads: 0,
         }
     }
@@ -106,6 +113,12 @@ impl Coordinator {
     /// Boot the service: loads config/weights, spawns party + batcher
     /// threads, returns once ready.
     pub fn start(opts: ServeOptions) -> Result<Coordinator> {
+        if opts.gmw_backend == "xla" && opts.layout == BinLayout::Bitsliced {
+            return Err(Error::config(
+                "--layout bitsliced requires the rust kernel backend (the XLA \
+                 kernels are lane-per-u64)",
+            ));
+        }
         let root = opts.repo_root.join("artifacts");
         let cfg = ModelConfig::load_named(&opts.repo_root, &opts.model)?;
         let weights = Archive::load(root.join("weights").join(&opts.model))?;
@@ -132,10 +145,12 @@ impl Coordinator {
             let out_tx = out_tx.clone();
             let seed = opts.session_seed;
             let backend = opts.gmw_backend.clone();
+            let layout = opts.layout;
             let threads = resolve_threads(opts.threads, opts.parties);
             parties.push(std::thread::spawn(move || {
                 party_main(
-                    t, cfg, weights, root, model_art, plans, jrx, out_tx, seed, backend, threads,
+                    t, cfg, weights, root, model_art, plans, jrx, out_tx, seed, backend, layout,
+                    threads,
                 );
             }));
         }
@@ -225,6 +240,7 @@ fn party_main(
     out: Sender<(usize, PartyOut)>,
     seed: u64,
     backend: String,
+    layout: BinLayout,
     threads: usize,
 ) {
     let me = transport.party();
@@ -237,16 +253,21 @@ fn party_main(
     }
     let sw = ShareWeights::prepare(&cfg, &weights).expect("weights");
     let mut exec = ShareExecutor::new(cfg, model_art, rt.clone(), sw);
-    // The GMW engine: pure-Rust kernels by default, or the Pallas/PJRT
-    // backend for the full three-layer path.
+    // The GMW engine: pure-Rust kernels (lane-per-u64 or bitsliced binary
+    // layout per `--layout`), or the Pallas/PJRT backend for the full
+    // three-layer path.
     if backend == "xla" {
         let manifest = Manifest::load(&artifacts_root).expect("manifest");
         let kernels = XlaKernels::new(rt, manifest);
         let mut party = GmwParty::with_kernels(transport, seed, kernels);
         party.set_threads(threads);
         party_loop(&mut exec, &mut party, &plans, jobs, out, me);
+    } else if layout == BinLayout::Bitsliced {
+        let mut party = GmwParty::with_kernels(transport, seed, BitslicedKernels::default());
+        party.set_threads(threads);
+        party_loop(&mut exec, &mut party, &plans, jobs, out, me);
     } else {
-        let mut party = GmwParty::new(transport, seed);
+        let mut party = GmwParty::with_kernels(transport, seed, RustKernels::default());
         party.set_threads(threads);
         party_loop(&mut exec, &mut party, &plans, jobs, out, me);
     }

@@ -2,9 +2,15 @@
 //! is performed using a series of AND and XOR operations, as it would be
 //! done by an adder circuit (e.g., carry-lookahead adder)").
 //!
-//! Lane layout: each element is an independent w-bit value stored in the
-//! low bits of a u64; the adder is vectorized across elements, and the AND
-//! gates of all elements in a stage are opened in **one** round.
+//! Lane layout: with the classic kernels each element is an independent
+//! w-bit value stored in the low bits of a u64; the adder is vectorized
+//! across elements, and the AND gates of all elements in a stage are
+//! opened in **one** round. With `--layout bitsliced` the same circuit
+//! runs over bit-plane buffers ([`ks_add_planes_with_into`], see
+//! [`super::bitsliced`]): every XOR/AND below processes 64 lanes per word,
+//! lane shifts become plane-index shifts, and the `& mask` disappears
+//! (planes at or above w don't exist). The round structure, byte counts
+//! and results are identical in both layouts.
 //!
 //! Cost model (the paper's O(N·logN) → O(w·log w) claim):
 //!   * 1 initial AND round  (G₀ = x∧y)            — tagged `Phase::OtherAnd`
@@ -17,7 +23,8 @@
 //! the call completes — [`ks_add_into`] allocates nothing once the arena is
 //! warm. See `gmw::arena` for the ownership rules.
 
-use super::kernels::KernelBackend;
+use super::bitsliced;
+use super::kernels::{BinLayout, KernelBackend};
 use super::GmwParty;
 use crate::error::Result;
 use crate::net::accounting::Phase;
@@ -137,6 +144,28 @@ pub fn ks_add_with_into<T: Transport, K: KernelBackend>(
         return Ok(());
     }
 
+    // Bitsliced engine: transpose the lane operands into bit-plane form,
+    // run the plane-native circuit, transpose the sum back. Callers on the
+    // DReLU hot path avoid the boundary transposes entirely by staying in
+    // plane form (`GmwParty::a2b_planes_into`).
+    if party.bin_layout() == BinLayout::Bitsliced {
+        let pl = bitsliced::plane_len(n, w);
+        let threads = party.threads();
+        let mut xp = party.scratch_words(pl);
+        let mut yp = party.scratch_words(pl);
+        bitsliced::lanes_to_planes(x, w, &mut xp, threads);
+        bitsliced::lanes_to_planes(y, w, &mut yp, threads);
+        let mut sum = party.scratch_words(pl);
+        let r = ks_add_planes_with_into(party, &xp, &yp, w, n, opts, &mut sum);
+        if r.is_ok() {
+            bitsliced::planes_to_lanes(&sum, w, n, out, threads);
+        }
+        party.recycle_words(sum);
+        party.recycle_words(yp);
+        party.recycle_words(xp);
+        return r;
+    }
+
     // P = x ⊕ y (local), G = x ∧ y (one AND round, "Others" in Fig 3).
     let mut p = party.scratch_words(n);
     for ((pi, a), b) in p.iter_mut().zip(x).zip(y) {
@@ -201,6 +230,103 @@ pub fn ks_add_with_into<T: Transport, K: KernelBackend>(
     // Sum = x ⊕ y ⊕ (carries ≪ 1); carries into bit i are G[i−1].
     for (((o, a), b), gi) in out.iter_mut().zip(x).zip(y).zip(&g) {
         *o = (a ^ b ^ (gi << 1)) & mask;
+    }
+    party.recycle_words(g);
+    party.recycle_words(p);
+    Ok(())
+}
+
+/// Plane-native Kogge–Stone addition: `xp`, `yp` and `out` are bit-plane
+/// buffers of `n` lanes at width `w` ([`bitsliced::plane_len`]`(n, w)`
+/// words each). Same round structure, triple consumption and wire bytes
+/// as the classic circuit — only the local-compute layout differs: every
+/// XOR below touches 64 lanes per word and the lane mask is implicit.
+pub(crate) fn ks_add_planes_with_into<T: Transport, K: KernelBackend>(
+    party: &mut GmwParty<T, K>,
+    xp: &[u64],
+    yp: &[u64],
+    w: u32,
+    n: usize,
+    opts: AdderOptions,
+    out: &mut [u64],
+) -> Result<()> {
+    let pl = bitsliced::plane_len(n, w);
+    debug_assert!(xp.len() == pl && yp.len() == pl && out.len() == pl);
+
+    // w == 1: addition mod 2 is XOR (the single plane word per block).
+    if w == 1 {
+        for ((o, a), b) in out.iter_mut().zip(xp).zip(yp) {
+            *o = a ^ b;
+        }
+        return Ok(());
+    }
+
+    // P = x ⊕ y (local, mask-free in plane form), G = x ∧ y (one AND round).
+    let mut p = party.scratch_words(pl);
+    for ((pi, a), b) in p.iter_mut().zip(xp).zip(yp) {
+        *pi = a ^ b;
+    }
+    let mut g = party.scratch_words(pl);
+    party.and_gates_planes_into(Phase::OtherAnd, xp, yp, w, n, 1, &mut g)?;
+
+    // Prefix stages.
+    let stages = ceil_log2(w);
+    let mut s = 1u32;
+    for idx in 0..stages {
+        let last = opts.skip_last_p && idx + 1 == stages;
+        if opts.batch_stage_ands || last {
+            let halves = if last { 1 } else { 2 };
+            let mut u = party.scratch_words(halves * pl);
+            let mut v = party.scratch_words(halves * pl);
+            party.kernels_stage_operands(&g, &p, s, w, last, &mut u, &mut v);
+            let mut z = party.scratch_words(halves * pl);
+            party.and_gates_planes_into(Phase::Circuit, &u, &v, w, n, halves, &mut z)?;
+            if last {
+                for (gi, zi) in g.iter_mut().zip(&z) {
+                    *gi ^= *zi;
+                }
+            } else {
+                let (zg, zp) = z.split_at(pl);
+                for (((gi, pi), zgi), zpi) in g.iter_mut().zip(p.iter_mut()).zip(zg).zip(zp) {
+                    *gi ^= *zgi;
+                    *pi = *zpi;
+                }
+            }
+            party.recycle_words(z);
+            party.recycle_words(v);
+            party.recycle_words(u);
+        } else {
+            // Naive layout: one opening round per AND.
+            let mut gv = party.scratch_words(pl);
+            let mut pv = party.scratch_words(pl);
+            let threads = party.threads();
+            bitsliced::plane_shl_into(&g, w, s, &mut gv, threads);
+            bitsliced::plane_shl_into(&p, w, s, &mut pv, threads);
+            let mut zg = party.scratch_words(pl);
+            party.and_gates_planes_into(Phase::Circuit, &p, &gv, w, n, 1, &mut zg)?;
+            let mut zp = party.scratch_words(pl);
+            party.and_gates_planes_into(Phase::Circuit, &p, &pv, w, n, 1, &mut zp)?;
+            for (((gi, pi), zgi), zpi) in g.iter_mut().zip(p.iter_mut()).zip(&zg).zip(&zp) {
+                *gi ^= *zgi;
+                *pi = *zpi;
+            }
+            party.recycle_words(zp);
+            party.recycle_words(zg);
+            party.recycle_words(pv);
+            party.recycle_words(gv);
+        }
+        s <<= 1;
+    }
+
+    // Sum = x ⊕ y ⊕ (carries ≪ 1): the lane shift-by-1 is a plane-index
+    // shift — plane b of the sum folds in carry plane b − 1.
+    let wu = w as usize;
+    for (k, ob) in out.chunks_exact_mut(wu).enumerate() {
+        let base = k * wu;
+        ob[0] = xp[base] ^ yp[base];
+        for b in 1..wu {
+            ob[b] = xp[base + b] ^ yp[base + b] ^ g[base + b - 1];
+        }
     }
     party.recycle_words(g);
     party.recycle_words(p);

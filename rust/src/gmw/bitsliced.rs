@@ -1,0 +1,540 @@
+//! Bitsliced (bit-plane) layout for binary shares — 64 lanes per word.
+//!
+//! The classic engine layout stores **one w-bit lane per u64**, so every
+//! word-wide AND/XOR in the Kogge–Stone adder wastes `64 − w` of the ALU's
+//! 64 bits — at the paper's windows (w ≈ 6–8) that is ~90% waste. The
+//! bitsliced layout transposes each **block of 64 lanes** into `w`
+//! *bit-plane* words: plane `b` of block `k` is a u64 whose bit `j` is bit
+//! `b` of lane `64k + j`. One word-wide boolean op then processes 64 lanes
+//! at once, and the resulting plain `u64` loops autovectorize to SSE2/AVX2
+//! without arch-specific intrinsics.
+//!
+//! # Representation
+//!
+//! A vector of `n` lanes of width `w` occupies [`plane_len`]`(n, w) =
+//! ceil(n/64)·w` words, **block-major**: block `k`'s planes are the
+//! contiguous words `[k·w, (k+1)·w)`, plane index = bit index. Two
+//! invariants every producer maintains and every consumer may assume:
+//!
+//! * **implicit masking** — only planes `0..w` exist, so "`& low_mask(w)`"
+//!   is free (there is nothing above bit `w−1` to mask off);
+//! * **zero tail lanes** — lanes `n..64·ceil(n/64)` of the final block are
+//!   zero in every plane. XOR/AND/plane-shifts preserve this, and the wire
+//!   pack relies on it for byte-exact tail bytes.
+//!
+//! Within the engine, round buffers are often **segmented**: the
+//! concatenation of `segs` independent `n`-lane vectors (e.g. the adder's
+//! stage operand `u = p ‖ p`). Because `n` need not be a multiple of 64, a
+//! segment's plane blocks do *not* coincide with the blocks of the
+//! concatenated lane vector — so the wire functions below take the
+//! segment's global starting lane (`lane0`) and place bits exactly where
+//! the classic packer would.
+//!
+//! # The transpose-fused wire boundary
+//!
+//! The wire format is **byte-for-byte identical** to the classic
+//! [`crate::bitpack`] stream (lane-major, w bits per lane, little-endian
+//! bit order): [`pack_planes_xor_into`] turns a bit-plane block into wire
+//! words with one Hacker's-Delight 64×64 bit-matrix transpose per block,
+//! written straight into the (arena-pooled, pre-zeroed) wire byte buffer,
+//! and [`unpack_bytes_xor_into_planes`] reverses it, XOR-folding a peer's
+//! bytes directly into plane form. No intermediate lane vector exists on
+//! either side — this subsumes the "SIMD in `bitpack::packed_word`"
+//! roadmap lever: the per-word lane gather is replaced by a transpose
+//! whose inner loops are fixed-trip-count word ops.
+//!
+//! Threading: all block loops split across the persistent worker pool
+//! above [`tuning::par_min_blocks`] blocks; per-block outputs are disjoint
+//! (block-major planes / word-aligned wire ranges), so results are
+//! bit-identical at any thread count.
+
+use crate::bitpack::{self, lane_from_words, packed_word, word_at};
+use crate::ring::low_mask;
+use crate::util::threadpool::{par_chunks, SendPtr};
+use crate::util::tuning;
+
+/// Lanes per bit-plane block (the machine word width).
+pub const LANES_PER_BLOCK: usize = 64;
+
+/// Number of 64-lane blocks needed for `n` lanes.
+#[inline]
+pub fn blocks(n: usize) -> usize {
+    n.div_ceil(LANES_PER_BLOCK)
+}
+
+/// Words in the bit-plane representation of `n` lanes of width `w`.
+#[inline]
+pub fn plane_len(n: usize, w: u32) -> usize {
+    blocks(n) * w as usize
+}
+
+/// In-place 64×64 bit-matrix transpose (Hacker's Delight §7-3, recursive
+/// block swap), LSB-first convention: after the call, bit `p` of `a[r]` is
+/// what bit `r` of `a[p]` was. The transform is an involution.
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut s = 32usize;
+    let mut m = 0x0000_0000_FFFF_FFFFu64;
+    while s != 0 {
+        let mut k = 0usize;
+        while k < 64 {
+            let t = ((a[k] >> s) ^ a[k + s]) & m;
+            a[k] ^= t << s;
+            a[k + s] ^= t;
+            k = (k + s + 1) & !s; // next index with (k & s) == 0
+        }
+        s >>= 1;
+        m ^= m << s;
+    }
+}
+
+/// Resolve the block-loop thread budget: below the tuning threshold the
+/// loop stays inline on the caller's thread.
+#[inline]
+fn eff_threads(nblocks: usize, threads: usize) -> usize {
+    if nblocks >= tuning::par_min_blocks() {
+        threads.max(1)
+    } else {
+        1
+    }
+}
+
+/// Transpose lane-per-u64 data into bit-plane form. Bits at or above `w`
+/// are discarded (masking to the lane width is free here) and tail lanes
+/// of the final block come out zero, establishing both representation
+/// invariants. `planes.len()` must be [`plane_len`]`(lanes.len(), w)`.
+pub fn lanes_to_planes(lanes: &[u64], w: u32, planes: &mut [u64], threads: usize) {
+    debug_assert!(w >= 1 && w <= 64);
+    let n = lanes.len();
+    let nblocks = blocks(n);
+    let wu = w as usize;
+    debug_assert_eq!(planes.len(), nblocks * wu);
+    let out = SendPtr(planes.as_mut_ptr());
+    let out_ref = &out;
+    par_chunks(nblocks, eff_threads(nblocks, threads), move |_, range| {
+        for k in range {
+            let mut buf = [0u64; 64];
+            let lo = k * LANES_PER_BLOCK;
+            let r = (n - lo).min(LANES_PER_BLOCK);
+            buf[..r].copy_from_slice(&lanes[lo..lo + r]);
+            transpose64(&mut buf);
+            // SAFETY: block k writes only its own plane words [k·w, k·w+w),
+            // disjoint per block, and the caller blocks until all chunks
+            // complete.
+            unsafe {
+                std::ptr::copy_nonoverlapping(buf.as_ptr(), out_ref.get().add(k * wu), wu);
+            }
+        }
+    });
+}
+
+/// Transpose bit-plane data back to lane-per-u64 form (`n` lanes, low `w`
+/// bits set, high bits zero). Inverse of [`lanes_to_planes`].
+pub fn planes_to_lanes(planes: &[u64], w: u32, n: usize, lanes: &mut [u64], threads: usize) {
+    debug_assert!(w >= 1 && w <= 64);
+    let nblocks = blocks(n);
+    let wu = w as usize;
+    debug_assert_eq!(planes.len(), nblocks * wu);
+    debug_assert_eq!(lanes.len(), n);
+    let out = SendPtr(lanes.as_mut_ptr());
+    let out_ref = &out;
+    par_chunks(nblocks, eff_threads(nblocks, threads), move |_, range| {
+        for k in range {
+            let mut buf = [0u64; 64];
+            buf[..wu].copy_from_slice(&planes[k * wu..(k + 1) * wu]);
+            transpose64(&mut buf);
+            let lo = k * LANES_PER_BLOCK;
+            let r = (n - lo).min(LANES_PER_BLOCK);
+            // SAFETY: block k writes only lanes [lo, lo + r), disjoint per
+            // block; the caller blocks until all chunks complete.
+            unsafe {
+                std::ptr::copy_nonoverlapping(buf.as_ptr(), out_ref.get().add(lo), r);
+            }
+        }
+    });
+}
+
+/// Fused transpose-pack: XOR the wire bytes of an `n`-lane plane-form
+/// segment into `dst`, with the segment's lanes occupying global lane
+/// indices `[lane0, lane0 + n)` of the (classic, lane-major) packed
+/// stream. The result is byte-for-byte what [`bitpack::pack_bytes_into`]
+/// would have produced for those lanes.
+///
+/// `dst` is the *whole* round's wire buffer and must be zeroed before the
+/// first segment is packed; segments of one round are bit-disjoint, so
+/// XOR-merging them is order-independent. When `lane0` is a multiple of 64
+/// the segment's blocks land on word boundaries of the stream and the pack
+/// parallelizes across blocks; other offsets (tail segments after a
+/// non-multiple-of-64 segment) take a scalar bit-shift path.
+pub fn pack_planes_xor_into(
+    planes: &[u64],
+    w: u32,
+    n: usize,
+    lane0: usize,
+    dst: &mut [u8],
+    threads: usize,
+) {
+    debug_assert!(w >= 1 && w <= 64);
+    let nblocks = blocks(n);
+    let wu = w as usize;
+    debug_assert_eq!(planes.len(), nblocks * wu);
+    debug_assert!(
+        dst.len() as u64 >= bitpack::packed_bytes(lane0 + n, w),
+        "wire buffer too short for segment at lane {lane0}"
+    );
+    if lane0 % LANES_PER_BLOCK == 0 {
+        // Aligned: block k of the segment owns stream words
+        // [word0 + k·w, word0 + (k+1)·w) — disjoint byte ranges.
+        let word0 = lane0 * wu / 64;
+        let nbytes = dst.len();
+        let out = SendPtr(dst.as_mut_ptr());
+        let out_ref = &out;
+        par_chunks(nblocks, eff_threads(nblocks, threads), move |_, range| {
+            for k in range {
+                let mut buf = [0u64; 64];
+                buf[..wu].copy_from_slice(&planes[k * wu..(k + 1) * wu]);
+                transpose64(&mut buf);
+                for t in 0..wu {
+                    let word = packed_word(&buf, w, t);
+                    if word == 0 {
+                        continue; // zero tail bits: XOR would be a no-op
+                    }
+                    let lo = (word0 + k * wu + t) * 8;
+                    // A nonzero word implies in-range bits (lo < nbytes) —
+                    // but that rests on the zero-tail-lanes invariant, so
+                    // fail safe rather than let a violated invariant turn
+                    // into an out-of-bounds write.
+                    let Some(rem) = nbytes.checked_sub(lo) else {
+                        debug_assert!(false, "packed word past the wire end (dirty tail lanes?)");
+                        continue;
+                    };
+                    let nb = rem.min(8);
+                    let bytes = word.to_le_bytes();
+                    // SAFETY: stream word (word0 + k·w + t) is unique per
+                    // (k, t) in this call, so its byte range [lo, lo + nb)
+                    // is written by exactly one chunk; lo + nb <= nbytes.
+                    unsafe {
+                        let p = out_ref.get().add(lo);
+                        for (q, b) in bytes.iter().take(nb).enumerate() {
+                            *p.add(q) ^= *b;
+                        }
+                    }
+                }
+            }
+        });
+    } else {
+        // Unaligned: stage each packed word through a u128 shift and XOR
+        // it in byte-wise. Adjacent blocks share boundary bytes, so this
+        // path stays single-threaded (XOR keeps it order-independent).
+        for k in 0..nblocks {
+            let mut buf = [0u64; 64];
+            buf[..wu].copy_from_slice(&planes[k * wu..(k + 1) * wu]);
+            transpose64(&mut buf);
+            for t in 0..wu {
+                let word = packed_word(&buf, w, t);
+                if word == 0 {
+                    continue;
+                }
+                let bit = (lane0 + k * LANES_PER_BLOCK) as u64 * w as u64 + 64 * t as u64;
+                let byte = (bit / 8) as usize;
+                let sh = (bit % 8) as u32;
+                let v = (word as u128) << sh;
+                for q in 0..9 {
+                    let idx = byte + q;
+                    if idx >= dst.len() {
+                        break; // only zero bits can spill past the stream
+                    }
+                    dst[idx] ^= (v >> (8 * q as u32)) as u8;
+                }
+            }
+        }
+    }
+}
+
+/// Fused unpack-and-fold, the receive side of [`pack_planes_xor_into`]:
+/// extract the `n` lanes at global lane indices `[lane0, lane0 + n)` from
+/// the wire bytes `src` and XOR their plane form into `out` (a plane
+/// buffer of exactly this segment). Bit-exact with the classic
+/// [`bitpack::unpack_bytes_xor_into`] followed by a transpose, for every
+/// width, offset and thread count.
+pub fn unpack_bytes_xor_into_planes(
+    src: &[u8],
+    w: u32,
+    n: usize,
+    lane0: usize,
+    out: &mut [u64],
+    threads: usize,
+) {
+    debug_assert!(w >= 1 && w <= 64);
+    let nblocks = blocks(n);
+    let wu = w as usize;
+    debug_assert_eq!(out.len(), nblocks * wu);
+    debug_assert!(
+        src.len() as u64 >= bitpack::packed_bytes(lane0 + n, w),
+        "wire buffer too short for segment at lane {lane0}"
+    );
+    let mask = low_mask(w);
+    let dst = SendPtr(out.as_mut_ptr());
+    let dst_ref = &dst;
+    par_chunks(nblocks, eff_threads(nblocks, threads), move |_, range| {
+        for k in range {
+            let mut buf = [0u64; 64];
+            let lo = k * LANES_PER_BLOCK;
+            let r = (n - lo).min(LANES_PER_BLOCK);
+            for (i, b) in buf.iter_mut().take(r).enumerate() {
+                *b = lane_from_words(|j| word_at(src, j), w, mask, lane0 + lo + i);
+            }
+            transpose64(&mut buf);
+            // SAFETY: block k updates only its own plane words
+            // [k·w, k·w+w), disjoint per block.
+            unsafe {
+                let p = dst_ref.get().add(k * wu);
+                for (b, v) in buf.iter().take(wu).enumerate() {
+                    *p.add(b) ^= *v;
+                }
+            }
+        }
+    });
+}
+
+/// Plane-form equivalent of the classic per-lane `(x << s) & low_mask(w)`:
+/// plane `b` of the result is plane `b − s` of `src` (zero for `b < s`).
+/// The mask is implicit — planes at or above `w` simply don't exist.
+/// Splits across the worker pool above [`tuning::par_min_blocks`] blocks
+/// (blocks are independent shifted copies).
+pub fn plane_shl_into(src: &[u64], w: u32, s: u32, dst: &mut [u64], threads: usize) {
+    debug_assert!(w >= 1 && w <= 64);
+    let wu = w as usize;
+    debug_assert_eq!(src.len() % wu, 0);
+    debug_assert_eq!(dst.len(), src.len());
+    let nblocks = src.len() / wu;
+    let su = (s as usize).min(wu);
+    let t = eff_threads(nblocks, threads);
+    if t <= 1 {
+        for (db, sb) in dst.chunks_exact_mut(wu).zip(src.chunks_exact(wu)) {
+            db[..su].fill(0);
+            db[su..].copy_from_slice(&sb[..wu - su]);
+        }
+        return;
+    }
+    let out = SendPtr(dst.as_mut_ptr());
+    let out_ref = &out;
+    par_chunks(nblocks, t, move |_, range| {
+        for k in range {
+            // SAFETY: block k writes only its own plane words
+            // [k·w, (k+1)·w), disjoint per block; the caller blocks until
+            // all chunks complete, and src/dst never alias (distinct
+            // engine buffers).
+            unsafe {
+                let d = out_ref.get().add(k * wu);
+                std::ptr::write_bytes(d, 0, su);
+                std::ptr::copy_nonoverlapping(src.as_ptr().add(k * wu), d.add(su), wu - su);
+            }
+        }
+    });
+}
+
+/// Extract the sign plane (plane `w − 1`) of an `n`-lane plane-form vector
+/// into one-bit-per-u64 lane form — the DReLU driver's MSB read. Plane
+/// `w−1` of block `k` already holds 64 lanes' sign bits in one word; this
+/// just spreads them back to lanes for the (cheap, 1-bit) B2A step.
+pub fn msb_lanes_from_planes(planes: &[u64], w: u32, n: usize, out: &mut [u64]) {
+    debug_assert!(w >= 1 && w <= 64);
+    let wu = w as usize;
+    debug_assert_eq!(planes.len(), blocks(n) * wu);
+    debug_assert_eq!(out.len(), n);
+    for (k, chunk) in out.chunks_mut(LANES_PER_BLOCK).enumerate() {
+        let sign = planes[k * wu + wu - 1];
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o = (sign >> i) & 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::prg::Prg;
+
+    fn random_lanes(n: usize, w: u32, seed: u64) -> Vec<u64> {
+        let mut prg = Prg::new(seed, w as u64);
+        let mask = low_mask(w);
+        (0..n).map(|_| prg.next_u64() & mask).collect()
+    }
+
+    /// transpose64 against a naive bit-by-bit transpose, plus involution.
+    #[test]
+    fn transpose_matches_naive_and_is_involution() {
+        let mut prg = Prg::new(3, 0);
+        let mut a = [0u64; 64];
+        for v in a.iter_mut() {
+            *v = prg.next_u64();
+        }
+        let orig = a;
+        let mut naive = [0u64; 64];
+        for (r, row) in naive.iter_mut().enumerate() {
+            for p in 0..64 {
+                *row |= ((orig[p] >> r) & 1) << p;
+            }
+        }
+        transpose64(&mut a);
+        assert_eq!(a, naive);
+        transpose64(&mut a);
+        assert_eq!(a, orig, "transpose must be an involution");
+    }
+
+    /// Round trip at every width, with odd lane counts (tail blocks) and
+    /// several thread counts; also pins the implicit-masking behaviour.
+    #[test]
+    fn lanes_planes_roundtrip_all_widths() {
+        for w in 1..=64u32 {
+            for n in [1usize, 3, 63, 64, 65, 127, 128, 200] {
+                let src = random_lanes(n, w, 100 + w as u64);
+                for threads in [1usize, 2, 4] {
+                    let mut planes = vec![0u64; plane_len(n, w)];
+                    lanes_to_planes(&src, w, &mut planes, threads);
+                    let mut back = vec![0u64; n];
+                    planes_to_lanes(&planes, w, n, &mut back, threads);
+                    assert_eq!(src, back, "w={w} n={n} threads={threads}");
+                }
+            }
+        }
+        // High bits above w are discarded by the forward transpose — the
+        // free masking the plane form provides.
+        let dirty: Vec<u64> = (0..70u64).map(|i| i | (i << 40) | (1 << 63)).collect();
+        let w = 6u32;
+        let mut planes = vec![0u64; plane_len(dirty.len(), w)];
+        lanes_to_planes(&dirty, w, &mut planes, 1);
+        let mut back = vec![0u64; dirty.len()];
+        planes_to_lanes(&planes, w, dirty.len(), &mut back, 1);
+        let masked: Vec<u64> = dirty.iter().map(|v| v & low_mask(w)).collect();
+        assert_eq!(back, masked);
+    }
+
+    /// Tail lanes of the final block are zero in every plane (the wire
+    /// pack and plane-shift ops rely on this invariant).
+    #[test]
+    fn tail_lanes_are_zero() {
+        let w = 5u32;
+        let n = 70usize; // 2 blocks, 6 live lanes in the tail block
+        let src = vec![low_mask(w); n];
+        let mut planes = vec![0u64; plane_len(n, w)];
+        lanes_to_planes(&src, w, &mut planes, 1);
+        for b in 0..w as usize {
+            let tail_plane = planes[w as usize + b];
+            assert_eq!(tail_plane >> 6, 0, "plane {b} has nonzero tail lanes");
+            assert_eq!(tail_plane & 0x3f, 0x3f);
+        }
+    }
+
+    /// Single-segment fused pack is byte-identical to the classic packer,
+    /// for every width, tail shape and thread count.
+    #[test]
+    fn pack_matches_classic_bitpack() {
+        for w in 1..=64u32 {
+            for n in [1usize, 3, 63, 64, 65, 129, 333] {
+                let src = random_lanes(n, w, 500 + w as u64);
+                let classic = bitpack::pack_bytes(&src, w);
+                let mut planes = vec![0u64; plane_len(n, w)];
+                lanes_to_planes(&src, w, &mut planes, 1);
+                for threads in [1usize, 2] {
+                    let mut wire = vec![0u8; classic.len()];
+                    pack_planes_xor_into(&planes, w, n, 0, &mut wire, threads);
+                    assert_eq!(wire, classic, "w={w} n={n} threads={threads}");
+                }
+            }
+        }
+    }
+
+    /// Segmented pack (the adder's `u = p ‖ p` shape): per-segment plane
+    /// packs at lane offsets reproduce the classic pack of the
+    /// concatenated lane vector — including non-multiple-of-64 segment
+    /// sizes, which exercise the unaligned scalar path.
+    #[test]
+    fn segmented_pack_matches_concatenated_classic_pack() {
+        for w in [1u32, 5, 6, 8, 13, 31, 64] {
+            for n in [1usize, 7, 64, 100, 130] {
+                for segs in [1usize, 2, 4] {
+                    let mut lanes_all = Vec::new();
+                    let mut seg_planes = Vec::new();
+                    for s in 0..segs {
+                        let seg = random_lanes(n, w, 900 + w as u64 + s as u64);
+                        let mut planes = vec![0u64; plane_len(n, w)];
+                        lanes_to_planes(&seg, w, &mut planes, 1);
+                        seg_planes.push(planes);
+                        lanes_all.extend_from_slice(&seg);
+                    }
+                    let classic = bitpack::pack_bytes(&lanes_all, w);
+                    let mut wire = vec![0u8; classic.len()];
+                    for (s, planes) in seg_planes.iter().enumerate() {
+                        pack_planes_xor_into(planes, w, n, s * n, &mut wire, 2);
+                    }
+                    assert_eq!(wire, classic, "w={w} n={n} segs={segs}");
+                }
+            }
+        }
+    }
+
+    /// Unpack-fold into planes agrees with classic unpack + transpose, at
+    /// segment offsets and across thread counts; folding twice cancels.
+    #[test]
+    fn unpack_matches_classic_then_transpose() {
+        for w in [1u32, 6, 12, 33, 64] {
+            for n in [1usize, 65, 128, 130] {
+                for segs in [1usize, 3] {
+                    let lanes_all = random_lanes(segs * n, w, 40 + w as u64);
+                    let wire = bitpack::pack_bytes(&lanes_all, w);
+                    for s in 0..segs {
+                        let seg_lanes = &lanes_all[s * n..(s + 1) * n];
+                        let mut expect = vec![0u64; plane_len(n, w)];
+                        lanes_to_planes(seg_lanes, w, &mut expect, 1);
+                        for threads in [1usize, 2] {
+                            let mut got = vec![0u64; plane_len(n, w)];
+                            unpack_bytes_xor_into_planes(&wire, w, n, s * n, &mut got, threads);
+                            assert_eq!(got, expect, "w={w} n={n} seg={s} threads={threads}");
+                            unpack_bytes_xor_into_planes(&wire, w, n, s * n, &mut got, threads);
+                            assert!(got.iter().all(|v| *v == 0), "double fold must cancel");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// plane_shl_into equals the classic per-lane `(x << s) & mask`.
+    #[test]
+    fn plane_shift_matches_lane_shift() {
+        for w in [2u32, 6, 9, 64] {
+            for s in [1u32, 2, 4, w - 1, w, w + 3] {
+                let n = 97usize;
+                let src = random_lanes(n, w, 7 + w as u64);
+                let mut planes = vec![0u64; plane_len(n, w)];
+                lanes_to_planes(&src, w, &mut planes, 1);
+                let mut shifted = vec![0u64; planes.len()];
+                plane_shl_into(&planes, w, s, &mut shifted, 1);
+                let mut back = vec![0u64; n];
+                planes_to_lanes(&shifted, w, n, &mut back, 1);
+                let mask = low_mask(w);
+                let expect: Vec<u64> = src
+                    .iter()
+                    .map(|v| if s >= 64 { 0 } else { (v << s) & mask })
+                    .collect();
+                assert_eq!(back, expect, "w={w} s={s}");
+            }
+        }
+    }
+
+    /// MSB plane extraction equals the classic per-lane sign-bit read.
+    #[test]
+    fn msb_extraction_matches_lane_read() {
+        for w in [1u32, 6, 17] {
+            let n = 131usize;
+            let src = random_lanes(n, w, 60 + w as u64);
+            let mut planes = vec![0u64; plane_len(n, w)];
+            lanes_to_planes(&src, w, &mut planes, 1);
+            let mut msb = vec![0u64; n];
+            msb_lanes_from_planes(&planes, w, n, &mut msb);
+            let expect: Vec<u64> = src.iter().map(|v| (v >> (w - 1)) & 1).collect();
+            assert_eq!(msb, expect, "w={w}");
+        }
+    }
+}

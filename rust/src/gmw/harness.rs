@@ -43,7 +43,8 @@ where
 }
 
 /// Run with a per-party kernel backend factory (e.g. to give each party its
-/// own PJRT executable cache).
+/// own PJRT executable cache, or to select the bitsliced layout via
+/// `|_| BitslicedKernels::default()`).
 pub fn run_parties_with<R, F, K, KF>(
     parties: usize,
     session_seed: u64,
@@ -57,6 +58,25 @@ where
     KF: Fn(usize) -> K + Send + Sync,
 {
     run_parties_inner(parties, session_seed, 1, kf, f)
+}
+
+/// [`run_parties_with`] plus a per-party lane-parallelism budget — the
+/// full knob surface (kernel backend / layout × thread count) used by the
+/// layout-equivalence tests and the ablation bench.
+pub fn run_parties_with_threaded<R, F, K, KF>(
+    parties: usize,
+    session_seed: u64,
+    threads: usize,
+    kf: KF,
+    f: F,
+) -> HarnessRun<R>
+where
+    R: Send,
+    K: KernelBackend,
+    F: Fn(&mut GmwParty<LocalTransport, K>) -> R + Send + Sync,
+    KF: Fn(usize) -> K + Send + Sync,
+{
+    run_parties_inner(parties, session_seed, threads, kf, f)
 }
 
 fn run_parties_inner<R, F, K, KF>(

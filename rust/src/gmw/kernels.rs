@@ -1,23 +1,42 @@
 //! Local-compute kernels of the GMW engine.
 //!
 //! Every *local* tensor computation the protocol performs between
-//! communication rounds is factored behind [`KernelBackend`], with two
+//! communication rounds is factored behind [`KernelBackend`], with three
 //! implementations:
 //!
-//! * [`RustKernels`] — portable Rust (this file). The reference
-//!   implementation every test validates against. It splits large lane
-//!   ranges across OS threads via `util::threadpool` (the engine's
-//!   `--threads` knob); small tensors always run inline, so dispatch
-//!   overhead never dominates.
+//! * [`RustKernels`] — portable Rust, **lane-per-u64** layout (one w-bit
+//!   value in the low bits of each u64). The reference implementation
+//!   every test validates against. It splits large lane ranges across OS
+//!   threads via `util::threadpool` (the engine's `--threads` knob); small
+//!   tensors always run inline, so dispatch overhead never dominates.
+//! * [`BitslicedKernels`] — portable Rust, **bit-plane** layout (64 lanes
+//!   per word, see [`super::bitsliced`]): every binary-share buffer the
+//!   engine hands these kernels holds `w` bit-plane words per 64-lane
+//!   block, so one AND instruction processes 64 lanes and the plain `u64`
+//!   loops autovectorize. Selected with `--layout bitsliced`; pinned
+//!   bit-identical (outputs *and* wire bytes) against [`RustKernels`].
 //! * `runtime::XlaKernels` — the same five primitives lowered from the
 //!   Layer-1 **Pallas kernels** (`python/compile/kernels/bitops.py`) to HLO
-//!   and executed on the PJRT CPU client. This is the path that proves the
-//!   three-layer composition, and the one a TPU/GPU deployment would use.
+//!   and executed on the PJRT CPU client (lane-per-u64 layout). This is the
+//!   path that proves the three-layer composition, and the one a TPU/GPU
+//!   deployment would use.
 //!
 //! The five primitives map 1:1 onto the Pallas kernels and onto the
 //! protocol's communication structure: each `*_open` produces exactly the
 //! masked values that go on the wire, and each `*_combine` consumes exactly
 //! what came back.
+//!
+//! # Layout contract
+//!
+//! [`KernelBackend::bin_layout`] declares how the backend interprets
+//! *binary*-share buffers, and the engine routes data accordingly (see the
+//! "Lane layouts" section of the [`super`] module docs). The arithmetic
+//! Beaver primitives (`mult_open` / `mult_combine`) are always
+//! lane-per-u64 — HummingBird cannot shrink the 64-bit Mult phase, so
+//! there is nothing to slice. `and_open` / `and_combine` are pure
+//! element-wise boolean ops and therefore layout-agnostic; only
+//! `ks_stage_operands` changes meaning (lane shifts become plane-index
+//! shifts).
 //!
 //! # Buffer discipline (zero-allocation hot path)
 //!
@@ -32,12 +51,51 @@
 //! * `and_combine` / `mult_combine`: `out.len() == n`.
 //! * `ks_stage_operands`: `u_out.len() == v_out.len() == halves·n` where
 //!   `halves = if last { 1 } else { 2 }`.
+//!
+//! (`n` counts buffer *words*: lanes in the classic layout, plane words in
+//! the bitsliced layout.)
 
 use crate::util::threadpool::par_chunks_mut;
+use crate::util::tuning;
 
-/// Lane count below which the Rust kernels stay single-threaded (spawn
-/// overhead would swamp the arithmetic; keeps small-`n` latency unchanged).
-pub const PAR_MIN_LANES: usize = 8192;
+use super::bitsliced;
+
+/// How a kernel backend lays out binary-share vectors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BinLayout {
+    /// One w-bit lane in the low bits of each u64 (the classic layout).
+    #[default]
+    LanePerU64,
+    /// 64 lanes per word as w bit-planes per block (`gmw::bitsliced`).
+    Bitsliced,
+}
+
+impl BinLayout {
+    /// Stable label for CLI values, metrics and bench row names.
+    pub fn label(&self) -> &'static str {
+        match self {
+            BinLayout::LanePerU64 => "lane",
+            BinLayout::Bitsliced => "bitsliced",
+        }
+    }
+}
+
+impl std::fmt::Display for BinLayout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl std::str::FromStr for BinLayout {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "lane" | "lanes" | "lane-per-u64" | "classic" => Ok(BinLayout::LanePerU64),
+            "bitsliced" | "bitslice" | "planes" => Ok(BinLayout::Bitsliced),
+            other => Err(format!("unknown layout '{other}' (expected 'lane' or 'bitsliced')")),
+        }
+    }
+}
 
 /// Masked-open / combine primitives for one party.
 ///
@@ -47,7 +105,7 @@ pub const PAR_MIN_LANES: usize = 8192;
 #[allow(clippy::too_many_arguments)]
 pub trait KernelBackend {
     /// Beaver-AND open: given share vectors u, v and triple shares a, b
-    /// (all w-bit lanes), write the concatenated masked opening
+    /// (same layout), write the concatenated masked opening
     /// `d || e` = `(u ⊕ a) || (v ⊕ b)` into `out` (length 2n).
     fn and_open(&mut self, u: &[u64], v: &[u64], a: &[u64], b: &[u64], out: &mut [u64]);
 
@@ -67,9 +125,10 @@ pub trait KernelBackend {
 
     /// One Kogge–Stone stage's local prep: from prefix state (g, p) write
     /// the two AND operand vectors for this stage into `u_out` / `v_out`:
-    /// `u = p || p`, `v = (g ≪ s) || (p ≪ s)` (all masked to w bits).
-    /// `last` skips the `p` half (the final stage only needs g), halving
-    /// the operand lengths.
+    /// `u = p || p`, `v = (g ≪ s) || (p ≪ s)` (shifts within each w-bit
+    /// lane, masked to w bits — a plane-index shift in the bitsliced
+    /// layout). `last` skips the `p` half (the final stage only needs g),
+    /// halving the operand lengths.
     fn ks_stage_operands(
         &mut self,
         g: &[u64],
@@ -82,11 +141,12 @@ pub trait KernelBackend {
     );
 
     /// Beaver arithmetic-multiply open: write `d || e` = `(x − a) || (y − b)`
-    /// over Z/2^64 into `out` (length 2n).
+    /// over Z/2^64 into `out` (length 2n). Always lane-per-u64.
     fn mult_open(&mut self, x: &[u64], y: &[u64], a: &[u64], b: &[u64], out: &mut [u64]);
 
     /// Beaver arithmetic-multiply combine: write
     /// `z = c + d·b + e·a + [leader] d·e` over Z/2^64 into `out` (length n).
+    /// Always lane-per-u64.
     fn mult_combine(
         &mut self,
         d: &[u64],
@@ -102,11 +162,225 @@ pub trait KernelBackend {
     /// (no-op by default; the XLA backend parallelizes inside PJRT).
     fn set_threads(&mut self, _threads: usize) {}
 
+    /// Layout this backend expects for binary-share buffers. The engine
+    /// routes adder/DReLU data (and the wire boundary) accordingly.
+    fn bin_layout(&self) -> BinLayout {
+        BinLayout::LanePerU64
+    }
+
     /// Human-readable backend name (for metrics / bench labels).
     fn name(&self) -> &'static str;
 }
 
-/// Portable Rust implementation, optionally multi-threaded across lanes.
+// ---------------------------------------------------------------------------
+// Shared element-wise inner loops.
+//
+// Both portable backends funnel into these. The loops process fixed-size
+// chunks with exact trip counts so LLVM unrolls and autovectorizes them
+// (SSE2/AVX2) without arch-specific intrinsics; the scalar remainder
+// handles the tail. Bit-exact with the obvious per-element loop.
+// ---------------------------------------------------------------------------
+
+/// Elements per vectorization chunk (4 × u64 = one AVX2 register, ×2 for
+/// unrolling headroom).
+const CHUNK: usize = 8;
+
+#[inline]
+fn xor_into(out: &mut [u64], x: &[u64], y: &[u64]) {
+    let n = out.len();
+    debug_assert!(x.len() == n && y.len() == n);
+    let main = n - n % CHUNK;
+    for ((o, xs), ys) in out[..main]
+        .chunks_exact_mut(CHUNK)
+        .zip(x[..main].chunks_exact(CHUNK))
+        .zip(y[..main].chunks_exact(CHUNK))
+    {
+        for i in 0..CHUNK {
+            o[i] = xs[i] ^ ys[i];
+        }
+    }
+    for i in main..n {
+        out[i] = x[i] ^ y[i];
+    }
+}
+
+#[inline]
+fn and_combine_into(
+    out: &mut [u64],
+    d: &[u64],
+    e: &[u64],
+    a: &[u64],
+    b: &[u64],
+    c: &[u64],
+    leader: bool,
+) {
+    let n = out.len();
+    debug_assert!(d.len() == n && e.len() == n && a.len() == n && b.len() == n && c.len() == n);
+    if leader {
+        for i in 0..n {
+            out[i] = (d[i] & e[i]) ^ (d[i] & b[i]) ^ (e[i] & a[i]) ^ c[i];
+        }
+    } else {
+        for i in 0..n {
+            out[i] = (d[i] & b[i]) ^ (e[i] & a[i]) ^ c[i];
+        }
+    }
+}
+
+#[inline]
+fn sub_wrapping_into(out: &mut [u64], x: &[u64], y: &[u64]) {
+    let n = out.len();
+    debug_assert!(x.len() == n && y.len() == n);
+    let main = n - n % CHUNK;
+    for ((o, xs), ys) in out[..main]
+        .chunks_exact_mut(CHUNK)
+        .zip(x[..main].chunks_exact(CHUNK))
+        .zip(y[..main].chunks_exact(CHUNK))
+    {
+        for i in 0..CHUNK {
+            o[i] = xs[i].wrapping_sub(ys[i]);
+        }
+    }
+    for i in main..n {
+        out[i] = x[i].wrapping_sub(y[i]);
+    }
+}
+
+#[inline]
+fn mult_combine_into(
+    out: &mut [u64],
+    d: &[u64],
+    e: &[u64],
+    a: &[u64],
+    b: &[u64],
+    c: &[u64],
+    leader: bool,
+) {
+    let n = out.len();
+    debug_assert!(d.len() == n && e.len() == n && a.len() == n && b.len() == n && c.len() == n);
+    // The leader branch is hoisted out of the loops so each body is a
+    // straight-line fused multiply-add chain over wrapping u64s.
+    let main = n - n % CHUNK;
+    if leader {
+        for i0 in (0..main).step_by(CHUNK) {
+            for i in i0..i0 + CHUNK {
+                out[i] = c[i]
+                    .wrapping_add(d[i].wrapping_mul(b[i]))
+                    .wrapping_add(e[i].wrapping_mul(a[i]))
+                    .wrapping_add(d[i].wrapping_mul(e[i]));
+            }
+        }
+        for i in main..n {
+            out[i] = c[i]
+                .wrapping_add(d[i].wrapping_mul(b[i]))
+                .wrapping_add(e[i].wrapping_mul(a[i]))
+                .wrapping_add(d[i].wrapping_mul(e[i]));
+        }
+    } else {
+        for i0 in (0..main).step_by(CHUNK) {
+            for i in i0..i0 + CHUNK {
+                out[i] = c[i]
+                    .wrapping_add(d[i].wrapping_mul(b[i]))
+                    .wrapping_add(e[i].wrapping_mul(a[i]));
+            }
+        }
+        for i in main..n {
+            out[i] = c[i]
+                .wrapping_add(d[i].wrapping_mul(b[i]))
+                .wrapping_add(e[i].wrapping_mul(a[i]));
+        }
+    }
+}
+
+/// Shared threaded implementations of the layout-agnostic primitives
+/// (element-wise over whatever words the layout stores).
+#[inline]
+fn threaded_and_open(t: usize, u: &[u64], v: &[u64], a: &[u64], b: &[u64], out: &mut [u64]) {
+    let n = u.len();
+    debug_assert!(v.len() == n && a.len() == n && b.len() == n && out.len() == 2 * n);
+    let (d_out, e_out) = out.split_at_mut(n);
+    par_chunks_mut(d_out, t, |off, chunk| {
+        xor_into(chunk, &u[off..off + chunk.len()], &a[off..off + chunk.len()]);
+    });
+    par_chunks_mut(e_out, t, |off, chunk| {
+        xor_into(chunk, &v[off..off + chunk.len()], &b[off..off + chunk.len()]);
+    });
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn threaded_and_combine(
+    t: usize,
+    d: &[u64],
+    e: &[u64],
+    a: &[u64],
+    b: &[u64],
+    c: &[u64],
+    leader: bool,
+    out: &mut [u64],
+) {
+    let n = d.len();
+    debug_assert!(e.len() == n && a.len() == n && b.len() == n && c.len() == n);
+    debug_assert_eq!(out.len(), n);
+    par_chunks_mut(out, t, |off, chunk| {
+        let hi = off + chunk.len();
+        let (d, e) = (&d[off..hi], &e[off..hi]);
+        and_combine_into(chunk, d, e, &a[off..hi], &b[off..hi], &c[off..hi], leader);
+    });
+}
+
+#[inline]
+fn threaded_mult_open(t: usize, x: &[u64], y: &[u64], a: &[u64], b: &[u64], out: &mut [u64]) {
+    let n = x.len();
+    debug_assert!(y.len() == n && a.len() == n && b.len() == n && out.len() == 2 * n);
+    let (d_out, e_out) = out.split_at_mut(n);
+    par_chunks_mut(d_out, t, |off, chunk| {
+        sub_wrapping_into(chunk, &x[off..off + chunk.len()], &a[off..off + chunk.len()]);
+    });
+    par_chunks_mut(e_out, t, |off, chunk| {
+        sub_wrapping_into(chunk, &y[off..off + chunk.len()], &b[off..off + chunk.len()]);
+    });
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn threaded_mult_combine(
+    t: usize,
+    d: &[u64],
+    e: &[u64],
+    a: &[u64],
+    b: &[u64],
+    c: &[u64],
+    leader: bool,
+    out: &mut [u64],
+) {
+    let n = d.len();
+    debug_assert!(e.len() == n && a.len() == n && b.len() == n && c.len() == n);
+    debug_assert_eq!(out.len(), n);
+    par_chunks_mut(out, t, |off, chunk| {
+        let hi = off + chunk.len();
+        let (d, e) = (&d[off..hi], &e[off..hi]);
+        mult_combine_into(chunk, d, e, &a[off..hi], &b[off..hi], &c[off..hi], leader);
+    });
+}
+
+/// Threads to engage for `n` processed words (inline below the tuning
+/// threshold so small tensors never pay dispatch overhead).
+#[inline]
+fn eff_threads(threads: usize, n: usize) -> usize {
+    if n >= tuning::par_min_lanes() {
+        threads
+    } else {
+        1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lane-per-u64 reference backend.
+// ---------------------------------------------------------------------------
+
+/// Portable Rust implementation, lane-per-u64 layout, optionally
+/// multi-threaded across lanes.
 #[derive(Debug, Clone)]
 pub struct RustKernels {
     threads: usize,
@@ -120,38 +394,16 @@ impl Default for RustKernels {
 
 impl RustKernels {
     /// Kernels that split lane ranges across up to `threads` OS threads
-    /// (only engaged above [`PAR_MIN_LANES`] lanes).
+    /// (only engaged above [`tuning::par_min_lanes`] lanes).
     pub fn with_threads(threads: usize) -> Self {
         RustKernels { threads: threads.max(1) }
-    }
-
-    #[inline]
-    fn eff_threads(&self, n: usize) -> usize {
-        if n >= PAR_MIN_LANES {
-            self.threads
-        } else {
-            1
-        }
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 impl KernelBackend for RustKernels {
     fn and_open(&mut self, u: &[u64], v: &[u64], a: &[u64], b: &[u64], out: &mut [u64]) {
-        let n = u.len();
-        debug_assert!(v.len() == n && a.len() == n && b.len() == n && out.len() == 2 * n);
-        let t = self.eff_threads(n);
-        let (d_out, e_out) = out.split_at_mut(n);
-        par_chunks_mut(d_out, t, |off, chunk| {
-            for (i, o) in chunk.iter_mut().enumerate() {
-                *o = u[off + i] ^ a[off + i];
-            }
-        });
-        par_chunks_mut(e_out, t, |off, chunk| {
-            for (i, o) in chunk.iter_mut().enumerate() {
-                *o = v[off + i] ^ b[off + i];
-            }
-        });
+        threaded_and_open(eff_threads(self.threads, u.len()), u, v, a, b, out);
     }
 
     fn and_combine(
@@ -164,19 +416,7 @@ impl KernelBackend for RustKernels {
         leader: bool,
         out: &mut [u64],
     ) {
-        let n = d.len();
-        debug_assert!(e.len() == n && a.len() == n && b.len() == n && c.len() == n);
-        debug_assert_eq!(out.len(), n);
-        par_chunks_mut(out, self.eff_threads(n), |off, chunk| {
-            for (i, o) in chunk.iter_mut().enumerate() {
-                let j = off + i;
-                let mut z = (d[j] & b[j]) ^ (e[j] & a[j]) ^ c[j];
-                if leader {
-                    z ^= d[j] & e[j];
-                }
-                *o = z;
-            }
-        });
+        threaded_and_combine(eff_threads(self.threads, d.len()), d, e, a, b, c, leader, out);
     }
 
     fn ks_stage_operands(
@@ -193,7 +433,7 @@ impl KernelBackend for RustKernels {
         let n = g.len();
         let halves = if last { 1 } else { 2 };
         debug_assert!(p.len() == n && u_out.len() == halves * n && v_out.len() == halves * n);
-        let t = self.eff_threads(n);
+        let t = eff_threads(self.threads, n);
         par_chunks_mut(&mut u_out[..n], t, |off, chunk| {
             chunk.copy_from_slice(&p[off..off + chunk.len()]);
         });
@@ -215,20 +455,7 @@ impl KernelBackend for RustKernels {
     }
 
     fn mult_open(&mut self, x: &[u64], y: &[u64], a: &[u64], b: &[u64], out: &mut [u64]) {
-        let n = x.len();
-        debug_assert!(y.len() == n && a.len() == n && b.len() == n && out.len() == 2 * n);
-        let t = self.eff_threads(n);
-        let (d_out, e_out) = out.split_at_mut(n);
-        par_chunks_mut(d_out, t, |off, chunk| {
-            for (i, o) in chunk.iter_mut().enumerate() {
-                *o = x[off + i].wrapping_sub(a[off + i]);
-            }
-        });
-        par_chunks_mut(e_out, t, |off, chunk| {
-            for (i, o) in chunk.iter_mut().enumerate() {
-                *o = y[off + i].wrapping_sub(b[off + i]);
-            }
-        });
+        threaded_mult_open(eff_threads(self.threads, x.len()), x, y, a, b, out);
     }
 
     fn mult_combine(
@@ -241,21 +468,7 @@ impl KernelBackend for RustKernels {
         leader: bool,
         out: &mut [u64],
     ) {
-        let n = d.len();
-        debug_assert!(e.len() == n && a.len() == n && b.len() == n && c.len() == n);
-        debug_assert_eq!(out.len(), n);
-        par_chunks_mut(out, self.eff_threads(n), |off, chunk| {
-            for (i, o) in chunk.iter_mut().enumerate() {
-                let j = off + i;
-                let mut z = c[j]
-                    .wrapping_add(d[j].wrapping_mul(b[j]))
-                    .wrapping_add(e[j].wrapping_mul(a[j]));
-                if leader {
-                    z = z.wrapping_add(d[j].wrapping_mul(e[j]));
-                }
-                *o = z;
-            }
-        });
+        threaded_mult_combine(eff_threads(self.threads, d.len()), d, e, a, b, c, leader, out);
     }
 
     fn set_threads(&mut self, threads: usize) {
@@ -267,10 +480,120 @@ impl KernelBackend for RustKernels {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Bitsliced backend.
+// ---------------------------------------------------------------------------
+
+/// Portable Rust implementation over bit-plane buffers: binary primitives
+/// process 64 lanes per word (see [`super::bitsliced`] for the layout).
+/// The arithmetic primitives are the same chunked lane-per-u64 loops as
+/// [`RustKernels`] — the 64-bit Mult phase has nothing to slice.
+///
+/// The element-wise binary primitives (`and_open` / `and_combine`) reuse
+/// the shared loops above: XOR/AND are position-wise, so the same code is
+/// correct in either layout — only the word count changes (`n·w/64`-ish
+/// plane words instead of `n` lanes). `ks_stage_operands` is where the
+/// layouts genuinely diverge: the per-lane `(x ≪ s) & mask` becomes a
+/// plane-index shift with the mask implicit.
+#[derive(Debug, Clone)]
+pub struct BitslicedKernels {
+    threads: usize,
+}
+
+impl Default for BitslicedKernels {
+    fn default() -> Self {
+        BitslicedKernels { threads: 1 }
+    }
+}
+
+impl BitslicedKernels {
+    /// Bitsliced kernels with a lane-parallelism budget of `threads`.
+    pub fn with_threads(threads: usize) -> Self {
+        BitslicedKernels { threads: threads.max(1) }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+impl KernelBackend for BitslicedKernels {
+    fn and_open(&mut self, u: &[u64], v: &[u64], a: &[u64], b: &[u64], out: &mut [u64]) {
+        threaded_and_open(eff_threads(self.threads, u.len()), u, v, a, b, out);
+    }
+
+    fn and_combine(
+        &mut self,
+        d: &[u64],
+        e: &[u64],
+        a: &[u64],
+        b: &[u64],
+        c: &[u64],
+        leader: bool,
+        out: &mut [u64],
+    ) {
+        threaded_and_combine(eff_threads(self.threads, d.len()), d, e, a, b, c, leader, out);
+    }
+
+    fn ks_stage_operands(
+        &mut self,
+        g: &[u64],
+        p: &[u64],
+        s: u32,
+        w: u32,
+        last: bool,
+        u_out: &mut [u64],
+        v_out: &mut [u64],
+    ) {
+        let pl = g.len();
+        debug_assert_eq!(pl % w as usize, 0, "plane buffer length must be a block multiple");
+        let halves = if last { 1 } else { 2 };
+        debug_assert!(p.len() == pl && u_out.len() == halves * pl && v_out.len() == halves * pl);
+        let t = eff_threads(self.threads, pl);
+        par_chunks_mut(&mut u_out[..pl], t, |off, chunk| {
+            chunk.copy_from_slice(&p[off..off + chunk.len()]);
+        });
+        bitsliced::plane_shl_into(g, w, s, &mut v_out[..pl], t);
+        if !last {
+            par_chunks_mut(&mut u_out[pl..], t, |off, chunk| {
+                chunk.copy_from_slice(&p[off..off + chunk.len()]);
+            });
+            bitsliced::plane_shl_into(p, w, s, &mut v_out[pl..], t);
+        }
+    }
+
+    fn mult_open(&mut self, x: &[u64], y: &[u64], a: &[u64], b: &[u64], out: &mut [u64]) {
+        threaded_mult_open(eff_threads(self.threads, x.len()), x, y, a, b, out);
+    }
+
+    fn mult_combine(
+        &mut self,
+        d: &[u64],
+        e: &[u64],
+        a: &[u64],
+        b: &[u64],
+        c: &[u64],
+        leader: bool,
+        out: &mut [u64],
+    ) {
+        threaded_mult_combine(eff_threads(self.threads, d.len()), d, e, a, b, c, leader, out);
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    fn bin_layout(&self) -> BinLayout {
+        BinLayout::Bitsliced
+    }
+
+    fn name(&self) -> &'static str {
+        "bitsliced"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::crypto::prg::Prg;
+    use crate::gmw::bitsliced::{lanes_to_planes, plane_len, planes_to_lanes};
 
     /// One-party-world sanity: with "shares" equal to plaintext and a zero
     /// triple, open/combine reduce to plain AND / MUL.
@@ -316,11 +639,95 @@ mod tests {
         assert_eq!(v, vec![0b100000]);
     }
 
+    /// The bitsliced stage-operand builder agrees with the classic one
+    /// through the transpose, for every stage shape.
+    #[test]
+    fn bitsliced_stage_operands_match_classic_through_transpose() {
+        let mut classic = RustKernels::default();
+        let mut sliced = BitslicedKernels::default();
+        for w in [2u32, 6, 8, 20, 64] {
+            let n = 100usize;
+            let mask = crate::ring::low_mask(w);
+            let mut prg = Prg::new(w as u64, 9);
+            let g: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+            let p: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+            let pl = plane_len(n, w);
+            let mut gp = vec![0u64; pl];
+            let mut pp = vec![0u64; pl];
+            lanes_to_planes(&g, w, &mut gp, 1);
+            lanes_to_planes(&p, w, &mut pp, 1);
+            for (s, last) in [(1u32, false), (2, false), (w.next_power_of_two() / 2, true)] {
+                let halves = if last { 1 } else { 2 };
+                let mut u1 = vec![0u64; halves * n];
+                let mut v1 = vec![0u64; halves * n];
+                classic.ks_stage_operands(&g, &p, s, w, last, &mut u1, &mut v1);
+                let mut up = vec![0u64; halves * pl];
+                let mut vp = vec![0u64; halves * pl];
+                sliced.ks_stage_operands(&gp, &pp, s, w, last, &mut up, &mut vp);
+                for h in 0..halves {
+                    let mut ul = vec![0u64; n];
+                    let mut vl = vec![0u64; n];
+                    planes_to_lanes(&up[h * pl..(h + 1) * pl], w, n, &mut ul, 1);
+                    planes_to_lanes(&vp[h * pl..(h + 1) * pl], w, n, &mut vl, 1);
+                    assert_eq!(ul, u1[h * n..(h + 1) * n], "u half {h} w={w} s={s}");
+                    assert_eq!(vl, v1[h * n..(h + 1) * n], "v half {h} w={w} s={s}");
+                }
+            }
+        }
+    }
+
+    /// The chunked element-wise helpers match the naive per-element loops
+    /// at lengths around the chunk boundary.
+    #[test]
+    fn chunked_helpers_match_naive() {
+        let mut prg = Prg::new(77, 1);
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 100] {
+            let d = prg.vec_u64(n);
+            let e = prg.vec_u64(n);
+            let a = prg.vec_u64(n);
+            let b = prg.vec_u64(n);
+            let c = prg.vec_u64(n);
+            let mut out = vec![0u64; n];
+            sub_wrapping_into(&mut out, &d, &e);
+            let naive: Vec<u64> = d.iter().zip(&e).map(|(x, y)| x.wrapping_sub(*y)).collect();
+            assert_eq!(out, naive, "sub n={n}");
+            xor_into(&mut out, &d, &e);
+            let naive: Vec<u64> = d.iter().zip(&e).map(|(x, y)| x ^ y).collect();
+            assert_eq!(out, naive, "xor n={n}");
+            for leader in [false, true] {
+                mult_combine_into(&mut out, &d, &e, &a, &b, &c, leader);
+                let naive: Vec<u64> = (0..n)
+                    .map(|i| {
+                        let mut z = c[i]
+                            .wrapping_add(d[i].wrapping_mul(b[i]))
+                            .wrapping_add(e[i].wrapping_mul(a[i]));
+                        if leader {
+                            z = z.wrapping_add(d[i].wrapping_mul(e[i]));
+                        }
+                        z
+                    })
+                    .collect();
+                assert_eq!(out, naive, "mult_combine n={n} leader={leader}");
+                and_combine_into(&mut out, &d, &e, &a, &b, &c, leader);
+                let naive: Vec<u64> = (0..n)
+                    .map(|i| {
+                        let mut z = (d[i] & b[i]) ^ (e[i] & a[i]) ^ c[i];
+                        if leader {
+                            z ^= d[i] & e[i];
+                        }
+                        z
+                    })
+                    .collect();
+                assert_eq!(out, naive, "and_combine n={n} leader={leader}");
+            }
+        }
+    }
+
     /// Multi-threaded kernels are bit-identical to single-threaded for every
     /// primitive, at a lane count that actually engages the thread pool.
     #[test]
     fn parallel_kernels_match_scalar_reference() {
-        let n = PAR_MIN_LANES + 1000;
+        let n = tuning::par_min_lanes() + 1000;
         let mut prg = Prg::new(17, 0);
         let u = prg.vec_u64(n);
         let v = prg.vec_u64(n);
@@ -368,5 +775,16 @@ mod tests {
                 assert_eq!(v1, v2, "stage v threads={threads} last={last}");
             }
         }
+    }
+
+    #[test]
+    fn layout_parse_and_labels() {
+        assert_eq!("lane".parse::<BinLayout>().unwrap(), BinLayout::LanePerU64);
+        assert_eq!("Bitsliced".parse::<BinLayout>().unwrap(), BinLayout::Bitsliced);
+        assert_eq!("lane-per-u64".parse::<BinLayout>().unwrap(), BinLayout::LanePerU64);
+        assert!("simd".parse::<BinLayout>().is_err());
+        assert_eq!(BinLayout::Bitsliced.label(), "bitsliced");
+        assert_eq!(RustKernels::default().bin_layout(), BinLayout::LanePerU64);
+        assert_eq!(BitslicedKernels::default().bin_layout(), BinLayout::Bitsliced);
     }
 }

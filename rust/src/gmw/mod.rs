@@ -43,14 +43,49 @@
 //! ([`bitpack::unpack_bytes_xor_into`]) — no intermediate full-width lane
 //! vectors exist on either side of a round.
 //!
+//! # Lane layouts (`--layout`)
+//!
+//! Binary shares flow through the engine in one of two layouts, selected
+//! by the kernel backend's [`kernels::KernelBackend::bin_layout`]:
+//!
+//! * **`lane` (lane-per-u64, default)** — one w-bit value in the low bits
+//!   of each u64. The reference layout: simplest, required by the XLA
+//!   backend, and fastest for very small batches (no transpose overhead).
+//! * **`bitsliced`** — blocks of 64 lanes transposed into w bit-plane
+//!   words ([`bitsliced`]). Every local AND/XOR of the adder processes 64
+//!   lanes per word instead of one, so local compute stops scaling with
+//!   the *lane count* and starts scaling with `n·w/64` — a multi-×
+//!   advantage at the paper's windows (w ≈ 6–8) on wide batches. The wire
+//!   format is **byte-for-byte identical** to the classic path: packing a
+//!   plane block is a fused 64×64 bit-matrix transpose written straight
+//!   into the pooled wire buffer, and lane-form Beaver triples from the
+//!   (layout-agnostic) dealer stream are transposed at the round boundary
+//!   so the masked openings match the reference bit-for-bit.
+//!
+//! Ownership rules for plane buffers are the arena's usual ones — checked
+//! out per protocol step, fully overwritten, returned on completion — with
+//! two extra representational invariants documented in [`bitsliced`]:
+//! planes at or above w don't exist (masking is free) and tail lanes of a
+//! partial final block stay zero. Plane buffers are sized
+//! [`bitsliced::plane_len`]`(n, w)` and come from the same size-classed
+//! pool, so the bitsliced hot path is as allocation-free as the classic
+//! one (same `relu_steady_state_is_allocation_free` pinning).
+//!
+//! Public entry points (`a2b`, `ks_add`, `drelu`, `relu`, …) always accept
+//! and return lane-per-u64 data in both modes; the engine converts at the
+//! narrowest possible boundary (the DReLU driver stays in plane form from
+//! re-sharing to MSB extraction and never round-trips).
+//!
 //! # Threading
 //!
 //! [`GmwParty::set_threads`] sets the lane-parallelism budget for the local
 //! kernels and the fused pack/unpack (CLI flag `--threads`, coordinator
 //! `ServeOptions::threads`). Results are bit-identical for every thread
-//! count; small batches always run inline.
+//! count; small batches always run inline (thresholds live in
+//! `util::tuning`, env-overridable).
 
 pub mod adder;
+pub mod bitsliced;
 pub mod harness;
 pub mod kernels;
 
@@ -68,7 +103,7 @@ use crate::ring;
 use crate::sharing::PairwisePrgs;
 
 use arena::{Arena, ArenaStats};
-use kernels::{KernelBackend, RustKernels};
+use kernels::{BinLayout, KernelBackend, RustKernels};
 
 /// Per-layer ReLU evaluation plan: use bits [m, k) of the secret share.
 ///
@@ -158,6 +193,11 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
     pub fn kernel_name(&self) -> &'static str {
         self.kernels.name()
     }
+    /// Binary-share layout of this party's kernel backend (see the
+    /// "Lane layouts" section of the module docs).
+    pub fn bin_layout(&self) -> BinLayout {
+        self.kernels.bin_layout()
+    }
     pub(crate) fn kernels_mut(&mut self) -> &mut K {
         &mut self.kernels
     }
@@ -244,6 +284,79 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         Ok(out)
     }
 
+    /// Open binary shares held in bit-plane form: `shares` is the
+    /// concatenation of `segs` plane-form segments of `n_seg` lanes each
+    /// (segment `s` covers global lanes `[s·n_seg, (s+1)·n_seg)` of the
+    /// wire stream). The wire bytes are identical to
+    /// [`GmwParty::open_binary_into`] over the equivalent lane vector:
+    /// each segment is packed with the transpose-fused
+    /// [`bitsliced::pack_planes_xor_into`] straight into the pooled wire
+    /// buffer, and peers' bytes fold back with
+    /// [`bitsliced::unpack_bytes_xor_into_planes`] — no lane vector exists
+    /// on either side of the round.
+    pub(crate) fn open_planes_into(
+        &mut self,
+        phase: Phase,
+        shares: &[u64],
+        w: u32,
+        n_seg: usize,
+        segs: usize,
+        out: &mut [u64],
+    ) -> Result<()> {
+        let pl = bitsliced::plane_len(n_seg, w);
+        debug_assert!(shares.len() == segs * pl && out.len() == segs * pl);
+        let total = segs * n_seg;
+        let wire_len = bitpack::packed_bytes(total, w) as usize;
+        let mut wire = self.arena.take_bytes(wire_len);
+        // The fused pack XOR-merges segments, so the buffer must start
+        // zeroed (unlike the lane pack, which overwrites every byte; the
+        // memset is a small fraction of the transposes it enables).
+        if wire.len() != wire_len {
+            wire.clear();
+            wire.resize(wire_len, 0);
+        } else {
+            wire.fill(0);
+        }
+        let threads = self.threads;
+        for s in 0..segs {
+            bitsliced::pack_planes_xor_into(
+                &shares[s * pl..(s + 1) * pl],
+                w,
+                n_seg,
+                s * n_seg,
+                &mut wire,
+                threads,
+            );
+        }
+        self.transport.exchange_all_into(phase, &wire, &mut self.recv)?;
+        self.arena.put_bytes(wire);
+        out.copy_from_slice(shares);
+        let me = self.transport.party();
+        for q in 0..self.recv.parties() {
+            if q == me {
+                continue;
+            }
+            let buf = self.recv.get(q);
+            if buf.len() != wire_len {
+                return Err(Error::wire(format!(
+                    "binary opening from party {q}: expected {wire_len} bytes, got {}",
+                    buf.len()
+                )));
+            }
+            for s in 0..segs {
+                bitsliced::unpack_bytes_xor_into_planes(
+                    buf,
+                    w,
+                    n_seg,
+                    s * n_seg,
+                    &mut out[s * pl..(s + 1) * pl],
+                    threads,
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Open arithmetic shares (full 64-bit words on the wire) into `out`.
     pub fn open_arith_into(&mut self, phase: Phase, shares: &[u64], out: &mut [u64]) -> Result<()> {
         let n = shares.len();
@@ -317,6 +430,64 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         Ok(out)
     }
 
+    /// Secure AND over bit-plane buffers (`segs` plane-form segments of
+    /// `n_seg` lanes each — see [`GmwParty::open_planes_into`] for the
+    /// segment convention). The dealer hands out the *same* lane-form
+    /// triples as the classic path (the correlation stream is
+    /// layout-agnostic); they are transposed into plane form at the round
+    /// boundary, so the masked openings — and therefore the wire bytes —
+    /// are bit-identical to [`GmwParty::and_gates_into`] on the equivalent
+    /// lane vectors. The AND/XOR work itself runs 64 lanes per word.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn and_gates_planes_into(
+        &mut self,
+        phase: Phase,
+        u: &[u64],
+        v: &[u64],
+        w: u32,
+        n_seg: usize,
+        segs: usize,
+        out: &mut [u64],
+    ) -> Result<()> {
+        let pl = bitsliced::plane_len(n_seg, w);
+        debug_assert!(u.len() == segs * pl && v.len() == segs * pl && out.len() == segs * pl);
+        let total = segs * n_seg;
+        let mask = ring::low_mask(w);
+        let threads = self.threads;
+        let mut ta = self.arena.take_words(total);
+        let mut tb = self.arena.take_words(total);
+        let mut tc = self.arena.take_words(total);
+        self.dealer.bin_triples_into(mask, &mut ta, &mut tb, &mut tc);
+        let mut tap = self.arena.take_words(segs * pl);
+        let mut tbp = self.arena.take_words(segs * pl);
+        let mut tcp = self.arena.take_words(segs * pl);
+        for s in 0..segs {
+            let lanes = s * n_seg..(s + 1) * n_seg;
+            let planes = s * pl..(s + 1) * pl;
+            bitsliced::lanes_to_planes(&ta[lanes.clone()], w, &mut tap[planes.clone()], threads);
+            bitsliced::lanes_to_planes(&tb[lanes.clone()], w, &mut tbp[planes.clone()], threads);
+            bitsliced::lanes_to_planes(&tc[lanes], w, &mut tcp[planes], threads);
+        }
+        self.arena.put_words(tc);
+        self.arena.put_words(tb);
+        self.arena.put_words(ta);
+        let mut de = self.arena.take_words(2 * segs * pl);
+        self.kernels.and_open(u, v, &tap, &tbp, &mut de);
+        let mut opened = self.arena.take_words(2 * segs * pl);
+        // d occupies global lanes [0, total), e occupies [total, 2·total) —
+        // exactly the classic `d || e` stream, as 2·segs segments.
+        self.open_planes_into(phase, &de, w, n_seg, 2 * segs, &mut opened)?;
+        self.arena.put_words(de);
+        let leader = self.is_leader();
+        let (d, e) = opened.split_at(segs * pl);
+        self.kernels.and_combine(d, e, &tap, &tbp, &tcp, leader, out);
+        self.arena.put_words(opened);
+        self.arena.put_words(tcp);
+        self.arena.put_words(tbp);
+        self.arena.put_words(tap);
+        Ok(())
+    }
+
     // ------------------------------------------------------------------
     // Conversions.
     // ------------------------------------------------------------------
@@ -329,6 +500,15 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
     pub fn a2b_into(&mut self, arith: &[u64], w: u32, out: &mut [u64]) -> Result<()> {
         let n = arith.len();
         debug_assert_eq!(out.len(), n);
+        if self.bin_layout() == BinLayout::Bitsliced {
+            let mut planes = self.arena.take_words(bitsliced::plane_len(n, w));
+            let r = self.a2b_planes_into(arith, w, &mut planes);
+            if r.is_ok() {
+                bitsliced::planes_to_lanes(&planes, w, n, out, self.threads);
+            }
+            self.arena.put_words(planes);
+            return r;
+        }
         let mask = ring::low_mask(w);
         let me = self.party();
         let parties = self.parties();
@@ -367,6 +547,57 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         let mut out = vec![0u64; arith.len()];
         self.a2b_into(arith, w, &mut out)?;
         Ok(out)
+    }
+
+    /// Plane-native A2B: like [`GmwParty::a2b_into`] but the result stays
+    /// in bit-plane form (`out.len() == `[`bitsliced::plane_len`]`(n, w)`).
+    /// The PRG re-sharing streams are consumed exactly as in the classic
+    /// path; each party's lane-form operand is transposed once and the
+    /// circuit additions never leave plane form (the DReLU driver then
+    /// reads the sign plane directly — no back-transpose on the hot path).
+    pub(crate) fn a2b_planes_into(&mut self, arith: &[u64], w: u32, out: &mut [u64]) -> Result<()> {
+        let n = arith.len();
+        let pl = bitsliced::plane_len(n, w);
+        debug_assert_eq!(out.len(), pl);
+        let mask = ring::low_mask(w);
+        let me = self.party();
+        let parties = self.parties();
+        let threads = self.threads;
+        let mut masked = self.arena.take_words(n);
+        for (mi, x) in masked.iter_mut().zip(arith) {
+            *mi = x & mask;
+        }
+        // Same zero-sharing streams as the classic path, staged in lane
+        // form and transposed per operand; the transpose discards bits at
+        // or above w, which is exactly the classic `&= mask` pass.
+        let mut lanes = self.arena.take_words(n);
+        let mut acc = self.arena.take_words(pl);
+        let mut op = self.arena.take_words(pl);
+        for j in 0..parties {
+            let value = if j == me { Some(&masked[..]) } else { None };
+            self.pairwise.reshare_binary_into(value, &mut lanes);
+            let dst = if j == 0 { &mut acc } else { &mut op };
+            bitsliced::lanes_to_planes(&lanes, w, dst, threads);
+            if j > 0 {
+                let mut next = self.arena.take_words(pl);
+                adder::ks_add_planes_with_into(
+                    self,
+                    &acc,
+                    &op,
+                    w,
+                    n,
+                    adder::AdderOptions::default(),
+                    &mut next,
+                )?;
+                self.arena.put_words(std::mem::replace(&mut acc, next));
+            }
+        }
+        out.copy_from_slice(&acc);
+        self.arena.put_words(acc);
+        self.arena.put_words(op);
+        self.arena.put_words(lanes);
+        self.arena.put_words(masked);
+        Ok(())
     }
 
     /// B2A of single-bit lanes via daBits into `out`: one round, 1 bit per
@@ -484,6 +715,31 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         let mut windows = self.arena.take_words(n);
         for (wi, x) in windows.iter_mut().zip(arith) {
             *wi = ring::bit_window(*x, plan.k, plan.m);
+        }
+        if self.bin_layout() == BinLayout::Bitsliced {
+            // Plane-form hot path: the adder runs 64 lanes per word and the
+            // MSB read is one plane word per block — the only lane-form
+            // data after the window extraction is the 1-bit B2A input.
+            let mut sum_planes = self.arena.take_words(bitsliced::plane_len(n, w));
+            let r = self.a2b_planes_into(&windows, w, &mut sum_planes);
+            if let Err(e) = r {
+                self.arena.put_words(sum_planes);
+                self.arena.put_words(windows);
+                return Err(e);
+            }
+            let leader = self.is_leader();
+            let mut msb = self.arena.take_words(n);
+            bitsliced::msb_lanes_from_planes(&sum_planes, w, n, &mut msb);
+            if leader {
+                for m in msb.iter_mut() {
+                    *m ^= 1;
+                }
+            }
+            let r = self.b2a_bit_into(&msb, out);
+            self.arena.put_words(msb);
+            self.arena.put_words(sum_planes);
+            self.arena.put_words(windows);
+            return r;
         }
         // A2B on the reduced ring.
         let mut sum_bits = self.arena.take_words(n);

@@ -27,6 +27,7 @@ pub mod util {
     pub mod json;
     pub mod stats;
     pub mod threadpool;
+    pub mod tuning;
 }
 
 pub mod crypto {

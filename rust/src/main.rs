@@ -15,11 +15,18 @@
 //!   hummingbird search --model miniresnet_synth10 --budget 8/64
 //!   hummingbird infer --model miniresnet_synth10 \
 //!       --plan configs/searched/miniresnet_synth10_b8-64.json --samples 64
+//!   hummingbird infer --model miniresnet_synth10 --layout bitsliced
 //!   hummingbird figures --fig 11
+//!
+//! GMW engine knobs shared by infer/serve/party: `--threads N` (lane
+//! parallelism, 0 = all cores) and `--layout lane|bitsliced` (binary-share
+//! layout; bitsliced runs 64 lanes per word through DReLU). Both are
+//! bit-exact: they change wall-clock, never results or wire bytes.
 
 use anyhow::{bail, Context, Result};
 
 use hummingbird::figures;
+use hummingbird::gmw::kernels::BinLayout;
 use hummingbird::hummingbird::search::{SearchConfig, SearchEngine, Strategy};
 use hummingbird::hummingbird::{simulator, PlanSet};
 use hummingbird::model::{Archive, Backend, Dataset, ModelConfig, PlainExecutor, WhichPlain};
@@ -89,7 +96,15 @@ fn cmd_infer(args: &Args) -> Result<()> {
     opts.gmw_backend = backend;
     // --threads: lane parallelism per party (0 = auto-split the cores).
     opts.threads = args.opt_parse("threads", 0)?;
-    println!("booting {} ({} parties, plan: {})", model, opts.parties, plan.summary());
+    // --layout: binary-share layout (lane-per-u64 or bitsliced).
+    opts.layout = args.opt_parse("layout", BinLayout::default())?;
+    println!(
+        "booting {} ({} parties, plan: {}, layout: {})",
+        model,
+        opts.parties,
+        plan.summary(),
+        opts.layout
+    );
     let svc = Coordinator::start(opts)?;
 
     let n = samples.min(dataset.test.n);
@@ -160,6 +175,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     opts.plan = Some(plan.clone());
     opts.gmw_backend = args.opt_or("gmw-backend", "rust").to_string();
     opts.threads = args.opt_parse("threads", 0)?;
+    opts.layout = args.opt_parse("layout", BinLayout::default())?;
     let svc = Coordinator::start(opts)?;
     println!("serving {model} (plan: {}), open-loop for {duration}s", plan.summary());
 
@@ -297,6 +313,7 @@ fn parse_budget(s: &str) -> Result<f64> {
 // ---------------------------------------------------------------------
 
 fn cmd_party(args: &Args) -> Result<()> {
+    use hummingbird::gmw::kernels::{BitslicedKernels, KernelBackend, RustKernels};
     use hummingbird::gmw::{GmwParty, ReluPlan};
     use hummingbird::net::tcp::TcpTransport;
     use hummingbird::net::Transport;
@@ -306,25 +323,56 @@ fn cmd_party(args: &Args) -> Result<()> {
     let n: usize = args.opt_parse("elems", 4096)?;
     let k: u32 = args.opt_parse("k", 64)?;
     let m: u32 = args.opt_parse("m", 0)?;
+    let layout: BinLayout = args.opt_parse("layout", BinLayout::default())?;
     println!("party {rank}/{} connecting...", addrs.len());
     let transport = TcpTransport::connect(rank, &addrs)?;
-    let mut party = GmwParty::new(transport, args.opt_parse("seed", 7u64)?);
+    let seed: u64 = args.opt_parse("seed", 7u64)?;
     // Real deployments own the whole machine: default --threads to all cores.
-    party.set_threads(args.threads(0)?);
-    // Each party holds a random share vector; run ReLU over TCP.
+    let threads = args.threads(0)?;
+    // Each party holds a random share vector; run ReLU over TCP. All
+    // parties must pass the same --layout (it is bit-exact, but the lane
+    // budget differs); the wire bytes are identical either way.
+    let plan = ReluPlan::new(k, m).map_err(anyhow::Error::from)?;
+    fn run_relu<K: KernelBackend>(
+        mut party: GmwParty<TcpTransport, K>,
+        shares: &[u64],
+        plan: ReluPlan,
+        threads: usize,
+        label: &str,
+    ) -> Result<()> {
+        party.set_threads(threads);
+        let t0 = std::time::Instant::now();
+        let _out = party.relu(shares, plan)?;
+        let trace = party.transport.trace();
+        println!(
+            "relu({} elems, window [{},{})) over TCP [{label}]: {} in {}, {} rounds",
+            shares.len(),
+            plan.m,
+            plan.k,
+            stats::fmt_bytes(trace.total_bytes()),
+            stats::fmt_secs(t0.elapsed().as_secs_f64()),
+            trace.total_rounds()
+        );
+        Ok(())
+    }
     let mut prg = hummingbird::crypto::prg::Prg::new(100 + rank as u64, 0);
     let shares = prg.vec_u64(n);
-    let plan = ReluPlan::new(k, m).map_err(anyhow::Error::from)?;
-    let t0 = std::time::Instant::now();
-    let _out = party.relu(&shares, plan)?;
-    let trace = party.transport.trace();
-    println!(
-        "relu({n} elems, window [{m},{k})) over TCP: {} in {}, {} rounds",
-        stats::fmt_bytes(trace.total_bytes()),
-        stats::fmt_secs(t0.elapsed().as_secs_f64()),
-        trace.total_rounds()
-    );
-    Ok(())
+    match layout {
+        BinLayout::Bitsliced => run_relu(
+            GmwParty::with_kernels(transport, seed, BitslicedKernels::default()),
+            &shares,
+            plan,
+            threads,
+            "bitsliced",
+        ),
+        BinLayout::LanePerU64 => run_relu(
+            GmwParty::with_kernels(transport, seed, RustKernels::default()),
+            &shares,
+            plan,
+            threads,
+            "lane",
+        ),
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -332,7 +380,8 @@ fn cmd_party(args: &Args) -> Result<()> {
 // ---------------------------------------------------------------------
 
 fn cmd_selftest(_args: &Args) -> Result<()> {
-    use hummingbird::gmw::harness::run_parties;
+    use hummingbird::gmw::harness::{run_parties, run_parties_with};
+    use hummingbird::gmw::kernels::BitslicedKernels;
     use hummingbird::gmw::ReluPlan;
     use hummingbird::sharing::{reconstruct_arith, share_arith};
     let mut prg = hummingbird::crypto::prg::Prg::new(1, 1);
@@ -345,10 +394,10 @@ fn cmd_selftest(_args: &Args) -> Result<()> {
         ("eco 20-bit", ReluPlan::new(20, 0).unwrap()),
         ("hummingbird [2,10)", ReluPlan::new(10, 2).unwrap()),
     ] {
-        let xs = xs.clone();
+        let xs_run = xs.clone();
         let run = run_parties(2, 3, move |p| {
             let me = p.party();
-            p.relu(&xs[me], plan).unwrap()
+            p.relu(&xs_run[me], plan).unwrap()
         });
         let out = reconstruct_arith(&run.outputs);
         let errs = out
@@ -359,11 +408,24 @@ fn cmd_selftest(_args: &Args) -> Result<()> {
                 **o != expect
             })
             .count();
+        // Same circuit through the bitsliced layout: per-party shares and
+        // wire accounting must match the lane layout exactly.
+        let xs_run = xs.clone();
+        let sliced = run_parties_with(2, 3, |_| BitslicedKernels::default(), move |p| {
+            let me = p.party();
+            p.relu(&xs_run[me], plan).unwrap()
+        });
+        let layouts_match = sliced.outputs == run.outputs
+            && sliced.trace.total_bytes() == run.trace.total_bytes()
+            && sliced.trace.total_rounds() == run.trace.total_rounds();
         println!(
-            "{name:<24} bytes={:<10} rounds={:<4} deviations={errs}",
+            "{name:<24} bytes={:<10} rounds={:<4} deviations={errs} layouts-match={layouts_match}",
             run.trace.total_bytes(),
             run.trace.total_rounds()
         );
+        if !layouts_match {
+            bail!("bitsliced layout diverged from lane layout on {name}");
+        }
     }
     println!("selftest done");
     Ok(())

@@ -1,0 +1,128 @@
+//! Central registry of the engine's parallelism/tuning thresholds.
+//!
+//! PR 1 scattered two "don't parallelize below this size" constants across
+//! `bitpack` and `gmw::kernels`; the bitsliced layout (PR 3) adds a third.
+//! They all live here now, each overridable through an environment variable
+//! so bench sweeps can explore the thresholds **without recompiling**:
+//!
+//! | knob                | env var             | default | guards                                   |
+//! |---------------------|---------------------|---------|------------------------------------------|
+//! | [`par_min_lanes`]   | `HB_PAR_MIN_LANES`  | 8192    | lane-wise kernels, `unpack_bytes_xor_into` |
+//! | [`par_min_words`]   | `HB_PAR_MIN_WORDS`  | 2048    | `pack_bytes_into` (packed-word count)    |
+//! | [`par_min_blocks`]  | `HB_PAR_MIN_BLOCKS` | 64      | bitsliced transpose/pack (64-lane blocks) |
+//!
+//! Values are read **once** on first use and cached for the process
+//! lifetime (a `OnceLock`), so the hot path pays one atomic load — set the
+//! variables before the first protocol round. Unparseable or zero values
+//! fall back to the default (a threshold of 0 would make single-element
+//! buffers spawn pool regions; use `1` to force parallelism everywhere).
+//!
+//! These thresholds only trade dispatch overhead against parallel speedup:
+//! every guarded code path produces bit-identical results at any setting.
+
+use std::sync::OnceLock;
+
+/// Default minimum lane count before lane-wise loops go parallel.
+pub const DEFAULT_PAR_MIN_LANES: usize = 8192;
+/// Default minimum packed-word count before the fused bitpack goes parallel.
+pub const DEFAULT_PAR_MIN_WORDS: usize = 2048;
+/// Default minimum 64-lane block count before bitsliced transposes go
+/// parallel (one block is 64 lanes, so 64 blocks = 4096 lanes).
+pub const DEFAULT_PAR_MIN_BLOCKS: usize = 64;
+
+/// The resolved thresholds (env overrides applied).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tuning {
+    pub par_min_lanes: usize,
+    pub par_min_words: usize,
+    pub par_min_blocks: usize,
+}
+
+impl Default for Tuning {
+    fn default() -> Self {
+        Tuning {
+            par_min_lanes: DEFAULT_PAR_MIN_LANES,
+            par_min_words: DEFAULT_PAR_MIN_WORDS,
+            par_min_blocks: DEFAULT_PAR_MIN_BLOCKS,
+        }
+    }
+}
+
+/// Parse one override: `None` / empty / unparseable / zero → `default`.
+fn parse_override(raw: Option<&str>, default: usize) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok()).filter(|v| *v > 0).unwrap_or(default)
+}
+
+fn from_env() -> Tuning {
+    let lanes = std::env::var("HB_PAR_MIN_LANES").ok();
+    let words = std::env::var("HB_PAR_MIN_WORDS").ok();
+    let blocks = std::env::var("HB_PAR_MIN_BLOCKS").ok();
+    Tuning {
+        par_min_lanes: parse_override(lanes.as_deref(), DEFAULT_PAR_MIN_LANES),
+        par_min_words: parse_override(words.as_deref(), DEFAULT_PAR_MIN_WORDS),
+        par_min_blocks: parse_override(blocks.as_deref(), DEFAULT_PAR_MIN_BLOCKS),
+    }
+}
+
+static TUNING: OnceLock<Tuning> = OnceLock::new();
+
+/// The process-wide tuning snapshot (env read once, then cached).
+pub fn tuning() -> Tuning {
+    *TUNING.get_or_init(from_env)
+}
+
+/// Lane count below which lane-wise kernels stay single-threaded.
+#[inline]
+pub fn par_min_lanes() -> usize {
+    tuning().par_min_lanes
+}
+
+/// Packed-word count below which the fused bitpack stays single-threaded.
+#[inline]
+pub fn par_min_words() -> usize {
+    tuning().par_min_words
+}
+
+/// 64-lane block count below which bitsliced transposes stay
+/// single-threaded.
+#[inline]
+pub fn par_min_blocks() -> usize {
+    tuning().par_min_blocks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_without_overrides() {
+        assert_eq!(parse_override(None, 8192), 8192);
+        assert_eq!(Tuning::default().par_min_lanes, DEFAULT_PAR_MIN_LANES);
+        assert_eq!(Tuning::default().par_min_words, DEFAULT_PAR_MIN_WORDS);
+        assert_eq!(Tuning::default().par_min_blocks, DEFAULT_PAR_MIN_BLOCKS);
+    }
+
+    #[test]
+    fn override_parsing() {
+        assert_eq!(parse_override(Some("123"), 1), 123);
+        assert_eq!(parse_override(Some(" 64 "), 1), 64);
+        // Garbage, empty and zero all fall back to the default.
+        assert_eq!(parse_override(Some("banana"), 7), 7);
+        assert_eq!(parse_override(Some(""), 7), 7);
+        assert_eq!(parse_override(Some("0"), 7), 7);
+    }
+
+    /// The cached accessor must agree with itself (and be >= 1 so the
+    /// threadpool never sees a zero threshold), whatever the test
+    /// environment set.
+    #[test]
+    fn cached_snapshot_is_stable_and_positive() {
+        let a = tuning();
+        let b = tuning();
+        assert_eq!(a, b);
+        assert!(a.par_min_lanes >= 1 && a.par_min_words >= 1 && a.par_min_blocks >= 1);
+        assert_eq!(par_min_lanes(), a.par_min_lanes);
+        assert_eq!(par_min_words(), a.par_min_words);
+        assert_eq!(par_min_blocks(), a.par_min_blocks);
+    }
+}

@@ -1,0 +1,258 @@
+//! Layout-equivalence suite: the bitsliced binary engine must be
+//! **bit-identical** to the lane-per-u64 reference — per-party output
+//! shares, wire byte counts and round counts — for every window width,
+//! lane count (including non-multiples of 64, which exercise the
+//! unaligned transpose-pack path), party count and thread count. The
+//! byte-level identity of the transpose-fused wire boundary itself is
+//! pinned by the unit tests in `gmw::bitsliced`; here we pin the protocol
+//! built on top of it, plus the zero-allocation steady state.
+
+use hummingbird::crypto::prg::Prg;
+use hummingbird::gmw::harness::{run_parties_with, run_parties_with_threaded, HarnessRun};
+use hummingbird::gmw::kernels::{BitslicedKernels, RustKernels};
+use hummingbird::gmw::{adder, ReluPlan};
+use hummingbird::net::accounting::Phase;
+use hummingbird::ring;
+use hummingbird::sharing::{reconstruct_arith, reconstruct_binary, share_arith, share_binary};
+
+/// Run the same protocol body under both kernel backends. The closure
+/// literal is expanded twice so each copy monomorphizes against its own
+/// party type — the engine API is layout-agnostic (lane-form in/out), so
+/// one body serves both.
+macro_rules! run_both_layouts {
+    ($parties:expr, $seed:expr, $threads:expr, $body:expr) => {{
+        let lane =
+            run_parties_with_threaded($parties, $seed, $threads, |_| RustKernels::default(), $body);
+        let sliced = run_parties_with_threaded(
+            $parties,
+            $seed,
+            $threads,
+            |_| BitslicedKernels::default(),
+            $body,
+        );
+        (lane, sliced)
+    }};
+}
+
+/// Per-party outputs and communication accounting must match exactly.
+fn assert_runs_equal<R: PartialEq + std::fmt::Debug>(
+    lane: &HarnessRun<R>,
+    sliced: &HarnessRun<R>,
+    ctx: &str,
+) {
+    assert_eq!(lane.outputs, sliced.outputs, "per-party outputs differ: {ctx}");
+    assert_eq!(
+        lane.trace.total_bytes(),
+        sliced.trace.total_bytes(),
+        "wire bytes differ: {ctx}"
+    );
+    assert_eq!(
+        lane.trace.total_rounds(),
+        sliced.trace.total_rounds(),
+        "round counts differ: {ctx}"
+    );
+}
+
+/// ks_add across the full width sweep and awkward lane counts: outputs,
+/// bytes and rounds identical across layouts, and correct vs plaintext.
+#[test]
+fn ks_add_bitsliced_matches_lane_layout() {
+    for parties in [2usize, 3] {
+        for w in [1u32, 2, 3, 5, 6, 8, 13, 16, 21, 32, 48, 64] {
+            for n in [1usize, 40, 65, 130] {
+                let mut prg = Prg::new(1000 + w as u64, n as u64 + parties as u64);
+                let mask = ring::low_mask(w);
+                let x: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+                let y: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+                let xs: Vec<Vec<u64>> = share_binary(&mut prg, &x, parties)
+                    .iter()
+                    .map(|s| s.iter().map(|v| v & mask).collect())
+                    .collect();
+                let ys: Vec<Vec<u64>> = share_binary(&mut prg, &y, parties)
+                    .iter()
+                    .map(|s| s.iter().map(|v| v & mask).collect())
+                    .collect();
+                let ctx = format!("ks_add parties={parties} w={w} n={n}");
+                let (lane, sliced) = run_both_layouts!(parties, 7, 1, |p| {
+                    let me = p.party();
+                    adder::ks_add(p, &xs[me], &ys[me], w).unwrap()
+                });
+                assert_runs_equal(&lane, &sliced, &ctx);
+                let z = reconstruct_binary(&lane.outputs);
+                let expect: Vec<u64> =
+                    x.iter().zip(&y).map(|(a, b)| a.wrapping_add(*b) & mask).collect();
+                assert_eq!(z, expect, "{ctx}");
+            }
+        }
+    }
+}
+
+/// DReLU and ReLU across the paper's (k, m) windows — including w = 1
+/// (k = m + 1), the full-ring baseline and pruning windows — at lane
+/// counts that straddle block boundaries and several thread counts.
+#[test]
+fn relu_bit_identical_across_layouts_and_threads() {
+    let windows = [
+        ReluPlan::BASELINE,
+        ReluPlan::new(20, 0).unwrap(),
+        ReluPlan::new(12, 4).unwrap(),
+        ReluPlan::new(10, 4).unwrap(),
+        ReluPlan::new(8, 7).unwrap(), // w = 1
+        ReluPlan::new(6, 0).unwrap(),
+    ];
+    let default_threads = hummingbird::util::threadpool::default_threads();
+    for parties in [2usize, 3] {
+        for plan in windows {
+            for n in [33usize, 256, 321] {
+                let mut prg = Prg::new(9 + plan.k as u64 * 67 + plan.m as u64, n as u64);
+                let x: Vec<u64> = (0..n)
+                    .map(|i| {
+                        let v = prg.next_u64() % (1u64 << (plan.k.max(2) - 1));
+                        if i % 2 == 0 {
+                            v
+                        } else {
+                            v.wrapping_neg()
+                        }
+                    })
+                    .collect();
+                let xs = share_arith(&mut prg, &x, parties);
+                for threads in [1usize, 2, default_threads] {
+                    let ctx = format!(
+                        "relu parties={parties} k={} m={} n={n} threads={threads}",
+                        plan.k, plan.m
+                    );
+                    let (lane, sliced) = run_both_layouts!(parties, 5, threads, |p| {
+                        let me = p.party();
+                        let d = p.drelu(&xs[me], plan).unwrap();
+                        let r = p.relu(&xs[me], plan).unwrap();
+                        (d, r)
+                    });
+                    assert_runs_equal(&lane, &sliced, &ctx);
+                }
+            }
+        }
+    }
+}
+
+/// A2B equivalence: the layout branch in `a2b_into` (planes + final
+/// back-transpose) returns the very same binary lane shares.
+#[test]
+fn a2b_bitsliced_matches_lane_layout() {
+    for parties in [2usize, 3] {
+        for w in [4u32, 9, 16, 33, 64] {
+            let n = 100usize;
+            let mut prg = Prg::new(300 + w as u64, parties as u64);
+            let x: Vec<u64> = prg.vec_u64(n);
+            let xs = share_arith(&mut prg, &x, parties);
+            let ctx = format!("a2b parties={parties} w={w}");
+            let (lane, sliced) = run_both_layouts!(parties, 1234, 1, |p| {
+                let me = p.party();
+                p.a2b(&xs[me], w).unwrap()
+            });
+            assert_runs_equal(&lane, &sliced, &ctx);
+            let mask = ring::low_mask(w);
+            let expect: Vec<u64> = x.iter().map(|v| v & mask).collect();
+            assert_eq!(reconstruct_binary(&lane.outputs), expect, "{ctx}");
+        }
+    }
+}
+
+/// Adder design knobs (ablation paths) behave identically in both
+/// layouts: unbatched stages and kept last-P produce the same shares and
+/// the same (larger) byte/round counts.
+#[test]
+fn adder_options_equivalent_across_layouts() {
+    use adder::AdderOptions;
+    let w = 12u32;
+    let n = 77usize;
+    let mut prg = Prg::new(55, 0);
+    let mask = ring::low_mask(w);
+    let x: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+    let y: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+    let xs: Vec<Vec<u64>> = share_binary(&mut prg, &x, 2)
+        .iter()
+        .map(|s| s.iter().map(|v| v & mask).collect())
+        .collect();
+    let ys: Vec<Vec<u64>> = share_binary(&mut prg, &y, 2)
+        .iter()
+        .map(|s| s.iter().map(|v| v & mask).collect())
+        .collect();
+    for opts in [
+        AdderOptions::default(),
+        AdderOptions { skip_last_p: false, ..Default::default() },
+        AdderOptions { batch_stage_ands: false, skip_last_p: false },
+    ] {
+        let ctx = format!("adder opts={opts:?}");
+        let (lane, sliced) = run_both_layouts!(2, 21, 1, |p| {
+            let me = p.party();
+            adder::ks_add_with(p, &xs[me], &ys[me], w, opts).unwrap()
+        });
+        assert_runs_equal(&lane, &sliced, &ctx);
+        let expect: Vec<u64> = x.iter().zip(&y).map(|(a, b)| a.wrapping_add(*b) & mask).collect();
+        assert_eq!(reconstruct_binary(&lane.outputs), expect, "{ctx}");
+    }
+}
+
+/// The lane-form public AND API keeps its classic semantics on a
+/// bitsliced party (element-wise ops are layout-agnostic), so mixed use
+/// is safe.
+#[test]
+fn lane_form_and_gates_work_on_bitsliced_party() {
+    let n = 64usize;
+    let mut prg = Prg::new(10, 0);
+    let x: Vec<u64> = prg.vec_u64(n);
+    let y: Vec<u64> = prg.vec_u64(n);
+    let xs = share_binary(&mut prg, &x, 2);
+    let ys = share_binary(&mut prg, &y, 2);
+    let run = run_parties_with(2, 42, |_| BitslicedKernels::default(), |p| {
+        let me = p.party();
+        p.and_gates(Phase::Circuit, &xs[me], &ys[me], 64).unwrap()
+    });
+    let z = reconstruct_binary(&run.outputs);
+    let expect: Vec<u64> = x.iter().zip(&y).map(|(a, b)| a & b).collect();
+    assert_eq!(z, expect);
+}
+
+/// The zero-allocation steady state holds in the bitsliced layout too:
+/// after one warmup ReLU, further rounds miss neither the scratch arena
+/// (plane buffers included) nor the transport pools, and check every
+/// buffer back in — the same invariants `relu_steady_state_is_allocation_free`
+/// pins for the lane layout.
+#[test]
+fn bitsliced_relu_steady_state_is_allocation_free() {
+    let parties = 2;
+    let mut prg = Prg::new(40, 0);
+    let n = 512;
+    let x: Vec<u64> = (0..n).map(|_| prg.next_u64() % (1 << 16)).collect();
+    let xs = share_arith(&mut prg, &x, parties);
+    let plan = ReluPlan::new(12, 4).unwrap();
+    let run = run_parties_with(parties, 6, |_| BitslicedKernels::default(), |p| {
+        let me = p.party();
+        let mut out = vec![0u64; n];
+        p.relu_into(&xs[me], plan, &mut out).unwrap();
+        let warm = p.arena_stats();
+        let warm_net = p.transport.pool_stats();
+        assert_eq!(warm.checkouts, warm.returns, "buffers leaked during warmup");
+        assert_eq!(warm_net.checkouts, warm_net.returns, "transport payloads leaked");
+        for round in 0..3 {
+            p.relu_into(&xs[me], plan, &mut out).unwrap();
+            let s = p.arena_stats();
+            assert_eq!(
+                s.alloc_misses, warm.alloc_misses,
+                "steady-state bitsliced relu allocated (round {round})"
+            );
+            assert_eq!(s.checkouts, s.returns, "unbalanced checkout (round {round})");
+            let t = p.transport.pool_stats();
+            assert_eq!(
+                t.alloc_misses, warm_net.alloc_misses,
+                "steady-state bitsliced relu allocated a transport payload (round {round})"
+            );
+            assert_eq!(t.checkouts, t.returns, "unbalanced payload checkout (round {round})");
+        }
+        out
+    });
+    let z = reconstruct_arith(&run.outputs);
+    for (xi, zi) in x.iter().zip(&z) {
+        assert!(*zi == 0 || zi == xi);
+    }
+}

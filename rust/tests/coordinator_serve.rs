@@ -3,6 +3,7 @@
 //! cleanly. Requires artifacts + micronet weights (skips otherwise).
 
 use hummingbird::coordinator::{Coordinator, ServeOptions};
+use hummingbird::gmw::kernels::BinLayout;
 use hummingbird::hummingbird::PlanSet;
 use hummingbird::model::{Archive, Backend, Dataset, ModelConfig, PlainExecutor};
 
@@ -56,6 +57,54 @@ fn serve_batches_and_matches_plaintext() {
     let bd = svc.metrics.breakdown();
     assert!(bd.relu_s > 0.0 && bd.linear_s > 0.0);
     svc.shutdown();
+}
+
+/// The `--layout bitsliced` service produces the same predictions and the
+/// same protocol bytes as the default lane layout (end-to-end through the
+/// batcher, executor and GMW engine).
+#[test]
+fn serve_bitsliced_layout_matches_lane_layout() {
+    let Some(repo) = ready() else { return };
+    let cfg = ModelConfig::load_named(&repo, MODEL).unwrap();
+    let dataset = Dataset::load(repo.join("artifacts"), &cfg.dataset).unwrap();
+
+    let run = |layout: BinLayout| {
+        let mut opts = ServeOptions::new(&repo, MODEL);
+        opts.plan = Some(PlanSet::uniform(cfg.relu_groups, 14, 6).unwrap());
+        opts.layout = layout;
+        let svc = Coordinator::start(opts).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            rxs.push(svc.infer_async(dataset.test.batch(i, i + 1).to_vec()).unwrap());
+        }
+        let preds: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().pred).collect();
+        let by = svc.trace.bytes_by_phase();
+        let protocol: u64 = by[..4].iter().sum();
+        svc.shutdown();
+        (preds, protocol)
+    };
+    let (lane_preds, lane_bytes) = run(BinLayout::LanePerU64);
+    let (sliced_preds, sliced_bytes) = run(BinLayout::Bitsliced);
+    assert_eq!(lane_preds, sliced_preds, "layout changed predictions");
+    assert_eq!(lane_bytes, sliced_bytes, "layout changed protocol bytes");
+}
+
+/// The XLA kernel backend is lane-per-u64 only; asking for the bitsliced
+/// layout on it must fail fast at boot (config error, before any artifact
+/// loading — so this runs without the artifacts directory).
+#[test]
+fn xla_backend_rejects_bitsliced_layout() {
+    let repo = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).to_path_buf();
+    let mut opts = ServeOptions::new(&repo, MODEL);
+    opts.gmw_backend = "xla".into();
+    opts.layout = BinLayout::Bitsliced;
+    match Coordinator::start(opts) {
+        Ok(_) => panic!("xla + bitsliced must be rejected at boot"),
+        Err(e) => {
+            let msg = e.to_string();
+            assert!(msg.contains("layout"), "unexpected error: {msg}");
+        }
+    }
 }
 
 #[test]
