@@ -129,6 +129,30 @@ fn main() {
     ] {
         let xa: Vec<u64> = (0..n).map(|_| prg.next_u64() % (1 << 16)).collect();
         let sh = share_arith(&mut prg, &xa, 2);
+        // Plane-native triple accounting for this window: both layouts
+        // consume the same dealer stream, so one run's TripleUsage
+        // quantifies the PRG/storage material. `lane_words_equiv` is what
+        // the legacy lane-form stream stored (one u64 per AND lane) — the
+        // plane/lane ratio is the ~w/64 savings the perf-gate summary
+        // tabulates.
+        let parties = 2u64;
+        let usage = run_parties(parties as usize, 31, |p| {
+            let me = p.party();
+            p.drelu(&sh[me], plan).unwrap();
+            p.dealer.usage()
+        })
+        .outputs[0];
+        bench.note_metric(&format!("triples/plane_words/{label}"), usage.bin_plane_words as f64);
+        bench.note_metric(
+            &format!("triples/lane_words_equiv/{label}"),
+            usage.bin_triple_lanes as f64,
+        );
+        // Binary-triple PRG draw only (2 plaintext + 3·(parties−1) split
+        // words per plane word) — usage.prg_bytes() would also count the
+        // daBit/arith draws, muting the w-scaling this metric exists to
+        // show.
+        let bin_prg_bytes = usage.bin_plane_words * (2 + 3 * (parties - 1)) * 8;
+        bench.note_metric(&format!("triples/prg_bytes/{label}"), bin_prg_bytes as f64);
         for t in [1usize, threads] {
             let lane = run_parties_with_threaded(2, 31, t, |_| RustKernels::default(), |p| {
                 let me = p.party();

@@ -72,6 +72,26 @@ fn main() {
         });
     }
 
+    // Plane-native Beaver triple expansion (the offline dealer cost): the
+    // stream draws only the w live bit-planes per 64-lane block, so the
+    // w6 row should run ~10x the w64 row's throughput.
+    {
+        use hummingbird::beaver::TtpDealer;
+        use hummingbird::gmw::bitsliced::plane_len;
+        use hummingbird::util::benchkit::black_box;
+        for w in [6u32, 64] {
+            let pl = plane_len(n, w);
+            let mut a = vec![0u64; pl];
+            let mut b = vec![0u64; pl];
+            let mut c = vec![0u64; pl];
+            let mut dealer = TtpDealer::new(3, 0, 2);
+            bench.bench_elems(&format!("bin_triples_planes/w{w}/{n}"), n as u64, || {
+                dealer.bin_triples_planes_into(w, n, 1, &mut a, &mut b, &mut c);
+                black_box(&c);
+            });
+        }
+    }
+
     // Beaver arithmetic multiplication (the incompressible Mult phase).
     {
         let xs = xs_a.clone();

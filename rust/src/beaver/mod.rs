@@ -17,10 +17,38 @@
 //!
 //! Three correlation types are produced:
 //! * arithmetic triples  (⟨a⟩, ⟨b⟩, ⟨c⟩) with c = a·b  (ring mult / ReLU's Mult step)
-//! * binary triples      (⟨a⟩, ⟨b⟩, ⟨c⟩) with c = a∧b  (AND gates in the adder circuit; one u64 = 64 bit-triples)
+//! * binary triples      (⟨a⟩, ⟨b⟩, ⟨c⟩) with c = a∧b  (AND gates in the adder circuit)
 //! * daBits              (⟨r⟩^B, ⟨r⟩^A) for a random bit r (the 1-bit B2A conversion)
+//!
+//! # Plane-native binary triple streams
+//!
+//! Binary triples are emitted directly in **packed wire order** — the
+//! bit-plane layout of [`crate::gmw::bitsliced`]: for a segment of `n`
+//! w-bit lanes the dealer produces [`plane_len`](crate::gmw::bitsliced::plane_len)`(n, w)
+//! = ceil(n/64)·w` words per share buffer, where plane `b` of block `k`
+//! carries bit `b` of lanes `[64k, 64k+64)`. Because bit-permutations
+//! commute with AND and XOR, `c = a ∧ b` holds plane-wise exactly as it
+//! held lane-wise — so the *same* stream serves both engine layouts: the
+//! bitsliced kernels consume it as-is (no per-round triple transposes) and
+//! the lane-per-u64 reference transposes it back with
+//! [`planes_to_lanes`](crate::gmw::bitsliced::planes_to_lanes).
+//!
+//! The payoff is PRG expansion cost: the old lane-form stream drew a full
+//! 64-bit word per w-bit lane and masked 64−w bits away; the plane stream
+//! draws only the `w` live bit-planes per 64-lane block — **~w/64 of the
+//! PRG material** (exact when `n` is a block multiple). At the paper's
+//! windows (w ≈ 6–8) that is a ~10× cut in ChaCha20 expansion *and* in
+//! offline triple storage. [`TripleUsage::prg_bytes`] reports the actual
+//! draw so the saving is testable.
+//!
+//! Both invariants of the plane representation are established at the
+//! source: planes at or above `w` don't exist, and tail lanes of a
+//! partial final block are zero in every share (shares and plaintext are
+//! masked to the live lanes — every party masks identically, so XOR
+//! reconstruction still satisfies `c = a ∧ b` on the live lanes).
 
 use crate::crypto::prg::Prg;
+use crate::gmw::bitsliced;
 
 /// This party's slice of a batch of arithmetic triples.
 #[derive(Debug, Clone)]
@@ -30,8 +58,10 @@ pub struct ArithTriples {
     pub c: Vec<u64>,
 }
 
-/// This party's slice of a batch of binary (AND) triples. Each u64 carries
-/// 64 independent bit-triples; callers mask to their lane width.
+/// This party's slice of a batch of binary (AND) triples in lane-per-u64
+/// form (each u64 carries one w-bit lane; [`TtpDealer::bin_triples`] uses
+/// w = 64, i.e. 64 independent bit-triples per word). Unpacked from the
+/// plane-native dealer stream.
 #[derive(Debug, Clone)]
 pub struct BinTriples {
     pub a: Vec<u64>,
@@ -48,21 +78,37 @@ pub struct DaBits {
     pub r_arith: Vec<u64>,
 }
 
-/// Cumulative count of correlations consumed (offline storage report).
+/// Cumulative count of correlations consumed (offline storage report) plus
+/// the PRG material the dealer expanded to produce them.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct TripleUsage {
     pub arith_triples: u64,
-    /// Counted in u64 *words* (64 bit-triples each).
-    pub bin_triple_words: u64,
+    /// Binary-triple material in bit-plane u64 *words per share buffer*
+    /// (`w` plane words cover one 64-lane block of w-bit triples). This is
+    /// what a party stores: 3 u64 per plane word.
+    pub bin_plane_words: u64,
+    /// Total w-bit AND lanes served. The legacy lane-form stream stored
+    /// (and drew) one u64 per lane, so `bin_plane_words / bin_triple_lanes`
+    /// is the plane-native storage/PRG savings ratio (~w/64).
+    pub bin_triple_lanes: u64,
     pub dabits: u64,
+    /// Total u64 words drawn from the dealer PRG across all correlation
+    /// types (plaintexts + share randomness). Snapshot of the underlying
+    /// [`Prg::u64s_drawn`] counter.
+    pub prg_words: u64,
 }
 
 impl TripleUsage {
     /// Bytes a party would need to store for this usage (3 u64 per arith
-    /// triple, 3 u64 per binary word, 2 u64 + 1 bit per daBit — we round the
-    /// daBit binary part up to a word per 64).
+    /// triple, 3 u64 per binary plane word, 2 u64 + 1 bit per daBit — we
+    /// round the daBit binary part up to a word per 64).
     pub fn storage_bytes(&self) -> u64 {
-        self.arith_triples * 24 + self.bin_triple_words * 24 + self.dabits * 9
+        self.arith_triples * 24 + self.bin_plane_words * 24 + self.dabits * 9
+    }
+
+    /// Bytes of PRG output the dealer expanded for this usage.
+    pub fn prg_bytes(&self) -> u64 {
+        self.prg_words * 8
     }
 }
 
@@ -88,7 +134,7 @@ impl TtpDealer {
     }
 
     pub fn usage(&self) -> TripleUsage {
-        self.usage
+        TripleUsage { prg_words: self.prg.u64s_drawn(), ..self.usage }
     }
 
     /// Draw arithmetic triples into caller-provided buffers (all the same
@@ -119,29 +165,82 @@ impl TtpDealer {
         out
     }
 
-    /// Draw binary-triple words into caller-provided buffers, masking each
-    /// share to `mask` as it is written (so shares of w-bit lanes stay
-    /// w-bit lanes with no extra pass). Every party masks identically, so
-    /// the XOR-reconstruction still satisfies `c = a ∧ b` on the masked
-    /// lanes. Stream consumption is identical to [`TtpDealer::bin_triples`].
-    pub fn bin_triples_into(&mut self, mask: u64, a: &mut [u64], b: &mut [u64], c: &mut [u64]) {
-        let n = a.len();
-        debug_assert!(b.len() == n && c.len() == n);
-        self.usage.bin_triple_words += n as u64;
-        for i in 0..n {
-            let pa = self.prg.next_u64();
-            let pb = self.prg.next_u64();
-            let pc = pa & pb;
-            a[i] = self.split_binary(pa) & mask;
-            b[i] = self.split_binary(pb) & mask;
-            c[i] = self.split_binary(pc) & mask;
+    /// Draw binary-triple shares **in bit-plane form** for `segs`
+    /// independent segments of `n_seg` w-bit lanes each (the engine's
+    /// round-buffer shape — e.g. the adder's batched stage is two segments
+    /// of `n` lanes). Each of `a`, `b`, `c` must be
+    /// `segs ·`[`bitsliced::plane_len`]`(n_seg, w)` words; segment `s`
+    /// occupies the word range `[s·plane_len, (s+1)·plane_len)`.
+    ///
+    /// This is the *primary* correlation stream: only the `w` live
+    /// bit-planes of each 64-lane block are expanded (~w/64 of the
+    /// lane-form PRG material), `c = a ∧ b` is computed plane-wise, and
+    /// both plane-layout invariants hold on every share buffer (no planes
+    /// at or above `w`; zero tail lanes in a partial final block). The
+    /// lane-form view ([`TtpDealer::bin_triples_into`]) unpacks this same
+    /// stream, so both engine layouts stay stream-synchronized.
+    ///
+    /// Allocation-free: the engine hands in arena-pooled buffers.
+    pub fn bin_triples_planes_into(
+        &mut self,
+        w: u32,
+        n_seg: usize,
+        segs: usize,
+        a: &mut [u64],
+        b: &mut [u64],
+        c: &mut [u64],
+    ) {
+        debug_assert!(w >= 1 && w <= 64);
+        let wu = w as usize;
+        let nblocks = bitsliced::blocks(n_seg);
+        let pl = nblocks * wu;
+        debug_assert!(a.len() == segs * pl && b.len() == segs * pl && c.len() == segs * pl);
+        self.usage.bin_plane_words += (segs * pl) as u64;
+        self.usage.bin_triple_lanes += (segs * n_seg) as u64;
+        for s in 0..segs {
+            for k in 0..nblocks {
+                // Live lanes of this block (the final block of a segment
+                // may be partial); shares are masked to them so the
+                // zero-tail-lanes invariant holds at the source.
+                let live = (n_seg - k * bitsliced::LANES_PER_BLOCK).min(64);
+                let tm = crate::ring::low_mask(live as u32);
+                let base = s * pl + k * wu;
+                for plane in 0..wu {
+                    let pa = self.prg.next_u64() & tm;
+                    let pb = self.prg.next_u64() & tm;
+                    let pc = pa & pb;
+                    a[base + plane] = self.split_binary_masked(pa, tm);
+                    b[base + plane] = self.split_binary_masked(pb, tm);
+                    c[base + plane] = self.split_binary_masked(pc, tm);
+                }
+            }
         }
     }
 
-    /// Draw `n` binary-triple words (64 bit-triples per word).
+    /// Draw binary triples as **lane-per-u64** shares of `a.len()` w-bit
+    /// lanes (one segment), by unpacking the plane-native stream — stream
+    /// consumption is identical to [`TtpDealer::bin_triples_planes_into`]
+    /// with `segs = 1`, so lane-form and plane-form consumers stay
+    /// synchronized. Allocates plane scratch internally; the engine hot
+    /// path draws planes straight into arena buffers and transposes them
+    /// itself instead of calling this.
+    pub fn bin_triples_into(&mut self, w: u32, a: &mut [u64], b: &mut [u64], c: &mut [u64]) {
+        let n = a.len();
+        debug_assert!(b.len() == n && c.len() == n);
+        let pl = bitsliced::plane_len(n, w);
+        let mut ap = vec![0u64; pl];
+        let mut bp = vec![0u64; pl];
+        let mut cp = vec![0u64; pl];
+        self.bin_triples_planes_into(w, n, 1, &mut ap, &mut bp, &mut cp);
+        bitsliced::planes_to_lanes(&ap, w, n, a, 1);
+        bitsliced::planes_to_lanes(&bp, w, n, b, 1);
+        bitsliced::planes_to_lanes(&cp, w, n, c, 1);
+    }
+
+    /// Draw `n` full-width binary-triple words (64 bit-triples per word).
     pub fn bin_triples(&mut self, n: usize) -> BinTriples {
         let mut out = BinTriples { a: vec![0; n], b: vec![0; n], c: vec![0; n] };
-        self.bin_triples_into(u64::MAX, &mut out.a, &mut out.b, &mut out.c);
+        self.bin_triples_into(64, &mut out.a, &mut out.b, &mut out.c);
         out
     }
 
@@ -186,14 +285,10 @@ impl TtpDealer {
         }
     }
 
-    /// Split a dealer-known value in the XOR domain; return my share.
-    #[inline]
-    fn split_binary(&mut self, x: u64) -> u64 {
-        self.split_binary_masked(x, u64::MAX)
-    }
-
-    /// XOR-domain split with share randomness restricted to `mask` (so
-    /// shares of a w-bit lane stay w-bit lanes).
+    /// XOR-domain split with share randomness restricted to `mask` (for
+    /// plane words of a partial block: the live-lane mask; for daBits: the
+    /// LSB). Every party masks identically, so reconstruction matches the
+    /// masked plaintext.
     #[inline]
     fn split_binary_masked(&mut self, x: u64, mask: u64) -> u64 {
         let mut acc = 0u64;
@@ -219,6 +314,8 @@ const DEALER_DOMAIN: u64 = 0xbea7_e270_5eed_0002;
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gmw::bitsliced::{plane_len, planes_to_lanes};
+    use crate::ring::low_mask;
 
     fn dealers(parties: usize) -> Vec<TtpDealer> {
         (0..parties).map(|p| TtpDealer::new(999, p, parties)).collect()
@@ -252,6 +349,105 @@ mod tests {
         }
     }
 
+    /// Plane-form stream: c = a ∧ b plane-wise, zero tail lanes in every
+    /// share of a partial final block, and no planes at or above w —
+    /// across party counts, segment shapes and widths.
+    #[test]
+    fn plane_triples_satisfy_c_eq_a_and_b_planewise() {
+        for parties in 2..=4 {
+            for w in [1u32, 6, 18, 64] {
+                for (n_seg, segs) in [(64usize, 1usize), (100, 2), (1, 3), (129, 1)] {
+                    let pl = plane_len(n_seg, w);
+                    let mut ds = dealers(parties);
+                    let batches: Vec<(Vec<u64>, Vec<u64>, Vec<u64>)> = ds
+                        .iter_mut()
+                        .map(|d| {
+                            let mut a = vec![0u64; segs * pl];
+                            let mut b = vec![0u64; segs * pl];
+                            let mut c = vec![0u64; segs * pl];
+                            d.bin_triples_planes_into(w, n_seg, segs, &mut a, &mut b, &mut c);
+                            (a, b, c)
+                        })
+                        .collect();
+                    let tail_live = n_seg - (n_seg - 1) / 64 * 64;
+                    let tail_mask = low_mask(tail_live as u32);
+                    for i in 0..segs * pl {
+                        let a: u64 = batches.iter().fold(0, |s, t| s ^ t.0[i]);
+                        let b: u64 = batches.iter().fold(0, |s, t| s ^ t.1[i]);
+                        let c: u64 = batches.iter().fold(0, |s, t| s ^ t.2[i]);
+                        assert_eq!(c, a & b, "parties={parties} w={w} n={n_seg} word={i}");
+                        // Tail lanes of each segment's final block are zero
+                        // in every *share*, not just the reconstruction.
+                        if (i % pl) / w as usize == pl / w as usize - 1 {
+                            for (p, t) in batches.iter().enumerate() {
+                                assert_eq!(t.0[i] & !tail_mask, 0, "dirty tail (a) party {p}");
+                                assert_eq!(t.1[i] & !tail_mask, 0, "dirty tail (b) party {p}");
+                                assert_eq!(t.2[i] & !tail_mask, 0, "dirty tail (c) party {p}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The lane-form view is the exact transpose of the plane-form stream
+    /// (same dealer state ⇒ same draw), so mixed-layout sessions stay
+    /// synchronized.
+    #[test]
+    fn lane_view_is_transpose_of_plane_stream() {
+        let w = 6u32;
+        let n = 130usize;
+        let mut d1 = TtpDealer::new(77, 0, 2);
+        let mut d2 = TtpDealer::new(77, 0, 2);
+        let mut la = vec![0u64; n];
+        let mut lb = vec![0u64; n];
+        let mut lc = vec![0u64; n];
+        d1.bin_triples_into(w, &mut la, &mut lb, &mut lc);
+        let pl = plane_len(n, w);
+        let (mut pa, mut pb, mut pc) = (vec![0u64; pl], vec![0u64; pl], vec![0u64; pl]);
+        d2.bin_triples_planes_into(w, n, 1, &mut pa, &mut pb, &mut pc);
+        let mut back = vec![0u64; n];
+        planes_to_lanes(&pa, w, n, &mut back, 1);
+        assert_eq!(back, la);
+        planes_to_lanes(&pc, w, n, &mut back, 1);
+        assert_eq!(back, lc);
+        assert!(la.iter().all(|v| *v <= low_mask(w)), "lane shares exceed width");
+        assert_eq!(d1.usage(), d2.usage(), "views must consume identical streams");
+    }
+
+    /// The headline regression pin: PRG material drawn for binary triples
+    /// scales with the window width w, not with the 64-bit word — w=1
+    /// draws 1/64 of the w=64 material, and w=64 matches the lane-form
+    /// cost of one word per lane.
+    #[test]
+    fn plane_stream_prg_draw_scales_with_width() {
+        let n = 4096usize; // 64 full blocks: ratios are exact
+        let parties = 2;
+        let draw = |w: u32| -> u64 {
+            let mut d = TtpDealer::new(5, 0, parties);
+            let pl = plane_len(n, w);
+            let (mut a, mut b, mut c) = (vec![0u64; pl], vec![0u64; pl], vec![0u64; pl]);
+            d.bin_triples_planes_into(w, n, 1, &mut a, &mut b, &mut c);
+            d.usage().prg_words
+        };
+        let d1 = draw(1);
+        let d6 = draw(6);
+        let d64 = draw(64);
+        assert_eq!(d6, 6 * d1, "draw must be linear in w");
+        assert_eq!(d64, 64 * d1, "draw must be linear in w");
+        // Per plane word: 2 plaintext draws + 3 splits × (parties−1).
+        let per_word = 2 + 3 * (parties as u64 - 1);
+        assert_eq!(d64, n as u64 * per_word, "w=64 must equal the lane-form draw");
+        // The lane-form *view* inherits the savings (satellite fix: no more
+        // draw-64-mask-to-w): at w=1 it draws 1/64 of the lane-count words.
+        let mut d = TtpDealer::new(5, 0, parties);
+        let (mut a, mut b, mut c) = (vec![0u64; n], vec![0u64; n], vec![0u64; n]);
+        d.bin_triples_into(1, &mut a, &mut b, &mut c);
+        assert_eq!(d.usage().prg_words, d1);
+        assert_eq!(d.usage().prg_words, n as u64 * per_word / 64);
+    }
+
     #[test]
     fn dabits_are_consistent_bits() {
         for parties in 2..=3 {
@@ -273,9 +469,21 @@ mod tests {
         d.dabits(3);
         let u = d.usage();
         assert_eq!(u.arith_triples, 10);
-        assert_eq!(u.bin_triple_words, 5);
+        // 5 lanes at w=64: one partial block ⇒ 64 plane words per buffer.
+        assert_eq!(u.bin_plane_words, 64);
+        assert_eq!(u.bin_triple_lanes, 5);
         assert_eq!(u.dabits, 3);
         assert!(u.storage_bytes() > 0);
+        assert!(u.prg_bytes() > 0);
+        // Reduced-width triples store ~w/64 of the lane-form material.
+        let mut d = TtpDealer::new(1, 0, 2);
+        let pl = plane_len(640, 6);
+        let (mut a, mut b, mut c) = (vec![0u64; pl], vec![0u64; pl], vec![0u64; pl]);
+        d.bin_triples_planes_into(6, 640, 1, &mut a, &mut b, &mut c);
+        let u = d.usage();
+        assert_eq!(u.bin_plane_words, 60); // 10 blocks × 6 planes
+        assert_eq!(u.bin_triple_lanes, 640);
+        assert!(u.bin_plane_words < u.bin_triple_lanes);
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! CI perf gate: compare this run's `BENCH_<suite>.json` trajectory files
+//! against the committed baselines and fail on median regressions.
+//!
+//! ```text
+//! bench_diff --baseline ../benchmarks/baselines --current .. \
+//!            [--threshold 25] [--summary $GITHUB_STEP_SUMMARY] [--suites a,b]
+//! ```
+//!
+//! * `--current` — directory holding the just-produced `BENCH_*.json`
+//!   files (the repo root in the bench-smoke job).
+//! * `--baseline` — directory of committed baselines with the same file
+//!   names. A missing file, or one flagged `"bootstrap": true`, is
+//!   reported but never gates — that's the bootstrap path until a real
+//!   bench-smoke artifact is committed (see ROADMAP "Perf trajectory").
+//! * `--threshold` — gate threshold in percent (default 25: a suite row
+//!   fails when its median exceeds baseline × 1.25).
+//! * `--summary` — file to *append* the markdown report to; defaults to
+//!   `$GITHUB_STEP_SUMMARY` when set. The report includes per-suite
+//!   verdict tables plus the lane-vs-bitsliced and triples-PRG ratio
+//!   tables when the ablation suite carries them.
+//!
+//! Exit codes: 0 ok / informational, 1 regression detected, 2 usage or
+//! I/O error. The comparison logic itself lives in
+//! `hummingbird::util::benchkit` and is unit-tested there.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use hummingbird::util::benchkit::{diff_suite, markdown_layout_table, markdown_suite_table};
+use hummingbird::util::cli::Args;
+use hummingbird::util::json::{self, Json};
+
+fn main() {
+    std::process::exit(run());
+}
+
+fn run() -> i32 {
+    let args = Args::from_env();
+    let current_dir = PathBuf::from(args.opt("current").unwrap_or("."));
+    let baseline_dir = PathBuf::from(args.opt("baseline").unwrap_or("benchmarks/baselines"));
+    let threshold_pct: f64 = match args.opt("threshold").unwrap_or("25").parse() {
+        Ok(t) => t,
+        Err(_) => {
+            eprintln!("bench_diff: --threshold must be a number (percent)");
+            return 2;
+        }
+    };
+    let threshold = threshold_pct / 100.0;
+    let only: Option<Vec<String>> =
+        args.opt("suites").map(|s| s.split(',').map(|x| x.trim().to_string()).collect());
+
+    let mut files = match bench_files(&current_dir) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("bench_diff: scanning {}: {e}", current_dir.display());
+            return 2;
+        }
+    };
+    files.sort();
+    if let Some(only) = &only {
+        files.retain(|(suite, _)| only.iter().any(|o| o == suite));
+    }
+    if files.is_empty() {
+        eprintln!(
+            "bench_diff: no BENCH_*.json files under {} — did the bench suites run?",
+            current_dir.display()
+        );
+        return 2;
+    }
+
+    let mut summary = String::from("## Bench perf gate\n\n");
+    let mut regressed = 0usize;
+    let mut gated = 0usize;
+    for (suite, path) in &files {
+        let current = match json::parse_file(path) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("bench_diff: {e}");
+                return 2;
+            }
+        };
+        let base_path = baseline_dir.join(format!("BENCH_{suite}.json"));
+        let baseline: Option<Json> = if base_path.is_file() {
+            match json::parse_file(&base_path) {
+                Ok(j) => Some(j),
+                Err(e) => {
+                    eprintln!("bench_diff: {e}");
+                    return 2;
+                }
+            }
+        } else {
+            None
+        };
+        let diff = diff_suite(suite, baseline.as_ref(), &current);
+        if !diff.bootstrap {
+            gated += 1;
+        }
+        let regs = diff.regressions(threshold);
+        for r in &regs {
+            eprintln!(
+                "REGRESSION {suite}/{}: {:.3e}s -> {:.3e}s ({:.2}x > {:.2}x allowed)",
+                r.name,
+                r.baseline_median_s,
+                r.current_median_s,
+                r.ratio(),
+                1.0 + threshold
+            );
+        }
+        regressed += regs.len();
+        summary.push_str(&markdown_suite_table(&diff, threshold));
+        if let Some(t) = markdown_layout_table(&current) {
+            summary.push_str(&t);
+        }
+    }
+    summary.push_str(&format!(
+        "\n{} suite(s) compared, {} gated, {} regression(s) at +{threshold_pct}% threshold.\n",
+        files.len(),
+        gated,
+        regressed
+    ));
+    print!("{summary}");
+
+    let summary_path = args
+        .opt("summary")
+        .map(PathBuf::from)
+        .or_else(|| std::env::var_os("GITHUB_STEP_SUMMARY").map(PathBuf::from));
+    if let Some(p) = summary_path {
+        // Append: GitHub concatenates step-summary writes, and local users
+        // may aggregate multiple invocations into one file.
+        let r = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&p)
+            .and_then(|mut f| f.write_all(summary.as_bytes()));
+        if let Err(e) = r {
+            eprintln!("bench_diff: writing summary {}: {e}", p.display());
+            return 2;
+        }
+    }
+
+    if regressed > 0 {
+        1
+    } else {
+        0
+    }
+}
+
+/// `(suite, path)` for every `BENCH_<suite>.json` directly under `dir`.
+fn bench_files(dir: &Path) -> std::io::Result<Vec<(String, PathBuf)>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        let suite = match name.strip_prefix("BENCH_").and_then(|n| n.strip_suffix(".json")) {
+            Some(s) => s.to_string(),
+            None => continue,
+        };
+        out.push((suite, path));
+    }
+    Ok(out)
+}

@@ -9,6 +9,12 @@ pub struct Prg {
     core: ChaCha20,
     /// Cached second Box-Muller output.
     gauss_spare: Option<f64>,
+    /// u64 words handed out via [`Prg::next_u64`] / [`Prg::fill_u64`] —
+    /// the units the Beaver dealer draws in. Lets consumers (e.g.
+    /// `beaver::TripleUsage`) report exactly how much PRG material a
+    /// protocol expanded, which is the quantity the plane-native triple
+    /// stream shrinks by ~w/64.
+    drawn_u64s: u64,
 }
 
 impl Prg {
@@ -16,7 +22,7 @@ impl Prg {
     /// as `Prg::new(shared_seed, stream_id)` so both ends generate identical
     /// masks without communication.
     pub fn new(seed: u64, stream: u64) -> Self {
-        Prg { core: ChaCha20::from_seed(seed, stream), gauss_spare: None }
+        Prg { core: ChaCha20::from_seed(seed, stream), gauss_spare: None, drawn_u64s: 0 }
     }
 
     /// Seed from OS entropy (`/dev/urandom`); falls back to a time-derived
@@ -34,6 +40,7 @@ impl Prg {
 
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
+        self.drawn_u64s += 1;
         self.core.next_u64()
     }
     #[inline]
@@ -41,7 +48,14 @@ impl Prg {
         self.core.next_u32()
     }
     pub fn fill_u64(&mut self, out: &mut [u64]) {
+        self.drawn_u64s += out.len() as u64;
         self.core.fill_u64(out)
+    }
+
+    /// Total u64 words drawn through [`Prg::next_u64`] / [`Prg::fill_u64`]
+    /// since construction (clones inherit the count of their source).
+    pub fn u64s_drawn(&self) -> u64 {
+        self.drawn_u64s
     }
     pub fn fill_bytes(&mut self, out: &mut [u8]) {
         self.core.fill_bytes(out)
@@ -118,6 +132,21 @@ mod tests {
         assert!(bits.iter().all(|b| *b <= 1));
         let ones: u64 = bits.iter().sum();
         assert!(ones > 64 && ones < 192, "suspicious bit balance: {ones}");
+    }
+
+    #[test]
+    fn draw_counter_tracks_u64_words() {
+        let mut p = Prg::new(4, 4);
+        assert_eq!(p.u64s_drawn(), 0);
+        p.next_u64();
+        let mut buf = [0u64; 7];
+        p.fill_u64(&mut buf);
+        assert_eq!(p.u64s_drawn(), 8);
+        // Clones carry the count forward independently.
+        let mut q = p.clone();
+        q.next_u64();
+        assert_eq!(q.u64s_drawn(), 9);
+        assert_eq!(p.u64s_drawn(), 8);
     }
 
     #[test]

@@ -74,7 +74,12 @@ impl Measurement {
     /// Analytic communication time on a network profile, with per-round
     /// bytes scaled by `byte_scale` (projection to the paper's batch 512:
     /// bytes grow linearly with batch, round count does not).
-    pub fn comm_time(&self, net: &NetworkProfile, rounds_trace: &[(u64, u64)], byte_scale: u64) -> f64 {
+    pub fn comm_time(
+        &self,
+        net: &NetworkProfile,
+        rounds_trace: &[(u64, u64)],
+        byte_scale: u64,
+    ) -> f64 {
         rounds_trace.iter().map(|(b, _)| net.round_time(*b * byte_scale)).sum()
     }
 }
@@ -188,7 +193,11 @@ impl FigCtx {
     }
 
     /// Measure one MPC inference batch (2 parties, local hub).
-    pub fn measure(&mut self, model: &str, variant: &str) -> Result<(Measurement, Vec<(u64, u64)>)> {
+    pub fn measure(
+        &mut self,
+        model: &str,
+        variant: &str,
+    ) -> Result<(Measurement, Vec<(u64, u64)>)> {
         let key = (model.to_string(), variant.to_string());
         if let Some(m) = self.cache.get(&key) {
             return Ok(m.clone());

@@ -185,7 +185,10 @@ pub fn ks_add_with_into<T: Transport, K: KernelBackend>(
             let mut v = party.scratch_words(halves * n);
             party.kernels_stage_operands(&g, &p, s, w, last, &mut u, &mut v);
             let mut z = party.scratch_words(halves * n);
-            party.and_gates_into(Phase::Circuit, &u, &v, w, &mut z)?;
+            // Segment shape (n, halves) mirrors the bitsliced circuit's
+            // `and_gates_planes_into` call so both layouts consume the
+            // plane-native dealer stream identically.
+            party.and_gates_lanes_seg_into(Phase::Circuit, &u, &v, w, n, halves, &mut z)?;
             if last {
                 // z = P ∧ (G ≪ s)
                 for (gi, zi) in g.iter_mut().zip(&z) {

@@ -56,6 +56,29 @@ use crate::util::tuning;
 /// Lanes per bit-plane block (the machine word width).
 pub const LANES_PER_BLOCK: usize = 64;
 
+thread_local! {
+    /// Whole-buffer lane↔plane transpose operations performed by this
+    /// thread (see [`thread_transpose_ops`]).
+    static TRANSPOSE_OPS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Number of whole-buffer layout conversions ([`lanes_to_planes`] /
+/// [`planes_to_lanes`] calls) performed by the calling thread since it
+/// started. Diagnostic counter for the steady-state tests that pin the
+/// plane-native triple path: with the dealer emitting triples in packed
+/// wire order, a bitsliced AND round must perform **zero** of these —
+/// only the A2B operand staging transposes remain on the DReLU hot path.
+/// Each party runs on its own harness thread, so deltas of this counter
+/// are per-party and immune to concurrent tests.
+pub fn thread_transpose_ops() -> u64 {
+    TRANSPOSE_OPS.with(|c| c.get())
+}
+
+#[inline]
+fn note_transpose_op() {
+    TRANSPOSE_OPS.with(|c| c.set(c.get() + 1));
+}
+
 /// Number of 64-lane blocks needed for `n` lanes.
 #[inline]
 pub fn blocks(n: usize) -> usize {
@@ -104,6 +127,7 @@ fn eff_threads(nblocks: usize, threads: usize) -> usize {
 /// invariants. `planes.len()` must be [`plane_len`]`(lanes.len(), w)`.
 pub fn lanes_to_planes(lanes: &[u64], w: u32, planes: &mut [u64], threads: usize) {
     debug_assert!(w >= 1 && w <= 64);
+    note_transpose_op();
     let n = lanes.len();
     let nblocks = blocks(n);
     let wu = w as usize;
@@ -131,6 +155,7 @@ pub fn lanes_to_planes(lanes: &[u64], w: u32, planes: &mut [u64], threads: usize
 /// bits set, high bits zero). Inverse of [`lanes_to_planes`].
 pub fn planes_to_lanes(planes: &[u64], w: u32, n: usize, lanes: &mut [u64], threads: usize) {
     debug_assert!(w >= 1 && w <= 64);
+    note_transpose_op();
     let nblocks = blocks(n);
     let wu = w as usize;
     debug_assert_eq!(planes.len(), nblocks * wu);

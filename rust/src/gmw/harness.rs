@@ -353,7 +353,9 @@ mod tests {
         let x: Vec<u64> = (0..n).map(|_| prg.next_u64() % (1 << 16)).collect();
         let xs = share_arith(&mut prg, &x, parties);
         let mut bytes = Vec::new();
-        for plan in [ReluPlan::BASELINE, ReluPlan::new(20, 0).unwrap(), ReluPlan::new(14, 8).unwrap()] {
+        let plans =
+            [ReluPlan::BASELINE, ReluPlan::new(20, 0).unwrap(), ReluPlan::new(14, 8).unwrap()];
+        for plan in plans {
             let run = run_parties(parties, 4, |p| {
                 let me = p.party();
                 p.relu(&xs[me], plan).unwrap()

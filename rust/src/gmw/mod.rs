@@ -58,9 +58,20 @@
 //!   advantage at the paper's windows (w ≈ 6–8) on wide batches. The wire
 //!   format is **byte-for-byte identical** to the classic path: packing a
 //!   plane block is a fused 64×64 bit-matrix transpose written straight
-//!   into the pooled wire buffer, and lane-form Beaver triples from the
-//!   (layout-agnostic) dealer stream are transposed at the round boundary
-//!   so the masked openings match the reference bit-for-bit.
+//!   into the pooled wire buffer.
+//!
+//! The Beaver triple stream is **plane-native** in both modes
+//! ([`TtpDealer::bin_triples_planes_into`]): the dealer emits binary
+//! triples directly in packed wire order, expanding only the `w` live
+//! bit-planes per 64-lane block (~w/64 of the lane-form PRG material —
+//! reported by `TripleUsage::prg_bytes`). Bit-permutations commute with
+//! AND/XOR, so `c = a ∧ b` holds stream-wise in either view. The
+//! bitsliced AND path consumes the stream as-is — its former three
+//! per-round `lanes_to_planes` triple transposes are gone — while the
+//! lane path unpacks each segment with [`bitsliced::planes_to_lanes`].
+//! Both layouts draw with identical `(w, n_seg, segs)` shapes at every
+//! AND round, so they hold the same logical triples and stay
+//! wire-byte-identical.
 //!
 //! Ownership rules for plane buffers are the arena's usual ones — checked
 //! out per protocol step, fully overwritten, returned on completion — with
@@ -398,16 +409,53 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         w: u32,
         out: &mut [u64],
     ) -> Result<()> {
-        debug_assert_eq!(u.len(), v.len());
-        debug_assert_eq!(out.len(), u.len());
         let n = u.len();
-        let mask = ring::low_mask(w);
+        self.and_gates_lanes_seg_into(phase, u, v, w, n, 1, out)
+    }
+
+    /// Lane-layout Beaver AND over `segs` logical segments of `n_seg`
+    /// lanes each (`u`/`v`/`out` are the flat concatenation). The segment
+    /// shape exists purely to keep the **dealer stream** aligned with the
+    /// bitsliced path: the plane-native triple stream is blocked per
+    /// segment ([`TtpDealer::bin_triples_planes_into`]), so the lane
+    /// reference must consume it with the same `(w, n_seg, segs)` at every
+    /// AND round and unpack each segment with
+    /// [`bitsliced::planes_to_lanes`] — the transposes the bitsliced
+    /// engine no longer pays. Both layouts then hold identical triple lane
+    /// values, which is what keeps the masked openings (and therefore the
+    /// wire bytes) bit-identical across layouts.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn and_gates_lanes_seg_into(
+        &mut self,
+        phase: Phase,
+        u: &[u64],
+        v: &[u64],
+        w: u32,
+        n_seg: usize,
+        segs: usize,
+        out: &mut [u64],
+    ) -> Result<()> {
+        let n = u.len();
+        debug_assert!(n == segs * n_seg && v.len() == n && out.len() == n);
+        let pl = bitsliced::plane_len(n_seg, w);
+        let threads = self.threads;
+        let mut tap = self.arena.take_words(segs * pl);
+        let mut tbp = self.arena.take_words(segs * pl);
+        let mut tcp = self.arena.take_words(segs * pl);
+        self.dealer.bin_triples_planes_into(w, n_seg, segs, &mut tap, &mut tbp, &mut tcp);
         let mut ta = self.arena.take_words(n);
         let mut tb = self.arena.take_words(n);
         let mut tc = self.arena.take_words(n);
-        // Triples are 64-bit words; the dealer masks them to the lane width
-        // as it writes (no extra pass, no extra allocation — §Perf L3).
-        self.dealer.bin_triples_into(mask, &mut ta, &mut tb, &mut tc);
+        for s in 0..segs {
+            let ln = s * n_seg..(s + 1) * n_seg;
+            let pn = s * pl..(s + 1) * pl;
+            bitsliced::planes_to_lanes(&tap[pn.clone()], w, n_seg, &mut ta[ln.clone()], threads);
+            bitsliced::planes_to_lanes(&tbp[pn.clone()], w, n_seg, &mut tb[ln.clone()], threads);
+            bitsliced::planes_to_lanes(&tcp[pn], w, n_seg, &mut tc[ln], threads);
+        }
+        self.arena.put_words(tcp);
+        self.arena.put_words(tbp);
+        self.arena.put_words(tap);
         let mut de = self.arena.take_words(2 * n);
         self.kernels.and_open(u, v, &ta, &tb, &mut de);
         let mut opened = self.arena.take_words(2 * n);
@@ -432,11 +480,14 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
 
     /// Secure AND over bit-plane buffers (`segs` plane-form segments of
     /// `n_seg` lanes each — see [`GmwParty::open_planes_into`] for the
-    /// segment convention). The dealer hands out the *same* lane-form
-    /// triples as the classic path (the correlation stream is
-    /// layout-agnostic); they are transposed into plane form at the round
-    /// boundary, so the masked openings — and therefore the wire bytes —
-    /// are bit-identical to [`GmwParty::and_gates_into`] on the equivalent
+    /// segment convention). The dealer's plane-native triple stream
+    /// ([`TtpDealer::bin_triples_planes_into`]) is consumed **directly**
+    /// — the triples arrive already in packed wire order, so the round
+    /// boundary performs zero triple transposes (pinned by
+    /// `bitsliced_and_path_performs_zero_triple_transposes`). The lane
+    /// reference unpacks the same stream with the same `(w, n_seg, segs)`
+    /// shape, so the masked openings — and therefore the wire bytes — are
+    /// bit-identical to [`GmwParty::and_gates_into`] on the equivalent
     /// lane vectors. The AND/XOR work itself runs 64 lanes per word.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn and_gates_planes_into(
@@ -451,26 +502,10 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
     ) -> Result<()> {
         let pl = bitsliced::plane_len(n_seg, w);
         debug_assert!(u.len() == segs * pl && v.len() == segs * pl && out.len() == segs * pl);
-        let total = segs * n_seg;
-        let mask = ring::low_mask(w);
-        let threads = self.threads;
-        let mut ta = self.arena.take_words(total);
-        let mut tb = self.arena.take_words(total);
-        let mut tc = self.arena.take_words(total);
-        self.dealer.bin_triples_into(mask, &mut ta, &mut tb, &mut tc);
         let mut tap = self.arena.take_words(segs * pl);
         let mut tbp = self.arena.take_words(segs * pl);
         let mut tcp = self.arena.take_words(segs * pl);
-        for s in 0..segs {
-            let lanes = s * n_seg..(s + 1) * n_seg;
-            let planes = s * pl..(s + 1) * pl;
-            bitsliced::lanes_to_planes(&ta[lanes.clone()], w, &mut tap[planes.clone()], threads);
-            bitsliced::lanes_to_planes(&tb[lanes.clone()], w, &mut tbp[planes.clone()], threads);
-            bitsliced::lanes_to_planes(&tc[lanes], w, &mut tcp[planes], threads);
-        }
-        self.arena.put_words(tc);
-        self.arena.put_words(tb);
-        self.arena.put_words(ta);
+        self.dealer.bin_triples_planes_into(w, n_seg, segs, &mut tap, &mut tbp, &mut tcp);
         let mut de = self.arena.take_words(2 * segs * pl);
         self.kernels.and_open(u, v, &tap, &tbp, &mut de);
         let mut opened = self.arena.take_words(2 * segs * pl);

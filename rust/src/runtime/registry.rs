@@ -155,9 +155,9 @@ impl Manifest {
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
-        self.models
-            .get(name)
-            .ok_or_else(|| Error::config(format!("model '{name}' not in manifest (run `make artifacts`)")))
+        self.models.get(name).ok_or_else(|| {
+            Error::config(format!("model '{name}' not in manifest (run `make artifacts`)"))
+        })
     }
 }
 

@@ -2,8 +2,20 @@
 //! offline). Used by the `[[bench]]` targets with `harness = false`.
 //!
 //! Features: warmup, adaptive iteration count targeting a measurement time,
-//! mean/median/stddev/p95 reporting, throughput annotation, and machine-
-//! readable JSON output so EXPERIMENTS.md numbers can be regenerated.
+//! mean/median/stddev/p95 reporting, throughput annotation, scalar side
+//! metrics (e.g. triples-PRG byte counts), and machine-readable JSON output
+//! so EXPERIMENTS.md numbers can be regenerated.
+//!
+//! The module also hosts the **trajectory comparison** logic behind the CI
+//! perf gate (the `bench_diff` bin): [`diff_suite`] matches a run's
+//! `BENCH_<suite>.json` rows against a committed baseline by row name and
+//! flags median regressions beyond a threshold; [`markdown_suite_table`]
+//! and [`markdown_layout_table`] render the result for
+//! `$GITHUB_STEP_SUMMARY`, including the lane-vs-bitsliced layout ratios
+//! and the plane-native-triples PRG savings when the suite carries them.
+//! Baselines marked `"bootstrap": true` (or missing) are reported but
+//! never gate — that is how the repo bootstraps before the first
+//! toolchain-equipped bench run lands real numbers.
 
 use std::time::{Duration, Instant};
 
@@ -58,6 +70,9 @@ pub struct Bench {
     /// Number of samples to split the measurement into.
     pub sample_count: usize,
     results: Vec<BenchResult>,
+    /// Named scalar side metrics (deterministic quantities a suite wants in
+    /// its trajectory file next to the timing rows — byte counts, ratios).
+    metrics: Vec<(String, f64)>,
 }
 
 impl Default for Bench {
@@ -72,10 +87,24 @@ impl Bench {
         let quick = std::env::var("HB_BENCH_QUICK").ok().as_deref() == Some("1");
         Bench {
             measure_time: if quick { Duration::from_millis(300) } else { Duration::from_secs(2) },
-            warmup_time: if quick { Duration::from_millis(100) } else { Duration::from_millis(500) },
+            warmup_time: if quick {
+                Duration::from_millis(100)
+            } else {
+                Duration::from_millis(500)
+            },
             sample_count: if quick { 10 } else { 30 },
             results: Vec::new(),
+            metrics: Vec::new(),
         }
+    }
+
+    /// Record a named scalar metric into the suite's trajectory file
+    /// (`metrics` object in `BENCH_<suite>.json`). Deterministic values
+    /// only — the perf gate treats timing rows statistically but prints
+    /// metrics verbatim (e.g. `triples/prg_bytes/w6`).
+    pub fn note_metric(&mut self, name: &str, value: f64) {
+        println!("{name:<44} metric: {value}");
+        self.metrics.push((name.to_string(), value));
     }
 
     /// Run one benchmark. `f` is invoked `iters` times per sample; the
@@ -146,7 +175,8 @@ impl Bench {
             line.push_str(&format!("  thrpt: {:.3e} elem/s", e as f64 / r.mean()));
         }
         if let Some(b) = r.throughput_bytes {
-            line.push_str(&format!("  thrpt: {}/s", stats::fmt_bytes((b as f64 / r.mean()) as u64)));
+            let per_s = stats::fmt_bytes((b as f64 / r.mean()) as u64);
+            line.push_str(&format!("  thrpt: {per_s}/s"));
         }
         println!("{line}");
     }
@@ -170,11 +200,14 @@ impl Bench {
         // run time (HB_BENCH_DIR override, then the build-time repo root if
         // it still exists, then cwd) so a relocated binary still lands the
         // file somewhere visible — and failures are reported, not dropped.
+        let metrics =
+            Json::obj(self.metrics.iter().map(|(k, v)| (k.as_str(), Json::Num(*v))).collect());
         let doc = Json::obj(vec![
             ("suite", Json::str(suite)),
             ("quick", Json::Bool(std::env::var("HB_BENCH_QUICK").ok().as_deref() == Some("1"))),
             ("host_threads", Json::Int(crate::util::threadpool::default_threads() as i64)),
             ("sample_count", Json::Int(self.sample_count as i64)),
+            ("metrics", metrics),
             ("results", results),
         ]);
         let root = std::env::var_os("HB_BENCH_DIR")
@@ -193,6 +226,214 @@ impl Bench {
             Ok(()) => println!("(trajectory written to {})", bench_path.display()),
             Err(e) => eprintln!("warning: could not write {}: {e}", bench_path.display()),
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trajectory comparison — the CI perf gate (driven by `bin/bench_diff`).
+// ---------------------------------------------------------------------------
+
+/// One timing row matched by name across a baseline and a current
+/// `BENCH_<suite>.json`.
+#[derive(Debug, Clone)]
+pub struct RowDiff {
+    pub name: String,
+    pub baseline_median_s: f64,
+    pub current_median_s: f64,
+}
+
+impl RowDiff {
+    /// current / baseline — above 1.0 means slower than the baseline.
+    pub fn ratio(&self) -> f64 {
+        self.current_median_s / self.baseline_median_s
+    }
+}
+
+/// Comparison of one suite's trajectory file against its committed
+/// baseline.
+#[derive(Debug, Clone)]
+pub struct SuiteDiff {
+    pub suite: String,
+    /// True when the baseline is absent or flagged `"bootstrap": true`:
+    /// the diff is reported but never gates. This is how the repo
+    /// bootstraps — commit placeholder baselines first, replace them with
+    /// a real bench-smoke artifact when one exists.
+    pub bootstrap: bool,
+    pub rows: Vec<RowDiff>,
+    /// Row names present on only one side (renames/additions — surfaced
+    /// in the report, never gated).
+    pub only_in_baseline: Vec<String>,
+    pub only_in_current: Vec<String>,
+}
+
+impl SuiteDiff {
+    /// Rows whose median regressed beyond `threshold` (0.25 = +25%).
+    /// Empty for bootstrap baselines.
+    pub fn regressions(&self, threshold: f64) -> Vec<&RowDiff> {
+        if self.bootstrap {
+            return Vec::new();
+        }
+        self.rows.iter().filter(|r| r.ratio() > 1.0 + threshold).collect()
+    }
+}
+
+/// Extract `(name, median_s)` pairs from a trajectory document, skipping
+/// malformed rows (the gate must degrade to "no match", not panic, on a
+/// hand-edited baseline).
+fn medians_by_name(doc: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    let Some(results) = doc.opt("results") else { return out };
+    let Ok(rows) = results.as_arr() else { return out };
+    for r in rows {
+        if let (Ok(name), Ok(median)) = (r.get_str("name"), r.get_f64("median_s")) {
+            out.push((name.to_string(), median));
+        }
+    }
+    out
+}
+
+/// Match `current` (a parsed `BENCH_<suite>.json`) against `baseline`
+/// (same format, `None` = no committed baseline). Rows match by exact
+/// name; rows with a non-positive baseline median are dropped (no
+/// meaningful ratio).
+pub fn diff_suite(suite: &str, baseline: Option<&Json>, current: &Json) -> SuiteDiff {
+    let bootstrap = match baseline {
+        None => true,
+        Some(b) => b.opt("bootstrap").and_then(|v| v.as_bool().ok()).unwrap_or(false),
+    };
+    let base_rows = baseline.map(medians_by_name).unwrap_or_default();
+    let cur_rows = medians_by_name(current);
+    let mut rows = Vec::new();
+    let mut only_in_current = Vec::new();
+    for (name, cur) in &cur_rows {
+        match base_rows.iter().find(|(b, _)| b == name) {
+            Some((_, base)) if *base > 0.0 => rows.push(RowDiff {
+                name: name.clone(),
+                baseline_median_s: *base,
+                current_median_s: *cur,
+            }),
+            Some(_) => {}
+            None => only_in_current.push(name.clone()),
+        }
+    }
+    let only_in_baseline = base_rows
+        .iter()
+        .filter(|(b, _)| !cur_rows.iter().any(|(c, _)| c == b))
+        .map(|(b, _)| b.clone())
+        .collect();
+    SuiteDiff { suite: suite.to_string(), bootstrap, rows, only_in_baseline, only_in_current }
+}
+
+/// Render one suite's diff as a GitHub-flavoured markdown section (the CI
+/// job appends these to `$GITHUB_STEP_SUMMARY`).
+pub fn markdown_suite_table(d: &SuiteDiff, threshold: f64) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "### `{}`", d.suite);
+    if d.bootstrap {
+        let _ = writeln!(
+            out,
+            "_bootstrap baseline — informational only, not gating; commit a real \
+             bench-smoke artifact to arm the gate_\n"
+        );
+    }
+    if d.rows.is_empty() {
+        let _ = writeln!(out, "(no matched rows)\n");
+    } else {
+        let _ = writeln!(out, "| row | baseline | current | ratio | verdict |");
+        let _ = writeln!(out, "|---|---:|---:|---:|---|");
+        for r in &d.rows {
+            let verdict = if d.bootstrap {
+                "—"
+            } else if r.ratio() > 1.0 + threshold {
+                "**REGRESSED**"
+            } else {
+                "ok"
+            };
+            let _ = writeln!(
+                out,
+                "| `{}` | {} | {} | {:.2}× | {} |",
+                r.name,
+                crate::util::stats::fmt_secs(r.baseline_median_s),
+                crate::util::stats::fmt_secs(r.current_median_s),
+                r.ratio(),
+                verdict
+            );
+        }
+        let _ = writeln!(out);
+    }
+    if !d.only_in_current.is_empty() {
+        let _ = writeln!(out, "new rows (no baseline): {}\n", d.only_in_current.join(", "));
+    }
+    if !d.only_in_baseline.is_empty() {
+        let _ = writeln!(out, "rows missing vs baseline: {}\n", d.only_in_baseline.join(", "));
+    }
+    out
+}
+
+/// Render the lane-vs-bitsliced layout ratio table plus the plane-native
+/// triples PRG table from a suite document that carries them (the
+/// ablation suite). Returns `None` when the document has neither.
+pub fn markdown_layout_table(doc: &Json) -> Option<String> {
+    use std::fmt::Write as _;
+    let rows = medians_by_name(doc);
+    let mut out = String::new();
+    let mut pairs = Vec::new();
+    for (name, lane_median) in &rows {
+        if let Some(rest) = name.find("/lane/").map(|i| (i, &name[i + 6..])) {
+            let sliced_name = format!("{}/bitsliced/{}", &name[..rest.0], rest.1);
+            if let Some((_, sliced_median)) = rows.iter().find(|(n, _)| *n == sliced_name) {
+                pairs.push((name.clone(), *lane_median, *sliced_median));
+            }
+        }
+    }
+    if !pairs.is_empty() {
+        let _ = writeln!(out, "#### lane vs bitsliced (median speedup of bitsliced)");
+        let _ = writeln!(out, "| row (lane form) | lane | bitsliced | lane/bitsliced |");
+        let _ = writeln!(out, "|---|---:|---:|---:|");
+        for (name, lane, sliced) in &pairs {
+            let _ = writeln!(
+                out,
+                "| `{}` | {} | {} | {:.2}× |",
+                name,
+                crate::util::stats::fmt_secs(*lane),
+                crate::util::stats::fmt_secs(*sliced),
+                lane / sliced.max(1e-12)
+            );
+        }
+        let _ = writeln!(out);
+    }
+    // Plane-native triple stream: PRG material vs the legacy lane-form
+    // stream (one word per AND lane), per window label.
+    if let Some(metrics) = doc.opt("metrics").and_then(|m| m.as_obj().ok()) {
+        let mut trows = Vec::new();
+        for (k, v) in metrics {
+            if let Some(label) = k.strip_prefix("triples/plane_words/") {
+                let plane = v.as_f64().unwrap_or(0.0);
+                let lanes = metrics
+                    .get(&format!("triples/lane_words_equiv/{label}"))
+                    .and_then(|j| j.as_f64().ok())
+                    .unwrap_or(0.0);
+                if plane > 0.0 && lanes > 0.0 {
+                    trows.push((label.to_string(), plane, lanes));
+                }
+            }
+        }
+        if !trows.is_empty() {
+            let _ = writeln!(out, "#### Beaver triple PRG material (plane-native stream)");
+            let _ = writeln!(out, "| window | plane words | lane-form words | plane/lane |");
+            let _ = writeln!(out, "|---|---:|---:|---:|");
+            for (label, plane, lanes) in &trows {
+                let _ =
+                    writeln!(out, "| {label} | {plane} | {lanes} | {:.3} |", plane / lanes);
+            }
+            let _ = writeln!(out);
+        }
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
     }
 }
 
@@ -223,6 +464,7 @@ mod tests {
             warmup_time: Duration::from_millis(5),
             sample_count: 5,
             results: Vec::new(),
+            metrics: Vec::new(),
         };
         let mut acc = 0u64;
         let r = b.bench_elems("noop", 1, || {
@@ -232,5 +474,93 @@ mod tests {
         assert!(r.mean() > 0.0);
         let j = r.to_json();
         assert!(j.get_f64("mean_s").unwrap() > 0.0);
+    }
+
+    fn doc(rows: &[(&str, f64)], bootstrap: bool) -> Json {
+        let mut src = String::from("{");
+        if bootstrap {
+            src.push_str("\"bootstrap\": true,");
+        }
+        src.push_str("\"results\":[");
+        for (i, (name, median)) in rows.iter().enumerate() {
+            if i > 0 {
+                src.push(',');
+            }
+            src.push_str(&format!("{{\"name\":\"{name}\",\"median_s\":{median}}}"));
+        }
+        src.push_str("]}");
+        crate::util::json::parse(&src).unwrap()
+    }
+
+    /// The perf gate's core decision: >threshold median growth on a
+    /// name-matched row is a regression; faster/equal rows and unmatched
+    /// rows are not.
+    #[test]
+    fn diff_flags_regressions_beyond_threshold() {
+        let base = doc(&[("a/1", 1.0), ("b/1", 1.0), ("c/1", 1.0), ("gone", 1.0)], false);
+        let cur = doc(&[("a/1", 1.20), ("b/1", 1.30), ("c/1", 0.5), ("new", 9.0)], false);
+        let d = diff_suite("micro", Some(&base), &cur);
+        assert!(!d.bootstrap);
+        assert_eq!(d.rows.len(), 3);
+        let regs = d.regressions(0.25);
+        assert_eq!(regs.len(), 1, "only the +30% row regresses at 25%");
+        assert_eq!(regs[0].name, "b/1");
+        assert_eq!(d.only_in_current, vec!["new".to_string()]);
+        assert_eq!(d.only_in_baseline, vec!["gone".to_string()]);
+        // Exactly-at-threshold is not a regression (strictly greater) —
+        // pinned with exactly-representable values (2.5/2.0 = 1.25).
+        let base = doc(&[("edge", 2.0)], false);
+        let cur = doc(&[("edge", 2.5)], false);
+        let d = diff_suite("micro", Some(&base), &cur);
+        assert!(d.regressions(0.25).is_empty());
+        assert_eq!(d.regressions(0.2).len(), 1);
+    }
+
+    /// Bootstrap (or absent) baselines report but never gate.
+    #[test]
+    fn diff_bootstrap_baselines_never_gate() {
+        let base = doc(&[("a/1", 0.0001)], true);
+        let cur = doc(&[("a/1", 99.0)], false);
+        let d = diff_suite("micro", Some(&base), &cur);
+        assert!(d.bootstrap);
+        assert!(d.regressions(0.25).is_empty());
+        let d = diff_suite("micro", None, &cur);
+        assert!(d.bootstrap && d.rows.is_empty());
+        // Malformed baselines degrade to "no match", not a panic.
+        let junk = crate::util::json::parse("{\"results\": \"oops\"}").unwrap();
+        let d = diff_suite("micro", Some(&junk), &cur);
+        assert!(d.rows.is_empty());
+        assert_eq!(d.only_in_current.len(), 1);
+    }
+
+    /// The markdown report carries the verdicts and the layout/PRG ratio
+    /// tables the bench-smoke job posts to the step summary.
+    #[test]
+    fn markdown_report_renders_verdicts_and_ratio_tables() {
+        let base = doc(&[("x", 1.0)], false);
+        let cur = doc(&[("x", 2.0)], false);
+        let d = diff_suite("micro", Some(&base), &cur);
+        let md = markdown_suite_table(&d, 0.25);
+        assert!(md.contains("REGRESSED"), "{md}");
+        assert!(md.contains("2.00×"), "{md}");
+
+        let abl = crate::util::json::parse(
+            r#"{
+              "metrics": {
+                "triples/plane_words/w6": 1536.0,
+                "triples/lane_words_equiv/w6": 16384.0
+              },
+              "results": [
+                {"name": "drelu_layout/lane/w6/16384/t1", "median_s": 0.010},
+                {"name": "drelu_layout/bitsliced/w6/16384/t1", "median_s": 0.004}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let md = markdown_layout_table(&abl).expect("layout table");
+        assert!(md.contains("2.50×"), "{md}");
+        assert!(md.contains("0.094"), "plane/lane ratio 1536/16384: {md}");
+        // A doc with neither pairs nor metrics yields no table.
+        assert!(markdown_layout_table(&doc(&[("plain", 1.0)], false)).is_none());
     }
 }

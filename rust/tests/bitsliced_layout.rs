@@ -10,7 +10,7 @@
 use hummingbird::crypto::prg::Prg;
 use hummingbird::gmw::harness::{run_parties_with, run_parties_with_threaded, HarnessRun};
 use hummingbird::gmw::kernels::{BitslicedKernels, RustKernels};
-use hummingbird::gmw::{adder, ReluPlan};
+use hummingbird::gmw::{adder, bitsliced, ReluPlan};
 use hummingbird::net::accounting::Phase;
 use hummingbird::ring;
 use hummingbird::sharing::{reconstruct_arith, reconstruct_binary, share_arith, share_binary};
@@ -211,6 +211,102 @@ fn lane_form_and_gates_work_on_bitsliced_party() {
     let z = reconstruct_binary(&run.outputs);
     let expect: Vec<u64> = x.iter().zip(&y).map(|(a, b)| a & b).collect();
     assert_eq!(z, expect);
+}
+
+/// Plane-native triple equivalence (the shared dealer stream): per-party
+/// output shares, wire bytes, round counts *and* the full `TripleUsage`
+/// (plane words, lanes served, PRG words drawn) are identical across
+/// layouts — for the paper-relevant widths incl. w = 1 and w = 64, lane
+/// counts that are not block multiples, 2/3 parties and 1/N threads.
+/// Equality is pinned layout-vs-layout rather than against golden values:
+/// the plane-native stream intentionally differs from the old lane-form
+/// dealer stream.
+#[test]
+fn plane_native_triples_equivalent_across_layouts() {
+    let default_threads = hummingbird::util::threadpool::default_threads();
+    for parties in [2usize, 3] {
+        for w in [1u32, 6, 18, 64] {
+            for n in [1usize, 65, 321] {
+                let mut prg = Prg::new(4000 + w as u64, n as u64 + parties as u64);
+                let mask = ring::low_mask(w);
+                let x: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+                let y: Vec<u64> = (0..n).map(|_| prg.next_u64() & mask).collect();
+                let xs: Vec<Vec<u64>> = share_binary(&mut prg, &x, parties)
+                    .iter()
+                    .map(|s| s.iter().map(|v| v & mask).collect())
+                    .collect();
+                let ys: Vec<Vec<u64>> = share_binary(&mut prg, &y, parties)
+                    .iter()
+                    .map(|s| s.iter().map(|v| v & mask).collect())
+                    .collect();
+                for threads in [1usize, default_threads] {
+                    let ctx = format!("triples parties={parties} w={w} n={n} threads={threads}");
+                    let (lane, sliced) = run_both_layouts!(parties, 17, threads, |p| {
+                        let me = p.party();
+                        let sum = adder::ks_add(p, &xs[me], &ys[me], w).unwrap();
+                        (sum, p.dealer.usage())
+                    });
+                    // Outputs include each party's TripleUsage snapshot, so
+                    // this pins identical stream consumption per party.
+                    assert_runs_equal(&lane, &sliced, &ctx);
+                    let sums: Vec<Vec<u64>> =
+                        lane.outputs.iter().map(|(s, _)| s.clone()).collect();
+                    let expect: Vec<u64> =
+                        x.iter().zip(&y).map(|(a, b)| a.wrapping_add(*b) & mask).collect();
+                    assert_eq!(reconstruct_binary(&sums), expect, "{ctx}");
+                    let usage = lane.outputs[0].1;
+                    if w > 1 {
+                        assert!(usage.bin_triple_lanes > 0, "{ctx}");
+                        // The PRG-savings invariant: reduced widths draw
+                        // fewer plane words than AND lanes served.
+                        if w < 64 && n >= 65 {
+                            assert!(
+                                usage.bin_plane_words < usage.bin_triple_lanes,
+                                "{ctx}: plane_words={} lanes={}",
+                                usage.bin_plane_words,
+                                usage.bin_triple_lanes
+                            );
+                        }
+                    }
+                    if threads == default_threads && default_threads == 1 {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Steady-state pin for the tentpole's deleted work: with the dealer
+/// emitting triples in packed wire order, a warm bitsliced DReLU performs
+/// exactly `parties` lane→plane conversions per call (the A2B operand
+/// staging) and **zero** triple transposes at AND round boundaries. The
+/// counter is thread-local and each party runs on its own thread, so the
+/// delta is exact even with other tests running concurrently.
+#[test]
+fn bitsliced_and_path_performs_zero_triple_transposes() {
+    for parties in [2usize, 3] {
+        let n = 321usize;
+        let mut prg = Prg::new(90, parties as u64);
+        let x: Vec<u64> = (0..n).map(|_| prg.next_u64() % (1 << 16)).collect();
+        let xs = share_arith(&mut prg, &x, parties);
+        let plan = ReluPlan::new(12, 4).unwrap();
+        run_parties_with(parties, 11, |_| BitslicedKernels::default(), |p| {
+            let me = p.party();
+            let mut out = vec![0u64; n];
+            // Warmup fills the arena pools.
+            p.drelu_into(&xs[me], plan, &mut out).unwrap();
+            let t0 = bitsliced::thread_transpose_ops();
+            p.drelu_into(&xs[me], plan, &mut out).unwrap();
+            let steady = bitsliced::thread_transpose_ops() - t0;
+            assert_eq!(
+                steady, parties as u64,
+                "bitsliced DReLU must transpose only the {parties} A2B operands \
+                 (zero triple transposes), got {steady}"
+            );
+            out
+        });
+    }
 }
 
 /// The zero-allocation steady state holds in the bitsliced layout too:

@@ -269,7 +269,20 @@ fn prop_beaver_usage_accounting() {
         // ReLU = a2b (1 + per-stage ANDs) + daBits + 1 arith mult.
         assert_eq!(u.arith_triples, n as u64, "one arith triple per element");
         assert_eq!(u.dabits, n as u64, "one daBit per element");
-        assert!(u.bin_triple_words > 0);
+        assert!(u.bin_plane_words > 0);
+        assert!(u.bin_triple_lanes > 0);
+        assert!(u.prg_bytes() > 0, "PRG draw must be accounted");
+        if k - m < 64 {
+            // Plane-native stream: reduced windows store/draw less than one
+            // word per AND lane (the legacy lane-form stream's cost).
+            assert!(
+                u.bin_plane_words < u.bin_triple_lanes,
+                "w={} plane_words={} lanes={}",
+                k - m,
+                u.bin_plane_words,
+                u.bin_triple_lanes
+            );
+        }
         assert_eq!(run.outputs[0], run.outputs[1], "usage symmetric");
     }
 }
