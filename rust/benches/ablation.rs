@@ -15,6 +15,7 @@
 //! Rows report bytes and rounds (the quantities the network model prices)
 //! plus local wall time on the in-process hub.
 
+use hummingbird::beaver::schedule::TripleSchedule;
 use hummingbird::crypto::prg::Prg;
 use hummingbird::gmw::adder::{self, AdderOptions};
 use hummingbird::gmw::harness::{run_parties, run_parties_with_threaded};
@@ -139,7 +140,7 @@ fn main() {
         let usage = run_parties(parties as usize, 31, |p| {
             let me = p.party();
             p.drelu(&sh[me], plan).unwrap();
-            p.dealer.usage()
+            p.triple_usage()
         })
         .outputs[0];
         bench.note_metric(&format!("triples/plane_words/{label}"), usage.bin_plane_words as f64);
@@ -186,6 +187,67 @@ fn main() {
                 break; // single-core host: the t rows would be identical
             }
         }
+    }
+
+    // Offline/online split ablation: the same ReLU with triples expanded
+    // synchronously inside the AND rounds vs prefetched on a background
+    // producer (the online-phase view the paper's timing model assumes).
+    // Outputs, wire bytes and TripleUsage are pinned equal; the row pair
+    // quantifies what moving PRG expansion off the critical path buys at
+    // each window. Both rows run PASSES ReLUs per iteration so the on-row's
+    // one-time costs (producer spawn + wait_warm's first expansion) amortize
+    // the same way a warm serving loop amortizes them — a cycling schedule
+    // keeps the producer one pass ahead throughout, like the coordinator.
+    // `triples/offline_prg_bytes/*` records the material the offline phase
+    // provisions per ReLU batch.
+    const PASSES: usize = 4;
+    println!("\n== offline/online split (ReLU, prefetch on vs off, n={n}, {PASSES} passes) ==");
+    for (label, plan) in [("w6", ReluPlan::new(10, 4).unwrap()), ("w64", ReluPlan::BASELINE)] {
+        let xa: Vec<u64> = (0..n).map(|_| prg.next_u64() % (1 << 16)).collect();
+        let sh = share_arith(&mut prg, &xa, 2);
+        let schedule = TripleSchedule::for_relu(n, plan, 2);
+        bench.note_metric(
+            &format!("triples/offline_prg_bytes/{label}"),
+            schedule.predicted_usage(2).prg_bytes() as f64,
+        );
+        let run_passes = |prefetch: bool| {
+            run_parties(2, 63, |p| {
+                if prefetch {
+                    p.enable_prefetch(TripleSchedule::for_relu(n, plan, 2), true);
+                }
+                let me = p.party();
+                let mut out = vec![0u64; n];
+                for _ in 0..PASSES {
+                    p.relu_into(&sh[me], plan, &mut out).unwrap();
+                }
+                if prefetch {
+                    assert_eq!(
+                        p.prefetch_stats().unwrap().fallback_ops,
+                        0,
+                        "online path expanded PRG material"
+                    );
+                }
+                (out, p.triple_usage())
+            })
+        };
+        let sync = run_passes(false);
+        let pf = run_passes(true);
+        assert_eq!(sync.outputs, pf.outputs, "prefetch diverged ({label})");
+        assert_eq!(sync.trace.total_bytes(), pf.trace.total_bytes(), "bytes ({label})");
+        assert_eq!(sync.trace.total_rounds(), pf.trace.total_rounds(), "rounds ({label})");
+        println!(
+            "{label:<6} {:>10} bytes {:>4} rounds  offline PRG material: {}",
+            sync.trace.total_bytes(),
+            sync.trace.total_rounds(),
+            stats::fmt_bytes(schedule.predicted_usage(2).prg_bytes()),
+        );
+        let elems = (PASSES * n) as u64;
+        bench.bench_elems(&format!("relu_prefetch/off/{label}/{n}"), elems, || {
+            run_passes(false);
+        });
+        bench.bench_elems(&format!("relu_prefetch/on/{label}/{n}"), elems, || {
+            run_passes(true);
+        });
     }
 
     bench.dump_json("ablation");

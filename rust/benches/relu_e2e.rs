@@ -1,6 +1,7 @@
 //! End-to-end ReLU layer benchmark across plan variants and backends —
 //! the per-layer numbers behind Figs 1/7/8, plus the Rust-vs-XLA kernel
-//! backend ablation (DESIGN.md §Perf).
+//! backend ablation (DESIGN.md §6 indexes where each figure's numbers
+//! come from).
 
 use hummingbird::crypto::prg::Prg;
 use hummingbird::gmw::harness::{run_parties, run_parties_threaded, run_parties_with};

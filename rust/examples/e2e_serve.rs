@@ -67,27 +67,35 @@ fn main() -> anyhow::Result<()> {
     println!("throughput (this CPU):   {:.2} samples/s", n as f64 / wall);
     println!("accuracy:                {:.2}%", 100.0 * correct as f64 / n as f64);
     println!("agreement w/ plaintext:  {:.2}%", 100.0 * agree_plain as f64 / n as f64);
-    println!("p50 / p95 latency:       {} / {}",
+    println!(
+        "p50 / p95 latency:       {} / {}",
         stats::fmt_secs(stats::median(&latencies)),
-        stats::fmt_secs(stats::percentile(&latencies, 95.0)));
-    println!("communication (party 0): {} in {} rounds",
+        stats::fmt_secs(stats::percentile(&latencies, 95.0))
+    );
+    println!(
+        "communication (party 0): {} in {} rounds",
         stats::fmt_bytes(svc.trace.total_bytes()),
-        svc.trace.total_rounds());
+        svc.trace.total_rounds()
+    );
 
     let bd = svc.metrics.breakdown();
-    println!("\nexecutor breakdown: linear {}, relu {}, other {}",
+    println!(
+        "\nexecutor breakdown: linear {}, relu {}, other {}",
         stats::fmt_secs(bd.linear_s),
         stats::fmt_secs(bd.relu_s),
-        stats::fmt_secs(bd.other_s));
+        stats::fmt_secs(bd.other_s)
+    );
 
     println!("\nprojected end-to-end time on the paper's network setups:");
     for net in [NetworkProfile::high_bw(), NetworkProfile::lan(), NetworkProfile::wan()] {
         let p = project(&svc.trace, bd.total(), &net, &ComputeProfile::a100());
-        println!("  {:8} {:>12}  ({} comm + {} compute)",
+        println!(
+            "  {:8} {:>12}  ({} comm + {} compute)",
             p.network,
             stats::fmt_secs(p.total_s()),
             stats::fmt_secs(p.comm_time_s),
-            stats::fmt_secs(p.compute_time_s));
+            stats::fmt_secs(p.compute_time_s)
+        );
     }
     svc.shutdown();
     println!("\nOK — full stack (coordinator → GMW → PJRT/Pallas artifacts) verified.");

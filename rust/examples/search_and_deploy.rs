@@ -66,16 +66,9 @@ fn main() -> anyhow::Result<()> {
     let mut ctx = FigCtx::new(root);
     let lan = NetworkProfile::lan();
     // Baseline measurement for the speedup column.
-    let variants: Vec<(&str, hummingbird::hummingbird::PlanSet)> = plans
-        .iter()
-        .map(|(l, p)| (*l, p.clone()))
-        .collect();
     let (mb, rb) = ctx.measure(model, "baseline")?;
     let tb: f64 = rb.iter().map(|(b, _)| lan.round_time(*b)).sum::<f64>() + mb.compute_s;
-    println!(
-        "{:<12} {:>12} {:>8} {:>12}",
-        "plan", "bytes", "rounds", "LAN speedup"
-    );
+    println!("{:<12} {:>12} {:>8} {:>12}", "plan", "bytes", "rounds", "LAN speedup");
     println!(
         "{:<12} {:>12} {:>8} {:>12}",
         "baseline",
@@ -83,7 +76,7 @@ fn main() -> anyhow::Result<()> {
         mb.total_rounds,
         "1.00x"
     );
-    for (label, plan) in variants {
+    for (label, plan) in plans {
         // Save as a temp named variant so the ctx cache key is stable.
         let name = format!("ex_{}", label.replace([' ', '/'], "_"));
         let path = ctx.root.join("configs/searched").join(format!("{model}_{name}.json"));
@@ -98,6 +91,9 @@ fn main() -> anyhow::Result<()> {
             tb / t
         );
     }
-    println!("\n(speedups here use raw CPU compute; `hummingbird figures` applies the\n calibrated GPU-profile methodology described in EXPERIMENTS.md)");
+    println!(
+        "\n(speedups here use raw CPU compute; `hummingbird figures` applies the\n \
+         calibrated GPU-profile methodology described in EXPERIMENTS.md)"
+    );
     Ok(())
 }

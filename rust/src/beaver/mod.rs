@@ -46,9 +46,76 @@
 //! partial final block are zero in every share (shares and plaintext are
 //! masked to the live lanes — every party masks identically, so XOR
 //! reconstruction still satisfies `c = a ∧ b` on the live lanes).
+//!
+//! # Offline/online phase split
+//!
+//! The engine draws correlations through the [`TripleSource`] trait, with
+//! two providers (DESIGN.md §3):
+//!
+//! * [`TtpDealer`] — synchronous: PRG expansion happens inline in the
+//!   protocol step that needs the triples (simple, but the expansion cost
+//!   sits on the online critical path).
+//! * [`prefetch::PrefetchDealer`] — the offline phase proper: a background
+//!   producer expands the same stream ahead of time along a predicted
+//!   [`schedule::TripleSchedule`], double-buffered so the online path only
+//!   swaps in ready buffers. Outputs, wire bytes and [`TripleUsage`] are
+//!   bit-identical to the synchronous dealer because both expand the same
+//!   deterministic stream in the same order.
+//!
+//! [`schedule::TripleSchedule`] predicts the per-round draw shapes of a
+//! protocol run (one ReLU, or a whole model forward pass) and prices them
+//! with [`TripleUsage`] accounting before anything is expanded.
 
 use crate::crypto::prg::Prg;
 use crate::gmw::bitsliced;
+
+pub mod prefetch;
+pub mod schedule;
+
+/// A source of Beaver correlations for one party: the engine's only
+/// provisioning interface (`GmwParty` draws through a boxed
+/// `TripleSource`). Implementations must expand (or replay) the *same
+/// deterministic dealer stream* in draw order — the per-party streams stay
+/// synchronized purely through protocol determinism, so a source that
+/// reorders or resamples draws would silently break reconstruction.
+///
+/// Implemented by the synchronous [`TtpDealer`], the background
+/// [`prefetch::PrefetchDealer`] and the diagnostic
+/// [`schedule::Recorder`].
+pub trait TripleSource: Send {
+    /// Fill `a`, `b`, `c` (equal lengths) with this party's shares of
+    /// fresh arithmetic triples (c = a·b over Z/2^64).
+    fn arith_triples_into(&mut self, a: &mut [u64], b: &mut [u64], c: &mut [u64]);
+
+    /// Fill `a`, `b`, `c` with plane-native binary triple shares for
+    /// `segs` segments of `n_seg` w-bit lanes each (see
+    /// [`TtpDealer::bin_triples_planes_into`] for the exact layout).
+    fn bin_triples_planes_into(
+        &mut self,
+        w: u32,
+        n_seg: usize,
+        segs: usize,
+        a: &mut [u64],
+        b: &mut [u64],
+        c: &mut [u64],
+    );
+
+    /// Fill `r_bin`/`r_arith` (equal lengths) with daBit shares.
+    fn dabits_into(&mut self, r_bin: &mut [u64], r_arith: &mut [u64]);
+
+    /// Cumulative usage as observed at the *consumer*: between protocol
+    /// steps this must equal what a synchronous dealer would report at the
+    /// same stream position, regardless of how far ahead an offline
+    /// producer has run.
+    fn usage(&self) -> TripleUsage;
+
+    /// Prefetch traffic counters, for sources that split the offline
+    /// phase off ([`prefetch::PrefetchDealer`]); `None` for synchronous
+    /// sources.
+    fn prefetch_stats(&self) -> Option<prefetch::PrefetchStats> {
+        None
+    }
+}
 
 /// This party's slice of a batch of arithmetic triples.
 #[derive(Debug, Clone)]
@@ -305,6 +372,33 @@ impl TtpDealer {
         } else {
             mine
         }
+    }
+}
+
+/// The synchronous provider: every draw expands the PRG inline.
+impl TripleSource for TtpDealer {
+    fn arith_triples_into(&mut self, a: &mut [u64], b: &mut [u64], c: &mut [u64]) {
+        TtpDealer::arith_triples_into(self, a, b, c)
+    }
+
+    fn bin_triples_planes_into(
+        &mut self,
+        w: u32,
+        n_seg: usize,
+        segs: usize,
+        a: &mut [u64],
+        b: &mut [u64],
+        c: &mut [u64],
+    ) {
+        TtpDealer::bin_triples_planes_into(self, w, n_seg, segs, a, b, c)
+    }
+
+    fn dabits_into(&mut self, r_bin: &mut [u64], r_arith: &mut [u64]) {
+        TtpDealer::dabits_into(self, r_bin, r_arith)
+    }
+
+    fn usage(&self) -> TripleUsage {
+        TtpDealer::usage(self)
     }
 }
 

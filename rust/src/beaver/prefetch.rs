@@ -1,0 +1,489 @@
+//! Background triple prefetch: the offline phase of the offline/online
+//! split (DESIGN.md §3).
+//!
+//! A [`PrefetchDealer`] owns a producer thread that expands the
+//! deterministic dealer stream **in schedule order** ahead of the online
+//! protocol: each [`DrawOp`] of the provisioning [`TripleSchedule`] is
+//! expanded into a set of share buffers, double-buffered through a bounded
+//! channel so the producer runs one AND round ahead of the consumer. The
+//! engine's draw calls ([`TripleSource`]) then just swap in the pre-filled
+//! buffers — **no PRG expansion happens on the online critical path**
+//! (pinned by [`PrefetchStats::fallback_ops`]` == 0` in the tests).
+//!
+//! Correctness contract: the PRG stream is sequential, so prefetched
+//! material is bit-identical to inline expansion **iff** the protocol's
+//! draws arrive in exactly the scheduled order with exactly the scheduled
+//! shapes. The consumer asserts this op-by-op; a mismatch means the
+//! schedule prediction is wrong and the streams have already diverged, so
+//! it panics rather than silently desynchronizing the parties. Running off
+//! the *end* of a non-cycling schedule is not an error: the dealer is
+//! recovered from the producer and the remaining draws are served
+//! synchronously (transparent fallback, counted in
+//! [`PrefetchStats::fallback_ops`]).
+//!
+//! Buffer discipline mirrors the engine's arena: the producer checks its
+//! share buffers out of a private size-classed [`Arena`], consumed buffer
+//! sets are recycled back over a return channel, and once one schedule
+//! cycle plus the lookahead is warm the producer allocates nothing —
+//! provisioning memory is O(lookahead), not O(rounds)
+//! ([`PrefetchStats::producer_arena`]).
+//!
+//! Usage accounting stays consumer-ordered: each prefetched entry carries
+//! the dealer's [`TripleUsage`] snapshot taken right after *its own*
+//! expansion, and [`TripleSource::usage`] reports the snapshot of the last
+//! entry the consumer actually took — so `usage()` observed between
+//! protocol steps is bit-identical to the synchronous dealer's, even
+//! while the producer runs ahead.
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::thread::JoinHandle;
+
+use super::schedule::{DrawOp, TripleSchedule};
+use super::{TripleSource, TripleUsage, TtpDealer};
+use crate::util::arena::{Arena, ArenaStats};
+
+/// Completed draw ops the bounded hand-off channel holds: the consumer's
+/// current op plus one ready op (classic double buffering; the producer
+/// may additionally be expanding the next op, so at most `LOOKAHEAD + 2`
+/// buffer sets circulate per size class).
+const LOOKAHEAD: usize = 1;
+
+/// One expanded draw: the op it satisfies, its filled share buffers (3 for
+/// triples, 2 for daBits) and the producer-side accounting snapshots taken
+/// right after expansion.
+struct Prefetched {
+    op: DrawOp,
+    bufs: Vec<Vec<u64>>,
+    usage: TripleUsage,
+    producer_arena: ArenaStats,
+}
+
+/// Counters describing a [`PrefetchDealer`]'s traffic.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PrefetchStats {
+    /// Draws served from pre-filled buffers (the offline phase did the
+    /// expansion).
+    pub prefetched_ops: u64,
+    /// Draws served by inline expansion after the (non-cycling) schedule
+    /// ran out. Zero on a correctly provisioned run — the acceptance
+    /// criterion of the offline/online split.
+    pub fallback_ops: u64,
+    /// The producer thread's buffer-pool counters as of the last consumed
+    /// entry (allocation misses must stay O(schedule), not O(rounds)).
+    pub producer_arena: ArenaStats,
+}
+
+/// A [`TripleSource`] that precomputes the dealer stream on a background
+/// thread (see the module docs). Construct with [`PrefetchDealer::spawn`]
+/// and install with
+/// [`GmwParty::enable_prefetch`](crate::gmw::GmwParty::enable_prefetch)
+/// (or `set_triple_source`) **before any draw**: the prefetcher restarts
+/// the dealer stream from the beginning.
+///
+/// Prefetching is a purely local decision — each party expands its *own*
+/// stream, so a session may freely mix prefetching and synchronous
+/// parties; outputs and wire bytes are identical either way.
+pub struct PrefetchDealer {
+    ready: Option<Receiver<Prefetched>>,
+    recycle: Option<Sender<Vec<Vec<u64>>>>,
+    warm: Option<Receiver<()>>,
+    worker: Option<JoinHandle<TtpDealer>>,
+    /// Engaged once the non-cycling schedule is exhausted: the recovered
+    /// dealer, positioned exactly at the end of the expanded stream.
+    fallback: Option<TtpDealer>,
+    last_usage: TripleUsage,
+    stats: PrefetchStats,
+}
+
+impl PrefetchDealer {
+    /// Start the producer thread expanding `schedule` from `dealer`'s
+    /// current stream position (normally a fresh dealer). With `cycle` the
+    /// schedule repeats forever — the serving mode, where every admitted
+    /// batch replays the same per-pass draw sequence; without it the
+    /// producer stops after one pass and later draws fall back to inline
+    /// expansion.
+    pub fn spawn(dealer: TtpDealer, schedule: TripleSchedule, cycle: bool) -> PrefetchDealer {
+        let (ready_tx, ready_rx) = sync_channel::<Prefetched>(LOOKAHEAD);
+        let (recycle_tx, recycle_rx) = channel::<Vec<Vec<u64>>>();
+        let (warm_tx, warm_rx) = channel::<()>();
+        let worker = std::thread::Builder::new()
+            .name("hb-prefetch".into())
+            .spawn(move || producer(dealer, schedule, cycle, ready_tx, recycle_rx, warm_tx))
+            .expect("spawn prefetch producer");
+        PrefetchDealer {
+            ready: Some(ready_rx),
+            recycle: Some(recycle_tx),
+            warm: Some(warm_rx),
+            worker: Some(worker),
+            fallback: None,
+            last_usage: TripleUsage::default(),
+            stats: PrefetchStats::default(),
+        }
+    }
+
+    /// Block until the producer has expanded (at least) the first
+    /// scheduled op, so the first online round pays zero expansion wait.
+    /// The coordinator calls this before a party thread admits work.
+    pub fn wait_warm(&mut self) {
+        if let Some(w) = self.warm.take() {
+            // Err means the producer already finished (empty or tiny
+            // schedule) — equally warm.
+            let _ = w.recv();
+        }
+    }
+
+    /// Traffic counters (see [`PrefetchStats`]).
+    pub fn stats(&self) -> PrefetchStats {
+        self.stats
+    }
+
+    /// Take the next prefetched entry, asserting it matches the draw the
+    /// protocol actually performs; engage the synchronous fallback once
+    /// the producer is done.
+    fn next(&mut self, want: DrawOp) -> Option<Prefetched> {
+        if self.fallback.is_none() {
+            match self.ready.as_ref().expect("prefetch channel").recv() {
+                Ok(entry) => {
+                    assert_eq!(
+                        entry.op, want,
+                        "prefetch schedule mismatch: the protocol drew {want:?} but the \
+                         provisioning schedule expected {:?}; the offline phase expanded \
+                         the dealer stream in schedule order, so the streams have \
+                         diverged — fix the TripleSchedule for this workload",
+                        entry.op
+                    );
+                    self.stats.prefetched_ops += 1;
+                    self.stats.producer_arena = entry.producer_arena;
+                    self.last_usage = entry.usage;
+                    return Some(entry);
+                }
+                Err(_) => {
+                    // Channel drained and producer exited: recover the
+                    // dealer (positioned at the end of the expanded
+                    // stream) for synchronous service.
+                    let dealer = self
+                        .worker
+                        .take()
+                        .expect("prefetch worker")
+                        .join()
+                        .expect("prefetch producer panicked");
+                    self.fallback = Some(dealer);
+                }
+            }
+        }
+        self.stats.fallback_ops += 1;
+        None
+    }
+
+    /// Return a consumed entry's buffers to the producer for reuse.
+    fn finish(&mut self, entry: Prefetched) {
+        if let Some(tx) = &self.recycle {
+            // A failed send just means the producer already exited; the
+            // buffers are dropped instead of reused.
+            let _ = tx.send(entry.bufs);
+        }
+    }
+}
+
+impl TripleSource for PrefetchDealer {
+    fn arith_triples_into(&mut self, a: &mut [u64], b: &mut [u64], c: &mut [u64]) {
+        match self.next(DrawOp::Arith { n: a.len() }) {
+            Some(e) => {
+                a.copy_from_slice(&e.bufs[0]);
+                b.copy_from_slice(&e.bufs[1]);
+                c.copy_from_slice(&e.bufs[2]);
+                self.finish(e);
+            }
+            None => self.fallback.as_mut().expect("fallback dealer").arith_triples_into(a, b, c),
+        }
+    }
+
+    fn bin_triples_planes_into(
+        &mut self,
+        w: u32,
+        n_seg: usize,
+        segs: usize,
+        a: &mut [u64],
+        b: &mut [u64],
+        c: &mut [u64],
+    ) {
+        match self.next(DrawOp::BinPlanes { w, n_seg, segs }) {
+            Some(e) => {
+                a.copy_from_slice(&e.bufs[0]);
+                b.copy_from_slice(&e.bufs[1]);
+                c.copy_from_slice(&e.bufs[2]);
+                self.finish(e);
+            }
+            None => self
+                .fallback
+                .as_mut()
+                .expect("fallback dealer")
+                .bin_triples_planes_into(w, n_seg, segs, a, b, c),
+        }
+    }
+
+    fn dabits_into(&mut self, r_bin: &mut [u64], r_arith: &mut [u64]) {
+        match self.next(DrawOp::DaBits { n: r_bin.len() }) {
+            Some(e) => {
+                r_bin.copy_from_slice(&e.bufs[0]);
+                r_arith.copy_from_slice(&e.bufs[1]);
+                self.finish(e);
+            }
+            None => self.fallback.as_mut().expect("fallback dealer").dabits_into(r_bin, r_arith),
+        }
+    }
+
+    fn usage(&self) -> TripleUsage {
+        match &self.fallback {
+            Some(d) => d.usage(),
+            None => self.last_usage,
+        }
+    }
+
+    fn prefetch_stats(&self) -> Option<PrefetchStats> {
+        Some(self.stats)
+    }
+}
+
+impl Drop for PrefetchDealer {
+    fn drop(&mut self) {
+        // Closing the hand-off channel cancels the producer mid-stream:
+        // its next (possibly blocked) send fails and it exits. Join so no
+        // thread outlives the session.
+        drop(self.ready.take());
+        drop(self.recycle.take());
+        drop(self.warm.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Producer thread: expand the schedule in order, hand completed ops over
+/// the bounded channel, reuse recycled buffers. Returns the dealer so the
+/// consumer can continue the stream synchronously after a non-cycling
+/// schedule ends.
+fn producer(
+    mut dealer: TtpDealer,
+    schedule: TripleSchedule,
+    cycle: bool,
+    ready: SyncSender<Prefetched>,
+    recycle: Receiver<Vec<Vec<u64>>>,
+    warm: Sender<()>,
+) -> TtpDealer {
+    let mut arena = Arena::new();
+    if schedule.is_empty() {
+        let _ = warm.send(());
+        return dealer;
+    }
+    let mut warmed = false;
+    loop {
+        for op in &schedule.ops {
+            // Fold returned buffer sets back into the pool first, so the
+            // steady state re-expands into recycled memory.
+            while let Ok(bufs) = recycle.try_recv() {
+                for b in bufs {
+                    arena.put_words(b);
+                }
+            }
+            let entry = expand(&mut dealer, *op, &mut arena);
+            if ready.send(entry).is_err() {
+                return dealer; // consumer dropped: cancelled mid-stream
+            }
+            if !warmed {
+                warmed = true;
+                let _ = warm.send(());
+            }
+        }
+        if !cycle {
+            return dealer;
+        }
+    }
+}
+
+/// Expand one op into arena-pooled buffers and snapshot the accounting.
+fn expand(dealer: &mut TtpDealer, op: DrawOp, arena: &mut Arena) -> Prefetched {
+    let (nbufs, len) = op.buf_shape();
+    let mut bufs: Vec<Vec<u64>> = (0..nbufs).map(|_| arena.take_words(len)).collect();
+    match op {
+        DrawOp::Arith { .. } => {
+            let (a, rest) = bufs.split_at_mut(1);
+            let (b, c) = rest.split_at_mut(1);
+            dealer.arith_triples_into(&mut a[0], &mut b[0], &mut c[0]);
+        }
+        DrawOp::BinPlanes { w, n_seg, segs } => {
+            let (a, rest) = bufs.split_at_mut(1);
+            let (b, c) = rest.split_at_mut(1);
+            dealer.bin_triples_planes_into(w, n_seg, segs, &mut a[0], &mut b[0], &mut c[0]);
+        }
+        DrawOp::DaBits { .. } => {
+            let (r_bin, r_arith) = bufs.split_at_mut(1);
+            dealer.dabits_into(&mut r_bin[0], &mut r_arith[0]);
+        }
+    }
+    Prefetched { op, bufs, usage: dealer.usage(), producer_arena: arena.stats() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The prefetched stream is bit-identical to the synchronous dealer's
+    /// — buffers and consumer-observed usage, op by op, for every party.
+    #[test]
+    fn prefetched_stream_matches_sync_dealer() {
+        let parties = 3;
+        let mut sched = TripleSchedule::new();
+        sched.ops.push(DrawOp::Arith { n: 10 });
+        sched.ops.push(DrawOp::BinPlanes { w: 6, n_seg: 100, segs: 2 });
+        sched.ops.push(DrawOp::DaBits { n: 7 });
+        sched.ops.push(DrawOp::BinPlanes { w: 1, n_seg: 65, segs: 1 });
+        for party in 0..parties {
+            let mut sync = TtpDealer::new(42, party, parties);
+            let mut pf =
+                PrefetchDealer::spawn(TtpDealer::new(42, party, parties), sched.clone(), false);
+            pf.wait_warm();
+            for op in &sched.ops {
+                let (nbufs, len) = op.buf_shape();
+                let mut s = vec![vec![0u64; len]; 3];
+                let mut p = vec![vec![0u64; len]; 3];
+                match *op {
+                    DrawOp::Arith { .. } => {
+                        let (s0, srest) = s.split_at_mut(1);
+                        let (s1, s2) = srest.split_at_mut(1);
+                        sync.arith_triples_into(&mut s0[0], &mut s1[0], &mut s2[0]);
+                        let (p0, prest) = p.split_at_mut(1);
+                        let (p1, p2) = prest.split_at_mut(1);
+                        pf.arith_triples_into(&mut p0[0], &mut p1[0], &mut p2[0]);
+                    }
+                    DrawOp::BinPlanes { w, n_seg, segs } => {
+                        let (s0, srest) = s.split_at_mut(1);
+                        let (s1, s2) = srest.split_at_mut(1);
+                        sync.bin_triples_planes_into(
+                            w, n_seg, segs, &mut s0[0], &mut s1[0], &mut s2[0],
+                        );
+                        let (p0, prest) = p.split_at_mut(1);
+                        let (p1, p2) = prest.split_at_mut(1);
+                        pf.bin_triples_planes_into(
+                            w, n_seg, segs, &mut p0[0], &mut p1[0], &mut p2[0],
+                        );
+                    }
+                    DrawOp::DaBits { .. } => {
+                        debug_assert_eq!(nbufs, 2);
+                        let (s0, srest) = s.split_at_mut(1);
+                        sync.dabits_into(&mut s0[0], &mut srest[0]);
+                        let (p0, prest) = p.split_at_mut(1);
+                        pf.dabits_into(&mut p0[0], &mut prest[0]);
+                    }
+                }
+                assert_eq!(s, p, "party={party} op={op:?}");
+                assert_eq!(pf.usage(), sync.usage(), "party={party} op={op:?}");
+            }
+            let st = pf.stats();
+            assert_eq!(st.prefetched_ops, sched.len() as u64);
+            assert_eq!(st.fallback_ops, 0);
+        }
+    }
+
+    /// Running past a non-cycling schedule falls back to transparent
+    /// inline expansion — still stream-identical to the sync dealer.
+    #[test]
+    fn exhausted_schedule_falls_back_synchronously() {
+        let mut sched = TripleSchedule::new();
+        sched.ops.push(DrawOp::Arith { n: 4 });
+        let mut sync = TtpDealer::new(7, 0, 2);
+        let mut pf = PrefetchDealer::spawn(TtpDealer::new(7, 0, 2), sched, false);
+        let draw_arith = |d: &mut dyn TripleSource, n: usize| {
+            let mut a = vec![0u64; n];
+            let mut b = vec![0u64; n];
+            let mut c = vec![0u64; n];
+            d.arith_triples_into(&mut a, &mut b, &mut c);
+            (a, b, c)
+        };
+        // Scheduled draw, then two unscheduled ones.
+        assert_eq!(draw_arith(&mut pf, 4), draw_arith(&mut sync, 4));
+        assert_eq!(draw_arith(&mut pf, 9), draw_arith(&mut sync, 9));
+        let mut sb = (vec![0u64; 5], vec![0u64; 5]);
+        let mut pb = (vec![0u64; 5], vec![0u64; 5]);
+        sync.dabits_into(&mut sb.0, &mut sb.1);
+        pf.dabits_into(&mut pb.0, &mut pb.1);
+        assert_eq!(sb, pb);
+        assert_eq!(pf.usage(), sync.usage());
+        let st = pf.stats();
+        assert_eq!((st.prefetched_ops, st.fallback_ops), (1, 2));
+    }
+
+    /// A draw that diverges from the schedule is unrecoverable (the stream
+    /// was expanded in schedule order) and must fail loudly.
+    #[test]
+    #[should_panic(expected = "prefetch schedule mismatch")]
+    fn schedule_mismatch_panics() {
+        let mut sched = TripleSchedule::new();
+        sched.ops.push(DrawOp::Arith { n: 4 });
+        let mut pf = PrefetchDealer::spawn(TtpDealer::new(7, 0, 2), sched, false);
+        let mut r_bin = vec![0u64; 4];
+        let mut r_arith = vec![0u64; 4];
+        pf.dabits_into(&mut r_bin, &mut r_arith);
+    }
+
+    /// Cycling producers refill the same schedule indefinitely and reuse
+    /// recycled buffers (allocations bounded by the lookahead, not the
+    /// number of cycles).
+    #[test]
+    fn cycling_producer_reuses_buffers() {
+        let mut sched = TripleSchedule::new();
+        sched.ops.push(DrawOp::Arith { n: 64 });
+        sched.ops.push(DrawOp::DaBits { n: 64 });
+        let mut sync = TtpDealer::new(3, 1, 2);
+        let mut pf = PrefetchDealer::spawn(TtpDealer::new(3, 1, 2), sched.clone(), true);
+        let cycles = 50;
+        for _ in 0..cycles {
+            let mut s = (vec![0u64; 64], vec![0u64; 64], vec![0u64; 64]);
+            let mut p = (vec![0u64; 64], vec![0u64; 64], vec![0u64; 64]);
+            sync.arith_triples_into(&mut s.0, &mut s.1, &mut s.2);
+            pf.arith_triples_into(&mut p.0, &mut p.1, &mut p.2);
+            assert_eq!(s, p);
+            sync.dabits_into(&mut s.0, &mut s.1);
+            pf.dabits_into(&mut p.0, &mut p.1);
+            assert_eq!((&s.0, &s.1), (&p.0, &p.1));
+        }
+        let st = pf.stats();
+        assert_eq!(st.prefetched_ops, 2 * cycles);
+        assert_eq!(st.fallback_ops, 0);
+        // 5 buffers per cycle, but only ~3 op-sets in flight at once:
+        // allocation misses must not scale with the cycle count.
+        let per_cycle: u64 = 3 + 2;
+        assert!(
+            st.producer_arena.alloc_misses <= (LOOKAHEAD as u64 + 2) * per_cycle,
+            "producer allocated per cycle: {:?}",
+            st.producer_arena
+        );
+        assert_eq!(pf.usage(), sync.usage());
+    }
+
+    /// Dropping the consumer cancels the producer cleanly at any point:
+    /// before the first draw, mid-schedule, and while the producer is
+    /// parked on a full hand-off channel.
+    #[test]
+    fn drop_cancels_producer_cleanly() {
+        let mut sched = TripleSchedule::new();
+        sched.ops.push(DrawOp::Arith { n: 1024 });
+        sched.ops.push(DrawOp::DaBits { n: 1024 });
+        // Never consumed: producer blocks on the full channel until drop.
+        let pf = PrefetchDealer::spawn(TtpDealer::new(1, 0, 2), sched.clone(), true);
+        drop(pf);
+        // Partially consumed, then cancelled mid-cycle.
+        let mut pf = PrefetchDealer::spawn(TtpDealer::new(1, 0, 2), sched, true);
+        pf.wait_warm();
+        let mut a = vec![0u64; 1024];
+        let mut b = vec![0u64; 1024];
+        let mut c = vec![0u64; 1024];
+        pf.arith_triples_into(&mut a, &mut b, &mut c);
+        drop(pf);
+        // Empty schedule: warm immediately, every draw is a fallback.
+        let mut pf = PrefetchDealer::spawn(TtpDealer::new(1, 0, 2), TripleSchedule::new(), false);
+        pf.wait_warm();
+        pf.dabits_into(&mut a[..2], &mut b[..2]);
+        assert_eq!(pf.stats().fallback_ops, 1);
+    }
+}

@@ -1,0 +1,343 @@
+//! Offline provisioning schedules: the exact sequence of dealer draws a
+//! protocol run will perform, predicted up front from its shape.
+//!
+//! The online protocol is deterministic: for a given input shape, plan and
+//! party count, every party requests the same correlations in the same
+//! order with the same `(w, n_seg, segs)` shapes at every AND round
+//! (that determinism is what keeps the per-party dealer streams
+//! synchronized in the first place — see the module docs of
+//! [`crate::beaver`]). A [`TripleSchedule`] captures that sequence as data,
+//! which is what lets the offline phase run ahead of the online one: a
+//! [`PrefetchDealer`](super::prefetch::PrefetchDealer) expands the dealer
+//! stream in schedule order on a background thread, and the engine's draw
+//! calls just swap in the pre-filled buffers.
+//!
+//! Builders mirror the protocol code they predict (and are pinned against
+//! it by the `schedule_predicts_actual_*` tests, which replay real runs
+//! through a [`Recorder`]):
+//!
+//! * [`TripleSchedule::push_ks_add`] mirrors
+//!   [`adder::ks_add_with_into`](crate::gmw::adder::ks_add_with_into) with
+//!   the default [`AdderOptions`](crate::gmw::adder::AdderOptions)
+//!   (batched stage ANDs, last P-update skipped) — the options every
+//!   production path uses.
+//! * [`TripleSchedule::push_relu`] mirrors
+//!   [`GmwParty::relu_into`](crate::gmw::GmwParty::relu_into)
+//!   (DReLU's A2B circuit additions + the daBit B2A + the Mult triple).
+//! * [`TripleSchedule::for_forward`] dry-runs a model: it walks the ReLU
+//!   nodes of a [`ModelConfig`] in execution order with the active
+//!   [`PlanSet`] and the serving batch — exactly the draws one
+//!   `ShareExecutor::forward` pass performs (linear layers, truncation and
+//!   GAP are all communication- and correlation-free).
+//!
+//! [`TripleSchedule::predicted_usage`] prices a schedule with the same
+//! [`TripleUsage`] accounting the dealer keeps, so the offline storage and
+//! PRG cost of a provisioning plan are known before a single byte is
+//! expanded.
+
+use std::sync::{Arc, Mutex};
+
+use super::{TripleSource, TripleUsage, TtpDealer};
+use crate::gmw::{adder, bitsliced, ReluPlan};
+use crate::hummingbird::PlanSet;
+use crate::model::ModelConfig;
+
+/// One dealer draw, identified by the exact shape the protocol requests.
+/// The shape is part of the stream contract: expanding the same ops in the
+/// same order yields the same PRG stream assignment as the synchronous
+/// dealer, so prefetched material is bit-identical to inline expansion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrawOp {
+    /// `n` arithmetic Beaver triples
+    /// ([`TtpDealer::arith_triples_into`]).
+    Arith { n: usize },
+    /// Plane-native binary triples for `segs` segments of `n_seg` w-bit
+    /// lanes ([`TtpDealer::bin_triples_planes_into`]).
+    BinPlanes { w: u32, n_seg: usize, segs: usize },
+    /// `n` daBits ([`TtpDealer::dabits_into`]).
+    DaBits { n: usize },
+}
+
+impl DrawOp {
+    /// (share buffers filled, length of each) — the storage shape of the
+    /// op (3 buffers for triples, 2 for daBits).
+    pub(crate) fn buf_shape(&self) -> (usize, usize) {
+        match *self {
+            DrawOp::Arith { n } => (3, n),
+            DrawOp::BinPlanes { w, n_seg, segs } => {
+                (3, segs * bitsliced::plane_len(n_seg, w))
+            }
+            DrawOp::DaBits { n } => (2, n),
+        }
+    }
+}
+
+/// An ordered dealer-draw sequence (see the module docs).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TripleSchedule {
+    pub ops: Vec<DrawOp>,
+}
+
+impl TripleSchedule {
+    pub fn new() -> TripleSchedule {
+        TripleSchedule::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Append the draws of one Kogge–Stone addition over `n` lanes at
+    /// width `w` (default `AdderOptions`): the initial AND plus one
+    /// batched AND per prefix stage — `(w, n, 2)` segments mid-circuit,
+    /// `(w, n, 1)` for the initial AND and the last stage (whose dead
+    /// P-update is skipped). `w == 1` is pure XOR: no draws.
+    pub fn push_ks_add(&mut self, n: usize, w: u32) {
+        if w <= 1 {
+            return;
+        }
+        self.ops.push(DrawOp::BinPlanes { w, n_seg: n, segs: 1 });
+        let stages = adder::rounds_for_width(w) - 1;
+        for idx in 0..stages {
+            let segs = if idx + 1 == stages { 1usize } else { 2 };
+            self.ops.push(DrawOp::BinPlanes { w, n_seg: n, segs });
+        }
+    }
+
+    /// Append an A2B conversion of `n` lanes at width `w`: the PRG
+    /// re-sharing is communication- and correlation-free, then each of the
+    /// `parties − 1` operand folds is one circuit addition.
+    pub fn push_a2b(&mut self, n: usize, w: u32, parties: usize) {
+        for _ in 1..parties {
+            self.push_ks_add(n, w);
+        }
+    }
+
+    /// Append a DReLU of `n` elements under `plan` (width ≥ 1): the A2B on
+    /// the reduced ring plus the 1-bit B2A's daBits.
+    pub fn push_drelu(&mut self, n: usize, plan: ReluPlan, parties: usize) {
+        let w = plan.width();
+        debug_assert!(w >= 1, "drelu needs at least one bit");
+        self.push_a2b(n, w, parties);
+        self.ops.push(DrawOp::DaBits { n });
+    }
+
+    /// Append a ReLU of `n` elements under `plan`: DReLU plus the Mult
+    /// triples. Identity plans (`k == m`) draw nothing.
+    pub fn push_relu(&mut self, n: usize, plan: ReluPlan, parties: usize) {
+        if plan.is_identity() {
+            return;
+        }
+        self.push_drelu(n, plan, parties);
+        self.ops.push(DrawOp::Arith { n });
+    }
+
+    /// Schedule for one [`GmwParty::relu`](crate::gmw::GmwParty::relu) of
+    /// `n` elements.
+    pub fn for_relu(n: usize, plan: ReluPlan, parties: usize) -> TripleSchedule {
+        let mut s = TripleSchedule::new();
+        s.push_relu(n, plan, parties);
+        s
+    }
+
+    /// Dry-run one `ShareExecutor::forward` pass of `cfg` under `plans` at
+    /// the serving `batch`: every ReLU node in execution order contributes
+    /// its per-batch draws (`batch ×` per-sample elements); all other ops
+    /// are correlation-free. A serving loop repeats this schedule once per
+    /// admitted batch (the batcher always pads to the full artifact
+    /// batch), which is what the coordinator's cycling prefetcher exploits.
+    pub fn for_forward(
+        cfg: &ModelConfig,
+        plans: &PlanSet,
+        batch: usize,
+        parties: usize,
+    ) -> TripleSchedule {
+        let mut s = TripleSchedule::new();
+        for (_node, group, elems) in cfg.relu_elems() {
+            s.push_relu(batch * elems, plans.plan_for(group), parties);
+        }
+        s
+    }
+
+    /// Price the schedule with the dealer's own [`TripleUsage`] accounting
+    /// (exact, including the per-party PRG draw): what one party will
+    /// store and expand for this provisioning plan. Pinned equal to the
+    /// actual dealer counters by `predicted_usage_matches_dealer_draw`.
+    pub fn predicted_usage(&self, parties: usize) -> TripleUsage {
+        debug_assert!(parties >= 2);
+        let split = parties as u64 - 1;
+        let mut u = TripleUsage::default();
+        for op in &self.ops {
+            match *op {
+                DrawOp::Arith { n } => {
+                    u.arith_triples += n as u64;
+                    // 2 plaintext draws + 3 splits of (parties − 1) words.
+                    u.prg_words += n as u64 * (2 + 3 * split);
+                }
+                DrawOp::BinPlanes { w, n_seg, segs } => {
+                    let pl = (segs * bitsliced::plane_len(n_seg, w)) as u64;
+                    u.bin_plane_words += pl;
+                    u.bin_triple_lanes += (segs * n_seg) as u64;
+                    u.prg_words += pl * (2 + 3 * split);
+                }
+                DrawOp::DaBits { n } => {
+                    u.dabits += n as u64;
+                    // 1 plaintext bit + a binary and an arithmetic split.
+                    u.prg_words += n as u64 * (1 + 2 * split);
+                }
+            }
+        }
+        u
+    }
+}
+
+/// Diagnostic [`TripleSource`] that logs every draw's [`DrawOp`] while
+/// delegating to an inner [`TtpDealer`] — the "recording dry run" used to
+/// pin schedule prediction against the protocol's actual draws. The log is
+/// shared out through an `Arc<Mutex<_>>` because the source itself is
+/// boxed into the engine (`GmwParty::set_triple_source`).
+pub struct Recorder {
+    inner: TtpDealer,
+    log: Arc<Mutex<Vec<DrawOp>>>,
+}
+
+impl Recorder {
+    /// Wrap `inner`; returns the recorder and a handle to its draw log.
+    #[allow(clippy::type_complexity)]
+    pub fn new(inner: TtpDealer) -> (Recorder, Arc<Mutex<Vec<DrawOp>>>) {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        (Recorder { inner, log: Arc::clone(&log) }, log)
+    }
+}
+
+impl TripleSource for Recorder {
+    fn arith_triples_into(&mut self, a: &mut [u64], b: &mut [u64], c: &mut [u64]) {
+        self.log.lock().unwrap().push(DrawOp::Arith { n: a.len() });
+        self.inner.arith_triples_into(a, b, c);
+    }
+
+    fn bin_triples_planes_into(
+        &mut self,
+        w: u32,
+        n_seg: usize,
+        segs: usize,
+        a: &mut [u64],
+        b: &mut [u64],
+        c: &mut [u64],
+    ) {
+        self.log.lock().unwrap().push(DrawOp::BinPlanes { w, n_seg, segs });
+        self.inner.bin_triples_planes_into(w, n_seg, segs, a, b, c);
+    }
+
+    fn dabits_into(&mut self, r_bin: &mut [u64], r_arith: &mut [u64]) {
+        self.log.lock().unwrap().push(DrawOp::DaBits { n: r_bin.len() });
+        self.inner.dabits_into(r_bin, r_arith);
+    }
+
+    fn usage(&self) -> TripleUsage {
+        self.inner.usage()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Draw a schedule synchronously on a dealer (test helper).
+    fn draw_all(dealer: &mut TtpDealer, schedule: &TripleSchedule) {
+        for op in &schedule.ops {
+            let (bufs, len) = op.buf_shape();
+            let mut a = vec![0u64; len];
+            let mut b = vec![0u64; len];
+            let mut c = vec![0u64; len];
+            match *op {
+                DrawOp::Arith { .. } => dealer.arith_triples_into(&mut a, &mut b, &mut c),
+                DrawOp::BinPlanes { w, n_seg, segs } => {
+                    dealer.bin_triples_planes_into(w, n_seg, segs, &mut a, &mut b, &mut c)
+                }
+                DrawOp::DaBits { .. } => {
+                    debug_assert_eq!(bufs, 2);
+                    dealer.dabits_into(&mut a, &mut b)
+                }
+            }
+        }
+    }
+
+    /// ks_add schedules mirror the adder's round structure: one draw per
+    /// communication round, `(n, 2)` segments mid-circuit, `(n, 1)` at the
+    /// boundary rounds, nothing at w = 1.
+    #[test]
+    fn ks_add_schedule_matches_round_structure() {
+        for w in [1u32, 2, 3, 6, 8, 13, 64] {
+            let n = 100usize;
+            let mut s = TripleSchedule::new();
+            s.push_ks_add(n, w);
+            assert_eq!(s.len() as u32, adder::rounds_for_width(w), "w={w}");
+            if w > 1 {
+                assert_eq!(s.ops[0], DrawOp::BinPlanes { w, n_seg: n, segs: 1 });
+                assert_eq!(*s.ops.last().unwrap(), DrawOp::BinPlanes { w, n_seg: n, segs: 1 });
+                for op in &s.ops[1..s.len() - 1] {
+                    assert_eq!(*op, DrawOp::BinPlanes { w, n_seg: n, segs: 2 }, "w={w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn relu_schedule_composition() {
+        let n = 64usize;
+        let plan = ReluPlan::new(12, 4).unwrap(); // w = 8: 4 add rounds
+        for parties in [2usize, 3] {
+            let s = TripleSchedule::for_relu(n, plan, parties);
+            // (parties−1) adds × rounds_for_width(8) + daBits + arith.
+            let adds = (parties - 1) * adder::rounds_for_width(8) as usize;
+            assert_eq!(s.len(), adds + 2, "parties={parties}");
+            assert_eq!(s.ops[adds], DrawOp::DaBits { n });
+            assert_eq!(s.ops[adds + 1], DrawOp::Arith { n });
+        }
+        // Identity plans draw nothing; w=1 plans skip the adder entirely.
+        assert!(TripleSchedule::for_relu(n, ReluPlan::new(5, 5).unwrap(), 2).is_empty());
+        let w1 = TripleSchedule::for_relu(n, ReluPlan::new(8, 7).unwrap(), 2);
+        assert_eq!(w1.ops, vec![DrawOp::DaBits { n }, DrawOp::Arith { n }]);
+    }
+
+    /// The priced provisioning plan equals the dealer's own accounting
+    /// after actually drawing the schedule — including the exact PRG word
+    /// count, for several party counts.
+    #[test]
+    fn predicted_usage_matches_dealer_draw() {
+        for parties in [2usize, 3, 4] {
+            for plan in [ReluPlan::new(12, 4).unwrap(), ReluPlan::new(8, 7).unwrap()] {
+                let s = TripleSchedule::for_relu(321, plan, parties);
+                let mut d = TtpDealer::new(9, parties - 1, parties);
+                draw_all(&mut d, &s);
+                assert_eq!(d.usage(), s.predicted_usage(parties), "parties={parties}");
+            }
+        }
+    }
+
+    /// The recorder's log is the schedule (dealer-level check; the
+    /// protocol-level pin lives in `tests/prefetch.rs`).
+    #[test]
+    fn recorder_logs_draws_in_order() {
+        let (mut rec, log) = Recorder::new(TtpDealer::new(5, 0, 2));
+        let mut a = vec![0u64; 10];
+        let mut b = vec![0u64; 10];
+        let mut c = vec![0u64; 10];
+        rec.arith_triples_into(&mut a, &mut b, &mut c);
+        let mut r_bin = vec![0u64; 5];
+        let mut r_arith = vec![0u64; 5];
+        rec.dabits_into(&mut r_bin, &mut r_arith);
+        assert_eq!(*log.lock().unwrap(), vec![DrawOp::Arith { n: 10 }, DrawOp::DaBits { n: 5 }]);
+        // Delegation is stream-exact: a fresh sync dealer drawing the same
+        // ops lands on the same stream position.
+        let mut d = TtpDealer::new(5, 0, 2);
+        d.arith_triples(10);
+        d.dabits(5);
+        assert_eq!(rec.usage(), d.usage());
+    }
+}

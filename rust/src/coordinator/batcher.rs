@@ -4,6 +4,7 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::beaver::schedule::TripleSchedule;
 use crate::crypto::prg::Prg;
 use crate::error::{Error, Result};
 use crate::gmw::kernels::{BinLayout, BitslicedKernels, RustKernels};
@@ -44,6 +45,14 @@ pub struct ServeOptions {
     /// fused bitpack). 0 = auto: divide the machine's cores across the
     /// simulated parties. Results are bit-identical for any value.
     pub threads: usize,
+    /// Offline/online phase split (CLI flag `--prefetch on|off`): when
+    /// true, each party thread provisions its Beaver correlations on a
+    /// background prefetcher sized from the model's per-batch draw
+    /// schedule (`TripleSchedule::for_forward`), warmed before the party
+    /// admits its first job and cycling one batch ahead thereafter — so no
+    /// dealer PRG expansion happens inside the online AND rounds. Results,
+    /// wire bytes and `TripleUsage` are bit-identical either way.
+    pub prefetch: bool,
 }
 
 impl ServeOptions {
@@ -58,6 +67,7 @@ impl ServeOptions {
             gmw_backend: "rust".into(),
             layout: BinLayout::default(),
             threads: 0,
+            prefetch: false,
         }
     }
 }
@@ -147,10 +157,11 @@ impl Coordinator {
             let backend = opts.gmw_backend.clone();
             let layout = opts.layout;
             let threads = resolve_threads(opts.threads, opts.parties);
+            let prefetch = opts.prefetch;
             parties.push(std::thread::spawn(move || {
                 party_main(
                     t, cfg, weights, root, model_art, plans, jrx, out_tx, seed, backend, layout,
-                    threads,
+                    threads, prefetch,
                 );
             }));
         }
@@ -242,8 +253,17 @@ fn party_main(
     backend: String,
     layout: BinLayout,
     threads: usize,
+    prefetch: bool,
 ) {
     let me = transport.party();
+    // Offline/online split: predict this model's per-batch dealer draws
+    // (every job is padded to the full artifact batch, so one forward pass
+    // repeats the same schedule) and hand them to a cycling background
+    // prefetcher. `enable_prefetch` below also waits for the first buffers,
+    // so the party is warm before it admits its first job.
+    let schedule = prefetch.then(|| {
+        TripleSchedule::for_forward(&cfg, &plans, model_art.batch, transport.parties())
+    });
     let rt = Runtime::new(&artifacts_root).expect("runtime handle");
     if !model_art.layers.is_empty() || backend == "xla" {
         // Linear layers (and the xla GMW kernel backend) will execute
@@ -260,16 +280,31 @@ fn party_main(
         let manifest = Manifest::load(&artifacts_root).expect("manifest");
         let kernels = XlaKernels::new(rt, manifest);
         let mut party = GmwParty::with_kernels(transport, seed, kernels);
-        party.set_threads(threads);
+        boot_party(&mut party, threads, schedule);
         party_loop(&mut exec, &mut party, &plans, jobs, out, me);
     } else if layout == BinLayout::Bitsliced {
         let mut party = GmwParty::with_kernels(transport, seed, BitslicedKernels::default());
-        party.set_threads(threads);
+        boot_party(&mut party, threads, schedule);
         party_loop(&mut exec, &mut party, &plans, jobs, out, me);
     } else {
         let mut party = GmwParty::with_kernels(transport, seed, RustKernels::default());
-        party.set_threads(threads);
+        boot_party(&mut party, threads, schedule);
         party_loop(&mut exec, &mut party, &plans, jobs, out, me);
+    }
+}
+
+/// Per-party engine knobs applied identically in every kernel branch.
+/// `enable_prefetch` blocks until the first scheduled buffers are
+/// expanded, so a prefetching party is warm before it admits its first
+/// job.
+fn boot_party<T: Transport, K: crate::gmw::kernels::KernelBackend>(
+    party: &mut GmwParty<T, K>,
+    threads: usize,
+    schedule: Option<TripleSchedule>,
+) {
+    party.set_threads(threads);
+    if let Some(s) = schedule {
+        party.enable_prefetch(s, true);
     }
 }
 

@@ -73,6 +73,14 @@
 //! AND round, so they hold the same logical triples and stay
 //! wire-byte-identical.
 //!
+//! Provisioning itself is split offline/online (DESIGN.md §3): draws go
+//! through the [`TripleSource`] trait — synchronous PRG expansion inside
+//! the AND round by default, or, after [`GmwParty::enable_prefetch`], a
+//! background [`PrefetchDealer`] that expands the same stream one round
+//! ahead along a predicted [`TripleSchedule`] so the online round only
+//! swaps in ready buffers. Outputs, wire bytes and
+//! [`GmwParty::triple_usage`] are bit-identical either way.
+//!
 //! Ownership rules for plane buffers are the arena's usual ones — checked
 //! out per protocol step, fully overwritten, returned on completion — with
 //! two extra representational invariants documented in [`bitsliced`]:
@@ -105,7 +113,9 @@ pub mod kernels;
 /// re-export keeps the original `gmw::arena` paths working.
 pub use crate::util::arena;
 
-use crate::beaver::TtpDealer;
+use crate::beaver::prefetch::{PrefetchDealer, PrefetchStats};
+use crate::beaver::schedule::TripleSchedule;
+use crate::beaver::{TripleSource, TripleUsage, TtpDealer};
 use crate::bitpack;
 use crate::error::{Error, Result};
 use crate::net::accounting::Phase;
@@ -157,7 +167,11 @@ impl ReluPlan {
 /// One party's protocol engine.
 pub struct GmwParty<T: Transport, K: KernelBackend = RustKernels> {
     pub transport: T,
-    pub dealer: TtpDealer,
+    /// The party's correlation provider (offline/online split): the
+    /// synchronous [`TtpDealer`] by default, or a
+    /// [`PrefetchDealer`] installed via [`GmwParty::enable_prefetch`] /
+    /// [`GmwParty::set_triple_source`].
+    dealer: Box<dyn TripleSource>,
     pub pairwise: PairwisePrgs,
     kernels: K,
     arena: Arena,
@@ -165,6 +179,7 @@ pub struct GmwParty<T: Transport, K: KernelBackend = RustKernels> {
     /// (see `net` module docs for the ownership rules).
     recv: RecvBufs,
     threads: usize,
+    session_seed: u64,
 }
 
 impl<T: Transport> GmwParty<T, RustKernels> {
@@ -180,12 +195,13 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         let parties = transport.parties();
         GmwParty {
             transport,
-            dealer: TtpDealer::new(session_seed, party, parties),
+            dealer: Box::new(TtpDealer::new(session_seed, party, parties)),
             pairwise: PairwisePrgs::new(session_seed, party, parties),
             kernels,
             arena: Arena::new(),
             recv: RecvBufs::new(parties),
             threads: 1,
+            session_seed,
         }
     }
 
@@ -231,6 +247,49 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
     /// hot path is asserted against these in the harness tests.
     pub fn arena_stats(&self) -> ArenaStats {
         self.arena.stats()
+    }
+
+    /// Cumulative correlation usage of this party's triple source (the
+    /// offline storage / PRG report; identical across parties and across
+    /// sync-vs-prefetch provisioning).
+    pub fn triple_usage(&self) -> TripleUsage {
+        self.dealer.usage()
+    }
+
+    /// Prefetch traffic counters, if a [`PrefetchDealer`] is installed
+    /// (`None` on the default synchronous dealer).
+    pub fn prefetch_stats(&self) -> Option<PrefetchStats> {
+        self.dealer.prefetch_stats()
+    }
+
+    /// Replace the party's correlation provider. Must be called **before
+    /// any protocol step has drawn** from the current source: the new
+    /// source starts the deterministic dealer stream from the beginning,
+    /// so a partially-consumed stream would desynchronize this party from
+    /// its peers.
+    pub fn set_triple_source(&mut self, source: Box<dyn TripleSource>) {
+        self.dealer = source;
+    }
+
+    /// Split the offline phase off the online critical path: install a
+    /// [`PrefetchDealer`] that expands this party's dealer stream on a
+    /// background thread along `schedule` (see
+    /// [`TripleSchedule`]; `cycle` repeats it per serving batch), then
+    /// block until the first buffers are ready. Call before the first
+    /// protocol step. Prefetching is a local decision per party — peers
+    /// may stay synchronous — and results, wire bytes and
+    /// [`GmwParty::triple_usage`] are bit-identical either way.
+    pub fn enable_prefetch(&mut self, schedule: TripleSchedule, cycle: bool) {
+        assert_eq!(
+            self.dealer.usage(),
+            TripleUsage::default(),
+            "enable_prefetch must run before any correlation draw: the prefetcher \
+             restarts the dealer stream from the beginning"
+        );
+        let dealer = TtpDealer::new(self.session_seed, self.party(), self.parties());
+        let mut pf = PrefetchDealer::spawn(dealer, schedule, cycle);
+        pf.wait_warm();
+        self.dealer = Box::new(pf);
     }
 
     /// Check a lane buffer (contents unspecified) out of the party's arena

@@ -19,9 +19,12 @@
 //!   hummingbird figures --fig 11
 //!
 //! GMW engine knobs shared by infer/serve/party: `--threads N` (lane
-//! parallelism, 0 = all cores) and `--layout lane|bitsliced` (binary-share
-//! layout; bitsliced runs 64 lanes per word through DReLU). Both are
-//! bit-exact: they change wall-clock, never results or wire bytes.
+//! parallelism, 0 = all cores), `--layout lane|bitsliced` (binary-share
+//! layout; bitsliced runs 64 lanes per word through DReLU) and
+//! `--prefetch on|off` (offline/online split: provision Beaver triples on
+//! a background thread instead of expanding them inside the online AND
+//! rounds). All are bit-exact: they change wall-clock, never results or
+//! wire bytes.
 
 use anyhow::{bail, Context, Result};
 
@@ -98,12 +101,15 @@ fn cmd_infer(args: &Args) -> Result<()> {
     opts.threads = args.opt_parse("threads", 0)?;
     // --layout: binary-share layout (lane-per-u64 or bitsliced).
     opts.layout = args.opt_parse("layout", BinLayout::default())?;
+    // --prefetch: offline-phase background triple provisioning.
+    opts.prefetch = args.on_off("prefetch", false)?;
     println!(
-        "booting {} ({} parties, plan: {}, layout: {})",
+        "booting {} ({} parties, plan: {}, layout: {}, prefetch: {})",
         model,
         opts.parties,
         plan.summary(),
-        opts.layout
+        opts.layout,
+        if opts.prefetch { "on" } else { "off" }
     );
     let svc = Coordinator::start(opts)?;
 
@@ -176,8 +182,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     opts.gmw_backend = args.opt_or("gmw-backend", "rust").to_string();
     opts.threads = args.opt_parse("threads", 0)?;
     opts.layout = args.opt_parse("layout", BinLayout::default())?;
+    opts.prefetch = args.on_off("prefetch", false)?;
+    let prefetch = if opts.prefetch { "on" } else { "off" };
     let svc = Coordinator::start(opts)?;
-    println!("serving {model} (plan: {}), open-loop for {duration}s", plan.summary());
+    println!(
+        "serving {model} (plan: {}, prefetch: {prefetch}), open-loop for {duration}s",
+        plan.summary()
+    );
 
     let t0 = std::time::Instant::now();
     let mut sent = 0usize;
@@ -313,6 +324,7 @@ fn parse_budget(s: &str) -> Result<f64> {
 // ---------------------------------------------------------------------
 
 fn cmd_party(args: &Args) -> Result<()> {
+    use hummingbird::beaver::schedule::TripleSchedule;
     use hummingbird::gmw::kernels::{BitslicedKernels, KernelBackend, RustKernels};
     use hummingbird::gmw::{GmwParty, ReluPlan};
     use hummingbird::net::tcp::TcpTransport;
@@ -329,6 +341,10 @@ fn cmd_party(args: &Args) -> Result<()> {
     let seed: u64 = args.opt_parse("seed", 7u64)?;
     // Real deployments own the whole machine: default --threads to all cores.
     let threads = args.threads(0)?;
+    // --prefetch on: provision this ReLU's triples on a background thread
+    // before/while the online protocol runs (a per-party decision — peers
+    // may stay synchronous; results and wire bytes are identical).
+    let prefetch = args.on_off("prefetch", false)?;
     // Each party holds a random share vector; run ReLU over TCP. All
     // parties must pass the same --layout (it is bit-exact, but the lane
     // budget differs); the wire bytes are identical either way.
@@ -338,9 +354,14 @@ fn cmd_party(args: &Args) -> Result<()> {
         shares: &[u64],
         plan: ReluPlan,
         threads: usize,
+        prefetch: bool,
         label: &str,
     ) -> Result<()> {
         party.set_threads(threads);
+        if prefetch {
+            let schedule = TripleSchedule::for_relu(shares.len(), plan, party.parties());
+            party.enable_prefetch(schedule, false);
+        }
         let t0 = std::time::Instant::now();
         let _out = party.relu(shares, plan)?;
         let trace = party.transport.trace();
@@ -363,6 +384,7 @@ fn cmd_party(args: &Args) -> Result<()> {
             &shares,
             plan,
             threads,
+            prefetch,
             "bitsliced",
         ),
         BinLayout::LanePerU64 => run_relu(
@@ -370,6 +392,7 @@ fn cmd_party(args: &Args) -> Result<()> {
             &shares,
             plan,
             threads,
+            prefetch,
             "lane",
         ),
     }

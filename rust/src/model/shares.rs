@@ -632,6 +632,89 @@ mod tests {
         }
     }
 
+    /// Offline/online split through the executor: the per-pass draw
+    /// schedule predicted by `TripleSchedule::for_forward` is exactly what
+    /// a real forward pass draws (recording dry run), and a coordinator-
+    /// style cycling prefetcher produces bit-identical output shares and
+    /// `TripleUsage` across two serving passes — with zero inline
+    /// expansions on the online path.
+    #[test]
+    fn forward_prefetch_matches_sync_and_predicted_schedule() {
+        use crate::beaver::schedule::{Recorder, TripleSchedule};
+        use crate::beaver::TtpDealer;
+
+        let cfg = pooled_cfg();
+        let batch = cfg.batch;
+        let elems = batch * 2 * 4 * 4;
+        let fx = FixedPoint::new(cfg.frac_bits);
+        let x_ring: Vec<u64> = (0..elems)
+            .map(|i| {
+                let v = fx.encode((i as f64 * 0.59).cos() * 2.0);
+                if i % 4 == 0 {
+                    v.wrapping_neg()
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let mut prg = crate::crypto::prg::Prg::new(91, 0);
+        let xs = share_arith(&mut prg, &x_ring, 2);
+        let plans = PlanSet::uniform(1, 12, 4).unwrap();
+        let shape = vec![batch, 2, 4, 4];
+        let seed = 0x0ff1;
+
+        // Two synchronous passes: the reference outputs and usage.
+        let sync = run_parties(2, seed, |p| {
+            let mut exec = pooled_exec();
+            let me = p.party();
+            let mk = || TensorU64::new(shape.clone(), xs[me].clone()).unwrap();
+            let (o1, _) = exec.forward(p, mk(), &plans).unwrap();
+            let (o2, _) = exec.forward(p, mk(), &plans).unwrap();
+            (o1.data, o2.data, p.triple_usage())
+        });
+
+        // Recording dry run: actual draws == the predicted per-pass
+        // schedule, replayed identically on the second pass.
+        let want = TripleSchedule::for_forward(&cfg, &plans, batch, 2).ops;
+        let recorded = run_parties(2, seed, |p| {
+            let (rec, log) = Recorder::new(TtpDealer::new(seed, p.party(), p.parties()));
+            p.set_triple_source(Box::new(rec));
+            let mut exec = pooled_exec();
+            let me = p.party();
+            let mk = || TensorU64::new(shape.clone(), xs[me].clone()).unwrap();
+            let (o1, _) = exec.forward(p, mk(), &plans).unwrap();
+            exec.forward(p, mk(), &plans).unwrap();
+            (o1.data, log.lock().unwrap().clone())
+        });
+        for (party, (out1, ops)) in recorded.outputs.iter().enumerate() {
+            assert_eq!(out1, &sync.outputs[party].0, "recorder changed the stream (p{party})");
+            assert_eq!(ops.len(), 2 * want.len(), "two passes replay the schedule (p{party})");
+            assert_eq!(&ops[..want.len()], &want[..], "pass 1 draws (p{party})");
+            assert_eq!(&ops[want.len()..], &want[..], "pass 2 draws (p{party})");
+        }
+
+        // Prefetched serving: cycling one batch ahead, bit-identical.
+        let pf = run_parties(2, seed, |p| {
+            let sched = TripleSchedule::for_forward(&cfg, &plans, batch, p.parties());
+            p.enable_prefetch(sched, true);
+            let mut exec = pooled_exec();
+            let me = p.party();
+            let mk = || TensorU64::new(shape.clone(), xs[me].clone()).unwrap();
+            let (o1, _) = exec.forward(p, mk(), &plans).unwrap();
+            let (o2, _) = exec.forward(p, mk(), &plans).unwrap();
+            let st = p.prefetch_stats().expect("prefetcher installed");
+            assert_eq!(st.fallback_ops, 0, "online forward expanded PRG material");
+            (o1.data, o2.data, p.triple_usage())
+        });
+        assert_eq!(pf.outputs, sync.outputs, "prefetched forward diverged");
+        assert_eq!(
+            pf.trace.total_bytes(),
+            sync.trace.total_bytes(),
+            "prefetched forward changed wire bytes"
+        );
+        assert_eq!(pf.trace.total_rounds(), sync.trace.total_rounds());
+    }
+
     /// Residual fan-out bookkeeping: a source consumed by two nodes must
     /// survive its first consumer and be recycled after its second.
     #[test]

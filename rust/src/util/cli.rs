@@ -84,6 +84,19 @@ impl Args {
         }
     }
 
+    /// An `on|off` toggle (also accepts true/false, 1/0, yes/no; a bare
+    /// `--flag` means on). Used by `--prefetch`.
+    pub fn on_off(&self, key: &str, default: bool) -> Result<bool> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some("on" | "true" | "1" | "yes") => Ok(true),
+            Some("off" | "false" | "0" | "no") => Ok(false),
+            Some(s) => {
+                Err(Error::config(format!("option --{key}: expected on|off, got '{s}'")))
+            }
+        }
+    }
+
     /// The shared `--threads` knob for the GMW engine's lane parallelism.
     /// `--threads 0` (or omitting the flag with `default0 = true` semantics
     /// at the call site) means "auto": use every available core. Results
@@ -131,6 +144,17 @@ mod tests {
         // Missing flag uses the caller's default.
         assert_eq!(parse("x").threads(1).unwrap(), 1);
         assert!(parse("x --threads banana").threads(1).is_err());
+    }
+
+    #[test]
+    fn on_off_knob() {
+        assert!(parse("x --prefetch on").on_off("prefetch", false).unwrap());
+        assert!(!parse("x --prefetch off").on_off("prefetch", true).unwrap());
+        // Bare flag means on; missing flag uses the default.
+        assert!(parse("x --prefetch").on_off("prefetch", false).unwrap());
+        assert!(!parse("x").on_off("prefetch", false).unwrap());
+        assert!(parse("x").on_off("prefetch", true).unwrap());
+        assert!(parse("x --prefetch maybe").on_off("prefetch", false).is_err());
     }
 
     #[test]

@@ -244,7 +244,7 @@ fn plane_native_triples_equivalent_across_layouts() {
                     let (lane, sliced) = run_both_layouts!(parties, 17, threads, |p| {
                         let me = p.party();
                         let sum = adder::ks_add(p, &xs[me], &ys[me], w).unwrap();
-                        (sum, p.dealer.usage())
+                        (sum, p.triple_usage())
                     });
                     // Outputs include each party's TripleUsage snapshot, so
                     // this pins identical stream consumption per party.

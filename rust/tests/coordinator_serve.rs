@@ -89,6 +89,37 @@ fn serve_bitsliced_layout_matches_lane_layout() {
     assert_eq!(lane_bytes, sliced_bytes, "layout changed protocol bytes");
 }
 
+/// `--prefetch on` serving (background offline-phase provisioning, warmed
+/// before the party threads admit work) produces the same predictions and
+/// the same protocol bytes as the synchronous dealer, end to end through
+/// the batcher and executor.
+#[test]
+fn serve_prefetch_matches_sync_dealer() {
+    let Some(repo) = ready() else { return };
+    let cfg = ModelConfig::load_named(&repo, MODEL).unwrap();
+    let dataset = Dataset::load(repo.join("artifacts"), &cfg.dataset).unwrap();
+
+    let run = |prefetch: bool| {
+        let mut opts = ServeOptions::new(&repo, MODEL);
+        opts.plan = Some(PlanSet::uniform(cfg.relu_groups, 14, 6).unwrap());
+        opts.prefetch = prefetch;
+        let svc = Coordinator::start(opts).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            rxs.push(svc.infer_async(dataset.test.batch(i, i + 1).to_vec()).unwrap());
+        }
+        let preds: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().pred).collect();
+        let by = svc.trace.bytes_by_phase();
+        let protocol: u64 = by[..4].iter().sum();
+        svc.shutdown();
+        (preds, protocol)
+    };
+    let (sync_preds, sync_bytes) = run(false);
+    let (pf_preds, pf_bytes) = run(true);
+    assert_eq!(sync_preds, pf_preds, "prefetch changed predictions");
+    assert_eq!(sync_bytes, pf_bytes, "prefetch changed protocol bytes");
+}
+
 /// The XLA kernel backend is lane-per-u64 only; asking for the bitsliced
 /// layout on it must fail fast at boot (config error, before any artifact
 /// loading — so this runs without the artifacts directory).

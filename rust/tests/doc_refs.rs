@@ -1,0 +1,121 @@
+//! Doc-reference check (run in CI alongside `cargo doc -D warnings`):
+//! every `DESIGN.md §N` citation in the Rust sources must resolve to a
+//! §-numbered heading actually present in the repo-root `DESIGN.md`, and
+//! the root `README.md` must exist. Keeps the design doc and the code
+//! citing it from drifting apart — the repo shipped for four PRs with
+//! five citations of a DESIGN.md that did not exist.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+/// Parse the maximal `[0-9.]` run starting at `text[start..]`, trimming
+/// trailing dots (so "§5.2," yields "5.2" and "§4." yields "4").
+fn section_token(text: &str, start: usize) -> String {
+    let tok: String = text[start..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit() || *c == '.')
+        .collect();
+    tok.trim_end_matches('.').to_string()
+}
+
+/// All §-tokens appearing in markdown heading lines (`#`-prefixed).
+fn heading_tokens(markdown: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for line in markdown.lines() {
+        if !line.trim_start().starts_with('#') {
+            continue;
+        }
+        for (idx, _) in line.match_indices('§') {
+            let tok = section_token(line, idx + '§'.len_utf8());
+            if !tok.is_empty() {
+                out.insert(tok);
+            }
+        }
+    }
+    out
+}
+
+/// `(token, line_number)` for every `DESIGN.md §N` citation in `text`.
+fn citations(text: &str) -> Vec<(String, usize)> {
+    const PAT: &str = "DESIGN.md §";
+    let mut out = Vec::new();
+    for (idx, _) in text.match_indices(PAT) {
+        let line_no = text[..idx].matches('\n').count() + 1;
+        let tok = section_token(text, idx + PAT.len());
+        // A bare "DESIGN.md §" with no number is itself a dangling
+        // reference; surface it as an empty token.
+        out.push((tok, line_no));
+    }
+    out
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs")
+            && path.file_name().is_some_and(|n| n != "doc_refs.rs")
+        {
+            // This checker's own pattern literals and test fixtures are
+            // not citations; skip self.
+            out.push(path);
+        }
+    }
+}
+
+#[test]
+fn design_doc_citations_resolve() {
+    let crate_root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let repo_root = crate_root.parent().expect("crate lives under the repo root");
+    assert!(
+        repo_root.join("README.md").is_file(),
+        "README.md must exist at the repo root"
+    );
+    let design = std::fs::read_to_string(repo_root.join("DESIGN.md"))
+        .expect("DESIGN.md must exist at the repo root");
+    let headings = heading_tokens(&design);
+    assert!(
+        !headings.is_empty(),
+        "DESIGN.md has no §-numbered headings to cite"
+    );
+
+    let mut files = Vec::new();
+    for sub in ["src", "benches", "tests", "examples"] {
+        collect_rs_files(&crate_root.join(sub), &mut files);
+    }
+    assert!(!files.is_empty(), "no Rust sources found under {}", crate_root.display());
+
+    let mut total = 0usize;
+    let mut dangling = Vec::new();
+    for file in &files {
+        let text = std::fs::read_to_string(file).unwrap_or_default();
+        for (tok, line) in citations(&text) {
+            total += 1;
+            if tok.is_empty() || !headings.contains(&tok) {
+                dangling.push(format!(
+                    "{}:{line}: cites DESIGN.md §{tok} but DESIGN.md has no such heading \
+                     (headings present: {headings:?})",
+                    file.display()
+                ));
+            }
+        }
+    }
+    assert!(dangling.is_empty(), "dangling DESIGN.md citations:\n{}", dangling.join("\n"));
+    // The five pre-existing citations (beaver, sharing, adder, figures,
+    // ablation bench) plus the offline/online split's: if this count ever
+    // drops to zero the scan itself has broken.
+    assert!(total >= 5, "expected at least 5 DESIGN.md citations, scanned {total}");
+}
+
+#[test]
+fn token_parsing() {
+    assert_eq!(section_token("5.2, blah", 0), "5.2");
+    assert_eq!(section_token("4. End", 0), "4");
+    assert_eq!(section_token("6 for the index", 0), "6");
+    let heads = heading_tokens("# T\n## §4 · Dealer\n### §5.2 · Adder\nno § here");
+    assert_eq!(heads, ["4", "5.2"].iter().map(|s| s.to_string()).collect());
+    let cites = citations("x\nsee DESIGN.md §4, and\nDESIGN.md §5.2 documents");
+    assert_eq!(cites, vec![("4".into(), 2), ("5.2".into(), 3)]);
+}

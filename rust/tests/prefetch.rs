@@ -1,0 +1,327 @@
+//! Offline/online split suite: the background-prefetch provisioning path
+//! must be **bit-identical** to the synchronous dealer — per-party output
+//! shares, wire bytes, round counts and `TripleUsage` — across layouts
+//! (lane / bitsliced), thread counts and party counts; the schedule
+//! prediction must match the protocol's actual draws (pinned through a
+//! recording dry run); and the steady state must stay allocation-free
+//! with clean mid-stream cancellation. Dealer-level stream equality is
+//! pinned by the unit tests in `beaver::prefetch`; here we pin the
+//! protocol built on top.
+
+use hummingbird::beaver::schedule::{Recorder, TripleSchedule};
+use hummingbird::beaver::TtpDealer;
+use hummingbird::crypto::prg::Prg;
+use hummingbird::gmw::harness::run_parties_with_threaded;
+use hummingbird::gmw::kernels::{BitslicedKernels, RustKernels};
+use hummingbird::gmw::{bitsliced, ReluPlan};
+use hummingbird::sharing::{reconstruct_arith, share_arith};
+
+fn relu_inputs(n: usize, plan: ReluPlan, seed: u64) -> Vec<u64> {
+    let mut prg = Prg::new(seed, n as u64);
+    (0..n)
+        .map(|i| {
+            let v = prg.next_u64() % (1u64 << (plan.k.max(2) - 1));
+            if i % 2 == 0 {
+                v
+            } else {
+                v.wrapping_neg()
+            }
+        })
+        .collect()
+}
+
+/// The acceptance pin: with prefetch on, per-party shares, wire bytes,
+/// rounds and `TripleUsage` equal the synchronous run — for both layouts,
+/// 1/N threads, 2/3 parties, windows including w = 1, the full-width
+/// baseline and the identity plan — and **every draw is served from
+/// pre-filled buffers** (zero fallback expansions inside the online path).
+#[test]
+fn prefetch_relu_bit_identical_across_layouts_and_threads() {
+    let default_threads = hummingbird::util::threadpool::default_threads();
+    let plans = [
+        ReluPlan::new(12, 4).unwrap(),  // w = 8, the paper's regime
+        ReluPlan::new(8, 7).unwrap(),   // w = 1: adder-free DReLU
+        ReluPlan::new(20, 0).unwrap(),  // eco window
+        ReluPlan::new(10, 10).unwrap(), // identity: draw-free
+    ];
+    for parties in [2usize, 3] {
+        for plan in plans {
+            let n = 321usize;
+            let x = relu_inputs(n, plan, 9 + plan.k as u64 * 67 + plan.m as u64);
+            let mut prg = Prg::new(1000, parties as u64);
+            let xs = share_arith(&mut prg, &x, parties);
+            for threads in [1usize, default_threads] {
+                let ctx = format!(
+                    "parties={parties} k={} m={} threads={threads}",
+                    plan.k, plan.m
+                );
+                let run_lane_sync = run_parties_with_threaded(
+                    parties,
+                    17,
+                    threads,
+                    |_| RustKernels::default(),
+                    |p| {
+                        let me = p.party();
+                        let r = p.relu(&xs[me], plan).unwrap();
+                        (r, p.triple_usage())
+                    },
+                );
+                let run_lane_pf = run_parties_with_threaded(
+                    parties,
+                    17,
+                    threads,
+                    |_| RustKernels::default(),
+                    |p| {
+                        p.enable_prefetch(TripleSchedule::for_relu(n, plan, p.parties()), false);
+                        let me = p.party();
+                        let r = p.relu(&xs[me], plan).unwrap();
+                        let st = p.prefetch_stats().expect("prefetcher installed");
+                        assert_eq!(st.fallback_ops, 0, "online path expanded PRG material");
+                        (r, p.triple_usage())
+                    },
+                );
+                assert_eq!(run_lane_sync.outputs, run_lane_pf.outputs, "lane shares: {ctx}");
+                assert_eq!(
+                    run_lane_sync.trace.total_bytes(),
+                    run_lane_pf.trace.total_bytes(),
+                    "lane wire bytes: {ctx}"
+                );
+                assert_eq!(
+                    run_lane_sync.trace.total_rounds(),
+                    run_lane_pf.trace.total_rounds(),
+                    "lane rounds: {ctx}"
+                );
+
+                let run_sliced_sync = run_parties_with_threaded(
+                    parties,
+                    17,
+                    threads,
+                    |_| BitslicedKernels::default(),
+                    |p| {
+                        let me = p.party();
+                        let r = p.relu(&xs[me], plan).unwrap();
+                        (r, p.triple_usage())
+                    },
+                );
+                let run_sliced_pf = run_parties_with_threaded(
+                    parties,
+                    17,
+                    threads,
+                    |_| BitslicedKernels::default(),
+                    |p| {
+                        p.enable_prefetch(TripleSchedule::for_relu(n, plan, p.parties()), false);
+                        let me = p.party();
+                        let r = p.relu(&xs[me], plan).unwrap();
+                        let st = p.prefetch_stats().expect("prefetcher installed");
+                        assert_eq!(st.fallback_ops, 0, "online path expanded PRG material");
+                        (r, p.triple_usage())
+                    },
+                );
+                assert_eq!(
+                    run_sliced_sync.outputs, run_sliced_pf.outputs,
+                    "bitsliced shares: {ctx}"
+                );
+                assert_eq!(
+                    run_sliced_sync.trace.total_bytes(),
+                    run_sliced_pf.trace.total_bytes(),
+                    "bitsliced wire bytes: {ctx}"
+                );
+                assert_eq!(
+                    run_sliced_sync.trace.total_rounds(),
+                    run_sliced_pf.trace.total_rounds(),
+                    "bitsliced rounds: {ctx}"
+                );
+                // And across layouts (prefetch preserves the PR 4 invariant).
+                assert_eq!(run_lane_pf.outputs, run_sliced_pf.outputs, "cross-layout: {ctx}");
+
+                // Still a ReLU.
+                let shares: Vec<Vec<u64>> =
+                    run_lane_pf.outputs.iter().map(|(s, _)| s.clone()).collect();
+                let z = reconstruct_arith(&shares);
+                if plan.is_identity() {
+                    assert_eq!(z, x, "{ctx}");
+                } else {
+                    for (xi, zi) in x.iter().zip(&z) {
+                        assert!(*zi == 0 || zi == xi, "{ctx}");
+                    }
+                }
+                if default_threads == 1 {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Recording dry run: the draws a real ReLU performs — in both layouts —
+/// are exactly the predicted `TripleSchedule`, for every party.
+#[test]
+fn schedule_predicts_actual_relu_draws() {
+    for parties in [2usize, 3] {
+        for plan in
+            [ReluPlan::new(12, 4).unwrap(), ReluPlan::new(8, 7).unwrap(), ReluPlan::BASELINE]
+        {
+            let n = 130usize;
+            let x = relu_inputs(n, plan, 77);
+            let mut prg = Prg::new(2000, parties as u64);
+            let xs = share_arith(&mut prg, &x, parties);
+            let want = TripleSchedule::for_relu(n, plan, parties).ops;
+            let lane = run_parties_with_threaded(
+                parties,
+                21,
+                1,
+                |_| RustKernels::default(),
+                |p| {
+                    let (rec, log) = Recorder::new(TtpDealer::new(21, p.party(), p.parties()));
+                    p.set_triple_source(Box::new(rec));
+                    let me = p.party();
+                    p.relu(&xs[me], plan).unwrap();
+                    log.lock().unwrap().clone()
+                },
+            );
+            for (party, got) in lane.outputs.iter().enumerate() {
+                assert_eq!(
+                    got, &want,
+                    "lane parties={parties} k={} m={} party={party}",
+                    plan.k, plan.m
+                );
+            }
+            // The bitsliced engine draws the identical schedule (same
+            // (w, n_seg, segs) at every AND round — the PR 4 invariant the
+            // prefetcher relies on).
+            let sliced = run_parties_with_threaded(
+                parties,
+                21,
+                1,
+                |_| BitslicedKernels::default(),
+                |p| {
+                    let (rec, log) = Recorder::new(TtpDealer::new(21, p.party(), p.parties()));
+                    p.set_triple_source(Box::new(rec));
+                    let me = p.party();
+                    p.relu(&xs[me], plan).unwrap();
+                    log.lock().unwrap().clone()
+                },
+            );
+            for (party, got) in sliced.outputs.iter().enumerate() {
+                assert_eq!(
+                    got, &want,
+                    "bitsliced parties={parties} k={} m={} party={party}",
+                    plan.k, plan.m
+                );
+            }
+        }
+    }
+}
+
+/// Steady state with a cycling prefetcher: the engine arena and transport
+/// pools stay allocation-free exactly as with the synchronous dealer, no
+/// draw ever falls back to inline expansion, and the producer's own
+/// allocations are bounded by the circulating lookahead buffers — not by
+/// the number of passes.
+#[test]
+fn prefetch_steady_state_stays_allocation_free() {
+    let parties = 2;
+    let n = 512usize;
+    let plan = ReluPlan::new(12, 4).unwrap();
+    let x = relu_inputs(n, plan, 40);
+    let mut prg = Prg::new(3000, 0);
+    let xs = share_arith(&mut prg, &x, parties);
+    run_parties_with_threaded(
+        parties,
+        6,
+        1,
+        |_| RustKernels::default(),
+        |p| {
+            let schedule = TripleSchedule::for_relu(n, plan, parties);
+            let bufs_per_cycle: u64 = schedule
+                .ops
+                .iter()
+                .map(|op| match op {
+                    hummingbird::beaver::schedule::DrawOp::DaBits { .. } => 2u64,
+                    _ => 3,
+                })
+                .sum();
+            let cycles = 6u64;
+            p.enable_prefetch(schedule, true);
+            let me = p.party();
+            let mut out = vec![0u64; n];
+            // Two warm passes populate every pool (engine, transport and
+            // the producer's circulating sets).
+            p.relu_into(&xs[me], plan, &mut out).unwrap();
+            p.relu_into(&xs[me], plan, &mut out).unwrap();
+            let warm = p.arena_stats();
+            let warm_net = p.transport.pool_stats();
+            assert_eq!(warm.checkouts, warm.returns, "engine buffers leaked during warmup");
+            for round in 0..cycles - 2 {
+                p.relu_into(&xs[me], plan, &mut out).unwrap();
+                let s = p.arena_stats();
+                assert_eq!(
+                    s.alloc_misses, warm.alloc_misses,
+                    "steady-state prefetched relu allocated in the engine (round {round})"
+                );
+                assert_eq!(s.checkouts, s.returns, "unbalanced checkout (round {round})");
+                let t = p.transport.pool_stats();
+                assert_eq!(
+                    t.alloc_misses,
+                    warm_net.alloc_misses,
+                    "steady-state prefetched relu allocated a transport payload (round {round})"
+                );
+            }
+            let st = p.prefetch_stats().expect("prefetcher installed");
+            assert_eq!(st.fallback_ops, 0, "a draw fell back to inline expansion");
+            // Producer allocations bounded by lookahead (~3 op-sets in
+            // flight), independent of how many passes ran.
+            assert!(
+                st.producer_arena.alloc_misses <= 3 * bufs_per_cycle,
+                "producer allocates per pass: {:?} (bufs/cycle = {bufs_per_cycle})",
+                st.producer_arena
+            );
+            out
+        },
+    );
+}
+
+/// Mid-stream cancel through the engine: a cycling prefetcher provisioned
+/// for endless ReLUs is cancelled while mid-cycle (the DReLU consumed the
+/// binary draws but not the Mult triple) — the party drop must join the
+/// producer cleanly, with no hang and no panic.
+#[test]
+fn prefetch_cancels_cleanly_mid_stream() {
+    let parties = 2;
+    let n = 256usize;
+    let plan = ReluPlan::new(12, 4).unwrap();
+    let x = relu_inputs(n, plan, 50);
+    let mut prg = Prg::new(4000, 0);
+    let xs = share_arith(&mut prg, &x, parties);
+    let run = run_parties_with_threaded(
+        parties,
+        9,
+        1,
+        |_| RustKernels::default(),
+        |p| {
+            p.enable_prefetch(TripleSchedule::for_relu(n, plan, parties), true);
+            let me = p.party();
+            // DReLU only: leaves the cycle's Arith op (and the whole next
+            // cycle) unconsumed; the party is dropped right after.
+            p.drelu(&xs[me], plan).unwrap()
+        },
+    );
+    // And it still computed a DReLU (0/1 per element).
+    let z = reconstruct_arith(&run.outputs);
+    assert!(z.iter().all(|v| *v == 0 || *v == 1));
+}
+
+/// w = 1 sanity at the plane layer: the first scheduled draw of a w = 1
+/// ReLU is the daBit batch (the adder is XOR-only), and prefetching it
+/// still satisfies the engine.
+#[test]
+fn prefetch_w1_schedule_has_no_binary_draws() {
+    let plan = ReluPlan::new(8, 7).unwrap();
+    let s = TripleSchedule::for_relu(64, plan, 2);
+    assert!(s
+        .ops
+        .iter()
+        .all(|op| !matches!(op, hummingbird::beaver::schedule::DrawOp::BinPlanes { .. })));
+    // plane_len is still well-defined at w = 1 (used by buf_shape).
+    assert_eq!(bitsliced::plane_len(64, 1), 1);
+}

@@ -263,7 +263,7 @@ fn prop_beaver_usage_accounting() {
         let run = run_parties(2, 11, move |p| {
             let me = p.party();
             p.relu(&xs2[me], plan).unwrap();
-            p.dealer.usage()
+            p.triple_usage()
         });
         let u = run.outputs[0];
         // ReLU = a2b (1 + per-stage ANDs) + daBits + 1 arith mult.
