@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     let mut agree_plain = 0usize;
     let mut latencies = Vec::new();
     for (i, rx) in rxs {
-        let r = rx.recv()?;
+        let r = rx.recv()??;
         let label = dataset.test.labels[i] as usize;
         let plain_logits = plain.forward(dataset.test.batch(i, i + 1), 1)?;
         let plain_pred = PlainExecutor::argmax(&plain_logits, cfg.num_classes)[0];

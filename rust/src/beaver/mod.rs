@@ -85,7 +85,18 @@ pub mod schedule;
 pub trait TripleSource: Send {
     /// Fill `a`, `b`, `c` (equal lengths) with this party's shares of
     /// fresh arithmetic triples (c = a·b over Z/2^64).
-    fn arith_triples_into(&mut self, a: &mut [u64], b: &mut [u64], c: &mut [u64]);
+    ///
+    /// Draws are fallible: a source backed by a background producer or a
+    /// remote dealer reports stream divergence or exhaustion as the fatal
+    /// [`Error::Beaver`](crate::error::Error::Beaver) instead of
+    /// panicking the party thread (DESIGN.md §7). The synchronous
+    /// [`TtpDealer`] never fails.
+    fn arith_triples_into(
+        &mut self,
+        a: &mut [u64],
+        b: &mut [u64],
+        c: &mut [u64],
+    ) -> crate::error::Result<()>;
 
     /// Fill `a`, `b`, `c` with plane-native binary triple shares for
     /// `segs` segments of `n_seg` w-bit lanes each (see
@@ -98,10 +109,11 @@ pub trait TripleSource: Send {
         a: &mut [u64],
         b: &mut [u64],
         c: &mut [u64],
-    );
+    ) -> crate::error::Result<()>;
 
     /// Fill `r_bin`/`r_arith` (equal lengths) with daBit shares.
-    fn dabits_into(&mut self, r_bin: &mut [u64], r_arith: &mut [u64]);
+    fn dabits_into(&mut self, r_bin: &mut [u64], r_arith: &mut [u64])
+        -> crate::error::Result<()>;
 
     /// Cumulative usage as observed at the *consumer*: between protocol
     /// steps this must equal what a synchronous dealer would report at the
@@ -375,10 +387,17 @@ impl TtpDealer {
     }
 }
 
-/// The synchronous provider: every draw expands the PRG inline.
+/// The synchronous provider: every draw expands the PRG inline and can
+/// never fail (the `Ok` wrapping is the whole trait impl).
 impl TripleSource for TtpDealer {
-    fn arith_triples_into(&mut self, a: &mut [u64], b: &mut [u64], c: &mut [u64]) {
-        TtpDealer::arith_triples_into(self, a, b, c)
+    fn arith_triples_into(
+        &mut self,
+        a: &mut [u64],
+        b: &mut [u64],
+        c: &mut [u64],
+    ) -> crate::error::Result<()> {
+        TtpDealer::arith_triples_into(self, a, b, c);
+        Ok(())
     }
 
     fn bin_triples_planes_into(
@@ -389,12 +408,18 @@ impl TripleSource for TtpDealer {
         a: &mut [u64],
         b: &mut [u64],
         c: &mut [u64],
-    ) {
-        TtpDealer::bin_triples_planes_into(self, w, n_seg, segs, a, b, c)
+    ) -> crate::error::Result<()> {
+        TtpDealer::bin_triples_planes_into(self, w, n_seg, segs, a, b, c);
+        Ok(())
     }
 
-    fn dabits_into(&mut self, r_bin: &mut [u64], r_arith: &mut [u64]) {
-        TtpDealer::dabits_into(self, r_bin, r_arith)
+    fn dabits_into(
+        &mut self,
+        r_bin: &mut [u64],
+        r_arith: &mut [u64],
+    ) -> crate::error::Result<()> {
+        TtpDealer::dabits_into(self, r_bin, r_arith);
+        Ok(())
     }
 
     fn usage(&self) -> TripleUsage {

@@ -13,12 +13,15 @@
 //! Correctness contract: the PRG stream is sequential, so prefetched
 //! material is bit-identical to inline expansion **iff** the protocol's
 //! draws arrive in exactly the scheduled order with exactly the scheduled
-//! shapes. The consumer asserts this op-by-op; a mismatch means the
+//! shapes. The consumer checks this op-by-op; a mismatch means the
 //! schedule prediction is wrong and the streams have already diverged, so
-//! it panics rather than silently desynchronizing the parties. Running off
-//! the *end* of a non-cycling schedule is not an error: the dealer is
-//! recovered from the producer and the remaining draws are served
-//! synchronously (transparent fallback, counted in
+//! the draw (and every draw after it — the source is *poisoned*) reports
+//! the fatal [`Error::Beaver`] instead of silently desynchronizing the
+//! parties. The error propagates through the engine and fails the
+//! in-flight job; it does not panic the party thread (DESIGN.md §7).
+//! Running off the *end* of a non-cycling schedule is not an error: the
+//! dealer is recovered from the producer and the remaining draws are
+//! served synchronously (transparent fallback, counted in
 //! [`PrefetchStats::fallback_ops`]).
 //!
 //! Buffer discipline mirrors the engine's arena: the producer checks its
@@ -40,6 +43,7 @@ use std::thread::JoinHandle;
 
 use super::schedule::{DrawOp, TripleSchedule};
 use super::{TripleSource, TripleUsage, TtpDealer};
+use crate::error::{Error, Result};
 use crate::util::arena::{Arena, ArenaStats};
 
 /// Completed draw ops the bounded hand-off channel holds: the consumer's
@@ -91,6 +95,9 @@ pub struct PrefetchDealer {
     /// Engaged once the non-cycling schedule is exhausted: the recovered
     /// dealer, positioned exactly at the end of the expanded stream.
     fallback: Option<TtpDealer>,
+    /// Set on the first schedule mismatch (or producer panic): the stream
+    /// position is unrecoverable, so every later draw fails too.
+    poisoned: bool,
     last_usage: TripleUsage,
     stats: PrefetchStats,
 }
@@ -116,6 +123,7 @@ impl PrefetchDealer {
             warm: Some(warm_rx),
             worker: Some(worker),
             fallback: None,
+            poisoned: false,
             last_usage: TripleUsage::default(),
             stats: PrefetchStats::default(),
         }
@@ -137,42 +145,68 @@ impl PrefetchDealer {
         self.stats
     }
 
-    /// Take the next prefetched entry, asserting it matches the draw the
-    /// protocol actually performs; engage the synchronous fallback once
-    /// the producer is done.
-    fn next(&mut self, want: DrawOp) -> Option<Prefetched> {
+    /// Take the next prefetched entry, checking that it matches the draw
+    /// the protocol actually performs; engage the synchronous fallback
+    /// once the producer is done. A mismatch (or a dead producer) is the
+    /// fatal [`Error::Beaver`] — the expanded stream position cannot be
+    /// rewound, so the source poisons itself and every later draw fails
+    /// too (DESIGN.md §7).
+    fn next(&mut self, want: DrawOp) -> Result<Option<Prefetched>> {
+        if self.poisoned {
+            return Err(Error::Beaver(
+                "prefetch stream poisoned by an earlier schedule mismatch".into(),
+            ));
+        }
         if self.fallback.is_none() {
-            match self.ready.as_ref().expect("prefetch channel").recv() {
+            let Some(ready) = self.ready.as_ref() else {
+                return Err(Error::Beaver("prefetch hand-off channel closed".into()));
+            };
+            match ready.recv() {
                 Ok(entry) => {
-                    assert_eq!(
-                        entry.op, want,
-                        "prefetch schedule mismatch: the protocol drew {want:?} but the \
-                         provisioning schedule expected {:?}; the offline phase expanded \
-                         the dealer stream in schedule order, so the streams have \
-                         diverged — fix the TripleSchedule for this workload",
-                        entry.op
-                    );
+                    if entry.op != want {
+                        self.poisoned = true;
+                        return Err(Error::Beaver(format!(
+                            "prefetch schedule mismatch: the protocol drew {want:?} but the \
+                             provisioning schedule expected {:?}; the offline phase expanded \
+                             the dealer stream in schedule order, so the streams have \
+                             diverged — fix the TripleSchedule for this workload",
+                            entry.op
+                        )));
+                    }
                     self.stats.prefetched_ops += 1;
                     self.stats.producer_arena = entry.producer_arena;
                     self.last_usage = entry.usage;
-                    return Some(entry);
+                    return Ok(Some(entry));
                 }
                 Err(_) => {
                     // Channel drained and producer exited: recover the
                     // dealer (positioned at the end of the expanded
                     // stream) for synchronous service.
-                    let dealer = self
-                        .worker
-                        .take()
-                        .expect("prefetch worker")
-                        .join()
-                        .expect("prefetch producer panicked");
-                    self.fallback = Some(dealer);
+                    let Some(worker) = self.worker.take() else {
+                        return Err(Error::Beaver("prefetch producer already gone".into()));
+                    };
+                    match worker.join() {
+                        Ok(dealer) => self.fallback = Some(dealer),
+                        Err(_) => {
+                            self.poisoned = true;
+                            return Err(Error::Beaver(
+                                "prefetch producer thread panicked".into(),
+                            ));
+                        }
+                    }
                 }
             }
         }
         self.stats.fallback_ops += 1;
-        None
+        Ok(None)
+    }
+
+    /// The recovered synchronous dealer (invariant: engaged whenever
+    /// [`PrefetchDealer::next`] returns `Ok(None)`).
+    fn fallback_mut(&mut self) -> Result<&mut TtpDealer> {
+        self.fallback
+            .as_mut()
+            .ok_or_else(|| Error::Beaver("prefetch fallback dealer missing".into()))
     }
 
     /// Return a consumed entry's buffers to the producer for reuse.
@@ -186,16 +220,17 @@ impl PrefetchDealer {
 }
 
 impl TripleSource for PrefetchDealer {
-    fn arith_triples_into(&mut self, a: &mut [u64], b: &mut [u64], c: &mut [u64]) {
-        match self.next(DrawOp::Arith { n: a.len() }) {
+    fn arith_triples_into(&mut self, a: &mut [u64], b: &mut [u64], c: &mut [u64]) -> Result<()> {
+        match self.next(DrawOp::Arith { n: a.len() })? {
             Some(e) => {
                 a.copy_from_slice(&e.bufs[0]);
                 b.copy_from_slice(&e.bufs[1]);
                 c.copy_from_slice(&e.bufs[2]);
                 self.finish(e);
             }
-            None => self.fallback.as_mut().expect("fallback dealer").arith_triples_into(a, b, c),
+            None => self.fallback_mut()?.arith_triples_into(a, b, c),
         }
+        Ok(())
     }
 
     fn bin_triples_planes_into(
@@ -206,31 +241,29 @@ impl TripleSource for PrefetchDealer {
         a: &mut [u64],
         b: &mut [u64],
         c: &mut [u64],
-    ) {
-        match self.next(DrawOp::BinPlanes { w, n_seg, segs }) {
+    ) -> Result<()> {
+        match self.next(DrawOp::BinPlanes { w, n_seg, segs })? {
             Some(e) => {
                 a.copy_from_slice(&e.bufs[0]);
                 b.copy_from_slice(&e.bufs[1]);
                 c.copy_from_slice(&e.bufs[2]);
                 self.finish(e);
             }
-            None => self
-                .fallback
-                .as_mut()
-                .expect("fallback dealer")
-                .bin_triples_planes_into(w, n_seg, segs, a, b, c),
+            None => self.fallback_mut()?.bin_triples_planes_into(w, n_seg, segs, a, b, c),
         }
+        Ok(())
     }
 
-    fn dabits_into(&mut self, r_bin: &mut [u64], r_arith: &mut [u64]) {
-        match self.next(DrawOp::DaBits { n: r_bin.len() }) {
+    fn dabits_into(&mut self, r_bin: &mut [u64], r_arith: &mut [u64]) -> Result<()> {
+        match self.next(DrawOp::DaBits { n: r_bin.len() })? {
             Some(e) => {
                 r_bin.copy_from_slice(&e.bufs[0]);
                 r_arith.copy_from_slice(&e.bufs[1]);
                 self.finish(e);
             }
-            None => self.fallback.as_mut().expect("fallback dealer").dabits_into(r_bin, r_arith),
+            None => self.fallback_mut()?.dabits_into(r_bin, r_arith),
         }
+        Ok(())
     }
 
     fn usage(&self) -> TripleUsage {
@@ -354,7 +387,7 @@ mod tests {
                         sync.arith_triples_into(&mut s0[0], &mut s1[0], &mut s2[0]);
                         let (p0, prest) = p.split_at_mut(1);
                         let (p1, p2) = prest.split_at_mut(1);
-                        pf.arith_triples_into(&mut p0[0], &mut p1[0], &mut p2[0]);
+                        pf.arith_triples_into(&mut p0[0], &mut p1[0], &mut p2[0]).unwrap();
                     }
                     DrawOp::BinPlanes { w, n_seg, segs } => {
                         let (s0, srest) = s.split_at_mut(1);
@@ -366,14 +399,15 @@ mod tests {
                         let (p1, p2) = prest.split_at_mut(1);
                         pf.bin_triples_planes_into(
                             w, n_seg, segs, &mut p0[0], &mut p1[0], &mut p2[0],
-                        );
+                        )
+                        .unwrap();
                     }
                     DrawOp::DaBits { .. } => {
                         debug_assert_eq!(nbufs, 2);
                         let (s0, srest) = s.split_at_mut(1);
                         sync.dabits_into(&mut s0[0], &mut srest[0]);
                         let (p0, prest) = p.split_at_mut(1);
-                        pf.dabits_into(&mut p0[0], &mut prest[0]);
+                        pf.dabits_into(&mut p0[0], &mut prest[0]).unwrap();
                     }
                 }
                 assert_eq!(s, p, "party={party} op={op:?}");
@@ -397,7 +431,7 @@ mod tests {
             let mut a = vec![0u64; n];
             let mut b = vec![0u64; n];
             let mut c = vec![0u64; n];
-            d.arith_triples_into(&mut a, &mut b, &mut c);
+            d.arith_triples_into(&mut a, &mut b, &mut c).unwrap();
             (a, b, c)
         };
         // Scheduled draw, then two unscheduled ones.
@@ -406,7 +440,7 @@ mod tests {
         let mut sb = (vec![0u64; 5], vec![0u64; 5]);
         let mut pb = (vec![0u64; 5], vec![0u64; 5]);
         sync.dabits_into(&mut sb.0, &mut sb.1);
-        pf.dabits_into(&mut pb.0, &mut pb.1);
+        pf.dabits_into(&mut pb.0, &mut pb.1).unwrap();
         assert_eq!(sb, pb);
         assert_eq!(pf.usage(), sync.usage());
         let st = pf.stats();
@@ -414,16 +448,26 @@ mod tests {
     }
 
     /// A draw that diverges from the schedule is unrecoverable (the stream
-    /// was expanded in schedule order) and must fail loudly.
+    /// was expanded in schedule order): it reports the fatal
+    /// `Error::Beaver` — propagated, not a panic — and poisons the source
+    /// so every later draw fails too (DESIGN.md §7).
     #[test]
-    #[should_panic(expected = "prefetch schedule mismatch")]
-    fn schedule_mismatch_panics() {
+    fn schedule_mismatch_is_fatal_error() {
         let mut sched = TripleSchedule::new();
         sched.ops.push(DrawOp::Arith { n: 4 });
         let mut pf = PrefetchDealer::spawn(TtpDealer::new(7, 0, 2), sched, false);
         let mut r_bin = vec![0u64; 4];
         let mut r_arith = vec![0u64; 4];
-        pf.dabits_into(&mut r_bin, &mut r_arith);
+        let err = pf.dabits_into(&mut r_bin, &mut r_arith).unwrap_err();
+        assert!(matches!(err, Error::Beaver(_)), "got {err}");
+        assert!(err.to_string().contains("schedule mismatch"), "got {err}");
+        assert!(!err.is_retryable());
+        // Poisoned: even the correctly-scheduled shape now fails.
+        let mut a = vec![0u64; 4];
+        let mut b = vec![0u64; 4];
+        let mut c = vec![0u64; 4];
+        let err2 = pf.arith_triples_into(&mut a, &mut b, &mut c).unwrap_err();
+        assert!(matches!(err2, Error::Beaver(_)), "got {err2}");
     }
 
     /// Cycling producers refill the same schedule indefinitely and reuse
@@ -441,10 +485,10 @@ mod tests {
             let mut s = (vec![0u64; 64], vec![0u64; 64], vec![0u64; 64]);
             let mut p = (vec![0u64; 64], vec![0u64; 64], vec![0u64; 64]);
             sync.arith_triples_into(&mut s.0, &mut s.1, &mut s.2);
-            pf.arith_triples_into(&mut p.0, &mut p.1, &mut p.2);
+            pf.arith_triples_into(&mut p.0, &mut p.1, &mut p.2).unwrap();
             assert_eq!(s, p);
             sync.dabits_into(&mut s.0, &mut s.1);
-            pf.dabits_into(&mut p.0, &mut p.1);
+            pf.dabits_into(&mut p.0, &mut p.1).unwrap();
             assert_eq!((&s.0, &s.1), (&p.0, &p.1));
         }
         let st = pf.stats();
@@ -478,12 +522,12 @@ mod tests {
         let mut a = vec![0u64; 1024];
         let mut b = vec![0u64; 1024];
         let mut c = vec![0u64; 1024];
-        pf.arith_triples_into(&mut a, &mut b, &mut c);
+        pf.arith_triples_into(&mut a, &mut b, &mut c).unwrap();
         drop(pf);
         // Empty schedule: warm immediately, every draw is a fallback.
         let mut pf = PrefetchDealer::spawn(TtpDealer::new(1, 0, 2), TripleSchedule::new(), false);
         pf.wait_warm();
-        pf.dabits_into(&mut a[..2], &mut b[..2]);
+        pf.dabits_into(&mut a[..2], &mut b[..2]).unwrap();
         assert_eq!(pf.stats().fallback_ops, 1);
     }
 }

@@ -212,12 +212,24 @@ impl Recorder {
         let log = Arc::new(Mutex::new(Vec::new()));
         (Recorder { inner, log: Arc::clone(&log) }, log)
     }
+
+    /// Lock the draw log, recovering from poisoning (the log is
+    /// append-only and stays consistent if a holder panicked).
+    fn lock_log(&self) -> std::sync::MutexGuard<'_, Vec<DrawOp>> {
+        self.log.lock().unwrap_or_else(|e| e.into_inner())
+    }
 }
 
 impl TripleSource for Recorder {
-    fn arith_triples_into(&mut self, a: &mut [u64], b: &mut [u64], c: &mut [u64]) {
-        self.log.lock().unwrap().push(DrawOp::Arith { n: a.len() });
+    fn arith_triples_into(
+        &mut self,
+        a: &mut [u64],
+        b: &mut [u64],
+        c: &mut [u64],
+    ) -> crate::error::Result<()> {
+        self.lock_log().push(DrawOp::Arith { n: a.len() });
         self.inner.arith_triples_into(a, b, c);
+        Ok(())
     }
 
     fn bin_triples_planes_into(
@@ -228,14 +240,20 @@ impl TripleSource for Recorder {
         a: &mut [u64],
         b: &mut [u64],
         c: &mut [u64],
-    ) {
-        self.log.lock().unwrap().push(DrawOp::BinPlanes { w, n_seg, segs });
+    ) -> crate::error::Result<()> {
+        self.lock_log().push(DrawOp::BinPlanes { w, n_seg, segs });
         self.inner.bin_triples_planes_into(w, n_seg, segs, a, b, c);
+        Ok(())
     }
 
-    fn dabits_into(&mut self, r_bin: &mut [u64], r_arith: &mut [u64]) {
-        self.log.lock().unwrap().push(DrawOp::DaBits { n: r_bin.len() });
+    fn dabits_into(
+        &mut self,
+        r_bin: &mut [u64],
+        r_arith: &mut [u64],
+    ) -> crate::error::Result<()> {
+        self.lock_log().push(DrawOp::DaBits { n: r_bin.len() });
         self.inner.dabits_into(r_bin, r_arith);
+        Ok(())
     }
 
     fn usage(&self) -> TripleUsage {

@@ -1,4 +1,14 @@
 //! Request queue + dynamic batcher + party thread pool.
+//!
+//! # Degradation under faults (DESIGN.md §7)
+//!
+//! Party threads never take the process down: every fallible step reports
+//! into the batcher over the output channel, a faulted batch answers its
+//! requests with an error (counted in
+//! [`Metrics`](super::metrics::Metrics)), and the batcher then tears the
+//! party session down and spawns a fresh one from the retained
+//! [`SessionSpec`] — the next batch is served by clean parties on the
+//! same coordinator, accounting onto the same long-lived trace.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -12,8 +22,9 @@ use crate::gmw::GmwParty;
 use crate::hummingbird::PlanSet;
 use crate::model::{Archive, ExecBreakdown, ModelConfig, PlainExecutor, ShareExecutor, ShareWeights};
 use crate::net::accounting::{CommTrace, Phase};
-use crate::net::local::hub;
-use crate::net::Transport;
+use crate::net::fault::{FaultProfile, FaultyTransport};
+use crate::net::local::hub_with;
+use crate::net::{NetConfig, Transport};
 use crate::ring::FixedPoint;
 use crate::runtime::{Manifest, Runtime, XlaKernels};
 use crate::sharing::share_arith;
@@ -53,6 +64,16 @@ pub struct ServeOptions {
     /// dealer PRG expansion happens inside the online AND rounds. Results,
     /// wire bytes and `TripleUsage` are bit-identical either way.
     pub prefetch: bool,
+    /// Session-layer deadlines (`--round-timeout-ms` etc., DESIGN.md §7):
+    /// a party thread that misses `net.round_timeout` fails its batch
+    /// instead of wedging the coordinator.
+    pub net: NetConfig,
+    /// Deterministic fault injection for chaos testing (`--fault-profile`,
+    /// see [`crate::net::fault`]). Applied to the *initial* party session
+    /// only: a respawned session after the injected fault runs clean,
+    /// which is exactly what the recovery tests assert. `None` in
+    /// production.
+    pub fault_profile: Option<FaultProfile>,
 }
 
 impl ServeOptions {
@@ -68,6 +89,8 @@ impl ServeOptions {
             layout: BinLayout::default(),
             threads: 0,
             prefetch: false,
+            net: NetConfig::default(),
+            fault_profile: None,
         }
     }
 }
@@ -94,7 +117,8 @@ pub struct InferenceResult {
 struct Request {
     input: Vec<f32>,
     enqueued: Instant,
-    resp: Sender<InferenceResult>,
+    /// A faulted session answers with an error instead of never answering.
+    resp: Sender<Result<InferenceResult>>,
 }
 
 /// Job sent to each party thread.
@@ -103,10 +127,90 @@ struct PartyJob {
     shape: Vec<usize>,
 }
 
-/// Output from a party thread.
+/// Output from a party thread: the job's output share, or the fault that
+/// ended this party's session.
 struct PartyOut {
     share: Vec<u64>,
     breakdown: ExecBreakdown,
+}
+
+/// Everything needed to (re)spawn a party session. Retained by the
+/// batcher so a faulted session can be replaced without re-touching disk
+/// state semantics: the same weights/config/plan clones boot every
+/// incarnation, and party 0 of each incarnation accounts onto the same
+/// long-lived trace.
+struct SessionSpec {
+    cfg: ModelConfig,
+    weights: Archive,
+    artifacts_root: std::path::PathBuf,
+    model_art: crate::runtime::registry::ModelArtifacts,
+    plans: PlanSet,
+    parties: usize,
+    seed: u64,
+    backend: String,
+    layout: BinLayout,
+    threads: usize,
+    prefetch: bool,
+    net: NetConfig,
+    /// Taken by the first spawn: respawned sessions always run clean.
+    fault: Option<FaultProfile>,
+    trace: Arc<CommTrace>,
+}
+
+/// One incarnation of the party thread pool.
+struct Session {
+    job_txs: Vec<Sender<PartyJob>>,
+    out_rx: Receiver<(usize, Result<PartyOut>)>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Spawn a fresh party session from the spec. The injected fault profile
+/// (if any) is consumed here, so only the first session misbehaves.
+fn spawn_session(spec: &mut SessionSpec) -> Session {
+    let fault = spec.fault.take();
+    let mut transports = hub_with(spec.parties, spec.net);
+    transports[0].set_trace(Arc::clone(&spec.trace));
+    let mut handles = Vec::new();
+    let mut job_txs = Vec::new();
+    let (out_tx, out_rx) = channel::<(usize, Result<PartyOut>)>();
+    for t in transports {
+        let (jtx, jrx) = channel::<PartyJob>();
+        job_txs.push(jtx);
+        let cfg = spec.cfg.clone();
+        let weights = spec.weights.clone();
+        let root = spec.artifacts_root.clone();
+        let model_art = spec.model_art.clone();
+        let plans = spec.plans.clone();
+        let out_tx = out_tx.clone();
+        let seed = spec.seed;
+        let backend = spec.backend.clone();
+        let layout = spec.layout;
+        let threads = resolve_threads(spec.threads, spec.parties);
+        let prefetch = spec.prefetch;
+        let fault = fault.clone();
+        handles.push(std::thread::spawn(move || match fault {
+            Some(profile) => party_main(
+                FaultyTransport::new(t, &profile),
+                cfg,
+                weights,
+                root,
+                model_art,
+                plans,
+                jrx,
+                out_tx,
+                seed,
+                backend,
+                layout,
+                threads,
+                prefetch,
+            ),
+            None => party_main(
+                t, cfg, weights, root, model_art, plans, jrx, out_tx, seed, backend, layout,
+                threads, prefetch,
+            ),
+        }));
+    }
+    Session { job_txs, out_rx, handles }
 }
 
 /// Handle to a running service.
@@ -115,7 +219,6 @@ pub struct Coordinator {
     pub metrics: Arc<Metrics>,
     pub trace: Arc<CommTrace>,
     batcher: Option<std::thread::JoinHandle<()>>,
-    parties: Vec<std::thread::JoinHandle<()>>,
     pub cfg: ModelConfig,
 }
 
@@ -137,79 +240,63 @@ impl Coordinator {
         let batch = model_art.batch;
         let plans = opts.plan.clone().unwrap_or_else(|| PlanSet::baseline(cfg.relu_groups));
 
-        let transports = hub(opts.parties);
-        let trace = transports[0].trace();
+        // The trace outlives any single party session: every session's
+        // party 0 accounts onto it (spawn_session), so byte/round numbers
+        // keep accumulating across fault-triggered respawns.
+        let trace = Arc::new(CommTrace::new());
+        let spec = SessionSpec {
+            cfg: cfg.clone(),
+            weights,
+            artifacts_root: root,
+            model_art,
+            plans,
+            parties: opts.parties,
+            seed: opts.session_seed,
+            backend: opts.gmw_backend.clone(),
+            layout: opts.layout,
+            threads: opts.threads,
+            prefetch: opts.prefetch,
+            net: opts.net,
+            fault: opts.fault_profile.clone(),
+            trace: Arc::clone(&trace),
+        };
 
-        // Party threads.
-        let mut parties = Vec::new();
-        let mut job_txs: Vec<Sender<PartyJob>> = Vec::new();
-        let (out_tx, out_rx) = channel::<(usize, PartyOut)>();
-        for t in transports {
-            let (jtx, jrx) = channel::<PartyJob>();
-            job_txs.push(jtx);
-            let cfg = cfg.clone();
-            let weights = weights.clone();
-            let root = root.clone();
-            let model_art = model_art.clone();
-            let plans = plans.clone();
-            let out_tx = out_tx.clone();
-            let seed = opts.session_seed;
-            let backend = opts.gmw_backend.clone();
-            let layout = opts.layout;
-            let threads = resolve_threads(opts.threads, opts.parties);
-            let prefetch = opts.prefetch;
-            parties.push(std::thread::spawn(move || {
-                party_main(
-                    t, cfg, weights, root, model_art, plans, jrx, out_tx, seed, backend, layout,
-                    threads, prefetch,
-                );
-            }));
-        }
-
-        // Batcher thread.
+        // Batcher thread: owns the session spec and (re)spawns the party
+        // thread pool.
         let metrics = Arc::new(Metrics::new());
         let (req_tx, req_rx) = channel::<Request>();
         let m2 = Arc::clone(&metrics);
         let fx = FixedPoint::new(cfg.frac_bits);
         let input_shape = cfg.input;
         let classes = cfg.num_classes;
-        let parties_n = opts.parties;
         let timeout = opts.batch_timeout;
         let trace2 = Arc::clone(&trace);
         let batcher = std::thread::spawn(move || {
-            batcher_main(
-                req_rx, job_txs, out_rx, m2, fx, input_shape, classes, batch, parties_n,
-                timeout, trace2,
-            );
+            batcher_main(req_rx, spec, m2, fx, input_shape, classes, batch, timeout, trace2);
         });
 
-        Ok(Coordinator {
-            req_tx: Some(req_tx),
-            metrics,
-            trace,
-            batcher: Some(batcher),
-            parties,
-            cfg,
-        })
+        Ok(Coordinator { req_tx: Some(req_tx), metrics, trace, batcher: Some(batcher), cfg })
     }
 
-    /// Submit one inference and wait for the answer.
+    fn queue(&self) -> Result<&Sender<Request>> {
+        self.req_tx.as_ref().ok_or_else(|| Error::Transport("service stopped".into()))
+    }
+
+    /// Submit one inference and wait for the answer. A session fault
+    /// surfaces as this job's error; the coordinator itself keeps serving.
     pub fn infer(&self, input: Vec<f32>) -> Result<InferenceResult> {
         let (tx, rx) = channel();
-        self.req_tx
-            .as_ref()
-            .expect("service running")
+        self.queue()?
             .send(Request { input, enqueued: Instant::now(), resp: tx })
             .map_err(|_| Error::Transport("service stopped".into()))?;
-        rx.recv().map_err(|_| Error::Transport("service dropped request".into()))
+        rx.recv().map_err(|_| Error::Transport("service dropped request".into()))?
     }
 
-    /// Submit asynchronously; returns the response channel.
-    pub fn infer_async(&self, input: Vec<f32>) -> Result<Receiver<InferenceResult>> {
+    /// Submit asynchronously; returns the response channel (the payload is
+    /// per-job: a faulted session answers `Err` rather than hanging up).
+    pub fn infer_async(&self, input: Vec<f32>) -> Result<Receiver<Result<InferenceResult>>> {
         let (tx, rx) = channel();
-        self.req_tx
-            .as_ref()
-            .expect("service running")
+        self.queue()?
             .send(Request { input, enqueued: Instant::now(), resp: tx })
             .map_err(|_| Error::Transport("service stopped".into()))?;
         Ok(rx)
@@ -221,9 +308,6 @@ impl Coordinator {
         if let Some(b) = self.batcher.take() {
             b.join().ok();
         }
-        for p in self.parties.drain(..) {
-            p.join().ok();
-        }
     }
 }
 
@@ -233,28 +317,54 @@ impl Drop for Coordinator {
         if let Some(b) = self.batcher.take() {
             b.join().ok();
         }
-        for p in self.parties.drain(..) {
-            p.join().ok();
-        }
     }
 }
 
+/// Party thread entry point: boot failures and session faults drain into
+/// the output channel (tagged with this party's id) instead of panicking —
+/// the batcher turns them into per-job errors and a session respawn.
 #[allow(clippy::too_many_arguments)]
-fn party_main(
-    transport: crate::net::local::LocalTransport,
+fn party_main<T: Transport + 'static>(
+    transport: T,
     cfg: ModelConfig,
     weights: Archive,
     artifacts_root: std::path::PathBuf,
     model_art: crate::runtime::registry::ModelArtifacts,
     plans: PlanSet,
     jobs: Receiver<PartyJob>,
-    out: Sender<(usize, PartyOut)>,
+    out: Sender<(usize, Result<PartyOut>)>,
     seed: u64,
     backend: String,
     layout: BinLayout,
     threads: usize,
     prefetch: bool,
 ) {
+    let me = transport.party();
+    let boot = party_boot_and_loop(
+        transport, cfg, weights, artifacts_root, model_art, plans, jobs, &out, seed, backend,
+        layout, threads, prefetch,
+    );
+    if let Err(e) = boot {
+        let _ = out.send((me, Err(e)));
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn party_boot_and_loop<T: Transport + 'static>(
+    transport: T,
+    cfg: ModelConfig,
+    weights: Archive,
+    artifacts_root: std::path::PathBuf,
+    model_art: crate::runtime::registry::ModelArtifacts,
+    plans: PlanSet,
+    jobs: Receiver<PartyJob>,
+    out: &Sender<(usize, Result<PartyOut>)>,
+    seed: u64,
+    backend: String,
+    layout: BinLayout,
+    threads: usize,
+    prefetch: bool,
+) -> Result<()> {
     let me = transport.party();
     // Offline/online split: predict this model's per-batch dealer draws
     // (every job is padded to the full artifact batch, so one forward pass
@@ -264,20 +374,20 @@ fn party_main(
     let schedule = prefetch.then(|| {
         TripleSchedule::for_forward(&cfg, &plans, model_art.batch, transport.parties())
     });
-    let rt = Runtime::new(&artifacts_root).expect("runtime handle");
+    let rt = Runtime::new(&artifacts_root)?;
     if !model_art.layers.is_empty() || backend == "xla" {
         // Linear layers (and the xla GMW kernel backend) will execute
         // PJRT artifacts: surface a missing or broken PJRT install at
         // boot, not at the first request.
-        rt.ensure_client().expect("pjrt client");
+        rt.ensure_client()?;
     }
-    let sw = ShareWeights::prepare(&cfg, &weights).expect("weights");
+    let sw = ShareWeights::prepare(&cfg, &weights)?;
     let mut exec = ShareExecutor::new(cfg, model_art, rt.clone(), sw);
     // The GMW engine: pure-Rust kernels (lane-per-u64 or bitsliced binary
     // layout per `--layout`), or the Pallas/PJRT backend for the full
     // three-layer path.
     if backend == "xla" {
-        let manifest = Manifest::load(&artifacts_root).expect("manifest");
+        let manifest = Manifest::load(&artifacts_root)?;
         let kernels = XlaKernels::new(rt, manifest);
         let mut party = GmwParty::with_kernels(transport, seed, kernels);
         boot_party(&mut party, threads, schedule);
@@ -291,6 +401,7 @@ fn party_main(
         boot_party(&mut party, threads, schedule);
         party_loop(&mut exec, &mut party, &plans, jobs, out, me);
     }
+    Ok(())
 }
 
 /// Per-party engine knobs applied identically in every kernel branch.
@@ -313,7 +424,7 @@ fn party_loop<T: Transport, K: crate::gmw::kernels::KernelBackend>(
     party: &mut GmwParty<T, K>,
     plans: &PlanSet,
     jobs: Receiver<PartyJob>,
-    out: Sender<(usize, PartyOut)>,
+    out: &Sender<(usize, Result<PartyOut>)>,
     me: usize,
 ) {
     // The executor and engine are long-lived: after the first batch warms
@@ -321,10 +432,22 @@ fn party_loop<T: Transport, K: crate::gmw::kernels::KernelBackend>(
     // steady-state batches reuse them all (ROADMAP "activation-buffer
     // reuse in model::ShareExecutor").
     while let Ok(job) = jobs.recv() {
-        let x = TensorU64::new(job.shape.clone(), job.x_share).expect("share shape");
-        let (o, bd) = exec.forward(party, x, plans).expect("party forward");
-        if out.send((me, PartyOut { share: o.data, breakdown: bd })).is_err() {
-            break;
+        let result = TensorU64::new(job.shape.clone(), job.x_share)
+            .and_then(|x| exec.forward(party, x, plans));
+        match result {
+            Ok((o, bd)) => {
+                if out.send((me, Ok(PartyOut { share: o.data, breakdown: bd }))).is_err() {
+                    return;
+                }
+            }
+            Err(e) => {
+                // An unrecovered fault (transparently recovered link drops
+                // never reach here) leaves this session's round state
+                // desynchronized from its peers: report and exit so the
+                // batcher respawns the whole session.
+                let _ = out.send((me, Err(e)));
+                return;
+            }
         }
     }
 }
@@ -332,20 +455,20 @@ fn party_loop<T: Transport, K: crate::gmw::kernels::KernelBackend>(
 #[allow(clippy::too_many_arguments)]
 fn batcher_main(
     req_rx: Receiver<Request>,
-    job_txs: Vec<Sender<PartyJob>>,
-    out_rx: Receiver<(usize, PartyOut)>,
+    mut spec: SessionSpec,
     metrics: Arc<Metrics>,
     fx: FixedPoint,
     input_shape: (usize, usize, usize),
     classes: usize,
     batch: usize,
-    parties: usize,
     timeout: Duration,
     trace: Arc<CommTrace>,
 ) {
+    let parties = spec.parties;
     let per_sample = input_shape.0 * input_shape.1 * input_shape.2;
     let mut prg = Prg::from_entropy();
     let mut pending: Vec<Request> = Vec::new();
+    let mut session = spawn_session(&mut spec);
     // Batch-sized staging buffers, reused across batches (the shares sent
     // to the party threads are still fresh vectors — they cross threads).
     let mut x_ring = vec![0u64; batch * per_sample];
@@ -376,7 +499,13 @@ fn batcher_main(
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     if pending.is_empty() {
-                        return; // graceful shutdown
+                        // Graceful shutdown: close the job queues so the
+                        // party threads drain out, and join them.
+                        drop(session.job_txs);
+                        for h in session.handles {
+                            h.join().ok();
+                        }
+                        return;
                     }
                     break;
                 }
@@ -398,19 +527,60 @@ fn batcher_main(
         // Client -> party input share movement (Data phase accounting).
         trace.record(Phase::Data, (x_ring.len() * 8) as u64);
         let shape = vec![batch, input_shape.0, input_shape.1, input_shape.2];
-        for (tx, share) in job_txs.iter().zip(shares) {
+        let mut batch_err: Option<Error> = None;
+        for (tx, share) in session.job_txs.iter().zip(shares) {
             if tx.send(PartyJob { x_share: share, shape: shape.clone() }).is_err() {
-                return;
+                batch_err = Some(Error::Transport("party session is down".into()));
+                break;
             }
         }
-        // Collect output shares.
+        // Collect output shares. Every party sends exactly one message per
+        // job — its output share or the fault that ended its session — and
+        // the transports' own deadlines bound how long a faulted session
+        // can take to report, so a plain blocking recv cannot wedge.
         let mut outs: Vec<Option<PartyOut>> = (0..parties).map(|_| None).collect();
-        for _ in 0..parties {
-            match out_rx.recv() {
-                Ok((p, o)) => outs[p] = Some(o),
-                Err(_) => return,
+        if batch_err.is_none() {
+            for _ in 0..parties {
+                match session.out_rx.recv() {
+                    Ok((p, Ok(o))) => outs[p] = Some(o),
+                    Ok((_, Err(e))) => {
+                        if batch_err.is_none() {
+                            batch_err = Some(e);
+                        }
+                        // Keep draining: the remaining parties will report
+                        // their own (secondary) errors or exit.
+                    }
+                    Err(_) => {
+                        // All party threads are gone without a report.
+                        if batch_err.is_none() {
+                            batch_err =
+                                Some(Error::Transport("party session died silently".into()));
+                        }
+                        break;
+                    }
+                }
             }
         }
+
+        if let Some(root_cause) = batch_err {
+            // Graceful degradation (DESIGN.md §7): this batch failed —
+            // answer its requests with the root cause, count it, replace
+            // the faulted session, keep serving.
+            metrics.record_failed_job(matches!(root_cause, Error::Timeout(_)));
+            let msg = format!("inference failed: {root_cause}");
+            for r in reqs {
+                let _ = r.resp.send(Err(Error::Runtime(msg.clone())));
+            }
+            // Old party threads exit on their own (their job queues close
+            // when the session is dropped; their transports' deadlines
+            // bound any blocked exchange). Don't join — a straggler may
+            // take up to round_timeout to notice.
+            drop(session);
+            metrics.record_session_restart();
+            session = spawn_session(&mut spec);
+            continue;
+        }
+
         trace.record(Phase::Data, (batch * classes * 8 * parties) as u64);
         logits_ring.fill(0);
         let mut bd = ExecBreakdown::default();
@@ -437,12 +607,12 @@ fn batcher_main(
                 .collect();
             let pred = PlainExecutor::argmax(&row, classes)[0];
             let wait_s = r.enqueued.elapsed().as_secs_f64();
-            let _ = r.resp.send(InferenceResult {
+            let _ = r.resp.send(Ok(InferenceResult {
                 logits: row,
                 pred,
                 latency_s: wait_s,
                 batch_size: got,
-            });
+            }));
         }
     }
 }

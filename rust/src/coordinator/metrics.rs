@@ -1,5 +1,6 @@
-//! Serving metrics: request latency, throughput, communication and the
-//! compute/communication breakdown used by Figs 1 & 10.
+//! Serving metrics: request latency, throughput, communication, the
+//! compute/communication breakdown used by Figs 1 & 10, and the fault
+//! counters of the degradation path (DESIGN.md §7).
 
 use std::sync::Mutex;
 use std::time::Instant;
@@ -23,6 +24,37 @@ struct Inner {
     breakdown: ExecBreakdown,
     started: Option<Instant>,
     finished: Option<Instant>,
+    faults: FaultCounters,
+}
+
+/// Failure counters of the graceful-degradation path (DESIGN.md §7): a
+/// faulted session fails its in-flight batch — counted here — while the
+/// coordinator respawns the party session and keeps serving.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Batches that answered their requests with an error because a party
+    /// session faulted mid-flight. One failed batch = one increment,
+    /// regardless of batch size.
+    pub failed_jobs: u64,
+    /// Failed batches whose root cause was a deadline expiry
+    /// (`Error::Timeout`) — a hung peer, as opposed to a crash.
+    pub timeouts: u64,
+    /// Transport-level retry attempts absorbed without failing a job
+    /// (from `NetStats` on deployments that report them).
+    pub retries: u64,
+    /// Transport-level reconnects absorbed without failing a job.
+    pub reconnects: u64,
+    /// Times the coordinator tore down a faulted party session and
+    /// spawned a fresh one.
+    pub sessions_restarted: u64,
+}
+
+/// Point-in-time view of the counters, for assertions and dashboards.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct MetricsSnapshot {
+    pub samples_done: u64,
+    pub batches_done: u64,
+    pub faults: FaultCounters,
 }
 
 impl Metrics {
@@ -30,15 +62,22 @@ impl Metrics {
         Self::default()
     }
 
+    /// Lock the accumulator, recovering from poisoning: metrics must stay
+    /// readable even if a thread panicked mid-update (counters are plain
+    /// integers/vectors and stay consistent).
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn mark_start(&self) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         if m.started.is_none() {
             m.started = Some(Instant::now());
         }
     }
 
     pub fn record_batch(&self, batch: usize, latency_s: f64, bd: &ExecBreakdown) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.batch_sizes.push(batch);
         m.samples_done += batch as u64;
         m.batches_done += 1;
@@ -49,13 +88,47 @@ impl Metrics {
         }
     }
 
+    /// A batch failed: a party session faulted and its requests were
+    /// answered with an error. `was_timeout` marks a deadline-expiry root
+    /// cause (vs. a crash/link fault).
+    pub fn record_failed_job(&self, was_timeout: bool) {
+        let mut m = self.lock();
+        m.faults.failed_jobs += 1;
+        if was_timeout {
+            m.faults.timeouts += 1;
+        }
+    }
+
+    /// The coordinator replaced a faulted party session with a fresh one.
+    pub fn record_session_restart(&self) {
+        self.lock().faults.sessions_restarted += 1;
+    }
+
+    /// Fold in transport-level recovery counters (retries/reconnects that
+    /// were absorbed without failing a job).
+    pub fn record_net_recovery(&self, retries: u64, reconnects: u64) {
+        let mut m = self.lock();
+        m.faults.retries += retries;
+        m.faults.reconnects += reconnects;
+    }
+
+    /// Assertable point-in-time counters (the chaos suite pins these).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.lock();
+        MetricsSnapshot {
+            samples_done: m.samples_done,
+            batches_done: m.batches_done,
+            faults: m.faults,
+        }
+    }
+
     pub fn samples_done(&self) -> u64 {
-        self.inner.lock().unwrap().samples_done
+        self.lock().samples_done
     }
 
     /// Wall-clock between first and last batch.
     pub fn wall_seconds(&self) -> f64 {
-        let m = self.inner.lock().unwrap();
+        let m = self.lock();
         match (m.started, m.finished) {
             (Some(s), Some(f)) => f.duration_since(s).as_secs_f64(),
             _ => 0.0,
@@ -72,11 +145,11 @@ impl Metrics {
     }
 
     pub fn breakdown(&self) -> ExecBreakdown {
-        self.inner.lock().unwrap().breakdown
+        self.lock().breakdown
     }
 
     pub fn to_json(&self) -> Json {
-        let m = self.inner.lock().unwrap();
+        let m = self.lock();
         Json::obj(vec![
             ("samples", Json::Int(m.samples_done as i64)),
             ("batches", Json::Int(m.batches_done as i64)),
@@ -85,11 +158,17 @@ impl Metrics {
             ("linear_s", Json::Num(m.breakdown.linear_s)),
             ("relu_s", Json::Num(m.breakdown.relu_s)),
             ("other_s", Json::Num(m.breakdown.other_s)),
+            ("failed_jobs", Json::Int(m.faults.failed_jobs as i64)),
+            ("timeouts", Json::Int(m.faults.timeouts as i64)),
+            ("retries", Json::Int(m.faults.retries as i64)),
+            ("reconnects", Json::Int(m.faults.reconnects as i64)),
+            ("sessions_restarted", Json::Int(m.faults.sessions_restarted as i64)),
         ])
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -105,5 +184,27 @@ mod tests {
         assert!((total.relu_s - 2.0).abs() < 1e-12);
         let j = m.to_json();
         assert_eq!(j.get_i64("batches").unwrap(), 2);
+    }
+
+    /// The fault counters are independent of the throughput counters and
+    /// show up in both the snapshot and the JSON export.
+    #[test]
+    fn fault_counters_snapshot() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().faults, FaultCounters::default());
+        m.record_failed_job(false);
+        m.record_failed_job(true);
+        m.record_session_restart();
+        m.record_net_recovery(3, 1);
+        let s = m.snapshot();
+        assert_eq!(s.faults.failed_jobs, 2);
+        assert_eq!(s.faults.timeouts, 1);
+        assert_eq!(s.faults.retries, 3);
+        assert_eq!(s.faults.reconnects, 1);
+        assert_eq!(s.faults.sessions_restarted, 1);
+        assert_eq!(s.samples_done, 0, "failures must not count as served samples");
+        let j = m.to_json();
+        assert_eq!(j.get_i64("failed_jobs").unwrap(), 2);
+        assert_eq!(j.get_i64("sessions_restarted").unwrap(), 1);
     }
 }

@@ -14,6 +14,15 @@
 //! (padding the tail), fans the secret shares out to the party threads,
 //! and reconstructs the output shares. Party threads own their GmwParty +
 //! PJRT runtime for the whole session (executable caches stay warm).
+//!
+//! Faults degrade gracefully (DESIGN.md §7): a party session that hits a
+//! deadline, a dead link that reconnect couldn't cure, or an injected
+//! crash fails *its* in-flight batch — the requests get error responses,
+//! the [`Metrics`] fault counters tick, and the batcher respawns a fresh
+//! party session for the next batch. The coordinator process never wedges
+//! on a single bad session.
+
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod batcher;
 pub mod metrics;

@@ -26,6 +26,14 @@ pub enum Error {
     /// Transport-level failure (channel closed, socket error, framing).
     Transport(String),
 
+    /// A deadline expired: a peer did not produce (or accept) a round's
+    /// bytes within `NetConfig::round_timeout`, or a handshake/dial ran
+    /// past its budget. Deliberately **fatal** (see DESIGN.md §7): a
+    /// hung-but-connected peer is indistinguishable from an arbitrarily
+    /// slow one, and reconnecting cannot conjure the missing bytes — the
+    /// session fails the in-flight job instead of wedging the process.
+    Timeout(String),
+
     /// Wire-format violation: a payload whose length or framing does not
     /// match what the protocol step expects (truncated or corrupt data
     /// must never be silently zero-padded into "valid" shares).
@@ -57,6 +65,7 @@ impl fmt::Display for Error {
             Error::Json { offset, msg } => write!(f, "json error at byte {offset}: {msg}"),
             Error::Protocol(m) => write!(f, "protocol error: {m}"),
             Error::Transport(m) => write!(f, "transport error: {m}"),
+            Error::Timeout(m) => write!(f, "timeout: {m}"),
             Error::Wire(m) => write!(f, "wire format error: {m}"),
             Error::Beaver(m) => write!(f, "beaver error: {m}"),
             Error::Shape(m) => write!(f, "shape error: {m}"),
@@ -104,10 +113,72 @@ impl Error {
     pub fn runtime(msg: impl fmt::Display) -> Self {
         Error::Runtime(msg.to_string())
     }
+    /// Shorthand constructor for deadline-expired errors.
+    pub fn timeout(msg: impl fmt::Display) -> Self {
+        Error::Timeout(msg.to_string())
+    }
+
+    /// Retryable/fatal classification for the session layer (DESIGN.md §7).
+    ///
+    /// **Retryable** means "the link died but the peer may still be alive":
+    /// the TCP session layer answers with a reconnect + resync-and-resend
+    /// pass, and because every round is a deterministic function of the
+    /// parties' shares, recovery is bit-identical to a fault-free run.
+    /// Only connection-level I/O faults qualify. Everything else — wire
+    /// corruption ([`Error::Wire`]), protocol divergence, deadline expiry
+    /// ([`Error::Timeout`]), dealer-stream divergence ([`Error::Beaver`])
+    /// — is **fatal** for the in-flight job: retrying cannot repair state
+    /// that was never produced or has already diverged.
+    pub fn is_retryable(&self) -> bool {
+        use std::io::ErrorKind;
+        match self {
+            Error::Io(e) => matches!(
+                e.kind(),
+                ErrorKind::ConnectionReset
+                    | ErrorKind::ConnectionAborted
+                    | ErrorKind::BrokenPipe
+                    | ErrorKind::UnexpectedEof
+                    | ErrorKind::NotConnected
+                    | ErrorKind::WriteZero
+            ),
+            _ => false,
+        }
+    }
 }
 
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(format!("xla: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The retryable set is exactly the connection-level I/O faults; wire
+    /// corruption, deadlines and protocol divergence stay fatal.
+    #[test]
+    fn retryable_classification() {
+        use std::io::ErrorKind;
+        for kind in [
+            ErrorKind::ConnectionReset,
+            ErrorKind::ConnectionAborted,
+            ErrorKind::BrokenPipe,
+            ErrorKind::UnexpectedEof,
+        ] {
+            assert!(Error::Io(std::io::Error::new(kind, "x")).is_retryable(), "{kind:?}");
+        }
+        for fatal in [
+            Error::Io(std::io::Error::new(std::io::ErrorKind::TimedOut, "x")),
+            Error::Io(std::io::Error::new(std::io::ErrorKind::WouldBlock, "x")),
+            Error::timeout("round deadline"),
+            Error::wire("ragged payload"),
+            Error::protocol("divergence"),
+            Error::Beaver("schedule mismatch".into()),
+            Error::Transport("out-of-order frame".into()),
+        ] {
+            assert!(!fatal.is_retryable(), "{fatal}");
+        }
     }
 }

@@ -501,7 +501,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         let mut tap = self.arena.take_words(segs * pl);
         let mut tbp = self.arena.take_words(segs * pl);
         let mut tcp = self.arena.take_words(segs * pl);
-        self.dealer.bin_triples_planes_into(w, n_seg, segs, &mut tap, &mut tbp, &mut tcp);
+        self.dealer.bin_triples_planes_into(w, n_seg, segs, &mut tap, &mut tbp, &mut tcp)?;
         let mut ta = self.arena.take_words(n);
         let mut tb = self.arena.take_words(n);
         let mut tc = self.arena.take_words(n);
@@ -564,7 +564,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         let mut tap = self.arena.take_words(segs * pl);
         let mut tbp = self.arena.take_words(segs * pl);
         let mut tcp = self.arena.take_words(segs * pl);
-        self.dealer.bin_triples_planes_into(w, n_seg, segs, &mut tap, &mut tbp, &mut tcp);
+        self.dealer.bin_triples_planes_into(w, n_seg, segs, &mut tap, &mut tbp, &mut tcp)?;
         let mut de = self.arena.take_words(2 * segs * pl);
         self.kernels.and_open(u, v, &tap, &tbp, &mut de);
         let mut opened = self.arena.take_words(2 * segs * pl);
@@ -701,7 +701,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         debug_assert_eq!(out.len(), n);
         let mut r_bin = self.arena.take_words(n);
         let mut r_arith = self.arena.take_words(n);
-        self.dealer.dabits_into(&mut r_bin, &mut r_arith);
+        self.dealer.dabits_into(&mut r_bin, &mut r_arith)?;
         let mut masked = self.arena.take_words(n);
         for ((mi, b), r) in masked.iter_mut().zip(bits).zip(&r_bin) {
             *mi = (b ^ r) & 1;
@@ -745,7 +745,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         let mut ta = self.arena.take_words(n);
         let mut tb = self.arena.take_words(n);
         let mut tc = self.arena.take_words(n);
-        self.dealer.arith_triples_into(&mut ta, &mut tb, &mut tc);
+        self.dealer.arith_triples_into(&mut ta, &mut tb, &mut tc)?;
         let mut de = self.arena.take_words(2 * n);
         self.kernels.mult_open(x, y, &ta, &tb, &mut de);
         let mut opened = self.arena.take_words(2 * n);

@@ -25,6 +25,12 @@
 //! a background thread instead of expanding them inside the online AND
 //! rounds). All are bit-exact: they change wall-clock, never results or
 //! wire bytes.
+//!
+//! Session-layer knobs (DESIGN.md §7): `--connect-timeout-ms`,
+//! `--handshake-timeout-ms`, `--round-timeout-ms`, `--max-frame-len`,
+//! `--retries`, `--backoff-ms` bound every blocking network step, and
+//! `--fault-profile` (serve/party) injects deterministic faults for chaos
+//! testing, e.g. `--fault-profile drop@3,seed:7` or `crash@5,party:1`.
 
 use anyhow::{bail, Context, Result};
 
@@ -33,7 +39,9 @@ use hummingbird::gmw::kernels::BinLayout;
 use hummingbird::hummingbird::search::{SearchConfig, SearchEngine, Strategy};
 use hummingbird::hummingbird::{simulator, PlanSet};
 use hummingbird::model::{Archive, Backend, Dataset, ModelConfig, PlainExecutor, WhichPlain};
+use hummingbird::net::fault::FaultProfile;
 use hummingbird::net::profile::{ComputeProfile, NetworkProfile};
+use hummingbird::net::NetConfig;
 use hummingbird::runtime::{Manifest, Runtime};
 use hummingbird::util::cli::Args;
 use hummingbird::util::stats;
@@ -72,6 +80,17 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
+/// `--fault-profile drop@3,seed:7` etc. (see `net::fault` for the
+/// grammar). `None` when the flag is absent — the production default.
+fn load_fault_profile(args: &Args) -> Result<Option<FaultProfile>> {
+    match args.opt("fault-profile") {
+        None => Ok(None),
+        Some(s) => {
+            Ok(Some(s.parse::<FaultProfile>().map_err(|e| anyhow::anyhow!("{e}"))?))
+        }
+    }
+}
+
 fn load_plan(args: &Args, cfg: &ModelConfig) -> Result<PlanSet> {
     match args.opt("plan") {
         None | Some("baseline") => Ok(PlanSet::baseline(cfg.relu_groups)),
@@ -103,6 +122,8 @@ fn cmd_infer(args: &Args) -> Result<()> {
     opts.layout = args.opt_parse("layout", BinLayout::default())?;
     // --prefetch: offline-phase background triple provisioning.
     opts.prefetch = args.on_off("prefetch", false)?;
+    // Session deadlines (bound every blocking network step, DESIGN.md §7).
+    opts.net = NetConfig::from_args(args)?;
     println!(
         "booting {} ({} parties, plan: {}, layout: {}, prefetch: {})",
         model,
@@ -124,7 +145,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
         rxs.push((i, svc.infer_async(x)?));
     }
     for (i, rx) in rxs {
-        let r = rx.recv()?;
+        let r = rx.recv()??;
         if r.pred == dataset.test.labels[i] as usize {
             correct += 1;
         }
@@ -183,6 +204,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     opts.threads = args.opt_parse("threads", 0)?;
     opts.layout = args.opt_parse("layout", BinLayout::default())?;
     opts.prefetch = args.on_off("prefetch", false)?;
+    opts.net = NetConfig::from_args(args)?;
+    // --fault-profile: deterministic chaos testing — the injected fault
+    // fails its batch, the coordinator respawns the session and keeps
+    // serving (watch failed_jobs/sessions_restarted in the metrics line).
+    opts.fault_profile = load_fault_profile(args)?;
     let prefetch = if opts.prefetch { "on" } else { "off" };
     let svc = Coordinator::start(opts)?;
     println!(
@@ -195,6 +221,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut rxs = std::collections::VecDeque::new();
     let mut correct = 0usize;
     let mut done = 0usize;
+    let mut failed = 0usize;
+    // A faulted party session answers its jobs with errors while the
+    // coordinator respawns and keeps serving — so the client loop counts
+    // failures instead of aborting on the first one (DESIGN.md §7).
+    let mut settle =
+        |i: usize, r: hummingbird::error::Result<hummingbird::coordinator::InferenceResult>| {
+            match r {
+                Ok(r) => {
+                    done += 1;
+                    correct += (r.pred == dataset.test.labels[i] as usize) as usize;
+                }
+                Err(e) => {
+                    failed += 1;
+                    eprintln!("request failed: {e}");
+                }
+            }
+        };
     while t0.elapsed().as_secs_f64() < duration {
         let i = sent % dataset.test.n;
         rxs.push_back((i, svc.infer_async(dataset.test.batch(i, i + 1).to_vec())?));
@@ -202,19 +245,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // Keep a bounded number in flight.
         while rxs.len() >= 64 {
             let (i, rx) = rxs.pop_front().unwrap();
-            let r = rx.recv()?;
-            done += 1;
-            correct += (r.pred == dataset.test.labels[i] as usize) as usize;
+            settle(i, rx.recv()?);
         }
     }
     for (i, rx) in rxs {
-        let r = rx.recv()?;
-        done += 1;
-        correct += (r.pred == dataset.test.labels[i] as usize) as usize;
+        settle(i, rx.recv()?);
     }
     let wall = t0.elapsed().as_secs_f64();
-    println!("served {done} samples in {wall:.1}s = {:.2} samples/s", done as f64 / wall);
-    println!("accuracy {:.2}%", 100.0 * correct as f64 / done as f64);
+    println!(
+        "served {done} samples ({failed} failed) in {wall:.1}s = {:.2} samples/s",
+        done as f64 / wall
+    );
+    println!("accuracy {:.2}%", 100.0 * correct as f64 / done.max(1) as f64);
     println!("metrics: {}", svc.metrics.to_json().to_string());
     svc.shutdown();
     Ok(())
@@ -327,6 +369,7 @@ fn cmd_party(args: &Args) -> Result<()> {
     use hummingbird::beaver::schedule::TripleSchedule;
     use hummingbird::gmw::kernels::{BitslicedKernels, KernelBackend, RustKernels};
     use hummingbird::gmw::{GmwParty, ReluPlan};
+    use hummingbird::net::fault::FaultyTransport;
     use hummingbird::net::tcp::TcpTransport;
     use hummingbird::net::Transport;
     let rank: usize = args.opt_parse("rank", 0)?;
@@ -336,9 +379,15 @@ fn cmd_party(args: &Args) -> Result<()> {
     let k: u32 = args.opt_parse("k", 64)?;
     let m: u32 = args.opt_parse("m", 0)?;
     let layout: BinLayout = args.opt_parse("layout", BinLayout::default())?;
-    println!("party {rank}/{} connecting...", addrs.len());
-    let transport = TcpTransport::connect(rank, &addrs)?;
     let seed: u64 = args.opt_parse("seed", 7u64)?;
+    // Session deadlines + retry budget (DESIGN.md §7): every dial,
+    // handshake and round below is bounded, and retryable link faults
+    // trigger the reconnect-and-resend path instead of an error. The
+    // shared --seed doubles as the session id the resync handshake pins.
+    let net = NetConfig::from_args(args)?;
+    let fault = load_fault_profile(args)?;
+    println!("party {rank}/{} connecting...", addrs.len());
+    let transport = TcpTransport::connect_with(rank, &addrs, seed, net)?;
     // Real deployments own the whole machine: default --threads to all cores.
     let threads = args.threads(0)?;
     // --prefetch on: provision this ReLU's triples on a background thread
@@ -349,8 +398,8 @@ fn cmd_party(args: &Args) -> Result<()> {
     // parties must pass the same --layout (it is bit-exact, but the lane
     // budget differs); the wire bytes are identical either way.
     let plan = ReluPlan::new(k, m).map_err(anyhow::Error::from)?;
-    fn run_relu<K: KernelBackend>(
-        mut party: GmwParty<TcpTransport, K>,
+    fn run_relu<T: Transport, K: KernelBackend>(
+        mut party: GmwParty<T, K>,
         shares: &[u64],
         plan: ReluPlan,
         threads: usize,
@@ -376,25 +425,50 @@ fn cmd_party(args: &Args) -> Result<()> {
         );
         Ok(())
     }
+    // Dispatch over (fault injection on/off) x (binary layout): the chaos
+    // wrapper and the layouts are all bit-exact on the wire, so every
+    // combination interoperates with every other.
+    fn run_layout<T: Transport>(
+        transport: T,
+        layout: BinLayout,
+        seed: u64,
+        shares: &[u64],
+        plan: ReluPlan,
+        threads: usize,
+        prefetch: bool,
+    ) -> Result<()> {
+        match layout {
+            BinLayout::Bitsliced => run_relu(
+                GmwParty::with_kernels(transport, seed, BitslicedKernels::default()),
+                shares,
+                plan,
+                threads,
+                prefetch,
+                "bitsliced",
+            ),
+            BinLayout::LanePerU64 => run_relu(
+                GmwParty::with_kernels(transport, seed, RustKernels::default()),
+                shares,
+                plan,
+                threads,
+                prefetch,
+                "lane",
+            ),
+        }
+    }
     let mut prg = hummingbird::crypto::prg::Prg::new(100 + rank as u64, 0);
     let shares = prg.vec_u64(n);
-    match layout {
-        BinLayout::Bitsliced => run_relu(
-            GmwParty::with_kernels(transport, seed, BitslicedKernels::default()),
+    match fault {
+        Some(profile) => run_layout(
+            FaultyTransport::new(transport, &profile),
+            layout,
+            seed,
             &shares,
             plan,
             threads,
             prefetch,
-            "bitsliced",
         ),
-        BinLayout::LanePerU64 => run_relu(
-            GmwParty::with_kernels(transport, seed, RustKernels::default()),
-            &shares,
-            plan,
-            threads,
-            prefetch,
-            "lane",
-        ),
+        None => run_layout(transport, layout, seed, &shares, plan, threads, prefetch),
     }
 }
 

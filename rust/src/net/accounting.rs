@@ -78,8 +78,15 @@ impl CommTrace {
         Self::default()
     }
 
+    /// Lock the round log, recovering from poisoning (a panicked party
+    /// thread must not take the shared trace down with it — the records
+    /// themselves are append-only and stay consistent).
+    fn lock_rounds(&self) -> std::sync::MutexGuard<'_, Vec<RoundRecord>> {
+        self.rounds.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn record(&self, phase: Phase, bytes_sent: u64) {
-        self.rounds.lock().unwrap().push(RoundRecord { phase, bytes_sent });
+        self.lock_rounds().push(RoundRecord { phase, bytes_sent });
     }
 
     /// Accumulate blocked-on-the-wire time.
@@ -95,29 +102,29 @@ impl CommTrace {
 
     /// Snapshot of all rounds so far.
     pub fn rounds(&self) -> Vec<RoundRecord> {
-        self.rounds.lock().unwrap().clone()
+        self.lock_rounds().clone()
     }
 
     /// Clear the trace (e.g. to exclude setup from a measurement window).
     pub fn reset(&self) {
-        self.rounds.lock().unwrap().clear();
+        self.lock_rounds().clear();
         self.wait_nanos.store(0, std::sync::atomic::Ordering::Relaxed);
     }
 
     /// Aggregate: total bytes sent by this party.
     pub fn total_bytes(&self) -> u64 {
-        self.rounds.lock().unwrap().iter().map(|r| r.bytes_sent).sum()
+        self.lock_rounds().iter().map(|r| r.bytes_sent).sum()
     }
 
     /// Aggregate: number of rounds.
     pub fn total_rounds(&self) -> u64 {
-        self.rounds.lock().unwrap().len() as u64
+        self.lock_rounds().len() as u64
     }
 
     /// Bytes grouped per phase, in `ALL_PHASES` order.
     pub fn bytes_by_phase(&self) -> [u64; 6] {
         let mut out = [0u64; 6];
-        for r in self.rounds.lock().unwrap().iter() {
+        for r in self.lock_rounds().iter() {
             out[r.phase.index()] += r.bytes_sent;
         }
         out
@@ -126,7 +133,7 @@ impl CommTrace {
     /// Rounds grouped per phase, in `ALL_PHASES` order.
     pub fn rounds_by_phase(&self) -> [u64; 6] {
         let mut out = [0u64; 6];
-        for r in self.rounds.lock().unwrap().iter() {
+        for r in self.lock_rounds().iter() {
             out[r.phase.index()] += 1;
         }
         out
@@ -134,6 +141,7 @@ impl CommTrace {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -1,0 +1,330 @@
+//! Deterministic fault injection for the chaos suite (DESIGN.md §7).
+//!
+//! [`FaultyTransport`] wraps any [`Transport`] and injects faults at
+//! chosen protocol rounds from a seeded, fully reproducible schedule — a
+//! [`FaultProfile`] parsed from the `--fault-profile` CLI knob or built in
+//! tests. Rounds where the schedule is empty pass straight through to the
+//! inner transport, so a profile with no entries is byte- and
+//! round-identical to the bare transport.
+//!
+//! # Profile grammar
+//!
+//! A profile is a comma-separated list of directives:
+//!
+//! ```text
+//! drop@3            sever the link before round 3 (reconnect-and-resend)
+//! crash@5           this party dies at round 5 (fatal; peers time out)
+//! delay:20ms@2      sleep 20 ms before round 2 (latency blip, no error)
+//! short@4           truncate the received frame of round 4 (Error::Wire)
+//! drop@?8           like drop@k with k drawn from the PRG, k < 8
+//! seed:42           PRG seed for the @? draws (default 0)
+//! party:1           only party 1 injects; others run clean (default 0)
+//! ```
+//!
+//! e.g. `--fault-profile "party:1,seed:7,drop@?10"` makes party 1 sever a
+//! link at a pseudo-random round below 10, reproducibly across runs.
+//!
+//! Faults are injected *before* the round's exchange. `drop` asks the
+//! inner transport to sever a real socket ([`Transport::inject_peer_drop`])
+//! so both endpoints observe a genuine link fault; on transports without a
+//! severable link (the in-process hub) it synthesizes a retryable
+//! connection-reset error, which the coordinator degrades into a per-job
+//! failure.
+
+use std::str::FromStr;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::accounting::{CommTrace, Phase};
+use super::{RecvBufs, Transport};
+use crate::crypto::prg::Prg;
+use crate::error::{Error, Result};
+
+/// What to inject at a scheduled round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Sleep this many milliseconds before the exchange (no error).
+    Delay(u64),
+    /// Sever the link to the lowest-ranked peer before the exchange.
+    Drop,
+    /// This party dies: the exchange (and every later one) fails fatally.
+    Crash,
+    /// Truncate the frame received from the lowest-ranked peer by one
+    /// byte, so share decoding downstream rejects it as [`Error::Wire`].
+    ShortFrame,
+}
+
+/// One scheduled fault: inject `kind` before round `round`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScheduledFault {
+    pub round: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault schedule. Parse one from the CLI grammar above,
+/// or build it directly in tests.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultProfile {
+    /// Which party injects; every other party's wrapper is a no-op.
+    pub party: usize,
+    /// Seed for the `@?` randomized round draws.
+    pub seed: u64,
+    pub faults: Vec<ScheduledFault>,
+}
+
+impl FaultProfile {
+    /// Schedule a single fault at a fixed round (test convenience).
+    pub fn single(party: usize, round: u64, kind: FaultKind) -> Self {
+        FaultProfile { party, seed: 0, faults: vec![ScheduledFault { round, kind }] }
+    }
+}
+
+impl FromStr for FaultProfile {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        let mut profile = FaultProfile::default();
+        // Two passes so `seed:`/`party:` apply regardless of position.
+        let directives: Vec<&str> =
+            s.split(',').map(str::trim).filter(|d| !d.is_empty()).collect();
+        for d in &directives {
+            if let Some(v) = d.strip_prefix("seed:") {
+                profile.seed = v.parse().map_err(|e| format!("bad seed '{v}': {e}"))?;
+            } else if let Some(v) = d.strip_prefix("party:") {
+                profile.party = v.parse().map_err(|e| format!("bad party '{v}': {e}"))?;
+            }
+        }
+        let mut prg = Prg::new(profile.seed, 0xfa01);
+        for d in &directives {
+            if d.starts_with("seed:") || d.starts_with("party:") {
+                continue;
+            }
+            let (head, at) = d
+                .split_once('@')
+                .ok_or_else(|| format!("directive '{d}' needs '@<round>' or '@?<bound>'"))?;
+            let kind = match head {
+                "drop" => FaultKind::Drop,
+                "crash" => FaultKind::Crash,
+                "short" => FaultKind::ShortFrame,
+                _ => {
+                    let ms = head
+                        .strip_prefix("delay:")
+                        .and_then(|v| v.strip_suffix("ms"))
+                        .ok_or_else(|| format!("unknown fault kind '{head}'"))?;
+                    FaultKind::Delay(ms.parse().map_err(|e| format!("bad delay '{ms}': {e}"))?)
+                }
+            };
+            let round = match at.strip_prefix('?') {
+                Some(bound) => {
+                    let b: u64 =
+                        bound.parse().map_err(|e| format!("bad round bound '{bound}': {e}"))?;
+                    if b == 0 {
+                        return Err(format!("round bound in '{d}' must be > 0"));
+                    }
+                    prg.next_below(b)
+                }
+                None => at.parse().map_err(|e| format!("bad round '{at}': {e}"))?,
+            };
+            profile.faults.push(ScheduledFault { round, kind });
+        }
+        Ok(profile)
+    }
+}
+
+/// A [`Transport`] wrapper that injects the profile's faults at the
+/// scheduled exchange rounds. Wrap only the party named by the profile
+/// (or use [`FaultyTransport::new`], which checks for you).
+pub struct FaultyTransport<T: Transport> {
+    inner: T,
+    faults: Vec<ScheduledFault>,
+    armed: bool,
+    round: u64,
+    /// Peer whose link the `Drop`/`ShortFrame` faults target.
+    victim: usize,
+    crashed: bool,
+}
+
+impl<T: Transport> FaultyTransport<T> {
+    /// Wrap `inner`. The schedule only arms when `inner.party()` matches
+    /// `profile.party`, so every party can be wrapped uniformly.
+    pub fn new(inner: T, profile: &FaultProfile) -> Self {
+        let armed = inner.party() == profile.party;
+        // Target the lowest-ranked peer: deterministic and always valid.
+        let victim = if inner.party() == 0 { 1 } else { 0 };
+        FaultyTransport {
+            inner,
+            faults: profile.faults.clone(),
+            armed,
+            round: 0,
+            victim,
+            crashed: false,
+        }
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+
+    fn take_fault(&mut self, round: u64) -> Option<FaultKind> {
+        if !self.armed {
+            return None;
+        }
+        let pos = self.faults.iter().position(|f| f.round == round)?;
+        Some(self.faults.swap_remove(pos).kind)
+    }
+}
+
+impl<T: Transport> Transport for FaultyTransport<T> {
+    fn party(&self) -> usize {
+        self.inner.party()
+    }
+    fn parties(&self) -> usize {
+        self.inner.parties()
+    }
+
+    fn exchange_all_into(
+        &mut self,
+        phase: Phase,
+        data: &[u8],
+        recv: &mut RecvBufs,
+    ) -> Result<()> {
+        if self.crashed {
+            return Err(Error::Transport("injected party crash (still down)".into()));
+        }
+        let round = self.round;
+        self.round += 1;
+        let mut truncate_victim = false;
+        match self.take_fault(round) {
+            None => {}
+            Some(FaultKind::Delay(ms)) => std::thread::sleep(Duration::from_millis(ms)),
+            Some(FaultKind::Crash) => {
+                self.crashed = true;
+                return Err(Error::Transport(format!("injected party crash at round {round}")));
+            }
+            Some(FaultKind::Drop) => {
+                if !self.inner.inject_peer_drop(self.victim) {
+                    // No severable link (in-process hub): surface the same
+                    // class of error a reset socket would produce.
+                    return Err(Error::Io(std::io::Error::new(
+                        std::io::ErrorKind::ConnectionReset,
+                        format!("injected connection drop at round {round}"),
+                    )));
+                }
+                // Link severed for real — the inner exchange below now
+                // exercises the genuine reconnect-and-resend path.
+            }
+            Some(FaultKind::ShortFrame) => truncate_victim = true,
+        }
+        self.inner.exchange_all_into(phase, data, recv)?;
+        if truncate_victim {
+            // Corrupt the received copy after a successful exchange: the
+            // ragged buffer must be rejected downstream (Error::Wire), not
+            // silently zero-padded into "valid" shares.
+            let slot = &mut recv.slots_mut()[self.victim];
+            slot.pop();
+        }
+        Ok(())
+    }
+
+    fn trace(&self) -> Arc<CommTrace> {
+        self.inner.trace()
+    }
+
+    fn inject_peer_drop(&mut self, peer: usize) -> bool {
+        self.inner.inject_peer_drop(peer)
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::net::local::hub;
+
+    #[test]
+    fn profile_grammar_round_trip() {
+        let p: FaultProfile = "party:1, seed:42, drop@3, delay:20ms@2, crash@5, short@4"
+            .parse()
+            .unwrap();
+        assert_eq!(p.party, 1);
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.faults.len(), 4);
+        assert!(p.faults.contains(&ScheduledFault { round: 3, kind: FaultKind::Drop }));
+        assert!(p.faults.contains(&ScheduledFault { round: 2, kind: FaultKind::Delay(20) }));
+        assert!(p.faults.contains(&ScheduledFault { round: 5, kind: FaultKind::Crash }));
+        assert!(p.faults.contains(&ScheduledFault { round: 4, kind: FaultKind::ShortFrame }));
+    }
+
+    /// `@?` rounds are drawn from the seeded PRG: the same profile string
+    /// always yields the same schedule, different seeds may differ.
+    #[test]
+    fn randomized_rounds_are_deterministic() {
+        let a: FaultProfile = "seed:7,drop@?100,crash@?100".parse().unwrap();
+        let b: FaultProfile = "seed:7,drop@?100,crash@?100".parse().unwrap();
+        assert_eq!(a, b);
+        for f in &a.faults {
+            assert!(f.round < 100);
+        }
+    }
+
+    #[test]
+    fn bad_profiles_are_rejected() {
+        for bad in ["drop", "drop@x", "explode@3", "delay:5@1", "seed:abc,drop@1", "drop@?0"] {
+            assert!(bad.parse::<FaultProfile>().is_err(), "{bad} should not parse");
+        }
+    }
+
+    /// An injected crash is fatal and sticky: the first exchange at the
+    /// scheduled round fails, and so does every later one.
+    #[test]
+    fn crash_is_sticky() {
+        let mut transports = hub(2);
+        let t1 = transports.pop().unwrap();
+        let _t0 = transports.pop().unwrap();
+        let mut faulty = FaultyTransport::new(t1, &FaultProfile::single(1, 0, FaultKind::Crash));
+        let mut recv = RecvBufs::new(2);
+        let e0 = faulty.exchange_all_into(Phase::Circuit, b"x", &mut recv).unwrap_err();
+        assert!(!e0.is_retryable());
+        let e1 = faulty.exchange_all_into(Phase::Circuit, b"x", &mut recv).unwrap_err();
+        assert!(matches!(e1, Error::Transport(_)), "crash must be sticky: {e1}");
+    }
+
+    /// On a transport without a severable link, `drop` degrades to a
+    /// retryable synthesized reset — the coordinator turns that into a
+    /// per-job failure.
+    #[test]
+    fn drop_on_hub_synthesizes_retryable_reset() {
+        let mut transports = hub(2);
+        let _t1 = transports.pop().unwrap();
+        let t0 = transports.pop().unwrap();
+        let mut faulty = FaultyTransport::new(t0, &FaultProfile::single(0, 0, FaultKind::Drop));
+        let mut recv = RecvBufs::new(2);
+        let err = faulty.exchange_all_into(Phase::Circuit, b"x", &mut recv).unwrap_err();
+        assert!(err.is_retryable(), "synthesized drop must classify retryable: {err}");
+    }
+
+    /// A party whose id differs from the profile's target runs clean.
+    #[test]
+    fn unarmed_party_passes_through() {
+        let mut transports = hub(2);
+        let t1 = transports.pop().unwrap();
+        let t0 = transports.pop().unwrap();
+        let profile = FaultProfile::single(1, 0, FaultKind::Crash);
+        let mut f0 = FaultyTransport::new(t0, &profile); // party 0: unarmed
+        {
+            let mut f1 = FaultyTransport::new(t1, &profile);
+            let mut recv = RecvBufs::new(2);
+            f1.exchange_all_into(Phase::Circuit, b"from1", &mut recv).unwrap_err();
+            // f1 drops here, closing its hub endpoint like a dead thread.
+        }
+        let mut recv = RecvBufs::new(2);
+        // Party 0 is clean but its peer crashed: the hub surfaces a
+        // closed-channel/timeout error rather than wedging.
+        let err = f0.exchange_all_into(Phase::Circuit, b"from0", &mut recv).unwrap_err();
+        assert!(matches!(err, Error::Timeout(_) | Error::Transport(_)), "got {err}");
+    }
+}

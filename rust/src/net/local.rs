@@ -17,11 +17,11 @@
 //! nothing; [`LocalTransport::pool_stats`] exposes the counters that pin
 //! this in tests.
 
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 
 use super::accounting::{CommTrace, Phase};
-use super::{RecvBufs, Transport};
+use super::{NetConfig, RecvBufs, Transport};
 use crate::error::{Error, Result};
 use crate::util::arena::{Arena, ArenaStats};
 
@@ -43,38 +43,40 @@ pub struct LocalTransport {
     seq: u64,
     /// Size-classed pool of payload buffers (see module docs).
     pool: Arena,
+    cfg: NetConfig,
     trace: Arc<CommTrace>,
 }
 
-/// Create a fully-connected hub of `parties` endpoints.
+/// Create a fully-connected hub of `parties` endpoints with default
+/// deadlines.
 pub fn hub(parties: usize) -> Vec<LocalTransport> {
+    hub_with(parties, NetConfig::default())
+}
+
+/// Create a fully-connected hub with explicit deadlines: a peer thread that
+/// fails to produce a round's bytes within `cfg.round_timeout` yields the
+/// fatal [`Error::Timeout`] instead of wedging the caller (DESIGN.md §7).
+pub fn hub_with(parties: usize, cfg: NetConfig) -> Vec<LocalTransport> {
     assert!(parties >= 2);
-    let mut senders_for: Vec<Vec<Option<Sender<Msg>>>> = (0..parties)
-        .map(|_| (0..parties).map(|_| None).collect::<Vec<_>>())
-        .collect();
-    let mut receivers: Vec<Option<Receiver<Msg>>> = (0..parties).map(|_| None).collect();
-    for (p, receiver) in receivers.iter_mut().enumerate() {
-        let (tx, rx) = std::sync::mpsc::channel::<Msg>();
-        *receiver = Some(rx);
-        for (q, senders) in senders_for.iter_mut().enumerate() {
-            if q != p {
-                senders[p] = Some(tx.clone());
-            }
-        }
-    }
-    senders_for
-        .into_iter()
-        .zip(receivers)
+    // txs[q] feeds party q's receiver.
+    let (txs, rxs): (Vec<Sender<Msg>>, Vec<Receiver<Msg>>) =
+        (0..parties).map(|_| std::sync::mpsc::channel::<Msg>()).unzip();
+    rxs.into_iter()
         .enumerate()
-        .map(|(p, (senders, receiver))| LocalTransport {
+        .map(|(p, receiver)| LocalTransport {
             party: p,
             parties,
-            senders,
-            receiver: receiver.unwrap(),
+            senders: txs
+                .iter()
+                .enumerate()
+                .map(|(q, tx)| if q == p { None } else { Some(tx.clone()) })
+                .collect(),
+            receiver,
             pending: (0..parties).map(|_| Vec::new()).collect(),
             next_seq: vec![0; parties],
             seq: 0,
             pool: Arena::new(),
+            cfg,
             trace: Arc::new(CommTrace::new()),
         })
         .collect()
@@ -85,6 +87,14 @@ impl LocalTransport {
     /// must not add `alloc_misses`).
     pub fn pool_stats(&self) -> ArenaStats {
         self.pool.stats()
+    }
+
+    /// Replace this endpoint's trace with a shared one. The coordinator
+    /// uses this when it respawns a session after a fault so byte/round
+    /// accounting keeps accumulating on the long-lived trace handed to
+    /// the metrics layer.
+    pub fn set_trace(&mut self, trace: Arc<CommTrace>) {
+        self.trace = trace;
     }
 
     /// Check a payload buffer out of the pool, filled with `data` (a warm
@@ -102,10 +112,24 @@ impl LocalTransport {
             return Ok(self.pending[peer].swap_remove(pos).1);
         }
         loop {
-            let (from, seq, payload) = self
-                .receiver
-                .recv_timeout(std::time::Duration::from_secs(30))
-                .map_err(|e| Error::Transport(format!("party {} recv: {e}", self.party)))?;
+            let (from, seq, payload) = match self.receiver.recv_timeout(self.cfg.round_timeout) {
+                Ok(msg) => msg,
+                // A silent peer is a deadline expiry (fatal, DESIGN.md §7):
+                // the job fails instead of wedging this thread.
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(Error::timeout(format!(
+                        "party {}: no round data from peer {peer} within {:?}",
+                        self.party, self.cfg.round_timeout
+                    )))
+                }
+                // All senders gone: the peer threads crashed or shut down.
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Transport(format!(
+                        "party {}: hub channels closed (peer threads gone)",
+                        self.party
+                    )))
+                }
+            };
             if from == peer && seq == want_seq {
                 return Ok(payload);
             }
@@ -146,10 +170,10 @@ impl Transport for LocalTransport {
                 continue;
             }
             let payload = self.pool_take_filled(data);
-            self.senders[q]
-                .as_ref()
-                .expect("hub wiring")
-                .send((self.party, seq, payload))
+            let Some(tx) = self.senders[q].as_ref() else {
+                return Err(Error::Transport(format!("no hub channel to party {q}")));
+            };
+            tx.send((self.party, seq, payload))
                 .map_err(|_| Error::Transport(format!("party {q} hung up")))?;
         }
         for q in 0..self.parties {
@@ -184,8 +208,25 @@ impl Transport for LocalTransport {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
+
+    /// A hub with a short deadline surfaces a silent peer as the fatal
+    /// `Error::Timeout` instead of blocking for the default 30 s.
+    #[test]
+    fn silent_peer_times_out() {
+        let cfg = NetConfig {
+            round_timeout: std::time::Duration::from_millis(50),
+            ..NetConfig::default()
+        };
+        let mut transports = hub_with(2, cfg);
+        let _t1 = transports.pop().unwrap(); // never exchanges, never drops
+        let mut t0 = transports.pop().unwrap();
+        let err = t0.exchange_all(Phase::Circuit, b"hello").unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)), "got {err}");
+        assert!(!err.is_retryable());
+    }
 
     #[test]
     fn two_party_exchange() {

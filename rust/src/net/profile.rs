@@ -129,6 +129,7 @@ pub fn project(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::net::accounting::Phase;

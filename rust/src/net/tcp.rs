@@ -8,15 +8,118 @@
 //! slots (`read_frame_into`): once a session has seen its largest frame,
 //! steady-state rounds perform zero receive-side allocations. The send
 //! path writes the caller's payload straight to the socket and never
-//! allocates.
+//! allocates (the retained resend frame below is arena-pooled).
+//!
+//! # Fault tolerance (DESIGN.md §7)
+//!
+//! Every blocking call is bounded by [`NetConfig`]: dialing backs off
+//! exponentially up to `connect_timeout`, the identify handshake has its
+//! own per-message deadline, and each round's socket reads/writes carry
+//! `round_timeout`. A deadline expiry is **fatal** ([`Error::Timeout`]) —
+//! a hung peer cannot be repaired by reconnecting.
+//!
+//! A *link* fault (reset / EOF / broken pipe) is **retryable**: the
+//! endpoint re-establishes the connection and runs a resync handshake.
+//! Every handshake message — initial connect and reconnect alike — is the
+//! 24-byte triple `[party][session_id][next_recv_seq]` in both
+//! directions. On reconnect, each side compares the peer's
+//! `next_recv_seq` against the sequence number of its own *retained last
+//! frame* (the send path keeps one pooled copy of the most recent
+//! payload): if the peer still needs it, the frame is resent verbatim.
+//! Rounds are a deterministic function of the parties' shares, so
+//! recovery is **bit-identical** to a fault-free run — the chaos suite
+//! (`tests/fault_injection.rs`) pins this. Resent bytes are counted in
+//! [`NetStats`], not in the protocol [`CommTrace`], so byte accounting
+//! stays identical between faulty and fault-free runs.
+//!
+//! Not handled (explicit non-goals, see DESIGN.md §7): Byzantine peers,
+//! simultaneous multi-link failures racing the same listener, and
+//! recovery of a crashed (rather than disconnected) party.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use super::accounting::{CommTrace, Phase};
-use super::{RecvBufs, Transport};
+use super::{NetConfig, NetStats, RecvBufs, Transport};
 use crate::error::{Error, Result};
+use crate::util::arena::Arena;
+
+/// Sequence number a fresh endpoint expects first (handshake field value
+/// on initial connect).
+const FRESH: u64 = 0;
+
+/// A bound-but-not-yet-connected endpoint. Splitting `bind` from
+/// `establish` lets callers bind port 0 and learn the kernel-assigned
+/// address (`local_addr`) before the peers dial in — the tests use this
+/// to stay collision-free under parallel runs.
+pub struct BoundListener {
+    party: usize,
+    listener: TcpListener,
+}
+
+impl BoundListener {
+    /// Bind this party's listen socket (e.g. `"127.0.0.1:0"` for an
+    /// ephemeral port).
+    pub fn bind(party: usize, addr: &str) -> Result<BoundListener> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Transport(format!("bind {addr}: {e}")))?;
+        Ok(BoundListener { party, listener })
+    }
+
+    /// The actual bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Connect the mesh: dial lower-ranked peers, accept higher-ranked
+    /// ones, all bounded by `cfg.connect_timeout`. `addrs[q]` is party
+    /// q's listen address; `addrs[self.party]` is ignored (this listener
+    /// is already bound). All parties must pass the same `session_id`.
+    pub fn establish(
+        self,
+        addrs: &[String],
+        session_id: u64,
+        cfg: NetConfig,
+    ) -> Result<TcpTransport> {
+        let parties = addrs.len();
+        let party = self.party;
+        if party >= parties || parties < 2 {
+            return Err(Error::config(format!("bad party id {party} for {parties} parties")));
+        }
+        // The accept path polls (no native accept timeout), so the
+        // listener stays non-blocking for the transport's lifetime.
+        self.listener.set_nonblocking(true)?;
+        let mut t = TcpTransport {
+            party,
+            parties,
+            streams: (0..parties).map(|_| None).collect(),
+            listener: self.listener,
+            addrs: addrs.to_vec(),
+            session_id,
+            seq: 0,
+            last_seq: 0,
+            last_frame: None,
+            pool: Arena::new(),
+            cfg,
+            stats: Arc::new(NetStats::default()),
+            trace: Arc::new(CommTrace::new()),
+        };
+        for q in 0..party {
+            let (s, _peer_next) = t.dial_handshake(q, FRESH)?;
+            t.streams[q] = Some(s);
+        }
+        for _ in party + 1..parties {
+            let (q, s, _peer_next) = t.accept_handshake(None, FRESH)?;
+            if t.streams[q].is_some() {
+                return Err(Error::Transport(format!("duplicate connection from party {q}")));
+            }
+            t.streams[q] = Some(s);
+        }
+        Ok(t)
+    }
+}
 
 /// TCP endpoint for one party.
 pub struct TcpTransport {
@@ -24,62 +127,279 @@ pub struct TcpTransport {
     parties: usize,
     /// Peer streams indexed by party id (entry for self is None).
     streams: Vec<Option<TcpStream>>,
+    /// Kept for the transport's lifetime so the accept side can
+    /// re-establish a dropped link mid-session.
+    listener: TcpListener,
+    addrs: Vec<String>,
+    session_id: u64,
     seq: u64,
+    /// Sequence number of the retained frame below.
+    last_seq: u64,
+    /// Pooled copy of the most recent round's payload (identical for all
+    /// peers), resent after a resync handshake when the peer still needs
+    /// it.
+    last_frame: Option<Vec<u8>>,
+    pool: Arena,
+    cfg: NetConfig,
+    stats: Arc<NetStats>,
     trace: Arc<CommTrace>,
 }
 
 impl TcpTransport {
-    /// Connect the mesh. `addrs[p]` is the listen address of party p
-    /// (e.g. "127.0.0.1:9001"). Blocks until all links are up.
+    /// Connect the mesh with default deadlines and session id 0. `addrs[p]`
+    /// is the listen address of party p (e.g. "127.0.0.1:9001"). Blocks
+    /// until all links are up (bounded by `NetConfig::connect_timeout`).
     pub fn connect(party: usize, addrs: &[String]) -> Result<TcpTransport> {
+        TcpTransport::connect_with(party, addrs, 0, NetConfig::default())
+    }
+
+    /// [`TcpTransport::connect`] with explicit deadlines and session id
+    /// (the resync handshake rejects peers from a different session).
+    pub fn connect_with(
+        party: usize,
+        addrs: &[String],
+        session_id: u64,
+        cfg: NetConfig,
+    ) -> Result<TcpTransport> {
         let parties = addrs.len();
         if party >= parties || parties < 2 {
             return Err(Error::config(format!("bad party id {party} for {parties} parties")));
         }
-        let mut streams: Vec<Option<TcpStream>> = (0..parties).map(|_| None).collect();
+        BoundListener::bind(party, &addrs[party])?.establish(addrs, session_id, cfg)
+    }
 
-        // Accept from higher-ranked peers.
-        let listener = TcpListener::bind(&addrs[party])
-            .map_err(|e| Error::Transport(format!("bind {}: {e}", addrs[party])))?;
-        // Dial lower-ranked peers (with retry while they come up).
-        for (q, addr) in addrs.iter().enumerate().take(party) {
-            let stream = dial_with_retry(addr)?;
-            // Identify ourselves.
-            let mut s = stream;
-            s.write_all(&(party as u64).to_le_bytes())?;
-            s.set_nodelay(true).ok();
-            streams[q] = Some(s);
-        }
-        for _ in party + 1..parties {
-            let (mut s, _) = listener
-                .accept()
-                .map_err(|e| Error::Transport(format!("accept: {e}")))?;
-            let mut idbuf = [0u8; 8];
-            s.read_exact(&mut idbuf)?;
-            let q = u64::from_le_bytes(idbuf) as usize;
-            if q >= parties || streams[q].is_some() || q == party {
-                return Err(Error::Transport(format!("unexpected peer id {q}")));
+    /// Fault/recovery counters for this endpoint.
+    pub fn net_stats(&self) -> Arc<NetStats> {
+        Arc::clone(&self.stats)
+    }
+
+    fn stream_mut(&mut self, q: usize) -> Result<&mut TcpStream> {
+        self.streams
+            .get_mut(q)
+            .and_then(|s| s.as_mut())
+            .ok_or_else(|| Error::Transport(format!("no link to party {q}")))
+    }
+
+    /// Arm both socket deadlines (`None` is never used: every blocking
+    /// socket call in this transport is bounded).
+    fn arm_deadlines(s: &TcpStream, d: Duration) -> Result<()> {
+        s.set_read_timeout(Some(d))?;
+        s.set_write_timeout(Some(d))?;
+        Ok(())
+    }
+
+    /// Dial peer `q` with exponential backoff, then run the handshake:
+    /// send `[party][session][want_recv]`, read the peer's triple back.
+    fn dial_handshake(&self, q: usize, want_recv: u64) -> Result<(TcpStream, u64)> {
+        let addr = &self.addrs[q];
+        let deadline = Instant::now() + self.cfg.connect_timeout;
+        let mut backoff = self.cfg.backoff.max(Duration::from_millis(1));
+        let mut s = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    self.stats.note_retry();
+                    if Instant::now() + backoff > deadline {
+                        self.stats.note_timeout();
+                        return Err(Error::timeout(format!(
+                            "dial {addr}: {e} (gave up after {:?})",
+                            self.cfg.connect_timeout
+                        )));
+                    }
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_secs(1));
+                }
             }
-            s.set_nodelay(true).ok();
-            streams[q] = Some(s);
+        };
+        s.set_nodelay(true).ok();
+        Self::arm_deadlines(&s, self.cfg.handshake_timeout)?;
+        write_hello(&mut s, self.party as u64, self.session_id, want_recv)?;
+        let (peer, session, peer_next) = read_hello(&mut s)?;
+        if peer != q as u64 {
+            return Err(Error::protocol(format!("dialed party {q}, got party {peer}")));
         }
-        Ok(TcpTransport { party, parties, streams, seq: 0, trace: Arc::new(CommTrace::new()) })
+        if session != self.session_id {
+            return Err(Error::protocol(format!(
+                "session mismatch with party {q}: ours {}, theirs {session}",
+                self.session_id
+            )));
+        }
+        Self::arm_deadlines(&s, self.cfg.round_timeout)?;
+        Ok((s, peer_next))
+    }
+
+    /// Accept one inbound connection (polling the non-blocking listener up
+    /// to `connect_timeout`), validate its hello and reply with ours.
+    /// `expect` pins the peer id during reconnect; `None` (initial mesh
+    /// bring-up) admits any higher-ranked party.
+    fn accept_handshake(
+        &self,
+        expect: Option<usize>,
+        want_recv: u64,
+    ) -> Result<(usize, TcpStream, u64)> {
+        let deadline = Instant::now() + self.cfg.connect_timeout;
+        let mut s = loop {
+            match self.listener.accept() {
+                Ok((s, _)) => break s,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        self.stats.note_timeout();
+                        return Err(Error::timeout(format!(
+                            "party {}: no inbound connection within {:?}",
+                            self.party, self.cfg.connect_timeout
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(Error::Transport(format!("accept: {e}"))),
+            }
+        };
+        s.set_nonblocking(false)?;
+        s.set_nodelay(true).ok();
+        Self::arm_deadlines(&s, self.cfg.handshake_timeout)?;
+        let (peer, session, peer_next) = read_hello(&mut s)?;
+        let q = peer as usize;
+        if q >= self.parties || q == self.party || expect.is_some_and(|want| want != q) {
+            return Err(Error::protocol(format!(
+                "unexpected peer id {peer} (expected {expect:?})"
+            )));
+        }
+        if session != self.session_id {
+            return Err(Error::protocol(format!(
+                "session mismatch with party {q}: ours {}, theirs {session}",
+                self.session_id
+            )));
+        }
+        write_hello(&mut s, self.party as u64, self.session_id, want_recv)?;
+        Self::arm_deadlines(&s, self.cfg.round_timeout)?;
+        Ok((q, s, peer_next))
+    }
+
+    /// Re-establish the link to `q` after a retryable fault and resync:
+    /// tell the peer which seq we still need (`want_recv`), learn which
+    /// seq it needs, and resend our retained frame if that is it. Dialer
+    /// and acceptor roles are fixed by rank, as at mesh bring-up.
+    fn recover_link(&mut self, q: usize, want_recv: u64) -> Result<()> {
+        let mut last_err = Error::Transport(format!("link to party {q} lost"));
+        for _ in 0..self.cfg.retries.max(1) {
+            match self.try_recover(q, want_recv) {
+                Ok(()) => {
+                    self.stats.note_reconnect();
+                    return Ok(());
+                }
+                Err(e) => last_err = e,
+            }
+        }
+        Err(last_err)
+    }
+
+    fn try_recover(&mut self, q: usize, want_recv: u64) -> Result<()> {
+        self.streams[q] = None; // drop the dead socket first
+        let (s, peer_next) = if q < self.party {
+            self.dial_handshake(q, want_recv)?
+        } else {
+            let (peer, s, peer_next) = self.accept_handshake(Some(q), want_recv)?;
+            debug_assert_eq!(peer, q);
+            (s, peer_next)
+        };
+        self.streams[q] = Some(s);
+        if peer_next == self.last_seq {
+            // The peer never got (all of) our last frame: resend it
+            // verbatim. Counted in NetStats, not CommTrace — protocol
+            // byte accounting must stay identical to a fault-free run.
+            let Some(frame) = self.last_frame.take() else {
+                return Err(Error::protocol(format!(
+                    "resync with party {q}: peer needs seq {peer_next} but no frame is retained"
+                )));
+            };
+            let r = write_frame(self.stream_mut(q)?, self.last_seq, &frame);
+            self.last_frame = Some(frame);
+            r?;
+            self.stats.note_resend();
+        } else if peer_next != self.last_seq + 1 {
+            return Err(Error::protocol(format!(
+                "resync with party {q} diverged: peer expects seq {peer_next}, \
+                 our last sent seq is {}",
+                self.last_seq
+            )));
+        }
+        Ok(())
+    }
+
+    /// Keep a pooled copy of this round's payload for resend-after-resync.
+    fn retain_frame(&mut self, data: &[u8], seq: u64) {
+        if let Some(old) = self.last_frame.take() {
+            self.pool.put_bytes(old);
+        }
+        let mut buf = self.pool.take_bytes(data.len());
+        RecvBufs::fill_slot(&mut buf, data);
+        self.last_frame = Some(buf);
+        self.last_seq = seq;
+    }
+
+    /// Map a deadline expiry on the socket to the fatal [`Error::Timeout`]
+    /// (counting it); pass every other error through.
+    fn map_deadline(&self, q: usize, e: Error) -> Error {
+        if let Error::Io(io) = &e {
+            if matches!(io.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+            {
+                self.stats.note_timeout();
+                return Error::timeout(format!(
+                    "party {}: round {} with peer {q} exceeded {:?}",
+                    self.party, self.seq, self.cfg.round_timeout
+                ));
+            }
+        }
+        e
+    }
+
+    fn send_with_recovery(&mut self, q: usize, seq: u64, data: &[u8]) -> Result<()> {
+        match write_frame(self.stream_mut(q)?, seq, data) {
+            Ok(()) => Ok(()),
+            Err(e) if e.is_retryable() => {
+                // Recovery resends the retained frame iff the peer still
+                // needs it, so the caller must NOT rewrite (a double send
+                // would desequence the stream).
+                self.recover_link(q, seq)
+            }
+            Err(e) => Err(self.map_deadline(q, e)),
+        }
+    }
+
+    fn read_with_recovery(&mut self, q: usize, seq: u64, out: &mut Vec<u8>) -> Result<()> {
+        let max = self.cfg.max_frame_len;
+        match read_frame_into(self.stream_mut(q)?, seq, out, max) {
+            Ok(()) => Ok(()),
+            Err(e) if e.is_retryable() => {
+                self.recover_link(q, seq)?;
+                read_frame_into(self.stream_mut(q)?, seq, out, max)
+                    .map_err(|e| self.map_deadline(q, e))
+            }
+            Err(e) => Err(self.map_deadline(q, e)),
+        }
     }
 }
 
-fn dial_with_retry(addr: &str) -> Result<TcpStream> {
-    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
-    loop {
-        match TcpStream::connect(addr) {
-            Ok(s) => return Ok(s),
-            Err(e) => {
-                if std::time::Instant::now() > deadline {
-                    return Err(Error::Transport(format!("connect {addr}: {e}")));
-                }
-                std::thread::sleep(std::time::Duration::from_millis(50));
-            }
-        }
-    }
+/// 24-byte handshake triple `[party][session_id][next_recv_seq]`, used in
+/// both directions on connect and reconnect.
+fn write_hello(s: &mut TcpStream, party: u64, session: u64, next_recv: u64) -> Result<()> {
+    let mut buf = [0u8; 24];
+    buf[0..8].copy_from_slice(&party.to_le_bytes());
+    buf[8..16].copy_from_slice(&session.to_le_bytes());
+    buf[16..24].copy_from_slice(&next_recv.to_le_bytes());
+    s.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_hello(s: &mut TcpStream) -> Result<(u64, u64, u64)> {
+    let mut buf = [0u8; 24];
+    s.read_exact(&mut buf)?;
+    let word = |i: usize| {
+        let mut w = [0u8; 8];
+        w.copy_from_slice(&buf[i * 8..i * 8 + 8]);
+        u64::from_le_bytes(w)
+    };
+    Ok((word(0), word(1), word(2)))
 }
 
 fn write_frame(s: &mut TcpStream, seq: u64, payload: &[u8]) -> Result<()> {
@@ -93,17 +413,35 @@ fn write_frame(s: &mut TcpStream, seq: u64, payload: &[u8]) -> Result<()> {
 /// contract): overwrite the already-initialized prefix in place, then
 /// append any remainder — `Take::read_to_end` fills spare capacity
 /// directly, so growth within capacity neither allocates nor pre-zeroes.
-fn read_frame_into(s: &mut TcpStream, want_seq: u64, out: &mut Vec<u8>) -> Result<()> {
+///
+/// Error classification (DESIGN.md §7): a length header above `max_len`
+/// is [`Error::Wire`] (fatal — rejected *before* any allocation), an
+/// out-of-order seq is [`Error::Transport`] (fatal protocol divergence),
+/// and a connection that closes mid-frame surfaces as a retryable
+/// `UnexpectedEof` I/O error so the session layer can reconnect-and-resend.
+fn read_frame_into(
+    s: &mut TcpStream,
+    want_seq: u64,
+    out: &mut Vec<u8>,
+    max_len: usize,
+) -> Result<()> {
     let mut hdr = [0u8; 16];
     s.read_exact(&mut hdr)?;
-    let seq = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
+    let seq = u64::from_le_bytes([
+        hdr[0], hdr[1], hdr[2], hdr[3], hdr[4], hdr[5], hdr[6], hdr[7],
+    ]);
     if seq != want_seq {
         return Err(Error::Transport(format!("out-of-order frame: got {seq}, want {want_seq}")));
     }
-    let len = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
-    if len > (1 << 32) {
-        return Err(Error::Transport(format!("frame too large: {len}")));
+    let len64 = u64::from_le_bytes([
+        hdr[8], hdr[9], hdr[10], hdr[11], hdr[12], hdr[13], hdr[14], hdr[15],
+    ]);
+    if len64 > max_len as u64 {
+        return Err(Error::wire(format!(
+            "frame length {len64} exceeds max_frame_len {max_len}"
+        )));
     }
+    let len = len64 as usize;
     if out.len() > len {
         out.truncate(len);
     }
@@ -112,9 +450,9 @@ fn read_frame_into(s: &mut TcpStream, want_seq: u64, out: &mut Vec<u8>) -> Resul
     if len > prefix {
         let appended = s.by_ref().take((len - prefix) as u64).read_to_end(out)?;
         if appended != len - prefix {
-            return Err(Error::Transport(format!(
-                "short frame: got {} of {len} bytes",
-                prefix + appended
+            return Err(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                format!("connection closed mid-frame: got {} of {len} bytes", prefix + appended),
             )));
         }
     }
@@ -142,9 +480,19 @@ impl Transport for TcpTransport {
                 self.parties
             )));
         }
-        let t0 = std::time::Instant::now();
+        if data.len() > self.cfg.max_frame_len {
+            return Err(Error::wire(format!(
+                "payload of {} bytes exceeds max_frame_len {}",
+                data.len(),
+                self.cfg.max_frame_len
+            )));
+        }
+        let t0 = Instant::now();
         let seq = self.seq;
         self.seq += 1;
+        // Retain before the first write: a fault at any point in the round
+        // can then always resync from the retained copy.
+        self.retain_frame(data, seq);
         // Write to all peers, then read from all peers. Per-link frames are
         // small enough that the kernel buffers absorb the write side; a
         // full-duplex implementation with writer threads is unnecessary at
@@ -153,14 +501,18 @@ impl Transport for TcpTransport {
             if q == self.party {
                 continue;
             }
-            write_frame(self.streams[q].as_mut().unwrap(), seq, data)?;
+            self.send_with_recovery(q, seq, data)?;
         }
-        let slots = recv.slots_mut();
         for q in 0..self.parties {
             if q == self.party {
                 continue;
             }
-            read_frame_into(self.streams[q].as_mut().unwrap(), seq, &mut slots[q])?;
+            // Split the slot out so the `&mut self` recovery path and the
+            // slot fill don't alias.
+            let mut slot = std::mem::take(&mut recv.slots_mut()[q]);
+            let r = self.read_with_recovery(q, seq, &mut slot);
+            recv.slots_mut()[q] = slot;
+            r?;
         }
         self.trace.record(phase, (data.len() * (self.parties - 1)) as u64);
         self.trace.record_wait(t0.elapsed());
@@ -170,29 +522,54 @@ impl Transport for TcpTransport {
     fn trace(&self) -> Arc<CommTrace> {
         Arc::clone(&self.trace)
     }
+
+    /// Chaos hook (see [`Transport::inject_peer_drop`]): severing the
+    /// socket makes *both* ends observe a real link fault, so the next
+    /// exchange exercises the genuine reconnect-and-resend machinery.
+    fn inject_peer_drop(&mut self, peer: usize) -> bool {
+        match self.streams.get(peer) {
+            Some(Some(s)) => {
+                s.shutdown(std::net::Shutdown::Both).ok();
+                true
+            }
+            _ => false,
+        }
+    }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
-    /// Two parties over loopback sockets exchange several rounds.
+    /// Bind party 0 on an ephemeral port and return (transport-0-builder,
+    /// addrs) so tests never race on hardcoded ports.
+    fn ephemeral_pair_addrs() -> (BoundListener, Vec<String>) {
+        let l0 = BoundListener::bind(0, "127.0.0.1:0").unwrap();
+        let addr0 = format!("127.0.0.1:{}", l0.local_addr().unwrap().port());
+        // Party 1 is the highest rank: it dials everyone and accepts no
+        // one, so its own listen address can be any bindable port.
+        (l0, vec![addr0, "127.0.0.1:0".to_string()])
+    }
+
+    /// Two parties over loopback sockets exchange several rounds
+    /// (ephemeral ports — collision-free under parallel test runs).
     #[test]
     fn two_party_loopback() {
-        let addrs = vec!["127.0.0.1:39411".to_string(), "127.0.0.1:39412".to_string()];
-        let a0 = addrs.clone();
+        let (l0, addrs) = ephemeral_pair_addrs();
+        let a1 = addrs.clone();
         let h = std::thread::spawn(move || {
-            let mut t = TcpTransport::connect(0, &a0).unwrap();
+            let mut t = TcpTransport::connect_with(1, &a1, 7, NetConfig::default()).unwrap();
             for r in 0..5u8 {
-                let got = t.exchange_all(Phase::Circuit, &[r, 0]).unwrap();
-                assert_eq!(got[1], vec![r, 1]);
+                let got = t.exchange_all(Phase::Circuit, &[r, 1]).unwrap();
+                assert_eq!(got[0], vec![r, 0]);
             }
             t.trace().total_bytes()
         });
-        let mut t = TcpTransport::connect(1, &addrs).unwrap();
+        let mut t = l0.establish(&addrs, 7, NetConfig::default()).unwrap();
         for r in 0..5u8 {
-            let got = t.exchange_all(Phase::Circuit, &[r, 1]).unwrap();
-            assert_eq!(got[0], vec![r, 0]);
+            let got = t.exchange_all(Phase::Circuit, &[r, 0]).unwrap();
+            assert_eq!(got[1], vec![r, 1]);
         }
         assert_eq!(h.join().unwrap(), 10);
         assert_eq!(t.trace().total_rounds(), 5);
@@ -202,30 +579,128 @@ mod tests {
     /// slot allocations stay put once warm (pointer-stable across rounds).
     #[test]
     fn loopback_exchange_into_reuses_slots() {
-        let addrs = vec!["127.0.0.1:39413".to_string(), "127.0.0.1:39414".to_string()];
-        let a0 = addrs.clone();
+        let (l0, addrs) = ephemeral_pair_addrs();
+        let a1 = addrs.clone();
         let h = std::thread::spawn(move || {
-            let mut t = TcpTransport::connect(0, &a0).unwrap();
+            let mut t = TcpTransport::connect_with(1, &a1, 0, NetConfig::default()).unwrap();
             let mut recv = RecvBufs::new(2);
             for r in 0..6u8 {
-                let payload = vec![r, 0, 0, 0];
+                let payload = vec![r, 1, 1, 1];
                 t.exchange_all_into(Phase::Circuit, &payload, &mut recv).unwrap();
-                assert_eq!(recv.get(1), [r, 1, 1, 1]);
+                assert_eq!(recv.get(0), [r, 0, 0, 0]);
             }
         });
-        let mut t = TcpTransport::connect(1, &addrs).unwrap();
+        let mut t = l0.establish(&addrs, 0, NetConfig::default()).unwrap();
         let mut recv = RecvBufs::new(2);
         let mut warm_ptr = None;
         for r in 0..6u8 {
-            let payload = vec![r, 1, 1, 1];
+            let payload = vec![r, 0, 0, 0];
             t.exchange_all_into(Phase::Circuit, &payload, &mut recv).unwrap();
-            assert_eq!(recv.get(0), [r, 0, 0, 0]);
-            let ptr = recv.get(0).as_ptr();
+            assert_eq!(recv.get(1), [r, 1, 1, 1]);
+            let ptr = recv.get(1).as_ptr();
             match warm_ptr {
                 None => warm_ptr = Some(ptr),
                 Some(p) => assert_eq!(p, ptr, "warm slot must not reallocate (round {r})"),
             }
         }
+        h.join().unwrap();
+    }
+
+    /// A severed link mid-session recovers transparently through the
+    /// resync handshake: later rounds see exactly the bytes a fault-free
+    /// run would, and the recovery counters record the reconnect.
+    #[test]
+    fn reconnect_and_resend_recovers_round() {
+        let (l0, addrs) = ephemeral_pair_addrs();
+        let a1 = addrs.clone();
+        let h = std::thread::spawn(move || {
+            let mut t = TcpTransport::connect_with(1, &a1, 9, NetConfig::default()).unwrap();
+            for r in 0..6u8 {
+                if r == 3 {
+                    // Sever the link right before round 3's exchange; both
+                    // ends must recover via reconnect-and-resend.
+                    assert!(t.inject_peer_drop(0));
+                }
+                let got = t.exchange_all(Phase::Circuit, &[r, 1]).unwrap();
+                assert_eq!(got[0], vec![r, 0], "round {r}");
+            }
+            let stats = t.net_stats().snapshot();
+            (stats.reconnects, t.trace().total_bytes())
+        });
+        let mut t = l0.establish(&addrs, 9, NetConfig::default()).unwrap();
+        for r in 0..6u8 {
+            let got = t.exchange_all(Phase::Circuit, &[r, 0]).unwrap();
+            assert_eq!(got[1], vec![r, 1], "round {r}");
+        }
+        let (reconnects, bytes1) = h.join().unwrap();
+        assert!(reconnects >= 1, "faulted side must have reconnected");
+        assert!(t.net_stats().snapshot().reconnects >= 1, "accept side must have reconnected");
+        // Protocol byte accounting is identical to a fault-free run
+        // (resends are counted in NetStats, not CommTrace).
+        assert_eq!(bytes1, 12);
+        assert_eq!(t.trace().total_bytes(), 12);
+    }
+
+    /// Satellite: the oversized-frame guard fires on the declared length,
+    /// *before* any allocation (the old `1 << 32` guard admitted 4 GiB).
+    #[test]
+    fn oversized_frame_rejected_before_allocation() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&0u64.to_le_bytes()).unwrap(); // seq
+            s.write_all(&(1u64 << 62).to_le_bytes()).unwrap(); // absurd len
+            s.flush().unwrap();
+            // Hold the socket open until the reader has decided.
+            std::thread::sleep(Duration::from_millis(100));
+        });
+        let (mut s, _) = l.accept().unwrap();
+        let mut out = Vec::new();
+        let err = read_frame_into(&mut s, 0, &mut out, 1 << 20).unwrap_err();
+        assert!(matches!(err, Error::Wire(_)), "got {err}");
+        assert!(!err.is_retryable(), "a corrupt length header is not a link fault");
+        assert_eq!(out.capacity(), 0, "guard must fire before allocating");
+        h.join().unwrap();
+    }
+
+    /// Out-of-order sequence numbers are fatal protocol divergence, not a
+    /// retryable link fault.
+    #[test]
+    fn out_of_order_seq_is_fatal() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            write_frame(&mut s, 7, b"zzz").unwrap();
+            std::thread::sleep(Duration::from_millis(100));
+        });
+        let (mut s, _) = l.accept().unwrap();
+        let mut out = Vec::new();
+        let err = read_frame_into(&mut s, 0, &mut out, 1 << 20).unwrap_err();
+        assert!(matches!(err, Error::Transport(_)), "got {err}");
+        assert!(!err.is_retryable());
+        h.join().unwrap();
+    }
+
+    /// A connection that closes mid-frame surfaces as a *retryable* EOF
+    /// (the session layer may reconnect-and-resend), distinct from the
+    /// fatal wire/protocol errors above.
+    #[test]
+    fn short_frame_is_retryable_eof() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&0u64.to_le_bytes()).unwrap(); // seq
+            s.write_all(&100u64.to_le_bytes()).unwrap(); // claims 100 bytes
+            s.write_all(&[0xab; 10]).unwrap(); // delivers 10
+            // Dropping the stream closes the connection mid-frame.
+        });
+        let (mut s, _) = l.accept().unwrap();
+        let mut out = Vec::new();
+        let err = read_frame_into(&mut s, 0, &mut out, 1 << 20).unwrap_err();
+        assert!(err.is_retryable(), "mid-frame close must classify retryable: {err}");
         h.join().unwrap();
     }
 }

@@ -42,7 +42,7 @@ fn serve_batches_and_matches_plaintext() {
     }
     let mut batch_sizes = Vec::new();
     for (i, rx) in rxs {
-        let r = rx.recv().unwrap();
+        let r = rx.recv().unwrap().unwrap();
         let want = plain.forward(dataset.test.batch(i, i + 1), 1).unwrap();
         let want_pred = PlainExecutor::argmax(&want, cfg.num_classes)[0];
         assert_eq!(r.pred, want_pred, "sample {i} prediction mismatch vs plaintext");
@@ -77,7 +77,8 @@ fn serve_bitsliced_layout_matches_lane_layout() {
         for i in 0..4 {
             rxs.push(svc.infer_async(dataset.test.batch(i, i + 1).to_vec()).unwrap());
         }
-        let preds: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().pred).collect();
+        let preds: Vec<usize> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().pred).collect();
         let by = svc.trace.bytes_by_phase();
         let protocol: u64 = by[..4].iter().sum();
         svc.shutdown();
@@ -108,7 +109,8 @@ fn serve_prefetch_matches_sync_dealer() {
         for i in 0..6 {
             rxs.push(svc.infer_async(dataset.test.batch(i, i + 1).to_vec()).unwrap());
         }
-        let preds: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().pred).collect();
+        let preds: Vec<usize> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().pred).collect();
         let by = svc.trace.bytes_by_phase();
         let protocol: u64 = by[..4].iter().sum();
         svc.shutdown();
@@ -153,7 +155,7 @@ fn serve_with_hummingbird_plan_reduces_bytes() {
             rxs.push(svc.infer_async(dataset.test.batch(i, i + 1).to_vec()).unwrap());
         }
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         let by = svc.trace.bytes_by_phase();
         let protocol: u64 = by[..4].iter().sum();

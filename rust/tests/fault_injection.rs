@@ -1,0 +1,253 @@
+//! Chaos suite for the fault-tolerant session layer (DESIGN.md §7).
+//!
+//! Three acceptance scenarios:
+//!
+//! 1. A hung peer past `round_timeout` fails its job with a per-job error
+//!    — the coordinator process is not wedged and serves the next request.
+//! 2. A seeded drop-at-round-k over real TCP recovers via
+//!    reconnect-and-resend with bit-identical outputs AND bit-identical
+//!    protocol byte accounting, across both binary layouts and with the
+//!    offline prefetcher on or off.
+//! 3. After an injected party crash, the coordinator answers the failed
+//!    job with an error, respawns the party session, serves the next
+//!    request, and the metrics counters pin exactly one failed job and
+//!    one session restart.
+//!
+//! The TCP scenarios are self-contained (loopback, ephemeral ports). The
+//! coordinator scenarios need the micronet artifacts and skip otherwise
+//! (same gating as tests/coordinator_serve.rs).
+
+use std::time::Duration;
+
+use hummingbird::beaver::schedule::TripleSchedule;
+use hummingbird::coordinator::{Coordinator, ServeOptions};
+use hummingbird::crypto::prg::Prg;
+use hummingbird::gmw::kernels::{BitslicedKernels, KernelBackend, RustKernels};
+use hummingbird::gmw::{GmwParty, ReluPlan};
+use hummingbird::hummingbird::PlanSet;
+use hummingbird::model::{Dataset, ModelConfig};
+use hummingbird::net::accounting::Phase;
+use hummingbird::net::fault::{FaultKind, FaultProfile, FaultyTransport};
+use hummingbird::net::tcp::{BoundListener, TcpTransport};
+use hummingbird::net::{NetConfig, RecvBufs, Transport};
+use hummingbird::sharing::{reconstruct_arith, share_arith};
+
+const MODEL: &str = "micronet_synth10";
+
+fn ready() -> Option<std::path::PathBuf> {
+    let repo = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).to_path_buf();
+    if repo.join("artifacts/manifest.json").exists()
+        && repo.join(format!("artifacts/weights/{MODEL}.json")).exists()
+    {
+        Some(repo)
+    } else {
+        eprintln!("skipping: artifacts/weights missing");
+        None
+    }
+}
+
+/// Loopback 2-party TCP mesh on ephemeral ports: party 0 binds port 0 and
+/// party 1 (highest rank) only dials, so its own listen address is never
+/// used.
+fn tcp_pair(session: u64, cfg: NetConfig) -> (TcpTransport, TcpTransport) {
+    let l0 = BoundListener::bind(0, "127.0.0.1:0").unwrap();
+    let addrs = vec![l0.local_addr().unwrap().to_string(), "127.0.0.1:0".to_string()];
+    let a0 = addrs.clone();
+    let h0 = std::thread::spawn(move || l0.establish(&a0, session, cfg).unwrap());
+    let t1 = TcpTransport::connect_with(1, &addrs, session, cfg).unwrap();
+    (h0.join().unwrap(), t1)
+}
+
+/// What one ReLU-over-TCP run produced: per-party output shares, the
+/// protocol byte/round accounting, and how many link recoveries happened.
+struct RunOut {
+    outputs: Vec<Vec<u64>>,
+    bytes: u64,
+    rounds: u64,
+    reconnects: u64,
+    resends: u64,
+}
+
+fn drive_party<T: Transport + 'static, K: KernelBackend>(
+    mut party: GmwParty<T, K>,
+    shares: &[u64],
+    plan: ReluPlan,
+    prefetch: bool,
+) -> (Vec<u64>, u64, u64) {
+    if prefetch {
+        let schedule = TripleSchedule::for_relu(shares.len(), plan, party.parties());
+        party.enable_prefetch(schedule, false);
+    }
+    let out = party.relu(shares, plan).unwrap();
+    let trace = party.transport.trace();
+    (out, trace.total_bytes(), trace.total_rounds())
+}
+
+/// Run a 2-party ReLU over real TCP, optionally with an injected fault
+/// profile (wrapped around both endpoints; only the profile's party arms).
+fn run_relu_pair(
+    shares: &[Vec<u64>],
+    plan: ReluPlan,
+    bitsliced: bool,
+    prefetch: bool,
+    fault: Option<FaultProfile>,
+) -> RunOut {
+    let (t0, t1) = tcp_pair(0xfa17, NetConfig::default());
+    let stats = [t0.net_stats(), t1.net_stats()];
+    let mut handles = Vec::new();
+    for (me, t) in [t0, t1].into_iter().enumerate() {
+        let my_shares = shares[me].clone();
+        let fault = fault.clone();
+        handles.push(std::thread::spawn(move || match (fault, bitsliced) {
+            (Some(p), true) => drive_party(
+                GmwParty::with_kernels(FaultyTransport::new(t, &p), 7, BitslicedKernels::default()),
+                &my_shares,
+                plan,
+                prefetch,
+            ),
+            (Some(p), false) => drive_party(
+                GmwParty::with_kernels(FaultyTransport::new(t, &p), 7, RustKernels::default()),
+                &my_shares,
+                plan,
+                prefetch,
+            ),
+            (None, true) => drive_party(
+                GmwParty::with_kernels(t, 7, BitslicedKernels::default()),
+                &my_shares,
+                plan,
+                prefetch,
+            ),
+            (None, false) => drive_party(
+                GmwParty::with_kernels(t, 7, RustKernels::default()),
+                &my_shares,
+                plan,
+                prefetch,
+            ),
+        }));
+    }
+    let done: Vec<(Vec<u64>, u64, u64)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // Party 0 and party 1 must see symmetric protocol accounting.
+    assert_eq!((done[0].1, done[0].2), (done[1].1, done[1].2), "asymmetric accounting");
+    let (bytes, rounds) = (done[0].1, done[0].2);
+    let outputs: Vec<Vec<u64>> = done.into_iter().map(|(out, _, _)| out).collect();
+    let (mut reconnects, mut resends) = (0, 0);
+    for s in &stats {
+        let snap = s.snapshot();
+        reconnects += snap.reconnects;
+        resends += snap.resends;
+    }
+    RunOut { outputs, bytes, rounds, reconnects, resends }
+}
+
+/// Acceptance scenario 2: a seeded link drop at round k over real TCP is
+/// healed by the reconnect-and-resend path with bit-identical per-party
+/// outputs and bit-identical protocol byte/round accounting — across both
+/// binary layouts and with the offline prefetcher on or off.
+#[test]
+fn drop_at_round_k_recovers_bit_identical() {
+    let n = 256;
+    // Exact full-width plan: the plaintext ReLU reference below holds for
+    // arbitrary inputs (a reduced window would approximate).
+    let plan = ReluPlan::BASELINE;
+    let mut prg = Prg::new(0xd10f, 0);
+    let x: Vec<u64> = (0..n)
+        .map(|i| if i % 3 == 0 { prg.next_u64() | (1u64 << 63) } else { prg.next_u64() >> 1 })
+        .collect();
+    let shares = share_arith(&mut prg, &x, 2);
+
+    // Fault-free reference (lane layout, synchronous dealer).
+    let reference = run_relu_pair(&shares, plan, false, false, None);
+    assert_eq!(reference.reconnects, 0);
+    let expect: Vec<u64> = x.iter().map(|v| if (*v as i64) < 0 { 0 } else { *v }).collect();
+    assert_eq!(reconstruct_arith(&reference.outputs), expect, "reference ReLU wrong");
+
+    // Party 1 severs its link to party 0 right before round 2, in every
+    // layout/prefetch combination. Recovery must be invisible in both the
+    // outputs and the protocol accounting.
+    let profile = FaultProfile::single(1, 2, FaultKind::Drop);
+    for (bitsliced, prefetch) in [(false, false), (false, true), (true, false), (true, true)] {
+        let run = run_relu_pair(&shares, plan, bitsliced, prefetch, Some(profile.clone()));
+        assert_eq!(
+            run.outputs, reference.outputs,
+            "recovered run diverged (bitsliced={bitsliced}, prefetch={prefetch})"
+        );
+        assert_eq!(
+            (run.bytes, run.rounds),
+            (reference.bytes, reference.rounds),
+            "recovery leaked into protocol accounting (bitsliced={bitsliced}, prefetch={prefetch})"
+        );
+        assert!(
+            run.reconnects >= 2,
+            "both endpoints should have recovered the link: {} reconnects",
+            run.reconnects
+        );
+        assert!(run.resends >= 1, "the dropped round's frame should have been resent");
+    }
+}
+
+/// A RecvBufs sized for the wrong mesh is rejected before any socket IO
+/// (satellite coverage: transport error paths over real sockets).
+#[test]
+fn mismatched_recv_bufs_rejected_over_tcp() {
+    let (_t0, mut t1) = tcp_pair(0xbadb, NetConfig::default());
+    let mut wrong = RecvBufs::new(3);
+    let err = t1.exchange_all_into(Phase::Circuit, b"x", &mut wrong).unwrap_err();
+    assert!(!err.is_retryable(), "mesh-size mismatch must be fatal: {err}");
+}
+
+/// Acceptance scenario 1: a peer that hangs past `round_timeout` fails the
+/// in-flight job with a per-job error — and the coordinator process keeps
+/// serving (the very next request succeeds on a respawned session).
+#[test]
+fn hung_peer_times_out_without_wedging_coordinator() {
+    let Some(repo) = ready() else { return };
+    let cfg = ModelConfig::load_named(&repo, MODEL).unwrap();
+    let dataset = Dataset::load(repo.join("artifacts"), &cfg.dataset).unwrap();
+
+    let mut opts = ServeOptions::new(&repo, MODEL);
+    opts.plan = Some(PlanSet::baseline(cfg.relu_groups));
+    opts.net.round_timeout = Duration::from_millis(100);
+    // Party 1 stalls 1.5s before its first exchange: party 0's recv blows
+    // the 100ms round deadline long before the sleep ends.
+    opts.fault_profile = Some(FaultProfile::single(1, 0, FaultKind::Delay(1500)));
+    let svc = Coordinator::start(opts).unwrap();
+
+    let err = svc.infer(dataset.test.batch(0, 1).to_vec()).unwrap_err();
+    assert!(err.to_string().contains("inference failed"), "unexpected error: {err}");
+
+    // Not wedged: the respawned session answers.
+    let ok = svc.infer(dataset.test.batch(1, 2).to_vec()).unwrap();
+    assert_eq!(ok.logits.len(), cfg.num_classes);
+
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.faults.failed_jobs, 1);
+    assert_eq!(snap.faults.timeouts, 1, "root cause should classify as a deadline expiry");
+    assert_eq!(snap.faults.sessions_restarted, 1);
+    svc.shutdown();
+}
+
+/// Acceptance scenario 3: an injected party crash fails exactly one job,
+/// the coordinator respawns the session and serves the next request, and
+/// the metrics counters match exactly.
+#[test]
+fn party_crash_fails_one_job_then_serves_again() {
+    let Some(repo) = ready() else { return };
+    let cfg = ModelConfig::load_named(&repo, MODEL).unwrap();
+    let dataset = Dataset::load(repo.join("artifacts"), &cfg.dataset).unwrap();
+
+    let mut opts = ServeOptions::new(&repo, MODEL);
+    opts.plan = Some(PlanSet::baseline(cfg.relu_groups));
+    opts.fault_profile = Some(FaultProfile::single(1, 0, FaultKind::Crash));
+    let svc = Coordinator::start(opts).unwrap();
+
+    svc.infer(dataset.test.batch(0, 1).to_vec()).unwrap_err();
+    let ok = svc.infer(dataset.test.batch(1, 2).to_vec()).unwrap();
+    assert_eq!(ok.logits.len(), cfg.num_classes);
+
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.faults.failed_jobs, 1, "exactly one failed job");
+    assert_eq!(snap.faults.timeouts, 0, "a crash is not a deadline expiry");
+    assert_eq!(snap.faults.sessions_restarted, 1, "exactly one respawn");
+    assert_eq!(snap.batches_done, 1, "only the successful batch counts");
+    svc.shutdown();
+}
