@@ -1,0 +1,311 @@
+//! `hblint`: the repo-invariant static analysis pass (DESIGN.md §8).
+//!
+//! HummingBird's headline claim is "faster **without introducing any
+//! errors**", and the code that upholds it is the most dangerous in the
+//! tree: lifetime-erasing `unsafe` in the worker pool, raw-pointer writers
+//! in the bitsliced kernels, a background prefetch producer. Clippy cannot
+//! express the repo-specific invariants those modules rely on, so this
+//! module implements them as a dependency-free source-level lint — a
+//! hand-rolled scanner in the spirit of `util/json.rs`, run as the blocking
+//! `hblint` CI step and as part of `cargo test` (`tests/hblint.rs`).
+//!
+//! Four rules (see [`rules`] for the exact semantics):
+//!
+//! * **S** — every `unsafe` is immediately preceded by a `// SAFETY:`
+//!   comment carrying the proof obligation.
+//! * **A** — no allocating calls in the hot-path modules ([`HOT_PATHS`])
+//!   outside `// HOT-PATH-ALLOW: <reason>` sites; the compile-time
+//!   companion to the runtime arena/alloc-miss counters.
+//! * **T** — every `Transport::exchange_all_into` impl records into
+//!   `CommTrace` or delegates to an inner transport, so the exact
+//!   byte/round accounting (README's headline tables) can never silently
+//!   lose a transport.
+//! * **U** — crate-wide `.unwrap()` / `.expect(` wall outside test modules,
+//!   with `#[allow(clippy::unwrap_used)]` scopes honored and
+//!   `// LINT-ALLOW: unwrap — <reason>` for individually reviewed sites.
+//!
+//! The linter lints itself (this module is part of `src/`), and self-tests
+//! against a committed violation fixture: `tests/hblint_fixture/` holds a
+//! file seeded with violations, each tagged `// EXPECT: <rule>`;
+//! [`self_test`] checks the produced findings match the tags *exactly* —
+//! both directions, so a rule that stops firing fails CI just like a rule
+//! that misfires. The fixture directory is skipped by normal scans (cargo
+//! does not compile it either: only top-level `tests/*.rs` are test
+//! binaries).
+//!
+//! Run locally with `cargo run --bin hblint` (tree scan) and
+//! `cargo run --bin hblint -- --self-test` (fixture check).
+
+pub mod rules;
+pub mod strip;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Directories scanned relative to the crate root (`rust/`).
+pub const SCAN_DIRS: [&str; 3] = ["src", "benches", "tests"];
+
+/// Hot-path modules under rule `A` (path prefixes relative to the crate
+/// root): the GMW engine, the bitpacked wire format, the transports and the
+/// prefetch producer — everything on or feeding the online critical path.
+pub const HOT_PATHS: [&str; 4] = ["src/gmw/", "src/bitpack/", "src/net/", "src/beaver/prefetch.rs"];
+
+/// Allocating-call tokens banned by rule `A`. `.clone(` is included even
+/// though some clones are cheap (e.g. `Range`) — the point is that every
+/// clone in a hot module is an annotated, reviewed decision.
+pub const ALLOC_TOKENS: [&str; 8] = [
+    "Vec::new(",
+    "vec![",
+    ".to_vec(",
+    ".collect(",
+    ".to_owned(",
+    "with_capacity(",
+    "Box::new(",
+    ".clone(",
+];
+
+/// The seeded-violation fixture directory, relative to the crate root.
+/// Skipped by [`scan_tree`], scanned (with every rule forced on) by
+/// [`self_test`].
+pub const FIXTURE_DIR: &str = "tests/hblint_fixture";
+
+/// Which rule produced a finding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// `S`: `unsafe` without an immediately preceding `// SAFETY:`.
+    Safety,
+    /// `A`: un-annotated allocating call in a hot-path module.
+    HotAlloc,
+    /// `T`: `exchange_all_into` impl without CommTrace accounting.
+    CommTrace,
+    /// `U`: `.unwrap()` / `.expect(` outside the allowed scopes.
+    UnwrapWall,
+}
+
+impl Rule {
+    /// One-letter tag used in output and in fixture `EXPECT:` markers.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Rule::Safety => "S",
+            Rule::HotAlloc => "A",
+            Rule::CommTrace => "T",
+            Rule::UnwrapWall => "U",
+        }
+    }
+
+    /// Inverse of [`Rule::tag`].
+    pub fn from_tag(tag: &str) -> Option<Rule> {
+        match tag {
+            "S" => Some(Rule::Safety),
+            "A" => Some(Rule::HotAlloc),
+            "T" => Some(Rule::CommTrace),
+            "U" => Some(Rule::UnwrapWall),
+            _ => None,
+        }
+    }
+}
+
+/// One lint violation, formatted `file:line: [tag] message`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path relative to the crate root, with `/` separators.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule.tag(), self.msg)
+    }
+}
+
+/// Which rule sets apply to a file (derived from its path by [`classify`];
+/// forced fully on for the self-test fixture).
+#[derive(Debug, Clone, Copy)]
+pub struct FileClass {
+    /// Under rule `A` (hot-path module).
+    pub hot: bool,
+    /// Under rules `T`/`U` (library source, as opposed to benches/tests).
+    pub walled: bool,
+}
+
+/// Derive a file's rule scope from its crate-relative path.
+pub fn classify(rel: &str) -> FileClass {
+    FileClass {
+        hot: HOT_PATHS.iter().any(|p| rel.starts_with(p)),
+        walled: rel.starts_with("src/"),
+    }
+}
+
+/// Run every applicable rule over one file's source text.
+pub fn check_file(rel: &str, text: &str, class: FileClass) -> Vec<Finding> {
+    let s = strip::strip(text);
+    let tmask = rules::test_mod_mask(&s.code);
+    let mut out = rules::rule_safety(rel, &s);
+    if class.hot {
+        out.extend(rules::rule_hot_alloc(rel, &s, &tmask));
+    }
+    if class.walled {
+        out.extend(rules::rule_comm_trace(rel, &s, &tmask));
+        out.extend(rules::rule_unwrap_wall(rel, &s, &tmask));
+    }
+    out.sort_by_key(|f| (f.line, f.rule));
+    out
+}
+
+/// Scan the whole crate ([`SCAN_DIRS`], fixture excluded) and return every
+/// finding, sorted by path. An empty result is the CI gate's green state.
+pub fn scan_tree(root: &Path) -> Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    for dir in SCAN_DIRS {
+        let base = root.join(dir);
+        if !base.is_dir() {
+            return Err(Error::config(format!(
+                "hblint scan dir missing: {} (run from the crate root?)",
+                base.display()
+            )));
+        }
+        let mut files = Vec::new();
+        collect_rs_files(&base, &mut files)?;
+        files.sort();
+        for path in files {
+            let rel = rel_path(root, &path);
+            if rel.starts_with(FIXTURE_DIR) {
+                continue;
+            }
+            let text = std::fs::read_to_string(&path)?;
+            findings.extend(check_file(&rel, &text, classify(&rel)));
+        }
+    }
+    Ok(findings)
+}
+
+/// Self-test against the committed violation fixture: every fixture file is
+/// scanned with all rules forced on, and the findings must match the
+/// file's `// EXPECT: <rule>` markers exactly (same lines, same rules).
+/// Returns the number of seeded findings reproduced.
+pub fn self_test(root: &Path) -> Result<usize> {
+    let dir = root.join(FIXTURE_DIR);
+    let mut files = Vec::new();
+    collect_rs_files(&dir, &mut files)?;
+    files.sort();
+    if files.is_empty() {
+        return Err(Error::config(format!("no fixture files under {}", dir.display())));
+    }
+    let mut total = 0;
+    for path in files {
+        let rel = rel_path(root, &path);
+        let text = std::fs::read_to_string(&path)?;
+        let expected = expected_findings(&text);
+        if expected.is_empty() {
+            return Err(Error::config(format!("{rel}: fixture has no EXPECT markers")));
+        }
+        let all = FileClass { hot: true, walled: true };
+        let got: Vec<(usize, Rule)> =
+            check_file(&rel, &text, all).into_iter().map(|f| (f.line, f.rule)).collect();
+        for want in &expected {
+            if !got.contains(want) {
+                return Err(Error::config(format!(
+                    "{rel}:{}: seeded [{}] violation was NOT detected — a rule went blind",
+                    want.0,
+                    want.1.tag()
+                )));
+            }
+        }
+        for have in &got {
+            if !expected.contains(have) {
+                return Err(Error::config(format!(
+                    "{rel}:{}: unexpected [{}] finding — a rule misfires on clean code",
+                    have.0,
+                    have.1.tag()
+                )));
+            }
+        }
+        total += expected.len();
+    }
+    Ok(total)
+}
+
+/// Parse `// EXPECT: <tag>` markers out of a fixture file's comment view.
+fn expected_findings(text: &str) -> Vec<(usize, Rule)> {
+    let s = strip::strip(text);
+    let mut out = Vec::new();
+    for (i, cl) in s.comment.iter().enumerate() {
+        let Some(pos) = cl.find("EXPECT:") else {
+            continue;
+        };
+        for tok in cl[pos + "EXPECT:".len()..].split_whitespace() {
+            if let Some(rule) = Rule::from_tag(tok) {
+                out.push((i + 1, rule));
+            }
+        }
+    }
+    out
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_tags_roundtrip() {
+        for rule in [Rule::Safety, Rule::HotAlloc, Rule::CommTrace, Rule::UnwrapWall] {
+            assert_eq!(Rule::from_tag(rule.tag()), Some(rule));
+        }
+        assert_eq!(Rule::from_tag("X"), None);
+    }
+
+    #[test]
+    fn classify_matches_declared_scopes() {
+        assert!(classify("src/gmw/mod.rs").hot);
+        assert!(classify("src/beaver/prefetch.rs").hot);
+        assert!(!classify("src/beaver/mod.rs").hot);
+        assert!(!classify("src/model/plain.rs").hot);
+        assert!(classify("src/model/plain.rs").walled);
+        assert!(!classify("benches/bitpack.rs").walled);
+        assert!(!classify("tests/doc_refs.rs").walled);
+    }
+
+    #[test]
+    fn expect_markers_are_parsed_with_lines() {
+        let text = "fn f() {\n    x(); // EXPECT: U\n    y(); // EXPECT: S A\n}\n";
+        let exp = expected_findings(text);
+        assert_eq!(exp, vec![(2, Rule::UnwrapWall), (3, Rule::Safety), (3, Rule::HotAlloc)]);
+    }
+
+    #[test]
+    fn finding_display_is_clickable() {
+        let f = Finding {
+            file: "src/x.rs".to_string(),
+            line: 7,
+            rule: Rule::Safety,
+            msg: "msg".to_string(),
+        };
+        assert_eq!(f.to_string(), "src/x.rs:7: [S] msg");
+    }
+}

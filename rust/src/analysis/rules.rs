@@ -1,0 +1,436 @@
+//! The four `hblint` rules and their scope masks (DESIGN.md §8).
+//!
+//! Every rule works on the [`Stripped`] views produced by
+//! [`strip`](crate::analysis::strip::strip):
+//!
+//! | rule | tag | scope | requirement |
+//! |------|-----|-------|-------------|
+//! | [`rule_safety`] | `S` | src + benches + tests | every `unsafe` token is immediately preceded by a `// SAFETY:` comment block |
+//! | [`rule_hot_alloc`] | `A` | hot-path modules | no allocating calls outside `// HOT-PATH-ALLOW:` sites |
+//! | [`rule_comm_trace`] | `T` | src | every `exchange_all_into` impl records `CommTrace` or delegates |
+//! | [`rule_unwrap_wall`] | `U` | src | no `.unwrap()` / `.expect(` outside test modules, `#[allow]` scopes or `// LINT-ALLOW: unwrap` sites |
+//!
+//! Scope masks keep the rules honest about *where* they apply: `#[cfg(test)]`
+//! modules are exempt from `A`/`T`/`U` (tests allocate and unwrap freely),
+//! and `#[allow(clippy::unwrap_used)]` / `#![allow(…)]` attributes are
+//! honored by `U` so the linter never disagrees with clippy's walls.
+
+use super::strip::Stripped;
+use super::{Finding, Rule, ALLOC_TOKENS};
+
+/// True when `line` contains `word` delimited by non-identifier characters.
+fn contains_word(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(word) {
+        let at = start + pos;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn is_mod_decl(line: &str) -> bool {
+    let t = line.trim_start();
+    let t = t.strip_prefix("pub ").unwrap_or(t).trim_start();
+    t.starts_with("mod ")
+}
+
+/// Index of the line on which the brace block opened at/after `start`
+/// closes (falls back to the last line for unbalanced input).
+fn brace_block_end(code: &[String], start: usize) -> usize {
+    let mut depth = 0i64;
+    let mut started = false;
+    let mut k = start;
+    while k < code.len() {
+        for ch in code[k].chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    started = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if started && depth <= 0 {
+            return k;
+        }
+        k += 1;
+    }
+    code.len().saturating_sub(1)
+}
+
+/// Per-line mask: true inside a `#[cfg(test)]`-gated `mod` (including
+/// `#[cfg(all(test, …))]` variants, and tolerating further attributes
+/// between the cfg and the `mod` line).
+pub fn test_mod_mask(code: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    let mut i = 0;
+    while i < code.len() {
+        let line = code[i].trim();
+        if line.starts_with("#[cfg(") && line.contains("test") {
+            let mut j = i + 1;
+            while j < code.len() && code[j].trim().starts_with("#[") {
+                j += 1;
+            }
+            if j < code.len() && is_mod_decl(&code[j]) {
+                let end = brace_block_end(code, j);
+                for m in mask.iter_mut().take(end + 1).skip(i) {
+                    *m = true;
+                }
+                i = end + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// Per-line mask: true inside the item scope of an `#[allow(…)]` attribute
+/// whose argument list contains `what` (e.g. `unwrap_used`). A crate/module
+/// level `#![allow(…)]` covers the whole file.
+pub fn allow_attr_mask(code: &[String], what: &str) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    for (i, raw) in code.iter().enumerate() {
+        let s = raw.trim();
+        if s.starts_with("#![") && s.contains("allow") && s.contains(what) {
+            return vec![true; code.len()];
+        }
+        if s.starts_with("#[") && s.contains("allow") && s.contains(what) {
+            let mut depth = 0i64;
+            let mut started = false;
+            let mut k = i;
+            while k < code.len() {
+                for ch in code[k].chars() {
+                    match ch {
+                        '{' => {
+                            depth += 1;
+                            started = true;
+                        }
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                mask[k] = true;
+                if started && depth <= 0 {
+                    break;
+                }
+                // A braceless item (`fn f(…);`, `use …;`) ends at `;`.
+                if !started && k > i && code[k].contains(';') {
+                    break;
+                }
+                k += 1;
+            }
+        }
+    }
+    mask
+}
+
+/// True when the annotation `tag` appears in a comment on line `i` or on
+/// one of the two preceding lines (trailing comment or a short preamble).
+pub fn annotated(comment: &[String], i: usize, tag: &str) -> bool {
+    (i.saturating_sub(2)..=i).any(|j| comment.get(j).is_some_and(|c| c.contains(tag)))
+}
+
+/// True when the contiguous comment block directly above line `i` (or the
+/// trailing comment on line `i` itself) contains `tag`. A blank line or a
+/// code line terminates the block — the comment must be *immediately*
+/// preceding, per the `SAFETY:` convention.
+pub fn preceding_comment_has(s: &Stripped, i: usize, tag: &str) -> bool {
+    if s.comment[i].contains(tag) {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        if !s.code[j].trim().is_empty() {
+            return false;
+        }
+        if s.comment[j].trim().is_empty() {
+            return false;
+        }
+        if s.comment[j].contains(tag) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Rule `S`: every `unsafe` block/impl/fn needs an immediately preceding
+/// `// SAFETY:` comment. Applies everywhere, including tests and benches —
+/// the proof obligation does not vanish in test code.
+pub fn rule_safety(rel: &str, s: &Stripped) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, cl) in s.code.iter().enumerate() {
+        if contains_word(cl, "unsafe") && !preceding_comment_has(s, i, "SAFETY:") {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: Rule::Safety,
+                msg: "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Rule `A`: no allocating calls in the declared hot-path modules outside
+/// `// HOT-PATH-ALLOW:` annotated sites. The runtime arena counters prove
+/// the steady state allocates nothing; this rule makes every *potential*
+/// allocation in those modules a reviewed, annotated decision.
+pub fn rule_hot_alloc(rel: &str, s: &Stripped, tmask: &[bool]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, cl) in s.code.iter().enumerate() {
+        if tmask[i] {
+            continue;
+        }
+        for tok in ALLOC_TOKENS {
+            if cl.contains(tok) && !annotated(&s.comment, i, "HOT-PATH-ALLOW:") {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: Rule::HotAlloc,
+                    msg: format!(
+                        "allocating call `{}` in a hot-path module without `// HOT-PATH-ALLOW:`",
+                        tok.trim_end_matches(['(', '['])
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Rule `T`: every `exchange_all_into` implementation must either record
+/// into the session's `CommTrace` (`.record(`) or visibly delegate to an
+/// inner transport (`.exchange_all_into`), so wire-byte accounting can
+/// never silently drop a transport.
+pub fn rule_comm_trace(rel: &str, s: &Stripped, tmask: &[bool]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, cl) in s.code.iter().enumerate() {
+        if tmask[i] || !cl.contains("fn exchange_all_into") {
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut started = false;
+        let mut bodyless = false;
+        let mut body = String::new();
+        let mut k = i;
+        while k < s.code.len() {
+            for ch in s.code[k].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    '}' => depth -= 1,
+                    ';' if !started => bodyless = true,
+                    _ => {}
+                }
+            }
+            if bodyless {
+                break;
+            }
+            body.push_str(&s.code[k]);
+            body.push('\n');
+            if started && depth <= 0 {
+                break;
+            }
+            k += 1;
+        }
+        // Trait declarations (`fn exchange_all_into(…) -> Result<()>;`)
+        // carry no body and nothing to account.
+        if bodyless {
+            continue;
+        }
+        if !body.contains(".record(") && !body.contains(".exchange_all_into") {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: Rule::CommTrace,
+                msg: "`exchange_all_into` impl neither records CommTrace nor delegates"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Rule `U`: crate-wide `.unwrap()` / `.expect(` wall for non-test code.
+/// Honors `#[allow(clippy::unwrap_used)]` / `expect_used` scopes (so the
+/// linter and clippy's module walls agree) and `// LINT-ALLOW: unwrap`
+/// annotations for individually reviewed sites.
+pub fn rule_unwrap_wall(rel: &str, s: &Stripped, tmask: &[bool]) -> Vec<Finding> {
+    let amask_u = allow_attr_mask(&s.code, "unwrap_used");
+    let amask_e = allow_attr_mask(&s.code, "expect_used");
+    let mut out = Vec::new();
+    for (i, cl) in s.code.iter().enumerate() {
+        if tmask[i] {
+            continue;
+        }
+        let hit_u = cl.contains(".unwrap()");
+        let hit_e = cl.contains(".expect(");
+        if !(hit_u || hit_e) {
+            continue;
+        }
+        if annotated(&s.comment, i, "LINT-ALLOW: unwrap") {
+            continue;
+        }
+        if hit_u && amask_u[i] && (!hit_e || amask_e[i]) {
+            continue;
+        }
+        if hit_e && amask_e[i] && !hit_u {
+            continue;
+        }
+        let what = if hit_u { ".unwrap()" } else { ".expect(…)" };
+        out.push(Finding {
+            file: rel.to_string(),
+            line: i + 1,
+            rule: Rule::UnwrapWall,
+            msg: format!("`{what}` outside a test module without `// LINT-ALLOW: unwrap`"),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::strip::strip;
+    use super::super::{FileClass, Rule};
+    use super::*;
+
+    fn lines(src: &str) -> Stripped {
+        strip(src)
+    }
+
+    #[test]
+    fn safety_rule_accepts_immediate_comment_rejects_detached() {
+        let ok = lines("// SAFETY: disjoint writes\nunsafe { foo() }\n");
+        assert!(rule_safety("src/x.rs", &ok).is_empty());
+        let multi = lines("// SAFETY: part one\n// and part two\nunsafe impl Send for X {}\n");
+        assert!(rule_safety("src/x.rs", &multi).is_empty());
+        let detached = lines("// SAFETY: stale\n\nunsafe { foo() }\n");
+        assert_eq!(rule_safety("src/x.rs", &detached).len(), 1);
+        let missing = lines("let x = 1;\nunsafe { foo() }\n");
+        let f = rule_safety("src/x.rs", &missing);
+        assert_eq!((f.len(), f[0].line), (1, 2));
+    }
+
+    #[test]
+    fn safety_rule_ignores_prose_and_identifiers() {
+        let s = lines("// unsafe is discussed here only\nlet unsafe_count = 1;\n");
+        assert!(rule_safety("src/x.rs", &s).is_empty());
+        let s = lines("let msg = \"unsafe in a string\";\n");
+        assert!(rule_safety("src/x.rs", &s).is_empty());
+    }
+
+    #[test]
+    fn hot_alloc_rule_requires_annotation() {
+        let src = "fn setup() {\n    let v: Vec<u64> = Vec::new();\n}\n";
+        let s = lines(src);
+        let t = test_mod_mask(&s.code);
+        assert_eq!(rule_hot_alloc("src/gmw/x.rs", &s, &t).len(), 1);
+        let src = "fn setup() {\n    // HOT-PATH-ALLOW: setup\n    let v = Vec::new();\n}\n";
+        let s = lines(src);
+        let t = test_mod_mask(&s.code);
+        assert!(rule_hot_alloc("src/gmw/x.rs", &s, &t).is_empty());
+    }
+
+    #[test]
+    fn hot_alloc_rule_exempts_test_mods() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { let v = vec![1]; }\n}\n";
+        let s = lines(src);
+        let t = test_mod_mask(&s.code);
+        assert!(rule_hot_alloc("src/gmw/x.rs", &s, &t).is_empty());
+    }
+
+    #[test]
+    fn comm_trace_rule_accepts_record_and_delegation() {
+        let rec = "fn exchange_all_into(&mut self) {\n    self.trace.record(p, n);\n}\n";
+        let s = lines(rec);
+        let t = test_mod_mask(&s.code);
+        assert!(rule_comm_trace("src/net/x.rs", &s, &t).is_empty());
+        let del = "fn exchange_all_into(&mut self) {\n    self.inner.exchange_all_into(p)\n}\n";
+        let s = lines(del);
+        let t = test_mod_mask(&s.code);
+        assert!(rule_comm_trace("src/net/x.rs", &s, &t).is_empty());
+        let bare = "fn exchange_all_into(&mut self) -> Result<()> {\n    Ok(())\n}\n";
+        let s = lines(bare);
+        let t = test_mod_mask(&s.code);
+        assert_eq!(rule_comm_trace("src/net/x.rs", &s, &t).len(), 1);
+        let decl = "fn exchange_all_into(&mut self, phase: Phase)\n    -> Result<()>;\n";
+        let s = lines(decl);
+        let t = test_mod_mask(&s.code);
+        assert!(rule_comm_trace("src/net/x.rs", &s, &t).is_empty());
+    }
+
+    #[test]
+    fn unwrap_wall_honors_allow_attrs_and_lint_allow() {
+        let bare = "fn f() { x.unwrap(); }\n";
+        let s = lines(bare);
+        let t = test_mod_mask(&s.code);
+        assert_eq!(rule_unwrap_wall("src/x.rs", &s, &t).len(), 1);
+        let attr = "#[allow(clippy::unwrap_used)]\nfn f() {\nx.unwrap();\n}\nfn g() { y.unwrap() }";
+        let s = lines(attr);
+        let t = test_mod_mask(&s.code);
+        let f = rule_unwrap_wall("src/x.rs", &s, &t);
+        assert_eq!((f.len(), f[0].line), (1, 5), "scope must end with f's braces");
+        let ann = "fn f() {\n    // LINT-ALLOW: unwrap - reviewed\n    x.unwrap();\n}\n";
+        let s = lines(ann);
+        let t = test_mod_mask(&s.code);
+        assert!(rule_unwrap_wall("src/x.rs", &s, &t).is_empty());
+        let test_mod = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { x.unwrap(); }\n}\n";
+        let s = lines(test_mod);
+        let t = test_mod_mask(&s.code);
+        assert!(rule_unwrap_wall("src/x.rs", &s, &t).is_empty());
+    }
+
+    #[test]
+    fn unwrap_wall_ignores_warn_walls() {
+        // A `#![warn(clippy::unwrap_used)]` module wall is a *stricter*
+        // stance, not an exemption — it must not blanket-allow the file.
+        let src = "#![warn(clippy::unwrap_used, clippy::expect_used)]\nfn f() { x.unwrap(); }\n";
+        let s = lines(src);
+        let t = test_mod_mask(&s.code);
+        assert_eq!(rule_unwrap_wall("src/x.rs", &s, &t).len(), 1);
+    }
+
+    #[test]
+    fn unwrap_wall_expect_needs_expect_scope() {
+        let src = "#[allow(clippy::unwrap_used)]\nfn f() {\n    x.expect(\"msg\");\n}\n";
+        let s = lines(src);
+        let t = test_mod_mask(&s.code);
+        assert_eq!(rule_unwrap_wall("src/x.rs", &s, &t).len(), 1);
+        let src = "#[allow(clippy::expect_used)]\nfn f() {\n    x.expect(\"msg\");\n}\n";
+        let s = lines(src);
+        let t = test_mod_mask(&s.code);
+        assert!(rule_unwrap_wall("src/x.rs", &s, &t).is_empty());
+    }
+
+    #[test]
+    fn check_file_composes_rules_by_class() {
+        let src = "fn f() {\n    let v = vec![1];\n    unsafe { g() }\n}\n";
+        let class = FileClass { hot: true, walled: true };
+        let hot = super::super::check_file("src/gmw/x.rs", src, class);
+        assert!(hot.iter().any(|f| f.rule == Rule::HotAlloc));
+        assert!(hot.iter().any(|f| f.rule == Rule::Safety));
+        let class = FileClass { hot: false, walled: true };
+        let cold = super::super::check_file("src/model/x.rs", src, class);
+        assert!(!cold.iter().any(|f| f.rule == Rule::HotAlloc));
+        assert!(cold.iter().any(|f| f.rule == Rule::Safety));
+        let class = FileClass { hot: false, walled: false };
+        let bench = super::super::check_file("benches/x.rs", src, class);
+        assert_eq!(bench.len(), 1, "benches only get the SAFETY rule");
+    }
+}

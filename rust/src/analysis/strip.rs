@@ -1,0 +1,254 @@
+//! Line-preserving source stripper for the [`analysis`](crate::analysis)
+//! lint pass.
+//!
+//! The rules operate on two parallel per-line views of a Rust source file:
+//!
+//! * a **code view**, with every comment removed and every string/char
+//!   literal replaced by an empty literal (`""` / `' '`), so token searches
+//!   (`unsafe`, `.unwrap()`, `vec![`) never match inside prose or data;
+//! * a **comment view**, holding only comment text, so annotation searches
+//!   (`SAFETY:`, `HOT-PATH-ALLOW:`, `LINT-ALLOW:`) never match inside code.
+//!
+//! Both views keep the original line structure (multi-line strings and block
+//! comments emit one entry per source line), so a finding's line number is
+//! the real one. The stripper is a hand-rolled state machine in the spirit
+//! of `util/json.rs` — no regex crate, no syn, no proc-macros — and handles
+//! line comments, (nested) block comments, normal strings with escapes, raw
+//! strings (`r"…"`, `r#"…"#`), and char literals vs. lifetime ticks.
+
+/// A source file split into per-line code and comment views (same length,
+/// one entry per source line — see the module docs).
+#[derive(Debug)]
+pub struct Stripped {
+    /// Per-line source code with comments removed and literals blanked.
+    pub code: Vec<String>,
+    /// Per-line comment text (without the `//` / `/*` markers).
+    pub comment: Vec<String>,
+}
+
+/// Split `text` into the code and comment views.
+pub fn strip(text: &str) -> Stripped {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut block_depth = 0usize;
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            code.push('\n');
+            comment.push('\n');
+            i += 1;
+            continue;
+        }
+        if block_depth > 0 {
+            if starts_with(&chars, i, "*/") {
+                block_depth -= 1;
+                i += 2;
+            } else if starts_with(&chars, i, "/*") {
+                block_depth += 1;
+                i += 2;
+            } else {
+                comment.push(c);
+                i += 1;
+            }
+            continue;
+        }
+        if starts_with(&chars, i, "//") {
+            let mut j = i + 2;
+            while j < n && chars[j] != '\n' {
+                comment.push(chars[j]);
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        if starts_with(&chars, i, "/*") {
+            block_depth += 1;
+            i += 2;
+            continue;
+        }
+        if c == '"' {
+            code.push_str("\"\"");
+            i = consume_string(&chars, i + 1, &mut code, &mut comment);
+            continue;
+        }
+        if c == 'r' {
+            if let Some(next) = consume_raw_string(&chars, i, &mut code, &mut comment) {
+                i = next;
+                continue;
+            }
+        }
+        if c == '\'' {
+            if let Some(len) = char_literal_len(&chars[i..]) {
+                code.push_str("' '");
+                i += len;
+                continue;
+            }
+        }
+        code.push(c);
+        i += 1;
+    }
+    let split = |s: &str| s.split('\n').map(str::to_string).collect();
+    Stripped { code: split(&code), comment: split(&comment) }
+}
+
+fn starts_with(chars: &[char], i: usize, pat: &str) -> bool {
+    pat.chars().enumerate().all(|(k, p)| chars.get(i + k) == Some(&p))
+}
+
+/// Consume a normal string body starting after the opening quote; returns
+/// the index after the closing quote. Inner newlines (multi-line strings,
+/// `\`-continuations) are mirrored into both views to keep lines in sync.
+fn consume_string(chars: &[char], mut j: usize, code: &mut String, comment: &mut String) -> usize {
+    let n = chars.len();
+    while j < n {
+        match chars[j] {
+            '\\' => {
+                if chars.get(j + 1) == Some(&'\n') {
+                    code.push('\n');
+                    comment.push('\n');
+                }
+                j += 2;
+            }
+            '"' => return j + 1,
+            '\n' => {
+                code.push('\n');
+                comment.push('\n');
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+/// Try to consume a raw string (`r"…"` / `r#"…"#`) starting at the `r` at
+/// index `i`; returns the index after the closing delimiter, or `None` when
+/// this `r` is just an identifier character.
+fn consume_raw_string(
+    chars: &[char],
+    i: usize,
+    code: &mut String,
+    comment: &mut String,
+) -> Option<usize> {
+    let n = chars.len();
+    let mut hashes = 0;
+    let mut k = i + 1;
+    while k < n && chars[k] == '#' {
+        hashes += 1;
+        k += 1;
+    }
+    if k >= n || chars[k] != '"' {
+        return None;
+    }
+    code.push_str("\"\"");
+    let mut j = k + 1;
+    while j < n {
+        if chars[j] == '\n' {
+            code.push('\n');
+            comment.push('\n');
+        } else if chars[j] == '"' {
+            let mut h = 0;
+            while h < hashes && chars.get(j + 1 + h) == Some(&'#') {
+                h += 1;
+            }
+            if h == hashes {
+                return Some(j + 1 + hashes);
+            }
+        }
+        j += 1;
+    }
+    Some(n)
+}
+
+/// Length (in chars, including quotes) of a char literal starting at
+/// `chars[0] == '\''`, or `None` when the tick is a lifetime.
+fn char_literal_len(chars: &[char]) -> Option<usize> {
+    if chars.len() < 3 {
+        return None;
+    }
+    if chars[1] == '\\' {
+        // Escaped form: '\n', '\x41', '\u{1F600}', … — scan to the closing
+        // quote on the same line.
+        let mut j = 3;
+        while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+            j += 1;
+        }
+        if j < chars.len() && chars[j] == '\'' {
+            return Some(j + 1);
+        }
+        return None;
+    }
+    if chars[1] != '\'' && chars[2] == '\'' {
+        return Some(3);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_go_to_comment_view() {
+        let s = strip("let x = 1; // SAFETY: fine\n/* block */ let y = 2;\n");
+        assert_eq!(s.code[0], "let x = 1; ");
+        assert!(s.comment[0].contains("SAFETY: fine"));
+        assert_eq!(s.code[1].trim(), "let y = 2;");
+        assert!(s.comment[1].contains("block"));
+    }
+
+    #[test]
+    fn strings_are_blanked_in_code_view() {
+        let s = strip("let u = \"call .unwrap() or unsafe\"; foo();\n");
+        assert!(!s.code[0].contains("unwrap"));
+        assert!(!s.code[0].contains("unsafe"));
+        assert!(s.code[0].contains("foo()"));
+        // String contents never leak into the comment view either.
+        assert_eq!(s.comment[0], "");
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let s = strip("let a = \"x\\\"y\"; let b = 1;\n");
+        assert!(s.code[0].contains("let b = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_including_hashes_and_newlines() {
+        let s = strip("let r = r#\"line .unwrap()\nline \"quoted\" unsafe\"#; end();\n");
+        assert_eq!(s.code.len(), 3);
+        assert!(!s.code[0].contains("unwrap"));
+        assert!(!s.code[1].contains("unsafe"));
+        assert!(s.code[1].contains("end()"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        // '"' must be treated as a char literal, not a string opener.
+        let s = strip("let q = '\"'; let l: &'static str = \"\"; done();\n");
+        assert!(s.code[0].contains("done()"));
+        // Lifetimes survive as code without swallowing the rest of the line.
+        let s = strip("fn f<'a>(x: &'a u64) -> &'a u64 { x }\n");
+        assert!(s.code[0].contains("fn f<"));
+        assert!(s.code[0].contains("{ x }"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let s = strip("/* outer /* inner */ still comment */ code();\n");
+        assert!(s.code[0].contains("code()"));
+        assert!(!s.code[0].contains("inner"));
+        assert!(s.comment[0].contains("still comment"));
+    }
+
+    #[test]
+    fn line_counts_match_source() {
+        let src = "a\nb\n/* c\nd */\ne \"f\ng\"\n";
+        let s = strip(src);
+        assert_eq!(s.code.len(), s.comment.len());
+        assert_eq!(s.code.len(), src.split('\n').count());
+    }
+}

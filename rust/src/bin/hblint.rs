@@ -1,0 +1,74 @@
+//! `hblint` — HummingBird's repo-invariant linter (DESIGN.md §8).
+//!
+//! A dependency-free static analysis pass over `src/`, `benches/` and
+//! `tests/` enforcing the four repo invariants clippy cannot express
+//! (SAFETY comments on `unsafe`, the hot-path allocation gate, CommTrace
+//! accounting on transports, the crate-wide unwrap wall). See
+//! [`hummingbird::analysis`] for the rule semantics.
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo run --bin hblint                # scan the tree; exit 1 on findings
+//! cargo run --bin hblint -- --self-test # verify rules against the fixture
+//! cargo run --bin hblint -- <root>      # scan an explicit crate root
+//! ```
+//!
+//! CI runs both modes as blocking steps: the self-test proves the rules
+//! still *detect* the seeded violations in `tests/hblint_fixture/` (a lint
+//! that silently goes blind is worse than none), then the tree scan proves
+//! the crate is clean.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use hummingbird::analysis;
+
+fn main() -> ExitCode {
+    let mut self_test = false;
+    let mut root: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--self-test" => self_test = true,
+            "--help" | "-h" => {
+                println!("usage: hblint [--self-test] [crate-root]");
+                return ExitCode::SUCCESS;
+            }
+            other => root = Some(PathBuf::from(other)),
+        }
+    }
+    // Default to the crate root baked in at compile time, so the binary
+    // works from any working directory (CI runs it from `rust/`).
+    let root = root.unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+
+    if self_test {
+        return match analysis::self_test(&root) {
+            Ok(n) => {
+                println!("hblint self-test: OK ({n} seeded violations reproduced exactly)");
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("hblint self-test FAILED: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+
+    match analysis::scan_tree(&root) {
+        Ok(findings) if findings.is_empty() => {
+            println!("hblint: clean (scanned {:?})", analysis::SCAN_DIRS);
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            eprintln!("hblint: {} finding(s)", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("hblint: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -208,6 +208,7 @@ pub fn unpack_bytes_xor_into(src: &[u8], w: u32, n: usize, out: &mut [u64], thre
 /// Trailing partial byte is zero-padded. Non-hot-path convenience; the
 /// engine uses [`pack_bytes_into`] with a pooled buffer.
 pub fn pack_bytes(src: &[u64], w: u32) -> Vec<u8> {
+    // HOT-PATH-ALLOW: by-value wrapper — engine uses `pack_bytes_into`.
     let mut out = Vec::new();
     pack_bytes_into(src, w, &mut out, 1);
     out
@@ -216,6 +217,7 @@ pub fn pack_bytes(src: &[u64], w: u32) -> Vec<u8> {
 /// Unpack from a byte buffer produced by [`pack_bytes`]. Non-hot-path
 /// convenience; the engine uses [`unpack_bytes_xor_into`].
 pub fn unpack_bytes(src: &[u8], w: u32, n: usize) -> Vec<u64> {
+    // HOT-PATH-ALLOW: by-value wrapper over `unpack_bytes_xor_into`.
     let mut out = vec![0u64; n];
     unpack_bytes_xor_into(src, w, n, &mut out, 1);
     out
@@ -226,6 +228,7 @@ pub mod reference {
     use super::packed_len;
 
     pub fn pack_ref(src: &[u64], w: u32) -> Vec<u64> {
+        // HOT-PATH-ALLOW: test-reference implementation, never on the path.
         let mut dst = vec![0u64; packed_len(src.len(), w)];
         let mut pos = 0u64;
         for &v in src {
@@ -239,6 +242,7 @@ pub mod reference {
     }
 
     pub fn unpack_ref(src: &[u64], w: u32, n: usize) -> Vec<u64> {
+        // HOT-PATH-ALLOW: test-reference implementation, never on the path.
         let mut out = vec![0u64; n];
         let mut pos = 0u64;
         for v in out.iter_mut() {
@@ -282,6 +286,7 @@ mod tests {
     /// exactly-full final word, single-lane buffers, lanes straddling word
     /// boundaries), across thread counts.
     #[test]
+    #[cfg_attr(miri, ignore = "64-width × tail-shape × thread sweep is too slow interpreted")]
     fn byte_roundtrip_exhaustive_widths_and_tails() {
         for w in 1..=64u32 {
             for n in [1usize, 3, 5, 7, 9, 63, 65, 127, 129] {
@@ -329,6 +334,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "12 widths × 1000 lanes against the bit-by-bit reference is slow")]
     fn matches_reference() {
         for w in [1u32, 3, 5, 8, 13, 21, 31, 32, 33, 48, 63, 64] {
             let src = random_lanes(1000, w, 7);
@@ -340,6 +346,40 @@ mod tests {
             unpack(&fast, w, src.len(), &mut un);
             assert_eq!(un, reference::unpack_ref(&slow, w, src.len()), "unpack w={w}");
         }
+    }
+
+    /// Miri-sized replica of the exhaustive byte round trip + reference
+    /// check: a handful of widths and tail shapes through the threaded
+    /// path, so the interpreter still validates every pointer the packers
+    /// take (DESIGN.md §8). The big sweeps above cover the full space
+    /// natively.
+    #[test]
+    fn byte_roundtrip_miri_sized() {
+        for w in [1u32, 6, 63] {
+            for n in [1usize, 65] {
+                let src = random_lanes(n, w, 1000 + w as u64);
+                let mut wire = Vec::new();
+                pack_bytes_into(&src, w, &mut wire, 2);
+                assert_eq!(wire.len() as u64, packed_bytes(n, w), "wire size w={w} n={n}");
+                assert_eq!(wire, reference_wire(&src, w), "reference w={w} n={n}");
+                let mut out = vec![0u64; n];
+                unpack_bytes_xor_into(&wire, w, n, &mut out, 2);
+                assert_eq!(src, out, "roundtrip w={w} n={n}");
+                unpack_bytes_xor_into(&wire, w, n, &mut out, 2);
+                assert!(out.iter().all(|v| *v == 0), "fold w={w} n={n}");
+            }
+        }
+    }
+
+    /// The classic reference pack, dumped to wire bytes.
+    fn reference_wire(src: &[u64], w: u32) -> Vec<u8> {
+        let words = reference::pack_ref(src, w);
+        let mut dump: Vec<u8> = Vec::new();
+        for wd in &words {
+            dump.extend_from_slice(&wd.to_le_bytes());
+        }
+        dump.truncate(packed_bytes(src.len(), w) as usize);
+        dump
     }
 
     /// The fused byte path agrees bit-for-bit with the word path + LE dump.
@@ -365,6 +405,7 @@ mod tests {
     /// Multi-threaded pack/unpack is bit-identical to single-threaded on a
     /// buffer large enough to actually engage the thread pool.
     #[test]
+    #[cfg_attr(miri, ignore = "65536-lane buffer is too large interpreted")]
     fn threading_is_bit_exact_above_thresholds() {
         let w = 6u32;
         let n = 64 * 1024; // 6144 words packed, 65536 lanes: above both thresholds

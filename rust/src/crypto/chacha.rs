@@ -35,10 +35,12 @@ impl ChaCha20 {
     pub fn new(key: &[u8; 32], nonce: &[u8; 12]) -> Self {
         let mut k = [0u32; 8];
         for (i, chunk) in key.chunks_exact(4).enumerate() {
+            // LINT-ALLOW: unwrap — chunks_exact(4) slices are 4 bytes.
             k[i] = u32::from_le_bytes(chunk.try_into().unwrap());
         }
         let mut n = [0u32; 3];
         for (i, chunk) in nonce.chunks_exact(4).enumerate() {
+            // LINT-ALLOW: unwrap — chunks_exact(4) slices are 4 bytes.
             n[i] = u32::from_le_bytes(chunk.try_into().unwrap());
         }
         ChaCha20 { key: k, nonce: n, counter: 0, block: [0u8; 64], offset: 64 }
@@ -110,6 +112,7 @@ impl ChaCha20 {
         if self.offset + 8 > 64 {
             self.refill();
         }
+        // LINT-ALLOW: unwrap — the slice is exactly 8 bytes by construction.
         let v = u64::from_le_bytes(self.block[self.offset..self.offset + 8].try_into().unwrap());
         self.offset += 8;
         v
@@ -121,6 +124,7 @@ impl ChaCha20 {
         if self.offset + 4 > 64 {
             self.refill();
         }
+        // LINT-ALLOW: unwrap — the slice is exactly 4 bytes by construction.
         let v = u32::from_le_bytes(self.block[self.offset..self.offset + 4].try_into().unwrap());
         self.offset += 4;
         v

@@ -193,6 +193,10 @@ impl FigCtx {
     }
 
     /// Measure one MPC inference batch (2 parties, local hub).
+    // Offline figure regeneration: a failure inside the party closures
+    // cannot cross the thread boundary as a Result, and aborting the run
+    // with the original panic message is exactly what we want here.
+    #[allow(clippy::unwrap_used, clippy::expect_used)]
     pub fn measure(
         &mut self,
         model: &str,

@@ -92,6 +92,7 @@ pub fn ks_add<T: Transport, K: KernelBackend>(
     y: &[u64],
     w: u32,
 ) -> Result<Vec<u64>> {
+    // HOT-PATH-ALLOW: by-value wrapper — the engine uses `ks_add_into`.
     let mut out = vec![0u64; x.len()];
     ks_add_with_into(party, x, y, w, AdderOptions::default(), &mut out)?;
     Ok(out)
@@ -117,6 +118,7 @@ pub fn ks_add_with<T: Transport, K: KernelBackend>(
     w: u32,
     opts: AdderOptions,
 ) -> Result<Vec<u64>> {
+    // HOT-PATH-ALLOW: by-value wrapper — ablations only; see `_into` form.
     let mut out = vec![0u64; x.len()];
     ks_add_with_into(party, x, y, w, opts, &mut out)?;
     Ok(out)

@@ -47,6 +47,15 @@
 //! above [`tuning::par_min_blocks`] blocks; per-block outputs are disjoint
 //! (block-major planes / word-aligned wire ranges), so results are
 //! bit-identical at any thread count.
+//!
+//! # Verification (DESIGN.md §8)
+//!
+//! The raw-pointer chunking behind those block loops ([`SendPtr`] +
+//! [`par_chunks`]) is exactly what `hblint`'s `// SAFETY:` wall and the
+//! CI Miri job police: the full-width sweeps below run natively, and the
+//! `*_miri_sized` replicas re-run the same pointer paths (threaded)
+//! under the interpreter, where a wrong provenance or an overlapping
+//! chunk is a hard error rather than silent corruption.
 
 use crate::bitpack::{self, lane_from_words, packed_word, word_at};
 use crate::ring::low_mask;
@@ -410,6 +419,7 @@ mod tests {
     /// Round trip at every width, with odd lane counts (tail blocks) and
     /// several thread counts; also pins the implicit-masking behaviour.
     #[test]
+    #[cfg_attr(miri, ignore = "64-width × lane-count × thread sweep is too slow interpreted")]
     fn lanes_planes_roundtrip_all_widths() {
         for w in 1..=64u32 {
             for n in [1usize, 3, 63, 64, 65, 127, 128, 200] {
@@ -454,6 +464,7 @@ mod tests {
     /// Single-segment fused pack is byte-identical to the classic packer,
     /// for every width, tail shape and thread count.
     #[test]
+    #[cfg_attr(miri, ignore = "64-width sweep against the classic packer is too slow interpreted")]
     fn pack_matches_classic_bitpack() {
         for w in 1..=64u32 {
             for n in [1usize, 3, 63, 64, 65, 129, 333] {
@@ -475,6 +486,7 @@ mod tests {
     /// concatenated lane vector — including non-multiple-of-64 segment
     /// sizes, which exercise the unaligned scalar path.
     #[test]
+    #[cfg_attr(miri, ignore = "width × lane × segment sweep is too slow interpreted")]
     fn segmented_pack_matches_concatenated_classic_pack() {
         for w in [1u32, 5, 6, 8, 13, 31, 64] {
             for n in [1usize, 7, 64, 100, 130] {
@@ -502,6 +514,7 @@ mod tests {
     /// Unpack-fold into planes agrees with classic unpack + transpose, at
     /// segment offsets and across thread counts; folding twice cancels.
     #[test]
+    #[cfg_attr(miri, ignore = "width × lane × segment sweep is too slow interpreted")]
     fn unpack_matches_classic_then_transpose() {
         for w in [1u32, 6, 12, 33, 64] {
             for n in [1usize, 65, 128, 130] {
@@ -561,5 +574,43 @@ mod tests {
             let expect: Vec<u64> = src.iter().map(|v| (v >> (w - 1)) & 1).collect();
             assert_eq!(msb, expect, "w={w}");
         }
+    }
+
+    /// Miri-sized replica of the lane↔plane round trip: a few widths and
+    /// one tail shape, threaded, so the interpreter validates the
+    /// `SendPtr` chunking in both transpose directions (DESIGN.md §8).
+    /// The full-width sweep above covers the rest natively.
+    #[test]
+    fn lanes_planes_roundtrip_miri_sized() {
+        for w in [1u32, 6, 64] {
+            for n in [1usize, 65] {
+                let src = random_lanes(n, w, 100 + w as u64);
+                let mut planes = vec![0u64; plane_len(n, w)];
+                lanes_to_planes(&src, w, &mut planes, 2);
+                let mut back = vec![0u64; n];
+                planes_to_lanes(&planes, w, n, &mut back, 2);
+                assert_eq!(src, back, "w={w} n={n}");
+            }
+        }
+    }
+
+    /// Miri-sized replica of the fused wire boundary: pack from planes and
+    /// unpack-fold back at one representative width/tail shape, checked
+    /// byte-for-byte against the classic packer (DESIGN.md §8).
+    #[test]
+    fn fused_wire_roundtrip_miri_sized() {
+        let (w, n) = (6u32, 65usize);
+        let src = random_lanes(n, w, 77);
+        let classic = bitpack::pack_bytes(&src, w);
+        let mut planes = vec![0u64; plane_len(n, w)];
+        lanes_to_planes(&src, w, &mut planes, 2);
+        let mut wire = vec![0u8; classic.len()];
+        pack_planes_xor_into(&planes, w, n, 0, &mut wire, 2);
+        assert_eq!(wire, classic);
+        let mut got = vec![0u64; plane_len(n, w)];
+        unpack_bytes_xor_into_planes(&wire, w, n, 0, &mut got, 2);
+        assert_eq!(got, planes);
+        unpack_bytes_xor_into_planes(&wire, w, n, 0, &mut got, 2);
+        assert!(got.iter().all(|v| *v == 0), "double fold must cancel");
     }
 }

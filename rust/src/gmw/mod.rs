@@ -195,6 +195,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         let parties = transport.parties();
         GmwParty {
             transport,
+            // HOT-PATH-ALLOW: constructor — one boxed dealer per session.
             dealer: Box::new(TtpDealer::new(session_seed, party, parties)),
             pairwise: PairwisePrgs::new(session_seed, party, parties),
             kernels,
@@ -289,6 +290,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         let dealer = TtpDealer::new(self.session_seed, self.party(), self.parties());
         let mut pf = PrefetchDealer::spawn(dealer, schedule, cycle);
         pf.wait_warm();
+        // HOT-PATH-ALLOW: session setup — dealer swapped once, pre-draw.
         self.dealer = Box::new(pf);
     }
 
@@ -349,6 +351,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
 
     /// Open binary shares of w-bit lanes (allocating wrapper).
     pub fn open_binary(&mut self, phase: Phase, shares: &[u64], w: u32) -> Result<Vec<u64>> {
+        // HOT-PATH-ALLOW: by-value wrapper over `open_binary_into`.
         let mut out = vec![0u64; shares.len()];
         self.open_binary_into(phase, shares, w, &mut out)?;
         Ok(out)
@@ -448,6 +451,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
 
     /// Open arithmetic shares (allocating wrapper).
     pub fn open_arith(&mut self, phase: Phase, shares: &[u64]) -> Result<Vec<u64>> {
+        // HOT-PATH-ALLOW: by-value wrapper over `open_arith_into`.
         let mut out = vec![0u64; shares.len()];
         self.open_arith_into(phase, shares, &mut out)?;
         Ok(out)
@@ -508,6 +512,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
         for s in 0..segs {
             let ln = s * n_seg..(s + 1) * n_seg;
             let pn = s * pl..(s + 1) * pl;
+            // HOT-PATH-ALLOW: Range clone is a 16-byte stack copy, no heap.
             bitsliced::planes_to_lanes(&tap[pn.clone()], w, n_seg, &mut ta[ln.clone()], threads);
             bitsliced::planes_to_lanes(&tbp[pn.clone()], w, n_seg, &mut tb[ln.clone()], threads);
             bitsliced::planes_to_lanes(&tcp[pn], w, n_seg, &mut tc[ln], threads);
@@ -532,6 +537,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
 
     /// Secure AND (allocating wrapper).
     pub fn and_gates(&mut self, phase: Phase, u: &[u64], v: &[u64], w: u32) -> Result<Vec<u64>> {
+        // HOT-PATH-ALLOW: by-value wrapper over `and_gates_into`.
         let mut out = vec![0u64; u.len()];
         self.and_gates_into(phase, u, v, w, &mut out)?;
         Ok(out)
@@ -638,6 +644,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
 
     /// A2B (allocating wrapper).
     pub fn a2b(&mut self, arith: &[u64], w: u32) -> Result<Vec<u64>> {
+        // HOT-PATH-ALLOW: by-value wrapper over `a2b_into`.
         let mut out = vec![0u64; arith.len()];
         self.a2b_into(arith, w, &mut out)?;
         Ok(out)
@@ -726,6 +733,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
 
     /// B2A of single-bit lanes (allocating wrapper).
     pub fn b2a_bit(&mut self, bits: &[u64]) -> Result<Vec<u64>> {
+        // HOT-PATH-ALLOW: by-value wrapper over `b2a_bit_into`.
         let mut out = vec![0u64; bits.len()];
         self.b2a_bit_into(bits, &mut out)?;
         Ok(out)
@@ -763,6 +771,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
 
     /// Beaver multiplication (allocating wrapper).
     pub fn mul(&mut self, x: &[u64], y: &[u64]) -> Result<Vec<u64>> {
+        // HOT-PATH-ALLOW: by-value wrapper over `mul_into`.
         let mut out = vec![0u64; x.len()];
         self.mul_into(x, y, &mut out)?;
         Ok(out)
@@ -780,6 +789,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
 
     /// Local truncation of shares by 2^f (allocating wrapper).
     pub fn trunc(&self, shares: &[u64], f: u32) -> Vec<u64> {
+        // HOT-PATH-ALLOW: by-value wrapper over `trunc_in_place`.
         let mut out = shares.to_vec();
         self.trunc_in_place(&mut out, f);
         out
@@ -788,8 +798,10 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
     /// Add a public constant vector (leader adds; others pass through).
     pub fn add_public(&self, shares: &[u64], consts: &[u64]) -> Vec<u64> {
         if self.is_leader() {
+            // HOT-PATH-ALLOW: by-value helper — layers fold bias in place.
             shares.iter().zip(consts).map(|(s, c)| s.wrapping_add(*c)).collect()
         } else {
+            // HOT-PATH-ALLOW: by-value helper — pass-through copy.
             shares.to_vec()
         }
     }
@@ -855,6 +867,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
 
     /// DReLU (allocating wrapper).
     pub fn drelu(&mut self, arith: &[u64], plan: ReluPlan) -> Result<Vec<u64>> {
+        // HOT-PATH-ALLOW: by-value wrapper over `drelu_into`.
         let mut out = vec![0u64; arith.len()];
         self.drelu_into(arith, plan, &mut out)?;
         Ok(out)
@@ -878,6 +891,7 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
 
     /// ReLU (allocating wrapper).
     pub fn relu(&mut self, arith: &[u64], plan: ReluPlan) -> Result<Vec<u64>> {
+        // HOT-PATH-ALLOW: by-value wrapper over `relu_into`.
         let mut out = vec![0u64; arith.len()];
         self.relu_into(arith, plan, &mut out)?;
         Ok(out)

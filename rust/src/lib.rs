@@ -35,6 +35,7 @@ pub mod crypto {
     pub mod prg;
 }
 
+pub mod analysis;
 pub mod beaver;
 pub mod bitpack;
 pub mod coordinator;

@@ -244,7 +244,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sent += 1;
         // Keep a bounded number in flight.
         while rxs.len() >= 64 {
-            let (i, rx) = rxs.pop_front().unwrap();
+            let Some((i, rx)) = rxs.pop_front() else { break };
             settle(i, rx.recv()?);
         }
     }
@@ -488,12 +488,14 @@ fn cmd_selftest(_args: &Args) -> Result<()> {
     let xs = share_arith(&mut prg, &x, 2);
     for (name, plan) in [
         ("baseline 64-bit", ReluPlan::BASELINE),
+        // LINT-ALLOW: unwrap — selftest demo with known-valid plans.
         ("eco 20-bit", ReluPlan::new(20, 0).unwrap()),
         ("hummingbird [2,10)", ReluPlan::new(10, 2).unwrap()),
     ] {
         let xs_run = xs.clone();
         let run = run_parties(2, 3, move |p| {
             let me = p.party();
+            // LINT-ALLOW: unwrap — selftest panics on protocol failure.
             p.relu(&xs_run[me], plan).unwrap()
         });
         let out = reconstruct_arith(&run.outputs);
@@ -510,6 +512,7 @@ fn cmd_selftest(_args: &Args) -> Result<()> {
         let xs_run = xs.clone();
         let sliced = run_parties_with(2, 3, |_| BitslicedKernels::default(), move |p| {
             let me = p.party();
+            // LINT-ALLOW: unwrap — selftest panics on protocol failure.
             p.relu(&xs_run[me], plan).unwrap()
         });
         let layouts_match = sliced.outputs == run.outputs

@@ -42,6 +42,12 @@ pub struct PlainExecutor {
     backend: Backend,
 }
 
+/// Look up a computed activation, reporting a graph-wiring error instead of
+/// panicking when a node references a source that has not run yet.
+fn act<'a>(acts: &'a [Option<Vec<f32>>], src: usize, node: usize) -> Result<&'a Vec<f32>> {
+    acts[src].as_ref().ok_or_else(|| Error::Model(format!("node {node}: missing src {src}")))
+}
+
 impl PlainExecutor {
     pub fn new(cfg: ModelConfig, weights: Archive, backend: Backend) -> PlainExecutor {
         PlainExecutor { cfg, weights, backend }
@@ -96,27 +102,22 @@ impl PlainExecutor {
                     continue;
                 }
                 Op::Conv { src, out_ch, k, stride, pad } => {
-                    let xin = acts[*src]
-                        .as_ref()
-                        .ok_or_else(|| Error::Model(format!("node {i}: missing src")))?;
+                    let xin = act(&acts, *src, i)?;
                     let in_shape = &shapes[*src];
                     self.conv(i, xin, batch, in_shape, *out_ch, *k, *stride, *pad)?
                 }
                 Op::Relu { src, group } => {
-                    let mut v = acts[*src]
-                        .as_ref()
-                        .ok_or_else(|| Error::Model(format!("node {i}: missing src")))?
-                        .clone();
+                    let mut v = act(&acts, *src, i)?.clone();
                     relu(i, *group, &mut v);
                     v
                 }
                 Op::Add { a, b } => {
-                    let va = acts[*a].as_ref().unwrap();
-                    let vb = acts[*b].as_ref().unwrap();
+                    let va = act(&acts, *a, i)?;
+                    let vb = act(&acts, *b, i)?;
                     va.iter().zip(vb).map(|(x, y)| x + y).collect()
                 }
                 Op::Gap { src } => {
-                    let v = acts[*src].as_ref().unwrap();
+                    let v = act(&acts, *src, i)?;
                     let s = &shapes[*src];
                     let (c, h, w) = (s[0], s[1], s[2]);
                     let mut out = vec![0f32; batch * c];
@@ -130,7 +131,7 @@ impl PlainExecutor {
                     out
                 }
                 Op::Fc { src, out } => {
-                    let v = acts[*src].as_ref().unwrap();
+                    let v = act(&acts, *src, i)?;
                     self.fc(i, v, batch, *out)?
                 }
             };
@@ -164,23 +165,21 @@ impl PlainExecutor {
             let out = match node {
                 Op::Input => continue,
                 Op::Conv { src, out_ch, k, stride, pad } => {
-                    let xin = acts[*src].as_ref().ok_or_else(|| {
-                        Error::Model(format!("prefix node {i}: missing src"))
-                    })?;
+                    let xin = act(&acts, *src, i)?;
                     self.conv(i, xin, batch, &shapes[*src], *out_ch, *k, *stride, *pad)?
                 }
                 Op::Relu { src, group } => {
-                    let mut v = acts[*src].as_ref().unwrap().clone();
+                    let mut v = act(&acts, *src, i)?.clone();
                     relu(i, *group, &mut v);
                     v
                 }
                 Op::Add { a, b } => {
-                    let va = acts[*a].as_ref().unwrap();
-                    let vb = acts[*b].as_ref().unwrap();
+                    let va = act(&acts, *a, i)?;
+                    let vb = act(&acts, *b, i)?;
                     va.iter().zip(vb).map(|(x, y)| x + y).collect()
                 }
                 Op::Gap { src } => {
-                    let v = acts[*src].as_ref().unwrap();
+                    let v = act(&acts, *src, i)?;
                     let s = &shapes[*src];
                     let (c, h, w) = (s[0], s[1], s[2]);
                     let mut out = vec![0f32; batch * c];
@@ -194,7 +193,7 @@ impl PlainExecutor {
                     out
                 }
                 Op::Fc { src, out } => {
-                    let v = acts[*src].as_ref().unwrap();
+                    let v = act(&acts, *src, i)?;
                     self.fc(i, v, batch, *out)?
                 }
             };
@@ -342,7 +341,7 @@ impl PlainExecutor {
             .map(|row| {
                 row.iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i)
                     .unwrap_or(0)
             })

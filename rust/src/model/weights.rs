@@ -73,6 +73,8 @@ impl Archive {
                     shape,
                     data: bytes
                         .chunks_exact(4)
+                        // LINT-ALLOW: unwrap — chunks_exact(4) yields 4-byte
+                        // slices, so the array conversion cannot fail.
                         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                         .collect(),
                 },
@@ -80,6 +82,8 @@ impl Archive {
                     shape,
                     data: bytes
                         .chunks_exact(4)
+                        // LINT-ALLOW: unwrap — chunks_exact(4) yields 4-byte
+                        // slices, so the array conversion cannot fail.
                         .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
                         .collect(),
                 },

@@ -102,6 +102,7 @@ impl CommTrace {
 
     /// Snapshot of all rounds so far.
     pub fn rounds(&self) -> Vec<RoundRecord> {
+        // HOT-PATH-ALLOW: reporting API — snapshots the trace by value.
         self.lock_rounds().clone()
     }
 

@@ -75,6 +75,7 @@ pub struct FaultProfile {
 impl FaultProfile {
     /// Schedule a single fault at a fixed round (test convenience).
     pub fn single(party: usize, round: u64, kind: FaultKind) -> Self {
+        // HOT-PATH-ALLOW: constructor — one-element schedule, built once.
         FaultProfile { party, seed: 0, faults: vec![ScheduledFault { round, kind }] }
     }
 }
@@ -85,6 +86,7 @@ impl FromStr for FaultProfile {
     fn from_str(s: &str) -> std::result::Result<Self, String> {
         let mut profile = FaultProfile::default();
         // Two passes so `seed:`/`party:` apply regardless of position.
+        // HOT-PATH-ALLOW: CLI parsing — runs once per profile string.
         let directives: Vec<&str> =
             s.split(',').map(str::trim).filter(|d| !d.is_empty()).collect();
         for d in &directives {
@@ -153,6 +155,7 @@ impl<T: Transport> FaultyTransport<T> {
         let victim = if inner.party() == 0 { 1 } else { 0 };
         FaultyTransport {
             inner,
+            // HOT-PATH-ALLOW: constructor — copies the schedule once.
             faults: profile.faults.clone(),
             armed,
             round: 0,

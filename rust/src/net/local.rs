@@ -69,9 +69,11 @@ pub fn hub_with(parties: usize, cfg: NetConfig) -> Vec<LocalTransport> {
             senders: txs
                 .iter()
                 .enumerate()
+                // HOT-PATH-ALLOW: session setup — one Sender per peer.
                 .map(|(q, tx)| if q == p { None } else { Some(tx.clone()) })
                 .collect(),
             receiver,
+            // HOT-PATH-ALLOW: session setup — empty per-peer queues.
             pending: (0..parties).map(|_| Vec::new()).collect(),
             next_seq: vec![0; parties],
             seq: 0,
@@ -79,6 +81,7 @@ pub fn hub_with(parties: usize, cfg: NetConfig) -> Vec<LocalTransport> {
             cfg,
             trace: Arc::new(CommTrace::new()),
         })
+        // HOT-PATH-ALLOW: session setup — one transport struct per party.
         .collect()
 }
 

@@ -194,6 +194,7 @@ pub struct RecvBufs {
 impl RecvBufs {
     /// Empty buffer set for a session of `parties` parties.
     pub fn new(parties: usize) -> RecvBufs {
+        // HOT-PATH-ALLOW: constructor — empty slots; rounds reuse capacity.
         RecvBufs { bufs: (0..parties).map(|_| Vec::new()).collect() }
     }
 
@@ -286,8 +287,10 @@ pub trait Transport: Send {
 /// (degenerate 0-party open) folds to an empty vector rather than
 /// panicking. (Shared by engine code and tests.)
 pub fn fold_xor(bufs: &[Vec<u64>]) -> Vec<u64> {
+    // HOT-PATH-ALLOW: by-value open helper — engine rounds fold in place.
     let Some(first) = bufs.first() else { return Vec::new() };
     let n = first.len();
+    // HOT-PATH-ALLOW: output vector of the by-value API.
     let mut out = vec![0u64; n];
     for b in bufs {
         debug_assert_eq!(b.len(), n);
@@ -301,8 +304,10 @@ pub fn fold_xor(bufs: &[Vec<u64>]) -> Vec<u64> {
 /// Helper: additively open a vector of ring-element shares. Empty input
 /// folds to an empty vector (1-party/degenerate-open case).
 pub fn fold_add(bufs: &[Vec<u64>]) -> Vec<u64> {
+    // HOT-PATH-ALLOW: by-value open helper — engine rounds fold in place.
     let Some(first) = bufs.first() else { return Vec::new() };
     let n = first.len();
+    // HOT-PATH-ALLOW: output vector of the by-value API.
     let mut out = vec![0u64; n];
     for b in bufs {
         debug_assert_eq!(b.len(), n);
@@ -330,6 +335,7 @@ pub fn u64s_to_bytes_into(v: &[u64], out: &mut Vec<u8>) {
 
 /// Serialize a u64 slice little-endian (wire format helper).
 pub fn u64s_to_bytes(v: &[u64]) -> Vec<u8> {
+    // HOT-PATH-ALLOW: by-value wrapper — rounds use `u64s_to_bytes_into`.
     let mut out = Vec::with_capacity(v.len() * 8);
     u64s_to_bytes_into(v, &mut out);
     out
@@ -376,6 +382,7 @@ pub fn bytes_to_u64s(b: &[u8]) -> Result<Vec<u64>> {
             b.len()
         )));
     }
+    // HOT-PATH-ALLOW: by-value wrapper — rounds fold bytes in place.
     Ok(b.chunks_exact(8).map(le_u64).collect())
 }
 

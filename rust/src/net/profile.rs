@@ -53,6 +53,7 @@ impl NetworkProfile {
     }
 
     pub fn to_json(&self) -> Json {
+        // HOT-PATH-ALLOW: reporting — serialization is off the wire path.
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
             ("latency_s", Json::Num(self.latency_s)),
@@ -121,6 +122,7 @@ pub fn project(
     gpu: &ComputeProfile,
 ) -> Projection {
     Projection {
+        // HOT-PATH-ALLOW: reporting — labels cloned once per projection.
         network: net.name.clone(),
         compute: gpu.name.clone(),
         comm_time_s: net.comm_time(trace),

@@ -94,8 +94,10 @@ impl BoundListener {
         let mut t = TcpTransport {
             party,
             parties,
+            // HOT-PATH-ALLOW: session establishment — per-peer slot table.
             streams: (0..parties).map(|_| None).collect(),
             listener: self.listener,
+            // HOT-PATH-ALLOW: session establishment — address book copy.
             addrs: addrs.to_vec(),
             session_id,
             seq: 0,

@@ -74,7 +74,11 @@ impl Runtime {
 
     /// Load + compile an HLO text artifact (cached).
     pub fn load(&self, rel_path: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.inner.cache.lock().unwrap().get(rel_path) {
+        // A poisoned cache mutex only means another thread panicked after
+        // a lookup or insert; the map itself is still consistent.
+        if let Some(exe) =
+            self.inner.cache.lock().unwrap_or_else(|p| p.into_inner()).get(rel_path)
+        {
             return Ok(Arc::clone(exe));
         }
         let full = self.inner.root.join(rel_path);
@@ -86,7 +90,7 @@ impl Runtime {
         self.inner
             .cache
             .lock()
-            .unwrap()
+            .unwrap_or_else(|p| p.into_inner())
             .insert(rel_path.to_string(), Arc::clone(&exe));
         Ok(exe)
     }
@@ -132,7 +136,7 @@ impl Runtime {
 
     /// Number of compiled executables currently cached.
     pub fn cached_executables(&self) -> usize {
-        self.inner.cache.lock().unwrap().len()
+        self.inner.cache.lock().unwrap_or_else(|p| p.into_inner()).len()
     }
 }
 

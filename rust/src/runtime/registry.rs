@@ -142,6 +142,8 @@ impl Manifest {
                 return *b;
             }
         }
+        // LINT-ALLOW: unwrap — manifest loading rejects empty bucket lists
+        // before a registry is ever handed out.
         *self.kernel_buckets.last().expect("no kernel buckets")
     }
 

@@ -160,6 +160,7 @@ impl Bench {
         };
         Self::print_result(&result);
         self.results.push(result);
+        // LINT-ALLOW: unwrap — non-empty: pushed on the line above.
         self.results.last().unwrap()
     }
 

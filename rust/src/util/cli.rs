@@ -28,8 +28,7 @@ impl Args {
             if let Some(rest) = tok.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
                     args.options.insert(k.to_string(), v.to_string());
-                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = iter.next().unwrap();
+                } else if let Some(v) = iter.next_if(|n| !n.starts_with("--")) {
                     args.options.insert(rest.to_string(), v);
                 } else {
                     args.options.insert(rest.to_string(), "true".to_string());

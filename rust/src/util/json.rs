@@ -281,7 +281,7 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<()> {
+    fn expect_byte(&mut self, c: u8) -> Result<()> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -313,7 +313,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut map = BTreeMap::new();
         loop {
             self.skip_ws();
@@ -323,7 +323,7 @@ impl<'a> Parser<'a> {
             }
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             self.skip_ws();
             let val = self.value()?;
             map.insert(key, val);
@@ -339,7 +339,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         loop {
             self.skip_ws();
@@ -360,7 +360,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut s = String::new();
         loop {
             let c = self.peek().ok_or_else(|| self.err("unterminated string"))?;
@@ -459,6 +459,8 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
+        // LINT-ALLOW: unwrap — the scanner above only advanced over ASCII
+        // digit/sign/exponent bytes, which are always valid UTF-8.
         let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
         if !is_float {
             if let Ok(i) = text.parse::<i64>() {

@@ -32,9 +32,30 @@
 //! Workers never run nested regions: a `par_*` call from a pool worker
 //! degrades to the inline sequential loop (same results), so a region can
 //! never deadlock waiting on workers occupied by its own chunks.
+//!
+//! # Verification (DESIGN.md §8)
+//!
+//! The safety argument above is checked three ways: `hblint` enforces the
+//! `SAFETY:` comment discipline on every `unsafe` site in this file; the
+//! Miri CI job interprets the pool-driving unit tests (set
+//! `HB_POOL_WORKERS` to bound the worker count under the interpreter); and
+//! under `RUSTFLAGS="--cfg loom"` the [`Region`] latch compiles against
+//! loom's checked sync primitives and the `loom_models` tests drive its
+//! lifecycle directly (delegation itself is compile-time disabled under
+//! loom — the persistent OS pool is outside loom's model, so `par_*` run
+//! inline and the models exercise `Region` the way `run_delegated` does).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex as StdMutex, OnceLock};
+
+// The region latch (and only the latch) swaps its sync primitives for
+// loom's checked twins under `--cfg loom`; the pool machinery itself stays
+// on std (persistent workers are never engaged under loom — see the
+// module docs).
+#[cfg(loom)]
+use loom::sync::{atomic::AtomicUsize, Condvar, Mutex};
+#[cfg(not(loom))]
+use std::sync::{atomic::AtomicUsize, Condvar, Mutex};
 
 /// Number of worker threads to use for data-parallel loops.
 pub fn default_threads() -> usize {
@@ -55,8 +76,11 @@ struct Chunk {
 }
 
 // SAFETY: the raw pointer targets a `Region` that the issuing thread keeps
-// alive (blocked on the latch) until all chunks complete; `Region`'s
-// interior is `Sync` (atomics, mutex/condvar, and a `Sync` closure ref).
+// alive (blocked on the latch) until all chunks complete, so the worker's
+// access stays within the pointee's lifetime; the shared access itself is
+// sound because `Region` is `Sync` (atomics, mutex/condvar and a `Sync`
+// closure ref — pinned by `send_ptr_bounds_are_enforced` in the tests so
+// a non-`Sync` field can never sneak in silently).
 unsafe impl Send for Chunk {}
 
 /// Per-region header: the erased closure plus a completion latch.
@@ -75,30 +99,31 @@ struct Region {
 impl Region {
     fn finish_one(&self) {
         if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            let mut done = self.done.lock().unwrap();
+            let mut done = self.done.lock().unwrap_or_else(|p| p.into_inner());
             *done = true;
             self.cv.notify_all();
         }
     }
 
     fn wait(&self) {
-        let mut done = self.done.lock().unwrap();
+        let mut done = self.done.lock().unwrap_or_else(|p| p.into_inner());
         while !*done {
-            done = self.cv.wait(done).unwrap();
+            done = self.cv.wait(done).unwrap_or_else(|p| p.into_inner());
         }
     }
 }
 
 struct Pool {
-    tx: Mutex<mpsc::Sender<Chunk>>,
+    tx: StdMutex<mpsc::Sender<Chunk>>,
 }
 
 static POOL: OnceLock<Pool> = OnceLock::new();
 /// Monotonic count of worker threads ever spawned (pinned by the reuse
-/// test: it must not grow once the pool exists).
-static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+/// test: it must not grow once the pool exists). Deliberately a std
+/// atomic even under `--cfg loom`: loom types cannot live in statics.
+static SPAWNED: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
 /// Monotonic count of delegated regions executed on the pool.
-static REGIONS: AtomicUsize = AtomicUsize::new(0);
+static REGIONS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
 
 thread_local! {
     /// True on pool worker threads; guards against nested regions.
@@ -109,7 +134,7 @@ fn in_worker() -> bool {
     IN_WORKER.with(|w| w.get())
 }
 
-fn worker_main(rx: Arc<Mutex<mpsc::Receiver<Chunk>>>) {
+fn worker_main(rx: Arc<StdMutex<mpsc::Receiver<Chunk>>>) {
     IN_WORKER.with(|w| w.set(true));
     loop {
         // Hold the receiver lock only while pulling one chunk; blocking in
@@ -139,21 +164,30 @@ fn worker_main(rx: Arc<Mutex<mpsc::Receiver<Chunk>>>) {
 fn pool() -> &'static Pool {
     POOL.get_or_init(|| {
         let (tx, rx) = mpsc::channel::<Chunk>();
-        let rx = Arc::new(Mutex::new(rx));
+        let rx = Arc::new(StdMutex::new(rx));
         // One worker per core: regions also run their first chunk on the
         // calling thread, so this slightly oversubscribes under concurrent
         // callers — harmless (parked workers cost nothing) and it keeps
-        // single-caller regions fully parallel.
-        let workers = default_threads();
+        // single-caller regions fully parallel. `HB_POOL_WORKERS` bounds
+        // the pool explicitly — the Miri/TSan CI jobs set it to 2 so the
+        // interpreted/instrumented runs do not spawn one thread per host
+        // core.
+        let workers = std::env::var("HB_POOL_WORKERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&w| w >= 1)
+            .unwrap_or_else(default_threads);
         for i in 0..workers {
             let rx = Arc::clone(&rx);
             std::thread::Builder::new()
                 .name(format!("hb-pool-{i}"))
                 .spawn(move || worker_main(rx))
+                // LINT-ALLOW: unwrap — OS thread-spawn failure at pool init is
+                // unrecoverable resource exhaustion; dying loudly is correct.
                 .expect("spawn pool worker");
             SPAWNED.fetch_add(1, Ordering::Relaxed);
         }
-        Pool { tx: Mutex::new(tx) }
+        Pool { tx: StdMutex::new(tx) }
     })
 }
 
@@ -192,6 +226,8 @@ fn run_delegated(
     {
         let tx = pool.tx.lock().unwrap_or_else(|p| p.into_inner());
         for t in delegated {
+            // LINT-ALLOW: unwrap — send fails only if every worker exited,
+            // impossible while POOL lives; failing beats hanging the latch.
             tx.send(Chunk { region: &region, t }).expect("worker pool alive");
         }
     }
@@ -226,7 +262,10 @@ where
     F: Fn(usize, std::ops::Range<usize>) + Send + Sync,
 {
     let threads = threads.max(1).min(n.max(1));
-    if threads == 1 || n < 2 || in_worker() {
+    // Under loom, delegation is disabled at compile time: the persistent
+    // OS pool is outside loom's model, and the inline loop is the
+    // bit-identical fallback the nested-region path already relies on.
+    if threads == 1 || n < 2 || in_worker() || cfg!(loom) {
         f(0, 0..n);
         return;
     }
@@ -256,7 +295,8 @@ where
 {
     let n = data.len();
     let threads = threads.max(1).min(n.max(1));
-    if threads == 1 || n < 2 || in_worker() {
+    // See par_chunks: loom builds always take the inline path.
+    if threads == 1 || n < 2 || in_worker() || cfg!(loom) {
         f(0, data);
         return;
     }
@@ -305,9 +345,29 @@ where
 /// chunk). Used by [`par_map`], [`par_chunks_mut`] and by `bitpack`'s
 /// parallel word packer, where output regions are word-disjoint but not
 /// representable as `&mut` sub-slices of equal element type. Deliberately
-/// `pub(crate)`: the unconditional `Send`/`Sync` impls launder the
-/// disjointness obligation, so the contract must stay auditable within
-/// this crate.
+/// `pub(crate)`: the `Send`/`Sync` impls launder the disjointness
+/// obligation, so the contract must stay auditable within this crate.
+///
+/// # Why the `T: Send` bounds are required
+///
+/// Before PR 7 the impls below were **unconditional** — a soundness hole:
+/// `SendPtr<Rc<u64>>` was `Send + Sync`, so a closure moving one into
+/// [`par_map`]'s workers would have compiled and raced the non-atomic
+/// `Rc` refcount across threads. With the bounds, `SendPtr<T>` crossing a
+/// thread boundary requires `T: Send` and such code is rejected at the
+/// type level:
+///
+/// ```text
+/// fn assert_send<T: Send>() {}
+/// assert_send::<SendPtr<std::rc::Rc<u64>>>(); // does not compile
+/// ```
+///
+/// `T: Sync` is deliberately **not** required: a `SendPtr` only ever
+/// confers *exclusive* access to disjoint slots — it behaves like a family
+/// of `&mut T`, one per chunk, never a shared `&T`. `&mut T` crosses
+/// threads iff `T: Send`, and that is exactly the bound both impls carry
+/// (the positive direction is pinned by `send_ptr_bounds_are_enforced` in
+/// the tests).
 pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 
 impl<T> SendPtr<T> {
@@ -323,9 +383,16 @@ impl<T> Clone for SendPtr<T> {
 }
 impl<T> Copy for SendPtr<T> {}
 
-// SAFETY: callers guarantee disjoint access per chunk (documented above).
-unsafe impl<T> Sync for SendPtr<T> {}
-unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: moving a `SendPtr<T>` to another thread hands that thread the
+// ability to write `T` values into the pointee, which is exactly what
+// `T: Send` licenses; callers guarantee each slot is written by exactly
+// one chunk (documented above).
+unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: a shared `&SendPtr<T>` yields the raw pointer for *disjoint*
+// writes only — semantically a `&mut T` per chunk, never a shared `&T` —
+// so `T: Send` (not `T: Sync`) is the required bound; see the doc comment
+// for why the previously unconditional impl was unsound.
+unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 #[cfg(test)]
 mod tests {
@@ -383,6 +450,41 @@ mod tests {
         }
     }
 
+    /// The `SendPtr` impls must keep their `T: Send` bounds (see the
+    /// type's docs for the soundness argument) and `Region` must stay
+    /// `Sync` — the obligation `Chunk`'s `unsafe impl Send` discharges.
+    #[test]
+    fn send_ptr_bounds_are_enforced() {
+        fn assert_send<T: Send>() {}
+        fn assert_sync<T: Sync>() {}
+        assert_send::<SendPtr<u8>>();
+        assert_sync::<SendPtr<u8>>();
+        assert_send::<SendPtr<u64>>();
+        assert_sync::<SendPtr<u64>>();
+        assert_sync::<Region>();
+        // The negative direction (`SendPtr<Rc<u64>>: !Send`) is a
+        // compile-time fact documented on `SendPtr`; it cannot be asserted
+        // at runtime without a compile-fail harness.
+    }
+
+    /// Miri-sized variant of the reference-equivalence sweep (DESIGN.md
+    /// §8): small enough for the interpreter while still crossing the
+    /// delegated `SendPtr` write path (threads >= 2).
+    #[test]
+    fn par_chunks_mut_matches_reference_miri_sized() {
+        let n = 97usize;
+        let input: Vec<u64> = (0..n as u64).map(|i| i.wrapping_mul(31)).collect();
+        let reference: Vec<u64> = input.iter().map(|v| v.wrapping_add(7)).collect();
+        let mut out = vec![0u64; n];
+        par_chunks_mut(&mut out, 2, |off, chunk| {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                *o = input[off + i].wrapping_add(7);
+            }
+        });
+        assert_eq!(out, reference);
+    }
+
+    #[cfg_attr(miri, ignore = "4099-element × thread-count sweep is too slow interpreted")]
     #[test]
     fn par_chunks_mut_matches_reference_all_thread_counts() {
         for n in [0usize, 1, 5, 1024, 4099] {
@@ -425,6 +527,7 @@ mod tests {
     /// more parallel regions spawns **zero** new threads (workers are
     /// parked and reused), and every region still produces the
     /// single-threaded reference result.
+    #[cfg_attr(miri, ignore = "multi-region 4096-element sweep is too slow interpreted")]
     #[test]
     fn pool_workers_are_reused_across_regions() {
         let n = 4096usize;
@@ -504,5 +607,119 @@ mod tests {
             }
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+}
+
+// Loom interleaving models (DESIGN.md §8): compiled only under
+// `RUSTFLAGS="--cfg loom"`, run with `cargo test --lib -- loom_models`.
+// Against the vendored offline shim (rust/vendor/loom) each model runs
+// once as a deterministic concurrency smoke test; against the real crate
+// the identical code exhaustively explores the latch's interleavings.
+// The models drive `Region` exactly the way `run_delegated` does — raw
+// `Chunk` pointers into the caller's frame, caller parked on the latch —
+// so the production safety argument is what gets checked.
+#[cfg(all(test, loom))]
+mod loom_models {
+    use super::*;
+    use loom::thread;
+
+    /// Caller runs chunk 0 inline, model "workers" run chunks 1..3 through
+    /// raw `Chunk` pointers; after `wait()` returns, every chunk's write
+    /// must be visible on the caller's thread with no extra
+    /// synchronization — the happens-before edge the whole pool rests on.
+    #[test]
+    fn region_latch_publishes_all_chunk_writes() {
+        loom::model(|| {
+            let mut slots = [0usize; 3];
+            let base = SendPtr(slots.as_mut_ptr());
+            let func: &(dyn Fn(usize) + Sync) = &move |t: usize| {
+                // SAFETY: chunk `t` writes slot `t` only — disjoint slots,
+                // each written by exactly one chunk.
+                unsafe { *base.get().add(t) = t + 1 };
+            };
+            // SAFETY: same lifetime erasure as `run_delegated`: the caller
+            // blocks on `wait()` (and joins) before `region`/`slots` die.
+            let func: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(func) };
+            let region = Region {
+                func,
+                remaining: AtomicUsize::new(2),
+                panic_payload: Mutex::new(None),
+                done: Mutex::new(false),
+                cv: Condvar::new(),
+            };
+            let mut handles = Vec::new();
+            for t in 1..3 {
+                let chunk = Chunk { region: &region, t };
+                handles.push(thread::spawn(move || {
+                    // SAFETY: the caller blocks on `wait()` below before
+                    // dropping `region` — the production `Chunk` contract.
+                    let r = unsafe { &*chunk.region };
+                    (r.func)(chunk.t);
+                    r.finish_one();
+                }));
+            }
+            (region.func)(0);
+            region.wait();
+            assert_eq!(slots, [1, 2, 3], "latch must publish all chunk writes");
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    /// A delegated chunk's panic payload, stored under the region mutex
+    /// before `finish_one`, must be visible to the caller after `wait()` —
+    /// the path that re-throws worker panics with their original message.
+    #[test]
+    fn region_panic_payload_crosses_the_latch() {
+        loom::model(|| {
+            fn noop(_t: usize) {}
+            let func: &'static (dyn Fn(usize) + Sync) = &noop;
+            let region = Region {
+                func,
+                remaining: AtomicUsize::new(1),
+                panic_payload: Mutex::new(None),
+                done: Mutex::new(false),
+                cv: Condvar::new(),
+            };
+            let chunk = Chunk { region: &region, t: 1 };
+            let h = thread::spawn(move || {
+                // SAFETY: the caller blocks on `wait()` below before
+                // dropping `region` — the production `Chunk` contract.
+                let r = unsafe { &*chunk.region };
+                // Mirror the worker's catch_unwind arm: store the payload,
+                // then release the latch.
+                let payload: Box<dyn std::any::Any + Send> = Box::new("model-boom");
+                let mut slot = r.panic_payload.lock().unwrap_or_else(|p| p.into_inner());
+                slot.get_or_insert(payload);
+                drop(slot);
+                r.finish_one();
+            });
+            region.wait();
+            let taken = region.panic_payload.lock().unwrap_or_else(|p| p.into_inner()).take();
+            let payload = taken.expect("panic payload must be visible after the latch");
+            assert_eq!(payload.downcast_ref::<&str>(), Some(&"model-boom"));
+            h.join().unwrap();
+        });
+    }
+
+    /// Under loom, delegation is compile-time disabled (the OS pool is
+    /// outside the model): `par_*` from any model thread must complete
+    /// inline with the bit-identical sequential result — the same fallback
+    /// the nested-region guard uses in production.
+    #[test]
+    fn par_calls_run_inline_under_loom() {
+        loom::model(|| {
+            let h = thread::spawn(|| {
+                let mut out = [0u64; 8];
+                par_chunks_mut(&mut out, 4, |off, chunk| {
+                    for (i, o) in chunk.iter_mut().enumerate() {
+                        *o = (off + i) as u64 + 1;
+                    }
+                });
+                out
+            });
+            assert_eq!(h.join().unwrap(), [1, 2, 3, 4, 5, 6, 7, 8]);
+        });
     }
 }

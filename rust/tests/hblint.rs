@@ -1,0 +1,26 @@
+//! `hblint` wired into the tier-1 suite (DESIGN.md §8): the tree must be
+//! lint-clean, and the seeded fixture must reproduce every violation — so
+//! `cargo test -q` catches both a new violation and a rule going blind,
+//! even before the dedicated CI step runs.
+
+use std::path::Path;
+
+use hummingbird::analysis;
+
+#[test]
+fn tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = analysis::scan_tree(root).expect("hblint tree scan must succeed");
+    assert!(
+        findings.is_empty(),
+        "hblint findings (fix or annotate per DESIGN.md §8):\n{}",
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn self_test_reproduces_seeded_violations() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let n = analysis::self_test(root).expect("hblint self-test must pass");
+    assert!(n >= 6, "fixture should seed >= 6 violations across the four rules, got {n}");
+}

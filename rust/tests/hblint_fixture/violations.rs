@@ -1,0 +1,106 @@
+//! Seeded-violation fixture for `hblint --self-test` (DESIGN.md §8).
+//!
+//! This file is **not** compiled by cargo (only top-level `tests/*.rs`
+//! become test binaries) and is skipped by normal `hblint` scans. The
+//! self-test scans it with every rule forced on (hot + walled) and
+//! requires the findings to match the `// EXPECT: <rule>` markers below
+//! *exactly* — a rule that goes blind fails CI just like a rule that
+//! misfires. Sites without a marker are negative controls: correctly
+//! annotated code every rule must accept.
+
+// --- Rule S: `unsafe` must carry an immediately preceding SAFETY comment --
+
+pub fn unsound_read(p: *const u64) -> u64 {
+    unsafe { *p } // EXPECT: S
+}
+
+// SAFETY: negative control — the caller guarantees `p` is valid, aligned
+// and unaliased for the duration of the call.
+pub unsafe fn sound_read(p: *const u64) -> u64 {
+    *p
+}
+
+// --- Rule A: allocations in hot-path modules need HOT-PATH-ALLOW ----------
+
+pub fn leaky_hot_path(n: usize) -> Vec<u64> {
+    let mut v = Vec::new(); // EXPECT: A
+    v.resize(n, 0u64);
+    let w = v.to_vec(); // EXPECT: A
+    w
+}
+
+pub fn annotated_hot_path(n: usize) -> Vec<u64> {
+    // HOT-PATH-ALLOW: negative control — setup-time buffer, reused after.
+    vec![0u64; n]
+}
+
+// --- Rule T: exchange_all_into must record CommTrace or delegate ----------
+
+pub struct SilentTransport;
+
+impl SilentTransport {
+    pub fn exchange_all_into(&mut self, data: &[u8]) -> usize { // EXPECT: T
+        data.len()
+    }
+}
+
+pub struct TraceStub(u64);
+
+impl TraceStub {
+    pub fn record(&mut self, _phase: u8, bytes: u64) {
+        self.0 += bytes;
+    }
+}
+
+pub struct RecordingTransport {
+    trace: TraceStub,
+}
+
+impl RecordingTransport {
+    // Negative control: accounts every byte into the trace.
+    pub fn exchange_all_into(&mut self, data: &[u8]) -> usize {
+        self.trace.record(0, data.len() as u64);
+        data.len()
+    }
+}
+
+pub struct DelegatingTransport {
+    inner: RecordingTransport,
+}
+
+impl DelegatingTransport {
+    // Negative control: visibly delegates to the inner transport.
+    pub fn exchange_all_into(&mut self, data: &[u8]) -> usize {
+        self.inner.exchange_all_into(data)
+    }
+}
+
+// --- Rule U: no unwrap/expect outside tests, allow scopes or LINT-ALLOW ---
+
+pub fn sloppy(v: Option<u64>) -> u64 {
+    v.unwrap() // EXPECT: U
+}
+
+pub fn sloppy_expect(v: Option<u64>) -> u64 {
+    v.expect("fixture") // EXPECT: U
+}
+
+pub fn reviewed(v: Option<u64>) -> u64 {
+    // LINT-ALLOW: unwrap — negative control: reviewed, infallible by
+    // construction in the caller.
+    v.unwrap()
+}
+
+#[allow(clippy::unwrap_used)]
+pub fn clippy_walled(v: Option<u64>) -> u64 {
+    v.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_unwrap_and_allocate() {
+        let v = vec![Some(1u64)];
+        assert_eq!(v[0].unwrap(), 1);
+    }
+}
