@@ -9,7 +9,7 @@
 //! hand-rolled scanner in the spirit of `util/json.rs`, run as the blocking
 //! `hblint` CI step and as part of `cargo test` (`tests/hblint.rs`).
 //!
-//! Four rules (see [`rules`] for the exact semantics):
+//! Five rules (see [`rules`] for the exact semantics):
 //!
 //! * **S** — every `unsafe` is immediately preceded by a `// SAFETY:`
 //!   comment carrying the proof obligation.
@@ -23,6 +23,9 @@
 //! * **U** — crate-wide `.unwrap()` / `.expect(` wall outside test modules,
 //!   with `#[allow(clippy::unwrap_used)]` scopes honored and
 //!   `// LINT-ALLOW: unwrap — <reason>` for individually reviewed sites.
+//! * **M** — every `pub struct *Counters` group is surfaced as a field of
+//!   `MetricsSnapshot` in the same file, so no counter block can silently
+//!   drop out of the operator-visible snapshot (DESIGN.md §9).
 //!
 //! The linter lints itself (this module is part of `src/`), and self-tests
 //! against a committed violation fixture: `tests/hblint_fixture/` holds a
@@ -82,6 +85,8 @@ pub enum Rule {
     CommTrace,
     /// `U`: `.unwrap()` / `.expect(` outside the allowed scopes.
     UnwrapWall,
+    /// `M`: `pub struct *Counters` not surfaced in `MetricsSnapshot`.
+    MetricsSurface,
 }
 
 impl Rule {
@@ -92,6 +97,7 @@ impl Rule {
             Rule::HotAlloc => "A",
             Rule::CommTrace => "T",
             Rule::UnwrapWall => "U",
+            Rule::MetricsSurface => "M",
         }
     }
 
@@ -102,6 +108,7 @@ impl Rule {
             "A" => Some(Rule::HotAlloc),
             "T" => Some(Rule::CommTrace),
             "U" => Some(Rule::UnwrapWall),
+            "M" => Some(Rule::MetricsSurface),
             _ => None,
         }
     }
@@ -153,6 +160,7 @@ pub fn check_file(rel: &str, text: &str, class: FileClass) -> Vec<Finding> {
     if class.walled {
         out.extend(rules::rule_comm_trace(rel, &s, &tmask));
         out.extend(rules::rule_unwrap_wall(rel, &s, &tmask));
+        out.extend(rules::rule_metrics_surface(rel, &s, &tmask));
     }
     out.sort_by_key(|f| (f.line, f.rule));
     out
@@ -274,7 +282,14 @@ mod tests {
 
     #[test]
     fn rule_tags_roundtrip() {
-        for rule in [Rule::Safety, Rule::HotAlloc, Rule::CommTrace, Rule::UnwrapWall] {
+        let all = [
+            Rule::Safety,
+            Rule::HotAlloc,
+            Rule::CommTrace,
+            Rule::UnwrapWall,
+            Rule::MetricsSurface,
+        ];
+        for rule in all {
             assert_eq!(Rule::from_tag(rule.tag()), Some(rule));
         }
         assert_eq!(Rule::from_tag("X"), None);

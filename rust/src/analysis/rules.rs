@@ -9,6 +9,7 @@
 //! | [`rule_hot_alloc`] | `A` | hot-path modules | no allocating calls outside `// HOT-PATH-ALLOW:` sites |
 //! | [`rule_comm_trace`] | `T` | src | every `exchange_all_into` impl records `CommTrace` or delegates |
 //! | [`rule_unwrap_wall`] | `U` | src | no `.unwrap()` / `.expect(` outside test modules, `#[allow]` scopes or `// LINT-ALLOW: unwrap` sites |
+//! | [`rule_metrics_surface`] | `M` | src | every `pub struct *Counters` is a field of `MetricsSnapshot` in the same file |
 //!
 //! Scope masks keep the rules honest about *where* they apply: `#[cfg(test)]`
 //! modules are exempt from `A`/`T`/`U` (tests allocate and unwrap freely),
@@ -304,6 +305,50 @@ pub fn rule_unwrap_wall(rel: &str, s: &Stripped, tmask: &[bool]) -> Vec<Finding>
     out
 }
 
+/// Rule `M`: every `pub struct <X>Counters` must appear inside the
+/// `struct MetricsSnapshot { … }` block of the same file. Counter blocks
+/// that never reach the snapshot are invisible to operators and to the
+/// soak's accounting identity (DESIGN.md §9) — the rule makes "add a
+/// counter group" and "surface it" one reviewable step.
+pub fn rule_metrics_surface(rel: &str, s: &Stripped, tmask: &[bool]) -> Vec<Finding> {
+    // Gather the body of every `struct MetricsSnapshot { … }` block (there
+    // is normally at most one per file).
+    let mut snapshot_body = String::new();
+    for (i, cl) in s.code.iter().enumerate() {
+        if cl.contains("struct MetricsSnapshot") {
+            let end = brace_block_end(&s.code, i);
+            for line in &s.code[i..=end] {
+                snapshot_body.push_str(line);
+                snapshot_body.push('\n');
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (i, cl) in s.code.iter().enumerate() {
+        if tmask[i] {
+            continue;
+        }
+        let Some(pos) = cl.find("pub struct ") else {
+            continue;
+        };
+        let rest = &cl[pos + "pub struct ".len()..];
+        let name: String =
+            rest.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+        if !name.ends_with("Counters") || name == "Counters" {
+            continue;
+        }
+        if !contains_word(&snapshot_body, &name) {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: Rule::MetricsSurface,
+                msg: format!("`{name}` is not surfaced as a `MetricsSnapshot` field in this file"),
+            });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::strip::strip;
@@ -416,6 +461,31 @@ mod tests {
         let s = lines(src);
         let t = test_mod_mask(&s.code);
         assert!(rule_unwrap_wall("src/x.rs", &s, &t).is_empty());
+    }
+
+    #[test]
+    fn metrics_surface_requires_snapshot_field() {
+        let orphan = "pub struct LostCounters {\n    pub a: u64,\n}\n";
+        let s = lines(orphan);
+        let t = test_mod_mask(&s.code);
+        let f = rule_metrics_surface("src/x.rs", &s, &t);
+        assert_eq!((f.len(), f[0].line), (1, 1));
+        let surfaced = "pub struct OkCounters {\n    pub a: u64,\n}\n\
+                        pub struct MetricsSnapshot {\n    pub ok: OkCounters,\n}\n";
+        let s = lines(surfaced);
+        let t = test_mod_mask(&s.code);
+        assert!(rule_metrics_surface("src/x.rs", &s, &t).is_empty());
+        // A name that merely *contains* a surfaced one is not covered.
+        let prefix = "pub struct OkCountersExtra {\n    pub a: u64,\n}\n\
+                      pub struct MetricsSnapshot {\n    pub ok: OkCounters,\n}\n";
+        let s = lines(prefix);
+        let t = test_mod_mask(&s.code);
+        assert!(rule_metrics_surface("src/x.rs", &s, &t).is_empty(), "suffix rule only");
+        let near = "pub struct SubCounters {\n    pub a: u64,\n}\n\
+                    pub struct MetricsSnapshot {\n    pub ok: SubCountersView,\n}\n";
+        let s = lines(near);
+        let t = test_mod_mask(&s.code);
+        assert_eq!(rule_metrics_surface("src/x.rs", &s, &t).len(), 1, "word match required");
     }
 
     #[test]

@@ -9,8 +9,27 @@
 //! party session down and spawns a fresh one from the retained
 //! [`SessionSpec`] — the next batch is served by clean parties on the
 //! same coordinator, accounting onto the same long-lived trace.
+//!
+//! # Overload, lifecycle, and drain (DESIGN.md §9)
+//!
+//! The serving core above the sessions is overload-safe: admission is
+//! **bounded** (`--queue-depth` caps the request queue; a full queue
+//! fast-fails with [`Error::Overloaded`]), queued requests carry an
+//! optional **deadline** (`--request-timeout-ms`; the batcher sheds
+//! expired requests at dequeue so a dead request never occupies a batch
+//! slot), session respawn runs under a **crash-loop breaker**
+//! (`--max-restarts` consecutive failures flip the coordinator to
+//! `Degraded`, where a background probe retries the boot with capped
+//! backoff), and shutdown **drains**: admission closes, queued work is
+//! served until the drain deadline, then everything force-stops. The
+//! lifecycle (`Serving → Degraded → Draining → Stopped`) and the
+//! per-request disposition counters are surfaced by
+//! [`Metrics::snapshot`](super::metrics::Metrics::snapshot).
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+    TrySendError,
+};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -30,7 +49,15 @@ use crate::runtime::{Manifest, Runtime, XlaKernels};
 use crate::sharing::share_arith;
 use crate::tensor::TensorU64;
 
-use super::metrics::Metrics;
+use super::breaker::{BreakerVerdict, ClockHandle, RestartBreaker};
+use super::metrics::{LifecycleState, Metrics, MetricsSnapshot};
+
+/// Default force-stop deadline for `shutdown()`/`Drop` (DESIGN.md §9).
+pub const DEFAULT_DRAIN: Duration = Duration::from_secs(30);
+/// How long an idle batcher waits per poll before rechecking lifecycle.
+const IDLE_POLL: Duration = Duration::from_millis(250);
+/// Degraded-state housekeeping quantum: queue drain + probe check cadence.
+const DEGRADED_TICK: Duration = Duration::from_millis(20);
 
 /// Serving options.
 #[derive(Debug, Clone)]
@@ -71,9 +98,31 @@ pub struct ServeOptions {
     /// Deterministic fault injection for chaos testing (`--fault-profile`,
     /// see [`crate::net::fault`]). Applied to the *initial* party session
     /// only: a respawned session after the injected fault runs clean,
-    /// which is exactly what the recovery tests assert. `None` in
-    /// production.
+    /// which is exactly what the recovery tests assert (`bootfail:` boot
+    /// failures are the exception — they are consumed one per spawn
+    /// attempt). `None` in production.
     pub fault_profile: Option<FaultProfile>,
+    /// Bounded admission (`--queue-depth`, DESIGN.md §9): at most this
+    /// many requests wait in the queue; further submissions fast-fail
+    /// with [`Error::Overloaded`]. Clamped to ≥ 1.
+    pub queue_depth: usize,
+    /// Per-request deadline (`--request-timeout-ms`, DESIGN.md §9):
+    /// stamped at admission; the batcher sheds a request whose deadline
+    /// expired while queued ([`Error::Deadline`]) and `infer()` stops
+    /// waiting at the same instant. `None` = requests never expire.
+    pub request_timeout: Option<Duration>,
+    /// Crash-loop budget (`--max-restarts`, DESIGN.md §9): this many
+    /// consecutive session failures inside `restart_window` flip the
+    /// coordinator to `Degraded`.
+    pub max_restarts: u32,
+    /// Sliding window for the consecutive-failure count; failures farther
+    /// apart than this never trip the breaker.
+    pub restart_window: Duration,
+    /// Time source for the crash-loop breaker. The default is the real
+    /// monotonic clock; tests inject [`MockClock`](super::breaker::MockClock)
+    /// so respawn-backoff timing is deterministic under parallel test
+    /// threads.
+    pub clock: ClockHandle,
 }
 
 impl ServeOptions {
@@ -91,6 +140,11 @@ impl ServeOptions {
             prefetch: false,
             net: NetConfig::default(),
             fault_profile: None,
+            queue_depth: 256,
+            request_timeout: None,
+            max_restarts: 5,
+            restart_window: Duration::from_secs(60),
+            clock: ClockHandle::monotonic(),
         }
     }
 }
@@ -117,8 +171,17 @@ pub struct InferenceResult {
 struct Request {
     input: Vec<f32>,
     enqueued: Instant,
+    /// Per-request deadline (DESIGN.md §9): the batcher sheds the request
+    /// at dequeue once this instant passes, and `infer()` stops waiting.
+    deadline: Option<Instant>,
     /// A faulted session answers with an error instead of never answering.
     resp: Sender<Result<InferenceResult>>,
+}
+
+impl Request {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 /// Job sent to each party thread.
@@ -154,6 +217,11 @@ struct SessionSpec {
     net: NetConfig,
     /// Taken by the first spawn: respawned sessions always run clean.
     fault: Option<FaultProfile>,
+    /// Injected boot failures still owed (`bootfail:N` in the fault
+    /// profile): consumed one per spawn attempt, *before* the round-level
+    /// faults are taken, so the crash-loop breaker can be exercised
+    /// deterministically.
+    boot_fails: u32,
     trace: Arc<CommTrace>,
 }
 
@@ -164,9 +232,15 @@ struct Session {
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
-/// Spawn a fresh party session from the spec. The injected fault profile
-/// (if any) is consumed here, so only the first session misbehaves.
-fn spawn_session(spec: &mut SessionSpec) -> Session {
+/// Spawn a fresh party session from the spec, or fail its boot
+/// (injected `bootfail:` budget — the crash-loop breaker's test hook).
+/// The round-level fault profile (if any) is consumed by the first
+/// *successful* spawn, so only that session misbehaves.
+fn spawn_session(spec: &mut SessionSpec, metrics: &Arc<Metrics>) -> Result<Session> {
+    if spec.boot_fails > 0 {
+        spec.boot_fails -= 1;
+        return Err(Error::runtime("injected session boot failure (bootfail)"));
+    }
     let fault = spec.fault.take();
     let mut transports = hub_with(spec.parties, spec.net);
     transports[0].set_trace(Arc::clone(&spec.trace));
@@ -188,38 +262,45 @@ fn spawn_session(spec: &mut SessionSpec) -> Session {
         let threads = resolve_threads(spec.threads, spec.parties);
         let prefetch = spec.prefetch;
         let fault = fault.clone();
-        handles.push(std::thread::spawn(move || match fault {
-            Some(profile) => party_main(
-                FaultyTransport::new(t, &profile),
-                cfg,
-                weights,
-                root,
-                model_art,
-                plans,
-                jrx,
-                out_tx,
-                seed,
-                backend,
-                layout,
-                threads,
-                prefetch,
-            ),
-            None => party_main(
-                t, cfg, weights, root, model_art, plans, jrx, out_tx, seed, backend, layout,
-                threads, prefetch,
-            ),
+        // The guard decrements Metrics::live_party_threads on any exit,
+        // panics included (the soak's zero-orphans assertion reads it).
+        let guard = metrics.party_thread_guard();
+        handles.push(std::thread::spawn(move || {
+            let _live = guard;
+            match fault {
+                Some(profile) => party_main(
+                    FaultyTransport::new(t, &profile),
+                    cfg,
+                    weights,
+                    root,
+                    model_art,
+                    plans,
+                    jrx,
+                    out_tx,
+                    seed,
+                    backend,
+                    layout,
+                    threads,
+                    prefetch,
+                ),
+                None => party_main(
+                    t, cfg, weights, root, model_art, plans, jrx, out_tx, seed, backend, layout,
+                    threads, prefetch,
+                ),
+            }
         }));
     }
-    Session { job_txs, out_rx, handles }
+    Ok(Session { job_txs, out_rx, handles })
 }
 
 /// Handle to a running service.
 pub struct Coordinator {
-    req_tx: Option<Sender<Request>>,
+    req_tx: Option<SyncSender<Request>>,
     pub metrics: Arc<Metrics>,
     pub trace: Arc<CommTrace>,
     batcher: Option<std::thread::JoinHandle<()>>,
     pub cfg: ModelConfig,
+    request_timeout: Option<Duration>,
 }
 
 impl Coordinator {
@@ -244,6 +325,7 @@ impl Coordinator {
         // party 0 accounts onto it (spawn_session), so byte/round numbers
         // keep accumulating across fault-triggered respawns.
         let trace = Arc::new(CommTrace::new());
+        let boot_fails = opts.fault_profile.as_ref().map_or(0, |f| f.boot_fails);
         let spec = SessionSpec {
             cfg: cfg.clone(),
             weights,
@@ -258,65 +340,137 @@ impl Coordinator {
             prefetch: opts.prefetch,
             net: opts.net,
             fault: opts.fault_profile.clone(),
+            boot_fails,
             trace: Arc::clone(&trace),
         };
 
-        // Batcher thread: owns the session spec and (re)spawns the party
-        // thread pool.
+        // Batcher thread: owns the session spec, the crash-loop breaker
+        // and the lifecycle, and (re)spawns the party thread pool.
         let metrics = Arc::new(Metrics::new());
-        let (req_tx, req_rx) = channel::<Request>();
+        let (req_tx, req_rx) = sync_channel::<Request>(opts.queue_depth.max(1));
         let m2 = Arc::clone(&metrics);
         let fx = FixedPoint::new(cfg.frac_bits);
         let input_shape = cfg.input;
         let classes = cfg.num_classes;
         let timeout = opts.batch_timeout;
         let trace2 = Arc::clone(&trace);
+        let breaker = RestartBreaker::new(opts.max_restarts, opts.restart_window, opts.clock);
         let batcher = std::thread::spawn(move || {
-            batcher_main(req_rx, spec, m2, fx, input_shape, classes, batch, timeout, trace2);
+            batcher_main(
+                req_rx, spec, m2, fx, input_shape, classes, batch, timeout, trace2, breaker,
+            );
         });
 
-        Ok(Coordinator { req_tx: Some(req_tx), metrics, trace, batcher: Some(batcher), cfg })
+        Ok(Coordinator {
+            req_tx: Some(req_tx),
+            metrics,
+            trace,
+            batcher: Some(batcher),
+            cfg,
+            request_timeout: opts.request_timeout,
+        })
     }
 
-    fn queue(&self) -> Result<&Sender<Request>> {
-        self.req_tx.as_ref().ok_or_else(|| Error::Transport("service stopped".into()))
+    /// Admission gate (DESIGN.md §9): refuse when degraded or draining,
+    /// fast-fail on a full queue, otherwise stamp the request's deadline
+    /// and enqueue it. Returns the response channel and the deadline.
+    fn submit(
+        &self,
+        input: Vec<f32>,
+    ) -> Result<(Receiver<Result<InferenceResult>>, Option<Instant>)> {
+        let tx = self.req_tx.as_ref().ok_or_else(|| Error::unavailable("service stopped"))?;
+        match self.metrics.state() {
+            LifecycleState::Serving => {}
+            LifecycleState::Degraded => {
+                self.metrics.record_rejected_degraded();
+                return Err(Error::overloaded(
+                    "coordinator degraded: session boot is failing; retry later",
+                ));
+            }
+            LifecycleState::Draining | LifecycleState::Stopped => {
+                // Admission is closed while queued work drains. Counted
+                // with the degraded refusals: both are pre-admission.
+                self.metrics.record_rejected_degraded();
+                return Err(Error::overloaded("coordinator draining: admission closed"));
+            }
+        }
+        let now = Instant::now();
+        let deadline = self.request_timeout.map(|d| now + d);
+        let (rtx, rrx) = channel();
+        match tx.try_send(Request { input, enqueued: now, deadline, resp: rtx }) {
+            Ok(()) => {
+                self.metrics.record_admitted();
+                Ok((rrx, deadline))
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.record_shed_queue_full();
+                Err(Error::overloaded("request queue full (--queue-depth); retry later"))
+            }
+            Err(TrySendError::Disconnected(_)) => Err(Error::unavailable("service stopped")),
+        }
     }
 
     /// Submit one inference and wait for the answer. A session fault
     /// surfaces as this job's error; the coordinator itself keeps serving.
+    /// With `--request-timeout-ms` set, the wait honors the same deadline
+    /// the batcher sheds on: an expired wait returns [`Error::Deadline`].
     pub fn infer(&self, input: Vec<f32>) -> Result<InferenceResult> {
-        let (tx, rx) = channel();
-        self.queue()?
-            .send(Request { input, enqueued: Instant::now(), resp: tx })
-            .map_err(|_| Error::Transport("service stopped".into()))?;
-        rx.recv().map_err(|_| Error::Transport("service dropped request".into()))?
+        let (rx, deadline) = self.submit(input)?;
+        match deadline {
+            None => rx.recv().map_err(|_| Error::unavailable("service dropped request"))?,
+            Some(d) => match rx.recv_timeout(d.saturating_duration_since(Instant::now())) {
+                Ok(answer) => answer,
+                Err(RecvTimeoutError::Timeout) => {
+                    Err(Error::deadline("no answer before --request-timeout-ms"))
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    Err(Error::unavailable("service dropped request"))
+                }
+            },
+        }
     }
 
     /// Submit asynchronously; returns the response channel (the payload is
     /// per-job: a faulted session answers `Err` rather than hanging up).
     pub fn infer_async(&self, input: Vec<f32>) -> Result<Receiver<Result<InferenceResult>>> {
-        let (tx, rx) = channel();
-        self.queue()?
-            .send(Request { input, enqueued: Instant::now(), resp: tx })
-            .map_err(|_| Error::Transport("service stopped".into()))?;
+        let (rx, _deadline) = self.submit(input)?;
         Ok(rx)
     }
 
-    /// Graceful shutdown (drains in-flight work).
-    pub fn shutdown(mut self) {
-        self.req_tx.take(); // closes the queue; batcher exits; parties exit
+    /// The single owner of teardown (DESIGN.md §9): closes admission,
+    /// posts the drain deadline, and joins the batcher (which serves
+    /// queued work until the deadline, then force-stops). Idempotent —
+    /// `shutdown`, `shutdown_with_deadline` and `Drop` all land here.
+    fn stop(&mut self, drain: Duration) {
+        if self.req_tx.is_none() {
+            return;
+        }
+        self.metrics.begin_drain(Instant::now() + drain);
+        self.req_tx.take(); // closes the queue; batcher drains and exits
         if let Some(b) = self.batcher.take() {
             b.join().ok();
         }
+    }
+
+    /// Graceful shutdown (drains in-flight work, default deadline).
+    pub fn shutdown(mut self) {
+        self.stop(DEFAULT_DRAIN);
+    }
+
+    /// Graceful drain with an explicit force-stop deadline: admission
+    /// closes immediately (new requests get [`Error::Overloaded`]),
+    /// queued and in-flight work is served until `drain` elapses, then
+    /// whatever is left is answered [`Error::Unavailable`] and counted as
+    /// `drained`. Returns the final counters (state is `Stopped`).
+    pub fn shutdown_with_deadline(mut self, drain: Duration) -> MetricsSnapshot {
+        self.stop(drain);
+        self.metrics.snapshot()
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.req_tx.take();
-        if let Some(b) = self.batcher.take() {
-            b.join().ok();
-        }
+        self.stop(DEFAULT_DRAIN);
     }
 }
 
@@ -452,6 +606,106 @@ fn party_loop<T: Transport, K: crate::gmw::kernels::KernelBackend>(
     }
 }
 
+/// Retire a session whose batch failed: close its job queues so the party
+/// threads drain out, but don't block serving on the join — a straggler
+/// may take up to `round_timeout` to notice. Its handles move to the
+/// graveyard and are reaped opportunistically (and joined at stop), so a
+/// clean stop still guarantees zero orphaned party threads.
+fn retire(session: Session, graveyard: &mut Vec<std::thread::JoinHandle<()>>) {
+    let Session { job_txs, out_rx, handles } = session;
+    drop(job_txs);
+    drop(out_rx);
+    graveyard.extend(handles);
+}
+
+/// Join whatever graveyard threads have already exited (keeps the
+/// graveyard — and thus thread-handle memory — bounded during long runs).
+fn reap(graveyard: &mut Vec<std::thread::JoinHandle<()>>) {
+    let mut live = Vec::with_capacity(graveyard.len());
+    for h in graveyard.drain(..) {
+        if h.is_finished() {
+            h.join().ok();
+        } else {
+            live.push(h);
+        }
+    }
+    *graveyard = live;
+}
+
+/// Final teardown: join the live session (if any) and every graveyard
+/// thread, then mark the lifecycle `Stopped`. After this returns there
+/// are zero live party threads.
+fn stop_all(
+    session: Option<Session>,
+    graveyard: Vec<std::thread::JoinHandle<()>>,
+    metrics: &Metrics,
+) {
+    if let Some(s) = session {
+        drop(s.job_txs);
+        drop(s.out_rx);
+        for h in s.handles {
+            h.join().ok();
+        }
+    }
+    for h in graveyard {
+        h.join().ok();
+    }
+    metrics.set_state(LifecycleState::Stopped);
+}
+
+/// Acquire a session under the crash-loop breaker: spawn, and on boot
+/// failure back off and retry until the breaker trips (→ `Degraded`,
+/// returns `None`). `record_restart` marks replacement spawns so the
+/// `sessions_restarted` counter excludes the initial boot.
+fn ensure_session(
+    spec: &mut SessionSpec,
+    breaker: &mut RestartBreaker,
+    metrics: &Arc<Metrics>,
+    record_restart: bool,
+) -> Option<Session> {
+    loop {
+        match spawn_session(spec, metrics) {
+            Ok(s) => {
+                if record_restart {
+                    metrics.record_session_restart();
+                }
+                return Some(s);
+            }
+            Err(_) => match breaker.on_failure() {
+                BreakerVerdict::Backoff(d) => breaker.clock().clone().sleep(d),
+                BreakerVerdict::Trip => {
+                    if metrics.state() == LifecycleState::Serving {
+                        metrics.set_state(LifecycleState::Degraded);
+                    }
+                    return None;
+                }
+            },
+        }
+    }
+}
+
+/// Answer `pending` plus everything still buffered in the queue with
+/// `Unavailable` and count them `drained` (the drain deadline expired
+/// before they could be served).
+fn drain_remaining(pending: &mut Vec<Request>, req_rx: &Receiver<Request>, metrics: &Metrics) {
+    let mut n = 0u64;
+    for r in pending.drain(..) {
+        let _ = r.resp.send(Err(Error::unavailable("drain deadline expired")));
+        n += 1;
+    }
+    while let Ok(r) = req_rx.try_recv() {
+        let _ = r.resp.send(Err(Error::unavailable("drain deadline expired")));
+        n += 1;
+    }
+    if n > 0 {
+        metrics.record_drained(n);
+    }
+}
+
+fn drain_expired(metrics: &Metrics) -> bool {
+    metrics.drain_deadline().is_some_and(|dd| Instant::now() >= dd)
+}
+
 #[allow(clippy::too_many_arguments)]
 fn batcher_main(
     req_rx: Receiver<Request>,
@@ -463,32 +717,107 @@ fn batcher_main(
     batch: usize,
     timeout: Duration,
     trace: Arc<CommTrace>,
+    mut breaker: RestartBreaker,
 ) {
     let parties = spec.parties;
     let per_sample = input_shape.0 * input_shape.1 * input_shape.2;
+    let clock = breaker.clock().clone();
     let mut prg = Prg::from_entropy();
     let mut pending: Vec<Request> = Vec::new();
-    let mut session = spawn_session(&mut spec);
+    let mut graveyard: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    // Initial boot runs under the same breaker as respawns: a
+    // persistently failing boot lands in Degraded instead of looping.
+    let mut session = ensure_session(&mut spec, &mut breaker, &metrics, false);
+    let mut next_probe = clock.now();
     // Batch-sized staging buffers, reused across batches (the shares sent
     // to the party threads are still fresh vectors — they cross threads).
     let mut x_ring = vec![0u64; batch * per_sample];
     let mut logits_ring = vec![0u64; batch * classes];
     loop {
+        reap(&mut graveyard);
+        // Degraded tick: no session. Answer queued work immediately,
+        // probe the boot on the breaker's schedule, honor drain/stop.
+        let cur = match session.take() {
+            Some(s) => s,
+            None => {
+                loop {
+                    match req_rx.try_recv() {
+                        Ok(r) => {
+                            if r.expired(Instant::now()) {
+                                metrics.record_shed_deadline(1);
+                                let _ = r.resp.send(Err(Error::deadline("expired while queued")));
+                            } else {
+                                // Admitted before (or racing) the trip:
+                                // one terminal disposition, counted as a
+                                // failed request to keep the §9 identity.
+                                metrics.record_failed_requests(1);
+                                let _ = r.resp.send(Err(Error::overloaded(
+                                    "coordinator degraded: session boot is failing",
+                                )));
+                            }
+                        }
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            stop_all(None, graveyard, &metrics);
+                            return;
+                        }
+                    }
+                }
+                if drain_expired(&metrics) {
+                    drain_remaining(&mut pending, &req_rx, &metrics);
+                    stop_all(None, graveyard, &metrics);
+                    return;
+                }
+                if clock.now() >= next_probe {
+                    match spawn_session(&mut spec, &metrics) {
+                        Ok(s) => {
+                            breaker.on_success();
+                            metrics.record_session_restart();
+                            if metrics.state() == LifecycleState::Degraded {
+                                metrics.set_state(LifecycleState::Serving);
+                            }
+                            session = Some(s);
+                        }
+                        Err(_) => next_probe = clock.now() + breaker.on_probe_failure(),
+                    }
+                } else {
+                    clock.sleep(DEGRADED_TICK);
+                }
+                continue;
+            }
+        };
+        session = Some(cur);
+
         // Fill the batch window.
-        let deadline = Instant::now() + timeout;
+        let fill_deadline = Instant::now() + timeout;
         while pending.len() < batch {
             let now = Instant::now();
-            if !pending.is_empty() && now >= deadline {
+            if drain_expired(&metrics) {
+                drain_remaining(&mut pending, &req_rx, &metrics);
+                stop_all(session, graveyard, &metrics);
+                return;
+            }
+            if !pending.is_empty() && now >= fill_deadline {
                 break;
             }
-            let wait = if pending.is_empty() {
-                Duration::from_millis(250)
+            let mut wait = if pending.is_empty() {
+                IDLE_POLL
             } else {
-                deadline.saturating_duration_since(now)
+                fill_deadline.saturating_duration_since(now)
             };
+            if let Some(dd) = metrics.drain_deadline() {
+                wait = wait.min(dd.saturating_duration_since(now));
+            }
             match req_rx.recv_timeout(wait) {
                 Ok(r) => {
                     metrics.mark_start();
+                    // Deadline shedding at dequeue (DESIGN.md §9): an
+                    // expired request never occupies a batch slot.
+                    if r.expired(Instant::now()) {
+                        metrics.record_shed_deadline(1);
+                        let _ = r.resp.send(Err(Error::deadline("expired while queued")));
+                        continue;
+                    }
                     pending.push(r);
                 }
                 Err(RecvTimeoutError::Timeout) => {
@@ -499,21 +828,42 @@ fn batcher_main(
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     if pending.is_empty() {
-                        // Graceful shutdown: close the job queues so the
-                        // party threads drain out, and join them.
-                        drop(session.job_txs);
-                        for h in session.handles {
-                            h.join().ok();
-                        }
+                        // Graceful shutdown with an empty queue: join the
+                        // party threads and stop.
+                        stop_all(session, graveyard, &metrics);
                         return;
                     }
                     break;
                 }
             }
         }
+        // Shed anything that expired while the window filled, then form
+        // the batch from what is still live.
+        let now = Instant::now();
+        let mut expired = 0u64;
+        let mut live = Vec::with_capacity(pending.len());
+        for r in pending.drain(..) {
+            if r.expired(now) {
+                expired += 1;
+                let _ = r.resp.send(Err(Error::deadline("expired while queued")));
+            } else {
+                live.push(r);
+            }
+        }
+        pending = live;
+        if expired > 0 {
+            metrics.record_shed_deadline(expired);
+        }
+        if pending.is_empty() {
+            continue;
+        }
         let got = pending.len().min(batch);
         let reqs: Vec<Request> = pending.drain(..got).collect();
         let t0 = Instant::now();
+        // The fill loop guarantees a session is present here.
+        let Some(cur) = session.as_ref() else {
+            continue;
+        };
 
         // Encode + pad + share (zero the pad region left by the previous
         // batch before encoding this one).
@@ -528,7 +878,7 @@ fn batcher_main(
         trace.record(Phase::Data, (x_ring.len() * 8) as u64);
         let shape = vec![batch, input_shape.0, input_shape.1, input_shape.2];
         let mut batch_err: Option<Error> = None;
-        for (tx, share) in session.job_txs.iter().zip(shares) {
+        for (tx, share) in cur.job_txs.iter().zip(shares) {
             if tx.send(PartyJob { x_share: share, shape: shape.clone() }).is_err() {
                 batch_err = Some(Error::Transport("party session is down".into()));
                 break;
@@ -541,7 +891,7 @@ fn batcher_main(
         let mut outs: Vec<Option<PartyOut>> = (0..parties).map(|_| None).collect();
         if batch_err.is_none() {
             for _ in 0..parties {
-                match session.out_rx.recv() {
+                match cur.out_rx.recv() {
                     Ok((p, Ok(o))) => outs[p] = Some(o),
                     Ok((_, Err(e))) => {
                         if batch_err.is_none() {
@@ -564,22 +914,36 @@ fn batcher_main(
 
         if let Some(root_cause) = batch_err {
             // Graceful degradation (DESIGN.md §7): this batch failed —
-            // answer its requests with the root cause, count it, replace
-            // the faulted session, keep serving.
-            metrics.record_failed_job(matches!(root_cause, Error::Timeout(_)));
+            // answer its requests with the root cause, count it (one
+            // failed job, `got` failed requests — the §9 identity),
+            // retire the faulted session, and consult the breaker.
+            metrics.record_failed_batch(got as u64, matches!(root_cause, Error::Timeout(_)));
             let msg = format!("inference failed: {root_cause}");
             for r in reqs {
                 let _ = r.resp.send(Err(Error::Runtime(msg.clone())));
             }
-            // Old party threads exit on their own (their job queues close
-            // when the session is dropped; their transports' deadlines
-            // bound any blocked exchange). Don't join — a straggler may
-            // take up to round_timeout to notice.
-            drop(session);
-            metrics.record_session_restart();
-            session = spawn_session(&mut spec);
+            if let Some(s) = session.take() {
+                retire(s, &mut graveyard);
+            }
+            match breaker.on_failure() {
+                BreakerVerdict::Backoff(d) => {
+                    clock.sleep(d);
+                    session = ensure_session(&mut spec, &mut breaker, &metrics, true);
+                    if session.is_none() {
+                        next_probe = clock.now();
+                    }
+                }
+                BreakerVerdict::Trip => {
+                    if metrics.state() == LifecycleState::Serving {
+                        metrics.set_state(LifecycleState::Degraded);
+                    }
+                    next_probe = clock.now();
+                }
+            }
             continue;
         }
+        // The batch succeeded: the session is healthy, close the breaker.
+        breaker.on_success();
 
         trace.record(Phase::Data, (batch * classes * 8 * parties) as u64);
         logits_ring.fill(0);

@@ -1,0 +1,289 @@
+//! Crash-loop breaker for session respawn (DESIGN.md §9).
+//!
+//! PR 6 made the batcher respawn a faulted party session
+//! *unconditionally*: a deterministic boot failure (bad artifact path,
+//! bind failure, a poisoned prefetcher) became a hot respawn loop. The
+//! [`RestartBreaker`] gives respawn a budget: each consecutive session
+//! failure inside a sliding window earns an exponentially growing
+//! backoff, and once `max_restarts` consecutive failures accumulate the
+//! breaker **trips** — the coordinator enters the `Degraded` lifecycle
+//! state (answering [`Overloaded`](crate::error::Error::Overloaded)
+//! immediately) while a background probe retries the boot with capped
+//! backoff. The first successful boot closes the breaker and returns
+//! the service to `Serving`.
+//!
+//! All timing flows through the injected [`Clock`] so the chaos suite
+//! pins breaker behaviour deterministically (a [`MockClock`] advances
+//! only when the test says so — no wall-clock sleeps in assertions, see
+//! `tests/fault_injection.rs` and `tests/soak.rs`).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// First respawn backoff; doubles per consecutive failure.
+pub const RESTART_BACKOFF_BASE: Duration = Duration::from_millis(50);
+/// Respawn backoff cap.
+pub const RESTART_BACKOFF_CAP: Duration = Duration::from_secs(2);
+/// First degraded-probe backoff; doubles per failed probe.
+pub const PROBE_BACKOFF_BASE: Duration = Duration::from_millis(100);
+/// Degraded-probe backoff cap.
+pub const PROBE_BACKOFF_CAP: Duration = Duration::from_secs(5);
+
+/// Time source for the breaker. `now()` is a monotonic offset from an
+/// arbitrary origin; `sleep(d)` blocks (or, for a mock, advances or
+/// yields) for `d`. Injected via [`ClockHandle`] so tests control time.
+pub trait Clock: Send + Sync {
+    /// Monotonic time since this clock's origin.
+    fn now(&self) -> Duration;
+    /// Wait out `d` on this clock's notion of time.
+    fn sleep(&self, d: Duration);
+}
+
+/// Shared, cloneable handle to a [`Clock`] (lives in `ServeOptions`).
+#[derive(Clone)]
+pub struct ClockHandle(Arc<dyn Clock>);
+
+impl ClockHandle {
+    /// The production clock: real monotonic time, real sleeps.
+    pub fn monotonic() -> ClockHandle {
+        ClockHandle(Arc::new(MonotonicClock { origin: Instant::now() }))
+    }
+
+    /// A test-controlled clock plus the handle that advances it.
+    pub fn mock() -> (ClockHandle, Arc<MockClock>) {
+        let mock = Arc::new(MockClock::default());
+        (ClockHandle(Arc::clone(&mock) as Arc<dyn Clock>), mock)
+    }
+
+    pub fn now(&self) -> Duration {
+        self.0.now()
+    }
+
+    pub fn sleep(&self, d: Duration) {
+        self.0.sleep(d)
+    }
+}
+
+impl fmt::Debug for ClockHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ClockHandle(now={:?})", self.0.now())
+    }
+}
+
+impl Default for ClockHandle {
+    fn default() -> Self {
+        ClockHandle::monotonic()
+    }
+}
+
+struct MonotonicClock {
+    origin: Instant,
+}
+
+impl Clock for MonotonicClock {
+    fn now(&self) -> Duration {
+        self.origin.elapsed()
+    }
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// Deterministic test clock: time advances **only** via
+/// [`MockClock::advance`]. `sleep` yields the thread without advancing,
+/// so a batcher waiting on a mock clock spins cooperatively until the
+/// test moves time forward — breaker timing becomes a pure function of
+/// the test script, not the scheduler.
+#[derive(Default)]
+pub struct MockClock {
+    now_ns: AtomicU64,
+}
+
+impl MockClock {
+    /// Move the clock forward by `d`.
+    pub fn advance(&self, d: Duration) {
+        self.now_ns.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+}
+
+impl Clock for MockClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.now_ns.load(Ordering::SeqCst))
+    }
+    fn sleep(&self, _d: Duration) {
+        std::thread::yield_now();
+    }
+}
+
+/// What to do after a session failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerVerdict {
+    /// Respawn after this backoff.
+    Backoff(Duration),
+    /// The budget is exhausted: enter `Degraded` and probe instead.
+    Trip,
+}
+
+/// Exponential backoff: `base << n`, saturating at `cap`.
+fn exp_backoff(base: Duration, n: u32, cap: Duration) -> Duration {
+    let mult = 1u32.checked_shl(n.min(16)).unwrap_or(u32::MAX);
+    base.checked_mul(mult).map_or(cap, |d| d.min(cap))
+}
+
+/// Consecutive-failure budget + backoff schedule for session respawn.
+pub struct RestartBreaker {
+    max_restarts: u32,
+    window: Duration,
+    clock: ClockHandle,
+    consecutive: u32,
+    window_start: Option<Duration>,
+    probe_failures: u32,
+}
+
+impl RestartBreaker {
+    /// `max_restarts` consecutive failures inside `window` trip the
+    /// breaker. `max_restarts` is clamped to ≥ 1.
+    pub fn new(max_restarts: u32, window: Duration, clock: ClockHandle) -> RestartBreaker {
+        RestartBreaker {
+            max_restarts: max_restarts.max(1),
+            window,
+            clock,
+            consecutive: 0,
+            window_start: None,
+            probe_failures: 0,
+        }
+    }
+
+    pub fn clock(&self) -> &ClockHandle {
+        &self.clock
+    }
+
+    /// Record one session failure (boot failure or failed batch).
+    /// Failures separated by more than `window` restart the count — only
+    /// *consecutive in-window* failures trip the breaker.
+    pub fn on_failure(&mut self) -> BreakerVerdict {
+        let now = self.clock.now();
+        match self.window_start {
+            Some(t0) if now.saturating_sub(t0) <= self.window => {}
+            _ => {
+                self.window_start = Some(now);
+                self.consecutive = 0;
+            }
+        }
+        self.consecutive += 1;
+        if self.consecutive >= self.max_restarts {
+            BreakerVerdict::Trip
+        } else {
+            BreakerVerdict::Backoff(exp_backoff(
+                RESTART_BACKOFF_BASE,
+                self.consecutive - 1,
+                RESTART_BACKOFF_CAP,
+            ))
+        }
+    }
+
+    /// A session served a batch successfully (or a degraded probe
+    /// booted): close the breaker and reset every budget.
+    pub fn on_success(&mut self) {
+        self.consecutive = 0;
+        self.window_start = None;
+        self.probe_failures = 0;
+    }
+
+    /// A degraded-state probe failed to boot: returns how long to wait
+    /// before the next probe (exponential, capped).
+    pub fn on_probe_failure(&mut self) -> Duration {
+        let d = exp_backoff(PROBE_BACKOFF_BASE, self.probe_failures, PROBE_BACKOFF_CAP);
+        self.probe_failures = self.probe_failures.saturating_add(1);
+        d
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn mock_breaker(max: u32, window: Duration) -> (RestartBreaker, Arc<MockClock>) {
+        let (clock, mock) = ClockHandle::mock();
+        (RestartBreaker::new(max, window, clock), mock)
+    }
+
+    /// Consecutive failures earn doubling backoffs, then trip exactly at
+    /// `max_restarts` — all on the mock clock, zero wall-clock sleeps.
+    #[test]
+    fn trips_after_max_consecutive_failures() {
+        let (mut b, _mock) = mock_breaker(3, Duration::from_secs(30));
+        assert_eq!(b.on_failure(), BreakerVerdict::Backoff(RESTART_BACKOFF_BASE));
+        assert_eq!(b.on_failure(), BreakerVerdict::Backoff(RESTART_BACKOFF_BASE * 2));
+        assert_eq!(b.on_failure(), BreakerVerdict::Trip);
+        // Tripped state is sticky until a success.
+        assert_eq!(b.on_failure(), BreakerVerdict::Trip);
+        b.on_success();
+        assert_eq!(b.on_failure(), BreakerVerdict::Backoff(RESTART_BACKOFF_BASE));
+    }
+
+    /// A failure outside the sliding window restarts the count: sparse
+    /// failures never trip the breaker.
+    #[test]
+    fn window_expiry_resets_consecutive_count() {
+        let (mut b, mock) = mock_breaker(2, Duration::from_secs(10));
+        assert!(matches!(b.on_failure(), BreakerVerdict::Backoff(_)));
+        mock.advance(Duration::from_secs(11));
+        assert!(matches!(b.on_failure(), BreakerVerdict::Backoff(_)), "window must have reset");
+        // Inside the fresh window the second failure trips.
+        mock.advance(Duration::from_secs(1));
+        assert_eq!(b.on_failure(), BreakerVerdict::Trip);
+    }
+
+    /// Backoffs cap instead of overflowing, for both schedules.
+    #[test]
+    fn backoffs_are_capped() {
+        let (mut b, _mock) = mock_breaker(100, Duration::from_secs(3600));
+        let mut last = Duration::ZERO;
+        for _ in 0..40 {
+            if let BreakerVerdict::Backoff(d) = b.on_failure() {
+                assert!(d <= RESTART_BACKOFF_CAP);
+                last = d;
+            }
+        }
+        assert_eq!(last, RESTART_BACKOFF_CAP);
+        let mut probe = Duration::ZERO;
+        for _ in 0..40 {
+            probe = b.on_probe_failure();
+            assert!(probe <= PROBE_BACKOFF_CAP);
+        }
+        assert_eq!(probe, PROBE_BACKOFF_CAP);
+        assert_eq!(
+            exp_backoff(Duration::from_millis(1), 80, Duration::from_secs(5)),
+            Duration::from_secs(5)
+        );
+    }
+
+    /// `max_restarts = 0` is clamped to 1 (first failure trips) rather
+    /// than wrapping into never-trip.
+    #[test]
+    fn zero_budget_trips_immediately() {
+        let (mut b, _mock) = mock_breaker(0, Duration::from_secs(1));
+        assert_eq!(b.on_failure(), BreakerVerdict::Trip);
+    }
+
+    /// The mock clock advances only explicitly; the monotonic clock
+    /// actually moves.
+    #[test]
+    fn clocks_behave() {
+        let (clock, mock) = ClockHandle::mock();
+        let t0 = clock.now();
+        clock.sleep(Duration::from_secs(5));
+        assert_eq!(clock.now(), t0, "mock sleep must not advance time");
+        mock.advance(Duration::from_millis(250));
+        assert_eq!(clock.now() - t0, Duration::from_millis(250));
+
+        let real = ClockHandle::monotonic();
+        let a = real.now();
+        real.sleep(Duration::from_millis(2));
+        assert!(real.now() > a);
+    }
+}

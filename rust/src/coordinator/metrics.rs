@@ -1,18 +1,79 @@
 //! Serving metrics: request latency, throughput, communication, the
-//! compute/communication breakdown used by Figs 1 & 10, and the fault
-//! counters of the degradation path (DESIGN.md §7).
+//! compute/communication breakdown used by Figs 1 & 10, the fault
+//! counters of the degradation path (DESIGN.md §7), and the lifecycle /
+//! admission accounting of the overload-safe serving core (DESIGN.md §9).
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::model::ExecBreakdown;
 use crate::util::json::Json;
 use crate::util::stats;
 
+/// Coordinator lifecycle state (DESIGN.md §9).
+///
+/// ```text
+/// Serving ──breaker trips──▶ Degraded ──probe boots──▶ Serving
+///    │                          │
+///    └────── shutdown ──────────┴──▶ Draining ──deadline/empty──▶ Stopped
+/// ```
+///
+/// `Stopped` is terminal: [`Metrics::set_state`] refuses to leave it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum LifecycleState {
+    /// Admitting and serving requests normally.
+    Serving = 0,
+    /// Crash-loop breaker open: new requests are answered `Overloaded`
+    /// immediately while a background probe retries the session boot.
+    Degraded = 1,
+    /// Admission closed; queued and in-flight work is being served until
+    /// the drain deadline.
+    Draining = 2,
+    /// All party threads joined; the service will never serve again.
+    Stopped = 3,
+}
+
+impl LifecycleState {
+    fn from_u8(v: u8) -> LifecycleState {
+        match v {
+            0 => LifecycleState::Serving,
+            1 => LifecycleState::Degraded,
+            2 => LifecycleState::Draining,
+            _ => LifecycleState::Stopped,
+        }
+    }
+
+    /// Lowercase name, as printed by the serve CLI and `to_json`.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LifecycleState::Serving => "serving",
+            LifecycleState::Degraded => "degraded",
+            LifecycleState::Draining => "draining",
+            LifecycleState::Stopped => "stopped",
+        }
+    }
+}
+
+impl std::fmt::Display for LifecycleState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Accumulated serving metrics (thread-safe).
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// `LifecycleState` as u8 — atomic so the admission fast path reads it
+    /// without taking the accumulator lock.
+    state: AtomicU8,
+    /// Gauge of live party threads (incremented at spawn, decremented by a
+    /// [`PartyThreadGuard`] drop, so panicking threads still decrement).
+    live_party_threads: AtomicU64,
+    /// Force-stop deadline while `Draining` (set by `begin_drain`).
+    drain_deadline: Mutex<Option<Instant>>,
 }
 
 #[derive(Debug, Default)]
@@ -25,6 +86,7 @@ struct Inner {
     started: Option<Instant>,
     finished: Option<Instant>,
     faults: FaultCounters,
+    admission: AdmissionCounters,
 }
 
 /// Failure counters of the graceful-degradation path (DESIGN.md §7): a
@@ -45,16 +107,97 @@ pub struct FaultCounters {
     /// Transport-level reconnects absorbed without failing a job.
     pub reconnects: u64,
     /// Times the coordinator tore down a faulted party session and
-    /// spawned a fresh one.
+    /// spawned a fresh one (including the probe boot that leaves
+    /// `Degraded`).
     pub sessions_restarted: u64,
 }
 
+/// Per-request disposition counters of the admission/lifecycle layer
+/// (DESIGN.md §9). Every **admitted** request receives exactly one
+/// terminal disposition from the batcher, so the identity
+///
+/// ```text
+/// admitted == completed + shed_deadline + failed_requests + drained
+/// ```
+///
+/// holds *exactly* once the coordinator reaches `Stopped`
+/// ([`MetricsSnapshot::balanced`]). `shed_queue_full` and
+/// `rejected_degraded` count refusals **before** admission and sit
+/// outside the identity.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionCounters {
+    /// Requests accepted into the bounded queue.
+    pub admitted: u64,
+    /// Admitted requests answered with a successful inference result.
+    pub completed: u64,
+    /// Requests refused at admission because the queue was full
+    /// (`Error::Overloaded`). Never admitted.
+    pub shed_queue_full: u64,
+    /// Requests refused at admission because the coordinator was
+    /// `Degraded` (`Error::Overloaded`). Never admitted.
+    pub rejected_degraded: u64,
+    /// Admitted requests shed by the batcher because their per-request
+    /// deadline expired while queued (`Error::Deadline`) — they never
+    /// occupied a batch slot.
+    pub shed_deadline: u64,
+    /// Admitted requests answered with an error: their batch failed on a
+    /// session fault, or the coordinator entered `Degraded` after they
+    /// were queued.
+    pub failed_requests: u64,
+    /// Admitted requests answered `Error::Unavailable` because the drain
+    /// deadline expired before they could be served.
+    pub drained: u64,
+}
+
 /// Point-in-time view of the counters, for assertions and dashboards.
-#[derive(Debug, Default, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MetricsSnapshot {
     pub samples_done: u64,
     pub batches_done: u64,
     pub faults: FaultCounters,
+    pub admission: AdmissionCounters,
+    /// Lifecycle state at snapshot time.
+    pub state: LifecycleState,
+    /// Live party threads at snapshot time (0 after a clean stop).
+    pub live_party_threads: u64,
+}
+
+impl Default for MetricsSnapshot {
+    fn default() -> Self {
+        MetricsSnapshot {
+            samples_done: 0,
+            batches_done: 0,
+            faults: FaultCounters::default(),
+            admission: AdmissionCounters::default(),
+            state: LifecycleState::Serving,
+            live_party_threads: 0,
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// The per-request accounting identity of DESIGN.md §9: every admitted
+    /// request got exactly one terminal disposition. The chaos soak
+    /// asserts this holds *exactly* after `Stopped`.
+    pub fn balanced(&self) -> bool {
+        let a = &self.admission;
+        a.admitted == a.completed + a.shed_deadline + a.failed_requests + a.drained
+    }
+}
+
+/// RAII gauge for a live party thread: created on spawn, moved into the
+/// thread closure, decrements [`Metrics::live_party_threads`] on drop —
+/// including panic unwinds, so the soak's zero-orphans assertion cannot
+/// be fooled by a crashed party.
+#[derive(Debug)]
+pub struct PartyThreadGuard {
+    metrics: Arc<Metrics>,
+}
+
+impl Drop for PartyThreadGuard {
+    fn drop(&mut self) {
+        self.metrics.live_party_threads.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 impl Metrics {
@@ -69,6 +212,85 @@ impl Metrics {
         self.inner.lock().unwrap_or_else(|e| e.into_inner())
     }
 
+    // ---- lifecycle -------------------------------------------------------
+
+    /// Current lifecycle state (lock-free).
+    pub fn state(&self) -> LifecycleState {
+        LifecycleState::from_u8(self.state.load(Ordering::SeqCst))
+    }
+
+    /// Transition the lifecycle state. `Stopped` is terminal — once there,
+    /// every further transition is ignored.
+    pub fn set_state(&self, s: LifecycleState) {
+        let _ = self.state.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |cur| {
+            if LifecycleState::from_u8(cur) == LifecycleState::Stopped {
+                None
+            } else {
+                Some(s as u8)
+            }
+        });
+    }
+
+    /// Enter `Draining` with a force-stop deadline (no-op once `Stopped`).
+    pub fn begin_drain(&self, deadline: Instant) {
+        *self.drain_deadline.lock().unwrap_or_else(|e| e.into_inner()) = Some(deadline);
+        self.set_state(LifecycleState::Draining);
+    }
+
+    /// The force-stop deadline, if a drain has begun.
+    pub fn drain_deadline(&self) -> Option<Instant> {
+        *self.drain_deadline.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Register a spawned party thread; move the returned guard into the
+    /// thread closure so its drop decrements the gauge.
+    pub fn party_thread_guard(self: &Arc<Self>) -> PartyThreadGuard {
+        self.live_party_threads.fetch_add(1, Ordering::SeqCst);
+        PartyThreadGuard { metrics: Arc::clone(self) }
+    }
+
+    /// Live party threads right now (0 after a clean stop).
+    pub fn live_party_threads(&self) -> u64 {
+        self.live_party_threads.load(Ordering::SeqCst)
+    }
+
+    // ---- admission / disposition ----------------------------------------
+
+    /// A request was accepted into the bounded queue.
+    pub fn record_admitted(&self) {
+        self.lock().admission.admitted += 1;
+    }
+
+    /// A request was refused at admission: the queue was full.
+    pub fn record_shed_queue_full(&self) {
+        self.lock().admission.shed_queue_full += 1;
+    }
+
+    /// A request was refused at admission: the coordinator is `Degraded`.
+    pub fn record_rejected_degraded(&self) {
+        self.lock().admission.rejected_degraded += 1;
+    }
+
+    /// `n` queued requests were shed at dequeue because their per-request
+    /// deadline had expired.
+    pub fn record_shed_deadline(&self, n: u64) {
+        self.lock().admission.shed_deadline += n;
+    }
+
+    /// `n` queued requests were answered `Unavailable` because the drain
+    /// deadline expired before they could be served.
+    pub fn record_drained(&self, n: u64) {
+        self.lock().admission.drained += n;
+    }
+
+    /// `n` already-admitted requests were answered with an error outside a
+    /// batch (e.g. the coordinator entered `Degraded` while they were
+    /// queued). Keeps the §9 identity exact without counting a failed
+    /// batch.
+    pub fn record_failed_requests(&self, n: u64) {
+        self.lock().admission.failed_requests += n;
+    }
+
     pub fn mark_start(&self) {
         let mut m = self.lock();
         if m.started.is_none() {
@@ -81,6 +303,7 @@ impl Metrics {
         m.batch_sizes.push(batch);
         m.samples_done += batch as u64;
         m.batches_done += 1;
+        m.admission.completed += batch as u64;
         m.breakdown.add(bd);
         m.finished = Some(Instant::now());
         for _ in 0..batch {
@@ -88,12 +311,15 @@ impl Metrics {
         }
     }
 
-    /// A batch failed: a party session faulted and its requests were
-    /// answered with an error. `was_timeout` marks a deadline-expiry root
-    /// cause (vs. a crash/link fault).
-    pub fn record_failed_job(&self, was_timeout: bool) {
+    /// A batch of `requests` failed: a party session faulted and every
+    /// request in it was answered with an error. One failed batch = one
+    /// `failed_jobs` increment; each member counts into
+    /// `failed_requests` so the §9 identity stays exact. `was_timeout`
+    /// marks a deadline-expiry root cause (vs. a crash/link fault).
+    pub fn record_failed_batch(&self, requests: u64, was_timeout: bool) {
         let mut m = self.lock();
         m.faults.failed_jobs += 1;
+        m.admission.failed_requests += requests;
         if was_timeout {
             m.faults.timeouts += 1;
         }
@@ -119,6 +345,9 @@ impl Metrics {
             samples_done: m.samples_done,
             batches_done: m.batches_done,
             faults: m.faults,
+            admission: m.admission,
+            state: self.state(),
+            live_party_threads: self.live_party_threads(),
         }
     }
 
@@ -163,6 +392,15 @@ impl Metrics {
             ("retries", Json::Int(m.faults.retries as i64)),
             ("reconnects", Json::Int(m.faults.reconnects as i64)),
             ("sessions_restarted", Json::Int(m.faults.sessions_restarted as i64)),
+            ("state", Json::str(self.state().as_str())),
+            ("admitted", Json::Int(m.admission.admitted as i64)),
+            ("completed", Json::Int(m.admission.completed as i64)),
+            ("shed_queue_full", Json::Int(m.admission.shed_queue_full as i64)),
+            ("rejected_degraded", Json::Int(m.admission.rejected_degraded as i64)),
+            ("shed_deadline", Json::Int(m.admission.shed_deadline as i64)),
+            ("failed_requests", Json::Int(m.admission.failed_requests as i64)),
+            ("drained", Json::Int(m.admission.drained as i64)),
+            ("live_party_threads", Json::Int(self.live_party_threads() as i64)),
         ])
     }
 }
@@ -192,8 +430,8 @@ mod tests {
     fn fault_counters_snapshot() {
         let m = Metrics::new();
         assert_eq!(m.snapshot().faults, FaultCounters::default());
-        m.record_failed_job(false);
-        m.record_failed_job(true);
+        m.record_failed_batch(1, false);
+        m.record_failed_batch(1, true);
         m.record_session_restart();
         m.record_net_recovery(3, 1);
         let s = m.snapshot();
@@ -206,5 +444,72 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get_i64("failed_jobs").unwrap(), 2);
         assert_eq!(j.get_i64("sessions_restarted").unwrap(), 1);
+    }
+
+    /// The lifecycle state machine: free transitions between live states,
+    /// `Stopped` terminal.
+    #[test]
+    fn lifecycle_state_machine() {
+        let m = Metrics::new();
+        assert_eq!(m.state(), LifecycleState::Serving);
+        m.set_state(LifecycleState::Degraded);
+        assert_eq!(m.state(), LifecycleState::Degraded);
+        m.set_state(LifecycleState::Serving);
+        m.begin_drain(Instant::now());
+        assert_eq!(m.state(), LifecycleState::Draining);
+        assert!(m.drain_deadline().is_some());
+        m.set_state(LifecycleState::Stopped);
+        m.set_state(LifecycleState::Serving);
+        assert_eq!(m.state(), LifecycleState::Stopped, "Stopped must be terminal");
+        assert_eq!(m.to_json().get_str("state").unwrap(), "stopped");
+    }
+
+    /// Every admitted request gets exactly one terminal disposition; the
+    /// §9 identity holds and the pre-admission refusals sit outside it.
+    #[test]
+    fn admission_identity() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.record_admitted();
+        }
+        m.record_shed_queue_full();
+        m.record_rejected_degraded();
+        let bd = ExecBreakdown::default();
+        m.record_batch(4, 0.1, &bd); // 4 completed
+        m.record_shed_deadline(2);
+        m.record_failed_batch(2, false);
+        m.record_failed_requests(1);
+        m.record_drained(1);
+        let s = m.snapshot();
+        assert_eq!(s.admission.admitted, 10);
+        assert_eq!(s.admission.completed, 4);
+        assert_eq!(s.admission.shed_deadline, 2);
+        assert_eq!(s.admission.failed_requests, 3);
+        assert_eq!(s.admission.drained, 1);
+        assert!(s.balanced(), "identity must hold: {:?}", s.admission);
+        assert_eq!(s.admission.shed_queue_full, 1);
+        assert_eq!(s.admission.rejected_degraded, 1);
+        m.record_admitted();
+        assert!(!m.snapshot().balanced(), "an undisposed admit must unbalance");
+    }
+
+    /// The live-thread gauge decrements on guard drop, panics included.
+    #[test]
+    fn party_thread_gauge() {
+        let m = Arc::new(Metrics::new());
+        let g1 = m.party_thread_guard();
+        let g2 = m.party_thread_guard();
+        assert_eq!(m.live_party_threads(), 2);
+        drop(g1);
+        assert_eq!(m.live_party_threads(), 1);
+        let m2 = Arc::clone(&m);
+        let h = std::thread::spawn(move || {
+            let _g = m2.party_thread_guard();
+            panic!("simulated party crash");
+        });
+        assert!(h.join().is_err());
+        assert_eq!(m.live_party_threads(), 1, "panicking thread must still decrement");
+        drop(g2);
+        assert_eq!(m.snapshot().live_party_threads, 0);
     }
 }

@@ -21,11 +21,23 @@
 //! the [`Metrics`] fault counters tick, and the batcher respawns a fresh
 //! party session for the next batch. The coordinator process never wedges
 //! on a single bad session.
+//!
+//! The service above the sessions is overload-safe (DESIGN.md §9):
+//! admission is bounded (`--queue-depth`), queued requests expire
+//! (`--request-timeout-ms`), session respawn runs under a crash-loop
+//! breaker (`--max-restarts` → `Degraded` + background probe), and
+//! shutdown drains gracefully
+//! ([`Coordinator::shutdown_with_deadline`]). The lifecycle
+//! (`Serving → Degraded → Draining → Stopped`) and the per-request
+//! disposition counters — whose identity the chaos soak pins exactly —
+//! are surfaced by [`Metrics::snapshot`].
 
 #![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod batcher;
+pub mod breaker;
 pub mod metrics;
 
-pub use batcher::{Coordinator, InferenceResult, ServeOptions};
-pub use metrics::Metrics;
+pub use batcher::{Coordinator, InferenceResult, ServeOptions, DEFAULT_DRAIN};
+pub use breaker::{BreakerVerdict, Clock, ClockHandle, MockClock, RestartBreaker};
+pub use metrics::{AdmissionCounters, LifecycleState, Metrics, MetricsSnapshot};

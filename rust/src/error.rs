@@ -34,6 +34,27 @@ pub enum Error {
     /// session fails the in-flight job instead of wedging the process.
     Timeout(String),
 
+    /// The serving layer refused the request because it is at capacity
+    /// (bounded admission queue full) or deliberately degraded
+    /// (crash-loop breaker open, drain in progress) — see DESIGN.md §9.
+    /// Unlike the fatal transport errors, this is **retryable by the
+    /// client**: nothing about the request was wrong, the service just
+    /// could not take it *now* ([`Error::client_should_retry`]).
+    Overloaded(String),
+
+    /// A per-request deadline (`--request-timeout-ms`) expired before
+    /// the service produced an answer: the request was shed from the
+    /// queue, or the caller stopped waiting (DESIGN.md §9). Distinct
+    /// from [`Error::Timeout`], which is a *session-layer* round
+    /// deadline and fatal for the whole party session.
+    Deadline(String),
+
+    /// The service is not running: it was never started, is past its
+    /// drain deadline, or has stopped. Distinct from
+    /// [`Error::Transport`] — callers can tell "service stopping" from
+    /// a real transport fault (DESIGN.md §9).
+    Unavailable(String),
+
     /// Wire-format violation: a payload whose length or framing does not
     /// match what the protocol step expects (truncated or corrupt data
     /// must never be silently zero-padded into "valid" shares).
@@ -66,6 +87,9 @@ impl fmt::Display for Error {
             Error::Protocol(m) => write!(f, "protocol error: {m}"),
             Error::Transport(m) => write!(f, "transport error: {m}"),
             Error::Timeout(m) => write!(f, "timeout: {m}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
+            Error::Deadline(m) => write!(f, "request deadline expired: {m}"),
+            Error::Unavailable(m) => write!(f, "service unavailable: {m}"),
             Error::Wire(m) => write!(f, "wire format error: {m}"),
             Error::Beaver(m) => write!(f, "beaver error: {m}"),
             Error::Shape(m) => write!(f, "shape error: {m}"),
@@ -116,6 +140,28 @@ impl Error {
     /// Shorthand constructor for deadline-expired errors.
     pub fn timeout(msg: impl fmt::Display) -> Self {
         Error::Timeout(msg.to_string())
+    }
+    /// Shorthand constructor for admission-refused errors.
+    pub fn overloaded(msg: impl fmt::Display) -> Self {
+        Error::Overloaded(msg.to_string())
+    }
+    /// Shorthand constructor for per-request deadline expiries.
+    pub fn deadline(msg: impl fmt::Display) -> Self {
+        Error::Deadline(msg.to_string())
+    }
+    /// Shorthand constructor for service-not-running errors.
+    pub fn unavailable(msg: impl fmt::Display) -> Self {
+        Error::Unavailable(msg.to_string())
+    }
+
+    /// Client-side retry classification for the serving layer
+    /// (DESIGN.md §9): `true` exactly for [`Error::Overloaded`] — the
+    /// request itself was fine, the service just refused it *now*
+    /// (queue full, breaker open, drain in progress), so resubmitting
+    /// after a backoff can succeed. Everything else either failed the
+    /// request on its merits or means the service is going away.
+    pub fn client_should_retry(&self) -> bool {
+        matches!(self, Error::Overloaded(_))
     }
 
     /// Retryable/fatal classification for the session layer (DESIGN.md §7).
@@ -177,8 +223,28 @@ mod tests {
             Error::protocol("divergence"),
             Error::Beaver("schedule mismatch".into()),
             Error::Transport("out-of-order frame".into()),
+            Error::overloaded("queue full"),
+            Error::deadline("request expired in queue"),
+            Error::unavailable("service stopped"),
         ] {
             assert!(!fatal.is_retryable(), "{fatal}");
+        }
+    }
+
+    /// `client_should_retry` marks exactly the admission refusals: a
+    /// shed request or a stopping service must not invite a resubmit.
+    #[test]
+    fn client_retry_classification() {
+        assert!(Error::overloaded("queue full").client_should_retry());
+        assert!(Error::overloaded("degraded").client_should_retry());
+        for no in [
+            Error::deadline("expired in queue"),
+            Error::unavailable("draining"),
+            Error::timeout("round deadline"),
+            Error::wire("ragged"),
+            Error::Transport("link".into()),
+        ] {
+            assert!(!no.client_should_retry(), "{no}");
         }
     }
 }

@@ -31,9 +31,17 @@
 //! `--retries`, `--backoff-ms` bound every blocking network step, and
 //! `--fault-profile` (serve/party) injects deterministic faults for chaos
 //! testing, e.g. `--fault-profile drop@3,seed:7` or `crash@5,party:1`.
+//!
+//! Serving-lifecycle knobs (infer/serve, DESIGN.md §9): `--queue-depth`
+//! bounds admission (a full queue answers `Overloaded`),
+//! `--request-timeout-ms` stamps each request with a deadline (expired
+//! queued requests are shed), `--max-restarts` budgets the crash-loop
+//! breaker, and `--drain-timeout-ms` (serve) bounds the graceful drain at
+//! shutdown.
 
 use anyhow::{bail, Context, Result};
 
+use hummingbird::coordinator::ServeOptions;
 use hummingbird::figures;
 use hummingbird::gmw::kernels::BinLayout;
 use hummingbird::hummingbird::search::{SearchConfig, SearchEngine, Strategy};
@@ -91,6 +99,19 @@ fn load_fault_profile(args: &Args) -> Result<Option<FaultProfile>> {
     }
 }
 
+/// Serving-lifecycle knobs shared by infer/serve (DESIGN.md §9):
+/// `--queue-depth` (bounded admission), `--request-timeout-ms` (0 = no
+/// per-request deadline) and `--max-restarts` (crash-loop budget).
+fn apply_lifecycle_knobs(args: &Args, opts: &mut ServeOptions, default_queue: usize) -> Result<()> {
+    opts.queue_depth = args.opt_parse("queue-depth", default_queue)?;
+    let ms: u64 = args.opt_parse("request-timeout-ms", 0u64)?;
+    if ms > 0 {
+        opts.request_timeout = Some(std::time::Duration::from_millis(ms));
+    }
+    opts.max_restarts = args.opt_parse("max-restarts", opts.max_restarts)?;
+    Ok(())
+}
+
 fn load_plan(args: &Args, cfg: &ModelConfig) -> Result<PlanSet> {
     match args.opt("plan") {
         None | Some("baseline") => Ok(PlanSet::baseline(cfg.relu_groups)),
@@ -103,7 +124,7 @@ fn load_plan(args: &Args, cfg: &ModelConfig) -> Result<PlanSet> {
 // ---------------------------------------------------------------------
 
 fn cmd_infer(args: &Args) -> Result<()> {
-    use hummingbird::coordinator::{Coordinator, ServeOptions};
+    use hummingbird::coordinator::Coordinator;
     let root = repo_root(args);
     let model = args.req("model")?;
     let cfg = ModelConfig::load_named(&root, model)?;
@@ -124,6 +145,9 @@ fn cmd_infer(args: &Args) -> Result<()> {
     opts.prefetch = args.on_off("prefetch", false)?;
     // Session deadlines (bound every blocking network step, DESIGN.md §7).
     opts.net = NetConfig::from_args(args)?;
+    // The infer driver submits every sample asynchronously up front, so
+    // default the bounded queue (DESIGN.md §9) to hold them all.
+    apply_lifecycle_knobs(args, &mut opts, samples.max(256))?;
     println!(
         "booting {} ({} parties, plan: {}, layout: {}, prefetch: {})",
         model,
@@ -190,7 +214,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
 // ---------------------------------------------------------------------
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use hummingbird::coordinator::{Coordinator, ServeOptions};
+    use hummingbird::coordinator::Coordinator;
     let root = repo_root(args);
     let model = args.req("model")?;
     let cfg = ModelConfig::load_named(&root, model)?;
@@ -209,6 +233,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // fails its batch, the coordinator respawns the session and keeps
     // serving (watch failed_jobs/sessions_restarted in the metrics line).
     opts.fault_profile = load_fault_profile(args)?;
+    // Overload / lifecycle knobs (DESIGN.md §9).
+    apply_lifecycle_knobs(args, &mut opts, 256)?;
+    let drain_ms: u64 = args.opt_parse("drain-timeout-ms", 30_000u64)?;
     let prefetch = if opts.prefetch { "on" } else { "off" };
     let svc = Coordinator::start(opts)?;
     println!(
@@ -238,9 +265,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 }
             }
         };
+    let mut shed = 0usize;
     while t0.elapsed().as_secs_f64() < duration {
         let i = sent % dataset.test.n;
-        rxs.push_back((i, svc.infer_async(dataset.test.batch(i, i + 1).to_vec())?));
+        // Bounded admission (DESIGN.md §9): an overloaded (or degraded)
+        // coordinator sheds the submission — the open-loop client counts
+        // it and keeps the load coming rather than aborting.
+        match svc.infer_async(dataset.test.batch(i, i + 1).to_vec()) {
+            Ok(rx) => rxs.push_back((i, rx)),
+            Err(e) if e.client_should_retry() => shed += 1,
+            Err(e) => return Err(e.into()),
+        }
         sent += 1;
         // Keep a bounded number in flight.
         while rxs.len() >= 64 {
@@ -253,12 +288,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "served {done} samples ({failed} failed) in {wall:.1}s = {:.2} samples/s",
+        "served {done} samples ({failed} failed, {shed} shed at admission) in {wall:.1}s \
+         = {:.2} samples/s",
         done as f64 / wall
     );
     println!("accuracy {:.2}%", 100.0 * correct as f64 / done.max(1) as f64);
     println!("metrics: {}", svc.metrics.to_json().to_string());
-    svc.shutdown();
+    // Graceful drain (DESIGN.md §9): stop admission, serve what is
+    // queued until --drain-timeout-ms, then force-stop.
+    let snap = svc.shutdown_with_deadline(std::time::Duration::from_millis(drain_ms));
+    println!(
+        "final state: {} (admitted {}, completed {}, drained {}, live party threads {})",
+        snap.state,
+        snap.admission.admitted,
+        snap.admission.completed,
+        snap.admission.drained,
+        snap.live_party_threads
+    );
     Ok(())
 }
 

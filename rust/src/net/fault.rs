@@ -19,7 +19,13 @@
 //! drop@?8           like drop@k with k drawn from the PRG, k < 8
 //! seed:42           PRG seed for the @? draws (default 0)
 //! party:1           only party 1 injects; others run clean (default 0)
+//! bootfail:3        the next 3 session (re)boots fail before spawning
 //! ```
+//!
+//! `bootfail:` is consumed by the coordinator's `spawn_session`, not by
+//! the transport wrapper: each spawn attempt fails outright until the
+//! budget is spent, which is how the crash-loop breaker (DESIGN.md §9)
+//! is driven into `Degraded` — and out again — deterministically.
 //!
 //! e.g. `--fault-profile "party:1,seed:7,drop@?10"` makes party 1 sever a
 //! link at a pseudo-random round below 10, reproducibly across runs.
@@ -69,6 +75,10 @@ pub struct FaultProfile {
     pub party: usize,
     /// Seed for the `@?` randomized round draws.
     pub seed: u64,
+    /// How many session (re)boots fail before spawning (`bootfail:N`).
+    /// Consumed by the coordinator one per spawn attempt; the round-level
+    /// faults below only arm once a session actually boots.
+    pub boot_fails: u32,
     pub faults: Vec<ScheduledFault>,
 }
 
@@ -76,7 +86,18 @@ impl FaultProfile {
     /// Schedule a single fault at a fixed round (test convenience).
     pub fn single(party: usize, round: u64, kind: FaultKind) -> Self {
         // HOT-PATH-ALLOW: constructor — one-element schedule, built once.
-        FaultProfile { party, seed: 0, faults: vec![ScheduledFault { round, kind }] }
+        FaultProfile {
+            party,
+            seed: 0,
+            boot_fails: 0,
+            faults: vec![ScheduledFault { round, kind }],
+        }
+    }
+
+    /// A profile that only fails the next `n` session boots (test
+    /// convenience for the crash-loop breaker).
+    pub fn boot_failures(n: u32) -> Self {
+        FaultProfile { boot_fails: n, ..FaultProfile::default() }
     }
 }
 
@@ -94,11 +115,13 @@ impl FromStr for FaultProfile {
                 profile.seed = v.parse().map_err(|e| format!("bad seed '{v}': {e}"))?;
             } else if let Some(v) = d.strip_prefix("party:") {
                 profile.party = v.parse().map_err(|e| format!("bad party '{v}': {e}"))?;
+            } else if let Some(v) = d.strip_prefix("bootfail:") {
+                profile.boot_fails = v.parse().map_err(|e| format!("bad bootfail '{v}': {e}"))?;
             }
         }
         let mut prg = Prg::new(profile.seed, 0xfa01);
         for d in &directives {
-            if d.starts_with("seed:") || d.starts_with("party:") {
+            if d.starts_with("seed:") || d.starts_with("party:") || d.starts_with("bootfail:") {
                 continue;
             }
             let (head, at) = d
@@ -279,6 +302,20 @@ mod tests {
         for bad in ["drop", "drop@x", "explode@3", "delay:5@1", "seed:abc,drop@1", "drop@?0"] {
             assert!(bad.parse::<FaultProfile>().is_err(), "{bad} should not parse");
         }
+        assert!("bootfail:x".parse::<FaultProfile>().is_err());
+    }
+
+    /// `bootfail:` sets the boot-failure budget without scheduling any
+    /// round-level fault, and composes with the round directives.
+    #[test]
+    fn bootfail_directive_parses() {
+        let p: FaultProfile = "bootfail:3".parse().unwrap();
+        assert_eq!(p.boot_fails, 3);
+        assert!(p.faults.is_empty());
+        let q: FaultProfile = "party:1,bootfail:2,crash@4".parse().unwrap();
+        assert_eq!(q.boot_fails, 2);
+        assert_eq!(q.faults, vec![ScheduledFault { round: 4, kind: FaultKind::Crash }]);
+        assert_eq!(FaultProfile::boot_failures(5).boot_fails, 5);
     }
 
     /// An injected crash is fatal and sticky: the first exchange at the

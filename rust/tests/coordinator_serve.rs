@@ -2,10 +2,12 @@
 //! correctly, batches them, accounts communication, and shuts down
 //! cleanly. Requires artifacts + micronet weights (skips otherwise).
 
-use hummingbird::coordinator::{Coordinator, ServeOptions};
+use hummingbird::coordinator::{Coordinator, LifecycleState, ServeOptions};
+use hummingbird::error::Error;
 use hummingbird::gmw::kernels::BinLayout;
 use hummingbird::hummingbird::PlanSet;
 use hummingbird::model::{Archive, Backend, Dataset, ModelConfig, PlainExecutor};
+use hummingbird::net::fault::{FaultKind, FaultProfile};
 
 const MODEL: &str = "micronet_synth10";
 
@@ -168,4 +170,80 @@ fn serve_with_hummingbird_plan_reduces_bytes() {
         base as f64 / hb as f64 > 2.5,
         "expected >2.5x byte cut through the service: {base} -> {hb}"
     );
+}
+
+/// Bounded admission (DESIGN.md §9): with `--queue-depth 1` and the
+/// session stalled mid-batch (injected delay), the queue holds exactly
+/// one waiting request — the next submission fast-fails with
+/// `Error::Overloaded` (retryable by the client) instead of growing the
+/// queue without bound.
+#[test]
+fn queue_depth_one_rejects_overload_with_stalled_session() {
+    let Some(repo) = ready() else { return };
+    let cfg = ModelConfig::load_named(&repo, MODEL).unwrap();
+    let dataset = Dataset::load(repo.join("artifacts"), &cfg.dataset).unwrap();
+
+    let mut opts = ServeOptions::new(&repo, MODEL);
+    opts.plan = Some(PlanSet::uniform(cfg.relu_groups, 14, 6).unwrap());
+    opts.queue_depth = 1;
+    // Tiny fill window so request A is batched alone, then the injected
+    // delay stalls its batch long enough to pile up B (queued) and C
+    // (rejected).
+    opts.batch_timeout = std::time::Duration::from_millis(1);
+    opts.fault_profile = Some(FaultProfile::single(1, 0, FaultKind::Delay(1500)));
+    let svc = Coordinator::start(opts).unwrap();
+
+    let rx_a = svc.infer_async(dataset.test.batch(0, 1).to_vec()).unwrap();
+    // Give the batcher time to dequeue A and block on the stalled batch.
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    let rx_b = svc.infer_async(dataset.test.batch(1, 2).to_vec()).unwrap();
+    let err = svc.infer_async(dataset.test.batch(2, 3).to_vec()).unwrap_err();
+    assert!(matches!(err, Error::Overloaded(_)), "expected Overloaded, got {err}");
+    assert!(err.client_should_retry(), "queue-full must invite a client retry");
+
+    // The stall is a latency blip, not a fault: A and B still complete.
+    rx_a.recv().unwrap().unwrap();
+    rx_b.recv().unwrap().unwrap();
+    let snap = svc.shutdown_with_deadline(std::time::Duration::from_secs(30));
+    assert_eq!(snap.admission.shed_queue_full, 1);
+    assert_eq!(snap.admission.admitted, 2);
+    assert!(snap.balanced(), "identity must hold: {:?}", snap.admission);
+    assert_eq!(snap.state, LifecycleState::Stopped);
+    assert_eq!(snap.live_party_threads, 0);
+}
+
+/// Deadline shedding (DESIGN.md §9): a request whose
+/// `--request-timeout-ms` deadline passed while it sat in the queue is
+/// answered `Error::Deadline` at dequeue and never occupies a batch slot
+/// (exactly one batch runs — the shed request spawns none).
+#[test]
+fn expired_queued_request_is_shed_without_a_batch_slot() {
+    let Some(repo) = ready() else { return };
+    let cfg = ModelConfig::load_named(&repo, MODEL).unwrap();
+    let dataset = Dataset::load(repo.join("artifacts"), &cfg.dataset).unwrap();
+
+    let mut opts = ServeOptions::new(&repo, MODEL);
+    opts.plan = Some(PlanSet::uniform(cfg.relu_groups, 14, 6).unwrap());
+    opts.batch_timeout = std::time::Duration::from_millis(1);
+    // B's 50 ms deadline expires while A's batch is stalled for 1.5 s.
+    opts.request_timeout = Some(std::time::Duration::from_millis(50));
+    opts.fault_profile = Some(FaultProfile::single(1, 0, FaultKind::Delay(1500)));
+    let svc = Coordinator::start(opts).unwrap();
+
+    let rx_a = svc.infer_async(dataset.test.batch(0, 1).to_vec()).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    let rx_b = svc.infer_async(dataset.test.batch(1, 2).to_vec()).unwrap();
+
+    // A was dispatched before its deadline and completes despite the
+    // blip; B expired in the queue and is shed at dequeue.
+    rx_a.recv().unwrap().unwrap();
+    let err = rx_b.recv().unwrap().unwrap_err();
+    assert!(matches!(err, Error::Deadline(_)), "expected Deadline, got {err}");
+
+    let snap = svc.shutdown_with_deadline(std::time::Duration::from_secs(30));
+    assert_eq!(snap.admission.shed_deadline, 1);
+    assert_eq!(snap.batches_done, 1, "the shed request must not spawn a batch");
+    assert_eq!(snap.admission.completed, 1);
+    assert!(snap.balanced(), "identity must hold: {:?}", snap.admission);
+    assert_eq!(snap.state, LifecycleState::Stopped);
 }

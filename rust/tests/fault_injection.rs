@@ -20,8 +20,9 @@
 use std::time::Duration;
 
 use hummingbird::beaver::schedule::TripleSchedule;
-use hummingbird::coordinator::{Coordinator, ServeOptions};
+use hummingbird::coordinator::{ClockHandle, Coordinator, LifecycleState, ServeOptions};
 use hummingbird::crypto::prg::Prg;
+use hummingbird::error::Error;
 use hummingbird::gmw::kernels::{BitslicedKernels, KernelBackend, RustKernels};
 use hummingbird::gmw::{GmwParty, ReluPlan};
 use hummingbird::hummingbird::PlanSet;
@@ -250,4 +251,69 @@ fn party_crash_fails_one_job_then_serves_again() {
     assert_eq!(snap.faults.sessions_restarted, 1, "exactly one respawn");
     assert_eq!(snap.batches_done, 1, "only the successful batch counts");
     svc.shutdown();
+}
+
+/// Poll (real time) until the coordinator reaches `want` — the batcher
+/// notices mock-clock advances within a scheduling quantum.
+fn wait_for_state(svc: &Coordinator, want: LifecycleState) {
+    let t0 = std::time::Instant::now();
+    while svc.metrics.state() != want {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "timed out waiting for {want}, still {}",
+            svc.metrics.state()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Crash-loop breaker (DESIGN.md §9), with all breaker timing pinned by
+/// an injected mock clock — no wall-clock sleeps decide the outcome, so
+/// the scenario is deterministic under parallel test threads:
+/// `max_restarts` consecutive boot failures trip the coordinator into
+/// `Degraded` (admission answers `Overloaded` immediately), background
+/// probes retry on capped backoff as the test advances the clock, and
+/// the first successful boot returns the service to `Serving`.
+#[test]
+fn crash_loop_trips_breaker_then_recovers() {
+    let Some(repo) = ready() else { return };
+    let cfg = ModelConfig::load_named(&repo, MODEL).unwrap();
+    let dataset = Dataset::load(repo.join("artifacts"), &cfg.dataset).unwrap();
+
+    let mut opts = ServeOptions::new(&repo, MODEL);
+    opts.plan = Some(PlanSet::baseline(cfg.relu_groups));
+    opts.max_restarts = 3;
+    // 3 boot failures trip the breaker; 2 more fail the first probes; the
+    // probe after that boots for real.
+    opts.fault_profile = Some(FaultProfile::boot_failures(5));
+    let (clock, mock) = ClockHandle::mock();
+    opts.clock = clock;
+    let svc = Coordinator::start(opts).unwrap();
+
+    // Backoffs run on the mock clock (sleep = yield), so the batcher
+    // burns through its restart budget without any wall-clock wait.
+    wait_for_state(&svc, LifecycleState::Degraded);
+    let err = svc.infer(dataset.test.batch(0, 1).to_vec()).unwrap_err();
+    assert!(matches!(err, Error::Overloaded(_)), "degraded must answer Overloaded: {err}");
+    assert!(err.client_should_retry());
+
+    // Probes fire only as the test moves time past their capped backoff;
+    // once the bootfail budget is spent, the next probe boots and closes
+    // the breaker.
+    let t0 = std::time::Instant::now();
+    while svc.metrics.state() != LifecycleState::Serving {
+        assert!(t0.elapsed() < Duration::from_secs(30), "probe never recovered");
+        mock.advance(Duration::from_millis(500));
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let ok = svc.infer(dataset.test.batch(0, 1).to_vec()).unwrap();
+    assert_eq!(ok.logits.len(), cfg.num_classes);
+
+    let snap = svc.metrics.snapshot();
+    assert!(snap.admission.rejected_degraded >= 1, "the degraded refusal must be counted");
+    assert_eq!(snap.faults.sessions_restarted, 1, "only the probe boot counts as a restart");
+    let fin = svc.shutdown_with_deadline(Duration::from_secs(30));
+    assert_eq!(fin.state, LifecycleState::Stopped);
+    assert_eq!(fin.live_party_threads, 0);
+    assert!(fin.balanced(), "identity must hold: {:?}", fin.admission);
 }

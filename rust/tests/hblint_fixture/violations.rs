@@ -96,6 +96,21 @@ pub fn clippy_walled(v: Option<u64>) -> u64 {
     v.unwrap()
 }
 
+// --- Rule M: every *Counters group must be a MetricsSnapshot field --------
+
+pub struct OrphanCounters { // EXPECT: M
+    pub lost: u64,
+}
+
+// Negative control: surfaced in the snapshot block below.
+pub struct GoodCounters {
+    pub seen: u64,
+}
+
+pub struct MetricsSnapshot {
+    pub good: GoodCounters,
+}
+
 #[cfg(test)]
 mod tests {
     #[test]

@@ -1,0 +1,307 @@
+//! Chaos soak for the overload-safe serving core (DESIGN.md §9).
+//!
+//! Pushes thousands of requests through the coordinator at deliberate
+//! overload while a seeded, randomized [`FaultProfile`] injects delays,
+//! link drops and crashes, then pins the service-level invariants:
+//!
+//! * the service never wedges (every response arrives within a generous
+//!   bound, enforced with `recv_timeout`);
+//! * the admission accounting identity is *exact* — every client-visible
+//!   outcome is cross-checked against the coordinator's own counters and
+//!   `MetricsSnapshot::balanced()` holds;
+//! * memory stays bounded — the global thread-pool worker count plateaus
+//!   after warm-up and every party thread is reaped by shutdown
+//!   (`live_party_threads == 0`);
+//! * a forced crash loop reaches `Degraded` within the restart budget and
+//!   recovers to `Serving`, with all breaker timing on a mock clock;
+//! * completed results are bit-identical across `--layout lane|bitsliced`
+//!   × `--prefetch on|off` under the same fault schedule.
+//!
+//! Requires artifacts + micronet weights (skips otherwise). The request
+//! volume scales with `HB_SOAK_REQUESTS` (default 2000; CI smoke sets
+//! 200).
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::Duration;
+
+use hummingbird::coordinator::{
+    ClockHandle, Coordinator, InferenceResult, LifecycleState, ServeOptions,
+};
+use hummingbird::error::Error;
+use hummingbird::gmw::kernels::BinLayout;
+use hummingbird::hummingbird::PlanSet;
+use hummingbird::model::{Dataset, ModelConfig};
+use hummingbird::net::fault::FaultProfile;
+use hummingbird::util::threadpool::pool_workers_spawned;
+
+const MODEL: &str = "micronet_synth10";
+
+/// An in-flight response handle, as returned by `Coordinator::infer_async`.
+type Rx = Receiver<hummingbird::Result<InferenceResult>>;
+
+/// Answering a single request can legitimately take a while under
+/// injected delays and respawn backoff; anything beyond this is a wedge.
+const WEDGE: Duration = Duration::from_secs(120);
+
+fn ready() -> Option<std::path::PathBuf> {
+    let repo = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).to_path_buf();
+    if repo.join("artifacts/manifest.json").exists()
+        && repo.join(format!("artifacts/weights/{MODEL}.json")).exists()
+    {
+        Some(repo)
+    } else {
+        eprintln!("skipping: artifacts/weights missing");
+        None
+    }
+}
+
+/// Total request volume for the soak (split across seeded runs).
+fn soak_requests() -> usize {
+    std::env::var("HB_SOAK_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 8)
+        .unwrap_or(2000)
+}
+
+/// Client-side tally of terminal request dispositions, mirrored 1:1
+/// against the coordinator's [`AdmissionCounters`] at the end of a run.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+struct ClientTally {
+    admitted: u64,
+    shed_at_admission: u64,
+    completed: u64,
+    deadline: u64,
+    failed: u64,
+}
+
+/// Settle one in-flight response, classifying its outcome; panics (wedge)
+/// if nothing arrives within [`WEDGE`].
+fn settle(rx: Rx, tally: &mut ClientTally) {
+    match rx.recv_timeout(WEDGE) {
+        Ok(Ok(_)) => tally.completed += 1,
+        Ok(Err(Error::Deadline(_))) => tally.deadline += 1,
+        Ok(Err(_)) => tally.failed += 1,
+        Err(RecvTimeoutError::Timeout) => panic!("coordinator wedged: no response in {WEDGE:?}"),
+        Err(RecvTimeoutError::Disconnected) => panic!("response channel dropped unanswered"),
+    }
+}
+
+/// One seeded overload run: submit `n` requests back-to-back against a
+/// tiny queue; every queue-full rejection settles the oldest in-flight
+/// request, so submission is paced by completion while the queue stays
+/// saturated (sheds are guaranteed, and so is progress).
+fn overload_run(repo: &std::path::Path, dataset: &Dataset, seed: u64, n: usize) -> ClientTally {
+    let cfg = ModelConfig::load_named(repo, MODEL).unwrap();
+    let mut opts = ServeOptions::new(repo, MODEL);
+    opts.plan = Some(PlanSet::uniform(cfg.relu_groups, 14, 6).unwrap());
+    opts.queue_depth = 4;
+    opts.batch_timeout = Duration::from_millis(2);
+    // Generous deadline: exercises the stamping/shedding path on every
+    // request without (normally) expiring anything.
+    opts.request_timeout = Some(Duration::from_secs(60));
+    let profile = format!("party:1,seed:{seed},delay:2ms@?12,drop@?30,crash@?60");
+    opts.fault_profile = Some(profile.parse::<FaultProfile>().unwrap());
+    let svc = Coordinator::start(opts).unwrap();
+
+    let mut tally = ClientTally::default();
+    let mut outstanding: VecDeque<Rx> = VecDeque::new();
+    for i in 0..n {
+        let sample = i % 8;
+        match svc.infer_async(dataset.test.batch(sample, sample + 1).to_vec()) {
+            Ok(rx) => {
+                tally.admitted += 1;
+                outstanding.push_back(rx);
+            }
+            Err(e) if matches!(e, Error::Overloaded(_)) => {
+                assert!(e.client_should_retry());
+                tally.shed_at_admission += 1;
+                // Make room before the next submission.
+                if let Some(rx) = outstanding.pop_front() {
+                    settle(rx, &mut tally);
+                } else {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            Err(e) => panic!("unexpected admission failure: {e}"),
+        }
+    }
+    for rx in outstanding {
+        settle(rx, &mut tally);
+    }
+
+    // Every request was answered before shutdown, so the drain finds an
+    // empty queue and the counters must mirror the client tally exactly.
+    let snap = svc.shutdown_with_deadline(Duration::from_secs(30));
+    let a = snap.admission;
+    assert_eq!(a.admitted, tally.admitted, "admitted mismatch: {a:?} vs {tally:?}");
+    assert_eq!(
+        a.shed_queue_full + a.rejected_degraded,
+        tally.shed_at_admission,
+        "shed mismatch: {a:?} vs {tally:?}"
+    );
+    assert_eq!(a.completed, tally.completed, "completed mismatch: {a:?} vs {tally:?}");
+    assert_eq!(a.shed_deadline, tally.deadline, "deadline mismatch: {a:?} vs {tally:?}");
+    assert_eq!(a.failed_requests, tally.failed, "failure mismatch: {a:?} vs {tally:?}");
+    assert_eq!(a.drained, 0, "nothing was left to drain: {a:?}");
+    assert!(snap.balanced(), "identity must hold: {a:?}");
+    assert_eq!(snap.state, LifecycleState::Stopped);
+    assert_eq!(snap.live_party_threads, 0, "orphaned party threads after drain");
+    tally
+}
+
+/// Tentpole soak: seeded randomized fault schedules at deliberate
+/// overload — never wedges, exact accounting, bounded memory, clean
+/// drains.
+#[test]
+fn soak_identity_under_randomized_faults() {
+    let Some(repo) = ready() else { return };
+    let cfg = ModelConfig::load_named(&repo, MODEL).unwrap();
+    let dataset = Dataset::load(repo.join("artifacts"), &cfg.dataset).unwrap();
+
+    let total = soak_requests();
+    let seeds: [u64; 2] = [7, 1312];
+    let per_run = (total / seeds.len()).max(8);
+
+    let mut grand = ClientTally::default();
+    let mut workers_after_warmup = 0usize;
+    for (k, seed) in seeds.iter().enumerate() {
+        let t = overload_run(&repo, &dataset, *seed, per_run);
+        assert!(t.completed > 0, "seed {seed}: overload starved all requests: {t:?}");
+        grand.completed += t.completed;
+        grand.shed_at_admission += t.shed_at_admission;
+        if k == 0 {
+            // The global pool is initialized by the first run; it must
+            // not grow afterwards (memory plateau).
+            workers_after_warmup = pool_workers_spawned();
+            assert!(workers_after_warmup > 0, "pool never initialized");
+        }
+    }
+    assert_eq!(
+        pool_workers_spawned(),
+        workers_after_warmup,
+        "thread-pool grew after warm-up: memory is not plateauing"
+    );
+    assert!(
+        grand.shed_at_admission > 0,
+        "the soak never overloaded the queue — not a meaningful test: {grand:?}"
+    );
+    eprintln!("soak: {grand:?} over {} requests", per_run * seeds.len());
+}
+
+/// Forced crash loop through the soak harness: boot failures exhaust the
+/// restart budget within `max_restarts`, the coordinator degrades (and
+/// says so to clients), the background probe — driven entirely by a mock
+/// clock — revives it, and a post-recovery burst completes cleanly.
+#[test]
+fn soak_crash_loop_reaches_degraded_and_recovers() {
+    let Some(repo) = ready() else { return };
+    let cfg = ModelConfig::load_named(&repo, MODEL).unwrap();
+    let dataset = Dataset::load(repo.join("artifacts"), &cfg.dataset).unwrap();
+
+    let mut opts = ServeOptions::new(&repo, MODEL);
+    opts.plan = Some(PlanSet::uniform(cfg.relu_groups, 14, 6).unwrap());
+    opts.max_restarts = 4;
+    // 4 failures trip the breaker, the next 3 fail the probes, then boot.
+    opts.fault_profile = Some(FaultProfile::boot_failures(7));
+    let (clock, mock) = ClockHandle::mock();
+    opts.clock = clock;
+    let svc = Coordinator::start(opts).unwrap();
+
+    let t0 = std::time::Instant::now();
+    while svc.metrics.state() != LifecycleState::Degraded {
+        assert!(t0.elapsed() < WEDGE, "breaker never tripped");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let err = svc.infer(dataset.test.batch(0, 1).to_vec()).unwrap_err();
+    assert!(matches!(err, Error::Overloaded(_)), "degraded must shed, got {err}");
+
+    while svc.metrics.state() != LifecycleState::Serving {
+        assert!(t0.elapsed() < WEDGE, "probe never recovered the service");
+        mock.advance(Duration::from_millis(500));
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let burst = soak_requests().min(24);
+    let mut rxs = Vec::new();
+    for i in 0..burst {
+        let sample = i % 8;
+        rxs.push(svc.infer_async(dataset.test.batch(sample, sample + 1).to_vec()).unwrap());
+    }
+    for rx in rxs {
+        let r = rx.recv_timeout(WEDGE).unwrap().unwrap();
+        assert_eq!(r.logits.len(), cfg.num_classes);
+    }
+
+    let snap = svc.shutdown_with_deadline(Duration::from_secs(30));
+    assert!(snap.admission.rejected_degraded >= 1, "degraded shed uncounted: {snap:?}");
+    assert_eq!(snap.admission.completed, burst as u64);
+    assert!(snap.balanced(), "identity must hold: {:?}", snap.admission);
+    assert_eq!(snap.state, LifecycleState::Stopped);
+    assert_eq!(snap.live_party_threads, 0);
+}
+
+/// Completed predictions are bit-identical across `--layout` ×
+/// `--prefetch` under the same seeded fault schedule. Faulted batches may
+/// differ per combo (a drop fails whichever requests shared the batch),
+/// so the comparison runs over the intersection of completed indices.
+#[test]
+fn soak_bit_identity_across_layout_and_prefetch() {
+    let Some(repo) = ready() else { return };
+    let cfg = ModelConfig::load_named(&repo, MODEL).unwrap();
+    let dataset = Dataset::load(repo.join("artifacts"), &cfg.dataset).unwrap();
+    let n = (soak_requests() / 50).clamp(12, 48);
+
+    let run = |layout: BinLayout, prefetch: bool| -> BTreeMap<usize, usize> {
+        let mut opts = ServeOptions::new(&repo, MODEL);
+        opts.plan = Some(PlanSet::uniform(cfg.relu_groups, 14, 6).unwrap());
+        opts.layout = layout;
+        opts.prefetch = prefetch;
+        // No admission pressure here: the subject is result identity.
+        opts.queue_depth = n.max(1);
+        opts.fault_profile =
+            Some("party:1,seed:11,delay:2ms@?10,drop@?25".parse::<FaultProfile>().unwrap());
+        let svc = Coordinator::start(opts).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            let sample = i % 8;
+            rxs.push((i, svc.infer_async(dataset.test.batch(sample, sample + 1).to_vec())));
+        }
+        let mut preds = BTreeMap::new();
+        for (i, rx) in rxs {
+            if let Ok(Ok(r)) = rx.unwrap().recv_timeout(WEDGE) {
+                preds.insert(i, r.pred);
+            }
+        }
+        let snap = svc.shutdown_with_deadline(Duration::from_secs(30));
+        assert!(snap.balanced(), "identity must hold: {:?}", snap.admission);
+        preds
+    };
+
+    let combos = [
+        (BinLayout::LanePerU64, false),
+        (BinLayout::LanePerU64, true),
+        (BinLayout::Bitsliced, false),
+        (BinLayout::Bitsliced, true),
+    ];
+    let results: Vec<BTreeMap<usize, usize>> = combos.iter().map(|&(l, p)| run(l, p)).collect();
+
+    // Intersection of indices completed by every combo.
+    let common: Vec<usize> = results[0]
+        .keys()
+        .copied()
+        .filter(|i| results.iter().all(|m| m.contains_key(i)))
+        .collect();
+    assert!(
+        common.len() >= n / 2,
+        "too few commonly-completed requests ({} of {n}) to compare",
+        common.len()
+    );
+    for (k, m) in results.iter().enumerate().skip(1) {
+        for &i in &common {
+            let want = results[0][&i];
+            assert_eq!(m[&i], want, "request {i}: {:?} vs {:?}", combos[k], combos[0]);
+        }
+    }
+}
