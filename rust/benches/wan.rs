@@ -1,0 +1,127 @@
+//! WAN round-scheduling benchmark (DESIGN.md §10): serial vs overlapped
+//! chunked DReLU over a real-clock [`SimTransport`] at RTT ∈ {1, 20, 50} ms.
+//!
+//! The success metric for the overlapped scheduler: at 50 ms RTT the
+//! overlapped end-to-end time should approach `max(compute, wire)` (within
+//! ~1.15×), while the serial schedule pays ≈ their sum — every one of its
+//! `rounds` pays a full one-way latency, versus once per lockstep *wave*
+//! for the overlapped schedule. Rows land in `BENCH_wan.json` as
+//! `wan/rtt<ms>/{serial,overlapped}_s` plus the shared
+//! `wan/{compute_s,rounds,waves,bytes}` scalars; see benchmarks/README.md.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use hummingbird::crypto::prg::Prg;
+use hummingbird::gmw::{GmwParty, ReluPlan};
+use hummingbird::net::accounting::CommTrace;
+use hummingbird::net::local::hub;
+use hummingbird::net::profile::NetworkProfile;
+use hummingbird::net::sim::SimTransport;
+use hummingbird::net::Transport;
+use hummingbird::sharing::share_arith;
+use hummingbird::util::benchkit::Bench;
+
+const PARTIES: usize = 2;
+const CHUNKS: usize = 8;
+const SEED: u64 = 0x5117;
+
+fn drive<T: Transport + 'static>(t: T, share: &[u64], plan: ReluPlan, overlap: bool) {
+    let mut party = GmwParty::new(t, SEED);
+    party.drelu_chunked(share, plan, CHUNKS, overlap).unwrap();
+}
+
+/// One 2-party chunked DReLU run; endpoints are wrapped in a real-clock
+/// [`SimTransport`] when `profile` is set. Returns wall seconds and
+/// party 0's trace.
+fn run(
+    xs: &[Vec<u64>],
+    plan: ReluPlan,
+    profile: Option<&NetworkProfile>,
+    overlap: bool,
+) -> (f64, Arc<CommTrace>) {
+    let mut ts = hub(PARTIES);
+    let t1 = ts.pop().unwrap();
+    let t0 = ts.pop().unwrap();
+    let trace = t0.trace();
+    let start = Instant::now();
+    std::thread::scope(|s| {
+        for (t, share) in [t0, t1].into_iter().zip(xs) {
+            s.spawn(move || match profile {
+                Some(np) => drive(SimTransport::new(t, np.clone()), share, plan, overlap),
+                None => drive(t, share, plan, overlap),
+            });
+        }
+    });
+    (start.elapsed().as_secs_f64(), trace)
+}
+
+fn main() {
+    let mut bench = Bench::new();
+    let quick = std::env::var("HB_BENCH_QUICK").ok().as_deref() == Some("1");
+    let n = if quick { 4096 } else { 16384 };
+    let plan = ReluPlan::new(12, 4).unwrap(); // w = 8 window bits
+    let mut prg = Prg::new(3, 3);
+    let x: Vec<u64> = (0..n).map(|_| prg.next_u64() % (1 << 16)).collect();
+    let xs = share_arith(&mut prg, &x, PARTIES);
+
+    // Compute-only floor: the same chunked schedule over the raw
+    // in-process hub (best of 3 to shed scheduler noise). The trace gives
+    // the exact round/byte counts for the analytic wire bounds.
+    let mut compute_s = f64::MAX;
+    let (s0, trace) = run(&xs, plan, None, false);
+    compute_s = compute_s.min(s0);
+    for _ in 0..2 {
+        let (s, _) = run(&xs, plan, None, false);
+        compute_s = compute_s.min(s);
+    }
+    let rounds = trace.total_rounds();
+    let bytes = trace.total_bytes();
+    // The overlapped schedule runs the serial per-chunk round program in
+    // lockstep waves across all chunks: one latency per wave, not per round.
+    let waves = rounds / CHUNKS as u64;
+    bench.note_metric("wan/rounds", rounds as f64);
+    bench.note_metric("wan/waves", waves as f64);
+    bench.note_metric("wan/bytes", bytes as f64);
+    bench.note_metric("wan/compute_s", compute_s);
+
+    println!();
+    println!(
+        "chunked DReLU, n={n}, chunks={CHUNKS}, w={}, {rounds} rounds in {waves} waves",
+        plan.k - plan.m
+    );
+    println!(
+        "| RTT ms | serial | overlapped | wire(serial) | wire(overlap) | \
+         overlap/max | serial/max |"
+    );
+    println!(
+        "|-------:|-------:|-----------:|-------------:|--------------:|\
+         ------------:|-----------:|"
+    );
+    for rtt_ms in [1u64, 20, 50] {
+        // One-way latency = RTT/2 (see net::profile's latency convention);
+        // 352 Mbps is the paper's WAN bandwidth.
+        let np =
+            NetworkProfile::new(&format!("rtt{rtt_ms}ms"), rtt_ms as f64 * 1e-3 / 2.0, 352e6);
+        let tx = bytes as f64 * 8.0 / np.bandwidth_bps;
+        let wire_serial = rounds as f64 * np.latency_s + tx;
+        let wire_overlap = waves as f64 * np.latency_s + tx;
+        let (serial_s, _) = run(&xs, plan, Some(&np), false);
+        let (overlap_s, _) = run(&xs, plan, Some(&np), true);
+        // The §10 bound: overlapped e2e should approach max(compute, wire);
+        // serial pays ≈ compute + wire_serial.
+        let bound = compute_s.max(wire_overlap);
+        let overlap_ratio = overlap_s / bound;
+        let serial_ratio = serial_s / bound;
+        println!(
+            "| {rtt_ms:>6} | {serial_s:>6.3} | {overlap_s:>10.3} | {wire_serial:>12.3} | \
+             {wire_overlap:>13.3} | {overlap_ratio:>11.2} | {serial_ratio:>10.2} |"
+        );
+        bench.note_metric(&format!("wan/rtt{rtt_ms}/serial_s"), serial_s);
+        bench.note_metric(&format!("wan/rtt{rtt_ms}/overlapped_s"), overlap_s);
+        bench.note_metric(&format!("wan/rtt{rtt_ms}/wire_overlap_s"), wire_overlap);
+        bench.note_metric(&format!("wan/rtt{rtt_ms}/overlap_over_max"), overlap_ratio);
+    }
+    println!("(target: overlapped <= 1.15 x max(compute, wire) at 50 ms RTT; DESIGN.md §10)");
+    bench.dump_json("wan");
+}

@@ -214,9 +214,10 @@ pub fn rule_hot_alloc(rel: &str, s: &Stripped, tmask: &[bool]) -> Vec<Finding> {
 }
 
 /// Rule `T`: every `exchange_all_into` implementation must either record
-/// into the session's `CommTrace` (`.record(`) or visibly delegate to an
-/// inner transport (`.exchange_all_into`), so wire-byte accounting can
-/// never silently drop a transport.
+/// into the session's `CommTrace` (`.record(`) or visibly delegate — to an
+/// inner transport (`.exchange_all_into`) or to its own split-phase send
+/// half (`.exchange_begin`, which records; see DESIGN.md §10) — so
+/// wire-byte accounting can never silently drop a transport.
 pub fn rule_comm_trace(rel: &str, s: &Stripped, tmask: &[bool]) -> Vec<Finding> {
     let mut out = Vec::new();
     for (i, cl) in s.code.iter().enumerate() {
@@ -255,7 +256,10 @@ pub fn rule_comm_trace(rel: &str, s: &Stripped, tmask: &[bool]) -> Vec<Finding> 
         if bodyless {
             continue;
         }
-        if !body.contains(".record(") && !body.contains(".exchange_all_into") {
+        if !body.contains(".record(")
+            && !body.contains(".exchange_all_into")
+            && !body.contains(".exchange_begin")
+        {
             out.push(Finding {
                 file: rel.to_string(),
                 line: i + 1,
@@ -408,6 +412,12 @@ mod tests {
         assert!(rule_comm_trace("src/net/x.rs", &s, &t).is_empty());
         let del = "fn exchange_all_into(&mut self) {\n    self.inner.exchange_all_into(p)\n}\n";
         let s = lines(del);
+        let t = test_mod_mask(&s.code);
+        assert!(rule_comm_trace("src/net/x.rs", &s, &t).is_empty());
+        // Split-phase serial form: delegation to the recording send half.
+        let split = "fn exchange_all_into(&mut self) {\n    self.exchange_begin(p, d)?;\n    \
+                     self.exchange_finish(p, d, r)\n}\n";
+        let s = lines(split);
         let t = test_mod_mask(&s.code);
         assert!(rule_comm_trace("src/net/x.rs", &s, &t).is_empty());
         let bare = "fn exchange_all_into(&mut self) -> Result<()> {\n    Ok(())\n}\n";

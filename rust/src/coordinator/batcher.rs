@@ -25,7 +25,19 @@
 //! lifecycle (`Serving → Degraded → Draining → Stopped`) and the
 //! per-request disposition counters are surfaced by
 //! [`Metrics::snapshot`](super::metrics::Metrics::snapshot).
+//!
+//! # WAN simulation and batch overlap (DESIGN.md §10)
+//!
+//! `--net-profile` wraps every party transport in a
+//! [`SimTransport`] so each protocol round really waits out its modeled
+//! `latency + bytes/bandwidth` wire time; `--overlap` keeps **two**
+//! batches in flight — batch k+1 is filled, encoded, shared and
+//! dispatched while batch k's latency-bound binary rounds are still on
+//! the (simulated) wire, so serving throughput tracks
+//! `max(compute, wire)` instead of their sum. Results are bit-identical
+//! with overlap on or off: the schedule changes, the protocol does not.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
     TrySendError,
@@ -43,6 +55,8 @@ use crate::model::{Archive, ExecBreakdown, ModelConfig, PlainExecutor, ShareExec
 use crate::net::accounting::{CommTrace, Phase};
 use crate::net::fault::{FaultProfile, FaultyTransport};
 use crate::net::local::hub_with;
+use crate::net::profile::NetworkProfile;
+use crate::net::sim::SimTransport;
 use crate::net::{NetConfig, Transport};
 use crate::ring::FixedPoint;
 use crate::runtime::{Manifest, Runtime, XlaKernels};
@@ -123,6 +137,18 @@ pub struct ServeOptions {
     /// so respawn-backoff timing is deterministic under parallel test
     /// threads.
     pub clock: ClockHandle,
+    /// Simulated WAN link (`--net-profile`, DESIGN.md §10): wrap every
+    /// party transport in a [`SimTransport`] so each protocol round
+    /// really waits out its modeled `latency + bytes/bandwidth` wire
+    /// time on the monotonic clock. `None` = plain in-process timing.
+    /// Results and wire bytes are bit-identical either way; only time
+    /// changes.
+    pub net_profile: Option<NetworkProfile>,
+    /// Pipelined serving (`--overlap on|off`, DESIGN.md §10): keep two
+    /// batches in flight so batch k+1's fill/encode/share/dispatch
+    /// overlaps batch k's latency-bound protocol rounds. Off = collect
+    /// each batch before dispatching the next (the serial baseline).
+    pub overlap: bool,
 }
 
 impl ServeOptions {
@@ -145,6 +171,8 @@ impl ServeOptions {
             max_restarts: 5,
             restart_window: Duration::from_secs(60),
             clock: ClockHandle::monotonic(),
+            net_profile: None,
+            overlap: false,
         }
     }
 }
@@ -217,6 +245,9 @@ struct SessionSpec {
     net: NetConfig,
     /// Taken by the first spawn: respawned sessions always run clean.
     fault: Option<FaultProfile>,
+    /// Simulated WAN link (DESIGN.md §10): every incarnation's party
+    /// transports are wrapped in a [`SimTransport`] pricing this profile.
+    net_profile: Option<NetworkProfile>,
     /// Injected boot failures still owed (`bootfail:N` in the fault
     /// profile): consumed one per spawn attempt, *before* the round-level
     /// faults are taken, so the crash-loop breaker can be exercised
@@ -262,14 +293,18 @@ fn spawn_session(spec: &mut SessionSpec, metrics: &Arc<Metrics>) -> Result<Sessi
         let threads = resolve_threads(spec.threads, spec.parties);
         let prefetch = spec.prefetch;
         let fault = fault.clone();
+        let profile = spec.net_profile.clone();
         // The guard decrements Metrics::live_party_threads on any exit,
         // panics included (the soak's zero-orphans assertion reads it).
         let guard = metrics.party_thread_guard();
         handles.push(std::thread::spawn(move || {
             let _live = guard;
-            match fault {
-                Some(profile) => party_main(
-                    FaultyTransport::new(t, &profile),
+            // `--net-profile` wraps the hub endpoint in a SimTransport
+            // (DESIGN.md §10); an injected fault profile wraps outermost
+            // so faults are observed at simulated-WAN timing.
+            match (fault, profile) {
+                (Some(fp), Some(np)) => party_main(
+                    FaultyTransport::new(SimTransport::new(t, np), &fp),
                     cfg,
                     weights,
                     root,
@@ -283,7 +318,37 @@ fn spawn_session(spec: &mut SessionSpec, metrics: &Arc<Metrics>) -> Result<Sessi
                     threads,
                     prefetch,
                 ),
-                None => party_main(
+                (Some(fp), None) => party_main(
+                    FaultyTransport::new(t, &fp),
+                    cfg,
+                    weights,
+                    root,
+                    model_art,
+                    plans,
+                    jrx,
+                    out_tx,
+                    seed,
+                    backend,
+                    layout,
+                    threads,
+                    prefetch,
+                ),
+                (None, Some(np)) => party_main(
+                    SimTransport::new(t, np),
+                    cfg,
+                    weights,
+                    root,
+                    model_art,
+                    plans,
+                    jrx,
+                    out_tx,
+                    seed,
+                    backend,
+                    layout,
+                    threads,
+                    prefetch,
+                ),
+                (None, None) => party_main(
                     t, cfg, weights, root, model_art, plans, jrx, out_tx, seed, backend, layout,
                     threads, prefetch,
                 ),
@@ -340,6 +405,7 @@ impl Coordinator {
             prefetch: opts.prefetch,
             net: opts.net,
             fault: opts.fault_profile.clone(),
+            net_profile: opts.net_profile.clone(),
             boot_fails,
             trace: Arc::clone(&trace),
         };
@@ -355,9 +421,11 @@ impl Coordinator {
         let timeout = opts.batch_timeout;
         let trace2 = Arc::clone(&trace);
         let breaker = RestartBreaker::new(opts.max_restarts, opts.restart_window, opts.clock);
+        let overlap = opts.overlap;
         let batcher = std::thread::spawn(move || {
             batcher_main(
                 req_rx, spec, m2, fx, input_shape, classes, batch, timeout, trace2, breaker,
+                overlap,
             );
         });
 
@@ -706,6 +774,224 @@ fn drain_expired(metrics: &Metrics) -> bool {
     metrics.drain_deadline().is_some_and(|dd| Instant::now() >= dd)
 }
 
+/// One dispatched batch awaiting its output shares (DESIGN.md §10).
+struct InFlight {
+    reqs: Vec<Request>,
+    t0: Instant,
+}
+
+/// Answer a batch that can no longer be served (its session died while it
+/// was queued behind an earlier batch's fault), keeping the §9 request
+/// disposition identity: one failed job, `reqs.len()` failed requests.
+fn fail_batch(fly: InFlight, metrics: &Metrics) {
+    metrics.record_failed_batch(fly.reqs.len() as u64, false);
+    for r in fly.reqs {
+        let _ = r.resp.send(Err(Error::Runtime("inference failed: party session is down".into())));
+    }
+}
+
+/// Force-stop path (§9): in-flight batches past the drain deadline are
+/// answered `Unavailable` and counted `drained`, like queued requests.
+fn drain_unserved_inflight(inflight: &mut VecDeque<InFlight>, metrics: &Metrics) {
+    let mut n = 0u64;
+    while let Some(fly) = inflight.pop_front() {
+        for r in fly.reqs {
+            let _ = r.resp.send(Err(Error::unavailable("drain deadline expired")));
+            n += 1;
+        }
+    }
+    if n > 0 {
+        metrics.record_drained(n);
+    }
+}
+
+/// Collect one in-flight batch's output shares and respond.
+///
+/// Every party sends exactly one message per job, in job order, but the
+/// output channel is shared across parties: with `--overlap` a fast
+/// party's report for batch k+1 can arrive before a slow party's for
+/// batch k, so messages that outrun the batch being collected park in
+/// per-party `carry` queues and are consumed first by the next
+/// collection. On a fault, this batch's requests are answered with the
+/// root cause and counted, and the error is returned so the caller can
+/// retire the session and fail the rest of the pipeline.
+#[allow(clippy::too_many_arguments)]
+fn collect_one(
+    cur: &Session,
+    fly: InFlight,
+    carry: &mut [VecDeque<Result<PartyOut>>],
+    parties: usize,
+    classes: usize,
+    fx: FixedPoint,
+    logits_ring: &mut [u64],
+    metrics: &Metrics,
+    trace: &CommTrace,
+) -> Result<()> {
+    let InFlight { reqs, t0 } = fly;
+    let got = reqs.len();
+    let mut outs: Vec<Option<PartyOut>> = (0..parties).map(|_| None).collect();
+    let mut need = parties;
+    let mut batch_err: Option<Error> = None;
+    'collect: while need > 0 {
+        // Parked messages first: the per-party FIFOs restore job order.
+        let mut progressed = false;
+        for (p, q) in carry.iter_mut().enumerate() {
+            if outs[p].is_none() {
+                if let Some(res) = q.pop_front() {
+                    progressed = true;
+                    match res {
+                        Ok(o) => {
+                            outs[p] = Some(o);
+                            need -= 1;
+                        }
+                        Err(e) => {
+                            batch_err = Some(e);
+                            break 'collect;
+                        }
+                    }
+                }
+            }
+        }
+        if progressed {
+            continue;
+        }
+        // The transports' own deadlines bound how long a faulted session
+        // can take to report, so a plain blocking recv cannot wedge.
+        match cur.out_rx.recv() {
+            Ok((p, res)) => {
+                if outs[p].is_some() {
+                    // Outran this batch: park for the next collection.
+                    carry[p].push_back(res);
+                } else {
+                    match res {
+                        Ok(o) => {
+                            outs[p] = Some(o);
+                            need -= 1;
+                        }
+                        Err(e) => {
+                            batch_err = Some(e);
+                            break;
+                        }
+                    }
+                }
+            }
+            Err(_) => {
+                // All party threads are gone without a report.
+                batch_err = Some(Error::Transport("party session died silently".into()));
+                break;
+            }
+        }
+    }
+    if let Some(root_cause) = batch_err {
+        // Graceful degradation (DESIGN.md §7): this batch failed — answer
+        // its requests with the root cause and count it (one failed job,
+        // `got` failed requests — the §9 identity).
+        metrics.record_failed_batch(got as u64, matches!(root_cause, Error::Timeout(_)));
+        let msg = format!("inference failed: {root_cause}");
+        for r in reqs {
+            let _ = r.resp.send(Err(Error::Runtime(msg.clone())));
+        }
+        return Err(root_cause);
+    }
+    // Party -> client output share movement (Data phase accounting).
+    trace.record(Phase::Data, (logits_ring.len() * 8 * parties) as u64);
+    logits_ring.fill(0);
+    let mut bd = ExecBreakdown::default();
+    let mut outs_n = 0;
+    for o in outs.into_iter().flatten() {
+        for (acc, v) in logits_ring.iter_mut().zip(&o.share) {
+            *acc = acc.wrapping_add(*v);
+        }
+        // Parties run concurrently: the first party's breakdown stands in
+        // for the batch (symmetric parties do symmetric work).
+        if outs_n == 0 {
+            bd = o.breakdown;
+        }
+        outs_n += 1;
+    }
+    let latency = t0.elapsed().as_secs_f64();
+    metrics.record_batch(got, latency, &bd);
+    // Respond.
+    for (i, r) in reqs.into_iter().enumerate() {
+        let row: Vec<f32> = logits_ring[i * classes..(i + 1) * classes]
+            .iter()
+            .map(|v| fx.decode(*v) as f32)
+            .collect();
+        let pred = PlainExecutor::argmax(&row, classes)[0];
+        let wait_s = r.enqueued.elapsed().as_secs_f64();
+        let _ = r.resp.send(Ok(InferenceResult {
+            logits: row,
+            pred,
+            latency_s: wait_s,
+            batch_size: got,
+        }));
+    }
+    Ok(())
+}
+
+/// Pop and settle the oldest in-flight batch. On a collect fault the
+/// pipeline behind it is doomed (the faulted party threads exited), so
+/// fail the remaining in-flight batches, drop parked messages, retire
+/// the session, and consult the crash-loop breaker — the same
+/// degradation path as a serial batch fault (DESIGN.md §7).
+#[allow(clippy::too_many_arguments)]
+fn drain_one(
+    inflight: &mut VecDeque<InFlight>,
+    carry: &mut [VecDeque<Result<PartyOut>>],
+    session: &mut Option<Session>,
+    graveyard: &mut Vec<std::thread::JoinHandle<()>>,
+    spec: &mut SessionSpec,
+    breaker: &mut RestartBreaker,
+    metrics: &Arc<Metrics>,
+    clock: &ClockHandle,
+    next_probe: &mut Duration,
+    parties: usize,
+    classes: usize,
+    fx: FixedPoint,
+    logits_ring: &mut [u64],
+    trace: &CommTrace,
+) {
+    let Some(fly) = inflight.pop_front() else {
+        return;
+    };
+    let Some(cur) = session.as_ref() else {
+        fail_batch(fly, metrics);
+        return;
+    };
+    match collect_one(cur, fly, carry, parties, classes, fx, logits_ring, metrics, trace) {
+        Ok(()) => {
+            // The batch succeeded: the session is healthy, close the breaker.
+            breaker.on_success();
+        }
+        Err(_) => {
+            while let Some(f) = inflight.pop_front() {
+                fail_batch(f, metrics);
+            }
+            for q in carry.iter_mut() {
+                q.clear();
+            }
+            if let Some(s) = session.take() {
+                retire(s, graveyard);
+            }
+            match breaker.on_failure() {
+                BreakerVerdict::Backoff(d) => {
+                    clock.sleep(d);
+                    *session = ensure_session(spec, breaker, metrics, true);
+                    if session.is_none() {
+                        *next_probe = clock.now();
+                    }
+                }
+                BreakerVerdict::Trip => {
+                    if metrics.state() == LifecycleState::Serving {
+                        metrics.set_state(LifecycleState::Degraded);
+                    }
+                    *next_probe = clock.now();
+                }
+            }
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn batcher_main(
     req_rx: Receiver<Request>,
@@ -718,6 +1004,7 @@ fn batcher_main(
     timeout: Duration,
     trace: Arc<CommTrace>,
     mut breaker: RestartBreaker,
+    overlap: bool,
 ) {
     let parties = spec.parties;
     let per_sample = input_shape.0 * input_shape.1 * input_shape.2;
@@ -733,8 +1020,38 @@ fn batcher_main(
     // to the party threads are still fresh vectors — they cross threads).
     let mut x_ring = vec![0u64; batch * per_sample];
     let mut logits_ring = vec![0u64; batch * classes];
+    // Pipelined dispatch (DESIGN.md §10): a FIFO of dispatched batches
+    // awaiting collection. Depth 1 (overlap off) reproduces the serial
+    // dispatch-then-collect schedule; depth 2 lets batch k+1's
+    // fill/encode/share/dispatch overlap batch k's protocol rounds.
+    let depth = if overlap { 2 } else { 1 };
+    let mut inflight: VecDeque<InFlight> = VecDeque::new();
+    // Per-party reorder buffers for the shared output channel (see
+    // `collect_one`). Cleared whenever a session is retired.
+    let mut carry: Vec<VecDeque<Result<PartyOut>>> =
+        (0..parties).map(|_| VecDeque::new()).collect();
     loop {
         reap(&mut graveyard);
+        // Collect until the pipeline has room. Serial mode (depth 1)
+        // settles the previous batch before filling the next window.
+        while session.is_some() && inflight.len() >= depth {
+            drain_one(
+                &mut inflight,
+                &mut carry,
+                &mut session,
+                &mut graveyard,
+                &mut spec,
+                &mut breaker,
+                &metrics,
+                &clock,
+                &mut next_probe,
+                parties,
+                classes,
+                fx,
+                &mut logits_ring,
+                &trace,
+            );
+        }
         // Degraded tick: no session. Answer queued work immediately,
         // probe the boot on the breaker's schedule, honor drain/stop.
         let cur = match session.take() {
@@ -793,6 +1110,7 @@ fn batcher_main(
         while pending.len() < batch {
             let now = Instant::now();
             if drain_expired(&metrics) {
+                drain_unserved_inflight(&mut inflight, &metrics);
                 drain_remaining(&mut pending, &req_rx, &metrics);
                 stop_all(session, graveyard, &metrics);
                 return;
@@ -801,7 +1119,9 @@ fn batcher_main(
                 break;
             }
             let mut wait = if pending.is_empty() {
-                IDLE_POLL
+                // With work in flight, poll briefly so a finished batch is
+                // collected promptly instead of idling a full IDLE_POLL.
+                if inflight.is_empty() { IDLE_POLL } else { DEGRADED_TICK }
             } else {
                 fill_deadline.saturating_duration_since(now)
             };
@@ -821,15 +1141,34 @@ fn batcher_main(
                     pending.push(r);
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    if pending.is_empty() {
+                    if pending.is_empty() && inflight.is_empty() {
                         continue;
                     }
                     break;
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     if pending.is_empty() {
-                        // Graceful shutdown with an empty queue: join the
-                        // party threads and stop.
+                        // Graceful shutdown with an empty queue: settle
+                        // anything still in flight, join the party
+                        // threads and stop.
+                        while !inflight.is_empty() {
+                            drain_one(
+                                &mut inflight,
+                                &mut carry,
+                                &mut session,
+                                &mut graveyard,
+                                &mut spec,
+                                &mut breaker,
+                                &metrics,
+                                &clock,
+                                &mut next_probe,
+                                parties,
+                                classes,
+                                fx,
+                                &mut logits_ring,
+                                &trace,
+                            );
+                        }
                         stop_all(session, graveyard, &metrics);
                         return;
                     }
@@ -855,6 +1194,26 @@ fn batcher_main(
             metrics.record_shed_deadline(expired);
         }
         if pending.is_empty() {
+            // Nothing to dispatch this round: use the gap to settle the
+            // oldest in-flight batch so its clients are answered promptly.
+            if !inflight.is_empty() {
+                drain_one(
+                    &mut inflight,
+                    &mut carry,
+                    &mut session,
+                    &mut graveyard,
+                    &mut spec,
+                    &mut breaker,
+                    &metrics,
+                    &clock,
+                    &mut next_probe,
+                    parties,
+                    classes,
+                    fx,
+                    &mut logits_ring,
+                    &trace,
+                );
+            }
             continue;
         }
         let got = pending.len().min(batch);
@@ -884,43 +1243,20 @@ fn batcher_main(
                 break;
             }
         }
-        // Collect output shares. Every party sends exactly one message per
-        // job — its output share or the fault that ended its session — and
-        // the transports' own deadlines bound how long a faulted session
-        // can take to report, so a plain blocking recv cannot wedge.
-        let mut outs: Vec<Option<PartyOut>> = (0..parties).map(|_| None).collect();
-        if batch_err.is_none() {
-            for _ in 0..parties {
-                match cur.out_rx.recv() {
-                    Ok((p, Ok(o))) => outs[p] = Some(o),
-                    Ok((_, Err(e))) => {
-                        if batch_err.is_none() {
-                            batch_err = Some(e);
-                        }
-                        // Keep draining: the remaining parties will report
-                        // their own (secondary) errors or exit.
-                    }
-                    Err(_) => {
-                        // All party threads are gone without a report.
-                        if batch_err.is_none() {
-                            batch_err =
-                                Some(Error::Transport("party session died silently".into()));
-                        }
-                        break;
-                    }
-                }
-            }
-        }
-
         if let Some(root_cause) = batch_err {
-            // Graceful degradation (DESIGN.md §7): this batch failed —
-            // answer its requests with the root cause, count it (one
-            // failed job, `got` failed requests — the §9 identity),
-            // retire the faulted session, and consult the breaker.
+            // A dispatch failure means the session is gone (DESIGN.md §7):
+            // answer this batch with the root cause, fail everything else
+            // in flight behind it, retire, and consult the breaker.
             metrics.record_failed_batch(got as u64, matches!(root_cause, Error::Timeout(_)));
             let msg = format!("inference failed: {root_cause}");
             for r in reqs {
                 let _ = r.resp.send(Err(Error::Runtime(msg.clone())));
+            }
+            while let Some(f) = inflight.pop_front() {
+                fail_batch(f, &metrics);
+            }
+            for q in carry.iter_mut() {
+                q.clear();
             }
             if let Some(s) = session.take() {
                 retire(s, &mut graveyard);
@@ -942,41 +1278,8 @@ fn batcher_main(
             }
             continue;
         }
-        // The batch succeeded: the session is healthy, close the breaker.
-        breaker.on_success();
-
-        trace.record(Phase::Data, (batch * classes * 8 * parties) as u64);
-        logits_ring.fill(0);
-        let mut bd = ExecBreakdown::default();
-        let mut outs_n = 0;
-        for o in outs.into_iter().flatten() {
-            for (acc, v) in logits_ring.iter_mut().zip(&o.share) {
-                *acc = acc.wrapping_add(*v);
-            }
-            // Parties run concurrently: breakdown = max over parties, but
-            // averaging is close enough for symmetric parties; take party
-            // max via simple max-merge on totals.
-            if outs_n == 0 {
-                bd = o.breakdown;
-            }
-            outs_n += 1;
-        }
-        let latency = t0.elapsed().as_secs_f64();
-        metrics.record_batch(got, latency, &bd);
-        // Respond.
-        for (i, r) in reqs.into_iter().enumerate() {
-            let row: Vec<f32> = logits_ring[i * classes..(i + 1) * classes]
-                .iter()
-                .map(|v| fx.decode(*v) as f32)
-                .collect();
-            let pred = PlainExecutor::argmax(&row, classes)[0];
-            let wait_s = r.enqueued.elapsed().as_secs_f64();
-            let _ = r.resp.send(Ok(InferenceResult {
-                logits: row,
-                pred,
-                latency_s: wait_s,
-                batch_size: got,
-            }));
-        }
+        // Dispatched: collection happens at the top of the loop once the
+        // pipeline is full (immediately with overlap off).
+        inflight.push_back(InFlight { reqs, t0 });
     }
 }

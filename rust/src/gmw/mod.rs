@@ -14,6 +14,11 @@
 //!   baseline; anything else is HummingBird).
 //! * [`GmwParty::mul`] — Beaver multiplication over Z/2^64 (the "Mult"
 //!   phase HummingBird cannot shrink).
+//! * [`pipeline`] — WAN-overlapped chunked drivers
+//!   ([`GmwParty::relu_chunked_into`]): independent chunks' rounds are
+//!   pipelined through the transport's split-phase API so wire latency is
+//!   paid once per round wave instead of once per chunk, bit-identical to
+//!   the serial schedule (DESIGN.md §10).
 //!
 //! Local tensor math is factored behind [`kernels::KernelBackend`] so the
 //! same protocol can run on pure-Rust kernels or on the Pallas-lowered HLO
@@ -107,6 +112,7 @@ pub mod adder;
 pub mod bitsliced;
 pub mod harness;
 pub mod kernels;
+pub mod pipeline;
 
 /// The scratch arena now lives in [`crate::util::arena`] (it also backs the
 /// transport payload pool and the `ShareExecutor` activation pool); this

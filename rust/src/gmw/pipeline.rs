@@ -1,0 +1,779 @@
+//! Overlapped round scheduling for chunked DReLU/ReLU (DESIGN.md §10).
+//!
+//! At WAN latencies the GMW online phase is round-bound: every AND round
+//! pays one propagation delay whether it opens 64 lanes or 64k. The serial
+//! driver evaluates a batch's chunks one after another, so `m` chunks pay
+//! `m ×` the per-chunk round latency. The chunks are *independent*, though
+//! — their rounds can share the wire. This module re-schedules the exact
+//! serial round program in **lockstep waves**: every chunk's round `r` is
+//! begun back-to-back with the split-phase transport API
+//! ([`Transport::exchange_begin`] / `exchange_finish`), so the link
+//! serializes `m` frames once and all `m` chunks share one propagation
+//! window per wave.
+//!
+//! # Bit-identity invariant
+//!
+//! Overlap is a *schedule* change only. Shares, wire bytes and round
+//! counts are bit-identical to the serial schedule (chunk-major loop over
+//! [`GmwParty::relu_into`]); only the trace *ordering* of rounds differs
+//! (wave-major instead of chunk-major). Two mechanisms guarantee it:
+//!
+//! 1. **Pre-drawn randomness in serial order.** All pairwise-PRG reshares
+//!    and dealer correlations (binary triples, daBits, arithmetic triples)
+//!    are drawn up front, instance-major — the exact order the serial
+//!    driver would draw them — and queued per chunk. The lockstep waves
+//!    then consume queued material only, so interleaving cannot permute
+//!    any PRG stream. This is also what keeps [`PrefetchDealer`] schedules
+//!    valid: the dealer stream is consumed in the same order either way.
+//! 2. **The same round program.** The wave loop replays `ks_add`'s exact
+//!    stage structure ([`AdderOptions::default`]: batched stage ANDs, last
+//!    P skipped) plus the B2A and Mult rounds, per layout, using the same
+//!    kernels, pack/unpack routines and wire layouts as the serial path.
+//!
+//! The equivalence is pinned across layout × prefetch × parties by
+//! `tests/overlap_identity.rs`.
+//!
+//! # Hot-path discipline
+//!
+//! Everything per-wave comes from the party's arena; per-instance state
+//! records are built once per call (setup), and in-flight wire buffers are
+//! checked out at `exchange_begin` and recycled at `exchange_finish`.
+//!
+//! [`PrefetchDealer`]: crate::beaver::prefetch::PrefetchDealer
+//! [`AdderOptions::default`]: super::adder::AdderOptions
+
+use std::collections::VecDeque;
+
+use super::bitsliced;
+use super::kernels::{BinLayout, KernelBackend};
+use super::{GmwParty, ReluPlan};
+use crate::bitpack;
+use crate::error::{Error, Result};
+use crate::net::accounting::Phase;
+use crate::net::{self, Transport};
+use crate::ring;
+
+fn ceil_log2(w: u32) -> u32 {
+    if w <= 1 {
+        0
+    } else {
+        32 - (w - 1).leading_zeros()
+    }
+}
+
+/// Which AND wave is being run (selects operand source and combine target).
+#[derive(Clone, Copy)]
+enum AndKind {
+    /// `G₀ = acc ∧ op` (Phase::OtherAnd in the serial adder).
+    Init,
+    /// Prefix stage at shift `s`; `last` stages skip the P half.
+    Stage { s: u32, last: bool },
+}
+
+/// Per-chunk instance state. Binary state (`acc`, `p`, `g`, `op`, queued
+/// reshares and triples) is lane-form (`nn` words) or plane-form
+/// ([`bitsliced::plane_len`]`(nn, w)` words) per the party's layout; the
+/// B2A/Mult material is always lane-form, as in the serial driver.
+struct Inst {
+    /// Binary accumulator (the running Kogge–Stone sum).
+    acc: Vec<u64>,
+    /// Pre-drawn reshare operands for parties `1..P`, front first.
+    ops: VecDeque<Vec<u64>>,
+    /// Pre-drawn AND-round triples, front = next wave's.
+    triples: VecDeque<(Vec<u64>, Vec<u64>, Vec<u64>)>,
+    r_bin: Vec<u64>,
+    r_arith: Vec<u64>,
+    /// Pre-drawn arithmetic triples (ReLU only).
+    mul: Option<(Vec<u64>, Vec<u64>, Vec<u64>)>,
+    /// DReLU arithmetic shares, held for the Mult wave (ReLU only).
+    dshare: Vec<u64>,
+    // Transient wave state (valid between a begin pass and its finish pass).
+    p: Vec<u64>,
+    g: Vec<u64>,
+    op: Vec<u64>,
+    tri: (Vec<u64>, Vec<u64>, Vec<u64>),
+    de: Vec<u64>,
+    wire: Vec<u8>,
+}
+
+impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
+    /// Chunked DReLU: split `arith` into `chunks` equal segments and
+    /// evaluate [`GmwParty::drelu_into`] on each. With `overlap` set (and
+    /// more than one chunk) the chunks' rounds are pipelined through the
+    /// split-phase transport; results are bit-identical either way
+    /// (DESIGN.md §10).
+    pub fn drelu_chunked_into(
+        &mut self,
+        arith: &[u64],
+        plan: ReluPlan,
+        chunks: usize,
+        overlap: bool,
+        out: &mut [u64],
+    ) -> Result<()> {
+        validate_chunking(arith.len(), out.len(), chunks)?;
+        if plan.is_identity() {
+            return Err(Error::config("drelu on an identity plan (k == m) has no sign bit"));
+        }
+        let nn = arith.len() / chunks;
+        if !overlap || chunks == 1 {
+            // THE serial baseline the overlapped schedule is pinned against.
+            for i in 0..chunks {
+                let span = i * nn..(i + 1) * nn;
+                // HOT-PATH-ALLOW: Range clone is a 16-byte stack copy, no heap.
+                self.drelu_into(&arith[span.clone()], plan, &mut out[span])?;
+            }
+            return Ok(());
+        }
+        run_overlapped(self, arith, plan, chunks, false, out)
+    }
+
+    /// Chunked DReLU (allocating wrapper).
+    pub fn drelu_chunked(
+        &mut self,
+        arith: &[u64],
+        plan: ReluPlan,
+        chunks: usize,
+        overlap: bool,
+    ) -> Result<Vec<u64>> {
+        // HOT-PATH-ALLOW: by-value wrapper over `drelu_chunked_into`.
+        let mut out = vec![0u64; arith.len()];
+        self.drelu_chunked_into(arith, plan, chunks, overlap, &mut out)?;
+        Ok(out)
+    }
+
+    /// Chunked ReLU: like [`GmwParty::drelu_chunked_into`] but each chunk
+    /// finishes with its Beaver-mult round (Eq. 3), also pipelined.
+    pub fn relu_chunked_into(
+        &mut self,
+        arith: &[u64],
+        plan: ReluPlan,
+        chunks: usize,
+        overlap: bool,
+        out: &mut [u64],
+    ) -> Result<()> {
+        validate_chunking(arith.len(), out.len(), chunks)?;
+        if plan.is_identity() {
+            out.copy_from_slice(arith);
+            return Ok(());
+        }
+        let nn = arith.len() / chunks;
+        if !overlap || chunks == 1 {
+            for i in 0..chunks {
+                let span = i * nn..(i + 1) * nn;
+                // HOT-PATH-ALLOW: Range clone is a 16-byte stack copy, no heap.
+                self.relu_into(&arith[span.clone()], plan, &mut out[span])?;
+            }
+            return Ok(());
+        }
+        run_overlapped(self, arith, plan, chunks, true, out)
+    }
+
+    /// Chunked ReLU (allocating wrapper).
+    pub fn relu_chunked(
+        &mut self,
+        arith: &[u64],
+        plan: ReluPlan,
+        chunks: usize,
+        overlap: bool,
+    ) -> Result<Vec<u64>> {
+        // HOT-PATH-ALLOW: by-value wrapper over `relu_chunked_into`.
+        let mut out = vec![0u64; arith.len()];
+        self.relu_chunked_into(arith, plan, chunks, overlap, &mut out)?;
+        Ok(out)
+    }
+}
+
+fn validate_chunking(n: usize, out_len: usize, chunks: usize) -> Result<()> {
+    if chunks == 0 {
+        return Err(Error::config("chunks must be >= 1"));
+    }
+    if n % chunks != 0 {
+        return Err(Error::config(format!("{n} elements do not split into {chunks} equal chunks")));
+    }
+    if out_len != n {
+        return Err(Error::config(format!("output length {out_len} != input length {n}")));
+    }
+    Ok(())
+}
+
+/// Draw one AND wave's triples in the serial dealer order (plane-native
+/// stream, `(w, nn, halves)` shape) and queue them in the layout's
+/// consumption form — the lane path converts with
+/// [`bitsliced::planes_to_lanes`] exactly as `and_gates_lanes_seg_into`
+/// does at use.
+fn push_triples<T: Transport, K: KernelBackend>(
+    party: &mut GmwParty<T, K>,
+    w: u32,
+    nn: usize,
+    halves: usize,
+    layout: BinLayout,
+    q: &mut VecDeque<(Vec<u64>, Vec<u64>, Vec<u64>)>,
+) -> Result<()> {
+    let pl = bitsliced::plane_len(nn, w);
+    let mut tap = party.arena.take_words(halves * pl);
+    let mut tbp = party.arena.take_words(halves * pl);
+    let mut tcp = party.arena.take_words(halves * pl);
+    party.dealer.bin_triples_planes_into(w, nn, halves, &mut tap, &mut tbp, &mut tcp)?;
+    match layout {
+        BinLayout::Bitsliced => q.push_back((tap, tbp, tcp)),
+        BinLayout::LanePerU64 => {
+            let threads = party.threads;
+            let mut ta = party.arena.take_words(halves * nn);
+            let mut tb = party.arena.take_words(halves * nn);
+            let mut tc = party.arena.take_words(halves * nn);
+            for s in 0..halves {
+                let ln = s * nn..(s + 1) * nn;
+                let pn = s * pl..(s + 1) * pl;
+                // HOT-PATH-ALLOW: Range clone is a 16-byte stack copy, no heap.
+                bitsliced::planes_to_lanes(&tap[pn.clone()], w, nn, &mut ta[ln.clone()], threads);
+                // HOT-PATH-ALLOW: Range clone is a 16-byte stack copy, no heap.
+                bitsliced::planes_to_lanes(&tbp[pn.clone()], w, nn, &mut tb[ln.clone()], threads);
+                bitsliced::planes_to_lanes(&tcp[pn], w, nn, &mut tc[ln], threads);
+            }
+            party.arena.put_words(tcp);
+            party.arena.put_words(tbp);
+            party.arena.put_words(tap);
+            q.push_back((ta, tb, tc));
+        }
+    }
+    Ok(())
+}
+
+/// Pre-draw one chunk's randomness (reshares, adder triples, daBits and —
+/// for ReLU — arithmetic triples) in the **serial draw order** and build
+/// its instance record.
+fn predraw_inst<T: Transport, K: KernelBackend>(
+    party: &mut GmwParty<T, K>,
+    x: &[u64],
+    plan: ReluPlan,
+    with_mul: bool,
+    layout: BinLayout,
+) -> Result<Inst> {
+    let nn = x.len();
+    let w = plan.width();
+    let mask = ring::low_mask(w);
+    let threads = party.threads;
+    let me = party.party();
+    let parties = party.parties();
+    let unit = match layout {
+        BinLayout::LanePerU64 => nn,
+        BinLayout::Bitsliced => bitsliced::plane_len(nn, w),
+    };
+
+    // Window extraction + the A2B input mask (both local, as in serial).
+    let mut masked = party.arena.take_words(nn);
+    for (mi, xi) in masked.iter_mut().zip(x) {
+        *mi = ring::bit_window(*xi, plan.k, plan.m) & mask;
+    }
+
+    // Binary re-sharing of every party's operand — the same zero-sharing
+    // stream draws, in the same j order, as the serial `a2b_into`.
+    let mut ops = VecDeque::new();
+    let mut acc = Vec::default();
+    let mut lanes = party.arena.take_words(nn);
+    for j in 0..parties {
+        let value = if j == me { Some(&masked[..]) } else { None };
+        party.pairwise.reshare_binary_into(value, &mut lanes);
+        let mut dst = party.arena.take_words(unit);
+        match layout {
+            BinLayout::LanePerU64 => {
+                for (di, li) in dst.iter_mut().zip(&lanes) {
+                    *di = li & mask;
+                }
+            }
+            BinLayout::Bitsliced => bitsliced::lanes_to_planes(&lanes, w, &mut dst, threads),
+        }
+        if j == 0 {
+            acc = dst;
+        } else {
+            ops.push_back(dst);
+        }
+    }
+    party.arena.put_words(lanes);
+    party.arena.put_words(masked);
+
+    // w == 1: addition mod 2 is XOR — fold the operands now, no waves.
+    if w == 1 {
+        while let Some(op) = ops.pop_front() {
+            for (a, o) in acc.iter_mut().zip(&op) {
+                *a ^= o;
+            }
+            party.arena.put_words(op);
+        }
+    }
+
+    // Dealer draws, exactly as the serial chunk would issue them: per
+    // fold-in j, the init AND then each prefix stage; then the daBits;
+    // then (ReLU) the arithmetic triples.
+    let mut triples = VecDeque::new();
+    if w > 1 {
+        let stages = ceil_log2(w);
+        for _j in 1..parties {
+            push_triples(party, w, nn, 1, layout, &mut triples)?;
+            for idx in 0..stages {
+                let last = idx + 1 == stages;
+                let halves = if last { 1 } else { 2 };
+                push_triples(party, w, nn, halves, layout, &mut triples)?;
+            }
+        }
+    }
+    let mut r_bin = party.arena.take_words(nn);
+    let mut r_arith = party.arena.take_words(nn);
+    party.dealer.dabits_into(&mut r_bin, &mut r_arith)?;
+    let mul = if with_mul {
+        let mut ta = party.arena.take_words(nn);
+        let mut tb = party.arena.take_words(nn);
+        let mut tc = party.arena.take_words(nn);
+        party.dealer.arith_triples_into(&mut ta, &mut tb, &mut tc)?;
+        Some((ta, tb, tc))
+    } else {
+        None
+    };
+
+    let (p, g) = if w > 1 {
+        (party.arena.take_words(unit), party.arena.take_words(unit))
+    } else {
+        (Vec::default(), Vec::default())
+    };
+    Ok(Inst {
+        acc,
+        ops,
+        triples,
+        r_bin,
+        r_arith,
+        mul,
+        dshare: if with_mul { party.arena.take_words(nn) } else { Vec::default() },
+        p,
+        g,
+        op: Vec::default(),
+        tri: <(Vec<u64>, Vec<u64>, Vec<u64>)>::default(),
+        de: Vec::default(),
+        wire: Vec::default(),
+    })
+}
+
+/// One pipelined Beaver-AND wave across all instances: a begin pass
+/// (masked opening + `exchange_begin` per chunk) followed by a finish pass
+/// (`exchange_finish` + fold + combine per chunk, in begin order). The
+/// wire bytes per chunk are byte-identical to the serial
+/// `and_gates_{lanes_seg,planes}_into` round.
+#[allow(clippy::too_many_arguments)]
+fn and_round<T: Transport, K: KernelBackend>(
+    party: &mut GmwParty<T, K>,
+    phase: Phase,
+    w: u32,
+    nn: usize,
+    unit: usize,
+    halves: usize,
+    layout: BinLayout,
+    kind: AndKind,
+    insts: &mut [Inst],
+) -> Result<()> {
+    let me = party.party();
+    let leader = me == 0;
+    let threads = party.threads;
+    let ulen = halves * unit;
+    let wire_len = bitpack::packed_bytes(2 * halves * nn, w) as usize;
+
+    // Begin pass: every chunk's frame hits the wire back-to-back.
+    for inst in insts.iter_mut() {
+        let (ta, tb, tc) = inst
+            .triples
+            .pop_front()
+            .ok_or_else(|| Error::config("pipeline internal: AND triple queue underflow"))?;
+        let mut de = party.arena.take_words(2 * ulen);
+        match kind {
+            AndKind::Init => party.kernels.and_open(&inst.acc, &inst.op, &ta, &tb, &mut de),
+            AndKind::Stage { s, last } => {
+                let mut u = party.arena.take_words(ulen);
+                let mut v = party.arena.take_words(ulen);
+                party.kernels.ks_stage_operands(&inst.g, &inst.p, s, w, last, &mut u, &mut v);
+                party.kernels.and_open(&u, &v, &ta, &tb, &mut de);
+                party.arena.put_words(v);
+                party.arena.put_words(u);
+            }
+        }
+        let mut wire = party.arena.take_bytes(wire_len);
+        match layout {
+            BinLayout::LanePerU64 => bitpack::pack_bytes_into(&de, w, &mut wire, threads),
+            BinLayout::Bitsliced => {
+                // The fused pack XOR-merges segments: start from zeroes.
+                if wire.len() != wire_len {
+                    wire.clear();
+                    wire.resize(wire_len, 0);
+                } else {
+                    wire.fill(0);
+                }
+                for seg in 0..2 * halves {
+                    bitsliced::pack_planes_xor_into(
+                        &de[seg * unit..(seg + 1) * unit],
+                        w,
+                        nn,
+                        seg * nn,
+                        &mut wire,
+                        threads,
+                    );
+                }
+            }
+        }
+        party.transport.exchange_begin(phase, &wire)?;
+        inst.tri = (ta, tb, tc);
+        inst.de = de;
+        inst.wire = wire;
+    }
+
+    // Finish pass, in begin order.
+    for inst in insts.iter_mut() {
+        party.transport.exchange_finish(phase, &inst.wire, &mut party.recv)?;
+        let mut opened = party.arena.take_words(2 * ulen);
+        opened.copy_from_slice(&inst.de);
+        for q in 0..party.recv.parties() {
+            if q == me {
+                continue;
+            }
+            let buf = party.recv.get(q);
+            if buf.len() != wire_len {
+                return Err(Error::wire(format!(
+                    "binary opening from party {q}: expected {wire_len} bytes, got {}",
+                    buf.len()
+                )));
+            }
+            match layout {
+                BinLayout::LanePerU64 => {
+                    bitpack::unpack_bytes_xor_into(buf, w, 2 * halves * nn, &mut opened, threads)
+                }
+                BinLayout::Bitsliced => {
+                    for seg in 0..2 * halves {
+                        bitsliced::unpack_bytes_xor_into_planes(
+                            buf,
+                            w,
+                            nn,
+                            seg * nn,
+                            &mut opened[seg * unit..(seg + 1) * unit],
+                            threads,
+                        );
+                    }
+                }
+            }
+        }
+        party.arena.put_bytes(std::mem::take(&mut inst.wire));
+        party.arena.put_words(std::mem::take(&mut inst.de));
+        let (ta, tb, tc) = std::mem::take(&mut inst.tri);
+        let (d, e) = opened.split_at(ulen);
+        match kind {
+            AndKind::Init => party.kernels.and_combine(d, e, &ta, &tb, &tc, leader, &mut inst.g),
+            AndKind::Stage { last, .. } => {
+                let mut z = party.arena.take_words(ulen);
+                party.kernels.and_combine(d, e, &ta, &tb, &tc, leader, &mut z);
+                if last {
+                    // z = P ∧ (G ≪ s)
+                    for (gi, zi) in inst.g.iter_mut().zip(&z) {
+                        *gi ^= *zi;
+                    }
+                } else {
+                    let (zg, zp) = z.split_at(unit);
+                    for (((gi, pi), zgi), zpi) in
+                        inst.g.iter_mut().zip(inst.p.iter_mut()).zip(zg).zip(zp)
+                    {
+                        *gi ^= *zgi;
+                        *pi = *zpi;
+                    }
+                }
+                party.arena.put_words(z);
+            }
+        }
+        party.arena.put_words(opened);
+        party.arena.put_words(ta);
+        party.arena.put_words(tb);
+        party.arena.put_words(tc);
+    }
+    Ok(())
+}
+
+/// The overlapped chunked DReLU(+Mult) driver: pre-draw, then lockstep
+/// waves. See the module docs for the scheduling and identity argument.
+fn run_overlapped<T: Transport, K: KernelBackend>(
+    party: &mut GmwParty<T, K>,
+    arith: &[u64],
+    plan: ReluPlan,
+    chunks: usize,
+    with_mul: bool,
+    out: &mut [u64],
+) -> Result<()> {
+    let nn = arith.len() / chunks;
+    let w = plan.width();
+    let layout = party.bin_layout();
+    let unit = match layout {
+        BinLayout::LanePerU64 => nn,
+        BinLayout::Bitsliced => bitsliced::plane_len(nn, w),
+    };
+    let mask = match layout {
+        BinLayout::LanePerU64 => ring::low_mask(w),
+        // Plane form has no mask: planes at or above w don't exist.
+        BinLayout::Bitsliced => u64::MAX,
+    };
+    let parties = party.parties();
+    let me = party.party();
+    let leader = me == 0;
+    let threads = party.threads;
+
+    // Phase 1: pre-draw all randomness, instance-major (= serial order).
+    // Setup-time only: one record per chunk; payload buffers are arena's.
+    let mut insts = Vec::default();
+    for i in 0..chunks {
+        insts.push(predraw_inst(party, &arith[i * nn..(i + 1) * nn], plan, with_mul, layout)?);
+    }
+
+    // Phase 2: lockstep Kogge–Stone waves (w > 1). Round program =
+    // serial `ks_add` with `AdderOptions::default()` (batched stage ANDs,
+    // last P skipped) — the options `a2b_into` uses.
+    if w > 1 {
+        let stages = ceil_log2(w);
+        for _j in 1..parties {
+            for inst in insts.iter_mut() {
+                let op = inst
+                    .ops
+                    .pop_front()
+                    .ok_or_else(|| Error::config("pipeline internal: reshare queue underflow"))?;
+                // P = x ⊕ y (the lane path masks; planes are mask-free).
+                for ((pi, a), b) in inst.p.iter_mut().zip(&inst.acc).zip(&op) {
+                    *pi = (a ^ b) & mask;
+                }
+                inst.op = op;
+            }
+            and_round(party, Phase::OtherAnd, w, nn, unit, 1, layout, AndKind::Init, &mut insts)?;
+            let mut s = 1u32;
+            for idx in 0..stages {
+                let last = idx + 1 == stages;
+                let halves = if last { 1 } else { 2 };
+                and_round(
+                    party,
+                    Phase::Circuit,
+                    w,
+                    nn,
+                    unit,
+                    halves,
+                    layout,
+                    AndKind::Stage { s, last },
+                    &mut insts,
+                )?;
+                s <<= 1;
+            }
+            // Epilogue: acc = x ⊕ y ⊕ (carries ≪ 1), in place.
+            for inst in insts.iter_mut() {
+                match layout {
+                    BinLayout::LanePerU64 => {
+                        for ((a, o), gi) in inst.acc.iter_mut().zip(&inst.op).zip(&inst.g) {
+                            *a = (*a ^ o ^ (gi << 1)) & mask;
+                        }
+                    }
+                    BinLayout::Bitsliced => {
+                        // The lane shift-by-1 is a plane-index shift: sum
+                        // plane b folds in carry plane b − 1.
+                        let wu = w as usize;
+                        for k in 0..unit / wu {
+                            let base = k * wu;
+                            inst.acc[base] ^= inst.op[base];
+                            for b in 1..wu {
+                                inst.acc[base + b] ^= inst.op[base + b] ^ inst.g[base + b - 1];
+                            }
+                        }
+                    }
+                }
+                party.arena.put_words(std::mem::take(&mut inst.op));
+            }
+        }
+    }
+
+    // Phase 3: one pipelined B2A wave (MSB → masked 1-bit opening).
+    let b2a_wire_len = bitpack::packed_bytes(nn, 1) as usize;
+    for inst in insts.iter_mut() {
+        let mut masked = party.arena.take_words(nn);
+        match layout {
+            BinLayout::LanePerU64 => {
+                for (ml, (a, rb)) in masked.iter_mut().zip(inst.acc.iter().zip(&inst.r_bin)) {
+                    let mut bit = (a >> (w - 1)) & 1;
+                    if leader {
+                        bit ^= 1;
+                    }
+                    *ml = (bit ^ rb) & 1;
+                }
+            }
+            BinLayout::Bitsliced => {
+                let mut msb = party.arena.take_words(nn);
+                bitsliced::msb_lanes_from_planes(&inst.acc, w, nn, &mut msb);
+                for (ml, (mb, rb)) in masked.iter_mut().zip(msb.iter().zip(&inst.r_bin)) {
+                    let mut bit = *mb;
+                    if leader {
+                        bit ^= 1;
+                    }
+                    *ml = (bit ^ rb) & 1;
+                }
+                party.arena.put_words(msb);
+            }
+        }
+        let mut wire = party.arena.take_bytes(b2a_wire_len);
+        bitpack::pack_bytes_into(&masked, 1, &mut wire, threads);
+        party.transport.exchange_begin(Phase::B2A, &wire)?;
+        inst.de = masked;
+        inst.wire = wire;
+    }
+    for (i, inst) in insts.iter_mut().enumerate() {
+        party.transport.exchange_finish(Phase::B2A, &inst.wire, &mut party.recv)?;
+        let mut z = party.arena.take_words(nn);
+        z.copy_from_slice(&inst.de);
+        for q in 0..party.recv.parties() {
+            if q == me {
+                continue;
+            }
+            let buf = party.recv.get(q);
+            if buf.len() != b2a_wire_len {
+                return Err(Error::wire(format!(
+                    "binary opening from party {q}: expected {b2a_wire_len} bytes, got {}",
+                    buf.len()
+                )));
+            }
+            bitpack::unpack_bytes_xor_into(buf, 1, nn, &mut z, threads);
+        }
+        party.arena.put_bytes(std::mem::take(&mut inst.wire));
+        party.arena.put_words(std::mem::take(&mut inst.de));
+        // ⟨b⟩^A = z + ⟨r⟩^A − 2·z·⟨r⟩^A  (z public)
+        let dst: &mut [u64] =
+            if with_mul { &mut inst.dshare } else { &mut out[i * nn..(i + 1) * nn] };
+        for ((o, zi), ra) in dst.iter_mut().zip(&z).zip(&inst.r_arith) {
+            let mut v = ra.wrapping_sub(ra.wrapping_mul(2).wrapping_mul(*zi));
+            if leader {
+                v = v.wrapping_add(*zi);
+            }
+            *o = v;
+        }
+        party.arena.put_words(z);
+        party.arena.put_words(std::mem::take(&mut inst.r_arith));
+        party.arena.put_words(std::mem::take(&mut inst.r_bin));
+    }
+
+    // Phase 4 (ReLU only): one pipelined Beaver-mult wave.
+    if with_mul {
+        for (i, inst) in insts.iter_mut().enumerate() {
+            let (ta, tb, tc) = inst
+                .mul
+                .take()
+                .ok_or_else(|| Error::config("pipeline internal: mult triple queue underflow"))?;
+            let mut de = party.arena.take_words(2 * nn);
+            party.kernels.mult_open(&arith[i * nn..(i + 1) * nn], &inst.dshare, &ta, &tb, &mut de);
+            let mut wire = party.arena.take_bytes(2 * nn * 8);
+            net::u64s_to_bytes_into(&de, &mut wire);
+            party.transport.exchange_begin(Phase::Mult, &wire)?;
+            inst.tri = (ta, tb, tc);
+            inst.de = de;
+            inst.wire = wire;
+        }
+        for (i, inst) in insts.iter_mut().enumerate() {
+            party.transport.exchange_finish(Phase::Mult, &inst.wire, &mut party.recv)?;
+            let mut opened = party.arena.take_words(2 * nn);
+            opened.copy_from_slice(&inst.de);
+            for q in 0..party.recv.parties() {
+                if q == me {
+                    continue;
+                }
+                net::add_u64s_from_bytes(party.recv.get(q), &mut opened)?;
+            }
+            party.arena.put_bytes(std::mem::take(&mut inst.wire));
+            party.arena.put_words(std::mem::take(&mut inst.de));
+            let (ta, tb, tc) = std::mem::take(&mut inst.tri);
+            let (d, e) = opened.split_at(nn);
+            party.kernels.mult_combine(d, e, &ta, &tb, &tc, leader, &mut out[i * nn..(i + 1) * nn]);
+            party.arena.put_words(opened);
+            party.arena.put_words(ta);
+            party.arena.put_words(tb);
+            party.arena.put_words(tc);
+        }
+    }
+
+    // Teardown: return per-instance state to the arena.
+    for inst in insts {
+        party.arena.put_words(inst.acc);
+        if !inst.p.is_empty() {
+            party.arena.put_words(inst.p);
+        }
+        if !inst.g.is_empty() {
+            party.arena.put_words(inst.g);
+        }
+        if !inst.dshare.is_empty() {
+            party.arena.put_words(inst.dshare);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::super::harness::run_parties;
+    use super::super::ReluPlan;
+    use crate::crypto::prg::Prg;
+    use crate::sharing::{reconstruct_arith, share_arith};
+
+    #[test]
+    fn chunking_is_validated() {
+        let plan = ReluPlan::new(12, 4).unwrap();
+        let run = run_parties(2, 7, move |p| {
+            let xs = [1u64, 2, 3];
+            let mut out = [0u64; 3];
+            // 0 chunks and non-dividing chunk counts are config errors.
+            assert!(p.relu_chunked_into(&xs, plan, 0, true, &mut out).is_err());
+            assert!(p.relu_chunked_into(&xs, plan, 2, true, &mut out).is_err());
+            // Identity plans have no sign bit to extract.
+            let id = ReluPlan::new(8, 8).unwrap();
+            assert!(p.drelu_chunked_into(&xs, id, 1, false, &mut out).is_err());
+            // ...but identity ReLU degenerates to a copy, chunked or not.
+            p.relu_chunked_into(&xs, id, 3, true, &mut out).unwrap();
+            assert_eq!(out, xs);
+        });
+        assert_eq!(run.outputs.len(), 2);
+    }
+
+    #[test]
+    fn overlapped_relu_matches_serial_smoke() {
+        // The full matrix (layouts × prefetch × parties) lives in
+        // tests/overlap_identity.rs; this is the in-tree smoke version.
+        let n = 256;
+        let chunks = 4;
+        let plan = ReluPlan::new(12, 4).unwrap();
+        let mut prg = Prg::new(0x91, 0);
+        let x: Vec<u64> = (0..n)
+            .map(|i| {
+                let v = prg.next_u64() % 2000;
+                if i % 3 == 0 {
+                    v
+                } else {
+                    v.wrapping_neg()
+                }
+            })
+            .collect();
+        let mut prg = Prg::new(0xdead, 0xbeef);
+        let xs = share_arith(&mut prg, &x, 2);
+
+        let serial = run_parties(2, 42, |p| {
+            let me = p.party();
+            p.relu_chunked(&xs[me], plan, chunks, false).unwrap()
+        });
+        let overlapped = run_parties(2, 42, |p| {
+            let me = p.party();
+            p.relu_chunked(&xs[me], plan, chunks, true).unwrap()
+        });
+        assert_eq!(serial.outputs, overlapped.outputs, "overlap must be bit-identical");
+        assert_eq!(serial.trace.total_bytes(), overlapped.trace.total_bytes());
+        assert_eq!(serial.trace.total_rounds(), overlapped.trace.total_rounds());
+        assert_eq!(serial.trace.bytes_by_phase(), overlapped.trace.bytes_by_phase());
+
+        // Semantics: the chunked schedules agree with the unchunked engine
+        // (clear values only — chunking changes how the PRG streams are
+        // apportioned per element, so share values legitimately differ).
+        let whole = run_parties(2, 42, |p| {
+            let me = p.party();
+            p.relu(&xs[me], plan).unwrap()
+        });
+        assert_eq!(reconstruct_arith(&overlapped.outputs), reconstruct_arith(&whole.outputs));
+    }
+}

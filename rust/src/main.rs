@@ -38,6 +38,14 @@
 //! queued requests are shed), `--max-restarts` budgets the crash-loop
 //! breaker, and `--drain-timeout-ms` (serve) bounds the graceful drain at
 //! shutdown.
+//!
+//! WAN-scheduling knobs (infer/serve, DESIGN.md §10): `--net-profile
+//! high-bw|lan|wan|lat:<ms>,bw:<mbps>` runs every party transport behind
+//! a simulated WAN link — each protocol round really waits out its
+//! modeled `latency + bytes/bandwidth` wire time — and `--overlap on|off`
+//! keeps two batches in flight so batch k+1's dispatch overlaps batch
+//! k's latency-bound rounds. Both are bit-exact: results and wire bytes
+//! never change, only timing.
 
 use anyhow::{bail, Context, Result};
 
@@ -112,6 +120,19 @@ fn apply_lifecycle_knobs(args: &Args, opts: &mut ServeOptions, default_queue: us
     Ok(())
 }
 
+/// WAN-scheduling knobs shared by infer/serve (DESIGN.md §10):
+/// `--net-profile` wraps every party transport in a simulated link
+/// ([`NetworkProfile::parse_cli`] grammar) and `--overlap on|off`
+/// pipelines batch k+1's dispatch under batch k's protocol rounds.
+fn apply_wan_knobs(args: &Args, opts: &mut ServeOptions) -> Result<()> {
+    if let Some(spec) = args.opt("net-profile") {
+        opts.net_profile =
+            Some(NetworkProfile::parse_cli(spec).map_err(|e| anyhow::anyhow!("{e}"))?);
+    }
+    opts.overlap = args.on_off("overlap", false)?;
+    Ok(())
+}
+
 fn load_plan(args: &Args, cfg: &ModelConfig) -> Result<PlanSet> {
     match args.opt("plan") {
         None | Some("baseline") => Ok(PlanSet::baseline(cfg.relu_groups)),
@@ -148,6 +169,8 @@ fn cmd_infer(args: &Args) -> Result<()> {
     // The infer driver submits every sample asynchronously up front, so
     // default the bounded queue (DESIGN.md §9) to hold them all.
     apply_lifecycle_knobs(args, &mut opts, samples.max(256))?;
+    // --net-profile / --overlap: simulated WAN + pipelined dispatch (§10).
+    apply_wan_knobs(args, &mut opts)?;
     println!(
         "booting {} ({} parties, plan: {}, layout: {}, prefetch: {})",
         model,
@@ -235,6 +258,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     opts.fault_profile = load_fault_profile(args)?;
     // Overload / lifecycle knobs (DESIGN.md §9).
     apply_lifecycle_knobs(args, &mut opts, 256)?;
+    // --net-profile / --overlap: simulated WAN + pipelined dispatch (§10).
+    apply_wan_knobs(args, &mut opts)?;
     let drain_ms: u64 = args.opt_parse("drain-timeout-ms", 30_000u64)?;
     let prefetch = if opts.prefetch { "on" } else { "off" };
     let svc = Coordinator::start(opts)?;

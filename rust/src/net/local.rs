@@ -2,7 +2,9 @@
 //! buffers over `std::sync::mpsc` channels. This is the default testbed —
 //! it gives *exact* byte/round accounting with zero serialization noise,
 //! mirroring the paper's High-BW (single-node) setup; LAN/WAN numbers are
-//! projected from the recorded trace (see [`super::profile`]).
+//! projected from the recorded trace (see [`super::profile`]) or measured
+//! directly by wrapping each endpoint in [`super::sim::SimTransport`]
+//! (DESIGN.md §10).
 //!
 //! # Send-buffer circulation
 //!
@@ -17,6 +19,7 @@
 //! nothing; [`LocalTransport::pool_stats`] exposes the counters that pin
 //! this in tests.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 
@@ -41,6 +44,10 @@ pub struct LocalTransport {
     next_seq: Vec<u64>,
     /// My send sequence number (same for all peers; one round = one seq).
     seq: u64,
+    /// Begun-but-unfinished rounds, oldest first: (seq, begin instant).
+    /// `Copy` metadata only — payloads live on the channels, so pipelining
+    /// adds no per-frame allocation.
+    inflight: VecDeque<(u64, std::time::Instant)>,
     /// Size-classed pool of payload buffers (see module docs).
     pool: Arena,
     cfg: NetConfig,
@@ -77,6 +84,7 @@ pub fn hub_with(parties: usize, cfg: NetConfig) -> Vec<LocalTransport> {
             pending: (0..parties).map(|_| Vec::new()).collect(),
             next_seq: vec![0; parties],
             seq: 0,
+            inflight: VecDeque::new(),
             pool: Arena::new(),
             cfg,
             trace: Arc::new(CommTrace::new()),
@@ -155,6 +163,8 @@ impl Transport for LocalTransport {
         data: &[u8],
         recv: &mut RecvBufs,
     ) -> Result<()> {
+        // Validate before anything hits the wire, so a mis-sized RecvBufs
+        // fails without leaving a half-sent round behind.
         if recv.parties() != self.parties {
             return Err(Error::Transport(format!(
                 "RecvBufs sized for {} parties, hub has {}",
@@ -162,12 +172,19 @@ impl Transport for LocalTransport {
                 self.parties
             )));
         }
+        // Serial form = begin + finish back-to-back (DESIGN.md §10).
+        // Accounting delegates to `exchange_begin`'s `.record(` call.
+        self.exchange_begin(phase, data)?;
+        self.exchange_finish(phase, data, recv)
+    }
+
+    fn exchange_begin(&mut self, phase: Phase, data: &[u8]) -> Result<()> {
         let t0 = std::time::Instant::now();
         let seq = self.seq;
         self.seq += 1;
-        // Send to all peers first (non-blocking), then collect. Payload
-        // buffers come from the pool; receivers recycle them into *their*
-        // pool, so buffers circulate around the symmetric hub.
+        // Send to all peers (non-blocking). Payload buffers come from the
+        // pool; receivers recycle them into *their* pool, so buffers
+        // circulate around the symmetric hub.
         for q in 0..self.parties {
             if q == self.party {
                 continue;
@@ -179,13 +196,34 @@ impl Transport for LocalTransport {
             tx.send((self.party, seq, payload))
                 .map_err(|_| Error::Transport(format!("party {q} hung up")))?;
         }
+        // One exchange = one round; bytes = what this party pushed to each
+        // peer (the per-link number — the projection model scales by the
+        // topology).
+        self.trace.record(phase, (data.len() * (self.parties - 1)) as u64);
+        self.inflight.push_back((seq, t0));
+        Ok(())
+    }
+
+    fn exchange_finish(&mut self, _phase: Phase, _data: &[u8], recv: &mut RecvBufs) -> Result<()> {
+        if recv.parties() != self.parties {
+            return Err(Error::Transport(format!(
+                "RecvBufs sized for {} parties, hub has {}",
+                recv.parties(),
+                self.parties
+            )));
+        }
+        let Some((seq, t0)) = self.inflight.pop_front() else {
+            return Err(Error::Transport(format!(
+                "party {}: exchange_finish without a matching exchange_begin",
+                self.party
+            )));
+        };
         for q in 0..self.parties {
             if q == self.party {
                 continue;
             }
-            let want = self.next_seq[q];
-            let payload = self.recv_from(q, want)?;
-            self.next_seq[q] = want + 1;
+            let payload = self.recv_from(q, seq)?;
+            self.next_seq[q] = seq + 1;
             // Copy-then-recycle rather than swapping the payload into the
             // slot: the copy makes every round return a buffer of exactly
             // the class it checked out *within the same round* (the
@@ -197,10 +235,6 @@ impl Transport for LocalTransport {
             RecvBufs::fill_slot(&mut recv.slots_mut()[q], &payload);
             self.pool.put_bytes(payload);
         }
-        // One exchange = one round; bytes = what this party pushed to each
-        // peer (the per-link number — the projection model scales by the
-        // topology).
-        self.trace.record(phase, (data.len() * (self.parties - 1)) as u64);
         self.trace.record_wait(t0.elapsed());
         Ok(())
     }
@@ -307,6 +341,41 @@ mod tests {
             .collect();
         for h in handles {
             assert_eq!(h.join().unwrap(), 6);
+        }
+    }
+
+    /// Split-phase pipelining: several begun rounds in flight at once;
+    /// finishes (in begin order) deliver each round's payloads with no
+    /// cross-round mixing, and the trace counts the same rounds/bytes as
+    /// the serial schedule would.
+    #[test]
+    fn split_phase_pipelines_rounds() {
+        let transports = hub(2);
+        let handles: Vec<_> = transports
+            .into_iter()
+            .map(|mut t| {
+                std::thread::spawn(move || {
+                    let me = t.party();
+                    let peer = 1 - me;
+                    let mut recv = RecvBufs::new(t.parties());
+                    let msgs: Vec<String> = (0..4).map(|r| format!("r{r}p{me}")).collect();
+                    for m in &msgs {
+                        t.exchange_begin(Phase::Circuit, m.as_bytes()).unwrap();
+                    }
+                    for (r, m) in msgs.iter().enumerate() {
+                        t.exchange_finish(Phase::Circuit, m.as_bytes(), &mut recv).unwrap();
+                        assert_eq!(recv.get(peer), format!("r{r}p{peer}").as_bytes());
+                    }
+                    // A finish with nothing in flight is a hard error.
+                    assert!(t.exchange_finish(Phase::Circuit, b"", &mut recv).is_err());
+                    (t.trace().total_rounds(), t.trace().total_bytes())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rounds, bytes) = h.join().unwrap();
+            assert_eq!(rounds, 4);
+            assert_eq!(bytes, 16, "4 rounds x 4-byte payload x 1 peer");
         }
     }
 

@@ -4,9 +4,23 @@
 //! exist: [`local::LocalTransport`] (in-process channels — used by tests,
 //! benches and the single-binary multi-party simulator) and
 //! [`tcp::TcpTransport`] (real sockets for multi-process deployments).
-//! Both feed the same [`accounting::CommTrace`], and simulated wall-clock
-//! for arbitrary networks is projected by [`profile`] using the paper's own
-//! methodology (measured bytes/rounds × analytic bandwidth/latency model).
+//! Both feed the same [`accounting::CommTrace`]. Arbitrary networks are
+//! covered twice over: [`profile`] *projects* wall-clock analytically from
+//! a recorded trace (the paper's own methodology — measured bytes/rounds ×
+//! bandwidth/latency model), and [`sim::SimTransport`] *measures* it by
+//! delaying frame delivery per the same cost model on a real or virtual
+//! clock, which is what makes overlapped round schedules observable as
+//! wall-clock instead of byte counts (DESIGN.md §10).
+//!
+//! # Split-phase exchanges
+//!
+//! [`Transport::exchange_begin`] / [`Transport::exchange_finish`] split one
+//! round into "put my payload on the wire" and "block until the peers'
+//! payloads are in". A scheduler that begins several independent rounds
+//! before finishing the first pays each link's serialization back-to-back
+//! but the propagation latency only once — the WAN overlap win (DESIGN.md
+//! §10). The defaults degrade to the serial [`Transport::exchange_all_into`]
+//! so every transport stays correct (and bit-identical) without opting in.
 //!
 //! # `exchange_all` → `exchange_all_into` migration
 //!
@@ -57,6 +71,7 @@ pub mod accounting;
 pub mod fault;
 pub mod local;
 pub mod profile;
+pub mod sim;
 pub mod tcp;
 
 use crate::error::{Error, Result};
@@ -255,6 +270,29 @@ pub trait Transport: Send {
     /// form: with a warmed `recv` the receive side allocates nothing.
     fn exchange_all_into(&mut self, phase: Phase, data: &[u8], recv: &mut RecvBufs)
         -> Result<()>;
+
+    /// Split-phase send half: put `data` on the wire for every peer and
+    /// return without waiting for theirs. Callers must pair every begin
+    /// with exactly one later [`Transport::exchange_finish`] carrying the
+    /// **same** `phase`/`data`, and must finish rounds in begin order.
+    /// Several rounds may be in flight at once — that is the point: a
+    /// pipelined schedule pays the link latency once across the batch
+    /// (DESIGN.md §10). The default is a no-op so non-overlapping
+    /// transports degrade to a fully serial (still bit-identical)
+    /// schedule via the default `exchange_finish`.
+    fn exchange_begin(&mut self, _phase: Phase, _data: &[u8]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Split-phase receive half: block until every peer's payload for the
+    /// oldest in-flight begun round is in `recv`. `phase` and `data` must
+    /// match the paired [`Transport::exchange_begin`] call (the default
+    /// implementation replays them through the serial
+    /// [`Transport::exchange_all_into`], which is what makes the default
+    /// pair correct for transports that never opted in).
+    fn exchange_finish(&mut self, phase: Phase, data: &[u8], recv: &mut RecvBufs) -> Result<()> {
+        self.exchange_all_into(phase, data, recv)
+    }
 
     /// Legacy allocating form: returns a vec indexed by party id (entry
     /// for `self.party()` is the input `data` echoed back, so openings

@@ -9,15 +9,39 @@
 //! exact per-round byte trace ([`CommTrace`]) and a measured local compute
 //! time; a profile then prices the trace as
 //! `Σ_rounds (latency + bytes/bandwidth)` and scales compute.
+//!
+//! The same `latency + bytes/bandwidth` model also drives the *measured*
+//! WAN path: [`super::sim::SimTransport`] delays real frame delivery per
+//! round instead of pricing a finished trace, so serial and overlapped
+//! schedules become distinguishable wall-clock (DESIGN.md §10). The two
+//! must agree on a serial schedule — `tests` pins that below.
+//!
+//! # Latency convention
+//!
+//! `latency_s` is **one one-way propagation delay per round**, not an RTT
+//! and not per-message. The convention matches the actual round structure:
+//! a GMW open is a symmetric all-to-all exchange in which every party
+//! sends concurrently over full-duplex links, so a round completes one
+//! one-way flight after the last byte is serialized — peers' sends overlap
+//! with ours rather than queueing behind them. What serializes is this
+//! party's own uplink: `bytes_sent` in a [`CommTrace`] round record is
+//! `payload × (parties − 1)`, and the round costs
+//! `latency_s + bytes_sent·8/bandwidth_bps`. A request/response protocol
+//! would pay 2× latency per exchange; GMW's simultaneous exchange pays 1×,
+//! which is exactly why WAN time is *round-count*-bound (DESIGN.md §10).
 
 use super::accounting::CommTrace;
+use crate::error::{Error, Result};
 use crate::util::json::Json;
 
-/// A network profile: per-round latency plus per-byte cost.
+/// A network profile: per-round latency plus per-byte cost. See the module
+/// docs for the one-way-per-round latency convention.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NetworkProfile {
     pub name: String,
-    /// One-way per-message latency in seconds (applied once per round).
+    /// One **one-way** propagation delay in seconds, applied once per
+    /// round (all parties send concurrently; see module docs — this is
+    /// RTT/2, not RTT, and not per-message).
     pub latency_s: f64,
     /// Link bandwidth in bits per second (per direction, full duplex).
     pub bandwidth_bps: f64,
@@ -40,6 +64,53 @@ impl NetworkProfile {
     pub fn wan() -> Self {
         // 352 Mbps per prior work [15] (Cheetah); WAN RTT ~40 ms -> one-way 20ms.
         NetworkProfile::new("WAN", 20e-3, 352e6)
+    }
+
+    /// Parse the `--net-profile` CLI grammar (DESIGN.md §10):
+    /// `high-bw` | `lan` | `wan` | `lat:<ms>,bw:<mbps>` (both parts
+    /// required, either order). The custom form names itself after its
+    /// parameters, e.g. `lat:25ms,bw:100mbps`.
+    pub fn parse_cli(spec: &str) -> Result<Self> {
+        match spec {
+            "high-bw" => return Ok(NetworkProfile::high_bw()),
+            "lan" => return Ok(NetworkProfile::lan()),
+            "wan" => return Ok(NetworkProfile::wan()),
+            _ => {}
+        }
+        let mut lat_ms: Option<f64> = None;
+        let mut bw_mbps: Option<f64> = None;
+        for part in spec.split(',') {
+            let bad = || {
+                Error::config(format!(
+                    "bad --net-profile part {part:?} in {spec:?}: expected \
+                     high-bw|lan|wan|lat:<ms>,bw:<mbps>"
+                ))
+            };
+            let (key, val) = part.split_once(':').ok_or_else(bad)?;
+            let val = val.trim();
+            match key.trim() {
+                "lat" => {
+                    let v = val.strip_suffix("ms").unwrap_or(val).trim();
+                    lat_ms = Some(v.parse().map_err(|_| bad())?);
+                }
+                "bw" => {
+                    let v = val.strip_suffix("mbps").unwrap_or(val).trim();
+                    bw_mbps = Some(v.parse().map_err(|_| bad())?);
+                }
+                _ => return Err(bad()),
+            }
+        }
+        let (Some(lat), Some(bw)) = (lat_ms, bw_mbps) else {
+            return Err(Error::config(format!(
+                "--net-profile {spec:?} must give both lat:<ms> and bw:<mbps>"
+            )));
+        };
+        if !lat.is_finite() || lat < 0.0 || !bw.is_finite() || bw <= 0.0 {
+            return Err(Error::config(format!(
+                "--net-profile {spec:?}: latency must be >= 0 and bandwidth > 0"
+            )));
+        }
+        Ok(NetworkProfile::new(&format!("lat{lat}ms-bw{bw}mbps"), lat * 1e-3, bw * 1e6))
     }
 
     /// Time to push `bytes` through the link plus the round latency.
@@ -171,5 +242,48 @@ mod tests {
         let lan = NetworkProfile::lan();
         let back = NetworkProfile::from_json(&lan.to_json()).unwrap();
         assert_eq!(lan, back);
+    }
+
+    /// Latency-convention regression (DESIGN.md §10): a known two-round
+    /// protocol trace prices to exactly 2 × one-way latency plus the
+    /// serialization of this party's uplink bytes — one latency per round
+    /// (simultaneous all-to-all exchange), never 2× (request/response) and
+    /// never per-message. Pinned with a hand-computable profile:
+    /// 10 ms one-way, 8 Mbps (= 1 byte/µs).
+    #[test]
+    fn two_round_trace_prices_one_latency_per_round() {
+        let trace = CommTrace::new();
+        // Round 1: 1000 bytes on my uplink; round 2: 3000 bytes. (These
+        // are already payload × (parties − 1), as CommTrace records.)
+        trace.record(Phase::Circuit, 1000);
+        trace.record(Phase::B2A, 3000);
+        let net = NetworkProfile::new("pin", 10e-3, 8e6);
+        let got = net.comm_time(&trace);
+        // 2 rounds × 10 ms latency + 4000 bytes × 8 bits / 8e6 bps = 24 ms.
+        let want = 2.0 * 10e-3 + 4000.0 * 8.0 / 8e6;
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        // The same trace against a request/response (2× latency) reading
+        // would be 34 ms — the convention must stay one-way-per-round.
+        assert!((got - 24e-3).abs() < 1e-12, "{got}");
+    }
+
+    /// `--net-profile` grammar: presets, the custom lat/bw form (either
+    /// order), and rejection of malformed or non-physical specs.
+    #[test]
+    fn parse_cli_grammar() {
+        assert_eq!(NetworkProfile::parse_cli("high-bw").unwrap(), NetworkProfile::high_bw());
+        assert_eq!(NetworkProfile::parse_cli("lan").unwrap(), NetworkProfile::lan());
+        assert_eq!(NetworkProfile::parse_cli("wan").unwrap(), NetworkProfile::wan());
+        let p = NetworkProfile::parse_cli("lat:25,bw:100").unwrap();
+        assert!((p.latency_s - 25e-3).abs() < 1e-12);
+        assert!((p.bandwidth_bps - 100e6).abs() < 1e-3);
+        let q = NetworkProfile::parse_cli("bw:100,lat:25").unwrap();
+        assert_eq!((q.latency_s, q.bandwidth_bps), (p.latency_s, p.bandwidth_bps));
+        // Unit suffixes are accepted (and optional).
+        let r = NetworkProfile::parse_cli("lat:25ms,bw:100mbps").unwrap();
+        assert_eq!((r.latency_s, r.bandwidth_bps), (p.latency_s, p.bandwidth_bps));
+        for bad in ["dsl", "lat:25", "bw:10", "lat:x,bw:10", "lat:-1,bw:10", "lat:1,bw:0"] {
+            assert!(NetworkProfile::parse_cli(bad).is_err(), "{bad} should fail");
+        }
     }
 }

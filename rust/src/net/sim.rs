@@ -1,0 +1,322 @@
+//! Simulated WAN links: a [`Transport`] wrapper that delays frame delivery
+//! per a [`NetworkProfile`]'s `latency + bytes / bandwidth` cost model
+//! (DESIGN.md §10).
+//!
+//! Where [`super::profile`] *prices* a finished [`CommTrace`] analytically,
+//! [`SimTransport`] *measures*: every exchange really waits out its modeled
+//! wire time, so an end-to-end run over a simulated link reports the wall
+//! clock a real WAN deployment would see — including the interaction with
+//! compute and with the overlapped round schedule
+//! ([`crate::gmw::pipeline`]), which the closed-form model cannot capture.
+//!
+//! # Clocking
+//!
+//! Delays run on an injected [`ClockHandle`] (the same abstraction the
+//! crash-loop breaker uses, hence the `coordinator::breaker` import — it is
+//! the crate's one clock seam). Two modes:
+//!
+//! - **Real time** ([`SimTransport::new`] / [`SimTransport::with_clock`]
+//!   with a monotonic handle): waits are actual sleeps. Used by
+//!   `benches/wan.rs` and `serve --net-profile` for wall-clock measurement.
+//! - **Virtual time** ([`SimTransport::virtual_time`]): the wrapper owns a
+//!   [`MockClock`] and *advances it itself* instead of sleeping, so tests
+//!   assert exact modeled timestamps with zero wall delay. (A mock clock's
+//!   `sleep` never advances time, so handing a mock handle to
+//!   [`SimTransport::with_clock`] would spin forever — use this constructor
+//!   instead.)
+//!
+//! # Link model
+//!
+//! One half-duplex-free uplink per party: a round's frame occupies the
+//! sender's uplink for `bytes × 8 / bandwidth` seconds (serialization),
+//! then lands one one-way `latency` later. Consecutive `exchange_begin`s
+//! queue behind each other on the uplink but *share* the propagation
+//! window — that is exactly the pipelining win the overlapped scheduler
+//! exploits: two rounds in flight cost `tx₀ + tx₁ + latency`, not
+//! `(tx₀ + latency) + (tx₁ + latency)` (DESIGN.md §10).
+//!
+//! Modeled wait per round is recorded into the inner transport's
+//! [`CommTrace`] via `record_wait`, and aggregated in [`SimStats`].
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::accounting::{CommTrace, Phase};
+use super::profile::NetworkProfile;
+use super::{RecvBufs, Transport};
+use crate::coordinator::breaker::{ClockHandle, MockClock};
+use crate::error::Result;
+
+/// Aggregate wire-time counters for one simulated endpoint.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SimStats {
+    /// Rounds whose delivery this wrapper delayed.
+    pub rounds: u64,
+    /// Total modeled wire time actually waited (slept or mock-advanced).
+    pub wire_wait: Duration,
+}
+
+/// A [`Transport`] wrapper that delays each round per a [`NetworkProfile`].
+///
+/// Composes with [`super::fault::FaultyTransport`] in either order; the
+/// conventional stack is `FaultyTransport<SimTransport<T>>` so injected
+/// faults hit a link that also has WAN timing.
+#[derive(Debug)]
+pub struct SimTransport<T: Transport> {
+    inner: T,
+    profile: NetworkProfile,
+    clock: ClockHandle,
+    /// `Some` in virtual-time mode: waits advance this mock instead of
+    /// sleeping on `clock`.
+    mock: Option<Arc<MockClock>>,
+    /// When this party's uplink finishes serializing its last queued frame.
+    link_free_at: Duration,
+    /// Modeled delivery deadline for each in-flight (begun, unfinished)
+    /// round, FIFO. Copy metadata only — no per-frame allocation (Rule A).
+    inflight: VecDeque<Duration>,
+    stats: SimStats,
+}
+
+impl<T: Transport> SimTransport<T> {
+    /// Wrap `inner` with real-time delays on the monotonic clock.
+    pub fn new(inner: T, profile: NetworkProfile) -> Self {
+        SimTransport::with_clock(inner, profile, ClockHandle::monotonic())
+    }
+
+    /// Wrap `inner` with real-time delays on an injected clock. The handle
+    /// must be one whose `sleep` really waits (see module doc); for mock
+    /// clocks use [`SimTransport::virtual_time`].
+    pub fn with_clock(inner: T, profile: NetworkProfile, clock: ClockHandle) -> Self {
+        SimTransport {
+            inner,
+            profile,
+            clock,
+            mock: None,
+            link_free_at: Duration::ZERO,
+            inflight: VecDeque::new(),
+            stats: SimStats::default(),
+        }
+    }
+
+    /// Wrap `inner` in virtual-time mode: delays advance the returned
+    /// [`MockClock`] instead of sleeping, so a "50 ms RTT" run finishes in
+    /// microseconds of wall time while the clock reads the modeled total.
+    pub fn virtual_time(inner: T, profile: NetworkProfile) -> (Self, Arc<MockClock>) {
+        let (clock, mock) = ClockHandle::mock();
+        let mut sim = SimTransport::with_clock(inner, profile, clock);
+        sim.mock = Some(Arc::clone(&mock));
+        (sim, mock)
+    }
+
+    /// Wire-time counters accumulated so far.
+    pub fn stats(&self) -> SimStats {
+        self.stats
+    }
+
+    /// The link profile this wrapper simulates.
+    pub fn profile(&self) -> &NetworkProfile {
+        &self.profile
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+
+    /// Price one begun round: occupy the uplink for the serialization time
+    /// of `bytes`, and return the modeled delivery instant (uplink free +
+    /// one one-way latency). Pure queue math — nothing waits here.
+    fn price_begin(&mut self, bytes: usize) -> Duration {
+        let now = self.clock.now();
+        let tx = Duration::from_secs_f64(bytes as f64 * 8.0 / self.profile.bandwidth_bps);
+        let start = if self.link_free_at > now { self.link_free_at } else { now };
+        self.link_free_at = start + tx;
+        self.link_free_at + Duration::from_secs_f64(self.profile.latency_s)
+    }
+
+    /// Wait (really or virtually) until the modeled instant `deliver`, and
+    /// account the wait as wire time.
+    fn wait_until(&mut self, deliver: Duration) {
+        let remaining = deliver.saturating_sub(self.clock.now());
+        if !remaining.is_zero() {
+            match &self.mock {
+                Some(mock) => mock.advance(remaining),
+                None => self.clock.sleep(remaining),
+            }
+        }
+        self.stats.rounds += 1;
+        self.stats.wire_wait += remaining;
+        self.inner.trace().record_wait(remaining);
+    }
+}
+
+impl<T: Transport> Transport for SimTransport<T> {
+    fn party(&self) -> usize {
+        self.inner.party()
+    }
+
+    fn parties(&self) -> usize {
+        self.inner.parties()
+    }
+
+    fn exchange_all_into(&mut self, phase: Phase, data: &[u8], recv: &mut RecvBufs) -> Result<()> {
+        // Serial round: price after the inner exchange succeeds, then wait
+        // out the full modeled delivery. Delegation keeps byte accounting
+        // in the inner transport's `.exchange_all_into`.
+        self.inner.exchange_all_into(phase, data, recv)?;
+        let deliver = self.price_begin(data.len() * (self.inner.parties() - 1));
+        self.wait_until(deliver);
+        Ok(())
+    }
+
+    fn exchange_begin(&mut self, phase: Phase, data: &[u8]) -> Result<()> {
+        self.inner.exchange_begin(phase, data)?;
+        let deliver = self.price_begin(data.len() * (self.inner.parties() - 1));
+        self.inflight.push_back(deliver);
+        Ok(())
+    }
+
+    fn exchange_finish(&mut self, phase: Phase, data: &[u8], recv: &mut RecvBufs) -> Result<()> {
+        self.inner.exchange_finish(phase, data, recv)?;
+        if let Some(deliver) = self.inflight.pop_front() {
+            self.wait_until(deliver);
+        }
+        Ok(())
+    }
+
+    fn trace(&self) -> Arc<CommTrace> {
+        self.inner.trace()
+    }
+
+    fn inject_peer_drop(&mut self, peer: usize) -> bool {
+        self.inner.inject_peer_drop(peer)
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::super::fault::{FaultKind, FaultProfile, FaultyTransport};
+    use super::super::local::hub;
+    use super::*;
+
+    /// 8 Mbit/s ⇒ 1 µs per byte; 10 ms one-way latency. With 2 parties a
+    /// 1000-byte payload prices as tx = 1 ms per round.
+    fn pin_profile() -> NetworkProfile {
+        NetworkProfile::new("pin", 10e-3, 8e6)
+    }
+
+    fn approx(d: Duration, secs: f64) {
+        assert!((d.as_secs_f64() - secs).abs() < 1e-6, "{d:?} !~ {secs}s");
+    }
+
+    /// A peer thread that serves `rounds` plain exchanges on the raw hub
+    /// endpoint (the peer does not need to be simulated for party 0's
+    /// timing to be modeled).
+    fn spawn_peer(
+        mut t: impl Transport + 'static,
+        rounds: usize,
+        payload: usize,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let mut recv = RecvBufs::new(t.parties());
+            for r in 0..rounds {
+                let data = vec![r as u8; payload];
+                t.exchange_all_into(Phase::Circuit, &data, &mut recv).unwrap();
+            }
+        })
+    }
+
+    #[test]
+    fn serial_rounds_each_pay_latency() {
+        let mut hub = hub(2);
+        let peer = hub.pop().unwrap();
+        let (mut sim, mock) = SimTransport::virtual_time(hub.pop().unwrap(), pin_profile());
+        let h = spawn_peer(peer, 2, 1000);
+
+        let mut recv = RecvBufs::new(2);
+        let data = vec![0u8; 1000];
+        sim.exchange_all_into(Phase::Circuit, &data, &mut recv).unwrap();
+        approx(mock.now(), 0.011); // tx + L
+        let data = vec![1u8; 1000];
+        sim.exchange_all_into(Phase::Circuit, &data, &mut recv).unwrap();
+        approx(mock.now(), 0.022); // 2 × (tx + L)
+        h.join().unwrap();
+
+        let stats = sim.stats();
+        assert_eq!(stats.rounds, 2);
+        approx(stats.wire_wait, 0.022);
+        // Modeled waits land in the inner trace for §10 accounting.
+        assert!(sim.trace().wait_seconds() > 0.021);
+    }
+
+    #[test]
+    fn pipelined_rounds_share_the_latency_window() {
+        let mut hub = hub(2);
+        let peer = hub.pop().unwrap();
+        let (mut sim, mock) = SimTransport::virtual_time(hub.pop().unwrap(), pin_profile());
+        let h = spawn_peer(peer, 2, 1000);
+
+        let r0 = vec![7u8; 1000];
+        let r1 = vec![9u8; 1000];
+        sim.exchange_begin(Phase::Circuit, &r0).unwrap();
+        sim.exchange_begin(Phase::Circuit, &r1).unwrap();
+        approx(mock.now(), 0.0); // begins never wait
+
+        let mut recv = RecvBufs::new(2);
+        sim.exchange_finish(Phase::Circuit, &r0, &mut recv).unwrap();
+        assert_eq!(recv.get(1), &[0u8; 1000][..]); // peer round 0 payload
+        approx(mock.now(), 0.011); // tx₀ + L
+        sim.exchange_finish(Phase::Circuit, &r1, &mut recv).unwrap();
+        assert_eq!(recv.get(1), &[1u8; 1000][..]); // no reordering per peer
+        approx(mock.now(), 0.012); // tx₀ + tx₁ + L, not 2 × (tx + L)
+        h.join().unwrap();
+        assert_eq!(sim.stats().rounds, 2);
+    }
+
+    #[test]
+    fn composes_under_faulty_transport() {
+        let mut hub = hub(2);
+        let peer = hub.pop().unwrap();
+        let (sim, mock) = SimTransport::virtual_time(hub.pop().unwrap(), pin_profile());
+        // Fault at round 1: round 0 sails through with modeled delay,
+        // round 1 dies before the inner (simulated) link is touched.
+        let profile = FaultProfile::single(0, 1, FaultKind::Drop);
+        let mut t = FaultyTransport::new(sim, &profile);
+        let h = spawn_peer(peer, 1, 16);
+
+        let mut recv = RecvBufs::new(2);
+        let data = vec![3u8; 16];
+        t.exchange_all_into(Phase::Circuit, &data, &mut recv).unwrap();
+        let after_round0 = mock.now();
+        approx(after_round0, 10e-3 + 16.0 * 8.0 / 8e6);
+
+        let err = t.exchange_all_into(Phase::Circuit, &data, &mut recv);
+        assert!(err.is_err(), "dropped round must fail");
+        assert_eq!(mock.now(), after_round0, "failed round pays no modeled wire time");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn slow_clock_means_no_extra_wait() {
+        // If compute already burned past the delivery instant, the wire
+        // wait is zero — this is what makes e2e ≈ max(compute, wire).
+        let mut hub = hub(2);
+        let peer = hub.pop().unwrap();
+        let (mut sim, mock) = SimTransport::virtual_time(hub.pop().unwrap(), pin_profile());
+        let h = spawn_peer(peer, 1, 1000);
+
+        let data = vec![0u8; 1000];
+        sim.exchange_begin(Phase::Circuit, &data).unwrap();
+        mock.advance(Duration::from_millis(40)); // "compute" dominates
+        let mut recv = RecvBufs::new(2);
+        sim.exchange_finish(Phase::Circuit, &data, &mut recv).unwrap();
+        approx(mock.now(), 0.040);
+        assert_eq!(sim.stats().wire_wait, Duration::ZERO);
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,163 @@
+//! Bit-identity of the overlapped chunked schedule (DESIGN.md §10).
+//!
+//! The WAN pipeline (`gmw::pipeline`) reorders *when* rounds hit the wire,
+//! never *what* is computed or sent: with overlap on or off, across both
+//! binary layouts, with and without the prefetch offline phase, and for 2
+//! and 3 parties, the per-party output shares, total wire bytes, round
+//! count and per-phase byte split must all be identical. (Per-round trace
+//! *order* differs — wave-major vs chunk-major — so totals are what is
+//! pinned.)
+
+use hummingbird::beaver::schedule::TripleSchedule;
+use hummingbird::crypto::prg::Prg;
+use hummingbird::gmw::harness::{run_parties, run_parties_with, HarnessRun};
+use hummingbird::gmw::kernels::BitslicedKernels;
+use hummingbird::gmw::ReluPlan;
+use hummingbird::sharing::{reconstruct_arith, share_arith};
+
+const N: usize = 256;
+const CHUNKS: usize = 4;
+const SEED: u64 = 9;
+
+fn plan() -> ReluPlan {
+    ReluPlan::new(12, 4).unwrap()
+}
+
+fn inputs(parties: usize) -> (Vec<u64>, Vec<Vec<u64>>) {
+    let mut prg = Prg::new(0xAB, parties as u64);
+    // Mixed signs and magnitudes on both sides of the plan's [m, k) window.
+    let x: Vec<u64> = (0..N)
+        .map(|i| {
+            let v = (i as u64).wrapping_mul(97) % 4000;
+            if i % 2 == 0 {
+                v
+            } else {
+                v.wrapping_neg()
+            }
+        })
+        .collect();
+    let xs = share_arith(&mut prg, &x, parties);
+    (x, xs)
+}
+
+/// The chunked run's dealer draws are chunk-major — CHUNKS consecutive
+/// per-chunk ReLU schedules, the same with overlap on or off (the pipeline
+/// pre-draws in serial order exactly so prefetch schedules stay valid).
+fn chunked_schedule(parties: usize) -> TripleSchedule {
+    let mut s = TripleSchedule::new();
+    for _ in 0..CHUNKS {
+        s.push_relu(N / CHUNKS, plan(), parties);
+    }
+    s
+}
+
+fn run_lane(
+    parties: usize,
+    xs: &[Vec<u64>],
+    prefetch: bool,
+    overlap: bool,
+) -> HarnessRun<Vec<u64>> {
+    let xs = xs.to_vec();
+    run_parties(parties, SEED, move |p| {
+        if prefetch {
+            p.enable_prefetch(chunked_schedule(p.parties()), false);
+        }
+        let me = p.party();
+        p.relu_chunked(&xs[me], plan(), CHUNKS, overlap).unwrap()
+    })
+}
+
+fn run_sliced(
+    parties: usize,
+    xs: &[Vec<u64>],
+    prefetch: bool,
+    overlap: bool,
+) -> HarnessRun<Vec<u64>> {
+    let xs = xs.to_vec();
+    run_parties_with(parties, SEED, |_| BitslicedKernels::default(), move |p| {
+        if prefetch {
+            p.enable_prefetch(chunked_schedule(p.parties()), false);
+        }
+        let me = p.party();
+        p.relu_chunked(&xs[me], plan(), CHUNKS, overlap).unwrap()
+    })
+}
+
+fn assert_identical(a: &HarnessRun<Vec<u64>>, b: &HarnessRun<Vec<u64>>, label: &str) {
+    assert_eq!(a.outputs, b.outputs, "{label}: per-party output shares diverged");
+    assert_eq!(a.trace.total_bytes(), b.trace.total_bytes(), "{label}: wire bytes");
+    assert_eq!(a.trace.total_rounds(), b.trace.total_rounds(), "{label}: round count");
+    assert_eq!(a.trace.bytes_by_phase(), b.trace.bytes_by_phase(), "{label}: bytes by phase");
+    assert_eq!(a.trace.rounds_by_phase(), b.trace.rounds_by_phase(), "{label}: rounds by phase");
+}
+
+/// overlap on/off × prefetch on/off × {2, 3} parties, lane layout.
+#[test]
+fn overlap_matches_serial_lane() {
+    for parties in [2usize, 3] {
+        let (_, xs) = inputs(parties);
+        for prefetch in [false, true] {
+            let serial = run_lane(parties, &xs, prefetch, false);
+            let overlapped = run_lane(parties, &xs, prefetch, true);
+            let label = format!("lane p{parties} prefetch={prefetch}");
+            assert_identical(&serial, &overlapped, &label);
+        }
+    }
+}
+
+/// overlap on/off × prefetch on/off × {2, 3} parties, bitsliced layout —
+/// and the layouts themselves must agree, so the overlapped bitsliced run
+/// is compared against the serial *lane* run too (strongest cross-check).
+#[test]
+fn overlap_matches_serial_bitsliced_and_cross_layout() {
+    for parties in [2usize, 3] {
+        let (_, xs) = inputs(parties);
+        let lane_serial = run_lane(parties, &xs, false, false);
+        for prefetch in [false, true] {
+            let serial = run_sliced(parties, &xs, prefetch, false);
+            let overlapped = run_sliced(parties, &xs, prefetch, true);
+            let label = format!("bitsliced p{parties} prefetch={prefetch}");
+            assert_identical(&serial, &overlapped, &label);
+            assert_identical(&lane_serial, &overlapped, &format!("{label} vs lane"));
+        }
+    }
+}
+
+/// The overlapped schedule must also still compute the right function:
+/// reconstructed outputs equal the engine's own unchunked ReLU (chunking
+/// legitimately re-apportions PRG streams, so shares differ from the
+/// unchunked run — clear values may not).
+#[test]
+fn overlapped_clear_values_match_unchunked_relu() {
+    let parties = 2;
+    let (_, xs) = inputs(parties);
+    let xs2 = xs.clone();
+    let unchunked = run_parties(parties, SEED, move |p| {
+        let me = p.party();
+        p.relu(&xs2[me], plan()).unwrap()
+    });
+    let overlapped = run_lane(parties, &xs, false, true);
+    assert_eq!(
+        reconstruct_arith(&overlapped.outputs),
+        reconstruct_arith(&unchunked.outputs),
+        "overlapped chunked ReLU computes a different function"
+    );
+}
+
+/// DReLU (no Beaver-mult epilogue) through the same matrix, 3 parties.
+#[test]
+fn drelu_overlap_matches_serial() {
+    let parties = 3;
+    let (_, xs) = inputs(parties);
+    let xs_a = xs.clone();
+    let serial = run_parties(parties, SEED, move |p| {
+        let me = p.party();
+        p.drelu_chunked(&xs_a[me], plan(), CHUNKS, false).unwrap()
+    });
+    let xs_b = xs.clone();
+    let overlapped = run_parties(parties, SEED, move |p| {
+        let me = p.party();
+        p.drelu_chunked(&xs_b[me], plan(), CHUNKS, true).unwrap()
+    });
+    assert_identical(&serial, &overlapped, "drelu p3");
+}

@@ -1,0 +1,116 @@
+//! Virtual-time WAN end-to-end test (DESIGN.md §10): chunked DReLU over a
+//! [`SimTransport`] in virtual-time mode, so a 50 ms-RTT run completes in
+//! microseconds of wall clock while the [`MockClock`] reads the exact
+//! modeled time. This pins the §10 performance model deterministically:
+//!
+//! - serial schedule: every round pays one one-way latency
+//!   → elapsed = rounds × L + total_tx
+//! - overlapped schedule: one latency per lockstep *wave*
+//!   → elapsed = waves × L + total_tx
+//!
+//! and the success metric — overlapped e2e ≤ 1.15 × max(compute, wire) —
+//! holds with room to spare (compute is free on a virtual clock, so the
+//! bound is the wire time itself), while serial is multiples of it.
+
+use std::time::Duration;
+
+use hummingbird::crypto::prg::Prg;
+use hummingbird::gmw::{GmwParty, ReluPlan};
+use hummingbird::net::local::hub;
+use hummingbird::net::profile::NetworkProfile;
+use hummingbird::net::sim::SimTransport;
+use hummingbird::sharing::share_arith;
+
+const N: usize = 512;
+const CHUNKS: usize = 4;
+const BW_BPS: f64 = 8e6; // 1 µs per byte: hand-checkable serialization time
+
+fn approx(d: Duration, secs: f64) {
+    assert!((d.as_secs_f64() - secs).abs() < 1e-6, "{d:?} !~ {secs}s");
+}
+
+/// One 2-party chunked DReLU with party 0 behind a virtual-time simulated
+/// link. Returns (party 0 modeled elapsed, both output shares, rounds,
+/// bytes). Party 1 runs unsimulated — the rendezvous exchanges keep the
+/// protocol lockstep, and only party 0's clock is measured.
+fn run_virtual(
+    xs: &[Vec<u64>],
+    plan: ReluPlan,
+    lat_s: f64,
+    overlap: bool,
+) -> (Duration, Vec<Vec<u64>>, u64, u64) {
+    let np = NetworkProfile::new("virt", lat_s, BW_BPS);
+    let mut ts = hub(2);
+    let t1 = ts.pop().unwrap();
+    let t0 = ts.pop().unwrap();
+    let trace = t0.trace();
+    let (sim, mock) = SimTransport::virtual_time(t0, np);
+    let (o0, o1) = std::thread::scope(|s| {
+        let h1 = s.spawn(|| {
+            let mut p = GmwParty::new(t1, 0x77);
+            p.drelu_chunked(&xs[1], plan, CHUNKS, overlap).unwrap()
+        });
+        let mut p = GmwParty::new(sim, 0x77);
+        let o0 = p.drelu_chunked(&xs[0], plan, CHUNKS, overlap).unwrap();
+        (o0, h1.join().unwrap())
+    });
+    (mock.now(), vec![o0, o1], trace.total_rounds(), trace.total_bytes())
+}
+
+#[test]
+fn serial_pays_latency_per_round_overlapped_per_wave() {
+    let mut prg = Prg::new(0xC0, 1);
+    let x: Vec<u64> = (0..N)
+        .map(|i| if i % 2 == 0 { i as u64 } else { (i as u64).wrapping_neg() })
+        .collect();
+    let xs = share_arith(&mut prg, &x, 2);
+    let plan = ReluPlan::new(12, 4).unwrap(); // w = 8: init + 3 stages + B2A
+    let lat = 25e-3; // 50 ms RTT, one-way per round (net::profile convention)
+
+    let (t_serial, o_serial, rounds, bytes) = run_virtual(&xs, plan, lat, false);
+    let (t_overlap, o_overlap, rounds2, bytes2) = run_virtual(&xs, plan, lat, true);
+
+    // Bit-identity on the virtual link too: shares, rounds and bytes.
+    assert_eq!(o_serial, o_overlap, "schedules diverged on shares");
+    assert_eq!((rounds, bytes), (rounds2, bytes2), "schedules diverged on the wire");
+
+    // The §10 closed forms, computed from the actual trace.
+    let tx = bytes as f64 * 8.0 / BW_BPS;
+    assert_eq!(rounds % CHUNKS as u64, 0, "every chunk runs the same round program");
+    let waves = rounds / CHUNKS as u64;
+    assert!(waves >= 2, "need a multi-round circuit for the schedule to matter");
+    let want_serial = rounds as f64 * lat + tx;
+    let want_overlap = waves as f64 * lat + tx;
+    approx(t_serial, want_serial);
+    approx(t_overlap, want_overlap);
+
+    // Success metric, pinned deterministically: overlapped ≤ 1.15 ×
+    // max(compute, wire) (virtual compute is free → bound = wire), while
+    // serial pays per-round latency and lands at a multiple of the bound.
+    assert!(t_overlap.as_secs_f64() <= 1.15 * want_overlap);
+    assert!(
+        t_serial.as_secs_f64() > 2.0 * want_overlap,
+        "serial {t_serial:?} should be several × the overlapped bound {want_overlap}"
+    );
+}
+
+/// Low-RTT sanity: at sub-millisecond latency the two schedules are close
+/// (the serialization term dominates), so overlap is a WAN optimization,
+/// not a LAN regression.
+#[test]
+fn low_rtt_schedules_are_close() {
+    let mut prg = Prg::new(0xC1, 1);
+    let x: Vec<u64> = (0..N).map(|i| (i as u64).wrapping_mul(13)).collect();
+    let xs = share_arith(&mut prg, &x, 2);
+    let plan = ReluPlan::new(12, 4).unwrap();
+    let lat = 0.5e-3; // 1 ms RTT
+
+    let (t_serial, _, rounds, bytes) = run_virtual(&xs, plan, lat, false);
+    let (t_overlap, _, _, _) = run_virtual(&xs, plan, lat, true);
+    let tx = bytes as f64 * 8.0 / BW_BPS;
+    approx(t_serial, rounds as f64 * lat + tx);
+    // The gap is exactly (rounds − waves) × latency — small at low RTT.
+    let waves = rounds / CHUNKS as u64;
+    approx(t_overlap, waves as f64 * lat + tx);
+    assert!(t_serial > t_overlap, "overlap never costs modeled time");
+}
