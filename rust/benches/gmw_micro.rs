@@ -160,5 +160,134 @@ fn main() {
         }
     }
 
+    // Kernel-arm differential rows (DESIGN.md §11): the same hot
+    // primitive on the forced-scalar arm (`RustKernels::scalar`, immune
+    // to CLI/env) and the dispatched arm (`::default`, AVX2 where the
+    // CPU has it), plus the 64×64 transpose and the fused wire pack. The
+    // whole section is gated on runtime AVX2: without it the two arms
+    // are the same code and the ratio table would be noise. CI greps the
+    // markdown table below into the job summary.
+    if hummingbird::gmw::simd::available() {
+        use hummingbird::bitpack::packed_bytes;
+        use hummingbird::gmw::bitsliced::{self, plane_len};
+        use hummingbird::gmw::kernels::{KernelBackend, RustKernels};
+        use hummingbird::util::benchkit::black_box;
+
+        let nk = 16384usize;
+        let d = prg.vec_u64(nk);
+        let e = prg.vec_u64(nk);
+        let a = prg.vec_u64(nk);
+        let b = prg.vec_u64(nk);
+        let c = prg.vec_u64(nk);
+        let mut scalar = RustKernels::scalar();
+        let mut dispatched = RustKernels::default();
+        let mut rows: Vec<(&'static str, f64, f64)> = Vec::new();
+
+        {
+            let mut out = vec![0u64; 2 * nk];
+            let s = bench
+                .bench_elems(&format!("simd_and_open/scalar/{nk}"), nk as u64, || {
+                    scalar.and_open(&d, &e, &a, &b, &mut out);
+                    black_box(&out);
+                })
+                .median();
+            let v = bench
+                .bench_elems(&format!("simd_and_open/dispatch/{nk}"), nk as u64, || {
+                    dispatched.and_open(&d, &e, &a, &b, &mut out);
+                    black_box(&out);
+                })
+                .median();
+            rows.push(("and_open (xor)", s, v));
+        }
+
+        {
+            let mut out = vec![0u64; nk];
+            let s = bench
+                .bench_elems(&format!("simd_and_combine/scalar/{nk}"), nk as u64, || {
+                    scalar.and_combine(&d, &e, &a, &b, &c, true, &mut out);
+                    black_box(&out);
+                })
+                .median();
+            let v = bench
+                .bench_elems(&format!("simd_and_combine/dispatch/{nk}"), nk as u64, || {
+                    dispatched.and_combine(&d, &e, &a, &b, &c, true, &mut out);
+                    black_box(&out);
+                })
+                .median();
+            rows.push(("and_combine", s, v));
+        }
+
+        {
+            let w = 20u32;
+            let mask = hummingbird::ring::low_mask(w);
+            let g: Vec<u64> = d.iter().map(|v| v & mask).collect();
+            let p: Vec<u64> = e.iter().map(|v| v & mask).collect();
+            let mut u_out = vec![0u64; 2 * nk];
+            let mut v_out = vec![0u64; 2 * nk];
+            let s = bench
+                .bench_elems(&format!("simd_ks_stage/scalar/w{w}/{nk}"), nk as u64, || {
+                    scalar.ks_stage_operands(&g, &p, 2, w, false, &mut u_out, &mut v_out);
+                    black_box(&v_out);
+                })
+                .median();
+            let v = bench
+                .bench_elems(&format!("simd_ks_stage/dispatch/w{w}/{nk}"), nk as u64, || {
+                    dispatched.ks_stage_operands(&g, &p, 2, w, false, &mut u_out, &mut v_out);
+                    black_box(&v_out);
+                })
+                .median();
+            rows.push(("ks_stage_operands", s, v));
+        }
+
+        {
+            let mut m = [0u64; 64];
+            for v in m.iter_mut() {
+                *v = prg.next_u64();
+            }
+            let s = bench
+                .bench_elems("simd_transpose64/scalar", 64, || {
+                    bitsliced::transpose64(&mut m);
+                    black_box(&m);
+                })
+                .median();
+            let v = bench
+                .bench_elems("simd_transpose64/dispatch", 64, || {
+                    hummingbird::gmw::simd::transpose64(&mut m);
+                    black_box(&m);
+                })
+                .median();
+            rows.push(("transpose64", s, v));
+        }
+
+        {
+            let w = 12u32;
+            let mask = hummingbird::ring::low_mask(w);
+            let lanes: Vec<u64> = d.iter().map(|v| v & mask).collect();
+            let mut planes = vec![0u64; plane_len(nk, w)];
+            bitsliced::lanes_to_planes(&lanes, w, &mut planes, 1);
+            let mut wire = vec![0u8; packed_bytes(nk, w) as usize];
+            let s = bench
+                .bench_elems(&format!("simd_pack_planes/scalar/w{w}/{nk}"), nk as u64, || {
+                    bitsliced::pack_planes_xor_into_with(&planes, w, nk, 0, &mut wire, 1, false);
+                    black_box(&wire);
+                })
+                .median();
+            let v = bench
+                .bench_elems(&format!("simd_pack_planes/dispatch/w{w}/{nk}"), nk as u64, || {
+                    bitsliced::pack_planes_xor_into_with(&planes, w, nk, 0, &mut wire, 1, true);
+                    black_box(&wire);
+                })
+                .median();
+            rows.push(("pack_planes_xor", s, v));
+        }
+
+        println!();
+        println!("| gmw_micro kernel row | scalar | dispatched | speedup |");
+        println!("|---|---:|---:|---:|");
+        for (name, s, v) in &rows {
+            println!("| {name} | {s:.3e} s | {v:.3e} s | {:.2}x |", s / v);
+        }
+    }
+
     bench.dump_json("gmw_micro");
 }

@@ -299,6 +299,7 @@ mod tests {
     fn classify_matches_declared_scopes() {
         assert!(classify("src/gmw/mod.rs").hot);
         assert!(classify("src/gmw/pipeline.rs").hot);
+        assert!(classify("src/gmw/simd.rs").hot, "AVX2 kernels are hot-path (Rules A + S)");
         assert!(classify("src/net/sim.rs").hot, "WAN sim delay queue is hot-path (Rule A)");
         assert!(classify("src/beaver/prefetch.rs").hot);
         assert!(!classify("src/beaver/mod.rs").hot);

@@ -26,6 +26,15 @@
 //! knob); small inputs always run inline (thresholds live in
 //! [`crate::util::tuning`], env-overridable), so single-lane openings never
 //! pay spawn overhead.
+//!
+//! Kernel dispatch note (DESIGN.md §11): this lane-layout pack is the one
+//! wire path that deliberately stays scalar under `--kernel simd`. Each
+//! output word gathers a *data-dependent* number of variably-shifted lanes
+//! (`w ∤ 64` makes the lane/offset pattern aperiodic), which does not map
+//! onto AVX2's uniform-shift lane ops the way the bitsliced transpose does
+//! — and the loop is already word-parallel and memory-bound. The bitsliced
+//! layout's wire path ([`crate::gmw::bitsliced::pack_planes_xor_into`]) is
+//! the vectorized counterpart; both produce byte-identical wire streams.
 
 use crate::ring::low_mask;
 use crate::util::threadpool::{par_chunks, par_chunks_mut, SendPtr};

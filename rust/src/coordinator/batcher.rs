@@ -48,7 +48,7 @@ use std::time::{Duration, Instant};
 use crate::beaver::schedule::TripleSchedule;
 use crate::crypto::prg::Prg;
 use crate::error::{Error, Result};
-use crate::gmw::kernels::{BinLayout, BitslicedKernels, RustKernels};
+use crate::gmw::kernels::{self, BinLayout, BitslicedKernels, KernelChoice, RustKernels};
 use crate::gmw::GmwParty;
 use crate::hummingbird::PlanSet;
 use crate::model::{Archive, ExecBreakdown, ModelConfig, PlainExecutor, ShareExecutor, ShareWeights};
@@ -93,6 +93,14 @@ pub struct ServeOptions {
     /// and wire bytes are bit-identical either way; the XLA backend only
     /// supports the lane layout. CLI flag `--layout`.
     pub layout: BinLayout,
+    /// Plane-kernel dispatch arm for the "rust" backend (CLI flag
+    /// `--kernel`, DESIGN.md §11): `auto` (default) takes the AVX2 arm
+    /// when the CPU supports it, `scalar` pins the portable reference and
+    /// `simd` fails boot on machines without AVX2. The `HB_KERNEL` env
+    /// var overrides this field. Both arms are bit-identical — the boot
+    /// selfcheck ([`kernels::selfcheck`]) enforces it before the service
+    /// admits a request.
+    pub kernel: KernelChoice,
     /// Lane-parallelism budget per party for local GMW compute (kernels +
     /// fused bitpack). 0 = auto: divide the machine's cores across the
     /// simulated parties. Results are bit-identical for any value.
@@ -162,6 +170,7 @@ impl ServeOptions {
             session_seed: 0x5e55_10,
             gmw_backend: "rust".into(),
             layout: BinLayout::default(),
+            kernel: KernelChoice::default(),
             threads: 0,
             prefetch: false,
             net: NetConfig::default(),
@@ -240,6 +249,7 @@ struct SessionSpec {
     seed: u64,
     backend: String,
     layout: BinLayout,
+    kernel: KernelChoice,
     threads: usize,
     prefetch: bool,
     net: NetConfig,
@@ -290,6 +300,7 @@ fn spawn_session(spec: &mut SessionSpec, metrics: &Arc<Metrics>) -> Result<Sessi
         let seed = spec.seed;
         let backend = spec.backend.clone();
         let layout = spec.layout;
+        let kernel = spec.kernel;
         let threads = resolve_threads(spec.threads, spec.parties);
         let prefetch = spec.prefetch;
         let fault = fault.clone();
@@ -315,6 +326,7 @@ fn spawn_session(spec: &mut SessionSpec, metrics: &Arc<Metrics>) -> Result<Sessi
                     seed,
                     backend,
                     layout,
+                    kernel,
                     threads,
                     prefetch,
                 ),
@@ -330,6 +342,7 @@ fn spawn_session(spec: &mut SessionSpec, metrics: &Arc<Metrics>) -> Result<Sessi
                     seed,
                     backend,
                     layout,
+                    kernel,
                     threads,
                     prefetch,
                 ),
@@ -345,12 +358,13 @@ fn spawn_session(spec: &mut SessionSpec, metrics: &Arc<Metrics>) -> Result<Sessi
                     seed,
                     backend,
                     layout,
+                    kernel,
                     threads,
                     prefetch,
                 ),
                 (None, None) => party_main(
                     t, cfg, weights, root, model_art, plans, jrx, out_tx, seed, backend, layout,
-                    threads, prefetch,
+                    kernel, threads, prefetch,
                 ),
             }
         }));
@@ -378,6 +392,13 @@ impl Coordinator {
                  kernels are lane-per-u64)",
             ));
         }
+        // Boot-time kernel cross-check (DESIGN.md §11): prove the
+        // dispatched arm bit-identical to the forced-scalar reference on
+        // every primitive before serving a single request. A mismatch (or
+        // a forced-but-unavailable `simd`) is a typed `Error::Kernel` —
+        // the coordinator fails fast instead of silently serving with a
+        // diverging kernel.
+        kernels::selfcheck(opts.kernel)?;
         let root = opts.repo_root.join("artifacts");
         let cfg = ModelConfig::load_named(&opts.repo_root, &opts.model)?;
         let weights = Archive::load(root.join("weights").join(&opts.model))?;
@@ -401,6 +422,7 @@ impl Coordinator {
             seed: opts.session_seed,
             backend: opts.gmw_backend.clone(),
             layout: opts.layout,
+            kernel: opts.kernel,
             threads: opts.threads,
             prefetch: opts.prefetch,
             net: opts.net,
@@ -558,13 +580,14 @@ fn party_main<T: Transport + 'static>(
     seed: u64,
     backend: String,
     layout: BinLayout,
+    kernel: KernelChoice,
     threads: usize,
     prefetch: bool,
 ) {
     let me = transport.party();
     let boot = party_boot_and_loop(
         transport, cfg, weights, artifacts_root, model_art, plans, jobs, &out, seed, backend,
-        layout, threads, prefetch,
+        layout, kernel, threads, prefetch,
     );
     if let Err(e) = boot {
         let _ = out.send((me, Err(e)));
@@ -584,6 +607,7 @@ fn party_boot_and_loop<T: Transport + 'static>(
     seed: u64,
     backend: String,
     layout: BinLayout,
+    kernel: KernelChoice,
     threads: usize,
     prefetch: bool,
 ) -> Result<()> {
@@ -615,11 +639,12 @@ fn party_boot_and_loop<T: Transport + 'static>(
         boot_party(&mut party, threads, schedule);
         party_loop(&mut exec, &mut party, &plans, jobs, out, me);
     } else if layout == BinLayout::Bitsliced {
-        let mut party = GmwParty::with_kernels(transport, seed, BitslicedKernels::default());
+        let mut party =
+            GmwParty::with_kernels(transport, seed, BitslicedKernels::with_kernel(kernel)?);
         boot_party(&mut party, threads, schedule);
         party_loop(&mut exec, &mut party, &plans, jobs, out, me);
     } else {
-        let mut party = GmwParty::with_kernels(transport, seed, RustKernels::default());
+        let mut party = GmwParty::with_kernels(transport, seed, RustKernels::with_kernel(kernel)?);
         boot_party(&mut party, threads, schedule);
         party_loop(&mut exec, &mut party, &plans, jobs, out, me);
     }

@@ -75,6 +75,14 @@ pub enum Error {
     /// Search engine failure (budget infeasible, no candidates, ...).
     Search(String),
 
+    /// Kernel dispatch failure: a forced kernel arm (`--kernel simd` /
+    /// `HB_KERNEL=simd`) is unavailable on this CPU, or the boot-time
+    /// selfcheck found the dispatched arm diverging from the scalar
+    /// reference (DESIGN.md §11). Fatal: secret-share kernels must be
+    /// bit-identical across arms, so serving with a diverging kernel is
+    /// never acceptable.
+    Kernel(String),
+
     /// Underlying I/O error.
     Io(std::io::Error),
 }
@@ -96,6 +104,7 @@ impl fmt::Display for Error {
             Error::Model(m) => write!(f, "model error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Search(m) => write!(f, "search error: {m}"),
+            Error::Kernel(m) => write!(f, "kernel dispatch error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -152,6 +161,10 @@ impl Error {
     /// Shorthand constructor for service-not-running errors.
     pub fn unavailable(msg: impl fmt::Display) -> Self {
         Error::Unavailable(msg.to_string())
+    }
+    /// Shorthand constructor for kernel-dispatch errors.
+    pub fn kernel(msg: impl fmt::Display) -> Self {
+        Error::Kernel(msg.to_string())
     }
 
     /// Client-side retry classification for the serving layer
@@ -226,6 +239,7 @@ mod tests {
             Error::overloaded("queue full"),
             Error::deadline("request expired in queue"),
             Error::unavailable("service stopped"),
+            Error::kernel("forced simd unavailable"),
         ] {
             assert!(!fatal.is_retryable(), "{fatal}");
         }

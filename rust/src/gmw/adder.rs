@@ -10,7 +10,11 @@
 //! [`super::bitsliced`]): every XOR/AND below processes 64 lanes per word,
 //! lane shifts become plane-index shifts, and the `& mask` disappears
 //! (planes at or above w don't exist). The round structure, byte counts
-//! and results are identical in both layouts.
+//! and results are identical in both layouts. The adder itself never
+//! branches on the kernel arm: the word-level XOR/AND/shift loops it
+//! drives dispatch to AVX2 inside [`super::kernels`] (DESIGN.md §11), and
+//! both arms are bit-identical, so everything pinned here holds for
+//! `--kernel scalar|simd|auto` alike.
 //!
 //! Cost model (the paper's O(N·logN) → O(w·log w) claim):
 //!   * 1 initial AND round  (G₀ = x∧y)            — tagged `Phase::OtherAnd`

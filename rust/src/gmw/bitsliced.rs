@@ -103,6 +103,11 @@ pub fn plane_len(n: usize, w: u32) -> usize {
 /// In-place 64×64 bit-matrix transpose (Hacker's Delight §7-3, recursive
 /// block swap), LSB-first convention: after the call, bit `p` of `a[r]` is
 /// what bit `r` of `a[p]` was. The transform is an involution.
+///
+/// This is the always-available scalar arm; the block loops below route
+/// through [`transpose64_dispatch`], which substitutes the explicit AVX2
+/// transpose from [`super::simd`] when the resolved kernel arm allows it
+/// (DESIGN.md §11). Both arms are bit-identical.
 pub fn transpose64(a: &mut [u64; 64]) {
     let mut s = 32usize;
     let mut m = 0x0000_0000_FFFF_FFFFu64;
@@ -117,6 +122,16 @@ pub fn transpose64(a: &mut [u64; 64]) {
         s >>= 1;
         m ^= m << s;
     }
+}
+
+/// Run the AVX2 transpose when `simd` is set (and the CPU cooperates),
+/// the scalar one otherwise.
+#[inline]
+fn transpose64_dispatch(a: &mut [u64; 64], simd: bool) {
+    if simd && super::simd::transpose64(a) {
+        return;
+    }
+    transpose64(a);
 }
 
 /// Resolve the block-loop thread budget: below the tuning threshold the
@@ -141,6 +156,7 @@ pub fn lanes_to_planes(lanes: &[u64], w: u32, planes: &mut [u64], threads: usize
     let nblocks = blocks(n);
     let wu = w as usize;
     debug_assert_eq!(planes.len(), nblocks * wu);
+    let simd = super::kernels::auto_simd();
     let out = SendPtr(planes.as_mut_ptr());
     let out_ref = &out;
     par_chunks(nblocks, eff_threads(nblocks, threads), move |_, range| {
@@ -149,7 +165,7 @@ pub fn lanes_to_planes(lanes: &[u64], w: u32, planes: &mut [u64], threads: usize
             let lo = k * LANES_PER_BLOCK;
             let r = (n - lo).min(LANES_PER_BLOCK);
             buf[..r].copy_from_slice(&lanes[lo..lo + r]);
-            transpose64(&mut buf);
+            transpose64_dispatch(&mut buf, simd);
             // SAFETY: block k writes only its own plane words [k·w, k·w+w),
             // disjoint per block, and the caller blocks until all chunks
             // complete.
@@ -169,13 +185,14 @@ pub fn planes_to_lanes(planes: &[u64], w: u32, n: usize, lanes: &mut [u64], thre
     let wu = w as usize;
     debug_assert_eq!(planes.len(), nblocks * wu);
     debug_assert_eq!(lanes.len(), n);
+    let simd = super::kernels::auto_simd();
     let out = SendPtr(lanes.as_mut_ptr());
     let out_ref = &out;
     par_chunks(nblocks, eff_threads(nblocks, threads), move |_, range| {
         for k in range {
             let mut buf = [0u64; 64];
             buf[..wu].copy_from_slice(&planes[k * wu..(k + 1) * wu]);
-            transpose64(&mut buf);
+            transpose64_dispatch(&mut buf, simd);
             let lo = k * LANES_PER_BLOCK;
             let r = (n - lo).min(LANES_PER_BLOCK);
             // SAFETY: block k writes only lanes [lo, lo + r), disjoint per
@@ -207,6 +224,25 @@ pub fn pack_planes_xor_into(
     dst: &mut [u8],
     threads: usize,
 ) {
+    pack_planes_xor_into_with(planes, w, n, lane0, dst, threads, super::kernels::auto_simd());
+}
+
+/// [`pack_planes_xor_into`] with an explicit kernel-arm flag: the engine
+/// passes its backend's resolved [`KernelBackend::simd`] flag here, so a
+/// forced-scalar session is scalar through the wire boundary too
+/// (DESIGN.md §11). Both arms produce identical bytes.
+///
+/// [`KernelBackend::simd`]: super::kernels::KernelBackend::simd
+#[allow(clippy::too_many_arguments)]
+pub fn pack_planes_xor_into_with(
+    planes: &[u64],
+    w: u32,
+    n: usize,
+    lane0: usize,
+    dst: &mut [u8],
+    threads: usize,
+    simd: bool,
+) {
     debug_assert!(w >= 1 && w <= 64);
     let nblocks = blocks(n);
     let wu = w as usize;
@@ -226,7 +262,7 @@ pub fn pack_planes_xor_into(
             for k in range {
                 let mut buf = [0u64; 64];
                 buf[..wu].copy_from_slice(&planes[k * wu..(k + 1) * wu]);
-                transpose64(&mut buf);
+                transpose64_dispatch(&mut buf, simd);
                 for t in 0..wu {
                     let word = packed_word(&buf, w, t);
                     if word == 0 {
@@ -262,7 +298,7 @@ pub fn pack_planes_xor_into(
         for k in 0..nblocks {
             let mut buf = [0u64; 64];
             buf[..wu].copy_from_slice(&planes[k * wu..(k + 1) * wu]);
-            transpose64(&mut buf);
+            transpose64_dispatch(&mut buf, simd);
             for t in 0..wu {
                 let word = packed_word(&buf, w, t);
                 if word == 0 {
@@ -298,6 +334,22 @@ pub fn unpack_bytes_xor_into_planes(
     out: &mut [u64],
     threads: usize,
 ) {
+    let simd = super::kernels::auto_simd();
+    unpack_bytes_xor_into_planes_with(src, w, n, lane0, out, threads, simd);
+}
+
+/// [`unpack_bytes_xor_into_planes`] with an explicit kernel-arm flag (see
+/// [`pack_planes_xor_into_with`]). Both arms fold identical plane words.
+#[allow(clippy::too_many_arguments)]
+pub fn unpack_bytes_xor_into_planes_with(
+    src: &[u8],
+    w: u32,
+    n: usize,
+    lane0: usize,
+    out: &mut [u64],
+    threads: usize,
+    simd: bool,
+) {
     debug_assert!(w >= 1 && w <= 64);
     let nblocks = blocks(n);
     let wu = w as usize;
@@ -317,7 +369,7 @@ pub fn unpack_bytes_xor_into_planes(
             for (i, b) in buf.iter_mut().take(r).enumerate() {
                 *b = lane_from_words(|j| word_at(src, j), w, mask, lane0 + lo + i);
             }
-            transpose64(&mut buf);
+            transpose64_dispatch(&mut buf, simd);
             // SAFETY: block k updates only its own plane words
             // [k·w, k·w+w), disjoint per block.
             unsafe {
@@ -612,5 +664,31 @@ mod tests {
         assert_eq!(got, planes);
         unpack_bytes_xor_into_planes(&wire, w, n, 0, &mut got, 2);
         assert!(got.iter().all(|v| *v == 0), "double fold must cancel");
+    }
+
+    /// The explicit-arm wire entry points are byte-identical across the
+    /// scalar and (where available) AVX2 transposes, at aligned and
+    /// unaligned segment offsets. Sized to also run under Miri, where the
+    /// `simd=true` arm exercises the clean-refusal dispatch path
+    /// (DESIGN.md §11).
+    #[test]
+    fn wire_with_kernel_arms_agree_miri_sized() {
+        for (w, n, lane0) in [(6u32, 65usize, 0usize), (6, 65, 64), (13, 30, 7)] {
+            let src = random_lanes(n, w, 31 + w as u64);
+            let mut planes = vec![0u64; plane_len(n, w)];
+            lanes_to_planes(&src, w, &mut planes, 1);
+            let nbytes = bitpack::packed_bytes(lane0 + n, w) as usize;
+            let mut wire_s = vec![0u8; nbytes];
+            let mut wire_v = vec![0u8; nbytes];
+            pack_planes_xor_into_with(&planes, w, n, lane0, &mut wire_s, 2, false);
+            pack_planes_xor_into_with(&planes, w, n, lane0, &mut wire_v, 2, true);
+            assert_eq!(wire_s, wire_v, "pack w={w} n={n} lane0={lane0}");
+            let mut got_s = vec![0u64; planes.len()];
+            let mut got_v = vec![0u64; planes.len()];
+            unpack_bytes_xor_into_planes_with(&wire_s, w, n, lane0, &mut got_s, 2, false);
+            unpack_bytes_xor_into_planes_with(&wire_s, w, n, lane0, &mut got_v, 2, true);
+            assert_eq!(got_s, got_v, "unpack w={w} n={n} lane0={lane0}");
+            assert_eq!(got_s, planes, "unpack must invert pack");
+        }
     }
 }

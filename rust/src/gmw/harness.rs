@@ -1,6 +1,13 @@
 //! In-process multi-party harness: runs `p` [`GmwParty`] instances on
 //! threads over a [`local`](crate::net::local) hub. Used by tests, benches,
 //! the figure generator and the single-binary demo mode (`--local-sim`).
+//!
+//! Kernel dispatch: the default-constructed backends resolve the `auto`
+//! kernel choice (DESIGN.md §11), so every harness run exercises the AVX2
+//! plane kernels on hardware that has them and the scalar reference
+//! everywhere else — and `HB_KERNEL=scalar` pins the whole suite to the
+//! reference arm. To force an arm per party, pass a factory built on
+//! `RustKernels::with_kernel` / `scalar` to [`run_parties_with`].
 
 use std::sync::Arc;
 

@@ -54,11 +54,25 @@
 //!
 //! (`n` counts buffer *words*: lanes in the classic layout, plane words in
 //! the bitsliced layout.)
+//!
+//! # Kernel dispatch (DESIGN.md §11)
+//!
+//! Orthogonally to the layout, the two portable backends carry a resolved
+//! *kernel arm*: scalar (the chunked loops below, always available) or the
+//! explicit AVX2 loops in [`super::simd`]. [`KernelChoice`] is the
+//! user-facing knob (`--kernel scalar|simd|auto`, `HB_KERNEL` env
+//! override); resolution happens **once at construction**, so the hot
+//! loops test a plain `bool`. Both arms are bit-identical — pinned by
+//! [`selfcheck`] at coordinator boot and by `tests/kernel_diff.rs`.
 
+use std::sync::OnceLock;
+
+use crate::error::{Error, Result};
 use crate::util::threadpool::par_chunks_mut;
 use crate::util::tuning;
 
 use super::bitsliced;
+use super::simd;
 
 /// How a kernel backend lays out binary-share vectors.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -88,13 +102,106 @@ impl std::fmt::Display for BinLayout {
 
 impl std::str::FromStr for BinLayout {
     type Err = String;
-    fn from_str(s: &str) -> Result<Self, Self::Err> {
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
         match s.trim().to_ascii_lowercase().as_str() {
             "lane" | "lanes" | "lane-per-u64" | "classic" => Ok(BinLayout::LanePerU64),
             "bitsliced" | "bitslice" | "planes" => Ok(BinLayout::Bitsliced),
             other => Err(format!("unknown layout '{other}' (expected 'lane' or 'bitsliced')")),
         }
     }
+}
+
+/// Which kernel arm the portable backends run (DESIGN.md §11): the
+/// `--kernel` CLI knob. `Auto` (the default) takes the AVX2 arm exactly
+/// when the CPU supports it; `Scalar` forces the portable loops; `Simd`
+/// *demands* AVX2 (construction fails without it, see
+/// [`RustKernels::with_kernel`]). The `HB_KERNEL` environment variable,
+/// when set to a parseable value, overrides every programmatic choice —
+/// that is how CI re-runs the whole suite with the AVX2 arm pinned off.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    /// Portable chunked loops only.
+    Scalar,
+    /// Explicit AVX2 loops ([`super::simd`]); an error where unsupported.
+    Simd,
+    /// Runtime detection: AVX2 when available, scalar otherwise.
+    #[default]
+    Auto,
+}
+
+impl KernelChoice {
+    /// Stable label for CLI values, metrics and bench row names.
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelChoice::Scalar => "scalar",
+            KernelChoice::Simd => "simd",
+            KernelChoice::Auto => "auto",
+        }
+    }
+
+    /// The parsed `HB_KERNEL` override, if any (read once per process;
+    /// unparseable values are ignored so a typo degrades to the
+    /// programmatic choice rather than poisoning every constructor).
+    pub fn env_override() -> Option<KernelChoice> {
+        static PARSED: OnceLock<Option<KernelChoice>> = OnceLock::new();
+        *PARSED.get_or_init(|| tuning::kernel_override().and_then(|raw| raw.parse().ok()))
+    }
+
+    /// This choice with the `HB_KERNEL` override applied (the override
+    /// wins so one env var can pin an entire test run to one arm).
+    pub fn effective(self) -> KernelChoice {
+        Self::env_override().unwrap_or(self)
+    }
+
+    /// Resolve to the dispatch flag the kernels store: `true` = AVX2 arm.
+    /// `Simd` without hardware support degrades to `false` here — use
+    /// [`KernelChoice::require`] first where that should be an error.
+    pub fn resolve_simd(self) -> bool {
+        match self.effective() {
+            KernelChoice::Scalar => false,
+            KernelChoice::Simd | KernelChoice::Auto => simd::available(),
+        }
+    }
+
+    /// Fail fast when the *effective* choice demands AVX2 on a machine
+    /// without it (typed [`Error::Kernel`], surfaced at CLI parse /
+    /// coordinator boot rather than as a silent scalar fallback).
+    pub fn require(self) -> Result<()> {
+        if self.effective() == KernelChoice::Simd && !simd::available() {
+            return Err(Error::kernel(
+                "kernel 'simd' requested but AVX2 is not available on this CPU \
+                 (use --kernel auto for runtime fallback)",
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl std::str::FromStr for KernelChoice {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(KernelChoice::Scalar),
+            "simd" | "avx2" => Ok(KernelChoice::Simd),
+            "auto" => Ok(KernelChoice::Auto),
+            other => {
+                Err(format!("unknown kernel '{other}' (expected 'scalar', 'simd' or 'auto')"))
+            }
+        }
+    }
+}
+
+/// The dispatch flag an `Auto` construction resolves to right now — the
+/// arm that legacy entry points without a backend in scope (e.g. the wire
+/// helpers' non-`_with` wrappers) use. Honors `HB_KERNEL`.
+pub fn auto_simd() -> bool {
+    KernelChoice::Auto.resolve_simd()
 }
 
 /// Masked-open / combine primitives for one party.
@@ -168,6 +275,14 @@ pub trait KernelBackend {
         BinLayout::LanePerU64
     }
 
+    /// Whether this backend's resolved kernel arm is the AVX2 one
+    /// (DESIGN.md §11). The engine threads this flag to the wire
+    /// pack/unpack paths, so a forced-scalar backend is scalar
+    /// end-to-end. Backends without an explicit SIMD arm report `false`.
+    fn simd(&self) -> bool {
+        false
+    }
+
     /// Human-readable backend name (for metrics / bench labels).
     fn name(&self) -> &'static str;
 }
@@ -175,20 +290,34 @@ pub trait KernelBackend {
 // ---------------------------------------------------------------------------
 // Shared element-wise inner loops.
 //
-// Both portable backends funnel into these. The loops process fixed-size
-// chunks with exact trip counts so LLVM unrolls and autovectorizes them
-// (SSE2/AVX2) without arch-specific intrinsics; the scalar remainder
-// handles the tail. Bit-exact with the obvious per-element loop.
+// Both portable backends funnel into these. Each boolean loop carries a
+// `simd` flag: when set (and the buffer clears the
+// `tuning::simd_min_words` floor) the explicit AVX2 arm in `gmw::simd`
+// runs; otherwise — and always for the wrapping-arithmetic Mult loops,
+// which AVX2 cannot express (no 64×64-bit lane multiply) — the scalar
+// body below runs. The scalar loops process fixed-size chunks with exact
+// trip counts so LLVM unrolls and autovectorizes them (SSE2) even
+// without the explicit arm. Both arms are bit-exact with the obvious
+// per-element loop.
 // ---------------------------------------------------------------------------
 
 /// Elements per vectorization chunk (4 × u64 = one AVX2 register, ×2 for
 /// unrolling headroom).
 const CHUNK: usize = 8;
 
+/// Whether the AVX2 arm should handle an `n`-word boolean loop.
 #[inline]
-fn xor_into(out: &mut [u64], x: &[u64], y: &[u64]) {
+fn simd_engaged(simd: bool, n: usize) -> bool {
+    simd && n >= tuning::simd_min_words()
+}
+
+#[inline]
+fn xor_into(out: &mut [u64], x: &[u64], y: &[u64], simd: bool) {
     let n = out.len();
     debug_assert!(x.len() == n && y.len() == n);
+    if simd_engaged(simd, n) && simd::xor_into(out, x, y) {
+        return;
+    }
     let main = n - n % CHUNK;
     for ((o, xs), ys) in out[..main]
         .chunks_exact_mut(CHUNK)
@@ -205,6 +334,7 @@ fn xor_into(out: &mut [u64], x: &[u64], y: &[u64]) {
 }
 
 #[inline]
+#[allow(clippy::too_many_arguments)]
 fn and_combine_into(
     out: &mut [u64],
     d: &[u64],
@@ -213,9 +343,13 @@ fn and_combine_into(
     b: &[u64],
     c: &[u64],
     leader: bool,
+    simd: bool,
 ) {
     let n = out.len();
     debug_assert!(d.len() == n && e.len() == n && a.len() == n && b.len() == n && c.len() == n);
+    if simd_engaged(simd, n) && simd::and_combine_into(out, d, e, a, b, c, leader) {
+        return;
+    }
     if leader {
         for i in 0..n {
             out[i] = (d[i] & e[i]) ^ (d[i] & b[i]) ^ (e[i] & a[i]) ^ c[i];
@@ -295,15 +429,23 @@ fn mult_combine_into(
 /// Shared threaded implementations of the layout-agnostic primitives
 /// (element-wise over whatever words the layout stores).
 #[inline]
-fn threaded_and_open(t: usize, u: &[u64], v: &[u64], a: &[u64], b: &[u64], out: &mut [u64]) {
+fn threaded_and_open(
+    t: usize,
+    simd: bool,
+    u: &[u64],
+    v: &[u64],
+    a: &[u64],
+    b: &[u64],
+    out: &mut [u64],
+) {
     let n = u.len();
     debug_assert!(v.len() == n && a.len() == n && b.len() == n && out.len() == 2 * n);
     let (d_out, e_out) = out.split_at_mut(n);
     par_chunks_mut(d_out, t, |off, chunk| {
-        xor_into(chunk, &u[off..off + chunk.len()], &a[off..off + chunk.len()]);
+        xor_into(chunk, &u[off..off + chunk.len()], &a[off..off + chunk.len()], simd);
     });
     par_chunks_mut(e_out, t, |off, chunk| {
-        xor_into(chunk, &v[off..off + chunk.len()], &b[off..off + chunk.len()]);
+        xor_into(chunk, &v[off..off + chunk.len()], &b[off..off + chunk.len()], simd);
     });
 }
 
@@ -311,6 +453,7 @@ fn threaded_and_open(t: usize, u: &[u64], v: &[u64], a: &[u64], b: &[u64], out: 
 #[allow(clippy::too_many_arguments)]
 fn threaded_and_combine(
     t: usize,
+    simd: bool,
     d: &[u64],
     e: &[u64],
     a: &[u64],
@@ -325,7 +468,7 @@ fn threaded_and_combine(
     par_chunks_mut(out, t, |off, chunk| {
         let hi = off + chunk.len();
         let (d, e) = (&d[off..hi], &e[off..hi]);
-        and_combine_into(chunk, d, e, &a[off..hi], &b[off..hi], &c[off..hi], leader);
+        and_combine_into(chunk, d, e, &a[off..hi], &b[off..hi], &c[off..hi], leader, simd);
     });
 }
 
@@ -380,15 +523,20 @@ fn eff_threads(threads: usize, n: usize) -> usize {
 // ---------------------------------------------------------------------------
 
 /// Portable Rust implementation, lane-per-u64 layout, optionally
-/// multi-threaded across lanes.
+/// multi-threaded across lanes. Carries a resolved kernel arm
+/// (DESIGN.md §11): `Default` and [`with_threads`](Self::with_threads)
+/// resolve [`KernelChoice::Auto`], so every existing construction site
+/// picks up AVX2 where the CPU has it (and `HB_KERNEL=scalar` pins the
+/// whole process back to the portable loops).
 #[derive(Debug, Clone)]
 pub struct RustKernels {
     threads: usize,
+    simd: bool,
 }
 
 impl Default for RustKernels {
     fn default() -> Self {
-        RustKernels { threads: 1 }
+        RustKernels { threads: 1, simd: KernelChoice::Auto.resolve_simd() }
     }
 }
 
@@ -396,14 +544,29 @@ impl RustKernels {
     /// Kernels that split lane ranges across up to `threads` OS threads
     /// (only engaged above [`tuning::par_min_lanes`] lanes).
     pub fn with_threads(threads: usize) -> Self {
-        RustKernels { threads: threads.max(1) }
+        RustKernels { threads: threads.max(1), simd: KernelChoice::Auto.resolve_simd() }
+    }
+
+    /// Kernels with an explicit arm choice. Fails (typed
+    /// [`Error::Kernel`]) when the effective choice is
+    /// [`KernelChoice::Simd`] on a CPU without AVX2.
+    pub fn with_kernel(choice: KernelChoice) -> Result<Self> {
+        choice.require()?;
+        Ok(RustKernels { threads: 1, simd: choice.resolve_simd() })
+    }
+
+    /// The always-available reference arm: portable loops, regardless of
+    /// CPU, CLI or `HB_KERNEL`. This is what [`selfcheck`] and the
+    /// differential tests compare the dispatched arm against.
+    pub fn scalar() -> Self {
+        RustKernels { threads: 1, simd: false }
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 impl KernelBackend for RustKernels {
     fn and_open(&mut self, u: &[u64], v: &[u64], a: &[u64], b: &[u64], out: &mut [u64]) {
-        threaded_and_open(eff_threads(self.threads, u.len()), u, v, a, b, out);
+        threaded_and_open(eff_threads(self.threads, u.len()), self.simd, u, v, a, b, out);
     }
 
     fn and_combine(
@@ -416,7 +579,8 @@ impl KernelBackend for RustKernels {
         leader: bool,
         out: &mut [u64],
     ) {
-        threaded_and_combine(eff_threads(self.threads, d.len()), d, e, a, b, c, leader, out);
+        let t = eff_threads(self.threads, d.len());
+        threaded_and_combine(t, self.simd, d, e, a, b, c, leader, out);
     }
 
     fn ks_stage_operands(
@@ -434,10 +598,15 @@ impl KernelBackend for RustKernels {
         let halves = if last { 1 } else { 2 };
         debug_assert!(p.len() == n && u_out.len() == halves * n && v_out.len() == halves * n);
         let t = eff_threads(self.threads, n);
+        let simd = self.simd;
         par_chunks_mut(&mut u_out[..n], t, |off, chunk| {
             chunk.copy_from_slice(&p[off..off + chunk.len()]);
         });
         par_chunks_mut(&mut v_out[..n], t, |off, chunk| {
+            if simd_engaged(simd, chunk.len()) && simd::shl_mask_into(chunk, &g[off..], s, mask)
+            {
+                return;
+            }
             for (i, o) in chunk.iter_mut().enumerate() {
                 *o = (g[off + i] << s) & mask;
             }
@@ -447,6 +616,11 @@ impl KernelBackend for RustKernels {
                 chunk.copy_from_slice(&p[off..off + chunk.len()]);
             });
             par_chunks_mut(&mut v_out[n..], t, |off, chunk| {
+                if simd_engaged(simd, chunk.len())
+                    && simd::shl_mask_into(chunk, &p[off..], s, mask)
+                {
+                    return;
+                }
                 for (i, o) in chunk.iter_mut().enumerate() {
                     *o = (p[off + i] << s) & mask;
                 }
@@ -475,6 +649,10 @@ impl KernelBackend for RustKernels {
         self.threads = threads.max(1);
     }
 
+    fn simd(&self) -> bool {
+        self.simd
+    }
+
     fn name(&self) -> &'static str {
         "rust"
     }
@@ -498,25 +676,38 @@ impl KernelBackend for RustKernels {
 #[derive(Debug, Clone)]
 pub struct BitslicedKernels {
     threads: usize,
+    simd: bool,
 }
 
 impl Default for BitslicedKernels {
     fn default() -> Self {
-        BitslicedKernels { threads: 1 }
+        BitslicedKernels { threads: 1, simd: KernelChoice::Auto.resolve_simd() }
     }
 }
 
 impl BitslicedKernels {
     /// Bitsliced kernels with a lane-parallelism budget of `threads`.
     pub fn with_threads(threads: usize) -> Self {
-        BitslicedKernels { threads: threads.max(1) }
+        BitslicedKernels { threads: threads.max(1), simd: KernelChoice::Auto.resolve_simd() }
+    }
+
+    /// Bitsliced kernels with an explicit arm choice (see
+    /// [`RustKernels::with_kernel`]).
+    pub fn with_kernel(choice: KernelChoice) -> Result<Self> {
+        choice.require()?;
+        Ok(BitslicedKernels { threads: 1, simd: choice.resolve_simd() })
+    }
+
+    /// The always-available reference arm (see [`RustKernels::scalar`]).
+    pub fn scalar() -> Self {
+        BitslicedKernels { threads: 1, simd: false }
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 impl KernelBackend for BitslicedKernels {
     fn and_open(&mut self, u: &[u64], v: &[u64], a: &[u64], b: &[u64], out: &mut [u64]) {
-        threaded_and_open(eff_threads(self.threads, u.len()), u, v, a, b, out);
+        threaded_and_open(eff_threads(self.threads, u.len()), self.simd, u, v, a, b, out);
     }
 
     fn and_combine(
@@ -529,7 +720,8 @@ impl KernelBackend for BitslicedKernels {
         leader: bool,
         out: &mut [u64],
     ) {
-        threaded_and_combine(eff_threads(self.threads, d.len()), d, e, a, b, c, leader, out);
+        let t = eff_threads(self.threads, d.len());
+        threaded_and_combine(t, self.simd, d, e, a, b, c, leader, out);
     }
 
     fn ks_stage_operands(
@@ -584,9 +776,106 @@ impl KernelBackend for BitslicedKernels {
         BinLayout::Bitsliced
     }
 
+    fn simd(&self) -> bool {
+        self.simd
+    }
+
     fn name(&self) -> &'static str {
         "bitsliced"
     }
+}
+
+// ---------------------------------------------------------------------------
+// Boot-time kernel cross-check.
+// ---------------------------------------------------------------------------
+
+/// Cross-check the dispatched kernel arm against the forced-scalar
+/// reference on deterministic inputs — every boolean primitive, the
+/// Kogge–Stone operand builder in both layouts, the 64×64 transpose and
+/// the fused wire pack/unpack (DESIGN.md §11). Returns a typed
+/// [`Error::Kernel`] naming the first diverging primitive, so a broken
+/// SIMD arm (miscompile, unexpected CPU behaviour) fails fast at
+/// coordinator boot or `selftest` instead of silently serving wrong
+/// shares. Cost is a few thousand word-ops — noise at boot.
+pub fn selfcheck(choice: KernelChoice) -> Result<()> {
+    choice.require()?;
+    let mismatch = |what: &str| {
+        Error::kernel(format!(
+            "kernel selfcheck: '{}' arm diverges from scalar reference in {what}",
+            choice.effective().label()
+        ))
+    };
+    let n = tuning::simd_min_words().max(8) * 40 + 7; // odd: exercise tails
+    let mut prg = crate::crypto::prg::Prg::new(0x5E1F, 0xC8EC);
+    let (u, v) = (prg.vec_u64(n), prg.vec_u64(n));
+    let (a, b, c) = (prg.vec_u64(n), prg.vec_u64(n), prg.vec_u64(n));
+    let w = 20u32;
+    let mask = crate::ring::low_mask(w);
+    // HOT-PATH-ALLOW: boot-only selfcheck scratch, never on the round path.
+    let g: Vec<u64> = u.iter().map(|x| x & mask).collect();
+    let p: Vec<u64> = v.iter().map(|x| x & mask).collect();
+
+    let mut dut = RustKernels::with_kernel(choice)?;
+    let mut reference = RustKernels::scalar();
+    // HOT-PATH-ALLOW: boot-only selfcheck scratch, never on the round path.
+    let mut out_d = vec![0u64; 2 * n];
+    let mut out_r = vec![0u64; 2 * n];
+    dut.and_open(&u, &v, &a, &b, &mut out_d);
+    reference.and_open(&u, &v, &a, &b, &mut out_r);
+    if out_d != out_r {
+        return Err(mismatch("and_open"));
+    }
+    for leader in [false, true] {
+        // HOT-PATH-ALLOW: boot-only selfcheck scratch.
+        let mut z_d = vec![0u64; n];
+        let mut z_r = vec![0u64; n];
+        dut.and_combine(&u, &v, &a, &b, &c, leader, &mut z_d);
+        reference.and_combine(&u, &v, &a, &b, &c, leader, &mut z_r);
+        if z_d != z_r {
+            return Err(mismatch("and_combine"));
+        }
+    }
+    for (s, last) in [(1u32, false), (8, true)] {
+        let halves = if last { 1 } else { 2 };
+        // HOT-PATH-ALLOW: boot-only selfcheck scratch.
+        let mut ud = vec![0u64; halves * n];
+        let mut vd = vec![0u64; halves * n];
+        // HOT-PATH-ALLOW: boot-only selfcheck scratch.
+        let mut ur = vec![0u64; halves * n];
+        let mut vr = vec![0u64; halves * n];
+        dut.ks_stage_operands(&g, &p, s, w, last, &mut ud, &mut vd);
+        reference.ks_stage_operands(&g, &p, s, w, last, &mut ur, &mut vr);
+        if ud != ur || vd != vr {
+            return Err(mismatch("ks_stage_operands"));
+        }
+    }
+
+    // The bitsliced side: transpose + the fused wire boundary, dispatched
+    // vs forced-scalar.
+    let simd = choice.resolve_simd();
+    let nl = 130usize; // two full blocks + a ragged tail block
+    // HOT-PATH-ALLOW: boot-only selfcheck scratch, never on the round path.
+    let lanes: Vec<u64> = g.iter().take(nl).copied().collect();
+    let mut planes = vec![0u64; bitsliced::plane_len(nl, w)];
+    bitsliced::lanes_to_planes(&lanes, w, &mut planes, 1);
+    let nbytes = crate::bitpack::packed_bytes(nl, w) as usize;
+    // HOT-PATH-ALLOW: boot-only selfcheck scratch, never on the round path.
+    let mut wire_d = vec![0u8; nbytes];
+    let mut wire_r = vec![0u8; nbytes];
+    bitsliced::pack_planes_xor_into_with(&planes, w, nl, 0, &mut wire_d, 1, simd);
+    bitsliced::pack_planes_xor_into_with(&planes, w, nl, 0, &mut wire_r, 1, false);
+    if wire_d != wire_r {
+        return Err(mismatch("pack_planes_xor_into"));
+    }
+    // HOT-PATH-ALLOW: boot-only selfcheck scratch, never on the round path.
+    let mut back_d = vec![0u64; planes.len()];
+    let mut back_r = vec![0u64; planes.len()];
+    bitsliced::unpack_bytes_xor_into_planes_with(&wire_d, w, nl, 0, &mut back_d, 1, simd);
+    bitsliced::unpack_bytes_xor_into_planes_with(&wire_r, w, nl, 0, &mut back_r, 1, false);
+    if back_d != back_r || back_d != planes {
+        return Err(mismatch("unpack_bytes_xor_into_planes"));
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -691,9 +980,11 @@ mod tests {
             sub_wrapping_into(&mut out, &d, &e);
             let naive: Vec<u64> = d.iter().zip(&e).map(|(x, y)| x.wrapping_sub(*y)).collect();
             assert_eq!(out, naive, "sub n={n}");
-            xor_into(&mut out, &d, &e);
-            let naive: Vec<u64> = d.iter().zip(&e).map(|(x, y)| x ^ y).collect();
-            assert_eq!(out, naive, "xor n={n}");
+            for simd in [false, true] {
+                xor_into(&mut out, &d, &e, simd);
+                let naive: Vec<u64> = d.iter().zip(&e).map(|(x, y)| x ^ y).collect();
+                assert_eq!(out, naive, "xor n={n} simd={simd}");
+            }
             for leader in [false, true] {
                 mult_combine_into(&mut out, &d, &e, &a, &b, &c, leader);
                 let naive: Vec<u64> = (0..n)
@@ -708,17 +999,19 @@ mod tests {
                     })
                     .collect();
                 assert_eq!(out, naive, "mult_combine n={n} leader={leader}");
-                and_combine_into(&mut out, &d, &e, &a, &b, &c, leader);
-                let naive: Vec<u64> = (0..n)
-                    .map(|i| {
-                        let mut z = (d[i] & b[i]) ^ (e[i] & a[i]) ^ c[i];
-                        if leader {
-                            z ^= d[i] & e[i];
-                        }
-                        z
-                    })
-                    .collect();
-                assert_eq!(out, naive, "and_combine n={n} leader={leader}");
+                for simd in [false, true] {
+                    and_combine_into(&mut out, &d, &e, &a, &b, &c, leader, simd);
+                    let naive: Vec<u64> = (0..n)
+                        .map(|i| {
+                            let mut z = (d[i] & b[i]) ^ (e[i] & a[i]) ^ c[i];
+                            if leader {
+                                z ^= d[i] & e[i];
+                            }
+                            z
+                        })
+                        .collect();
+                    assert_eq!(out, naive, "and_combine n={n} leader={leader} simd={simd}");
+                }
             }
         }
     }
@@ -786,5 +1079,83 @@ mod tests {
         assert_eq!(BinLayout::Bitsliced.label(), "bitsliced");
         assert_eq!(RustKernels::default().bin_layout(), BinLayout::LanePerU64);
         assert_eq!(BitslicedKernels::default().bin_layout(), BinLayout::Bitsliced);
+    }
+
+    #[test]
+    fn kernel_choice_parse_and_labels() {
+        assert_eq!("scalar".parse::<KernelChoice>().unwrap(), KernelChoice::Scalar);
+        assert_eq!("SIMD".parse::<KernelChoice>().unwrap(), KernelChoice::Simd);
+        assert_eq!("avx2".parse::<KernelChoice>().unwrap(), KernelChoice::Simd);
+        assert_eq!(" auto ".parse::<KernelChoice>().unwrap(), KernelChoice::Auto);
+        assert!("fast".parse::<KernelChoice>().is_err());
+        assert_eq!(KernelChoice::default(), KernelChoice::Auto);
+        assert_eq!(KernelChoice::Simd.label(), "simd");
+        assert_eq!(KernelChoice::Auto.to_string(), "auto");
+    }
+
+    /// The resolution invariants that hold in *any* environment (with or
+    /// without AVX2, with or without an `HB_KERNEL` override): the
+    /// reference constructors are scalar, the AVX2 flag implies hardware
+    /// support, and `Auto` never fails `require`.
+    #[test]
+    fn kernel_resolution_invariants() {
+        assert!(!RustKernels::scalar().simd());
+        assert!(!BitslicedKernels::scalar().simd());
+        for k in [RustKernels::default().simd(), RustKernels::with_threads(4).simd()] {
+            assert!(!k || super::super::simd::available(), "simd arm without AVX2");
+        }
+        assert_eq!(RustKernels::default().simd(), auto_simd());
+        assert_eq!(BitslicedKernels::default().simd(), auto_simd());
+        KernelChoice::Auto.require().expect("auto must always be constructible");
+        let forced = RustKernels::with_kernel(KernelChoice::Scalar).unwrap();
+        assert_eq!(forced.simd(), KernelChoice::Scalar.resolve_simd());
+        // `Simd` either constructs with the arm engaged or fails typed.
+        match RustKernels::with_kernel(KernelChoice::Simd) {
+            Ok(k) => assert_eq!(k.simd(), KernelChoice::Simd.resolve_simd()),
+            Err(e) => {
+                assert!(matches!(e, crate::Error::Kernel(_)), "want Error::Kernel, got {e}");
+                assert!(!super::super::simd::available() || KernelChoice::env_override().is_some());
+            }
+        }
+    }
+
+    /// The dispatched arm (whatever it resolves to here) passes the boot
+    /// cross-check against the forced-scalar reference, in every choice.
+    #[test]
+    fn selfcheck_passes_for_all_constructible_choices() {
+        selfcheck(KernelChoice::Scalar).expect("scalar vs scalar");
+        selfcheck(KernelChoice::Auto).expect("auto vs scalar");
+        if KernelChoice::Simd.require().is_ok() {
+            selfcheck(KernelChoice::Simd).expect("simd vs scalar");
+        }
+    }
+
+    /// Forced-scalar and dispatched kernels agree on every primitive at
+    /// sizes above and below the SIMD floor (the n < floor arm must take
+    /// the scalar tail path inside the dispatched kernel too).
+    #[test]
+    fn scalar_and_dispatched_kernels_agree() {
+        let mut prg = Prg::new(0xD15, 7);
+        for n in [1usize, tuning::simd_min_words(), 4 * tuning::simd_min_words() + 3] {
+            let u = prg.vec_u64(n);
+            let v = prg.vec_u64(n);
+            let a = prg.vec_u64(n);
+            let b = prg.vec_u64(n);
+            let c = prg.vec_u64(n);
+            let mut auto_k = RustKernels::default();
+            let mut scal_k = RustKernels::scalar();
+            let mut de1 = vec![0u64; 2 * n];
+            let mut de2 = vec![0u64; 2 * n];
+            auto_k.and_open(&u, &v, &a, &b, &mut de1);
+            scal_k.and_open(&u, &v, &a, &b, &mut de2);
+            assert_eq!(de1, de2, "and_open n={n}");
+            let mut z1 = vec![0u64; n];
+            let mut z2 = vec![0u64; n];
+            for leader in [false, true] {
+                auto_k.and_combine(&u, &v, &a, &b, &c, leader, &mut z1);
+                scal_k.and_combine(&u, &v, &a, &b, &c, leader, &mut z2);
+                assert_eq!(z1, z2, "and_combine n={n} leader={leader}");
+            }
+        }
     }
 }

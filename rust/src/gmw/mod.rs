@@ -113,6 +113,7 @@ pub mod bitsliced;
 pub mod harness;
 pub mod kernels;
 pub mod pipeline;
+pub mod simd;
 
 /// The scratch arena now lives in [`crate::util::arena`] (it also backs the
 /// transport payload pool and the `ShareExecutor` activation pool); this
@@ -226,6 +227,12 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
     }
     pub fn kernel_name(&self) -> &'static str {
         self.kernels.name()
+    }
+    /// Whether this party's kernel backend dispatches to the AVX2 plane
+    /// kernels (DESIGN.md §11). Purely informational — both arms are
+    /// bit-identical — but the selftest and serve banner report it.
+    pub fn kernel_simd(&self) -> bool {
+        self.kernels.simd()
     }
     /// Binary-share layout of this party's kernel backend (see the
     /// "Lane layouts" section of the module docs).
@@ -397,14 +404,16 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
             wire.fill(0);
         }
         let threads = self.threads;
+        let simd = self.kernels.simd();
         for s in 0..segs {
-            bitsliced::pack_planes_xor_into(
+            bitsliced::pack_planes_xor_into_with(
                 &shares[s * pl..(s + 1) * pl],
                 w,
                 n_seg,
                 s * n_seg,
                 &mut wire,
                 threads,
+                simd,
             );
         }
         self.transport.exchange_all_into(phase, &wire, &mut self.recv)?;
@@ -423,13 +432,14 @@ impl<T: Transport, K: KernelBackend> GmwParty<T, K> {
                 )));
             }
             for s in 0..segs {
-                bitsliced::unpack_bytes_xor_into_planes(
+                bitsliced::unpack_bytes_xor_into_planes_with(
                     buf,
                     w,
                     n_seg,
                     s * n_seg,
                     &mut out[s * pl..(s + 1) * pl],
                     threads,
+                    simd,
                 );
             }
         }

@@ -404,14 +404,16 @@ fn and_round<T: Transport, K: KernelBackend>(
                 } else {
                     wire.fill(0);
                 }
+                let simd = party.kernels.simd();
                 for seg in 0..2 * halves {
-                    bitsliced::pack_planes_xor_into(
+                    bitsliced::pack_planes_xor_into_with(
                         &de[seg * unit..(seg + 1) * unit],
                         w,
                         nn,
                         seg * nn,
                         &mut wire,
                         threads,
+                        simd,
                     );
                 }
             }
@@ -443,14 +445,16 @@ fn and_round<T: Transport, K: KernelBackend>(
                     bitpack::unpack_bytes_xor_into(buf, w, 2 * halves * nn, &mut opened, threads)
                 }
                 BinLayout::Bitsliced => {
+                    let simd = party.kernels.simd();
                     for seg in 0..2 * halves {
-                        bitsliced::unpack_bytes_xor_into_planes(
+                        bitsliced::unpack_bytes_xor_into_planes_with(
                             buf,
                             w,
                             nn,
                             seg * nn,
                             &mut opened[seg * unit..(seg + 1) * unit],
                             threads,
+                            simd,
                         );
                     }
                 }

@@ -1,0 +1,447 @@
+//! Explicit AVX2 kernels for the hot bit-plane loops (DESIGN.md §11).
+//!
+//! The portable loops in [`super::kernels`] and [`super::bitsliced`] are
+//! written so LLVM *can* autovectorize them, but the codegen is at the
+//! mercy of the default `x86-64` baseline (SSE2). This module provides the
+//! same inner loops as explicit AVX2 intrinsics — 4 × u64 per instruction —
+//! selected at **runtime** via [`available`] (an `is_x86_feature_detected!`
+//! probe, cached per process), so one generic binary uses AVX2 where the
+//! CPU has it and falls back to the portable loops everywhere else.
+//!
+//! # Dispatch contract
+//!
+//! Every public function here is a *safe* wrapper returning `bool`:
+//! `true` means the AVX2 arm ran and the output is complete; `false` means
+//! nothing was touched and the caller must run its scalar path. Callers
+//! ([`super::kernels`]'s backends, [`super::bitsliced`]'s transpose sites)
+//! gate on the resolved [`super::kernels::KernelChoice`] and the
+//! [`crate::util::tuning::simd_min_words`] floor, so forced-scalar runs
+//! (`--kernel scalar` / `HB_KERNEL=scalar`) never enter this module and
+//! machines without AVX2 lose nothing but speed. Bit-for-bit equality of
+//! the two arms is pinned by `tests/kernel_diff.rs` and the in-module
+//! tests below.
+//!
+//! # Safety rationale (the `// SAFETY:` wall, hblint rule S)
+//!
+//! Three intrinsic families are used, each with one proof obligation:
+//!
+//! * **Unaligned load/store** (`_mm256_loadu_si256` / `_mm256_storeu_si256`)
+//!   — require only that the 32-byte window be in-bounds of the slice.
+//!   Every loop processes `len - len % 4` words in exact 4-word steps after
+//!   asserting the slice lengths, so `i + 4 <= len` at every access; the
+//!   `loadu`/`storeu` forms have no alignment requirement.
+//! * **Lane-wise logic/shift** (`_mm256_{xor,and,sll,srl}_…`,
+//!   `_mm256_set1_epi64x`, `_mm_cvtsi64_si128`) — operate on register
+//!   values only; they are `unsafe` purely because they require the AVX2
+//!   (resp. SSE2) target feature.
+//! * **`#[target_feature(enable = "avx2")]`** — calling such a function is
+//!   sound iff the CPU actually has AVX2. Every call site is guarded by
+//!   [`available`], which caches a runtime `is_x86_feature_detected!`
+//!   probe; there is no other path into the `avx2` module.
+//!
+//! The in-place [`transpose64`] additionally relies on the two 4-word
+//! windows of each butterfly being disjoint: the vectorized passes have
+//! `s ∈ {32, 16, 8, 4}` and pair `a[k..k+4]` with `a[k+s..k+s+4]`, so the
+//! windows are `s ≥ 4` words apart. The final `s ∈ {2, 1}` passes run
+//! scalar (their butterflies interleave below register width).
+//!
+//! # Miri
+//!
+//! [`available`] is compiled to return `false` under Miri, so interpreted
+//! runs always take the portable arm — the dispatch *logic* is still
+//! exercised (see the `*_miri_sized` tests below), while the intrinsics
+//! themselves are vouched for by the native differential sweeps.
+
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+fn detect() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(any(not(target_arch = "x86_64"), miri))]
+fn detect() -> bool {
+    false
+}
+
+/// True when the AVX2 arm can run on this CPU (runtime-detected once and
+/// cached; always `false` off x86-64 and under Miri). This is the *only*
+/// gate the `unsafe` intrinsic paths rely on — see the module docs.
+pub fn available() -> bool {
+    static AVX2: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVX2.get_or_init(detect)
+}
+
+/// AVX2 `out[i] = x[i] ^ y[i]` over `out.len()` words. Returns `false`
+/// (output untouched) when AVX2 is unavailable. `x`/`y` may be longer than
+/// `out` (the threaded kernels pass suffix slices).
+pub fn xor_into(out: &mut [u64], x: &[u64], y: &[u64]) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if available() {
+            assert!(x.len() >= out.len() && y.len() >= out.len());
+            // SAFETY: AVX2 verified by `available()`; slice bounds asserted
+            // above cover every 4-word window the callee touches.
+            unsafe { avx2::xor_into(out, x, y) };
+            return true;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = (out, x, y);
+    false
+}
+
+/// AVX2 Beaver-AND combine:
+/// `out[i] = [leader](d[i] & e[i]) ^ (d[i] & b[i]) ^ (e[i] & a[i]) ^ c[i]`.
+/// Returns `false` (output untouched) when AVX2 is unavailable.
+pub fn and_combine_into(
+    out: &mut [u64],
+    d: &[u64],
+    e: &[u64],
+    a: &[u64],
+    b: &[u64],
+    c: &[u64],
+    leader: bool,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if available() {
+            let n = out.len();
+            assert!(
+                d.len() >= n && e.len() >= n && a.len() >= n && b.len() >= n && c.len() >= n
+            );
+            // SAFETY: AVX2 verified by `available()`; slice bounds asserted
+            // above cover every 4-word window the callee touches.
+            unsafe { avx2::and_combine_into(out, d, e, a, b, c, leader) };
+            return true;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = (out, d, e, a, b, c, leader);
+    false
+}
+
+/// AVX2 lane shift-and-mask: `out[i] = (src[i] << s) & mask` — the
+/// Kogge–Stone `v`-operand build in the lane-per-u64 layout. Requires
+/// `s < 64` (as the scalar path does). Returns `false` (output untouched)
+/// when AVX2 is unavailable.
+pub fn shl_mask_into(out: &mut [u64], src: &[u64], s: u32, mask: u64) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if available() {
+            debug_assert!(s < 64);
+            assert!(src.len() >= out.len());
+            // SAFETY: AVX2 verified by `available()`; slice bounds asserted
+            // above cover every 4-word window the callee touches.
+            unsafe { avx2::shl_mask_into(out, src, s, mask) };
+            return true;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = (out, src, s, mask);
+    false
+}
+
+/// AVX2 in-place 64×64 bit-matrix transpose, bit-identical to the scalar
+/// [`super::bitsliced::transpose64`] (Hacker's Delight §7-3): the
+/// `s ∈ {32, 16, 8, 4}` butterfly passes run 4 rows per instruction, the
+/// final `s ∈ {2, 1}` passes run scalar. Returns `false` (matrix
+/// untouched) when AVX2 is unavailable.
+pub fn transpose64(a: &mut [u64; 64]) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if available() {
+            // SAFETY: AVX2 verified by `available()`; the callee only
+            // touches in-bounds 4-word windows of the fixed 64-word array.
+            unsafe { avx2::transpose64(a) };
+            return true;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = a;
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! The intrinsic bodies. Nothing in here is reachable without passing
+    //! the [`super::available`] gate — see the module-level safety
+    //! rationale (DESIGN.md §11).
+
+    use core::arch::x86_64::{
+        __m256i, _mm256_and_si256, _mm256_loadu_si256, _mm256_set1_epi64x, _mm256_sll_epi64,
+        _mm256_srl_epi64, _mm256_storeu_si256, _mm256_xor_si256, _mm_cvtsi64_si128,
+    };
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller contract — AVX2 support verified and
+    // `x.len() >= out.len()` and `y.len() >= out.len()`.
+    pub(super) unsafe fn xor_into(out: &mut [u64], x: &[u64], y: &[u64]) {
+        let n = out.len();
+        let main = n - n % 4;
+        let mut i = 0;
+        while i < main {
+            // SAFETY: i + 4 <= main <= n and the caller asserted
+            // x.len(), y.len() >= n; unaligned load/store.
+            unsafe {
+                let xv = _mm256_loadu_si256(x.as_ptr().add(i).cast::<__m256i>());
+                let yv = _mm256_loadu_si256(y.as_ptr().add(i).cast::<__m256i>());
+                let o = out.as_mut_ptr().add(i).cast::<__m256i>();
+                _mm256_storeu_si256(o, _mm256_xor_si256(xv, yv));
+            }
+            i += 4;
+        }
+        for k in main..n {
+            out[k] = x[k] ^ y[k];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller contract — AVX2 support verified and every input
+    // slice is at least `out.len()` long.
+    pub(super) unsafe fn and_combine_into(
+        out: &mut [u64],
+        d: &[u64],
+        e: &[u64],
+        a: &[u64],
+        b: &[u64],
+        c: &[u64],
+        leader: bool,
+    ) {
+        let n = out.len();
+        let main = n - n % 4;
+        // All-ones when leader: the d∧e term is folded in branch-free by
+        // masking it with this register (zero ⇒ XOR no-op).
+        // SAFETY: register-only lane op; AVX2 verified by the caller.
+        let lead = unsafe { _mm256_set1_epi64x(if leader { -1 } else { 0 }) };
+        let mut i = 0;
+        while i < main {
+            // SAFETY: i + 4 <= main <= n and the caller asserted all input
+            // slices are >= n words; unaligned load/store.
+            unsafe {
+                let dv = _mm256_loadu_si256(d.as_ptr().add(i).cast::<__m256i>());
+                let ev = _mm256_loadu_si256(e.as_ptr().add(i).cast::<__m256i>());
+                let av = _mm256_loadu_si256(a.as_ptr().add(i).cast::<__m256i>());
+                let bv = _mm256_loadu_si256(b.as_ptr().add(i).cast::<__m256i>());
+                let cv = _mm256_loadu_si256(c.as_ptr().add(i).cast::<__m256i>());
+                let de = _mm256_and_si256(_mm256_and_si256(dv, ev), lead);
+                let z = _mm256_xor_si256(
+                    _mm256_xor_si256(de, _mm256_and_si256(dv, bv)),
+                    _mm256_xor_si256(_mm256_and_si256(ev, av), cv),
+                );
+                _mm256_storeu_si256(out.as_mut_ptr().add(i).cast::<__m256i>(), z);
+            }
+            i += 4;
+        }
+        let lead_s = if leader { u64::MAX } else { 0 };
+        for k in main..n {
+            out[k] = (d[k] & e[k] & lead_s) ^ (d[k] & b[k]) ^ (e[k] & a[k]) ^ c[k];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller contract — AVX2 support verified,
+    // `src.len() >= out.len()`, and `s < 64`.
+    pub(super) unsafe fn shl_mask_into(out: &mut [u64], src: &[u64], s: u32, mask: u64) {
+        let n = out.len();
+        let main = n - n % 4;
+        // SAFETY: register-only lane ops; AVX2 verified by the caller.
+        let (mv, sh) = unsafe { (_mm256_set1_epi64x(mask as i64), _mm_cvtsi64_si128(s as i64)) };
+        let mut i = 0;
+        while i < main {
+            // SAFETY: i + 4 <= main <= n and the caller asserted
+            // src.len() >= n; unaligned load/store.
+            unsafe {
+                let v = _mm256_loadu_si256(src.as_ptr().add(i).cast::<__m256i>());
+                let shifted = _mm256_and_si256(_mm256_sll_epi64(v, sh), mv);
+                _mm256_storeu_si256(out.as_mut_ptr().add(i).cast::<__m256i>(), shifted);
+            }
+            i += 4;
+        }
+        for k in main..n {
+            out[k] = (src[k] << s) & mask;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller contract — AVX2 support verified. All accesses are
+    // in-bounds 4-word windows of the fixed `[u64; 64]`.
+    pub(super) unsafe fn transpose64(a: &mut [u64; 64]) {
+        // Butterfly passes s = 32, 16, 8, 4 (masks per Hacker's Delight
+        // §7-3): the row indices with bit log2(s) clear come in runs of s
+        // consecutive values, so each pass is 4-wide vectorizable.
+        const PASSES: [(usize, u64); 4] = [
+            (32, 0x0000_0000_FFFF_FFFF),
+            (16, 0x0000_FFFF_0000_FFFF),
+            (8, 0x00FF_00FF_00FF_00FF),
+            (4, 0x0F0F_0F0F_0F0F_0F0F),
+        ];
+        for (s, m) in PASSES {
+            // SAFETY: register-only lane ops; AVX2 verified by the caller.
+            let (mv, sh) = unsafe { (_mm256_set1_epi64x(m as i64), _mm_cvtsi64_si128(s as i64)) };
+            let mut base = 0usize;
+            while base < 64 {
+                let mut k = base;
+                while k < base + s {
+                    // SAFETY: k + 4 <= base + s and k + s + 4 <= base + 2s
+                    // <= 64, so both 4-word windows are in-bounds; they are
+                    // s >= 4 words apart, hence disjoint, and both loads
+                    // happen before either store.
+                    unsafe {
+                        let pk = a.as_mut_ptr().add(k);
+                        let ps = a.as_mut_ptr().add(k + s);
+                        let hi = _mm256_loadu_si256(pk.cast::<__m256i>());
+                        let lo = _mm256_loadu_si256(ps.cast::<__m256i>());
+                        let t = _mm256_and_si256(
+                            _mm256_xor_si256(_mm256_srl_epi64(hi, sh), lo),
+                            mv,
+                        );
+                        _mm256_storeu_si256(ps.cast::<__m256i>(), _mm256_xor_si256(lo, t));
+                        let back = _mm256_xor_si256(hi, _mm256_sll_epi64(t, sh));
+                        _mm256_storeu_si256(pk.cast::<__m256i>(), back);
+                    }
+                    k += 4;
+                }
+                base += 2 * s;
+            }
+        }
+        // Final passes s = 2, 1: butterflies interleave below register
+        // width — scalar, same recurrence as the portable transpose.
+        for (s, m) in [(2usize, 0x3333_3333_3333_3333u64), (1, 0x5555_5555_5555_5555)] {
+            let mut k = 0usize;
+            while k < 64 {
+                let t = ((a[k] >> s) ^ a[k + s]) & m;
+                a[k] ^= t << s;
+                a[k + s] ^= t;
+                k = (k + s + 1) & !s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::prg::Prg;
+    use crate::gmw::bitsliced;
+
+    /// The detection probe is cached and consistent; under Miri it is
+    /// pinned `false` so interpreted runs stay on the portable arm.
+    #[test]
+    fn availability_is_stable() {
+        assert_eq!(available(), available());
+        #[cfg(miri)]
+        assert!(!available(), "Miri must always take the scalar arm");
+        #[cfg(not(target_arch = "x86_64"))]
+        assert!(!available(), "non-x86 must always take the scalar arm");
+    }
+
+    /// Every wrapper either runs (and then must match the scalar
+    /// reference bit-for-bit) or leaves the output untouched.
+    #[test]
+    fn wrappers_match_scalar_reference() {
+        let mut prg = Prg::new(0xA2C2, 1);
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 33, 100] {
+            let d = prg.vec_u64(n);
+            let e = prg.vec_u64(n);
+            let a = prg.vec_u64(n);
+            let b = prg.vec_u64(n);
+            let c = prg.vec_u64(n);
+
+            let mut out = vec![0u64; n];
+            let ran = xor_into(&mut out, &d, &e);
+            assert_eq!(ran, available());
+            if ran {
+                let naive: Vec<u64> = d.iter().zip(&e).map(|(x, y)| x ^ y).collect();
+                assert_eq!(out, naive, "xor n={n}");
+            }
+
+            for leader in [false, true] {
+                let mut out = vec![0u64; n];
+                if and_combine_into(&mut out, &d, &e, &a, &b, &c, leader) {
+                    let naive: Vec<u64> = (0..n)
+                        .map(|i| {
+                            let mut z = (d[i] & b[i]) ^ (e[i] & a[i]) ^ c[i];
+                            if leader {
+                                z ^= d[i] & e[i];
+                            }
+                            z
+                        })
+                        .collect();
+                    assert_eq!(out, naive, "and_combine n={n} leader={leader}");
+                }
+            }
+
+            for (s, w) in [(1u32, 6u32), (2, 20), (16, 64)] {
+                let mask = crate::ring::low_mask(w);
+                let mut out = vec![0u64; n];
+                if shl_mask_into(&mut out, &d, s, mask) {
+                    let naive: Vec<u64> = d.iter().map(|x| (x << s) & mask).collect();
+                    assert_eq!(out, naive, "shl n={n} s={s} w={w}");
+                }
+            }
+        }
+    }
+
+    /// The AVX2 transpose agrees with the scalar Hacker's Delight
+    /// transpose and stays an involution.
+    #[test]
+    fn transpose_matches_scalar_and_is_involution() {
+        let mut prg = Prg::new(0x7A0, 5);
+        for trial in 0..8 {
+            let mut a = [0u64; 64];
+            for v in a.iter_mut() {
+                *v = prg.next_u64();
+            }
+            let mut simd = a;
+            let mut scalar = a;
+            bitsliced::transpose64(&mut scalar);
+            if transpose64(&mut simd) {
+                assert_eq!(simd, scalar, "trial {trial}");
+                assert!(transpose64(&mut simd));
+                assert_eq!(simd, a, "transpose must be an involution");
+            } else {
+                assert_eq!(simd, a, "a skipped dispatch must not touch the matrix");
+            }
+        }
+    }
+
+    /// Suffix-sliced inputs (the threaded kernels hand `&x[off..]` slices
+    /// longer than `out`) are read from the front, like the scalar path.
+    #[test]
+    fn wrappers_accept_longer_inputs() {
+        let x: Vec<u64> = (0..10).map(|i| i * 3 + 1).collect();
+        let y: Vec<u64> = (0..10).map(|i| i * 7 + 5).collect();
+        let mut out = vec![0u64; 6];
+        if xor_into(&mut out, &x, &y) {
+            for (i, o) in out.iter().enumerate() {
+                assert_eq!(*o, x[i] ^ y[i]);
+            }
+        }
+    }
+
+    /// Miri-sized replica (PR 7 convention): under the interpreter the
+    /// dispatch must *cleanly refuse* — outputs untouched, `false`
+    /// returned — which is exactly the contract the scalar fallback in
+    /// `gmw::kernels` relies on. Natively this doubles as a tiny
+    /// smoke-run of every wrapper.
+    #[test]
+    fn dispatch_contract_miri_sized() {
+        let x = [1u64, 2, 3, 4, 5];
+        let y = [9u64, 8, 7, 6, 5];
+        let mut out = [0u64; 5];
+        let ran = xor_into(&mut out, &x, &y);
+        assert_eq!(ran, available());
+        if !ran {
+            assert_eq!(out, [0u64; 5], "skipped dispatch must leave the output alone");
+        }
+        let mut m = [0u64; 64];
+        m[0] = u64::MAX;
+        let ran = transpose64(&mut m);
+        assert_eq!(ran, available());
+        if ran {
+            // Row 0 all-ones transposes to column 0: every row = 1.
+            assert!(m.iter().all(|v| *v == 1));
+        } else {
+            assert_eq!(m[0], u64::MAX);
+        }
+    }
+}

@@ -20,11 +20,14 @@
 //!
 //! GMW engine knobs shared by infer/serve/party: `--threads N` (lane
 //! parallelism, 0 = all cores), `--layout lane|bitsliced` (binary-share
-//! layout; bitsliced runs 64 lanes per word through DReLU) and
-//! `--prefetch on|off` (offline/online split: provision Beaver triples on
-//! a background thread instead of expanding them inside the online AND
-//! rounds). All are bit-exact: they change wall-clock, never results or
-//! wire bytes.
+//! layout; bitsliced runs 64 lanes per word through DReLU),
+//! `--kernel scalar|simd|auto` (plane-kernel dispatch, DESIGN.md §11:
+//! `auto` takes the AVX2 arm when the CPU has it, `simd` errors out if it
+//! does not, `scalar` pins the portable reference; `HB_KERNEL` overrides
+//! all of them) and `--prefetch on|off` (offline/online split: provision
+//! Beaver triples on a background thread instead of expanding them inside
+//! the online AND rounds). All are bit-exact: they change wall-clock,
+//! never results or wire bytes.
 //!
 //! Session-layer knobs (DESIGN.md §7): `--connect-timeout-ms`,
 //! `--handshake-timeout-ms`, `--round-timeout-ms`, `--max-frame-len`,
@@ -51,7 +54,7 @@ use anyhow::{bail, Context, Result};
 
 use hummingbird::coordinator::ServeOptions;
 use hummingbird::figures;
-use hummingbird::gmw::kernels::BinLayout;
+use hummingbird::gmw::kernels::{BinLayout, KernelChoice};
 use hummingbird::hummingbird::search::{SearchConfig, SearchEngine, Strategy};
 use hummingbird::hummingbird::{simulator, PlanSet};
 use hummingbird::model::{Archive, Backend, Dataset, ModelConfig, PlainExecutor, WhichPlain};
@@ -162,6 +165,8 @@ fn cmd_infer(args: &Args) -> Result<()> {
     opts.threads = args.opt_parse("threads", 0)?;
     // --layout: binary-share layout (lane-per-u64 or bitsliced).
     opts.layout = args.opt_parse("layout", BinLayout::default())?;
+    // --kernel: plane-kernel dispatch arm (DESIGN.md §11).
+    opts.kernel = args.opt_parse("kernel", KernelChoice::default())?;
     // --prefetch: offline-phase background triple provisioning.
     opts.prefetch = args.on_off("prefetch", false)?;
     // Session deadlines (bound every blocking network step, DESIGN.md §7).
@@ -172,11 +177,13 @@ fn cmd_infer(args: &Args) -> Result<()> {
     // --net-profile / --overlap: simulated WAN + pipelined dispatch (§10).
     apply_wan_knobs(args, &mut opts)?;
     println!(
-        "booting {} ({} parties, plan: {}, layout: {}, prefetch: {})",
+        "booting {} ({} parties, plan: {}, layout: {}, kernel: {} (simd: {}), prefetch: {})",
         model,
         opts.parties,
         plan.summary(),
         opts.layout,
+        opts.kernel.effective().label(),
+        if opts.kernel.resolve_simd() { "on" } else { "off" },
         if opts.prefetch { "on" } else { "off" }
     );
     let svc = Coordinator::start(opts)?;
@@ -250,6 +257,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     opts.gmw_backend = args.opt_or("gmw-backend", "rust").to_string();
     opts.threads = args.opt_parse("threads", 0)?;
     opts.layout = args.opt_parse("layout", BinLayout::default())?;
+    opts.kernel = args.opt_parse("kernel", KernelChoice::default())?;
     opts.prefetch = args.on_off("prefetch", false)?;
     opts.net = NetConfig::from_args(args)?;
     // --fault-profile: deterministic chaos testing — the injected fault
@@ -450,6 +458,10 @@ fn cmd_party(args: &Args) -> Result<()> {
     let k: u32 = args.opt_parse("k", 64)?;
     let m: u32 = args.opt_parse("m", 0)?;
     let layout: BinLayout = args.opt_parse("layout", BinLayout::default())?;
+    // --kernel: plane-kernel dispatch arm (DESIGN.md §11). `simd` fails
+    // fast here — before the dial — if this host has no AVX2.
+    let kernel: KernelChoice = args.opt_parse("kernel", KernelChoice::default())?;
+    kernel.require().map_err(anyhow::Error::from)?;
     let seed: u64 = args.opt_parse("seed", 7u64)?;
     // Session deadlines + retry budget (DESIGN.md §7): every dial,
     // handshake and round below is bounded, and retryable link faults
@@ -499,9 +511,11 @@ fn cmd_party(args: &Args) -> Result<()> {
     // Dispatch over (fault injection on/off) x (binary layout): the chaos
     // wrapper and the layouts are all bit-exact on the wire, so every
     // combination interoperates with every other.
+    #[allow(clippy::too_many_arguments)]
     fn run_layout<T: Transport>(
         transport: T,
         layout: BinLayout,
+        kernel: KernelChoice,
         seed: u64,
         shares: &[u64],
         plan: ReluPlan,
@@ -510,7 +524,11 @@ fn cmd_party(args: &Args) -> Result<()> {
     ) -> Result<()> {
         match layout {
             BinLayout::Bitsliced => run_relu(
-                GmwParty::with_kernels(transport, seed, BitslicedKernels::default()),
+                GmwParty::with_kernels(
+                    transport,
+                    seed,
+                    BitslicedKernels::with_kernel(kernel).map_err(anyhow::Error::from)?,
+                ),
                 shares,
                 plan,
                 threads,
@@ -518,7 +536,11 @@ fn cmd_party(args: &Args) -> Result<()> {
                 "bitsliced",
             ),
             BinLayout::LanePerU64 => run_relu(
-                GmwParty::with_kernels(transport, seed, RustKernels::default()),
+                GmwParty::with_kernels(
+                    transport,
+                    seed,
+                    RustKernels::with_kernel(kernel).map_err(anyhow::Error::from)?,
+                ),
                 shares,
                 plan,
                 threads,
@@ -533,13 +555,14 @@ fn cmd_party(args: &Args) -> Result<()> {
         Some(profile) => run_layout(
             FaultyTransport::new(transport, &profile),
             layout,
+            kernel,
             seed,
             &shares,
             plan,
             threads,
             prefetch,
         ),
-        None => run_layout(transport, layout, seed, &shares, plan, threads, prefetch),
+        None => run_layout(transport, layout, kernel, seed, &shares, plan, threads, prefetch),
     }
 }
 
@@ -549,9 +572,19 @@ fn cmd_party(args: &Args) -> Result<()> {
 
 fn cmd_selftest(_args: &Args) -> Result<()> {
     use hummingbird::gmw::harness::{run_parties, run_parties_with};
-    use hummingbird::gmw::kernels::BitslicedKernels;
+    use hummingbird::gmw::kernels::{self, BitslicedKernels, RustKernels};
     use hummingbird::gmw::ReluPlan;
     use hummingbird::sharing::{reconstruct_arith, share_arith};
+    // Kernel dispatch cross-check (DESIGN.md §11): drive every primitive
+    // the auto-dispatched arm would use against the forced-scalar
+    // reference before trusting it with protocol state. A divergence is a
+    // typed `Error::Kernel` — selftest fails fast instead of reporting
+    // plausible-looking but wrong protocol numbers.
+    kernels::selfcheck(KernelChoice::Auto).map_err(anyhow::Error::from)?;
+    println!(
+        "kernel selfcheck: auto arm (simd: {}) matches scalar reference",
+        if kernels::auto_simd() { "on" } else { "off" }
+    );
     let mut prg = hummingbird::crypto::prg::Prg::new(1, 1);
     let x: Vec<u64> = (0..1000)
         .map(|i| if i % 2 == 0 { i as u64 } else { (i as u64).wrapping_neg() })
@@ -589,13 +622,32 @@ fn cmd_selftest(_args: &Args) -> Result<()> {
         let layouts_match = sliced.outputs == run.outputs
             && sliced.trace.total_bytes() == run.trace.total_bytes()
             && sliced.trace.total_rounds() == run.trace.total_rounds();
+        // End-to-end kernel cross-check: the same circuit under the
+        // forced-scalar reference arm must reproduce the auto-dispatched
+        // run bit-for-bit (shares, wire bytes and round count).
+        let xs_run = xs.clone();
+        let scalar = run_parties_with(2, 3, |_| RustKernels::scalar(), move |p| {
+            let me = p.party();
+            // LINT-ALLOW: unwrap — selftest panics on protocol failure.
+            p.relu(&xs_run[me], plan).unwrap()
+        });
+        let kernels_match = scalar.outputs == run.outputs
+            && scalar.trace.total_bytes() == run.trace.total_bytes()
+            && scalar.trace.total_rounds() == run.trace.total_rounds();
         println!(
-            "{name:<24} bytes={:<10} rounds={:<4} deviations={errs} layouts-match={layouts_match}",
+            "{name:<24} bytes={:<10} rounds={:<4} deviations={errs} \
+             layouts-match={layouts_match} kernels-match={kernels_match}",
             run.trace.total_bytes(),
             run.trace.total_rounds()
         );
         if !layouts_match {
             bail!("bitsliced layout diverged from lane layout on {name}");
+        }
+        if !kernels_match {
+            return Err(hummingbird::error::Error::kernel(format!(
+                "auto-dispatched kernel diverged from forced scalar on {name}"
+            ))
+            .into());
         }
     }
     println!("selftest done");

@@ -5,11 +5,13 @@
 //! They all live here now, each overridable through an environment variable
 //! so bench sweeps can explore the thresholds **without recompiling**:
 //!
-//! | knob                | env var             | default | guards                                   |
-//! |---------------------|---------------------|---------|------------------------------------------|
-//! | [`par_min_lanes`]   | `HB_PAR_MIN_LANES`  | 8192    | lane-wise kernels, `unpack_bytes_xor_into` |
-//! | [`par_min_words`]   | `HB_PAR_MIN_WORDS`  | 2048    | `pack_bytes_into` (packed-word count)    |
-//! | [`par_min_blocks`]  | `HB_PAR_MIN_BLOCKS` | 64      | bitsliced transpose/pack (64-lane blocks) |
+//! | knob                 | env var              | default | guards                                   |
+//! |----------------------|----------------------|---------|------------------------------------------|
+//! | [`par_min_lanes`]    | `HB_PAR_MIN_LANES`   | 8192    | lane-wise kernels, `unpack_bytes_xor_into` |
+//! | [`par_min_words`]    | `HB_PAR_MIN_WORDS`   | 2048    | `pack_bytes_into` (packed-word count)    |
+//! | [`par_min_blocks`]   | `HB_PAR_MIN_BLOCKS`  | 64      | bitsliced transpose/pack (64-lane blocks) |
+//! | [`simd_min_words`]   | `HB_SIMD_MIN_WORDS`  | 8       | AVX2 dispatch floor for plane kernels (DESIGN.md §11) |
+//! | [`kernel_override`]  | `HB_KERNEL`          | unset   | forces the kernel arm (`scalar`/`simd`/`auto`) over CLI/config |
 //!
 //! Values are read **once** on first use and cached for the process
 //! lifetime (a `OnceLock`), so the hot path pays one atomic load — set the
@@ -29,6 +31,10 @@ pub const DEFAULT_PAR_MIN_WORDS: usize = 2048;
 /// Default minimum 64-lane block count before bitsliced transposes go
 /// parallel (one block is 64 lanes, so 64 blocks = 4096 lanes).
 pub const DEFAULT_PAR_MIN_BLOCKS: usize = 64;
+/// Default minimum u64 word count before the plane kernels take the AVX2
+/// arm: below this the 4-wide main loop degenerates to all-tail and the
+/// detection branch is pure overhead (DESIGN.md §11).
+pub const DEFAULT_SIMD_MIN_WORDS: usize = 8;
 
 /// The resolved thresholds (env overrides applied).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -36,6 +42,7 @@ pub struct Tuning {
     pub par_min_lanes: usize,
     pub par_min_words: usize,
     pub par_min_blocks: usize,
+    pub simd_min_words: usize,
 }
 
 impl Default for Tuning {
@@ -44,6 +51,7 @@ impl Default for Tuning {
             par_min_lanes: DEFAULT_PAR_MIN_LANES,
             par_min_words: DEFAULT_PAR_MIN_WORDS,
             par_min_blocks: DEFAULT_PAR_MIN_BLOCKS,
+            simd_min_words: DEFAULT_SIMD_MIN_WORDS,
         }
     }
 }
@@ -57,14 +65,17 @@ fn from_env() -> Tuning {
     let lanes = std::env::var("HB_PAR_MIN_LANES").ok();
     let words = std::env::var("HB_PAR_MIN_WORDS").ok();
     let blocks = std::env::var("HB_PAR_MIN_BLOCKS").ok();
+    let simd = std::env::var("HB_SIMD_MIN_WORDS").ok();
     Tuning {
         par_min_lanes: parse_override(lanes.as_deref(), DEFAULT_PAR_MIN_LANES),
         par_min_words: parse_override(words.as_deref(), DEFAULT_PAR_MIN_WORDS),
         par_min_blocks: parse_override(blocks.as_deref(), DEFAULT_PAR_MIN_BLOCKS),
+        simd_min_words: parse_override(simd.as_deref(), DEFAULT_SIMD_MIN_WORDS),
     }
 }
 
 static TUNING: OnceLock<Tuning> = OnceLock::new();
+static KERNEL_OVERRIDE: OnceLock<Option<String>> = OnceLock::new();
 
 /// The process-wide tuning snapshot (env read once, then cached).
 pub fn tuning() -> Tuning {
@@ -90,6 +101,28 @@ pub fn par_min_blocks() -> usize {
     tuning().par_min_blocks
 }
 
+/// u64 word count below which plane kernels skip the AVX2 arm
+/// (DESIGN.md §11).
+#[inline]
+pub fn simd_min_words() -> usize {
+    tuning().simd_min_words
+}
+
+/// The raw `HB_KERNEL` override, read once and cached (non-empty trimmed
+/// value, or `None` when unset/blank). Parsing lives in
+/// `gmw::kernels::KernelChoice` — this module only owns the env read so
+/// the snapshot discipline matches the numeric knobs above.
+pub fn kernel_override() -> Option<&'static str> {
+    KERNEL_OVERRIDE
+        .get_or_init(|| {
+            std::env::var("HB_KERNEL")
+                .ok()
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+        })
+        .as_deref()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,6 +133,7 @@ mod tests {
         assert_eq!(Tuning::default().par_min_lanes, DEFAULT_PAR_MIN_LANES);
         assert_eq!(Tuning::default().par_min_words, DEFAULT_PAR_MIN_WORDS);
         assert_eq!(Tuning::default().par_min_blocks, DEFAULT_PAR_MIN_BLOCKS);
+        assert_eq!(Tuning::default().simd_min_words, DEFAULT_SIMD_MIN_WORDS);
     }
 
     #[test]
@@ -121,8 +155,23 @@ mod tests {
         let b = tuning();
         assert_eq!(a, b);
         assert!(a.par_min_lanes >= 1 && a.par_min_words >= 1 && a.par_min_blocks >= 1);
+        assert!(a.simd_min_words >= 1);
         assert_eq!(par_min_lanes(), a.par_min_lanes);
         assert_eq!(par_min_words(), a.par_min_words);
         assert_eq!(par_min_blocks(), a.par_min_blocks);
+        assert_eq!(simd_min_words(), a.simd_min_words);
+    }
+
+    /// `kernel_override` is a cached raw string: stable across calls, and
+    /// never the empty string (blank values collapse to `None`).
+    #[test]
+    fn kernel_override_snapshot_is_stable() {
+        let a = kernel_override();
+        let b = kernel_override();
+        assert_eq!(a, b);
+        if let Some(v) = a {
+            assert!(!v.is_empty());
+            assert_eq!(v, v.trim());
+        }
     }
 }

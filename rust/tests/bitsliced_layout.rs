@@ -134,6 +134,62 @@ fn relu_bit_identical_across_layouts_and_threads() {
     }
 }
 
+/// Kernel axis (DESIGN.md §11): the forced-scalar arm and the
+/// auto-dispatched arm (AVX2 where the CPU has it) are bit-identical
+/// through DReLU + ReLU — shares, wire bytes, rounds — in both layouts,
+/// for 2/3 parties and 1/N threads. On hardware without AVX2 (or under
+/// `HB_KERNEL=scalar`) the arms coincide and this pins the dispatch
+/// plumbing instead; the per-primitive sweep lives in
+/// `tests/kernel_diff.rs`.
+#[test]
+fn relu_kernel_arms_bit_identical_across_layouts() {
+    let plan = ReluPlan::new(12, 4).unwrap();
+    let n = 193usize; // straddles three 64-lane blocks
+    for parties in [2usize, 3] {
+        let mut prg = Prg::new(0x5EED, parties as u64);
+        let x: Vec<u64> = (0..n)
+            .map(|i| {
+                let v = prg.next_u64() % (1 << 11);
+                if i % 2 == 0 {
+                    v
+                } else {
+                    v.wrapping_neg()
+                }
+            })
+            .collect();
+        let xs = share_arith(&mut prg, &x, parties);
+        for threads in [1usize, 2] {
+            let ctx = format!("kernel-axis parties={parties} threads={threads}");
+            let (lane_auto, sliced_auto) = run_both_layouts!(parties, 5, threads, |p| {
+                let me = p.party();
+                (p.drelu(&xs[me], plan).unwrap(), p.relu(&xs[me], plan).unwrap())
+            });
+            let lane_scalar =
+                run_parties_with_threaded(parties, 5, threads, |_| RustKernels::scalar(), |p| {
+                    let me = p.party();
+                    (p.drelu(&xs[me], plan).unwrap(), p.relu(&xs[me], plan).unwrap())
+                });
+            let sliced_scalar = run_parties_with_threaded(
+                parties,
+                5,
+                threads,
+                |_| BitslicedKernels::scalar(),
+                |p| {
+                    let me = p.party();
+                    (p.drelu(&xs[me], plan).unwrap(), p.relu(&xs[me], plan).unwrap())
+                },
+            );
+            assert_runs_equal(&lane_scalar, &lane_auto, &format!("{ctx} lane scalar-vs-auto"));
+            assert_runs_equal(
+                &sliced_scalar,
+                &sliced_auto,
+                &format!("{ctx} bitsliced scalar-vs-auto"),
+            );
+            assert_runs_equal(&lane_scalar, &sliced_scalar, &format!("{ctx} cross-layout"));
+        }
+    }
+}
+
 /// A2B equivalence: the layout branch in `a2b_into` (planes + final
 /// back-transpose) returns the very same binary lane shares.
 #[test]

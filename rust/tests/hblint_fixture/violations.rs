@@ -20,6 +20,24 @@ pub unsafe fn sound_read(p: *const u64) -> u64 {
     *p
 }
 
+// A SAFETY comment placed *above* a `#[target_feature]` attribute does
+// not cover the `unsafe fn` line below it: the attribute is a code line
+// and breaks the contiguous comment block, so Rule S still fires. The
+// comment must sit between the attribute and the fn — the `gmw/simd.rs`
+// convention for intrinsic kernels.
+// SAFETY: stale position — must NOT satisfy Rule S.
+#[target_feature(enable = "avx2")]
+pub unsafe fn undocumented_intrinsic_call() { // EXPECT: S
+    core::arch::x86_64::_mm256_setzero_si256();
+}
+
+#[target_feature(enable = "avx2")]
+// SAFETY: negative control — the comment sits between the attribute and
+// the `unsafe fn` line; the caller must have verified AVX2 support.
+pub unsafe fn documented_intrinsic_call() {
+    core::arch::x86_64::_mm256_setzero_si256();
+}
+
 // --- Rule A: allocations in hot-path modules need HOT-PATH-ALLOW ----------
 
 pub fn leaky_hot_path(n: usize) -> Vec<u64> {

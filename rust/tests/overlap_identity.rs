@@ -11,7 +11,7 @@
 use hummingbird::beaver::schedule::TripleSchedule;
 use hummingbird::crypto::prg::Prg;
 use hummingbird::gmw::harness::{run_parties, run_parties_with, HarnessRun};
-use hummingbird::gmw::kernels::BitslicedKernels;
+use hummingbird::gmw::kernels::{BitslicedKernels, RustKernels};
 use hummingbird::gmw::ReluPlan;
 use hummingbird::sharing::{reconstruct_arith, share_arith};
 
@@ -83,6 +83,43 @@ fn run_sliced(
     })
 }
 
+/// Like [`run_lane`] but with the kernel arm pinned to the always-scalar
+/// reference (DESIGN.md §11) — `RustKernels::scalar()` bypasses both the
+/// CLI choice and `HB_KERNEL`, so this is a genuine scalar run even when
+/// the default-constructed arms above dispatch to AVX2.
+fn run_lane_scalar(
+    parties: usize,
+    xs: &[Vec<u64>],
+    prefetch: bool,
+    overlap: bool,
+) -> HarnessRun<Vec<u64>> {
+    let xs = xs.to_vec();
+    run_parties_with(parties, SEED, |_| RustKernels::scalar(), move |p| {
+        if prefetch {
+            p.enable_prefetch(chunked_schedule(p.parties()), false);
+        }
+        let me = p.party();
+        p.relu_chunked(&xs[me], plan(), CHUNKS, overlap).unwrap()
+    })
+}
+
+/// Forced-scalar twin of [`run_sliced`].
+fn run_sliced_scalar(
+    parties: usize,
+    xs: &[Vec<u64>],
+    prefetch: bool,
+    overlap: bool,
+) -> HarnessRun<Vec<u64>> {
+    let xs = xs.to_vec();
+    run_parties_with(parties, SEED, |_| BitslicedKernels::scalar(), move |p| {
+        if prefetch {
+            p.enable_prefetch(chunked_schedule(p.parties()), false);
+        }
+        let me = p.party();
+        p.relu_chunked(&xs[me], plan(), CHUNKS, overlap).unwrap()
+    })
+}
+
 fn assert_identical(a: &HarnessRun<Vec<u64>>, b: &HarnessRun<Vec<u64>>, label: &str) {
     assert_eq!(a.outputs, b.outputs, "{label}: per-party output shares diverged");
     assert_eq!(a.trace.total_bytes(), b.trace.total_bytes(), "{label}: wire bytes");
@@ -119,6 +156,30 @@ fn overlap_matches_serial_bitsliced_and_cross_layout() {
             let label = format!("bitsliced p{parties} prefetch={prefetch}");
             assert_identical(&serial, &overlapped, &label);
             assert_identical(&lane_serial, &overlapped, &format!("{label} vs lane"));
+        }
+    }
+}
+
+/// Kernel axis (DESIGN.md §11): scalar × dispatched(auto) × layout ×
+/// prefetch × overlap × {2, 3} parties. The overlapped WAN schedule must
+/// stay bit-identical when the kernel arm changes underneath it — same
+/// shares, same byte/round totals, same per-phase split — and the
+/// forced-scalar runs of both layouts must agree with each other.
+#[test]
+fn overlap_identity_holds_across_kernel_arms() {
+    for parties in [2usize, 3] {
+        let (_, xs) = inputs(parties);
+        for prefetch in [false, true] {
+            for overlap in [false, true] {
+                let label = format!("kernel p{parties} prefetch={prefetch} overlap={overlap}");
+                let lane_auto = run_lane(parties, &xs, prefetch, overlap);
+                let lane_scalar = run_lane_scalar(parties, &xs, prefetch, overlap);
+                assert_identical(&lane_scalar, &lane_auto, &format!("{label} lane"));
+                let sliced_auto = run_sliced(parties, &xs, prefetch, overlap);
+                let sliced_scalar = run_sliced_scalar(parties, &xs, prefetch, overlap);
+                assert_identical(&sliced_scalar, &sliced_auto, &format!("{label} bitsliced"));
+                assert_identical(&lane_scalar, &sliced_scalar, &format!("{label} cross-layout"));
+            }
         }
     }
 }
